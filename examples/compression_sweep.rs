@@ -1,0 +1,49 @@
+//! Compression sweep: live-measured perplexity of every method at every
+//! ratio — a miniature of the paper's Table 2, regenerated end to end
+//! from the artifacts (rust runtime, not the python reference numbers).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example compression_sweep
+//! ```
+
+use anyhow::Result;
+use dobi::bench::{artifacts_dir, Table};
+use dobi::config::Manifest;
+use dobi::evalx;
+use dobi::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let (b, s) = (manifest.eval_batch, manifest.eval_seq);
+    let rt = Runtime::new()?;
+
+    let methods = ["dense", "dobi", "dobi-noremap", "weight_svd", "asvd", "svdllm",
+                   "wanda_sp", "flap", "llm_pruner"];
+    let mut table = Table::new(
+        "PPL vs compression ratio, llama-nano on wiki-syn (lower is better)",
+        &["method", "r=1.0", "r=0.8", "r=0.6", "r=0.4"],
+    );
+    for method in methods {
+        let mut row = vec![method.to_string()];
+        for ratio in [1.0, 0.8, 0.6, 0.4] {
+            let hit = manifest.variants.iter().find(|v| {
+                v.model == "llama-nano" && v.method == method && v.kernel == "xla"
+                    && (v.ratio - ratio).abs() < 1e-6
+            });
+            match hit {
+                Some(v) if v.hlo_for(b, s).is_some() => {
+                    let model = rt.load_variant(&manifest, &v.id, Some(&[(b, s)]))?;
+                    let ppl = evalx::perplexity(&model, &manifest, "wiki-syn")?;
+                    row.push(format!("{ppl:.2}"));
+                }
+                _ => row.push("-".into()),
+            }
+        }
+        table.row(row);
+    }
+    table.print();
+    println!("\npaper shape to check: dobi row dominates every other compression row,\n\
+              and the gap widens as the ratio drops (Table 2's 9.95 vs 53.74 vs 57057).");
+    Ok(())
+}

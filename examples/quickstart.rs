@@ -1,0 +1,42 @@
+//! Quickstart: load a Dobi-SVD-compressed model and talk to it.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use dobi::bench::artifacts_dir;
+use dobi::config::Manifest;
+use dobi::evalx;
+use dobi::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    println!("artifacts: {} variants, profile `{}`", manifest.variants.len(), manifest.profile);
+
+    let rt = Runtime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    // Dense baseline and the Dobi-SVD 0.6 compression of the same model.
+    let (b, s) = (manifest.eval_batch, manifest.eval_seq);
+    let dense = rt.load_variant(&manifest, "llama-nano/dense", Some(&[(b, s)]))?;
+    let dobi = rt.load_variant(&manifest, "llama-nano/dobi_60", Some(&[(b, s)]))?;
+
+    println!(
+        "\ndense: {:.2} MB on device | dobi-0.6: {:.2} MB stored ({}x smaller on disk)",
+        dense.stats.weight_bytes as f64 / 1e6,
+        dobi.variant.bytes as f64 / 1e6,
+        dense.stats.payload_bytes / dobi.stats.payload_bytes.max(1),
+    );
+
+    for (name, model) in [("dense", &dense), ("dobi-0.6", &dobi)] {
+        let ppl = evalx::perplexity(model, &manifest, "wiki-syn")?;
+        println!("{name}: wiki-syn perplexity = {ppl:.3}");
+    }
+
+    println!("\n--- sampled text (dobi-0.6) ---");
+    let text = evalx::generate(&dobi, b, s, "The ", 120, 0.8, 7)?;
+    println!("The {text}");
+    Ok(())
+}

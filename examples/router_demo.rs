@@ -1,0 +1,58 @@
+//! Routing-policy demo: the coordinator picking a serving variant
+//! per-request — explicit, by requested compression ratio, and by device
+//! memory budget (the policy that backs the edge-deployment story).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example router_demo
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+use dobi::bench::{artifacts_dir, Table};
+use dobi::config::{EngineConfig, Manifest};
+use dobi::coordinator::Engine;
+use dobi::tokenizer::ByteTokenizer;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let (b, s) = (manifest.eval_batch, manifest.eval_seq);
+    let ids: Vec<String> = ["dense", "dobi_80", "dobi_60", "dobi_40"]
+        .iter()
+        .map(|m| format!("llama-nano/{m}"))
+        .filter(|id| manifest.variant(id).is_ok())
+        .collect();
+    let engine = Arc::new(Engine::start(dir, &ids, EngineConfig { max_batch: b, ..Default::default() },
+                                        Some(vec![(b, s)]))?);
+    let router = engine.router();
+
+    let mut t = Table::new("by-ratio routing", &["requested ratio", "routed to"]);
+    for want in [1.0, 0.75, 0.55, 0.3] {
+        let v = router.by_ratio("llama-nano", want).unwrap();
+        t.row(vec![format!("{want:.2}"), v.id.clone()]);
+    }
+    t.print();
+
+    let mut t2 = Table::new("by-memory routing (device budget)", &["budget MB", "routed to"]);
+    for budget_mb in [16.0, 4.0, 2.5, 1.5] {
+        let hit = router.by_memory("llama-nano", (budget_mb * 1e6) as usize);
+        t2.row(vec![
+            format!("{budget_mb:.1}"),
+            hit.map(|v| v.id.clone()).unwrap_or_else(|| "(nothing fits)".into()),
+        ]);
+    }
+    t2.print();
+
+    // Route one live request through the chosen variant.
+    let tok = ByteTokenizer;
+    let pick = router.by_memory("llama-nano", 4_000_000).map(|v| v.id.clone());
+    if let Some(id) = pick {
+        let win = tok.encode_window("a memory-budgeted request ", s, 32);
+        let resp = engine.infer(&id, win, None)?;
+        println!("\nrouted live request -> {id}: {} logits, {:.2} ms",
+                 resp.output.len(), resp.total_s * 1e3);
+    }
+    engine.shutdown();
+    Ok(())
+}

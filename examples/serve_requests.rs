@@ -1,0 +1,103 @@
+//! End-to-end serving driver (the DESIGN.md validation run).
+//!
+//! Loads the dense model plus every Dobi-SVD ratio, serves a batched
+//! request workload through the full coordinator stack (router -> dynamic
+//! batcher -> PJRT executor), and reports throughput + latency percentiles
+//! per variant, plus a quality check (perplexity) so the speed numbers are
+//! attached to a model that demonstrably still works.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_requests
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use dobi::bench::{artifacts_dir, Table};
+use dobi::config::{EngineConfig, Manifest};
+use dobi::coordinator::Engine;
+use dobi::evalx;
+use dobi::mathx::summarize;
+use dobi::runtime::Runtime;
+use dobi::tokenizer::ByteTokenizer;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let (b, s) = (manifest.eval_batch, manifest.eval_seq);
+
+    let ids: Vec<String> = ["dense", "dobi_80", "dobi_60", "dobi_40"]
+        .iter()
+        .map(|m| format!("llama-nano/{m}"))
+        .filter(|id| manifest.variant(id).is_ok())
+        .collect();
+
+    println!("loading {} variants through the engine...", ids.len());
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 2_000, queue_depth: 512, workers: 1 };
+    let engine = Arc::new(Engine::start(dir.clone(), &ids, cfg, Some(vec![(b, s)]))?);
+
+    // Quality first: PPL per variant on a dedicated runtime (the engine's
+    // runtime is busy serving).
+    let rt = Runtime::new()?;
+    let mut ppls = Vec::new();
+    for id in &ids {
+        let model = rt.load_variant(&manifest, id, Some(&[(b, s)]))?;
+        ppls.push(evalx::perplexity(&model, &manifest, "wiki-syn")?);
+    }
+
+    // Workload: 4 client threads x 32 requests per variant.
+    let mut table = Table::new(
+        "end-to-end serving (coordinator + PJRT, 4 clients)",
+        &["variant", "ratio", "MB", "wiki-ppl", "req/s", "tok-windows/s",
+          "p50 ms", "p99 ms", "mean batch"],
+    );
+    for (id, ppl) in ids.iter().zip(&ppls) {
+        let n_clients = 4;
+        let per_client = 32;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let eng = engine.clone();
+            let id = id.clone();
+            handles.push(std::thread::spawn(move || {
+                let tok = ByteTokenizer;
+                let mut lat = Vec::new();
+                for i in 0..per_client {
+                    let win = tok.encode_window(
+                        &format!("client {c} asks question number {i} about the "), s, 32);
+                    let resp = eng.infer(&id, win, None).expect("infer");
+                    lat.push(resp.total_s);
+                }
+                lat
+            }));
+        }
+        let mut lats = Vec::new();
+        for h in handles {
+            lats.extend(h.join().unwrap());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = summarize(&lats);
+        let n = (n_clients * per_client) as f64;
+        let v = manifest.variant(id)?;
+        let es = engine.stats();
+        table.row(vec![
+            id.clone(),
+            format!("{:.1}", v.ratio),
+            format!("{:.2}", v.bytes as f64 / 1e6),
+            format!("{ppl:.2}"),
+            format!("{:.1}", n / wall),
+            format!("{:.1}", n * s as f64 / wall),
+            format!("{:.2}", stats.p50 * 1e3),
+            format!("{:.2}", stats.p99 * 1e3),
+            format!("{:.2}", es.mean_batch),
+        ]);
+    }
+    table.print();
+
+    let st = engine.stats();
+    println!("engine totals: served={} batches={} rejects={}", st.served, st.batches,
+             st.queue_full_rejects);
+    engine.shutdown();
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Multimodal serving demo: VQA through the compressed vision-language
+//! model (paper §4.4 / Tables 11-12) — loads the vlm-nano variants,
+//! answers image questions, and reports accuracy + speed per ratio.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example vlm_assistant
+//! ```
+
+use anyhow::Result;
+use dobi::bench::{artifacts_dir, bench_for, Table};
+use dobi::config::Manifest;
+use dobi::corpusio;
+use dobi::evalx;
+use dobi::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir)?;
+    let Some(vqa_file) = manifest.vqa_file.clone() else {
+        println!("no VQA artifacts in this build profile");
+        return Ok(());
+    };
+    let (_, samples) = corpusio::read_vqa(&manifest.path(&vqa_file))?;
+    let (b, s) = (manifest.eval_batch, manifest.eval_seq);
+    let rt = Runtime::new()?;
+
+    let mut table = Table::new("VLM assistant — accuracy and speed per compression ratio",
+                               &["variant", "ratio", "MB", "VQA acc", "tok/s"]);
+    for id in ["vlm-nano/dense", "vlm-nano/dobi_80", "vlm-nano/dobi_60", "vlm-nano/dobi_40"] {
+        let Ok(v) = manifest.variant(id) else { continue };
+        if v.hlo_for(b, s).is_none() {
+            continue;
+        }
+        let model = rt.load_variant(&manifest, id, Some(&[(b, s)]))?;
+        let acc = evalx::run_vqa(&model, &samples, b, s, 40)?;
+        let tokens = vec![32i32; b * s];
+        let image = vec![0.1f32; b * model.img_dim];
+        let speed = bench_for(id, 0.3, 3, || {
+            model.forward(b, s, &tokens, Some(&image)).unwrap();
+        });
+        table.row(vec![
+            id.to_string(),
+            format!("{:.1}", v.ratio),
+            format!("{:.2}", v.bytes as f64 / 1e6),
+            format!("{:.3}", acc.accuracy),
+            format!("{:.0}", speed.throughput((b * s) as f64)),
+        ]);
+    }
+    table.print();
+
+    // One concrete interaction for flavor.
+    if let Ok(model) = rt.load_variant(&manifest, "vlm-nano/dobi_60", Some(&[(b, s)])) {
+        if let Some(sample) = samples.first() {
+            let mut best = (f32::INFINITY, 0usize);
+            let tok = dobi::tokenizer::ByteTokenizer;
+            for (i, opt) in sample.options.iter().enumerate() {
+                let (w, st, en) = tok.encode_pair(&sample.question, opt, s, 32);
+                let mut tokens = vec![0i32; b * s];
+                let mut image = vec![0f32; b * model.img_dim];
+                for r in 0..b {
+                    tokens[r * s..(r + 1) * s].copy_from_slice(&w);
+                    image[r * model.img_dim..(r + 1) * model.img_dim]
+                        .copy_from_slice(&sample.image);
+                }
+                let logits = model.forward(b, s, &tokens, Some(&image))?;
+                let nll = dobi::mathx::span_nll(&logits, &tokens, s, model.vocab, 0, st, en);
+                if nll < best.0 {
+                    best = (nll, i);
+                }
+            }
+            println!("\nQ: {}", sample.question);
+            for (i, o) in sample.options.iter().enumerate() {
+                let mark = if i == best.1 { "->" } else { "  " };
+                let truth = if i == sample.answer { "(truth)" } else { "" };
+                println!("{mark} {o} {truth}");
+            }
+        }
+    }
+    Ok(())
+}

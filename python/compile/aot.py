@@ -1,0 +1,660 @@
+"""AOT artifact builder — the author/compile path, run ONCE by
+`make artifacts`; the rust binary is self-contained afterwards.
+
+Pipeline:
+  1. synthesize corpora + task suites (data.py)
+  2. pretrain the substrate LM zoo (train_lm.py)            [cached]
+  3. differentiable-k training per (model, ratio)           [cached]
+  4. compress: Dobi-SVD + every baseline at every ratio
+  5. lower every variant's forward to HLO *text* (weights as HLO
+     parameters) and write `.dobiw` weight containers
+  6. run the python-side analyses that are training-time by nature
+     (Table 1 oracle, Fig 3/7/8/11, Table 15/17 inputs, gradstab)
+  7. reference PPLs on the exact eval windows rust re-measures
+  8. write manifest.json
+
+HLO text (NOT `.serialize()`): the image's xla_extension 0.5.1 rejects
+jax>=0.5 64-bit-id protos; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pickle
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as D
+from . import dobiw as IO
+from . import model as M
+from . import train_lm as TL
+from .dobi import baselines as B
+from .dobi import pipeline as P
+from .dobi import remap as R
+from .dobi import trainer as T
+from .dobi.ipca import (IncrementalPCA, batch_right_basis, full_pca_components,
+                        ipca_memory_bytes, pca_memory_bytes, subspace_distance)
+from .dobi.svd_diff import svd, svd_unstable
+
+EVAL_BATCH, EVAL_SEQ, EVAL_WINDOWS = 4, 64, 12
+GEN_SHAPE = (1, 64)
+SWEEP_SHAPES = [(1, 32), (2, 32), (4, 32), (8, 32), (16, 32),
+                (4, 16), (4, 64), (4, 128)]
+RATIOS = [0.8, 0.6, 0.4]
+
+
+def log(*a):
+    print(*a, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering
+# ---------------------------------------------------------------------------
+
+def to_hlo_text(fn, *example_args) -> str:
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    # print_large_constants=True: the default printer ELIDES big constant
+    # tensors as `constant({...})`, which xla_extension's text parser then
+    # silently zero-fills (trace-time constants like RoPE cos/sin tables
+    # and the causal mask would be destroyed).  Found via the op-probe
+    # harness; a regression test asserts no `...` survives in any export.
+    text = comp.as_hlo_text(True)
+    assert "constant({...}" not in text, "HLO printer elided a constant"
+    return text
+
+
+def spec_like(a) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(np.shape(a), np.asarray(a).dtype)
+
+
+def make_lm_export_fn(cfg: M.ModelConfig, names: list[str],
+                      heads_per_layer=None, kernel: str = "xla"):
+    def fn(tokens, *arrays):
+        params = M.unflatten_from_export(cfg, names, list(arrays))
+        if heads_per_layer is not None:
+            return (M.forward_pruned(params, tokens, cfg, heads_per_layer),)
+        return (M.forward_dense(params, tokens, cfg, kernel=kernel),)
+    return fn
+
+
+def make_mm_export_fn(cfg: M.ModelConfig, names: list[str], action: bool,
+                      kernel: str = "xla"):
+    def fn(tokens, image, *arrays):
+        params = M.unflatten_from_export(cfg, names, list(arrays))
+        if action:
+            return (M.forward_vla(params, tokens, image, cfg, kernel=kernel),)
+        return (M.forward_vlm(params, tokens, image, cfg, kernel=kernel),)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Weight export
+# ---------------------------------------------------------------------------
+
+def export_weights(path: str, params: dict, cm: P.CompressedModel | None,
+                   precision: str = "f32") -> tuple[list[str], int]:
+    """Write the variant's weights.  For remapped Dobi variants the factor
+    tensors go out as (q8 codes + broadcast-shaped scales) so the rust
+    storage layer performs the dequantization — returns (HLO param names
+    in order, bytes written)."""
+    names, arrays = M.flatten_for_export(params)
+    tensors: list[tuple[str, np.ndarray]] = []
+    remap8 = cm is not None and cm.method.startswith("dobi[8+16]")
+    for name, arr in zip(names, arrays):
+        a = np.asarray(arr)
+        if remap8 and (name.endswith(".w1") or name.endswith(".w2")):
+            axis = 0 if name.endswith(".w1") else 1
+            q, s = R.quantize_absmax(a, bits=8, axis=axis)
+            s_shaped = np.expand_dims(s, axis=axis).astype(np.float32)
+            tensors.append((name + ".q8", q))
+            tensors.append((name + ".scales", s_shaped))
+        elif precision == "f16":
+            tensors.append((name, a.astype(np.float16)))
+        else:
+            tensors.append((name, a.astype(np.float32)))
+    nbytes = IO.write_dobiw(path, tensors)
+    return names, nbytes
+
+
+# ---------------------------------------------------------------------------
+# Profiles
+# ---------------------------------------------------------------------------
+
+PROFILES = {
+    "full": dict(pretrain_steps=300, pretrain_steps_alt=160, pretrain_steps_l=220,
+                 ktrain_steps=60, ktrain_steps_alt=36, mm_steps=70,
+                 corpus_chars=600_000, ref_windows=EVAL_WINDOWS,
+                 models=("llama-nano", "llama2-nano", "llama3-nano",
+                         "llama-nano-l", "vlm-nano", "vla-nano")),
+    "quick": dict(pretrain_steps=40, pretrain_steps_alt=25, pretrain_steps_l=30,
+                  ktrain_steps=8, ktrain_steps_alt=6, mm_steps=12,
+                  corpus_chars=150_000, ref_windows=4,
+                  models=("llama-nano", "vla-nano")),
+}
+
+
+class Builder:
+    def __init__(self, out: str, profile: str):
+        self.out = out
+        self.prof = PROFILES[profile]
+        self.profile_name = profile
+        self.cache_dir = os.path.join(out, "cache")
+        D.ensure_dir(out)
+        D.ensure_dir(self.cache_dir)
+        self.manifest: dict = {
+            "version": 1, "profile": profile, "models": {}, "variants": [],
+            "corpora": {}, "analysis": {}, "training": {},
+            "eval": {"batch": EVAL_BATCH, "seq": EVAL_SEQ,
+                     "windows": self.prof["ref_windows"]},
+        }
+
+    # -- caching ------------------------------------------------------------
+    def cached(self, key: str, fn):
+        path = os.path.join(self.cache_dir, key + ".pkl")
+        if os.path.exists(path):
+            with open(path, "rb") as f:
+                return pickle.load(f)
+        val = fn()
+        with open(path, "wb") as f:
+            pickle.dump(val, f)
+        return val
+
+    # -- stage 1: corpora ----------------------------------------------------
+    def build_corpora(self):
+        log("== corpora ==")
+        n = self.prof["corpus_chars"]
+        self.wiki = D.gen_wiki_syn(n_chars=n)
+        self.ptb = D.gen_ptb_syn(n_chars=max(n // 3, 60_000))
+        self.c4 = D.gen_c4_syn(n_chars=max(n // 3, 60_000))
+        self.tokens = {}
+        for c in (self.wiki, self.ptb, self.c4):
+            toks = c.tokens()
+            split = int(0.9 * len(toks))
+            self.tokens[c.name] = {"train": toks[:split], "eval": toks[split:]}
+            D.write_tokbin(os.path.join(self.out, f"corpus_{c.name}.tokbin"),
+                           toks[:split])
+            # Fixed eval windows: rust must reproduce python PPL bit-for-bit
+            # (same windows, same order).
+            nw = self.prof["ref_windows"]
+            ev = toks[split:]
+            rng = np.random.default_rng(99)
+            hi = len(ev) - EVAL_SEQ - 1
+            wins = np.stack([ev[i:i + EVAL_SEQ]
+                             for i in rng.integers(0, hi, size=nw * EVAL_BATCH)])
+            D.write_tokbin(os.path.join(self.out, f"eval_{c.name}.tokbin"),
+                           wins.reshape(-1))
+            self.manifest["corpora"][c.name] = {
+                "train": f"corpus_{c.name}.tokbin",
+                "eval_windows": f"eval_{c.name}.tokbin",
+                "n_windows": nw,
+            }
+            self.tokens[c.name]["eval_wins"] = wins.reshape(nw, EVAL_BATCH, EVAL_SEQ)
+        suites = D.build_task_suites(self.wiki, self.ptb, self.c4,
+                                     n_per=40 if self.profile_name == "quick" else 60)
+        suites.append(D.build_mmlu_syn(self.wiki, self.ptb, self.c4,
+                                       n=40 if self.profile_name == "quick" else 80))
+        D.write_suites(os.path.join(self.out, "tasks.json"), suites)
+        self.manifest["suites"] = "tasks.json"
+        # VQA / VLA
+        img_dim = M.CONFIGS["vlm-nano"].img_dim
+        vqa = D.build_vqa(31, 200, img_dim)
+        vla = D.build_vla(32, 260, img_dim)
+        self.vqa, self.vla = vqa, vla
+        with open(os.path.join(self.out, "vqa.json"), "w") as f:
+            json.dump({"img_dim": img_dim, "samples": [
+                {"image": s.image.tolist(), "question": s.question,
+                 "options": s.options, "answer": s.answer} for s in vqa[120:]]}, f)
+        with open(os.path.join(self.out, "vla.json"), "w") as f:
+            json.dump({"img_dim": img_dim, "samples": [
+                {"image": s.image.tolist(), "instruction": s.instruction,
+                 "coords": s.coords.tolist(), "angle": s.angle,
+                 "gripper": s.gripper} for s in vla[180:]]}, f)
+        self.manifest["vqa"] = "vqa.json"
+        self.manifest["vla"] = "vla.json"
+
+    # -- stage 2: pretraining --------------------------------------------------
+    def pretrain_all(self):
+        log("== pretrain ==")
+        wiki_train = self.tokens["wiki-syn"]["train"]
+        self.params: dict[str, dict] = {}
+        self.pretrain_losses: dict[str, list[float]] = {}
+        for name in self.prof["models"]:
+            cfg = M.CONFIGS[name]
+            steps = (self.prof["pretrain_steps"] if name == "llama-nano" else
+                     self.prof["pretrain_steps_l"] if name == "llama-nano-l" else
+                     self.prof["pretrain_steps_alt"])
+
+            def build(name=name, cfg=cfg, steps=steps):
+                if cfg.img_dim:  # multimodal: start from llama-nano trunk
+                    base_cfg = M.CONFIGS["llama-nano"]
+                    base, losses = TL.pretrain(base_cfg, wiki_train, steps=steps, log=log,
+                                               seed=7)
+                    p = M.init_params(cfg, seed=17)
+                    p.update({k: base[k] for k in ("embed", "final_norm", "layers")})
+                    if cfg.action_head:
+                        p = TL.finetune_vla(cfg, p, self.vla[:180],
+                                            steps=self.prof["mm_steps"], log=log)
+                    else:
+                        p = TL.finetune_vlm(cfg, p, self.vqa[:120],
+                                            steps=self.prof["mm_steps"], log=log)
+                    return jax.tree_util.tree_map(np.asarray, p), losses
+                p, losses = TL.pretrain(cfg, wiki_train, steps=steps, log=log,
+                                        seed=hash(name) % 1000)
+                return jax.tree_util.tree_map(np.asarray, p), losses
+
+            p, losses = self.cached(f"pretrain_{name}", build)
+            self.params[name] = jax.tree_util.tree_map(jnp.asarray, p)
+            self.pretrain_losses[name] = losses
+            cfg_d = {k: getattr(cfg, k) for k in
+                     ("vocab", "d_model", "n_layers", "n_heads", "d_ff",
+                      "img_dim", "n_img_tokens", "action_head")}
+            self.manifest["models"][name] = {
+                "config": cfg_d,
+                "total_params": M.count_params(self.params[name]),
+                "fixed_params": M.fixed_param_count(cfg),
+            }
+            self.manifest["training"].setdefault(name, {})["pretrain_loss"] = losses
+
+    # -- stage 3: k-training ----------------------------------------------------
+    def ktrain_all(self):
+        log("== differentiable-k training ==")
+        wiki_train = self.tokens["wiki-syn"]["train"]
+        self.ks: dict[tuple[str, float], np.ndarray] = {}
+        for name in self.prof["models"]:
+            cfg = M.CONFIGS[name]
+            steps = (self.prof["ktrain_steps"] if name == "llama-nano"
+                     else self.prof["ktrain_steps_alt"])
+            for ratio in RATIOS:
+                def build(name=name, cfg=cfg, ratio=ratio, steps=steps):
+                    val = self.tokens["wiki-syn"]["eval"]
+                    ks, tlog = T.train_ks(
+                        self.params[name], cfg, wiki_train, ratio=ratio,
+                        steps=steps, log=log,
+                        val_tokens=val if name == "llama-nano" else None,
+                        val_every=max(steps // 6, 1) if name == "llama-nano" else 0)
+                    return ks, tlog.__dict__
+                ks, tlog = self.cached(f"ktrain_{name}_{int(ratio*100)}", build)
+                self.ks[(name, ratio)] = ks
+                self.manifest["training"].setdefault(name, {}).setdefault(
+                    "ktrain", {})[f"{ratio}"] = tlog
+
+    # -- stage 4+5: compress & export ------------------------------------------
+    def _export_variant(self, model: str, vid: str, params, *, method: str,
+                        ratio: float, kind: str, stored: int, bytes_: int,
+                        ranks=None, heads_per_layer=None, shapes=None,
+                        cm: P.CompressedModel | None = None,
+                        kernel: str = "xla", extra=None):
+        cfg = M.CONFIGS[model]
+        tag = vid.replace("/", "_").replace(".", "")
+        wpath = f"weights_{tag}.dobiw"
+        names, nbytes = export_weights(os.path.join(self.out, wpath), params, cm)
+        shapes = shapes or [(EVAL_BATCH, EVAL_SEQ)]
+        hlos = {}
+        _, arrays = M.flatten_for_export(params)
+        aspecs = [spec_like(a) for a in arrays]
+        for (b, s) in shapes:
+            key = f"{b}x{s}"
+            tspec = jax.ShapeDtypeStruct((b, s), np.int32)
+            if cfg.img_dim:
+                ispec = jax.ShapeDtypeStruct((b, cfg.img_dim), np.float32)
+                fn = make_mm_export_fn(cfg, names, cfg.action_head, kernel)
+                text = to_hlo_text(fn, tspec, ispec, *aspecs)
+            else:
+                fn = make_lm_export_fn(cfg, names, heads_per_layer, kernel)
+                text = to_hlo_text(fn, tspec, *aspecs)
+            hpath = f"fwd_{tag}_{key}.hlo.txt"
+            with open(os.path.join(self.out, hpath), "w") as f:
+                f.write(text)
+            hlos[key] = hpath
+        v = {
+            "id": vid, "model": model, "method": method, "ratio": ratio,
+            "kind": kind, "kernel": kernel, "weights": wpath,
+            "param_names": names, "hlo": hlos,
+            "inputs": ["tokens", "image"] if cfg.img_dim else ["tokens"],
+            "stored_params": int(stored), "bytes": int(bytes_),
+        }
+        if ranks:
+            v["ranks"] = {k: int(x) for k, x in ranks.items()}
+        if heads_per_layer:
+            v["heads_per_layer"] = heads_per_layer
+        if extra:
+            v.update(extra)
+        self.manifest["variants"].append(v)
+        log(f"  exported {vid}: {len(hlos)} hlo(s), weights {nbytes/1e6:.1f} MB")
+        return v
+
+    def compress_and_export(self):
+        log("== compress & export ==")
+        wiki_train = self.tokens["wiki-syn"]["train"]
+        self.calib: dict[str, dict] = {}
+        quick = self.profile_name == "quick"
+        for model in self.prof["models"]:
+            cfg = M.CONFIGS[model]
+            params = self.params[model]
+            total = M.count_params(params)
+            calib = P.collect_calibration(params, cfg, wiki_train,
+                                          n_batches=4 if quick else 8)
+            self.calib[model] = calib
+            dense_bytes = 2 * total
+            main = model == "llama-nano"
+            # dense baseline (+ speed sweeps + gen + pallas parity on main)
+            shapes = [(EVAL_BATCH, EVAL_SEQ), GEN_SHAPE]
+            if main and not quick:
+                shapes += [s for s in SWEEP_SHAPES if s not in shapes]
+            self._export_variant(model, f"{model}/dense", params, method="dense",
+                                 ratio=1.0, kind="dense", stored=total,
+                                 bytes_=dense_bytes, shapes=shapes)
+            if main:
+                self._export_variant(model, f"{model}/dense-pallas", params,
+                                     method="dense", ratio=1.0, kind="dense",
+                                     stored=total, bytes_=dense_bytes,
+                                     kernel="pallas",
+                                     shapes=[(EVAL_BATCH, EVAL_SEQ)])
+
+            grads = P.calibration_grads(params, cfg, wiki_train) if main or model in (
+                "llama2-nano", "llama3-nano", "llama-nano-l") else None
+
+            for ratio in RATIOS:
+                rtag = f"{int(ratio*100):02d}"
+                ks = self.ks[(model, ratio)]
+                # --- Dobi (full): trained k + IPCA + remap 8+16
+                cm = P.dobi_compress(params, cfg, ks, calib, ratio=ratio,
+                                     precision="8+16")
+                self._export_variant(
+                    model, f"{model}/dobi_{rtag}", cm.params, method="dobi",
+                    ratio=ratio, kind="factorized", stored=cm.stored_params,
+                    bytes_=cm.bytes_fp16_equiv, ranks=cm.ranks, cm=cm,
+                    shapes=shapes if main else [(EVAL_BATCH, EVAL_SEQ), GEN_SHAPE])
+                cached_v = cm.cached_v
+                if main and ratio == 0.6:
+                    self._export_variant(
+                        model, f"{model}/dobi-pallas_{rtag}", cm.params,
+                        method="dobi", ratio=ratio, kind="factorized",
+                        stored=cm.stored_params, bytes_=cm.bytes_fp16_equiv,
+                        kernel="pallas", shapes=[(EVAL_BATCH, EVAL_SEQ)])
+                if main:
+                    # remap-16 ablation (same ranks/graph, fp16 factors)
+                    cm16 = P.dobi_compress(params, cfg, ks, calib, ratio=ratio,
+                                           precision="16", cached_v=cached_v)
+                    self._export_variant(
+                        model, f"{model}/dobi16_{rtag}", cm16.params,
+                        method="dobi-remap16", ratio=ratio, kind="factorized",
+                        stored=cm16.stored_params, bytes_=cm16.bytes_fp16_equiv,
+                        ranks=cm16.ranks)
+                    # + PTQ combos (Tables 9/22/23)
+                    for bits in (4, 8):
+                        cmq = P.dobi_compress(params, cfg, ks, calib, ratio=ratio,
+                                              precision="8+16", cached_v=cached_v,
+                                              ptq_bits=bits)
+                        self._export_variant(
+                            model, f"{model}/dobi-int{bits}_{rtag}", cmq.params,
+                            method=f"dobi+int{bits}", ratio=ratio,
+                            kind="factorized", stored=cmq.stored_params,
+                            bytes_=cmq.bytes_fp16_equiv, ranks=cmq.ranks)
+                    # no-remap ablations (classic storage)
+                    ks_c = P.scale_ks_to_classic(cfg, ks, ratio)
+                    cmn = P.noremap_compress(params, cfg, ks_c, calib, ratio=ratio)
+                    self._export_variant(
+                        model, f"{model}/dobi-noremap_{rtag}", cmn.params,
+                        method="dobi-noremap", ratio=ratio, kind="factorized",
+                        stored=cmn.stored_params, bytes_=cmn.bytes_fp16_equiv,
+                        ranks=cmn.ranks)
+                    ks_u = T.uniform_ks(cfg, ratio)
+                    ks_uc = P.scale_ks_to_classic(cfg, ks_u, ratio)
+                    cmu = P.noremap_compress(params, cfg, ks_uc, calib, ratio=ratio)
+                    self._export_variant(
+                        model, f"{model}/uniform-noremap_{rtag}", cmu.params,
+                        method="uniform-noremap", ratio=ratio, kind="factorized",
+                        stored=cmu.stored_params, bytes_=cmu.bytes_fp16_equiv,
+                        ranks=cmu.ranks)
+                    # SVD-family baselines (classic uniform ranks)
+                    for meth in ("weight_svd", "asvd", "svdllm"):
+                        cb = P.svd_baseline_compress(params, cfg, ratio, meth, calib)
+                        self._export_variant(
+                            model, f"{model}/{meth}_{rtag}", cb.params,
+                            method=meth, ratio=ratio, kind="factorized",
+                            stored=cb.stored_params, bytes_=cb.bytes_fp16_equiv,
+                            ranks=cb.ranks)
+                # pruning baselines (all text models)
+                if not cfg.img_dim:
+                    for meth in ("wanda_sp", "flap", "llm_pruner"):
+                        if meth == "llm_pruner" and grads is None:
+                            continue
+                        cb = P.pruning_compress(params, cfg, ratio, meth,
+                                                calib_x=calib, grads=grads)
+                        self._export_variant(
+                            model, f"{model}/{meth}_{rtag}", cb.params,
+                            method=meth, ratio=ratio, kind="pruned",
+                            stored=cb.stored_params, bytes_=cb.bytes_fp16_equiv,
+                            heads_per_layer=cb.heads_per_layer)
+            # Table 17: rank perturbation around dobi-0.4 (main model only)
+            if main:
+                ks04 = self.ks[(model, 0.4)]
+                base_cm = P.dobi_compress(params, cfg, ks04, calib, ratio=0.4)
+                for x in ([2] if quick else [1, 2, 5, 24]):
+                    ksp = P.perturb_ranks(ks04, x)
+                    cmp_ = P.dobi_compress(params, cfg, ksp, calib, ratio=0.4,
+                                           cached_v=base_cm.cached_v)
+                    self._export_variant(
+                        model, f"{model}/dobi-perturb{x}_40", cmp_.params,
+                        method="dobi-perturb", ratio=0.4, kind="factorized",
+                        stored=cmp_.stored_params, bytes_=cmp_.bytes_fp16_equiv,
+                        ranks=cmp_.ranks, extra={"perturb_x": int(x)})
+
+    # -- stage 6: python-side analyses -------------------------------------------
+    def analyses(self):
+        log("== analyses ==")
+        model = "llama-nano"
+        cfg = M.CONFIGS[model]
+        params = self.params[model]
+        wiki_eval = self.tokens["wiki-syn"]["eval"]
+        quick = self.profile_name == "quick"
+
+        # Table 1: activation vs weight truncation at identical positions.
+        shapes_all = M.target_shapes(cfg)
+        table1 = {}
+        for ratio in [1.0] + RATIOS:
+            if ratio == 1.0:
+                base = P.eval_ppl(params, cfg, wiki_eval, n_windows=4)
+                table1["1.0"] = {"activation": base, "weight": base}
+                continue
+            ks_u = T.uniform_ks(cfg, ratio)
+            ks_uc = P.scale_ks_to_classic(cfg, ks_u, ratio)  # classic positions
+            ppl_act = P.eval_activation_truncation_ppl(
+                params, cfg, wiki_eval, ks_uc.astype(np.float32), n_windows=3)
+            ppl_w = P.eval_weight_truncation_ppl(
+                params, cfg, wiki_eval,
+                {nm: int(k) for (nm, _, _), k in zip(shapes_all, ks_uc)},
+                n_windows=4)
+            table1[str(ratio)] = {"activation": ppl_act, "weight": ppl_w}
+            log(f"  table1 r={ratio}: act {ppl_act:.2f} vs weight {ppl_w:.2f}")
+        self.manifest["analysis"]["table1"] = table1
+
+        # Fig 11: per-layer act-vs-weight truncation loss.
+        fig11 = []
+        layers = [0, cfg.n_layers // 2, cfg.n_layers - 1]
+        kvals = [48, 96, 160] if not quick else [96]
+        for li in layers:
+            tnames = [f"layers.{li}.{mn}" for mn in M.LAYER_MATS]
+            for k in kvals:
+                ks_vec = np.full(len(tnames), k, np.float32)
+                ppl_a = P.eval_activation_truncation_ppl(
+                    params, cfg, wiki_eval, ks_vec, n_windows=2, targets=tnames)
+                ppl_w = P.eval_weight_truncation_ppl(
+                    params, cfg, wiki_eval, {nm: k for nm in tnames}, n_windows=2)
+                fig11.append({"layer": li, "k": k, "activation": ppl_a,
+                              "weight": ppl_w})
+        self.manifest["analysis"]["fig11"] = fig11
+
+        # Fig 3a: guided truncation — single vs multi-layer k-training.
+        if not quick:
+            wiki_train = self.tokens["wiki-syn"]["train"]
+            last = cfg.n_layers - 1
+            single = [f"layers.{last}.{mn}" for mn in M.LAYER_MATS]
+            multi = [f"layers.{li}.{mn}" for li in (last - 1, last)
+                     for mn in M.LAYER_MATS]
+            fig3a = {}
+            for tag, tgts in (("single", single), ("multi", multi)):
+                _, tlog = T.train_ks(params, cfg, wiki_train, ratio=0.85,
+                                     steps=24, targets=tgts, log=log,
+                                     val_tokens=wiki_eval, val_every=4)
+                fig3a[tag] = {"val_ppl": tlog.val_ppl_history,
+                              "task_loss": tlog.task_loss_history}
+            fig3a["dense_ppl"] = table1["1.0"]["activation"]
+            self.manifest["analysis"]["fig3a"] = fig3a
+
+            # Fig 3b: large vs small training batch.
+            fig3b = {}
+            for tag, bsz in (("batch8", 8), ("batch2", 2)):
+                ks_b, tlog = T.train_ks(params, cfg, wiki_train, ratio=0.6,
+                                        steps=24, batch=bsz,
+                                        seq=max(72, 256 // bsz), log=log,
+                                        val_tokens=wiki_eval, val_every=6)
+                fig3b[tag] = {"val_ppl": tlog.val_ppl_history,
+                              "loss": tlog.loss_history}
+            self.manifest["analysis"]["fig3b"] = fig3b
+
+        # Fig 3c: PCA vs IPCA memory (analytic model + a measured point).
+        dims = [192, 512, 1024, 2048, 4096]
+        fig3c = {"dims": dims,
+                 "pca_bytes": [pca_memory_bytes(n, n // 4, 8) for n in dims],
+                 "ipca_bytes": [ipca_memory_bytes(n, n // 4) for n in dims]}
+        # measured agreement between IPCA and full PCA on a real target
+        name0 = "layers.0.w_gate"
+        w0 = np.asarray(M.get_target(params, name0), np.float64)
+        xs = self.calib[model][name0][:6]
+        bases, weights = [], []
+        k0 = 48
+        tr = IncrementalPCA(w0.shape[1], k0)
+        for x in xs:
+            v_i, s_i = batch_right_basis(x.astype(np.float64) @ w0, k0)
+            bases.append(v_i)
+            weights.append(s_i)
+            tr.partial_fit(v_i, s_i)
+        v_full = full_pca_components(bases, weights, k0)
+        fig3c["subspace_distance"] = subspace_distance(tr.components(), v_full)
+        fig3c["ipca_peak_bytes_measured"] = tr.peak_bytes
+        fig3c["pca_stack_bytes_measured"] = int(
+            sum(b.nbytes for b in bases))
+        self.manifest["analysis"]["fig3c"] = fig3c
+
+        # Table 15: quantization error per matrix kind at dobi-0.6 factors.
+        ks06 = self.ks[(model, 0.6)]
+        table15 = {}
+        for (nm, m, n), k in zip(shapes_all, ks06):
+            if not nm.startswith("layers.1."):
+                continue
+            w = np.asarray(M.get_target(params, nm), np.float64)
+            a = np.concatenate([x for x in self.calib[model][nm][:4]], axis=0)
+            from .dobi.ipca import ipca_weight_update
+            w_new = ipca_weight_update(w, [a.astype(np.float64) @ w], int(k))
+            f1, f2 = R.factorize(w_new, int(k))
+            mse1, mae1 = R.quant_error(f1)
+            mse2, mae2 = R.quant_error(f2)
+            table15[nm.split(".")[-1]] = {"mse": 0.5 * (mse1 + mse2),
+                                          "mae": 0.5 * (mae1 + mae2)}
+        self.manifest["analysis"]["table15"] = table15
+
+        # gradstab: stable vs naive SVD backward on a near-degenerate batch.
+        x0 = self.calib[model]["layers.0.wq"][0][:128]
+        a0 = np.asarray(x0, np.float64) @ np.asarray(
+            M.get_target(params, "layers.0.wq"), np.float64)
+        a0[1] = a0[0]  # force exact degeneracy
+        a0 = jnp.asarray(a0.astype(np.float32))
+
+        def gnorm(f):
+            g = jax.grad(lambda a: jnp.sum(f(a)[0][:, 0]) + jnp.sum(f(a)[2][0]))(a0)
+            return float(jnp.linalg.norm(g)), bool(jnp.all(jnp.isfinite(g)))
+
+        ns, fs = gnorm(svd)
+        nu, fu = gnorm(svd_unstable)
+        self.manifest["analysis"]["gradstab"] = {
+            "stable_norm": ns, "stable_finite": fs,
+            "naive_norm": nu, "naive_finite": fu}
+
+    # -- stage 7: reference PPLs ---------------------------------------------------
+    def reference_ppls(self):
+        log("== reference PPLs (python side) ==")
+        for v in self.manifest["variants"]:
+            if v["kernel"] == "pallas" or v["model"] not in ("llama-nano",):
+                continue
+            cfg = M.CONFIGS[v["model"]]
+            if cfg.img_dim:
+                continue
+            weights = IO.read_dobiw(os.path.join(self.out, v["weights"]))
+            arrays = _arrays_from_store(weights, v["param_names"])
+            params = M.unflatten_from_export(cfg, v["param_names"],
+                                             [jnp.asarray(a) for a in arrays])
+            hpl = v.get("heads_per_layer")
+            ref = {}
+            for cname in self.manifest["corpora"]:
+                wins = self.tokens[cname]["eval_wins"]
+                f = jax.jit(lambda t: M.lm_loss(
+                    M.forward_pruned(params, t, cfg, hpl) if hpl
+                    else M.forward_dense(params, t, cfg), t))
+                tot = sum(float(f(jnp.asarray(w.astype(np.int32)))) for w in wins)
+                ref[cname] = float(np.exp(tot / len(wins)))
+            v["ref_ppl"] = ref
+            log(f"  {v['id']}: wiki {ref['wiki-syn']:.2f} ptb {ref['ptb-syn']:.2f} "
+                f"c4 {ref['c4-syn']:.2f}")
+
+    def finish(self):
+        def sanitize(x):
+            """Strict JSON: NaN/Inf are not valid tokens — encode as null."""
+            if isinstance(x, float) and not np.isfinite(x):
+                return None
+            if isinstance(x, dict):
+                return {k: sanitize(v) for k, v in x.items()}
+            if isinstance(x, (list, tuple)):
+                return [sanitize(v) for v in x]
+            return x
+
+        with open(os.path.join(self.out, "manifest.json"), "w") as f:
+            json.dump(sanitize(self.manifest), f, indent=1, allow_nan=False)
+        log(f"manifest: {len(self.manifest['variants'])} variants")
+
+
+def _arrays_from_store(store: dict[str, np.ndarray], names: list[str]):
+    """Reassemble HLO-parameter arrays from a .dobiw store (mirrors the
+    rust loader: dequantize q8+scales pairs, upcast f16)."""
+    out = []
+    for n in names:
+        if n in store:
+            out.append(store[n].astype(np.float32))
+        else:
+            q = store[n + ".q8"]
+            s = store[n + ".scales"]
+            out.append(q.astype(np.float32) * s)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--profile", default="full", choices=list(PROFILES))
+    args = ap.parse_args()
+    t0 = time.time()
+    b = Builder(args.out, args.profile)
+    b.build_corpora()
+    b.pretrain_all()
+    b.ktrain_all()
+    b.compress_and_export()
+    b.analyses()
+    b.reference_ppls()
+    b.finish()
+    log(f"aot done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,400 @@
+"""Synthetic corpora, task suites, and the shared tokenizer spec.
+
+The paper evaluates on WikiText2 / PTB / C4 plus seven commonsense suites.
+We have no network and no licensed corpora in the image, so we build three
+synthetic corpora with *distinct statistics* (the tables only need
+in-domain vs out-of-domain structure, not corpus identity) and six
+multiple-choice suites scored the lm-eval-harness way (length-normalized
+NLL over options).  Everything is deterministic given a seed and shared
+with the rust side through flat binary files (see `write_tokbin`).
+
+Tokenizer: byte-level, vocab = 256.  Rust mirrors this in
+`rust/src/tokenizer/` — the contract is simply `token == byte`.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+VOCAB_SIZE = 256
+TOKBIN_MAGIC = b"DOBT1\x00"
+
+
+# ---------------------------------------------------------------------------
+# Tokenizer (byte-level; must match rust/src/tokenizer)
+# ---------------------------------------------------------------------------
+
+def encode(text: str) -> np.ndarray:
+    """Byte-level encode. Errors are replaced so any str round-trips."""
+    return np.frombuffer(text.encode("utf-8", errors="replace"), dtype=np.uint8).astype(np.int32)
+
+
+def decode(tokens: np.ndarray) -> str:
+    return bytes(int(t) & 0xFF for t in tokens).decode("utf-8", errors="replace")
+
+
+# ---------------------------------------------------------------------------
+# Deterministic word inventories
+# ---------------------------------------------------------------------------
+
+_CONSONANTS = "bcdfghjklmnpqrstvwz"
+_VOWELS = "aeiou"
+
+
+def _make_words(rng: np.random.Generator, n: int, min_syl: int = 1, max_syl: int = 3) -> list[str]:
+    words = []
+    seen = set()
+    while len(words) < n:
+        syls = rng.integers(min_syl, max_syl + 1)
+        w = "".join(
+            _CONSONANTS[rng.integers(len(_CONSONANTS))] + _VOWELS[rng.integers(len(_VOWELS))]
+            for _ in range(syls)
+        )
+        if w not in seen:
+            seen.add(w)
+            words.append(w)
+    return words
+
+
+def _zipf_choice(rng: np.random.Generator, n: int, size: int, a: float = 1.3) -> np.ndarray:
+    """Zipfian ranks in [0, n) — natural-language-like unigram skew."""
+    ranks = np.arange(1, n + 1, dtype=np.float64)
+    p = ranks ** (-a)
+    p /= p.sum()
+    return rng.choice(n, size=size, p=p)
+
+
+# ---------------------------------------------------------------------------
+# Corpora
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Corpus:
+    name: str
+    text: str
+
+    def tokens(self) -> np.ndarray:
+        return encode(self.text)
+
+
+def gen_wiki_syn(seed: int = 0, n_chars: int = 600_000) -> Corpus:
+    """Zipfian word LM with sentence/paragraph structure — WikiText2 analogue.
+
+    This is also the *pretraining* corpus, so the substrate model genuinely
+    learns its statistics (bigram habits, punctuation, capitalization),
+    which is what gives compression something to destroy.
+    """
+    rng = np.random.default_rng(seed)
+    words = _make_words(rng, 800)
+    # Fixed bigram tendencies: each word has a preferred small follow set,
+    # giving the LM learnable medium-range structure beyond unigrams.
+    follow = {w: rng.choice(len(words), size=6) for w in words}
+    out: list[str] = []
+    total = 0
+    cur = words[int(_zipf_choice(rng, len(words), 1)[0])]
+    sent: list[str] = []
+    while total < n_chars:
+        sent.append(cur)
+        total += len(cur) + 1
+        if rng.random() < 0.35:
+            cur = words[int(follow[cur][rng.integers(6)])]
+        else:
+            cur = words[int(_zipf_choice(rng, len(words), 1)[0])]
+        if len(sent) >= rng.integers(5, 14):
+            s = " ".join(sent)
+            s = s[0].upper() + s[1:] + ("." if rng.random() < 0.8 else "?")
+            out.append(s)
+            sent = []
+            if rng.random() < 0.12:
+                out.append("\n\n")
+            else:
+                out.append(" ")
+    return Corpus("wiki-syn", "".join(out)[:n_chars])
+
+
+def gen_ptb_syn(seed: int = 1, n_chars: int = 200_000) -> Corpus:
+    """Low-entropy templated sentences — PTB analogue (out-of-domain,
+    more predictable than wiki-syn so PPL lands lower-ish but the model
+    never trained on the templates)."""
+    rng = np.random.default_rng(seed)
+    subs = _make_words(rng, 40)
+    verbs = _make_words(rng, 25)
+    objs = _make_words(rng, 40)
+    templates = [
+        "the {s} {v} the {o} .",
+        "a {s} {v} a {o} today .",
+        "{s} and {s2} {v} the {o} .",
+        "the {s} will {v} the {o} soon .",
+        "no {s} ever {v} that {o} .",
+    ]
+    out = []
+    total = 0
+    while total < n_chars:
+        t = templates[rng.integers(len(templates))]
+        s = t.format(
+            s=subs[int(_zipf_choice(rng, len(subs), 1)[0])],
+            s2=subs[rng.integers(len(subs))],
+            v=verbs[int(_zipf_choice(rng, len(verbs), 1)[0])],
+            o=objs[int(_zipf_choice(rng, len(objs), 1)[0])],
+        )
+        out.append(s + " ")
+        total += len(s) + 1
+    return Corpus("ptb-syn", "".join(out)[:n_chars])
+
+
+def gen_c4_syn(seed: int = 2, n_chars: int = 200_000) -> Corpus:
+    """High-entropy web-crawl analogue: wiki-like text interleaved with
+    numbers, urls-ish tokens and shouting — C4 analogue."""
+    rng = np.random.default_rng(seed)
+    base = gen_wiki_syn(seed=seed + 100, n_chars=n_chars).text
+    out = []
+    i = 0
+    while i < len(base):
+        chunk = base[i : i + rng.integers(40, 160)]
+        i += len(chunk)
+        out.append(chunk)
+        r = rng.random()
+        if r < 0.15:
+            out.append(" " + str(rng.integers(0, 100000)))
+        elif r < 0.25:
+            out.append(" www." + "".join(_make_words(rng, 1)) + ".com ")
+        elif r < 0.32:
+            out.append(" " + chunk[: rng.integers(3, 12)].upper() + " ")
+    return Corpus("c4-syn", "".join(out)[:n_chars])
+
+
+CORPUS_BUILDERS = {
+    "wiki-syn": gen_wiki_syn,
+    "ptb-syn": gen_ptb_syn,
+    "c4-syn": gen_c4_syn,
+}
+
+
+# ---------------------------------------------------------------------------
+# Task suites (zero-shot multiple choice, length-normalized NLL scoring)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Task:
+    prompt: str
+    options: list[str]
+    answer: int  # index into options
+
+
+@dataclass
+class TaskSuite:
+    name: str
+    tasks: list[Task] = field(default_factory=list)
+
+
+def _completion_tasks(name: str, corpus: Corpus, seed: int, n: int, plen: int, clen: int,
+                      n_opt: int = 2) -> TaskSuite:
+    """HellaSwag-style: true continuation vs continuations sampled elsewhere.
+
+    A LM that kept its language statistics prefers the true continuation;
+    compression that destroys them drops the suite toward chance.
+    """
+    rng = np.random.default_rng(seed)
+    text = corpus.text
+    suite = TaskSuite(name)
+    for _ in range(n):
+        i = int(rng.integers(0, len(text) - plen - clen - 1))
+        prompt = text[i : i + plen]
+        true = text[i + plen : i + plen + clen]
+        opts = [true]
+        while len(opts) < n_opt:
+            j = int(rng.integers(0, len(text) - clen - 1))
+            alt = text[j : j + clen]
+            if alt != true:
+                opts.append(alt)
+        order = rng.permutation(n_opt)
+        options = [opts[k] for k in order]
+        suite.tasks.append(Task(prompt, options, int(np.argwhere(order == 0)[0][0])))
+    return suite
+
+
+def _copy_tasks(seed: int, n: int, n_opt: int = 4) -> TaskSuite:
+    """Induction-head suite: ` w1 w2 ... w1` → continuation should be `w2`.
+
+    Tiny transformers learn in-context copying early; it is among the first
+    abilities low-rank truncation damages (the paper's ARC/OpenbookQA slot).
+    """
+    rng = np.random.default_rng(seed)
+    words = _make_words(rng, 120)
+    suite = TaskSuite("copy-syn")
+    for _ in range(n):
+        seq = [words[i] for i in rng.choice(len(words), size=6, replace=False)]
+        key = rng.integers(0, 5)
+        prompt = " ".join(seq) + " " + seq[key] + " "
+        true = seq[key + 1]
+        opts = [true]
+        while len(opts) < n_opt:
+            alt = words[rng.integers(len(words))]
+            if alt not in opts and alt not in seq:
+                opts.append(alt)
+        order = rng.permutation(n_opt)
+        suite.tasks.append(Task(prompt, [opts[k] for k in order],
+                                int(np.argwhere(order == 0)[0][0])))
+    return suite
+
+
+def _digit_tasks(seed: int, n: int, n_opt: int = 4) -> TaskSuite:
+    """MathQA analogue: arithmetic progressions mod 10 (`2 4 6 →  8`)."""
+    rng = np.random.default_rng(seed)
+    suite = TaskSuite("mathqa-syn")
+    for _ in range(n):
+        a, d = int(rng.integers(0, 10)), int(rng.integers(1, 5))
+        seq = [(a + d * i) % 10 for i in range(5)]
+        prompt = " ".join(str(x) for x in seq[:4]) + " "
+        true = str(seq[4])
+        opts = [true]
+        while len(opts) < n_opt:
+            alt = str(int(rng.integers(0, 10)))
+            if alt not in opts:
+                opts.append(alt)
+        order = rng.permutation(n_opt)
+        suite.tasks.append(Task(prompt, [opts[k] for k in order],
+                                int(np.argwhere(order == 0)[0][0])))
+    return suite
+
+
+def build_task_suites(wiki: Corpus, ptb: Corpus, c4: Corpus, n_per: int = 60,
+                      seed: int = 7) -> list[TaskSuite]:
+    """Analogue of the paper's 7 commonsense suites (Table 2 columns)."""
+    return [
+        _completion_tasks("hella-syn", wiki, seed + 1, n_per, plen=64, clen=24),
+        _completion_tasks("arc-e-syn", ptb, seed + 2, n_per, plen=48, clen=16),
+        _completion_tasks("arc-c-syn", c4, seed + 3, n_per, plen=48, clen=16, n_opt=4),
+        _completion_tasks("winog-syn", wiki, seed + 4, n_per, plen=32, clen=12),
+        _copy_tasks(seed + 5, n_per),
+        _digit_tasks(seed + 6, n_per),
+        _completion_tasks("piqa-syn", c4, seed + 8, n_per, plen=40, clen=20),
+    ]
+
+
+def build_mmlu_syn(wiki: Corpus, ptb: Corpus, c4: Corpus, n: int = 80, seed: int = 23) -> TaskSuite:
+    """Harder mixed suite (4 options, longer spans) — the MMLU slot."""
+    a = _completion_tasks("m1", wiki, seed, n // 3, plen=96, clen=32, n_opt=4).tasks
+    b = _completion_tasks("m2", ptb, seed + 1, n // 3, plen=96, clen=32, n_opt=4).tasks
+    c = _completion_tasks("m3", c4, seed + 2, n - 2 * (n // 3), plen=96, clen=32, n_opt=4).tasks
+    return TaskSuite("mmlu-syn", a + b + c)
+
+
+# ---------------------------------------------------------------------------
+# VLM / VLA synthetic data
+# ---------------------------------------------------------------------------
+
+@dataclass
+class VqaSample:
+    """`image` is a raw feature vector; the model's projector maps it into
+    the LM embedding space as a prefix. The hidden caption is recoverable
+    from the image features (by construction) so a finetuned model can
+    answer; compression degrades the recovery."""
+    image: np.ndarray           # (img_dim,)
+    question: str
+    options: list[str]
+    answer: int
+    caption: str                # the ground-truth description (for training)
+
+
+def build_vqa(seed: int, n: int, img_dim: int, n_opt: int = 4) -> list[VqaSample]:
+    rng = np.random.default_rng(seed)
+    words = _make_words(rng, 64)
+    # Fixed linear code: caption word index -> direction in image space.
+    code = rng.standard_normal((len(words), img_dim)).astype(np.float32)
+    samples = []
+    for _ in range(n):
+        idx = rng.choice(len(words), size=3, replace=False)
+        caption = " ".join(words[i] for i in idx)
+        img = code[idx].sum(axis=0) + 0.1 * rng.standard_normal(img_dim)
+        opts = [caption]
+        while len(opts) < n_opt:
+            jdx = rng.choice(len(words), size=3, replace=False)
+            alt = " ".join(words[j] for j in jdx)
+            if alt not in opts:
+                opts.append(alt)
+        order = rng.permutation(n_opt)
+        samples.append(VqaSample(img.astype(np.float32), "what is shown ? ",
+                                 [opts[k] for k in order],
+                                 int(np.argwhere(order == 0)[0][0]), caption))
+    return samples
+
+
+@dataclass
+class VlaSample:
+    image: np.ndarray        # (img_dim,)
+    instruction: str
+    coords: np.ndarray       # (3,) in [-1, 1]
+    angle: float             # scalar in [-1, 1]
+    gripper: int             # 0/1
+
+
+def build_vla(seed: int, n: int, img_dim: int) -> list[VlaSample]:
+    """BridgeData-style trace: action is a fixed smooth function of image
+    features + instruction hash, so it is learnable and degradation under
+    compression is measurable as MSE."""
+    rng = np.random.default_rng(seed)
+    words = _make_words(rng, 32)
+    proj = rng.standard_normal((img_dim, 5)).astype(np.float32) / np.sqrt(img_dim)
+    samples = []
+    for _ in range(n):
+        img = rng.standard_normal(img_dim).astype(np.float32)
+        w = words[rng.integers(len(words))]
+        instr = f"move to the {w} "
+        h = (zlib.crc32(w.encode()) % 1000) / 1000.0 - 0.5
+        z = img @ proj
+        coords = np.tanh(z[:3] + h)
+        angle = float(np.tanh(z[3] - h))
+        gripper = int(z[4] + h > 0)
+        samples.append(VlaSample(img, instr, coords.astype(np.float32), angle, gripper))
+    return samples
+
+
+# ---------------------------------------------------------------------------
+# Binary interchange with rust
+# ---------------------------------------------------------------------------
+
+def write_tokbin(path: str, tokens: np.ndarray) -> None:
+    """`DOBT1\\0` + u32 count + u16[count] little-endian + u32 crc32(body)."""
+    t = tokens.astype(np.uint16)
+    body = t.tobytes()
+    with open(path, "wb") as f:
+        f.write(TOKBIN_MAGIC)
+        f.write(np.uint32(len(t)).tobytes())
+        f.write(body)
+        f.write(np.uint32(zlib.crc32(body) & 0xFFFFFFFF).tobytes())
+
+
+def read_tokbin(path: str) -> np.ndarray:
+    with open(path, "rb") as f:
+        raw = f.read()
+    assert raw[:6] == TOKBIN_MAGIC, f"bad magic in {path}"
+    n = int(np.frombuffer(raw[6:10], dtype=np.uint32)[0])
+    body = raw[10 : 10 + 2 * n]
+    crc = int(np.frombuffer(raw[10 + 2 * n : 14 + 2 * n], dtype=np.uint32)[0])
+    assert zlib.crc32(body) & 0xFFFFFFFF == crc, f"crc mismatch in {path}"
+    return np.frombuffer(body, dtype=np.uint16).astype(np.int32)
+
+
+def suite_to_json(suite: TaskSuite) -> dict:
+    return {
+        "name": suite.name,
+        "tasks": [
+            {"prompt": t.prompt, "options": t.options, "answer": t.answer}
+            for t in suite.tasks
+        ],
+    }
+
+
+def write_suites(path: str, suites: list[TaskSuite]) -> None:
+    with open(path, "w") as f:
+        json.dump({"suites": [suite_to_json(s) for s in suites]}, f)
+
+
+def ensure_dir(p: str) -> None:
+    os.makedirs(p, exist_ok=True)

@@ -1,0 +1,219 @@
+"""Comparator methods, reimplemented from their papers' core ideas.
+
+SVD family (factorized output, classic k(m+n) storage):
+* weight_svd — truncate SVD(W) directly (paper Table 1 "Weight" row).
+* asvd      — activation-aware scaling S = diag(mean|x|^alpha):
+              W ~ S^-1 (S W)_k           (Yuan et al. 2023).
+* svdllm    — truncation-aware whitening S = chol(X^T X)^T:
+              W ~ S^-1 (S W)_k           (Wang et al. 2024).
+
+Pruning family (structured, slimmed dense output):
+* wanda_sp   — |W| * ||x|| saliency per channel/head (Sun et al. 2023).
+* flap       — fluctuation (activation variance) * weight norm with the
+               recoverability flavour of An et al. 2024.
+* llm_pruner — first-order gradient saliency |w * dL/dw| per group
+               (Ma et al. 2023), one calibration backward.
+
+All pruning methods prune attention heads and MLP intermediate channels,
+which is what the original systems do on LLaMA.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .. import model as M
+from .ipca import robust_svd
+from .truncation import classic_k_for_ratio
+
+
+# ---------------------------------------------------------------------------
+# SVD-family weight factorizations
+# ---------------------------------------------------------------------------
+
+def _split_factors(u, s, vt, k):
+    rs = np.sqrt(np.maximum(s[:k], 0.0))
+    w1 = (u[:, :k] * rs[None, :]).astype(np.float32)
+    w2 = (rs[:, None] * vt[:k]).astype(np.float32)
+    return w1, w2
+
+
+def weight_svd_factors(w: np.ndarray, k: int):
+    u, s, vt = robust_svd(w.astype(np.float64))
+    return _split_factors(u, s, vt, k)
+
+
+def asvd_factors(w: np.ndarray, xs: list[np.ndarray], k: int, alpha: float = 0.5):
+    """S_ii = (mean_j |x_ji|)^alpha over calibration inputs."""
+    absmean = np.mean(np.concatenate([np.abs(x) for x in xs], axis=0), axis=0)
+    s_diag = np.power(np.maximum(absmean, 1e-6), alpha)
+    sw = s_diag[:, None] * w.astype(np.float64)
+    u, s, vt = robust_svd(sw)
+    w1, w2 = _split_factors(u, s, vt, k)
+    w1 = (w1 / s_diag[:, None]).astype(np.float32)  # fold S^-1 into W1
+    return w1, w2
+
+
+def svdllm_factors(w: np.ndarray, xs: list[np.ndarray], k: int, eps: float = 1e-3):
+    """Whitening via Cholesky of the calibration Gram matrix X^T X."""
+    m = w.shape[0]
+    gram = np.zeros((m, m), np.float64)
+    for x in xs:
+        gram += x.astype(np.float64).T @ x.astype(np.float64)
+    gram /= max(len(xs), 1)
+    gram[np.diag_indices(m)] += eps * float(np.trace(gram)) / m + 1e-8
+    l = np.linalg.cholesky(gram)
+    s_mat = l.T                       # S with S^T S = X^T X
+    sw = s_mat @ w.astype(np.float64)
+    u, s, vt = robust_svd(sw)
+    w1, w2 = _split_factors(u, s, vt, k)
+    w1 = np.linalg.solve(s_mat, w1.astype(np.float64)).astype(np.float32)
+    return w1, w2
+
+
+def svd_family_compress(params: dict, cfg: M.ModelConfig, ratio: float,
+                        method: str, calib_x: dict[str, list[np.ndarray]]):
+    """Apply one SVD-family baseline at uniform classic-storage ranks.
+
+    Returns (factorized params, {name: k}, stored_param_count)."""
+    shapes = M.target_shapes(cfg)
+    total = M.count_params(params)
+    fixed = total - sum(m * n for _, m, n in shapes)
+    budget = ratio * total - fixed
+    full = sum(m * n for _, m, n in shapes)
+    # uniform fraction c of each matrix's classic-storage budget
+    c = max(min(budget / full, 1.0), 0.02)
+    new = params
+    ks = {}
+    stored = fixed
+    for name, m, n in shapes:
+        k = max(1, classic_k_for_ratio(m, n, c))
+        w = np.asarray(M.get_target(params, name))
+        if method == "weight_svd":
+            w1, w2 = weight_svd_factors(w, k)
+        elif method == "asvd":
+            w1, w2 = asvd_factors(w, calib_x[name], k)
+        elif method == "svdllm":
+            w1, w2 = svdllm_factors(w, calib_x[name], k)
+        else:
+            raise ValueError(method)
+        new = M.set_target(new, name, (w1, w2))
+        ks[name] = k
+        stored += k * (m + n)
+    return new, ks, int(stored)
+
+
+# ---------------------------------------------------------------------------
+# Pruning-family baselines
+# ---------------------------------------------------------------------------
+
+def _head_ff_budget(cfg: M.ModelConfig, ratio: float, total: int, fixed: int):
+    """Keep-fraction rho over prunable params so kept/total == ratio."""
+    prunable = total - fixed
+    rho = np.clip((ratio * total - fixed) / prunable, 0.05, 1.0)
+    return float(rho)
+
+
+def _prune_with_scores(params: dict, cfg: M.ModelConfig, ratio: float,
+                       head_scores: list[np.ndarray], ff_scores: list[np.ndarray]):
+    """Slim every layer to its top heads/channels by the given scores."""
+    total = M.count_params(params)
+    fixed = M.fixed_param_count(cfg)
+    rho = _head_ff_budget(cfg, ratio, total, fixed)
+    d_head = cfg.d_head
+    new = params
+    heads_per_layer = []
+    stored = fixed
+    for li in range(cfg.n_layers):
+        layer = params["layers"][li]
+        n_keep_h = max(1, int(round(rho * cfg.n_heads)))
+        n_keep_f = max(8, int(round(rho * cfg.d_ff)))
+        keep_h = np.sort(np.argsort(head_scores[li])[::-1][:n_keep_h])
+        keep_f = np.sort(np.argsort(ff_scores[li])[::-1][:n_keep_f])
+        cols = np.concatenate([np.arange(h * d_head, (h + 1) * d_head) for h in keep_h])
+        for mn in ("wq", "wk", "wv"):
+            w = np.asarray(layer[mn])[:, cols]
+            new = M.set_target(new, f"layers.{li}.{mn}", w)
+            stored += w.size
+        wo = np.asarray(layer["wo"])[cols, :]
+        new = M.set_target(new, f"layers.{li}.wo", wo)
+        stored += wo.size
+        for mn in ("w_gate", "w_up"):
+            w = np.asarray(layer[mn])[:, keep_f]
+            new = M.set_target(new, f"layers.{li}.{mn}", w)
+            stored += w.size
+        wd = np.asarray(layer["w_down"])[keep_f, :]
+        new = M.set_target(new, f"layers.{li}.w_down", wd)
+        stored += wd.size
+        heads_per_layer.append(int(n_keep_h))
+    return new, heads_per_layer, int(stored)
+
+
+def _collect_head_ff_stats(params, cfg, calib_x):
+    """Per-layer per-head / per-ff-channel activation statistics."""
+    d_head = cfg.d_head
+    head_norm, head_var, ff_norm, ff_var = [], [], [], []
+    for li in range(cfg.n_layers):
+        xo = np.concatenate(calib_x[f"layers.{li}.wo"], axis=0)     # attn out pre-wo
+        xd = np.concatenate(calib_x[f"layers.{li}.w_down"], axis=0)  # mlp hidden
+        hn = np.array([np.linalg.norm(xo[:, h * d_head:(h + 1) * d_head])
+                       for h in range(cfg.n_heads)])
+        hv = np.array([np.var(xo[:, h * d_head:(h + 1) * d_head])
+                       for h in range(cfg.n_heads)])
+        head_norm.append(hn)
+        head_var.append(hv)
+        ff_norm.append(np.linalg.norm(xd, axis=0))
+        ff_var.append(np.var(xd, axis=0))
+    return head_norm, head_var, ff_norm, ff_var
+
+
+def wanda_sp_compress(params, cfg, ratio, calib_x):
+    """score = ||x_group|| * ||W_out rows for the group||."""
+    hn, _, fn, _ = _collect_head_ff_stats(params, cfg, calib_x)
+    head_scores, ff_scores = [], []
+    d_head = cfg.d_head
+    for li in range(cfg.n_layers):
+        wo = np.asarray(params["layers"][li]["wo"])
+        wd = np.asarray(params["layers"][li]["w_down"])
+        hs = np.array([hn[li][h] * np.linalg.norm(wo[h * d_head:(h + 1) * d_head])
+                       for h in range(cfg.n_heads)])
+        fs = fn[li] * np.linalg.norm(wd, axis=1)
+        head_scores.append(hs)
+        ff_scores.append(fs)
+    return _prune_with_scores(params, cfg, ratio, head_scores, ff_scores)
+
+
+def flap_compress(params, cfg, ratio, calib_x):
+    """Fluctuation-based: activation variance * squared weight norm."""
+    _, hv, _, fv = _collect_head_ff_stats(params, cfg, calib_x)
+    head_scores, ff_scores = [], []
+    d_head = cfg.d_head
+    for li in range(cfg.n_layers):
+        wo = np.asarray(params["layers"][li]["wo"])
+        wd = np.asarray(params["layers"][li]["w_down"])
+        hs = np.array([hv[li][h] * np.linalg.norm(wo[h * d_head:(h + 1) * d_head]) ** 2
+                       for h in range(cfg.n_heads)])
+        fs = fv[li] * np.linalg.norm(wd, axis=1) ** 2
+        head_scores.append(hs)
+        ff_scores.append(fs)
+    return _prune_with_scores(params, cfg, ratio, head_scores, ff_scores)
+
+
+def llm_pruner_compress(params, cfg, ratio, grads):
+    """First-order saliency |w * g| summed per head / ff channel.
+
+    `grads` is the gradient pytree from one calibration backward (computed
+    by the pipeline so this module stays jax-free)."""
+    head_scores, ff_scores = [], []
+    d_head = cfg.d_head
+    for li in range(cfg.n_layers):
+        layer = params["layers"][li]
+        glayer = grads["layers"][li]
+        sal_o = np.abs(np.asarray(layer["wo"]) * np.asarray(glayer["wo"]))
+        hs = np.array([sal_o[h * d_head:(h + 1) * d_head].sum()
+                       for h in range(cfg.n_heads)])
+        sal_d = np.abs(np.asarray(layer["w_down"]) * np.asarray(glayer["w_down"]))
+        fs = sal_d.sum(axis=1)
+        head_scores.append(hs)
+        ff_scores.append(fs)
+    return _prune_with_scores(params, cfg, ratio, head_scores, ff_scores)

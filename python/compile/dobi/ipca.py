@@ -1,0 +1,139 @@
+"""Incremental PCA weight update (paper §3.2, Algo 2, A.4.1).
+
+Given calibration activations A_i = x_i W, direct truncation at rank k is
+A_k = A V_A G_k V_A^T (Prop. 3), so the updated weight must be the rank-k
+matrix closest to the set {W V_{A_i} G_k V_{A_i}^T}.  A.4.1 shows the
+optimum is W~ = W V G_k V^T where V spans the dominant subspace of the
+stacked right-singular bases [V_1 ... V_n] — i.e. their PCA.
+
+Full PCA would materialize an n x (n_batches * k) matrix (hundreds of GB
+at 7B scale — paper Fig 3c); IPCA keeps only an n x k running basis and
+folds one batch at a time:  V_old <- top-k left singular vectors of
+[V_old * s_w, V_i]  (s_w carries the accumulated singular weights so early
+batches are not washed out).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def robust_svd(a: np.ndarray):
+    """np.linalg.svd with the standard dgesdd-nonconvergence fallbacks:
+    sanitize non-finite values, rescale, and as a last resort jitter.
+    LAPACK's divide-and-conquer driver occasionally fails on rank-deficient
+    float64 stacks; the jitter perturbs at 1e-10 * scale, far below any
+    quantity we consume."""
+    a = np.nan_to_num(np.asarray(a, np.float64), posinf=0.0, neginf=0.0)
+    scale = np.max(np.abs(a))
+    if scale > 0:
+        a = a / scale
+    else:
+        scale = 1.0
+    for attempt in range(3):
+        try:
+            u, s, vt = np.linalg.svd(a, full_matrices=False)
+            return u, s * scale, vt
+        except np.linalg.LinAlgError:
+            rng = np.random.default_rng(attempt)
+            a = a + 1e-10 * rng.standard_normal(a.shape)
+    raise np.linalg.LinAlgError(f"SVD failed after jitter, shape {a.shape}")
+
+
+def batch_right_basis(a: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Top-k right-singular basis of one activation batch a (rows x n).
+
+    Returns (V_k: n x k, s_k: k singular values)."""
+    _, s, vt = robust_svd(a)
+    k = min(k, vt.shape[0])
+    return vt[:k].T.astype(np.float64), s[:k].astype(np.float64)
+
+
+class IncrementalPCA:
+    """Streaming dominant-subspace tracker over right-singular bases.
+
+    `partial_fit` consumes one batch's (basis, weights); `components`
+    returns the n x k orthonormal V used in W~ = W V V^T.
+    Peak memory: O(n * 2k) — constant in the number of batches (Fig 3c).
+    """
+
+    def __init__(self, n: int, k: int):
+        self.n = n
+        self.k = k
+        self.basis: np.ndarray | None = None   # n x k, orthonormal columns
+        self.weights: np.ndarray | None = None  # k, importance of each column
+        self.n_seen = 0
+        self.peak_bytes = 0
+
+    def partial_fit(self, v_i: np.ndarray, s_i: np.ndarray) -> None:
+        assert v_i.shape[0] == self.n, f"basis dim {v_i.shape} != n={self.n}"
+        if self.basis is None:
+            self.basis = v_i[:, : self.k].copy()
+            self.weights = s_i[: self.k].copy()
+        else:
+            stacked = np.concatenate(
+                [self.basis * self.weights[None, :], v_i * s_i[None, :]], axis=1
+            )
+            self.peak_bytes = max(self.peak_bytes, stacked.nbytes)
+            u, s, _ = robust_svd(stacked)
+            kk = min(self.k, u.shape[1])
+            self.basis = u[:, :kk]
+            self.weights = s[:kk]
+        self.n_seen += 1
+
+    def components(self) -> np.ndarray:
+        assert self.basis is not None, "partial_fit never called"
+        return self.basis
+
+
+def full_pca_components(bases: list[np.ndarray], weights: list[np.ndarray],
+                        k: int) -> np.ndarray:
+    """Reference full-PCA: SVD of all stacked weighted bases at once.
+
+    Used only in tests/benches to validate IPCA subspace agreement and to
+    measure the memory blow-up (Fig 3c)."""
+    stacked = np.concatenate([v * s[None, :] for v, s in zip(bases, weights)], axis=1)
+    u, _, _ = robust_svd(stacked)
+    return u[:, :k]
+
+
+def subspace_distance(v1: np.ndarray, v2: np.ndarray) -> float:
+    """sin of the largest principal angle between column spaces (0 = same)."""
+    q1, _ = np.linalg.qr(v1)
+    q2, _ = np.linalg.qr(v2)
+    s = np.linalg.svd(q1.T @ q2, compute_uv=False)
+    return float(np.sqrt(max(0.0, 1.0 - np.min(s) ** 2)))
+
+
+def update_weight(w: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """The EYM-optimal update W~ = W V V^T (rank <= k, same shape as W)."""
+    return (w @ v) @ v.T
+
+
+def ipca_weight_update(w: np.ndarray, activations: list[np.ndarray], k: int,
+                       return_tracker: bool = False):
+    """End-to-end Algo 2: activations -> per-batch bases -> IPCA -> W~."""
+    n = w.shape[1]
+    tracker = IncrementalPCA(n, k)
+    for a in activations:
+        v_i, s_i = batch_right_basis(a, k)
+        tracker.partial_fit(v_i, s_i)
+    v = tracker.components()
+    w_new = update_weight(w.astype(np.float64), v).astype(w.dtype)
+    if return_tracker:
+        return w_new, tracker
+    return w_new
+
+
+# --- memory model for Fig 3c -------------------------------------------------
+
+def pca_memory_bytes(n: int, k: int, n_batches: int, dtype_bytes: int = 8) -> int:
+    """Full PCA must hold the n x (n_batches*k) stack plus its SVD workspace."""
+    stack = n * n_batches * k * dtype_bytes
+    svd_work = stack + n_batches * k * dtype_bytes * 2
+    return stack + svd_work
+
+
+def ipca_memory_bytes(n: int, k: int, dtype_bytes: int = 8) -> int:
+    """IPCA peak: running basis + one incoming basis + SVD of n x 2k."""
+    return 3 * n * 2 * k * dtype_bytes

@@ -1,0 +1,286 @@
+"""Whole-model compression driver: calibration, Dobi-SVD compression
+(trained-k + IPCA + remap), the no-remap/no-training ablations, rank
+perturbation (Table 17), and the activation-truncation oracle (Table 1,
+Fig 11).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import model as M
+from . import baselines as B
+from .ipca import IncrementalPCA, batch_right_basis, update_weight
+from .remap import RemappedFactors, quant_error, remap_store
+from .truncation import classic_ratio, remap_ratio, round_ranks
+
+
+# ---------------------------------------------------------------------------
+# Calibration: capture the input x of every compression target
+# ---------------------------------------------------------------------------
+
+def collect_calibration(params: dict, cfg: M.ModelConfig,
+                        tokens: np.ndarray, *, n_batches: int = 8,
+                        batch: int = 4, seq: int = 72, seed: int = 11,
+                        ) -> dict[str, list[np.ndarray]]:
+    """Run the dense forward over calibration batches, tapping the 2-D
+    input of each target matrix (so A_i = x_i @ W is reconstructable)."""
+    taps: dict[str, list[np.ndarray]] = {n: [] for n, _, _ in M.target_shapes(cfg)}
+
+    def fwd(toks):
+        b, s_len, d = toks.shape[0], toks.shape[1], cfg.d_model
+        cos, sin = M._rope_cache(s_len, cfg.d_head, cfg.rope_theta)
+        h = params["embed"][toks]
+        for li, layer in enumerate(params["layers"]):
+            pre = f"layers.{li}."
+            xa = M.rmsnorm(h, layer["attn_norm"]).reshape(b * s_len, d)
+            for mn in ("wq", "wk", "wv"):
+                taps[pre + mn].append(np.asarray(xa))
+            q = (xa @ layer["wq"]).reshape(b, s_len, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            k_ = (xa @ layer["wk"]).reshape(b, s_len, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            v = (xa @ layer["wv"]).reshape(b, s_len, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+            q = M.apply_rope(q, cos, sin)
+            k_ = M.apply_rope(k_, cos, sin)
+            att = jnp.einsum("bhqd,bhkd->bhqk", q, k_) / np.sqrt(cfg.d_head)
+            mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+            att = jax.nn.softmax(jnp.where(mask[None, None], att, -1e30), axis=-1)
+            o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b * s_len, d)
+            taps[pre + "wo"].append(np.asarray(o))
+            h = h + (o @ layer["wo"]).reshape(b, s_len, d)
+            xm = M.rmsnorm(h, layer["mlp_norm"]).reshape(b * s_len, d)
+            for mn in ("w_gate", "w_up"):
+                taps[pre + mn].append(np.asarray(xm))
+            hm = jax.nn.silu(xm @ layer["w_gate"]) * (xm @ layer["w_up"])
+            taps[pre + "w_down"].append(np.asarray(hm))
+            h = h + (hm @ layer["w_down"]).reshape(b, s_len, d)
+        return h
+
+    rng = np.random.default_rng(seed)
+    hi = len(tokens) - seq - 1
+    for _ in range(n_batches):
+        idx = rng.integers(0, hi, size=batch)
+        toks = jnp.asarray(np.stack([tokens[i:i + seq] for i in idx]).astype(np.int32))
+        fwd(toks)
+    return taps
+
+
+def calibration_grads(params: dict, cfg: M.ModelConfig, tokens: np.ndarray,
+                      *, batch: int = 8, seq: int = 64, seed: int = 12) -> dict:
+    """One calibration backward (LLM-Pruner saliency)."""
+    rng = np.random.default_rng(seed)
+    hi = len(tokens) - seq - 1
+    idx = rng.integers(0, hi, size=batch)
+    toks = jnp.asarray(np.stack([tokens[i:i + seq] for i in idx]).astype(np.int32))
+    g = jax.grad(lambda p: M.lm_loss(M.forward_dense(p, toks, cfg), toks))(params)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Dobi-SVD compression
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CompressedModel:
+    params: dict                       # factorized / pruned / dense params
+    method: str
+    ratio: float                       # requested
+    stored_params: int                 # effective stored parameter count
+    bytes_fp16_equiv: int              # storage bytes per the method's layout
+    ranks: dict[str, int] = field(default_factory=dict)
+    heads_per_layer: list[int] | None = None
+    quant_errors: dict[str, tuple[float, float]] = field(default_factory=dict)
+    cached_v: dict[str, np.ndarray] = field(default_factory=dict)  # IPCA bases
+
+
+def dobi_compress(params: dict, cfg: M.ModelConfig, ks: np.ndarray,
+                  calib_x: dict[str, list[np.ndarray]], *,
+                  precision: str = "8+16", ratio: float,
+                  cached_v: dict[str, np.ndarray] | None = None,
+                  ptq_bits: int = 0) -> CompressedModel:
+    """Trained ranks -> IPCA weight update -> remapped factors.
+
+    `cached_v` (from a previous run at the same calibration) skips the
+    IPCA pass — used by the Table 17 perturbation sweep.
+    `ptq_bits` > 0 additionally quantizes the final factors (Tables 9/22).
+    """
+    shapes = M.target_shapes(cfg)
+    total = M.count_params(params)
+    fixed = total - sum(m * n for _, m, n in shapes)
+    new = params
+    out = CompressedModel(params=None, method=f"dobi[{precision}]", ratio=ratio,
+                          stored_params=fixed, bytes_fp16_equiv=2 * fixed)
+    vs = cached_v if cached_v is not None else {}
+    for i, (name, m, n) in enumerate(shapes):
+        k = int(ks[i])
+        w = np.asarray(M.get_target(params, name), np.float64)
+        if name in vs:
+            v_full = vs[name]
+        else:
+            # IPCA over per-batch right-singular bases of A = xW (Algo 2).
+            # Track a basis wider than k so perturbations can reuse it.
+            k_track = min(min(m, n), max(k + 16, int(1.25 * k)))
+            tracker = IncrementalPCA(n, k_track)
+            for x in calib_x[name]:
+                a = x.astype(np.float64) @ w
+                v_i, s_i = batch_right_basis(a, k_track)
+                tracker.partial_fit(v_i, s_i)
+            v_full = tracker.components()
+            vs[name] = v_full
+        v = v_full[:, :k]
+        w_new = update_weight(w, v)                       # W~ = W V Gk V^T
+        rf = remap_store(w_new.astype(np.float32), k, precision=precision)
+        w1, w2 = rf.dequantize()
+        if ptq_bits:
+            from .remap import dequantize_absmax, quantize_absmax
+            q1, s1 = quantize_absmax(w1, bits=ptq_bits, axis=0)
+            q2, s2 = quantize_absmax(w2, bits=ptq_bits, axis=0)
+            w1 = dequantize_absmax(q1, s1, axis=0)
+            w2 = dequantize_absmax(q2, s2, axis=0)
+        new = M.set_target(new, name, (w1, w2))
+        out.ranks[name] = k
+        out.stored_params += k * max(m, n)
+        bytes_here = rf.storage_bytes()
+        if ptq_bits:
+            bytes_here = bytes_here * ptq_bits // 16
+        out.bytes_fp16_equiv += bytes_here
+        out.quant_errors[name] = quant_error(
+            np.concatenate([w1.ravel(), w2.ravel()]).reshape(-1, 1), bits=8)
+    out.params = new
+    out.cached_v = vs
+    if ptq_bits:
+        out.method = f"dobi[{precision}]+int{ptq_bits}"
+    return out
+
+
+def scale_ks_to_classic(cfg: M.ModelConfig, ks: np.ndarray, ratio: float) -> np.ndarray:
+    """W/o-remap ablation: rescale trained ranks so *classic* two-factor
+    storage k(m+n) hits the same overall ratio (Table 8 bottom rows)."""
+    shapes = [(m, n) for _, m, n in M.target_shapes(cfg)]
+    total = sum(m * n for m, n in shapes) + M.fixed_param_count(cfg)
+    fixed = M.fixed_param_count(cfg)
+    budget = ratio * total - fixed
+
+    def stored(c):
+        return sum(min(min(m, n), max(1, c * k)) * (m + n)
+                   for k, (m, n) in zip(ks, shapes))
+
+    lo, hi = 0.01, 4.0
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if stored(mid) > budget:
+            hi = mid
+        else:
+            lo = mid
+    scaled = np.array([min(min(m, n), max(1, lo * k))
+                       for k, (m, n) in zip(ks, shapes)], np.float64)
+    return round_ranks(scaled, shapes)
+
+
+def noremap_compress(params: dict, cfg: M.ModelConfig, ks_classic: np.ndarray,
+                     calib_x, *, ratio: float) -> CompressedModel:
+    """Dobi weight update but classic storage (both factors fp16)."""
+    out = dobi_compress(params, cfg, ks_classic, calib_x, precision="16", ratio=ratio)
+    shapes = M.target_shapes(cfg)
+    fixed = M.fixed_param_count(cfg)
+    out.method = "dobi-noremap"
+    out.stored_params = fixed + sum(int(k) * (m + n)
+                                    for k, (_, m, n) in zip(ks_classic, shapes))
+    out.bytes_fp16_equiv = 2 * out.stored_params
+    return out
+
+
+def svd_baseline_compress(params, cfg, ratio, method, calib_x) -> CompressedModel:
+    new, ks, stored = B.svd_family_compress(params, cfg, ratio, method, calib_x)
+    return CompressedModel(params=new, method=method, ratio=ratio,
+                           stored_params=stored, bytes_fp16_equiv=2 * stored,
+                           ranks=ks)
+
+
+def pruning_compress(params, cfg, ratio, method, calib_x=None, grads=None) -> CompressedModel:
+    if method == "wanda_sp":
+        new, hpl, stored = B.wanda_sp_compress(params, cfg, ratio, calib_x)
+    elif method == "flap":
+        new, hpl, stored = B.flap_compress(params, cfg, ratio, calib_x)
+    elif method == "llm_pruner":
+        new, hpl, stored = B.llm_pruner_compress(params, cfg, ratio, grads)
+    else:
+        raise ValueError(method)
+    return CompressedModel(params=new, method=method, ratio=ratio,
+                           stored_params=stored, bytes_fp16_equiv=2 * stored,
+                           heads_per_layer=hpl)
+
+
+def perturb_ranks(ks: np.ndarray, x: int, seed: int = 5) -> np.ndarray:
+    """Table 17: +x to a random half of 10 targets, -x to the other half,
+    total rank budget unchanged."""
+    rng = np.random.default_rng(seed)
+    ks = ks.copy()
+    idx = rng.permutation(len(ks))[:10]
+    for i in idx[:5]:
+        ks[i] += x
+    for i in idx[5:]:
+        ks[i] = max(8, ks[i] - x)
+    return ks
+
+
+# ---------------------------------------------------------------------------
+# Python-side evaluation (reference numbers for the manifest; rust re-measures)
+# ---------------------------------------------------------------------------
+
+def eval_ppl(params: dict, cfg: M.ModelConfig, tokens: np.ndarray, *,
+             batch: int = 4, seq: int = 64, n_windows: int = 12,
+             heads_per_layer=None, fwd=None, seed: int = 99) -> float:
+    if fwd is None:
+        if heads_per_layer is not None:
+            fwd = lambda p, t: M.forward_pruned(p, t, cfg, heads_per_layer)
+        else:
+            fwd = lambda p, t: M.forward_dense(p, t, cfg)
+    f = jax.jit(lambda t: M.lm_loss(fwd(params, t), t))
+    rng = np.random.default_rng(seed)
+    hi = len(tokens) - seq - 1
+    tot = 0.0
+    for _ in range(n_windows):
+        idx = rng.integers(0, hi, size=batch)
+        toks = jnp.asarray(np.stack([tokens[i:i + seq] for i in idx]).astype(np.int32))
+        tot += float(f(toks))
+    return float(np.exp(tot / n_windows))
+
+
+def eval_activation_truncation_ppl(params: dict, cfg: M.ModelConfig,
+                                   tokens: np.ndarray, ks_by_idx: np.ndarray,
+                                   *, batch: int = 4, seq: int = 64,
+                                   n_windows: int = 6,
+                                   targets: list[str] | None = None) -> float:
+    """The Table 1 / Fig 11 oracle: hard-truncate each activation's SVD at
+    eval time (no weight update) — uses the smooth gate at beta -> hard."""
+    from .trainer import forward_truncated
+    shapes_all = M.target_shapes(cfg)
+    names = [n for n, _, _ in shapes_all] if targets is None else targets
+    kidx = {nm: i for i, nm in enumerate(names)}
+    ks_j = jnp.asarray(ks_by_idx, jnp.float32)
+    f = jax.jit(lambda t: M.lm_loss(
+        forward_truncated(params, ks_j, t, cfg, kidx, beta=200.0), t))
+    rng = np.random.default_rng(101)
+    hi = len(tokens) - seq - 1
+    tot = 0.0
+    for _ in range(n_windows):
+        idx = rng.integers(0, hi, size=batch)
+        toks = jnp.asarray(np.stack([tokens[i:i + seq] for i in idx]).astype(np.int32))
+        tot += float(f(toks))
+    return float(np.exp(tot / n_windows))
+
+
+def eval_weight_truncation_ppl(params: dict, cfg: M.ModelConfig,
+                               tokens: np.ndarray, ks: dict[str, int],
+                               **kw) -> float:
+    """Table 1 "Weight" row: truncate SVD(W) at the same positions."""
+    new = params
+    for name, k in ks.items():
+        w = np.asarray(M.get_target(params, name))
+        w1, w2 = B.weight_svd_factors(w, int(k))
+        new = M.set_target(new, name, (w1, w2))
+    return eval_ppl(new, cfg, tokens, **kw)

@@ -1,0 +1,129 @@
+"""Remapped mixed-precision storage (paper §3.3, A.5, Algo 3) + the plain
+PTQ quantizer used for the GPTQ/BnB-composition tables.
+
+Given the updated rank-k matrix W~ (m x n, m >= n wlog):
+  SVD(W~) -> U_k = (U Sigma)[:, :k]  (m x k),  V_k = V[:, :k]  (n x k).
+Classic storage keeps both -> k(m+n) numbers.  Algo 3 instead quantizes
+the first n rows of U_k and all of V_k to int8 and packs the two int8
+halves into the fp16 footprint of the single m x k matrix -> k*max(m,n)
+numbers of fp16 == the bijective ratio of truncation.py.
+
+Numerically we keep explicit (int8 data, f32 scales) pairs — the packing
+is a storage-layout statement, enforced by the byte accounting here and by
+the rust `storage` reader, not by actual bit-twiddling in python.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .ipca import robust_svd
+
+
+# --- int8 / int4 absmax quantizer -------------------------------------------
+
+def quantize_absmax(w: np.ndarray, bits: int = 8, axis: int = 0):
+    """Symmetric absmax quantization along `axis` (per-column by default).
+
+    Returns (q int8, scales f32).  For bits=4 the codes live in [-7, 7]
+    but are stored in an int8 carrier (rust packs two per byte)."""
+    qmax = (1 << (bits - 1)) - 1
+    absmax = np.max(np.abs(w), axis=axis, keepdims=True)
+    absmax = np.where(absmax == 0, 1.0, absmax)
+    scales = (absmax / qmax).astype(np.float32)
+    q = np.clip(np.round(w / scales), -qmax, qmax).astype(np.int8)
+    return q, np.squeeze(scales, axis=axis)
+
+
+def dequantize_absmax(q: np.ndarray, scales: np.ndarray, axis: int = 0) -> np.ndarray:
+    s = np.expand_dims(scales, axis=axis)
+    return q.astype(np.float32) * s
+
+
+def quant_error(w: np.ndarray, bits: int = 8) -> tuple[float, float]:
+    """(MSE, MAE) of the quantize->dequantize round trip (Table 15)."""
+    q, s = quantize_absmax(w, bits=bits)
+    wd = dequantize_absmax(q, s)
+    err = w.astype(np.float64) - wd.astype(np.float64)
+    return float(np.mean(err ** 2)), float(np.mean(np.abs(err)))
+
+
+# --- factor extraction -------------------------------------------------------
+
+def factorize(w_new: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Exact rank-k factors of the updated weight: W~ ~= A @ B with
+    A = (U sqrt(S))[:, :k] (m x k), B = (sqrt(S) V^T)[:k, :] (k x n).
+
+    The symmetric sqrt split keeps both factors at comparable dynamic
+    range, which is what makes them int8-friendly (paper Fig 5/6)."""
+    u, s, vt = robust_svd(w_new.astype(np.float64))
+    rs = np.sqrt(s[:k])
+    a = (u[:, :k] * rs[None, :]).astype(np.float32)
+    b = (rs[:, None] * vt[:k]).astype(np.float32)
+    return a, b
+
+
+@dataclass
+class RemappedFactors:
+    """Algo-3 storage of one compressed matrix."""
+    m: int
+    n: int
+    k: int
+    precision: str            # "8+16" (paper), "16" (ablation), "4+16"
+    a_q: np.ndarray           # (m,k) int8 codes (or f16 as int8 view for "16")
+    a_scales: np.ndarray      # (k,) f32
+    b_q: np.ndarray           # (k,n) int8
+    b_scales: np.ndarray      # (k,) f32 (per-row of B)
+    a_f: np.ndarray | None    # fp16 factors for precision "16"
+    b_f: np.ndarray | None
+
+    def storage_bytes(self) -> int:
+        """Bytes on device per Algo 3 accounting."""
+        if self.precision == "16":
+            # no packing: both factors at fp16 -> k(m+n) * 2
+            return 2 * self.k * (self.m + self.n)
+        # packed: two int8 halves in one fp16 max(m,n) x k footprint
+        per_elem = 2 if self.precision == "8+16" else 1  # 4+16 halves again
+        return per_elem * self.k * max(self.m, self.n) + 4 * 2 * self.k  # + scales
+
+    def dequantize(self) -> tuple[np.ndarray, np.ndarray]:
+        if self.precision == "16":
+            return self.a_f.astype(np.float32), self.b_f.astype(np.float32)
+        a = dequantize_absmax(self.a_q, self.a_scales, axis=0)
+        b = dequantize_absmax(self.b_q, self.b_scales, axis=1)
+        return a, b
+
+
+def remap_store(w_new: np.ndarray, k: int, precision: str = "8+16") -> RemappedFactors:
+    """Factorize + store per Algo 3 at the requested precision."""
+    m, n = w_new.shape
+    a, b = factorize(w_new, k)
+    if precision == "16":
+        return RemappedFactors(m, n, k, precision,
+                               a_q=np.zeros((0,), np.int8), a_scales=np.zeros((0,), np.float32),
+                               b_q=np.zeros((0,), np.int8), b_scales=np.zeros((0,), np.float32),
+                               a_f=a.astype(np.float16), b_f=b.astype(np.float16))
+    bits = 8 if precision == "8+16" else 4
+    a_q, a_s = quantize_absmax(a, bits=bits, axis=0)       # per column of A
+    b_q, b_s = quantize_absmax(b, bits=bits, axis=1)       # per row of B
+    return RemappedFactors(m, n, k, precision, a_q, a_s, b_q, b_s, None, None)
+
+
+def reconstruct(rf: RemappedFactors) -> np.ndarray:
+    a, b = rf.dequantize()
+    return a @ b
+
+
+# --- whole-tensor PTQ (GPTQ/BnB stand-in for Tables 9/22/23) -----------------
+
+def ptq_tensor(w: np.ndarray, bits: int):
+    """Plain per-column absmax PTQ of a dense or factor tensor."""
+    q, s = quantize_absmax(w, bits=bits, axis=0)
+    return q, s
+
+
+def ptq_bytes(shape: tuple[int, ...], bits: int) -> int:
+    n = int(np.prod(shape))
+    return (n * bits + 7) // 8 + 4 * shape[-1]

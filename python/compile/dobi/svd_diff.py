@@ -1,0 +1,163 @@
+"""Gradient-stable differentiable SVD (paper §3.1 "the gradient is the
+devil", Eq. 1-2, appendix Algos 4/5).
+
+The textbook thin-SVD backward contains F_ij = 1/(sigma_j^2 - sigma_i^2),
+which blows up whenever two singular values are close or tiny — exactly
+the regime of LLM activations (approximately low-rank).  Following the
+paper we stabilize the three bad cases:
+
+1. both sigmas ~ 0                  -> 1/E_ij := gamma (tiny constant)
+2. sigma_i ~ sigma_j (both nonzero) -> K-term Taylor / geometric series:
+       1/(si^2-sj^2) = 1/(si(si+sj)) * 1/(1-q),  q = sj/si
+                    ~= (1 - q^{2K}) / ((1 - q^2) * si^2)   (closed form)
+   with the q -> 1 limit K / si^2 (paper Algo 5 lines 23, 27).
+3. well-separated                   -> exact 1/((si-sj)(si+sj))
+
+`svd` below is a jax.custom_vjp drop-in for jnp.linalg.svd
+(full_matrices=False) whose backward never produces inf/nan on degenerate
+spectra; `svd_unstable` keeps the naive rule for the ablation bench.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+# Paper defaults (A.3): gamma = 1e-10, K = 10.
+EPS_VAL = 1e-10       # clamp for tiny singular values (paper's gamma)
+EPS_GRAD = 1e-10      # 1/E for the both-tiny case
+EPS_DIFF = 1e-4       # |si - sj| below which the Taylor branch engages
+N_TAYLOR = 10         # K, number of series terms
+
+
+def _stable_inv_e(s: jnp.ndarray, *, eps_val: float, eps_grad: float,
+                  eps_diff: float, n_taylor: int) -> jnp.ndarray:
+    """The stabilized antisymmetric matrix 1/E with E_ij ~ sj^2 - si^2.
+
+    Returns F with F_ij = stable(1/(sj^2 - si^2)) for i != j, 0 on the
+    diagonal.  Sign convention matches the classic SVD backward
+    F_ij = 1/(sj^2 - si^2); the paper's Algo 5 builds the lower triangle
+    as 1/((si-sj)(si+sj)) = -F_ij and anti-symmetrizes — identical result.
+    """
+    k = s.shape[0]
+    sc = jnp.maximum(s, eps_val)
+    si = sc[:, None]  # lambda_i (row)
+    sj = sc[None, :]  # lambda_j (col)
+
+    both_tiny = (s[:, None] <= eps_val) & (s[None, :] <= eps_val)
+    diff = jnp.abs(si - sj)
+    close = (diff <= eps_diff) & ~both_tiny
+
+    # Work on the lower triangle (i > j).  s is sorted descending, so the
+    # ROW value si <= the COLUMN value sj there and
+    # F_ij = 1/(sj^2 - si^2) >= 0 with sj the larger of the pair.
+    # Branch 2: geometric-series closed form, q = si/sj in (0, 1]:
+    #   1/(sj^2 - si^2) = (1 - q^{2K}) / ((1 - q^2) sj^2),
+    # with the q -> 1 limit K / sj^2 (paper Algo 5 lines 23, 27).
+    q = si / sj
+    q2 = q * q
+    one_m_q2 = 1.0 - q2
+    series = jnp.where(
+        jnp.abs(one_m_q2) < 1e-12,
+        float(n_taylor),
+        (1.0 - q2 ** n_taylor) / jnp.where(jnp.abs(one_m_q2) < 1e-12, 1.0, one_m_q2),
+    )
+    taylor = series / (sj * sj)
+
+    # Branch 3: exact magnitude 1/((sj - si)(sj + si)).
+    denom = (sj - si) * (sj + si)
+    safe_denom = jnp.where(jnp.abs(denom) < 1e-30, 1.0, denom)
+    exact = 1.0 / safe_denom
+
+    lower_val = jnp.where(both_tiny, eps_grad, jnp.where(close, taylor, exact))
+    tril = jnp.tril(jnp.ones((k, k), dtype=bool), k=-1)
+    lower = jnp.where(tril, lower_val, 0.0)
+    # F_ij = 1/(sj^2 - si^2): positive below the diagonal, negative above.
+    f = lower - lower.T
+    return f
+
+
+def _svd_fwd(a):
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    return (u, s, vt), (a, u, s, vt)
+
+
+def _svd_bwd_impl(a, u, s, vt, du, ds, dvt, *, eps_val, eps_grad, eps_diff,
+                  n_taylor, stable: bool):
+    """General thin-SVD backward (m x n, k = min(m,n)) with stabilized F.
+
+    dA = U [ (F o (U^T dU - dU^T U)) S + S (F o (V^T dV - dV^T V)) + diag(dS) ] V^T
+       + (I - U U^T) dU S^{-1} V^T          (m > k column-space term)
+       + U S^{-1} dV^T (I - V V^T)          (n > k row-space term)
+    """
+    m, n = a.shape
+    k = s.shape[0]
+    v = vt.T
+    dv = dvt.T
+
+    if stable:
+        f = _stable_inv_e(s, eps_val=eps_val, eps_grad=eps_grad,
+                          eps_diff=eps_diff, n_taylor=n_taylor)
+        s_inv = 1.0 / jnp.maximum(s, eps_val)
+    else:
+        si2 = s[None, :] ** 2 - s[:, None] ** 2
+        f = jnp.where(jnp.eye(k, dtype=bool), 0.0, 1.0 / si2)
+        s_inv = 1.0 / s
+
+    utdu = u.T @ du
+    vtdv = v.T @ dv
+    j_u = f * (utdu - utdu.T)   # skew part scaled elementwise
+    j_v = f * (vtdv - vtdv.T)
+
+    sd = jnp.diag(s)
+    core = j_u @ sd + sd @ j_v + jnp.diag(ds)
+    da = u @ core @ vt
+    if m > k:
+        da = da + (du - u @ utdu) * s_inv[None, :] @ vt
+    if n > k:
+        da = da + u @ (s_inv[:, None] * (dv - v @ vtdv).T)
+    return (da,)
+
+
+@functools.partial(jax.custom_vjp)
+def svd(a: jnp.ndarray):
+    """Thin SVD (U, S, Vt) with the paper's gradient-stable backward."""
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    return u, s, vt
+
+
+def _svd_bwd(res, cts):
+    a, u, s, vt = res
+    du, ds, dvt = cts
+    du = jnp.zeros_like(u) if du is None else du
+    ds = jnp.zeros_like(s) if ds is None else ds
+    dvt = jnp.zeros_like(vt) if dvt is None else dvt
+    return _svd_bwd_impl(a, u, s, vt, du, ds, dvt, eps_val=EPS_VAL,
+                         eps_grad=EPS_GRAD, eps_diff=EPS_DIFF,
+                         n_taylor=N_TAYLOR, stable=True)
+
+
+svd.defvjp(_svd_fwd, _svd_bwd)
+
+
+@functools.partial(jax.custom_vjp)
+def svd_unstable(a: jnp.ndarray):
+    """Naive-backward SVD — kept only for the gradient-explosion ablation
+    (EXPERIMENTS.md `gradstab`): diverges on near-degenerate spectra."""
+    u, s, vt = jnp.linalg.svd(a, full_matrices=False)
+    return u, s, vt
+
+
+def _svd_bwd_unstable(res, cts):
+    a, u, s, vt = res
+    du, ds, dvt = cts
+    du = jnp.zeros_like(u) if du is None else du
+    ds = jnp.zeros_like(s) if ds is None else ds
+    dvt = jnp.zeros_like(vt) if dvt is None else dvt
+    return _svd_bwd_impl(a, u, s, vt, du, ds, dvt, eps_val=0.0, eps_grad=0.0,
+                         eps_diff=0.0, n_taylor=N_TAYLOR, stable=False)
+
+
+svd_unstable.defvjp(_svd_fwd, _svd_bwd_unstable)

@@ -1,0 +1,196 @@
+"""Differentiable truncation-position training (paper §3.1, Algo 1).
+
+Forward: for every compression target W the activation A = xW is SVD'd
+(with the gradient-stable backward of svd_diff), its spectrum gated by
+T(sigma_i) = sigma_i (0.5 tanh(beta(k - i)) + 0.5), and reconstructed —
+so the task loss directly "feels" every candidate truncation position.
+
+Parameter renormalization (paper Fig 1 step 1): the raw trainables are
+theta_i with k_i = K_i * sigmoid(theta_i), K_i = min(m_i, n_i).  All
+thetas then share scale/learning-rate regardless of matrix shape, and k
+stays in its feasible interval without clipping.
+
+Loss: L = L_task + gamma * |R_now - R_tar| with R_now the *remapped*
+(bijective) memory ratio of truncation.py — only k is trainable (224
+parameters at LLaMA-7B scale; 7*n_layers here).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import model as M
+from .svd_diff import svd
+from .truncation import round_ranks, smooth_gate
+
+BETA = 10.0        # paper A.3
+GAMMA = 5.0        # ratio-penalty weight (paper's gamma in the loss)
+
+
+@dataclass
+class TrainLog:
+    """Everything the figure benches need (Figs 3a/3b/7/8/9/10)."""
+    loss_history: list[float] = field(default_factory=list)
+    task_loss_history: list[float] = field(default_factory=list)
+    ratio_history: list[float] = field(default_factory=list)
+    val_ppl_history: list[float] = field(default_factory=list)
+    k_history: list[list[float]] = field(default_factory=list)  # per-step ks
+    target_names: list[str] = field(default_factory=list)
+    seconds: float = 0.0
+
+
+def _truncated_apply(x2d: jnp.ndarray, w: jnp.ndarray, k, beta: float):
+    """A = x W, then the smooth spectral gate at (learnable) position k."""
+    a = jnp.dot(x2d, w)
+    u, s, vt = svd(a)
+    gate = smooth_gate(s.shape[0], k, beta, dtype=s.dtype)
+    return (u * (s * gate)[None, :]) @ vt
+
+
+def forward_truncated(params: dict, ks: jnp.ndarray, tokens: jnp.ndarray,
+                      cfg: M.ModelConfig, kidx: dict[str, int],
+                      beta: float = BETA) -> jnp.ndarray:
+    """Dense forward with per-target activation truncation.
+
+    `kidx` maps target name -> index into ks; targets not present are
+    left untruncated (Fig 3a single/multi-layer experiments)."""
+    b, s_len, d = tokens.shape[0], tokens.shape[1], cfg.d_model
+    cos, sin = M._rope_cache(s_len, cfg.d_head, cfg.rope_theta)
+    h = params["embed"][tokens]
+
+    def apply(name, x2d, w):
+        if name in kidx:
+            return _truncated_apply(x2d, w, ks[kidx[name]], beta)
+        return jnp.dot(x2d, w)
+
+    for li, layer in enumerate(params["layers"]):
+        pre = f"layers.{li}."
+        xa = M.rmsnorm(h, layer["attn_norm"]).reshape(b * s_len, d)
+        q = apply(pre + "wq", xa, layer["wq"]).reshape(b, s_len, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        k_ = apply(pre + "wk", xa, layer["wk"]).reshape(b, s_len, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        v = apply(pre + "wv", xa, layer["wv"]).reshape(b, s_len, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        q = M.apply_rope(q, cos, sin)
+        k_ = M.apply_rope(k_, cos, sin)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k_) / np.sqrt(cfg.d_head)
+        mask = jnp.tril(jnp.ones((s_len, s_len), bool))
+        att = jax.nn.softmax(jnp.where(mask[None, None], att, -1e30), axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b * s_len, d)
+        h = h + apply(pre + "wo", o, layer["wo"]).reshape(b, s_len, d)
+
+        xm = M.rmsnorm(h, layer["mlp_norm"]).reshape(b * s_len, d)
+        g = apply(pre + "w_gate", xm, layer["w_gate"])
+        u_ = apply(pre + "w_up", xm, layer["w_up"])
+        hm = jax.nn.silu(g) * u_
+        h = h + apply(pre + "w_down", hm, layer["w_down"]).reshape(b, s_len, d)
+
+    h = M.rmsnorm(h, params["final_norm"])
+    return jnp.dot(h, params["embed"].T)
+
+
+def train_ks(params: dict, cfg: M.ModelConfig, train_tokens: np.ndarray, *,
+             ratio: float, steps: int = 60, batch: int = 4, seq: int = 72,
+             lr: float = 0.1, beta: float = BETA, gamma: float = GAMMA,
+             targets: list[str] | None = None, seed: int = 0,
+             val_tokens: np.ndarray | None = None, val_every: int = 0,
+             log=print) -> tuple[np.ndarray, TrainLog]:
+    """Optimize truncation positions.  Returns (integer ranks, log).
+
+    `targets=None` means all 7*n_layers matrices (the paper's setting);
+    a subset reproduces the Fig 3a guided-truncation experiments.
+    """
+    shapes_all = M.target_shapes(cfg)
+    if targets is None:
+        targets = [n for n, _, _ in shapes_all]
+    shapes = [(m, n) for (nm, m, n) in shapes_all if nm in set(targets)]
+    names = [nm for nm, _, _ in shapes_all if nm in set(targets)]
+    kidx = {nm: i for i, nm in enumerate(names)}
+    kmax = np.array([min(m, n) for m, n in shapes], np.float32)
+    maxmn = np.array([max(m, n) for m, n in shapes], np.float32)
+
+    total = M.count_params(params)
+    fixed = total - sum(m * n for m, n in shapes)
+
+    # renormalized parameters: k = kmax * sigmoid(theta); start at R_tar.
+    r0 = np.clip(ratio, 0.05, 0.95)
+    theta = jnp.full((len(names),), float(np.log(r0 / (1 - r0))), jnp.float32)
+
+    assert batch * seq >= int(kmax.max()), (
+        f"calibration batch ({batch}x{seq}) must cover max rank {kmax.max()}")
+
+    kmax_j = jnp.asarray(kmax)
+    maxmn_j = jnp.asarray(maxmn)
+
+    def loss_fn(theta, toks):
+        ks = kmax_j * jax.nn.sigmoid(theta)
+        logits = forward_truncated(params, ks, toks, cfg, kidx, beta)
+        task = M.lm_loss(logits, toks)
+        r_now = (jnp.sum(ks * maxmn_j) + fixed) / total
+        return task + gamma * jnp.abs(r_now - ratio), (task, r_now)
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn, has_aux=True))
+
+    # Adam on theta only
+    m_t = jnp.zeros_like(theta)
+    v_t = jnp.zeros_like(theta)
+    rng = np.random.default_rng(seed)
+    hi = len(train_tokens) - seq - 1
+    logobj = TrainLog(target_names=names)
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, hi, size=batch)
+        toks = jnp.asarray(np.stack([train_tokens[i:i + seq] for i in idx]).astype(np.int32))
+        (loss, (task, r_now)), g = grad_fn(theta, toks)
+        m_t = 0.9 * m_t + 0.1 * g
+        v_t = 0.999 * v_t + 0.001 * g * g
+        mh = m_t / (1 - 0.9 ** (step + 1))
+        vh = v_t / (1 - 0.999 ** (step + 1))
+        theta = theta - lr * mh / (jnp.sqrt(vh) + 1e-8)
+        ks_now = np.asarray(kmax_j * jax.nn.sigmoid(theta))
+        logobj.loss_history.append(float(loss))
+        logobj.task_loss_history.append(float(task))
+        logobj.ratio_history.append(float(r_now))
+        logobj.k_history.append([float(x) for x in ks_now])
+        if val_every and val_tokens is not None and (step % val_every == 0 or step == steps - 1):
+            ppl = eval_truncated_ppl(params, cfg, kidx, ks_now, val_tokens,
+                                     batch=batch, seq=seq, beta=beta)
+            logobj.val_ppl_history.append(ppl)
+        if step % max(steps // 5, 1) == 0 or step == steps - 1:
+            log(f"  [k-train r={ratio}] step {step:3d} loss {float(loss):.4f} "
+                f"task {float(task):.4f} R_now {float(r_now):.3f}")
+    logobj.seconds = time.time() - t0
+
+    ks_final = np.asarray(kmax_j * jax.nn.sigmoid(theta))
+    return round_ranks(ks_final, shapes), logobj
+
+
+def eval_truncated_ppl(params, cfg, kidx, ks, tokens, *, batch=4, seq=72,
+                       beta=BETA, n_windows: int = 8) -> float:
+    """PPL of the smooth-truncation model (Fig 7 validation curve)."""
+    ks_j = jnp.asarray(ks, jnp.float32)
+    f = jax.jit(lambda t: M.lm_loss(
+        forward_truncated(params, ks_j, t, cfg, kidx, beta), t))
+    rng = np.random.default_rng(123)
+    hi = len(tokens) - seq - 1
+    tot = 0.0
+    for _ in range(n_windows):
+        idx = rng.integers(0, hi, size=batch)
+        toks = jnp.asarray(np.stack([tokens[i:i + seq] for i in idx]).astype(np.int32))
+        tot += float(f(toks))
+    return float(np.exp(tot / n_windows))
+
+
+def uniform_ks(cfg: M.ModelConfig, ratio: float,
+               targets: list[str] | None = None) -> np.ndarray:
+    """The no-training ablation (Table 16 / SVD-LLM-style averaging):
+    every matrix truncated at the same remapped fraction."""
+    shapes_all = M.target_shapes(cfg)
+    if targets is None:
+        targets = [n for n, _, _ in shapes_all]
+    shapes = [(m, n) for (nm, m, n) in shapes_all if nm in set(targets)]
+    ks = np.array([ratio * min(m, n) for m, n in shapes], np.float32)
+    return round_ranks(ks, shapes)

@@ -1,0 +1,78 @@
+"""Truncation math: the smooth gate, ratio accounting, and the §3.3
+bijective remapping between truncation position and memory.
+
+Two storage regimes for an m x n matrix truncated at rank k:
+
+* classic SVD storage:   bytes ∝ k (m + n)   ->  ratio r = k(m+n)/(mn).
+  To compress at all, k < mn/(m+n) <= min(m,n)/2 for square matrices —
+  the "long-overlooked limitation": half the spectrum is lost before any
+  compression happens.
+* remapped storage (Algo 3): the two n x k (resp. m x k) halves are
+  quantized to int8 and packed into the fp16 footprint of ONE
+  max(m,n) x k matrix ->  bytes ∝ k max(m,n)  ->  r = k/min(m,n), a
+  bijection from k in [0, rank(W)] onto r in [0, 1].
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def smooth_gate(n: int, k, beta: float = 10.0, dtype=jnp.float32) -> jnp.ndarray:
+    """g_i = 0.5*tanh(beta*(k-i)) + 0.5 for i = 1..n (differentiable in k)."""
+    i = jnp.arange(1, n + 1, dtype=dtype)
+    return 0.5 * jnp.tanh(beta * (k - i)) + 0.5
+
+
+def soft_rank(n: int, k, beta: float = 10.0) -> jnp.ndarray:
+    """Differentiable effective rank = sum of the gate (== k for interior k)."""
+    return jnp.sum(smooth_gate(n, k, beta))
+
+
+# --- memory accounting -------------------------------------------------------
+
+def classic_k_for_ratio(m: int, n: int, r: float) -> int:
+    """k such that classic two-factor storage hits parameter-ratio r."""
+    return max(1, int(round(r * m * n / (m + n))))
+
+
+def classic_ratio(m: int, n: int, k: int) -> float:
+    return k * (m + n) / (m * n)
+
+
+def remap_k_for_ratio(m: int, n: int, r: float) -> int:
+    """Bijection: r = k * max(m,n) / (m*n) = k / min(m,n)."""
+    return max(1, min(min(m, n), int(round(r * min(m, n)))))
+
+
+def remap_ratio(m: int, n: int, k: int) -> float:
+    return k * max(m, n) / (m * n)
+
+
+def remap_ratio_soft(m: int, n: int, k) -> jnp.ndarray:
+    """Differentiable remapped ratio for the multi-objective loss."""
+    return k * max(m, n) / (m * n)
+
+
+def model_ratio_soft(ks: list, shapes: list[tuple[int, int]],
+                     fixed_params: int, total_params: int) -> jnp.ndarray:
+    """R_now for the trainer: compressed bytes of every truncated matrix
+    (remapped accounting) + untouched parameters, over the dense total."""
+    comp = 0.0
+    for k, (mm, nn) in zip(ks, shapes):
+        comp = comp + k * max(mm, nn)
+    return (comp + fixed_params) / total_params
+
+
+def round_ranks(ks: np.ndarray, shapes: list[tuple[int, int]],
+                multiple: int = 8, k_min: int = 8) -> np.ndarray:
+    """Final integer ranks: clamp to [k_min, min(m,n)] and round to a
+    lane-friendly multiple (the Pallas blocks like k % 8 == 0; the <0.2%
+    ratio effect is noted in DESIGN.md §7)."""
+    out = []
+    for k, (mm, nn) in zip(ks, shapes):
+        kk = int(round(float(k) / multiple) * multiple)
+        kk = max(k_min, min(min(mm, nn), kk))
+        out.append(kk)
+    return np.asarray(out, dtype=np.int64)

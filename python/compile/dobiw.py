@@ -1,0 +1,69 @@
+"""`.dobiw` — the weight container shared with rust (rust/src/storage).
+
+Layout (little-endian):
+  magic   b"DOBIW1"
+  u32     n_tensors
+  per tensor:
+    u16   name_len, name bytes (utf-8)
+    u8    dtype  (0 = f32, 1 = f16, 2 = i8, 3 = i32)
+    u8    ndim
+    u32 * ndim  shape
+    u64   payload byte length
+    payload
+    u32   crc32(payload)
+
+For remapped storage the int8 code tensors and their f32 scale tensors are
+separate entries (`<name>.q8` / `<name>.scales`); the rust reader
+dequantizes at load.  Plain f32/f16 tensors round-trip as-is.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+
+import numpy as np
+
+MAGIC = b"DOBIW1"
+DTYPES = {0: np.float32, 1: np.float16, 2: np.int8, 3: np.int32}
+DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.float16): 1,
+               np.dtype(np.int8): 2, np.dtype(np.int32): 3}
+
+
+def write_dobiw(path: str, tensors: list[tuple[str, np.ndarray]]) -> int:
+    """Write tensors in order; returns total bytes written."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<I", len(tensors)))
+        for name, arr in tensors:
+            arr = np.ascontiguousarray(arr)
+            code = DTYPE_CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            payload = arr.tobytes()
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+            f.write(struct.pack("<I", zlib.crc32(payload) & 0xFFFFFFFF))
+        return f.tell()
+
+
+def read_dobiw(path: str) -> dict[str, np.ndarray]:
+    out: dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        assert f.read(6) == MAGIC, f"bad magic in {path}"
+        (n,) = struct.unpack("<I", f.read(4))
+        for _ in range(n):
+            (nl,) = struct.unpack("<H", f.read(2))
+            name = f.read(nl).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            shape = tuple(struct.unpack("<I", f.read(4))[0] for _ in range(ndim))
+            (plen,) = struct.unpack("<Q", f.read(8))
+            payload = f.read(plen)
+            (crc,) = struct.unpack("<I", f.read(4))
+            assert zlib.crc32(payload) & 0xFFFFFFFF == crc, f"crc mismatch: {name}"
+            out[name] = np.frombuffer(payload, dtype=DTYPES[code]).reshape(shape).copy()
+    return out

@@ -1,0 +1,66 @@
+"""Fused int8-dequant + GEMM — the remapped-storage hot path.
+
+The remapping of §3.3 stores SVD factors as int8 with per-column absmax
+scales (the factors' columns are near-Gaussian — paper Fig 5/6 — so
+absmax int8 loses ~1e-7 MSE, Table 15).  Serving directly from that
+storage means every matmul first needs w = wq * scale; fusing the
+dequantize into the GEMM k-loop keeps the int8 block in VMEM and never
+materializes the fp32 weight in HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .matmul import _pad_to, _pick_block
+
+
+def _dequant_matmul_kernel(x_ref, wq_ref, s_ref, o_ref, acc_ref, *, n_kblocks: int):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = wq_ref[...].astype(jnp.float32) * s_ref[...].astype(jnp.float32)
+    acc_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+    @pl.when(kb == n_kblocks - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def dequant_matmul(x: jnp.ndarray, wq: jnp.ndarray, scales: jnp.ndarray,
+                   *, bm: int = 128, bn: int = 128, bk: int = 128) -> jnp.ndarray:
+    """(M,K) f32 @ dequant((K,N) int8, (N,) f32 scales) -> (M,N) f32."""
+    assert x.shape[1] == wq.shape[0] and wq.shape[1] == scales.shape[0]
+    M, K = x.shape
+    N = wq.shape[1]
+    bm = _pick_block(M, bm)
+    bn = _pick_block(N, bn)
+    bk = _pick_block(K, bk)
+    xp = _pad_to(x, bm, bk)
+    wqp = _pad_to(wq, bk, bn)
+    sp = jnp.pad(scales, (0, (-N) % bn)).reshape(1, -1)
+    Mp, Kp = xp.shape
+    Np = wqp.shape[1]
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_dequant_matmul_kernel, n_kblocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((bk, bn), lambda i, j, kb: (kb, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kb: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wqp, sp)
+    return out[:M, :N]

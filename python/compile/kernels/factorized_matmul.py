@@ -1,0 +1,39 @@
+"""The compressed-inference hot path: y = (x @ W1) @ W2 at rank k.
+
+After Dobi-SVD, every compressed weight is stored as the pair
+(W1 = U_k, W2 = Sigma_k V_k^T-ish factors, shapes (m,k) and (k,n)), and
+every forward through that layer is exactly two skinny GEMMs.  The rank-k
+inner dimension is kept contiguous so both GEMMs stream the intermediate
+through the same VMEM residency (the paper's FLOP saving is
+k(m+n) vs m*n multiply-adds per row).
+
+This composes the tiled Pallas `matmul` twice.  A fused single-kernel
+variant (recompute-free for one N-block) is intentionally NOT used: at the
+ranks the paper reaches (k << min(m,n)) the intermediate (bm, k) tile fits
+VMEM alongside both operand tiles, so two passes with a resident
+intermediate is the better schedule on the systolic array — see DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def factorized_matmul(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray,
+                      *, bm: int = 128, bn: int = 128, bk: int = 128) -> jnp.ndarray:
+    """(M,m) @ (m,k) @ (k,n) -> (M,n) via two tiled Pallas GEMMs."""
+    assert w1.shape[1] == w2.shape[0], f"rank mismatch {w1.shape} vs {w2.shape}"
+    t = matmul(x, w1, bm=bm, bn=bn, bk=bk)
+    return matmul(t, w2, bm=bm, bn=bn, bk=bk)
+
+
+def flops(m_rows: int, m: int, n: int, k: int) -> int:
+    """Multiply-add count for one factorized apply (rows = tokens)."""
+    return 2 * m_rows * k * (m + n)
+
+
+def dense_flops(m_rows: int, m: int, n: int) -> int:
+    return 2 * m_rows * m * n

@@ -1,0 +1,113 @@
+"""Tiled Pallas GEMM — the building block for the factorized hot path.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks
+(M, N, K) blocks; each program streams one K-block of `x` and `w` through
+VMEM and accumulates into a VMEM scratch block aimed at the MXU
+(128-aligned block shapes where the problem allows).  On the paper's CUDA
+target this schedule is the threadblock tiling of cuBLAS; BlockSpec
+expresses the same HBM->scratchpad plan for the systolic array.
+
+Interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so interpret mode is both the correctness path and what the
+AOT pipeline lowers into the serve-path HLO.
+
+Arbitrary ranks/dims are handled at the wrapper: inputs are zero-padded to
+block multiples (exact for matmul) and the result sliced back.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pick_block(dim: int, target: int) -> int:
+    """Largest MXU-friendly block <= target that divides `dim`, else `dim`.
+
+    Padding in the wrapper guarantees divisibility for any choice; this
+    just avoids gross overpadding for small dims.
+    """
+    if dim <= target:
+        return dim
+    for b in (target, 128, 64, 32, 16, 8):
+        if b <= target and dim % b == 0:
+            return b
+    return min(dim, target)
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 == 0 and p1 == 0:
+        return x
+    return jnp.pad(x, ((0, p0), (0, p1)))
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, n_kblocks: int):
+    """Grid = (M/bm, N/bn, K/bk); accumulate over the K axis in VMEM scratch."""
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(kb == n_kblocks - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul(x: jnp.ndarray, w: jnp.ndarray, *, bm: int = 128, bn: int = 128,
+           bk: int = 128) -> jnp.ndarray:
+    """(M,K) @ (K,N) -> (M,N) via the tiled Pallas kernel, f32 accumulate."""
+    assert x.ndim == 2 and w.ndim == 2 and x.shape[1] == w.shape[0], (
+        f"shape mismatch {x.shape} @ {w.shape}")
+    M, K = x.shape
+    N = w.shape[1]
+    bm = _pick_block(M, bm)
+    bn = _pick_block(N, bn)
+    bk = _pick_block(K, bk)
+    xp = _pad_to(x, bm, bk)
+    wp = _pad_to(w, bk, bn)
+    Mp, Kp = xp.shape
+    Np = wp.shape[1]
+    grid = (Mp // bm, Np // bn, Kp // bk)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_kblocks=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kb: (i, kb)),
+            pl.BlockSpec((bk, bn), lambda i, j, kb: (kb, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kb: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=True,
+    )(xp, wp)
+    return out[:M, :N]
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM residency of one program: x-block + w-block + acc.
+
+    Used by the §Perf roofline estimate in EXPERIMENTS.md (interpret-mode
+    wallclock is not a TPU proxy; footprint/utilization are estimated
+    structurally).
+    """
+    return (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4
+
+
+def mxu_utilization_estimate(m: int, n: int, k: int, bm: int, bn: int, bk: int) -> float:
+    """Fraction of MXU-issued FLOPs that are useful (non-padding)."""
+    import math
+    mp = math.ceil(m / bm) * bm
+    np_ = math.ceil(n / bn) * bn
+    kp = math.ceil(k / bk) * bk
+    return (m * n * k) / float(mp * np_ * kp)

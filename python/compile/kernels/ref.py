@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes/dtypes with hypothesis and asserts the Pallas kernels
+(interpret=True) match these to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain GEMM oracle: (M,K) @ (K,N) -> (M,N), accumulate in f32."""
+    return jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32)).astype(x.dtype)
+
+
+def factorized_matmul_ref(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray) -> jnp.ndarray:
+    """Rank-k factorized linear: (M,m) @ (m,k) @ (k,n)."""
+    return matmul_ref(matmul_ref(x, w1), w2)
+
+
+def dequant_matmul_ref(x: jnp.ndarray, wq: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    """int8 weight, per-output-column absmax scales: y = x @ (wq * scales).
+
+    wq: (K, N) int8, scales: (N,) f32.
+    """
+    w = wq.astype(jnp.float32) * scales[None, :].astype(jnp.float32)
+    return jnp.matmul(x.astype(jnp.float32), w).astype(x.dtype)
+
+
+def smooth_truncate_ref(sigma: jnp.ndarray, k: jnp.ndarray, beta: float) -> jnp.ndarray:
+    """Paper Algo 1: T(sigma_i) = sigma_i * (0.5*tanh(beta*(k-i)) + 0.5).
+
+    Index i is 1-based in the paper; we use i = 1..n so that k == n keeps
+    (almost) everything and k == 0 kills (almost) everything.
+    """
+    n = sigma.shape[-1]
+    i = jnp.arange(1, n + 1, dtype=sigma.dtype)
+    gate = 0.5 * jnp.tanh(beta * (k - i)) + 0.5
+    return sigma * gate

@@ -1,0 +1,49 @@
+"""Pallas RMSNorm — the per-token normalization on the serve path.
+
+Pure VPU kernel: each program normalizes a block of rows held in VMEM.
+Exists so the `kernel="pallas"` forward flavor keeps the whole layer body
+(norm -> GEMMs -> norm -> GEMMs) inside L1 kernels; pinned to the jnp
+reference by tests like every other kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, g_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * g_ref[...]
+
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5,
+            *, block_rows: int = 128) -> jnp.ndarray:
+    """x: (rows, d), g: (d,) -> normalized (rows, d)."""
+    assert x.ndim == 2 and g.shape == (x.shape[1],)
+    rows, d = x.shape
+    br = min(block_rows, rows)
+    pad = (-rows) % br
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    grid = (xp.shape[0] // br,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, x.dtype),
+        interpret=True,
+    )(xp, g)
+    return out[:rows]
+
+
+def rmsnorm_ref(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g

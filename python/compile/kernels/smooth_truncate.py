@@ -1,0 +1,50 @@
+"""Pallas kernel for the paper's smooth truncation gate T(sigma).
+
+T(sigma_i) = sigma_i * (0.5*tanh(beta*(k - i)) + 0.5)        (Algo 1)
+
+This is the training-graph hot spot applied to every activation's singular
+value vector each step.  It is a pure VPU (elementwise) kernel — no MXU —
+so the block layout is a flat 1D tile.  The *differentiable-k trainer*
+uses the jnp reference (pallas_call has no registered VJP); this kernel is
+the inference/export twin and is pinned to the reference by tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _smooth_truncate_kernel(sigma_ref, k_ref, o_ref, *, beta: float, block: int):
+    pid = pl.program_id(0)
+    base = pid * block
+    i = base + jax.lax.iota(jnp.float32, block) + 1.0  # 1-based index
+    gate = 0.5 * jnp.tanh(beta * (k_ref[0] - i)) + 0.5
+    o_ref[...] = sigma_ref[...] * gate
+
+
+def smooth_truncate(sigma: jnp.ndarray, k: jnp.ndarray, beta: float = 10.0,
+                    *, block: int = 128) -> jnp.ndarray:
+    """Apply the tanh truncation gate to a 1-D singular-value vector."""
+    assert sigma.ndim == 1
+    n = sigma.shape[0]
+    block = min(block, n)
+    pad = (-n) % block
+    sp = jnp.pad(sigma, (0, pad))
+    karr = jnp.asarray(k, dtype=jnp.float32).reshape(1)
+    grid = (sp.shape[0] // block,)
+    out = pl.pallas_call(
+        functools.partial(_smooth_truncate_kernel, beta=beta, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct(sp.shape, sigma.dtype),
+        interpret=True,
+    )(sp, karr)
+    return out[:n]

@@ -1,0 +1,357 @@
+"""LLaMA-architecture substrate models (L2), dense and factorized.
+
+Pure-JAX (params are nested dicts of jnp arrays) so the same forward
+lowers to HLO text for the rust runtime.  Architecture mirrors LLaMA:
+RMSNorm, rotary position embeddings, SwiGLU MLP, tied LM head — giving
+each layer the paper's seven compression targets
+(wq wk wv wo / w_gate w_up w_down).
+
+Three forwards:
+* `forward_dense`       — the uncompressed baseline.
+* `forward_factorized`  — every compressed matrix applied as
+                          (x @ W1) @ W2; `kernel="pallas"` routes the
+                          GEMMs through the L1 Pallas kernels so the AOT
+                          HLO genuinely contains the kernel lowering,
+                          `kernel="xla"` uses jnp.dot (the CPU speed lane
+                          — see DESIGN.md §4).
+* `forward_pruned`      — structurally slimmed dense weights (per-layer
+                          head counts / d_ff) for the pruning baselines.
+
+Also: VLM variant (projected feature prefix) and VLA variant (action
+head), both wrapping the same trunk — Tables 11-13.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.factorized_matmul import factorized_matmul
+from .kernels.matmul import matmul as pallas_matmul
+
+# The seven per-layer compression targets, in manifest order.
+LAYER_MATS = ("wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 256
+    d_model: int = 192
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    max_seq: int = 128
+    rope_theta: float = 10000.0
+    # multimodal extensions
+    img_dim: int = 0          # >0 -> VLM/VLA projector input dim
+    n_img_tokens: int = 0     # prefix length after projection
+    action_head: bool = False  # VLA: predict (x,y,z,angle,gripper)
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# The model zoo. Sizes are chosen so the whole evaluation grid builds on
+# one CPU core; shapes keep LLaMA's m:n aspect ratios so the remapping
+# math (max(m,n) vs m+n) exercises the same regimes as 7B.
+CONFIGS: dict[str, ModelConfig] = {
+    "llama-nano": ModelConfig("llama-nano", d_model=192, n_layers=4, n_heads=4, d_ff=512),
+    "llama2-nano": ModelConfig("llama2-nano", d_model=192, n_layers=4, n_heads=6, d_ff=560),
+    "llama3-nano": ModelConfig("llama3-nano", d_model=160, n_layers=5, n_heads=5, d_ff=448),
+    "llama-nano-l": ModelConfig("llama-nano-l", d_model=256, n_layers=6, n_heads=8, d_ff=704),
+    "vlm-nano": ModelConfig("vlm-nano", d_model=192, n_layers=4, n_heads=4, d_ff=512,
+                            img_dim=64, n_img_tokens=8),
+    "vla-nano": ModelConfig("vla-nano", d_model=192, n_layers=4, n_heads=4, d_ff=512,
+                            img_dim=64, n_img_tokens=8, action_head=True),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter init / bookkeeping
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """He-ish init matching small-transformer practice; deterministic."""
+    rng = np.random.default_rng(seed)
+    d, f = cfg.d_model, cfg.d_ff
+
+    def mat(m, n, scale=None):
+        s = scale if scale is not None else 1.0 / np.sqrt(m)
+        return jnp.asarray(rng.standard_normal((m, n)).astype(np.float32) * s)
+
+    params = {
+        "embed": mat(cfg.vocab, d, scale=0.02),
+        "final_norm": jnp.ones((d,), jnp.float32),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "attn_norm": jnp.ones((d,), jnp.float32),
+            "mlp_norm": jnp.ones((d,), jnp.float32),
+            "wq": mat(d, d), "wk": mat(d, d), "wv": mat(d, d),
+            "wo": mat(d, d, scale=1.0 / np.sqrt(d) / np.sqrt(2 * cfg.n_layers)),
+            "w_gate": mat(d, f), "w_up": mat(d, f),
+            "w_down": mat(f, d, scale=1.0 / np.sqrt(f) / np.sqrt(2 * cfg.n_layers)),
+        })
+    if cfg.img_dim:
+        params["img_proj"] = mat(cfg.img_dim, cfg.n_img_tokens * d, scale=0.05)
+    if cfg.action_head:
+        params["act_head"] = mat(d, 5, scale=0.02)  # x,y,z,angle,gripper-logit
+    return params
+
+
+def target_shapes(cfg: ModelConfig) -> list[tuple[str, int, int]]:
+    """(name, m, n) of every compression target, manifest order."""
+    d, f = cfg.d_model, cfg.d_ff
+    dims = {"wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+            "w_gate": (d, f), "w_up": (d, f), "w_down": (f, d)}
+    out = []
+    for li in range(cfg.n_layers):
+        for mn in LAYER_MATS:
+            m, n = dims[mn]
+            out.append((f"layers.{li}.{mn}", m, n))
+    return out
+
+
+def count_params(params) -> int:
+    leaves = jax.tree_util.tree_leaves(params)
+    return int(sum(np.prod(l.shape) for l in leaves))
+
+
+def fixed_param_count(cfg: ModelConfig) -> int:
+    """Parameters never touched by compression (embed, norms, heads)."""
+    total = count_params(init_params(cfg, seed=0))
+    comp = sum(m * n for _, m, n in target_shapes(cfg))
+    return total - comp
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, g: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def _rope_cache(seq: int, d_head: int, theta: float):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)[None, :]
+    ang = pos * inv  # (S, d_head/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, H, S, d_head), LLaMA's interleaved pairing."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c = cos[None, None]
+    s = sin[None, None]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _apply_w(x2d: jnp.ndarray, w, kernel: str) -> jnp.ndarray:
+    """Apply a (possibly factorized) weight to flattened tokens.
+
+    `w` is either a dense (m,n) array or a tuple (W1, W2) of rank-k
+    factors.  kernel="pallas" uses the L1 kernels, "xla" plain dots.
+    """
+    if isinstance(w, tuple):
+        w1, w2 = w
+        if kernel == "pallas":
+            return factorized_matmul(x2d, w1, w2)
+        return jnp.dot(x2d @ w1, w2)
+    if kernel == "pallas":
+        return pallas_matmul(x2d, w)
+    return jnp.dot(x2d, w)
+
+
+def attention(x: jnp.ndarray, layer: dict, cfg: ModelConfig, n_heads: int,
+              cos, sin, kernel: str) -> jnp.ndarray:
+    b, s, d = x.shape
+    d_head = cfg.d_model // cfg.n_heads  # head width fixed; pruning drops heads
+    x2 = x.reshape(b * s, d)
+    q = _apply_w(x2, layer["wq"], kernel).reshape(b, s, n_heads, d_head).transpose(0, 2, 1, 3)
+    k = _apply_w(x2, layer["wk"], kernel).reshape(b, s, n_heads, d_head).transpose(0, 2, 1, 3)
+    v = _apply_w(x2, layer["wv"], kernel).reshape(b, s, n_heads, d_head).transpose(0, 2, 1, 3)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(d_head)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b * s, n_heads * d_head)
+    return _apply_w(o, layer["wo"], kernel).reshape(b, s, d)
+
+
+def mlp(x: jnp.ndarray, layer: dict, kernel: str) -> jnp.ndarray:
+    b, s, d = x.shape
+    x2 = x.reshape(b * s, d)
+    g = _apply_w(x2, layer["w_gate"], kernel)
+    u = _apply_w(x2, layer["w_up"], kernel)
+    h = jax.nn.silu(g) * u
+    return _apply_w(h, layer["w_down"], kernel).reshape(b, s, d)
+
+
+def _norm(h: jnp.ndarray, g: jnp.ndarray, kernel: str) -> jnp.ndarray:
+    """RMSNorm, routed through the L1 Pallas kernel in the pallas flavor."""
+    if kernel == "pallas":
+        from .kernels.rmsnorm import rmsnorm as pallas_rmsnorm
+        b, s, d = h.shape
+        return pallas_rmsnorm(h.reshape(b * s, d), g).reshape(b, s, d)
+    return rmsnorm(h, g)
+
+
+def _trunk(h: jnp.ndarray, params: dict, cfg: ModelConfig, kernel: str,
+           heads_per_layer: list[int] | None = None) -> jnp.ndarray:
+    s = h.shape[1]
+    cos, sin = _rope_cache(s, cfg.d_head, cfg.rope_theta)
+    for li, layer in enumerate(params["layers"]):
+        nh = heads_per_layer[li] if heads_per_layer else cfg.n_heads
+        h = h + attention(_norm(h, layer["attn_norm"], kernel), layer, cfg, nh, cos, sin, kernel)
+        h = h + mlp(_norm(h, layer["mlp_norm"], kernel), layer, kernel)
+    return _norm(h, params["final_norm"], kernel)
+
+
+def _logits(h: jnp.ndarray, params: dict) -> jnp.ndarray:
+    return jnp.dot(h, params["embed"].T)  # tied head (never compressed)
+
+
+# ---------------------------------------------------------------------------
+# Public forwards
+# ---------------------------------------------------------------------------
+
+def forward_dense(params: dict, tokens: jnp.ndarray, cfg: ModelConfig,
+                  kernel: str = "xla") -> jnp.ndarray:
+    """tokens (B,S) int32 -> logits (B,S,V)."""
+    h = params["embed"][tokens]
+    return _logits(_trunk(h, params, cfg, kernel), params)
+
+
+def forward_factorized(params: dict, tokens: jnp.ndarray, cfg: ModelConfig,
+                       kernel: str = "xla") -> jnp.ndarray:
+    """Same as dense; compressed weights in `params` are (W1, W2) tuples."""
+    return forward_dense(params, tokens, cfg, kernel)
+
+
+def forward_pruned(params: dict, tokens: jnp.ndarray, cfg: ModelConfig,
+                   heads_per_layer: list[int]) -> jnp.ndarray:
+    h = params["embed"][tokens]
+    return _logits(_trunk(h, params, cfg, "xla", heads_per_layer), params)
+
+
+def forward_vlm(params: dict, tokens: jnp.ndarray, image: jnp.ndarray,
+                cfg: ModelConfig, kernel: str = "xla") -> jnp.ndarray:
+    """image (B, img_dim) -> n_img_tokens prefix embeddings, then LM."""
+    b = tokens.shape[0]
+    prefix = jnp.dot(image, params["img_proj"]).reshape(b, cfg.n_img_tokens, cfg.d_model)
+    h = jnp.concatenate([prefix, params["embed"][tokens]], axis=1)
+    h = _trunk(h, params, cfg, kernel)
+    return _logits(h[:, cfg.n_img_tokens:], params)
+
+
+def forward_vla(params: dict, tokens: jnp.ndarray, image: jnp.ndarray,
+                cfg: ModelConfig, kernel: str = "xla") -> jnp.ndarray:
+    """-> (B, 5) action: xyz coords, angle, gripper logit."""
+    b = tokens.shape[0]
+    prefix = jnp.dot(image, params["img_proj"]).reshape(b, cfg.n_img_tokens, cfg.d_model)
+    h = jnp.concatenate([prefix, params["embed"][tokens]], axis=1)
+    h = _trunk(h, params, cfg, kernel)
+    last = h[:, -1]
+    out = jnp.dot(last, params["act_head"])
+    coords = jnp.tanh(out[:, :3])
+    angle = jnp.tanh(out[:, 3:4])
+    grip = out[:, 4:5]
+    return jnp.concatenate([coords, angle, grip], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def lm_loss(logits: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """Next-token cross-entropy; logits (B,S,V), tokens (B,S)."""
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(lp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def vla_loss(pred: jnp.ndarray, coords: jnp.ndarray, angle: jnp.ndarray,
+             grip: jnp.ndarray) -> jnp.ndarray:
+    mse = jnp.mean((pred[:, :3] - coords) ** 2) + jnp.mean((pred[:, 3] - angle) ** 2)
+    bce = jnp.mean(jnp.maximum(pred[:, 4], 0) - pred[:, 4] * grip
+                   + jnp.log1p(jnp.exp(-jnp.abs(pred[:, 4]))))
+    return mse + bce
+
+
+# ---------------------------------------------------------------------------
+# Param plumbing shared with the pipeline / AOT
+# ---------------------------------------------------------------------------
+
+def get_target(params: dict, name: str):
+    """name like 'layers.2.w_up' -> array (or factor tuple)."""
+    _, li, mn = name.split(".")
+    return params["layers"][int(li)][mn]
+
+
+def set_target(params: dict, name: str, value) -> dict:
+    """Functional update returning a new params dict."""
+    _, li, mn = name.split(".")
+    li = int(li)
+    layers = list(params["layers"])
+    layers[li] = {**layers[li], mn: value}
+    return {**params, "layers": layers}
+
+
+def flatten_for_export(params: dict) -> tuple[list[str], list[jnp.ndarray]]:
+    """Deterministic (names, arrays) ordering shared with the manifest and
+    the rust loader.  Factor tuples expand to `<name>.w1` / `<name>.w2`."""
+    names, arrays = [], []
+
+    def add(name, v):
+        if isinstance(v, tuple):
+            add(name + ".w1", v[0])
+            add(name + ".w2", v[1])
+        else:
+            names.append(name)
+            arrays.append(jnp.asarray(v))
+
+    add("embed", params["embed"])
+    for li, layer in enumerate(params["layers"]):
+        for key in ("attn_norm", "mlp_norm") + LAYER_MATS:
+            add(f"layers.{li}.{key}", layer[key])
+    add("final_norm", params["final_norm"])
+    if "img_proj" in params:
+        add("img_proj", params["img_proj"])
+    if "act_head" in params:
+        add("act_head", params["act_head"])
+    return names, arrays
+
+
+def unflatten_from_export(cfg: ModelConfig, names: list[str],
+                          arrays: list[jnp.ndarray]) -> dict:
+    """Inverse of flatten_for_export (used by tests and the trainer)."""
+    by = dict(zip(names, arrays))
+    layers = []
+    for li in range(cfg.n_layers):
+        layer = {}
+        for key in ("attn_norm", "mlp_norm") + LAYER_MATS:
+            base = f"layers.{li}.{key}"
+            if base in by:
+                layer[key] = by[base]
+            else:
+                layer[key] = (by[base + ".w1"], by[base + ".w2"])
+        layers.append(layer)
+    params = {"embed": by["embed"], "final_norm": by["final_norm"], "layers": layers}
+    if "img_proj" in by:
+        params["img_proj"] = by["img_proj"]
+    if "act_head" in by:
+        params["act_head"] = by["act_head"]
+    return params

@@ -1,0 +1,173 @@
+"""Build-time pretraining of the substrate LMs (author path, runs once).
+
+Hand-rolled Adam + cosine schedule (optax is not in the image).  The
+pretrained checkpoints are cached under artifacts/cache so `make
+artifacts` is incremental.
+"""
+
+from __future__ import annotations
+
+import functools
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as D
+from . import model as M
+
+
+# ---------------------------------------------------------------------------
+# Minimal Adam on a pytree
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(grads, state, params, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda x: x / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda x: x / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + eps),
+                                 params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total, base, warmup=20):
+    w = jnp.minimum(step / max(warmup, 1), 1.0)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    return base * w * 0.5 * (1 + jnp.cos(np.pi * prog))
+
+
+# ---------------------------------------------------------------------------
+# Batching
+# ---------------------------------------------------------------------------
+
+def sample_batches(tokens: np.ndarray, batch: int, seq: int, n_steps: int,
+                   seed: int = 0):
+    rng = np.random.default_rng(seed)
+    hi = len(tokens) - seq - 1
+    for _ in range(n_steps):
+        idx = rng.integers(0, hi, size=batch)
+        yield np.stack([tokens[i : i + seq] for i in idx]).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Pretraining
+# ---------------------------------------------------------------------------
+
+def pretrain(cfg: M.ModelConfig, tokens: np.ndarray, *, steps: int = 250,
+             batch: int = 8, seq: int = 64, lr: float = 3e-3, seed: int = 0,
+             log_every: int = 50, log=print) -> tuple[dict, list[float]]:
+    params = M.init_params(cfg, seed=seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, lr_now):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.lm_loss(M.forward_dense(p, toks, cfg), toks))(params)
+        params, opt = adam_update(grads, opt, params, lr_now)
+        return params, opt, loss
+
+    losses = []
+    t0 = time.time()
+    for i, toks in enumerate(sample_batches(tokens, batch, seq, steps, seed=seed + 1)):
+        lr_now = cosine_lr(i, steps, lr)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(toks), lr_now)
+        losses.append(float(loss))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            log(f"  [{cfg.name}] step {i:4d}/{steps} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params, losses
+
+
+def finetune_vlm(cfg: M.ModelConfig, params: dict, samples, *, steps: int = 60,
+                 batch: int = 8, seq: int = 48, lr: float = 1e-3, seed: int = 3,
+                 log=print) -> dict:
+    """Teach the projector + trunk to caption images (prefix -> caption)."""
+    rng = np.random.default_rng(seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, imgs, lr_now):
+        def loss_fn(p):
+            logits = M.forward_vlm(p, toks, imgs, cfg)
+            return M.lm_loss(logits, toks)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(grads, opt, params, lr_now)
+        return params, opt, loss
+
+    for i in range(steps):
+        idx = rng.integers(0, len(samples), size=batch)
+        toks = np.zeros((batch, seq), np.int32)
+        imgs = np.zeros((batch, cfg.img_dim), np.float32)
+        for bi, j in enumerate(idx):
+            s = samples[j]
+            t = D.encode(s.question + s.caption)[:seq]
+            toks[bi, : len(t)] = t
+            imgs[bi] = s.image
+        params, opt, loss = step_fn(params, opt, jnp.asarray(toks), jnp.asarray(imgs),
+                                    cosine_lr(i, steps, lr))
+        if i % 20 == 0:
+            log(f"  [vlm] step {i} loss {float(loss):.4f}")
+    return params
+
+
+def finetune_vla(cfg: M.ModelConfig, params: dict, samples, *, steps: int = 80,
+                 batch: int = 8, seq: int = 24, lr: float = 1e-3, seed: int = 4,
+                 log=print) -> dict:
+    rng = np.random.default_rng(seed)
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, toks, imgs, coords, angle, grip, lr_now):
+        def loss_fn(p):
+            pred = M.forward_vla(p, toks, imgs, cfg)
+            return M.vla_loss(pred, coords, angle, grip)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(grads, opt, params, lr_now)
+        return params, opt, loss
+
+    for i in range(steps):
+        idx = rng.integers(0, len(samples), size=batch)
+        toks = np.zeros((batch, seq), np.int32)
+        imgs = np.zeros((batch, cfg.img_dim), np.float32)
+        coords = np.zeros((batch, 3), np.float32)
+        angle = np.zeros((batch,), np.float32)
+        grip = np.zeros((batch,), np.float32)
+        for bi, j in enumerate(idx):
+            s = samples[j]
+            t = D.encode(s.instruction)[:seq]
+            toks[bi, : len(t)] = t
+            imgs[bi] = s.image
+            coords[bi] = s.coords
+            angle[bi] = s.angle
+            grip[bi] = s.gripper
+        params, opt, loss = step_fn(params, opt, jnp.asarray(toks), jnp.asarray(imgs),
+                                    jnp.asarray(coords), jnp.asarray(angle),
+                                    jnp.asarray(grip), cosine_lr(i, steps, lr))
+        if i % 20 == 0:
+            log(f"  [vla] step {i} loss {float(loss):.4f}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def save_params(path: str, params: dict) -> None:
+    np_params = jax.tree_util.tree_map(lambda x: np.asarray(x), params)
+    with open(path, "wb") as f:
+        pickle.dump(np_params, f)
+
+
+def load_params(path: str) -> dict:
+    with open(path, "rb") as f:
+        np_params = pickle.load(f)
+    return jax.tree_util.tree_map(jnp.asarray, np_params)

@@ -1,0 +1,80 @@
+"""AOT export plumbing: HLO text hygiene, weight-store round trips, and
+the store -> params reassembly the rust loader mirrors."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import dobiw as IO
+from compile import model as M
+from compile.aot import _arrays_from_store, export_weights, spec_like, to_hlo_text
+from compile.dobi import pipeline as P
+from compile.dobi import trainer as T
+
+
+@pytest.fixture(scope="module")
+def nano():
+    cfg = M.CONFIGS["llama-nano"]
+    return cfg, M.init_params(cfg, seed=3)
+
+
+def test_hlo_text_has_no_elided_constants(nano):
+    """The xla_extension-0.5.1 text parser zero-fills `constant({...})`;
+    the exporter must never emit it (this was a real silent-corruption
+    bug — see EXPERIMENTS.md)."""
+    cfg, params = nano
+    names, arrays = M.flatten_for_export(params)
+
+    def fn(tokens, *arrs):
+        p = M.unflatten_from_export(cfg, names, list(arrs))
+        return (M.forward_dense(p, tokens, cfg),)
+
+    text = to_hlo_text(fn, jax.ShapeDtypeStruct((1, 16), np.int32),
+                       *[spec_like(a) for a in arrays])
+    assert "constant({...}" not in text
+    assert text.startswith("HloModule")
+    # tokens + every weight must surface as parameters
+    assert text.count("parameter(") >= len(arrays) + 1
+
+
+def test_export_weights_roundtrip_dense(nano, tmp_path):
+    cfg, params = nano
+    path = str(tmp_path / "w.dobiw")
+    names, nbytes = export_weights(path, params, None)
+    assert nbytes == os.path.getsize(path)
+    store = IO.read_dobiw(path)
+    arrays = _arrays_from_store(store, names)
+    p2 = M.unflatten_from_export(cfg, names, [jnp.asarray(a) for a in arrays])
+    toks = jnp.arange(16, dtype=jnp.int32).reshape(1, 16)
+    np.testing.assert_allclose(
+        np.asarray(M.forward_dense(params, toks, cfg)),
+        np.asarray(M.forward_dense(p2, toks, cfg)), atol=1e-6)
+
+
+def test_export_weights_quantized_roundtrip(nano, tmp_path):
+    """Remapped variants ship int8 codes; reassembly must match the
+    dequantized factors the pipeline produced (rust mirrors this)."""
+    cfg, params = nano
+    toks = (np.arange(40_000) % 250).astype(np.int32)
+    calib = P.collect_calibration(params, cfg, toks, n_batches=2)
+    ks = T.uniform_ks(cfg, 0.6)
+    cm = P.dobi_compress(params, cfg, ks, calib, ratio=0.6, precision="8+16")
+    path = str(tmp_path / "q.dobiw")
+    names, _ = export_weights(path, cm.params, cm)
+    store = IO.read_dobiw(path)
+    # every factor went out as q8 + scales, not f32
+    q8 = [k for k in store if k.endswith(".q8")]
+    assert len(q8) == 2 * 7 * cfg.n_layers
+    arrays = _arrays_from_store(store, names)
+    for name, arr in zip(names, arrays):
+        if name.endswith(".w1"):
+            want = np.asarray(M.get_target(cm.params, name.rsplit(".", 1)[0])[0])
+            np.testing.assert_allclose(arr, want, atol=1e-6)
+
+
+def test_spec_like():
+    s = spec_like(np.zeros((3, 4), np.float32))
+    assert s.shape == (3, 4) and s.dtype == np.float32

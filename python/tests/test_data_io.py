@@ -1,0 +1,152 @@
+"""Corpora determinism, task-suite sanity, and binary interchange formats."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import dobiw as IO
+
+
+def test_corpora_deterministic():
+    a = D.gen_wiki_syn(seed=0, n_chars=20_000).text
+    b = D.gen_wiki_syn(seed=0, n_chars=20_000).text
+    assert a == b
+    c = D.gen_wiki_syn(seed=1, n_chars=20_000).text
+    assert a != c
+
+
+def test_corpora_distinct_statistics():
+    """The three corpora must be statistically distinguishable (that is
+    their whole job: in-domain vs out-of-domain PPL structure)."""
+    def unigram(text):
+        h = np.zeros(256)
+        for b in text.encode()[:20000]:
+            h[b] += 1
+        return h / h.sum()
+    w = unigram(D.gen_wiki_syn(n_chars=30_000).text)
+    p = unigram(D.gen_ptb_syn(n_chars=30_000).text)
+    c = unigram(D.gen_c4_syn(n_chars=30_000).text)
+    def tv(a, b):
+        return 0.5 * np.abs(a - b).sum()
+    assert tv(w, p) > 0.05
+    assert tv(w, c) > 0.01
+    assert tv(p, c) > 0.05
+
+
+def test_ptb_lower_entropy_than_c4():
+    def ent(text):
+        h = np.zeros(256)
+        for b in text.encode()[:30000]:
+            h[b] += 1
+        p = h[h > 0] / h.sum()
+        return -(p * np.log(p)).sum()
+    assert ent(D.gen_ptb_syn(n_chars=40_000).text) < ent(D.gen_c4_syn(n_chars=40_000).text)
+
+
+def test_tokbin_roundtrip(tmp_path):
+    toks = np.random.default_rng(0).integers(0, 256, 1000).astype(np.int32)
+    p = str(tmp_path / "t.tokbin")
+    D.write_tokbin(p, toks)
+    back = D.read_tokbin(p)
+    np.testing.assert_array_equal(toks, back)
+
+
+def test_tokbin_crc_detects_corruption(tmp_path):
+    toks = np.arange(100, dtype=np.int32) % 256
+    p = str(tmp_path / "t.tokbin")
+    D.write_tokbin(p, toks)
+    raw = bytearray(open(p, "rb").read())
+    raw[20] ^= 0xFF
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(AssertionError):
+        D.read_tokbin(p)
+
+
+def test_task_suites_valid():
+    wiki = D.gen_wiki_syn(n_chars=40_000)
+    ptb = D.gen_ptb_syn(n_chars=20_000)
+    c4 = D.gen_c4_syn(n_chars=20_000)
+    suites = D.build_task_suites(wiki, ptb, c4, n_per=10)
+    assert len(suites) == 7
+    for s in suites:
+        assert len(s.tasks) == 10
+        for t in s.tasks:
+            assert 0 <= t.answer < len(t.options)
+            assert len(set(t.options)) == len(t.options)
+            assert t.options[t.answer] is not None
+
+
+def test_copy_suite_answer_is_continuation():
+    suite = D._copy_tasks(seed=1, n=20)
+    for t in suite.tasks:
+        words = t.prompt.strip().split(" ")
+        key = words[-1]
+        first = words.index(key)
+        assert t.options[t.answer] == words[first + 1]
+
+
+def test_digit_suite_progression():
+    suite = D._digit_tasks(seed=2, n=20)
+    for t in suite.tasks:
+        seq = [int(x) for x in t.prompt.strip().split(" ")]
+        d = (seq[1] - seq[0]) % 10
+        want = (seq[3] + d) % 10
+        assert int(t.options[t.answer]) == want
+
+
+def test_vqa_answer_recoverable():
+    samples = D.build_vqa(seed=3, n=10, img_dim=32)
+    for s in samples:
+        assert s.options[s.answer] == s.caption
+        assert s.image.shape == (32,)
+
+
+def test_vla_actions_bounded():
+    samples = D.build_vla(seed=4, n=20, img_dim=32)
+    for s in samples:
+        assert np.all(np.abs(s.coords) <= 1.0)
+        assert abs(s.angle) <= 1.0
+        assert s.gripper in (0, 1)
+
+
+def test_dobiw_roundtrip(tmp_path):
+    rng = np.random.default_rng(5)
+    tensors = [
+        ("a", rng.standard_normal((4, 6)).astype(np.float32)),
+        ("b.q8", rng.integers(-127, 128, (8, 3)).astype(np.int8)),
+        ("b.scales", rng.random((1, 3)).astype(np.float32)),
+        ("c", rng.standard_normal((5,)).astype(np.float16)),
+        ("d", np.arange(12, dtype=np.int32).reshape(3, 4)),
+    ]
+    p = str(tmp_path / "w.dobiw")
+    n = IO.write_dobiw(p, tensors)
+    assert n == os.path.getsize(p)
+    back = IO.read_dobiw(p)
+    assert set(back) == {t[0] for t in tensors}
+    for name, arr in tensors:
+        np.testing.assert_array_equal(back[name], arr)
+        assert back[name].dtype == arr.dtype
+
+
+def test_dobiw_crc_detects_corruption(tmp_path):
+    p = str(tmp_path / "w.dobiw")
+    IO.write_dobiw(p, [("x", np.ones((64,), np.float32))])
+    raw = bytearray(open(p, "rb").read())
+    raw[-10] ^= 0x01
+    open(p, "wb").write(bytes(raw))
+    with pytest.raises(AssertionError):
+        IO.read_dobiw(p)
+
+
+def test_suites_json_schema(tmp_path):
+    wiki = D.gen_wiki_syn(n_chars=20_000)
+    suites = [D._copy_tasks(seed=0, n=5)]
+    p = str(tmp_path / "tasks.json")
+    D.write_suites(p, suites)
+    with open(p) as f:
+        doc = json.load(f)
+    assert doc["suites"][0]["name"] == "copy-syn"
+    assert len(doc["suites"][0]["tasks"]) == 5

@@ -1,0 +1,232 @@
+"""IPCA weight update (Algo 2) and remapped storage (Algo 3) invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.dobi.ipca import (IncrementalPCA, batch_right_basis,
+                               full_pca_components, ipca_memory_bytes,
+                               ipca_weight_update, pca_memory_bytes,
+                               subspace_distance, update_weight)
+from compile.dobi.remap import (RemappedFactors, dequantize_absmax, factorize,
+                                ptq_bytes, quant_error, quantize_absmax,
+                                reconstruct, remap_store)
+from compile.dobi.truncation import (classic_k_for_ratio, classic_ratio,
+                                     remap_k_for_ratio, remap_ratio,
+                                     round_ranks)
+
+
+# ---------------------------------------------------------------------------
+# IPCA
+# ---------------------------------------------------------------------------
+
+def _batches(rng, n_batches, rows, n, rank):
+    """Activation batches sharing a common low-dim right subspace + noise."""
+    basis = np.linalg.qr(rng.standard_normal((n, rank)))[0]
+    out = []
+    for _ in range(n_batches):
+        coef = rng.standard_normal((rows, rank))
+        out.append(coef @ basis.T + 0.01 * rng.standard_normal((rows, n)))
+    return out
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(12, 64), k=st.integers(2, 8))
+def test_ipca_agrees_with_full_pca(seed, n, k):
+    rng = np.random.default_rng(seed)
+    batches = _batches(rng, 6, 40, n, k)
+    bases, weights = [], []
+    tr = IncrementalPCA(n, k)
+    for a in batches:
+        v, s = batch_right_basis(a, k)
+        bases.append(v)
+        weights.append(s)
+        tr.partial_fit(v, s)
+    v_full = full_pca_components(bases, weights, k)
+    assert subspace_distance(tr.components(), v_full) < 0.15
+
+
+def test_ipca_recovers_planted_subspace():
+    rng = np.random.default_rng(0)
+    n, k = 32, 4
+    basis = np.linalg.qr(rng.standard_normal((n, k)))[0]
+    batches = []
+    for _ in range(8):
+        coef = rng.standard_normal((50, k))
+        batches.append(coef @ basis.T + 1e-4 * rng.standard_normal((50, n)))
+    tr = IncrementalPCA(n, k)
+    for a in batches:
+        v, s = batch_right_basis(a, k)
+        tr.partial_fit(v, s)
+    assert subspace_distance(tr.components(), basis) < 0.05
+
+
+def test_ipca_components_orthonormal():
+    rng = np.random.default_rng(1)
+    tr = IncrementalPCA(24, 6)
+    for a in _batches(rng, 5, 30, 24, 6):
+        v, s = batch_right_basis(a, 6)
+        tr.partial_fit(v, s)
+    v = tr.components()
+    np.testing.assert_allclose(v.T @ v, np.eye(6), atol=1e-8)
+
+
+def test_update_weight_rank_and_optimality():
+    """W~ = W V V^T has rank <= k and is the projection minimizing
+    ||W P_i - W~|| over the common subspace (EYM argument of A.4.1)."""
+    rng = np.random.default_rng(2)
+    w = rng.standard_normal((16, 24))
+    v = np.linalg.qr(rng.standard_normal((24, 5)))[0]
+    w_new = update_weight(w, v)
+    assert np.linalg.matrix_rank(w_new) <= 5
+    # projecting twice changes nothing (idempotence of the update)
+    np.testing.assert_allclose(update_weight(w_new, v), w_new, atol=1e-10)
+
+
+def test_ipca_weight_update_end_to_end():
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((20, 28)).astype(np.float32)
+    acts = [rng.standard_normal((40, 20)) @ w for _ in range(4)]
+    w_new = ipca_weight_update(w, acts, k=6)
+    assert w_new.shape == w.shape
+    assert np.linalg.matrix_rank(w_new.astype(np.float64), tol=1e-5) <= 6
+
+
+def test_memory_model_shapes():
+    """IPCA memory flat in batch count; PCA linear (Fig 3c)."""
+    assert pca_memory_bytes(1024, 256, 32) >= 16 * pca_memory_bytes(1024, 256, 2)
+    assert ipca_memory_bytes(1024, 256) == ipca_memory_bytes(1024, 256)
+    assert ipca_memory_bytes(4096, 1024) < pca_memory_bytes(4096, 1024, 8)
+
+
+def test_ipca_measured_peak_constant_in_batches():
+    rng = np.random.default_rng(4)
+    peaks = []
+    for nb in (3, 9):
+        tr = IncrementalPCA(48, 8)
+        for a in _batches(rng, nb, 30, 48, 8):
+            v, s = batch_right_basis(a, 8)
+            tr.partial_fit(v, s)
+        peaks.append(tr.peak_bytes)
+    assert peaks[0] == peaks[1]
+
+
+# ---------------------------------------------------------------------------
+# quantizer
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=st.integers(2, 60), n=st.integers(2, 60), bits=st.sampled_from([4, 8]),
+       seed=st.integers(0, 2**16))
+def test_quant_roundtrip_error_bounded(m, n, bits, seed):
+    rng = np.random.default_rng(seed)
+    w = rng.standard_normal((m, n)).astype(np.float32)
+    q, s = quantize_absmax(w, bits=bits)
+    wd = dequantize_absmax(q, s)
+    qmax = (1 << (bits - 1)) - 1
+    # absmax quantization error is at most scale/2 per element
+    bound = np.max(np.abs(w), axis=0) / qmax / 2 + 1e-7
+    assert np.all(np.abs(w - wd) <= bound[None, :] + 1e-6)
+
+
+def test_quant_preserves_zero_and_extremes():
+    w = np.array([[0.0, 1.0], [-1.0, 0.5]], np.float32)
+    q, s = quantize_absmax(w)
+    wd = dequantize_absmax(q, s)
+    assert wd[0, 0] == 0.0
+    np.testing.assert_allclose(wd[1, 0], -1.0, rtol=1e-2)
+
+
+def test_quant_error_decreases_with_bits():
+    rng = np.random.default_rng(5)
+    w = rng.standard_normal((64, 64)).astype(np.float32)
+    mse4, _ = quant_error(w, bits=4)
+    mse8, _ = quant_error(w, bits=8)
+    assert mse8 < mse4 / 10
+
+
+# ---------------------------------------------------------------------------
+# remapping (Algo 3)
+# ---------------------------------------------------------------------------
+
+def test_factorize_exact_at_full_rank():
+    rng = np.random.default_rng(6)
+    w = rng.standard_normal((24, 16)).astype(np.float32)
+    a, b = factorize(w, 16)
+    np.testing.assert_allclose(a @ b, w, rtol=1e-4, atol=1e-4)
+
+
+def test_remap_reconstruction_close():
+    rng = np.random.default_rng(7)
+    w = rng.standard_normal((40, 24)).astype(np.float32)
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    s[10:] = 0
+    w_low = (u * s) @ vt  # genuine rank-10 matrix
+    rf = remap_store(w_low, 10, precision="8+16")
+    rec = reconstruct(rf)
+    rel = np.linalg.norm(rec - w_low) / np.linalg.norm(w_low)
+    assert rel < 0.02  # int8 on near-Gaussian factors is tiny (Table 15)
+
+
+def test_remap_precision16_is_exactish():
+    rng = np.random.default_rng(8)
+    w = rng.standard_normal((30, 20)).astype(np.float32)
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    s[6:] = 0
+    w_low = (u * s) @ vt
+    rf = remap_store(w_low, 6, precision="16")
+    rel = np.linalg.norm(reconstruct(rf) - w_low) / np.linalg.norm(w_low)
+    assert rel < 2e-3
+
+
+def test_remap_storage_bijection():
+    """Remapped bytes = k*max(m,n) fp16-equivalents — classic is k(m+n)."""
+    m, n, k = 512, 128, 100
+    rf = remap_store(np.random.default_rng(9).standard_normal((m, n)).astype(np.float32), k)
+    assert rf.storage_bytes() < 2 * k * (m + n)          # beats classic fp16
+    assert rf.storage_bytes() >= 2 * k * max(m, n)       # >= the bijection bound
+    rf16 = remap_store(np.zeros((m, n), np.float32), k, precision="16")
+    assert rf16.storage_bytes() == 2 * k * (m + n)
+
+
+# ---------------------------------------------------------------------------
+# ratio bijection
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(8, 512), n=st.integers(8, 512),
+       r=st.floats(0.05, 0.99))
+def test_remap_ratio_bijection(m, n, r):
+    k = remap_k_for_ratio(m, n, r)
+    assert 1 <= k <= min(m, n)
+    # round-trip within quantization of k
+    assert abs(remap_ratio(m, n, k) - r) <= max(m, n) / (m * n) + 1e-9
+
+
+def test_classic_k_loses_half_spectrum_square():
+    """The long-overlooked limitation: r=1.0 classic keeps only rank/2."""
+    k = classic_k_for_ratio(256, 256, 1.0)
+    assert k == 128
+    # remapping keeps the whole spectrum at r = 1.0
+    assert remap_k_for_ratio(256, 256, 1.0) == 256
+
+
+def test_remap_reaches_ranks_classic_cannot():
+    m = n = 128
+    k_classic_max = classic_k_for_ratio(m, n, 0.999)
+    assert remap_k_for_ratio(m, n, 0.8) > k_classic_max * 0.8 / 0.5 - 2
+
+
+def test_round_ranks_clamps_and_multiples():
+    ks = np.array([3.0, 190.0, 500.0])
+    shapes = [(192, 192), (192, 192), (192, 512)]
+    out = round_ranks(ks, shapes)
+    assert out[0] == 8            # k_min
+    assert out[1] == 192          # clamp to min(m,n)
+    assert out[2] == 192
+    assert all(k % 8 == 0 for k in out)
+
+
+def test_ptq_bytes():
+    assert ptq_bytes((128, 64), 4) < ptq_bytes((128, 64), 8)
+    assert ptq_bytes((10, 10), 8) == 100 + 40

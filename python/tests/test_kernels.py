@@ -1,0 +1,216 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes and dtypes — this is the CORE kernel signal.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dequant_matmul import dequant_matmul
+from compile.kernels.factorized_matmul import dense_flops, factorized_matmul, flops
+from compile.kernels.matmul import matmul, mxu_utilization_estimate, vmem_bytes
+from compile.kernels.smooth_truncate import smooth_truncate
+
+DIMS = st.integers(min_value=1, max_value=200)
+SMALL = st.integers(min_value=1, max_value=48)
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**16))
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    got = matmul(x, w)
+    want = ref.matmul_ref(x, w)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_blocks():
+    rng = np.random.default_rng(0)
+    x, w = rand(rng, 256, 128), rand(rng, 128, 256)
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_single_element():
+    x = jnp.ones((1, 1))
+    w = jnp.full((1, 1), 3.0)
+    assert float(matmul(x, w)[0, 0]) == 3.0
+
+
+def test_matmul_zero_input():
+    x = jnp.zeros((7, 13))
+    w = jnp.ones((13, 5))
+    assert float(jnp.abs(matmul(x, w)).max()) == 0.0
+
+
+def test_matmul_rejects_mismatch():
+    with pytest.raises(AssertionError):
+        matmul(jnp.ones((2, 3)), jnp.ones((4, 5)))
+
+
+def test_matmul_bf16():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((32, 64)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((64, 32)), jnp.bfloat16)
+    got = matmul(x, w).astype(jnp.float32)
+    want = ref.matmul_ref(x, w).astype(jnp.float32)
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-1)
+
+
+def test_matmul_custom_blocks():
+    rng = np.random.default_rng(2)
+    x, w = rand(rng, 100, 70), rand(rng, 70, 90)
+    got = matmul(x, w, bm=32, bn=32, bk=32)
+    np.testing.assert_allclose(got, ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# factorized matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=DIMS, mm=DIMS, k=SMALL, n=DIMS, seed=st.integers(0, 2**16))
+def test_factorized_matches_ref(m, mm, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w1, w2 = rand(rng, m, mm), rand(rng, mm, k), rand(rng, k, n)
+    got = factorized_matmul(x, w1, w2)
+    want = ref.factorized_matmul_ref(x, w1, w2)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-3)
+
+
+def test_factorized_equals_dense_at_full_rank():
+    """W = W1 @ W2 exactly when k = min(m,n): factorized == dense path."""
+    rng = np.random.default_rng(3)
+    w = rng.standard_normal((48, 32)).astype(np.float32)
+    u, s, vt = np.linalg.svd(w, full_matrices=False)
+    w1 = jnp.asarray(u * np.sqrt(s))
+    w2 = jnp.asarray(np.sqrt(s)[:, None] * vt)
+    x = rand(rng, 20, 48)
+    got = factorized_matmul(x, w1, w2)
+    want = ref.matmul_ref(x, jnp.asarray(w))
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_factorized_rank_mismatch_rejected():
+    with pytest.raises(AssertionError):
+        factorized_matmul(jnp.ones((4, 8)), jnp.ones((8, 3)), jnp.ones((4, 8)))
+
+
+def test_flops_accounting():
+    assert flops(10, 100, 100, 10) < dense_flops(10, 100, 100)
+    assert flops(1, 4, 4, 4) == 2 * 1 * 4 * 8
+
+
+# ---------------------------------------------------------------------------
+# dequant matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(m=SMALL, k=DIMS, n=DIMS, seed=st.integers(0, 2**16))
+def test_dequant_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k)
+    wq = jnp.asarray(rng.integers(-127, 128, (k, n)).astype(np.int8))
+    s = jnp.asarray((rng.random(n) * 0.02 + 1e-4).astype(np.float32))
+    got = dequant_matmul(x, wq, s)
+    want = ref.dequant_matmul_ref(x, wq, s)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dequant_matmul_zero_scales():
+    x = jnp.ones((4, 8))
+    wq = jnp.ones((8, 6), jnp.int8)
+    s = jnp.zeros((6,))
+    assert float(jnp.abs(dequant_matmul(x, wq, s)).max()) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# smooth truncate
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 300), kf=st.floats(0.0, 1.0), seed=st.integers(0, 2**16))
+def test_smooth_truncate_matches_ref(n, kf, seed):
+    rng = np.random.default_rng(seed)
+    sig = jnp.asarray(np.sort(rng.random(n))[::-1].copy().astype(np.float32))
+    k = jnp.float32(kf * n)
+    got = smooth_truncate(sig, k)
+    want = ref.smooth_truncate_ref(sig, k, 10.0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_smooth_truncate_limits():
+    sig = jnp.ones((64,))
+    hi = smooth_truncate(sig, jnp.float32(200.0))   # k >> n keeps all
+    lo = smooth_truncate(sig, jnp.float32(-100.0))  # k << 0 kills all
+    np.testing.assert_allclose(hi, sig, atol=1e-5)
+    np.testing.assert_allclose(lo, jnp.zeros_like(sig), atol=1e-5)
+
+
+def test_smooth_truncate_is_monotone_gate():
+    """Gate must be non-increasing in i: earlier sigmas are kept more."""
+    sig = jnp.ones((128,))
+    g = np.asarray(smooth_truncate(sig, jnp.float32(64.0)))
+    assert np.all(np.diff(g) <= 1e-6)
+    assert g[0] > 0.99 and g[-1] < 0.01
+
+
+# ---------------------------------------------------------------------------
+# structural perf estimates (used by EXPERIMENTS.md §Perf)
+# ---------------------------------------------------------------------------
+
+def test_vmem_fits_16mb_for_default_blocks():
+    assert vmem_bytes(128, 128, 128) < 16 * 1024 * 1024
+
+
+def test_mxu_utilization_bounds():
+    u = mxu_utilization_estimate(192, 192, 24, 128, 128, 128)
+    assert 0.0 < u <= 1.0
+    assert mxu_utilization_estimate(256, 256, 128, 128, 128, 128) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+from compile.kernels.rmsnorm import rmsnorm, rmsnorm_ref
+
+
+@settings(max_examples=10, deadline=None)
+@given(rows=st.integers(1, 300), d=st.integers(2, 256), seed=st.integers(0, 2**16))
+def test_rmsnorm_matches_ref(rows, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, rows, d)
+    g = rand(rng, d).reshape(d)
+    got = rmsnorm(x, g)
+    want = rmsnorm_ref(x, g)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_rmsnorm_unit_gain_rows():
+    """Constant gain 1: every output row has RMS ~ 1."""
+    rng = np.random.default_rng(0)
+    x = rand(rng, 16, 64) * 5.0
+    out = np.asarray(rmsnorm(x, jnp.ones((64,))))
+    rms = np.sqrt((out ** 2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+
+def test_rmsnorm_scale_invariance():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 8, 32)
+    g = jnp.ones((32,))
+    a = np.asarray(rmsnorm(x, g))
+    b = np.asarray(rmsnorm(x * 1000.0, g))
+    np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-4)

@@ -1,0 +1,171 @@
+"""L2 model: shapes, invariances, export plumbing, losses."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def nano():
+    cfg = M.CONFIGS["llama-nano"]
+    return cfg, M.init_params(cfg, seed=0)
+
+
+def test_forward_shapes(nano):
+    cfg, params = nano
+    toks = jnp.zeros((2, 16), jnp.int32)
+    logits = M.forward_dense(params, toks, cfg)
+    assert logits.shape == (2, 16, cfg.vocab)
+
+
+def test_forward_deterministic(nano):
+    cfg, params = nano
+    toks = jnp.arange(32, dtype=jnp.int32).reshape(2, 16) % cfg.vocab
+    a = M.forward_dense(params, toks, cfg)
+    b = M.forward_dense(params, toks, cfg)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_causality(nano):
+    """Changing a future token must not change past logits."""
+    cfg, params = nano
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, cfg.vocab, (1, 20)).astype(np.int32)
+    t2 = t1.copy()
+    t2[0, 15] = (t2[0, 15] + 7) % cfg.vocab
+    l1 = np.asarray(M.forward_dense(params, jnp.asarray(t1), cfg))
+    l2 = np.asarray(M.forward_dense(params, jnp.asarray(t2), cfg))
+    np.testing.assert_allclose(l1[0, :15], l2[0, :15], atol=1e-4)
+    assert np.abs(l1[0, 15:] - l2[0, 15:]).max() > 1e-6
+
+
+def test_factorized_full_rank_equals_dense(nano):
+    cfg, params = nano
+    p2 = params
+    for name, m, n in M.target_shapes(cfg):
+        w = np.asarray(M.get_target(params, name))
+        u, s, vt = np.linalg.svd(w, full_matrices=False)
+        w1 = jnp.asarray((u * np.sqrt(s)).astype(np.float32))
+        w2 = jnp.asarray((np.sqrt(s)[:, None] * vt).astype(np.float32))
+        p2 = M.set_target(p2, name, (w1, w2))
+    toks = jnp.arange(24, dtype=jnp.int32).reshape(1, 24) % cfg.vocab
+    ld = np.asarray(M.forward_dense(params, toks, cfg))
+    lf = np.asarray(M.forward_factorized(p2, toks, cfg))
+    np.testing.assert_allclose(ld, lf, rtol=1e-2, atol=5e-3)
+
+
+def test_pruned_forward_shapes():
+    cfg = M.CONFIGS["llama-nano"]
+    params = M.init_params(cfg, seed=1)
+    # slim layer 0 to 2 heads and 128 ff channels
+    d_head = cfg.d_head
+    cols = np.arange(2 * d_head)
+    for mn in ("wq", "wk", "wv"):
+        params = M.set_target(params, f"layers.0.{mn}",
+                              jnp.asarray(np.asarray(M.get_target(params, f"layers.0.{mn}"))[:, cols]))
+    params = M.set_target(params, "layers.0.wo",
+                          jnp.asarray(np.asarray(M.get_target(params, "layers.0.wo"))[cols, :]))
+    keep_f = np.arange(128)
+    for mn in ("w_gate", "w_up"):
+        params = M.set_target(params, f"layers.0.{mn}",
+                              jnp.asarray(np.asarray(M.get_target(params, f"layers.0.{mn}"))[:, keep_f]))
+    params = M.set_target(params, "layers.0.w_down",
+                          jnp.asarray(np.asarray(M.get_target(params, "layers.0.w_down"))[keep_f, :]))
+    toks = jnp.zeros((2, 8), jnp.int32)
+    logits = M.forward_pruned(params, toks, cfg, [2, cfg.n_heads, cfg.n_heads, cfg.n_heads])
+    assert logits.shape == (2, 8, cfg.vocab)
+
+
+def test_vlm_forward_shapes():
+    cfg = M.CONFIGS["vlm-nano"]
+    params = M.init_params(cfg, seed=2)
+    toks = jnp.zeros((3, 12), jnp.int32)
+    img = jnp.ones((3, cfg.img_dim))
+    logits = M.forward_vlm(params, toks, img, cfg)
+    assert logits.shape == (3, 12, cfg.vocab)
+
+
+def test_vlm_prefix_influences_logits():
+    cfg = M.CONFIGS["vlm-nano"]
+    params = M.init_params(cfg, seed=3)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    l1 = M.forward_vlm(params, toks, jnp.zeros((1, cfg.img_dim)), cfg)
+    l2 = M.forward_vlm(params, toks, jnp.ones((1, cfg.img_dim)), cfg)
+    assert float(jnp.abs(l1 - l2).max()) > 1e-4
+
+
+def test_vla_forward_ranges():
+    cfg = M.CONFIGS["vla-nano"]
+    params = M.init_params(cfg, seed=4)
+    toks = jnp.zeros((2, 8), jnp.int32)
+    img = jnp.ones((2, cfg.img_dim))
+    act = np.asarray(M.forward_vla(params, toks, img, cfg))
+    assert act.shape == (2, 5)
+    assert np.all(np.abs(act[:, :4]) <= 1.0)  # tanh-bounded coords+angle
+
+
+def test_lm_loss_uniform_is_log_vocab(nano):
+    cfg, _ = nano
+    logits = jnp.zeros((2, 10, cfg.vocab))
+    toks = jnp.zeros((2, 10), jnp.int32)
+    loss = float(M.lm_loss(logits, toks))
+    np.testing.assert_allclose(loss, np.log(cfg.vocab), rtol=1e-5)
+
+
+def test_target_shapes_count(nano):
+    cfg, _ = nano
+    ts = M.target_shapes(cfg)
+    assert len(ts) == 7 * cfg.n_layers
+    names = [t[0] for t in ts]
+    assert len(set(names)) == len(names)
+
+
+def test_get_set_target_roundtrip(nano):
+    cfg, params = nano
+    w = M.get_target(params, "layers.1.w_up")
+    p2 = M.set_target(params, "layers.1.w_up", w * 2)
+    assert float(jnp.abs(M.get_target(p2, "layers.1.w_up") - 2 * w).max()) == 0.0
+    # original untouched (functional update)
+    assert float(jnp.abs(M.get_target(params, "layers.1.w_up") - w).max()) == 0.0
+
+
+def test_flatten_unflatten_roundtrip(nano):
+    cfg, params = nano
+    names, arrays = M.flatten_for_export(params)
+    assert len(names) == len(arrays)
+    p2 = M.unflatten_from_export(cfg, names, arrays)
+    toks = jnp.zeros((1, 8), jnp.int32)
+    np.testing.assert_allclose(np.asarray(M.forward_dense(params, toks, cfg)),
+                               np.asarray(M.forward_dense(p2, toks, cfg)), atol=1e-6)
+
+
+def test_flatten_expands_factors(nano):
+    cfg, params = nano
+    p2 = M.set_target(params, "layers.0.wq",
+                      (jnp.ones((cfg.d_model, 8)), jnp.ones((8, cfg.d_model))))
+    names, _ = M.flatten_for_export(p2)
+    assert "layers.0.wq.w1" in names and "layers.0.wq.w2" in names
+    assert "layers.0.wq" not in names
+
+
+def test_fixed_param_count(nano):
+    cfg, params = nano
+    fixed = M.fixed_param_count(cfg)
+    total = M.count_params(params)
+    comp = sum(m * n for _, m, n in M.target_shapes(cfg))
+    assert fixed == total - comp
+    assert fixed > 0
+
+
+def test_tokenizer_roundtrip():
+    s = "Hello, Dobi-SVD! 123"
+    assert D.decode(D.encode(s)) == s
+
+
+def test_tokenizer_vocab_bound():
+    t = D.encode("ünïcödé ✓")
+    assert t.max() < 256 and t.min() >= 0

@@ -1,0 +1,147 @@
+"""Trainer + pipeline integration on a miniature model (fast settings)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data as D
+from compile import model as M
+from compile.dobi import pipeline as P
+from compile.dobi import trainer as T
+from compile.train_lm import pretrain
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = M.CONFIGS["llama-nano"]
+    toks = D.gen_wiki_syn(n_chars=60_000).tokens()
+    params, losses = pretrain(cfg, toks, steps=25, log_every=0, log=lambda *a: None)
+    assert losses[-1] < losses[0]
+    return cfg, params, toks
+
+
+@pytest.fixture(scope="module")
+def calib(trained):
+    cfg, params, toks = trained
+    return P.collect_calibration(params, cfg, toks, n_batches=3)
+
+
+def test_calibration_shapes(trained, calib):
+    cfg, params, _ = trained
+    for name, m, n in M.target_shapes(cfg):
+        xs = calib[name]
+        assert len(xs) == 3
+        assert all(x.shape[1] == m for x in xs)
+
+
+def test_train_ks_moves_toward_ratio(trained):
+    cfg, params, toks = trained
+    ks, log = T.train_ks(params, cfg, toks, ratio=0.5, steps=6,
+                         log=lambda *a: None)
+    shapes = [(m, n) for _, m, n in M.target_shapes(cfg)]
+    assert len(ks) == len(shapes)
+    assert all(8 <= k <= min(m, n) for k, (m, n) in zip(ks, shapes))
+    # soft ratio tracked near target through training
+    assert abs(log.ratio_history[-1] - 0.5) < 0.15
+    assert len(log.k_history) == 6
+
+
+def test_uniform_ks_hits_fraction(trained):
+    cfg, _, _ = trained
+    ks = T.uniform_ks(cfg, 0.5)
+    shapes = [(m, n) for _, m, n in M.target_shapes(cfg)]
+    for k, (m, n) in zip(ks, shapes):
+        assert abs(k - 0.5 * min(m, n)) <= 8
+
+
+def test_dobi_compress_ratio_and_eval(trained, calib):
+    cfg, params, toks = trained
+    ks = T.uniform_ks(cfg, 0.6)
+    cm = P.dobi_compress(params, cfg, ks, calib, ratio=0.6)
+    total = M.count_params(params)
+    assert 0.45 < cm.stored_params / total < 0.8
+    # compressed model still a language model: PPL finite and sane
+    ppl = P.eval_ppl(cm.params, cfg, toks, n_windows=2)
+    assert np.isfinite(ppl) and ppl < 260  # vocab PPL would be 256
+
+
+def test_dobi_better_than_weight_svd(trained, calib):
+    """The paper's core claim at module level: activation-path update beats
+    direct weight truncation at the same ratio."""
+    cfg, params, toks = trained
+    ks = T.uniform_ks(cfg, 0.5)
+    cm = P.dobi_compress(params, cfg, ks, calib, ratio=0.5)
+    ppl_dobi = P.eval_ppl(cm.params, cfg, toks, n_windows=3)
+    cw = P.svd_baseline_compress(params, cfg, 0.5, "weight_svd", calib)
+    ppl_w = P.eval_ppl(cw.params, cfg, toks, n_windows=3)
+    assert ppl_dobi < ppl_w
+
+
+def test_scale_ks_to_classic_budget(trained):
+    cfg, _, _ = trained
+    ks = T.uniform_ks(cfg, 0.6)
+    ks_c = P.scale_ks_to_classic(cfg, ks, 0.6)
+    shapes = [(m, n) for _, m, n in M.target_shapes(cfg)]
+    total = M.count_params(M.init_params(cfg))
+    fixed = M.fixed_param_count(cfg)
+    stored = fixed + sum(int(k) * (m + n) for k, (m, n) in zip(ks_c, shapes))
+    assert abs(stored / total - 0.6) < 0.1
+    # classic ranks strictly smaller than remapped at same ratio
+    assert np.mean(ks_c) < np.mean(ks)
+
+
+def test_svd_baselines_run(trained, calib):
+    cfg, params, toks = trained
+    for meth in ("weight_svd", "asvd", "svdllm"):
+        cb = P.svd_baseline_compress(params, cfg, 0.7, meth, calib)
+        ppl = P.eval_ppl(cb.params, cfg, toks, n_windows=2)
+        assert np.isfinite(ppl), meth
+
+
+def test_pruning_baselines_run(trained, calib):
+    cfg, params, toks = trained
+    grads = P.calibration_grads(params, cfg, toks, batch=2, seq=32)
+    for meth in ("wanda_sp", "flap", "llm_pruner"):
+        cb = P.pruning_compress(params, cfg, 0.7, meth, calib_x=calib, grads=grads)
+        assert cb.heads_per_layer is not None
+        ppl = P.eval_ppl(cb.params, cfg, toks, n_windows=2,
+                         heads_per_layer=cb.heads_per_layer)
+        assert np.isfinite(ppl), meth
+        total = M.count_params(params)
+        assert cb.stored_params < total
+
+
+def test_perturb_ranks_conserves_budget():
+    ks = np.full(28, 96, np.int64)
+    kp = P.perturb_ranks(ks, 5)
+    assert kp.sum() == ks.sum()
+    assert np.count_nonzero(kp != ks) == 10
+
+
+def test_activation_vs_weight_truncation(trained):
+    """Table 1 shape: truncating activations beats truncating weights.
+
+    The gap widens as the ratio drops (paper: 20.7 vs 105474 at 0.4); at a
+    deep truncation the ordering is unambiguous even on a briefly-trained
+    substrate, so that is what we assert (with slack for eval noise)."""
+    cfg, params, toks = trained
+    ks = T.uniform_ks(cfg, 0.25)
+    shapes_all = M.target_shapes(cfg)
+    ppl_act = P.eval_activation_truncation_ppl(params, cfg, toks,
+                                               ks.astype(np.float32), n_windows=3)
+    ppl_w = P.eval_weight_truncation_ppl(
+        params, cfg, toks, {nm: int(k) for (nm, _, _), k in zip(shapes_all, ks)},
+        n_windows=3)
+    assert ppl_act < ppl_w * 1.05, f"act {ppl_act} !< weight {ppl_w}"
+
+
+def test_cached_v_reuse_matches(trained, calib):
+    cfg, params, toks = trained
+    ks = T.uniform_ks(cfg, 0.6)
+    cm1 = P.dobi_compress(params, cfg, ks, calib, ratio=0.6)
+    cm2 = P.dobi_compress(params, cfg, ks, calib, ratio=0.6,
+                          cached_v=cm1.cached_v)
+    for name, _, _ in M.target_shapes(cfg):
+        w1a, _ = (np.asarray(t) for t in M.get_target(cm1.params, name))
+        w1b, _ = (np.asarray(t) for t in M.get_target(cm2.params, name))
+        np.testing.assert_allclose(w1a, w1b, atol=1e-6)

@@ -1,0 +1,313 @@
+//! Speed/deployment benches: Fig 4 (throughput vs batch & seqlen),
+//! Table 10 (constrained-device speedup), Table 12 (VLM speed),
+//! Table 23 (speed vs PTQ), engine overhead, and the batcher-policy
+//! ablation (DESIGN.md §5.5).
+//!
+//!   cargo bench --bench bench_speed -- fig4 table10 table12 table23 engine batcher
+
+use std::sync::Arc;
+
+use dobi::bench::{artifacts_available, artifacts_dir, bench, bench_for, Table};
+use dobi::config::{EngineConfig, Manifest};
+use dobi::coordinator::Engine;
+use dobi::memsim::DeviceModel;
+use dobi::runtime::Runtime;
+use dobi::tokenizer::ByteTokenizer;
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("[bench_speed] artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let want = |name: &str| filter.is_empty() || filter.iter().any(|f| f == name);
+    let m = Manifest::load(&artifacts_dir()).expect("manifest");
+    let rt = Runtime::new().expect("pjrt");
+
+    if want("fig4") { fig4(&m, &rt); }
+    if want("table10") { table10(&m, &rt); }
+    if want("table12") { table12(&m, &rt); }
+    if want("table23") { table23(&m, &rt); }
+    if want("engine") { engine_overhead(&m, &rt); }
+    if want("batcher") { batcher_ablation(&m); }
+    if want("loadcurve") { load_curve(&m); }
+}
+
+/// Latency vs offered load (open-loop Poisson arrivals) — the serving
+/// curve a deployment actually cares about; shows the knee where the
+/// single executor saturates and backpressure engages.
+fn load_curve(m: &Manifest) {
+    use dobi::bench::loadgen::poisson_load;
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let id = "llama-nano/dobi_60".to_string();
+    if m.variant(&id).map(|v| v.hlo_for(b, s).is_none()).unwrap_or(true) {
+        return;
+    }
+    // calibrate: measure a saturated batch to place the sweep
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 2000, queue_depth: 64, workers: 1 };
+    let engine = Arc::new(
+        Engine::start(artifacts_dir(), &[id.clone()], cfg, Some(vec![(b, s)])).unwrap());
+    let mut t = Table::new(
+        "Latency vs offered load (Poisson open loop, dobi-0.6)",
+        &["offered req/s", "achieved", "rejected", "p50 ms", "p99 ms"],
+    );
+    // rough capacity probe
+    let probe = poisson_load(&engine, &id, s, 50.0, std::time::Duration::from_millis(800), 1);
+    let cap = probe.achieved_rps.max(5.0);
+    for frac in [0.25, 0.5, 0.8, 1.0, 1.5] {
+        let rate = cap * frac;
+        let r = poisson_load(&engine, &id, s, rate,
+                             std::time::Duration::from_secs(3), 7 + frac as u64);
+        t.row(vec![
+            format!("{:.1}", r.offered_rps),
+            format!("{:.1}", r.achieved_rps),
+            format!("{}", r.rejected),
+            format!("{:.2}", r.latency.p50 * 1e3),
+            format!("{:.2}", r.latency.p99 * 1e3),
+        ]);
+    }
+    t.print();
+    engine.shutdown();
+    println!("shape: flat latency below the knee, p99 blow-up + rejects past saturation\n\
+              (bounded queues shed load instead of collapsing).");
+}
+
+/// Fig 4: tokens/s vs batch size (a, seq=32) and vs seq len (b, batch=4)
+/// for dense + every Dobi ratio — live measurements.
+fn fig4(m: &Manifest, rt: &Runtime) {
+    let ids = ["llama-nano/dense", "llama-nano/dobi_80", "llama-nano/dobi_60",
+               "llama-nano/dobi_40"];
+    for (title, shapes) in [
+        ("Fig 4a — tokens/s vs batch (seq=32)",
+         vec![(1usize, 32usize), (2, 32), (4, 32), (8, 32), (16, 32)]),
+        ("Fig 4b — tokens/s vs seq (batch=4)",
+         vec![(4, 16), (4, 32), (4, 64), (4, 128)]),
+    ] {
+        let mut t = Table::new(title, &["variant", "shape", "ms/fwd", "tokens/s", "vs dense"]);
+        let mut dense_tps: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+        for id in ids {
+            let Ok(v) = m.variant(id) else { continue };
+            let avail: Vec<(usize, usize)> =
+                shapes.iter().copied().filter(|&(b, s)| v.hlo_for(b, s).is_some()).collect();
+            if avail.is_empty() {
+                continue;
+            }
+            let model = rt.load_variant(m, id, Some(&avail)).expect("load");
+            for &(b, s) in &avail {
+                let tokens = vec![32i32; b * s];
+                let r = bench_for(id, 0.4, 3, || {
+                    model.forward(b, s, &tokens, None).unwrap();
+                });
+                let tps = r.throughput((b * s) as f64);
+                if id.ends_with("dense") {
+                    dense_tps.insert((b, s), tps);
+                }
+                let rel = dense_tps.get(&(b, s)).map(|d| tps / d).unwrap_or(f64::NAN);
+                t.row(vec![
+                    id.to_string(),
+                    format!("{b}x{s}"),
+                    format!("{:.2}", r.stats.mean * 1e3),
+                    format!("{tps:.0}"),
+                    format!("{rel:.2}x"),
+                ]);
+            }
+        }
+        t.print();
+    }
+    println!("paper shape: compressed > dense everywhere; the advantage grows with batch\n\
+              size and shrinks with seq length (attention is O(S^2) and uncompressed).");
+}
+
+/// Table 10: the Titan-Xp scenario — measured compute + modeled paging.
+fn table10(m: &Manifest, rt: &Runtime) {
+    let device = DeviceModel::titan_nano();
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let mut t = Table::new(
+        &format!("Table 10 — {} (dense does not fit)", device.name),
+        &["ratio", "MB", "resident", "tok/s", "speedup"],
+    );
+    let mut base = None;
+    for id in ["llama-nano/dense", "llama-nano/dobi_80", "llama-nano/dobi_60",
+               "llama-nano/dobi_40"] {
+        let Ok(v) = m.variant(id) else { continue };
+        if v.hlo_for(b, s).is_none() {
+            continue;
+        }
+        let model = rt.load_variant(m, id, Some(&[(b, s)])).expect("load");
+        let tokens = vec![32i32; b * s];
+        let r = bench(id, 1, 6, || {
+            model.forward(b, s, &tokens, None).unwrap();
+        });
+        // Dense deployments on the constrained device hold fp16 weights;
+        // dobi variants hold their remapped bytes.
+        let sim = device.tokens_per_s(v.bytes, r.stats.mean, b * s);
+        if base.is_none() {
+            base = Some(sim.tokens_per_s);
+        }
+        t.row(vec![
+            format!("{:.1}", v.ratio),
+            format!("{:.2}", v.bytes as f64 / 1e6),
+            format!("{}", sim.resident),
+            format!("{:.1}", sim.tokens_per_s),
+            format!("{:.1}x", sim.tokens_per_s / base.unwrap()),
+        ]);
+    }
+    t.print();
+    println!("paper shape: 1x -> ~11-12x once the model is resident (2.09 -> 23-26 tok/s).");
+}
+
+/// Table 12: VLM serving speed at bz=1 and bz=4 (paper used 1 and 16).
+/// Multimodal forwards run on the literal-args execute path (the
+/// buffer-args path aborts in xla_extension 0.5.1 — EXPERIMENTS.md).
+fn table12(m: &Manifest, rt: &Runtime) {
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let mut t = Table::new("Table 12 — VLM (vlm-nano) speed",
+                           &["ratio", "bz=1 tok/s", "bz=4 tok/s"]);
+    for id in ["vlm-nano/dense", "vlm-nano/dobi_80", "vlm-nano/dobi_60", "vlm-nano/dobi_40"] {
+        let Ok(v) = m.variant(id) else { continue };
+        let mut row = vec![format!("{:.1}", v.ratio)];
+        for (bb, ss) in [(1usize, 64usize), (b, s)] {
+            if v.hlo_for(bb, ss).is_none() {
+                row.push("-".into());
+                continue;
+            }
+            let model = rt.load_variant(m, id, Some(&[(bb, ss)])).expect("load");
+            let tokens = vec![32i32; bb * ss];
+            let image = vec![0.1f32; bb * model.img_dim];
+            let r = bench_for(id, 0.3, 3, || {
+                model.forward(bb, ss, &tokens, Some(&image)).unwrap();
+            });
+            row.push(format!("{:.0}", r.throughput((bb * ss) as f64)));
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("paper shape: modest speedups growing with batch (2.1% -> 20.1% at 0.4).");
+}
+
+/// Table 23: Dobi vs PTQ'd dense — PPL, size, and measured speed.
+/// (Our int-quantized variants serve dequantized f32 weights; the paper's
+/// point — factorized fp beats dequantize-on-the-fly int — is made by the
+/// GFLOPs column: rank-k matmuls genuinely do less work.)
+fn table23(m: &Manifest, rt: &Runtime) {
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let mut t = Table::new("Table 23 — Dobi vs quantized dense (size / speed / flops)",
+                           &["variant", "MB", "tok/s", "rel-matmul-flops"]);
+    let minfo = &m.models["llama-nano"];
+    let dense_flops: f64 = 7.0 * (minfo.d_model * minfo.d_model) as f64; // schematic per-layer
+    for id in ["llama-nano/dense", "llama-nano/dobi-int8_60", "llama-nano/dobi_80",
+               "llama-nano/dobi_60", "llama-nano/dobi_40"] {
+        let Ok(v) = m.variant(id) else { continue };
+        if v.hlo_for(b, s).is_none() {
+            continue;
+        }
+        let model = rt.load_variant(m, id, Some(&[(b, s)])).expect("load");
+        let tokens = vec![32i32; b * s];
+        let r = bench_for(id, 0.3, 3, || {
+            model.forward(b, s, &tokens, None).unwrap();
+        });
+        // relative matmul work from the stored rank structure
+        let rel = if v.kind == "factorized" {
+            v.stored_params as f64 / minfo.total_params as f64
+        } else {
+            1.0
+        };
+        t.row(vec![
+            id.to_string(),
+            format!("{:.2}", v.bytes as f64 / 1e6),
+            format!("{:.0}", r.throughput((b * s) as f64)),
+            format!("{rel:.2}"),
+            ]);
+        let _ = dense_flops;
+    }
+    t.print();
+    println!("paper shape: Dobi at larger size still faster than int-quantized dense\n\
+              (fewer FLOPs, no dequant on the serve path).");
+}
+
+/// Engine overhead: coordinator+batcher path vs bare runtime calls.
+fn engine_overhead(m: &Manifest, rt: &Runtime) {
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let id = "llama-nano/dense";
+    if m.variant(id).map(|v| v.hlo_for(b, s).is_none()).unwrap_or(true) {
+        return;
+    }
+    let model = rt.load_variant(m, id, Some(&[(b, s)])).expect("load");
+    let tokens = vec![32i32; b * s];
+    let bare = bench("bare", 2, 10, || {
+        model.forward(b, s, &tokens, None).unwrap();
+    });
+
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 1000, queue_depth: 256, workers: 1 };
+    let engine = Arc::new(
+        Engine::start(artifacts_dir(), &[id.to_string()], cfg, Some(vec![(b, s)])).unwrap());
+    let tok = ByteTokenizer;
+    let win = tok.encode_window("the quick brown fox ", s, 32);
+    // saturate with b concurrent clients so every executable call is full
+    let r = bench("engine", 1, 6, || {
+        let mut rxs = Vec::new();
+        for _ in 0..b {
+            rxs.push(engine.submit(id, win.clone(), None).unwrap());
+        }
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+    });
+    let mut t = Table::new("Engine overhead (batched path vs bare executable)",
+                           &["path", "ms per full batch", "overhead"]);
+    t.row(vec!["bare runtime".into(), format!("{:.3}", bare.stats.mean * 1e3), "-".into()]);
+    t.row(vec![
+        "engine (b clients)".into(),
+        format!("{:.3}", r.stats.mean * 1e3),
+        format!("{:.1}%", 100.0 * (r.stats.mean - bare.stats.mean) / bare.stats.mean),
+    ]);
+    t.print();
+    engine.shutdown();
+    println!("perf target (DESIGN.md §6): engine overhead < 5% of executable runtime.");
+}
+
+/// Batcher policy ablation: deadline sweep under a fixed open-loop load.
+fn batcher_ablation(m: &Manifest) {
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let id = "llama-nano/dobi_60".to_string();
+    if m.variant(&id).map(|v| v.hlo_for(b, s).is_none()).unwrap_or(true) {
+        return;
+    }
+    let mut t = Table::new("Batcher ablation — deadline vs latency/throughput (16 clients)",
+                           &["deadline us", "req/s", "p50 ms", "p99 ms", "mean batch"]);
+    for deadline_us in [0u64, 500, 2000, 8000] {
+        let cfg = EngineConfig { max_batch: b, batch_deadline_us: deadline_us,
+                                 queue_depth: 1024, workers: 1 };
+        let engine = Arc::new(
+            Engine::start(artifacts_dir(), &[id.clone()], cfg, Some(vec![(b, s)])).unwrap());
+        let tok = ByteTokenizer;
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..16 {
+            let eng = engine.clone();
+            let id2 = id.clone();
+            let win = tok.encode_window(&format!("client {c} "), s, 32);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..8 {
+                    eng.infer(&id2, win.clone(), None).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let st = engine.stats();
+        t.row(vec![
+            format!("{deadline_us}"),
+            format!("{:.1}", 128.0 / wall),
+            format!("{:.2}", st.p50_latency_s * 1e3),
+            format!("{:.2}", st.p99_latency_s * 1e3),
+            format!("{:.2}", st.mean_batch),
+        ]);
+        engine.shutdown();
+    }
+    t.print();
+    println!("design ablation: tiny deadlines waste batch slots, huge ones pay latency;\n\
+              the default (2000us) sits at the knee.");
+}

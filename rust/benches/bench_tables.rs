@@ -1,0 +1,488 @@
+//! Regenerates the paper's *quality* tables from the artifacts, measured
+//! live through the rust runtime (PPL / accuracy / storage accounting).
+//!
+//!   cargo bench --bench bench_tables              # everything
+//!   cargo bench --bench bench_tables -- table2    # one table
+//!
+//! Table index (DESIGN.md §3): 1, 2, 3, 45, 6, 7, 8, 9, 11, 13, 15,
+//! 16, 17, 18, 24.  Paper-vs-measured notes land in EXPERIMENTS.md.
+
+use std::collections::BTreeMap;
+
+use dobi::bench::{artifacts_available, artifacts_dir, fmt_f, Table};
+use dobi::config::{Manifest, Variant};
+use dobi::corpusio;
+use dobi::evalx;
+use dobi::runtime::{LoadedModel, Runtime};
+
+struct Ctx {
+    m: Manifest,
+    rt: Runtime,
+    b: usize,
+    s: usize,
+    ppl_cache: BTreeMap<(String, String), f64>,
+    acc_cache: BTreeMap<String, Vec<evalx::SuiteResult>>,
+}
+
+impl Ctx {
+    fn load(&self, id: &str) -> Option<LoadedModel> {
+        let v = self.m.variant(id).ok()?;
+        if v.hlo_for(self.b, self.s).is_none() {
+            return None;
+        }
+        self.rt.load_variant(&self.m, id, Some(&[(self.b, self.s)])).ok()
+    }
+
+    fn ppl(&mut self, id: &str, corpus: &str) -> f64 {
+        let key = (id.to_string(), corpus.to_string());
+        if let Some(&p) = self.ppl_cache.get(&key) {
+            return p;
+        }
+        let p = match self.load(id) {
+            Some(model) => evalx::perplexity(&model, &self.m, corpus).unwrap_or(f64::NAN),
+            None => f64::NAN,
+        };
+        self.ppl_cache.insert(key, p);
+        p
+    }
+
+    fn suite_accs(&mut self, id: &str, limit: usize) -> Vec<evalx::SuiteResult> {
+        if let Some(r) = self.acc_cache.get(id) {
+            return r.clone();
+        }
+        let out = (|| -> Option<Vec<evalx::SuiteResult>> {
+            let suites_file = self.m.suites_file.clone()?;
+            let suites = corpusio::read_suites(&self.m.path(&suites_file)).ok()?;
+            let model = self.load(id)?;
+            let mut res = Vec::new();
+            for s in &suites {
+                res.push(evalx::run_suite(&model, s, self.b, self.s, limit).ok()?);
+            }
+            Some(res)
+        })()
+        .unwrap_or_default();
+        self.acc_cache.insert(id.to_string(), out.clone());
+        out
+    }
+
+    fn find<'a>(&'a self, model: &str, method: &str, ratio: f64) -> Option<&'a Variant> {
+        self.m.variants.iter().find(|v| {
+            v.model == model && v.method == method && v.kernel == "xla"
+                && (v.ratio - ratio).abs() < 1e-6
+        })
+    }
+}
+
+const RATIOS: [f64; 3] = [0.8, 0.6, 0.4];
+const TASK_LIMIT: usize = 24; // per-suite task budget per variant (CPU time)
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("[bench_tables] artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let want = |name: &str| filter.is_empty() || filter.iter().any(|f| f == name);
+    let m = Manifest::load(&artifacts_dir()).expect("manifest");
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let mut ctx = Ctx { m, rt: Runtime::new().expect("pjrt"), b, s,
+                        ppl_cache: BTreeMap::new(), acc_cache: BTreeMap::new() };
+
+    if want("table1") { table1(&mut ctx); }
+    if want("table2") { table2(&mut ctx); }
+    if want("table3") { table3(&mut ctx); }
+    if want("table45") { table45(&mut ctx); }
+    if want("table6") { table6(&mut ctx); }
+    if want("table7") { table7(&mut ctx); }
+    if want("table8") { table8(&mut ctx); }
+    if want("table9") { table9(&mut ctx); }
+    if want("table11") { table11(&mut ctx); }
+    if want("table13") { table13(&mut ctx); }
+    if want("table15") { table15(&ctx); }
+    if want("table16") { table16(&mut ctx); }
+    if want("table17") { table17(&mut ctx); }
+    if want("table18") { table18(&mut ctx); }
+    if want("table24") { table24(&mut ctx); }
+}
+
+/// Table 1: truncate activations vs weights at identical positions.
+/// Activation rows are the python-side oracle (the activation-truncation
+/// "model" needs an SVD per eval batch — a training-time construct);
+/// weight rows are re-measured live on the exported weight-SVD variants.
+fn table1(ctx: &mut Ctx) {
+    let mut t = Table::new("Table 1 — PPL, truncating activations vs weights (wiki-syn)",
+                           &["Param Ratio", "1.0", "0.8", "0.6", "0.4"]);
+    let a = ctx.m.analysis.get("table1").cloned();
+    let row = |kind: &str, a: &Option<dobi::json::Json>| {
+        let mut cells = vec![kind.to_string()];
+        for r in ["1.0", "0.8", "0.6", "0.4"] {
+            let v = a
+                .as_ref()
+                .and_then(|j| j.get(r))
+                .and_then(|j| j.get(kind))
+                .and_then(|j| j.as_f64())
+                .unwrap_or(f64::NAN);
+            cells.push(fmt_f(v, 2));
+        }
+        cells
+    };
+    t.row(row("activation", &a));
+    // live weight-truncation row
+    let mut cells = vec!["weight (live)".to_string()];
+    cells.push(fmt_f(ctx.ppl("llama-nano/dense", "wiki-syn"), 2));
+    for r in RATIOS {
+        let id = ctx.find("llama-nano", "weight_svd", r).map(|v| v.id.clone());
+        cells.push(match id {
+            Some(id) => fmt_f(ctx.ppl(&id, "wiki-syn"), 2),
+            None => "-".into(),
+        });
+    }
+    t.row(cells);
+    t.print();
+    println!("paper shape: activation row degrades gracefully (5.68 -> 20.7), weight row\n\
+              explodes (5.68 -> 105474).");
+}
+
+/// Table 2: main results — SVD-family methods x ratios, PPL on 3 corpora
+/// + mean accuracy over the 7 task suites.
+fn table2(ctx: &mut Ctx) {
+    let mut t = Table::new(
+        "Table 2 — Dobi-SVD vs SVD baselines (PPL wiki/ptb/c4, avg task acc)",
+        &["ratio", "method", "wiki", "ptb", "c4", "avg-acc", "drop%"],
+    );
+    let dense_accs = ctx.suite_accs("llama-nano/dense", TASK_LIMIT);
+    let dense_avg = avg_acc(&dense_accs);
+    let mut dense_row = vec!["1.0".to_string(), "dense".to_string()];
+    for c in ["wiki-syn", "ptb-syn", "c4-syn"] {
+        dense_row.push(fmt_f(ctx.ppl("llama-nano/dense", c), 2));
+    }
+    dense_row.push(fmt_f(dense_avg, 3));
+    dense_row.push("0.0".into());
+    t.row(dense_row);
+    for ratio in RATIOS {
+        for method in ["asvd", "svdllm", "dobi-noremap", "dobi"] {
+            let Some(v) = ctx.find("llama-nano", method, ratio) else { continue };
+            let id = v.id.clone();
+            let mut row = vec![format!("{ratio:.1}"), label(method).to_string()];
+            for c in ["wiki-syn", "ptb-syn", "c4-syn"] {
+                row.push(fmt_f(ctx.ppl(&id, c), 2));
+            }
+            let accs = ctx.suite_accs(&id, TASK_LIMIT);
+            let avg = avg_acc(&accs);
+            row.push(fmt_f(avg, 3));
+            row.push(fmt_f(100.0 * (dense_avg - avg) / dense_avg.max(1e-9), 1));
+            t.row(row);
+        }
+    }
+    t.print();
+    println!("paper shape: Dobi > Dobi* (no remap) > SVD-LLM > ASVD at every ratio; the\n\
+              ordering gap widens at 0.4 (paper: 9.95 vs 46 vs 53.7 vs 57057 on wiki).");
+}
+
+fn label(m: &str) -> &str {
+    match m {
+        "dobi-noremap" => "Dobi-SVD*",
+        "dobi" => "Dobi-SVD",
+        "asvd" => "ASVD",
+        "svdllm" => "SVD-LLM",
+        _ => m,
+    }
+}
+
+fn avg_acc(rs: &[evalx::SuiteResult]) -> f64 {
+    if rs.is_empty() {
+        return f64::NAN;
+    }
+    rs.iter().map(|r| r.accuracy).sum::<f64>() / rs.len() as f64
+}
+
+/// Table 3: vs pruning at ratio 0.8 on task suites.
+fn table3(ctx: &mut Ctx) {
+    let mut t = Table::new("Table 3 — vs pruning at ratio 0.8 (task accuracies)",
+                           &["method", "avg-acc", "drop%", "wiki-ppl"]);
+    let dense_avg = avg_acc(&ctx.suite_accs("llama-nano/dense", TASK_LIMIT));
+    t.row(vec!["dense".into(), fmt_f(dense_avg, 3), "0.0".into(),
+               fmt_f(ctx.ppl("llama-nano/dense", "wiki-syn"), 2)]);
+    for method in ["llm_pruner", "wanda_sp", "flap", "dobi"] {
+        let Some(v) = ctx.find("llama-nano", method, 0.8) else { continue };
+        let id = v.id.clone();
+        let avg = avg_acc(&ctx.suite_accs(&id, TASK_LIMIT));
+        t.row(vec![
+            method.into(),
+            fmt_f(avg, 3),
+            fmt_f(100.0 * (dense_avg - avg) / dense_avg.max(1e-9), 1),
+            fmt_f(ctx.ppl(&id, "wiki-syn"), 2),
+        ]);
+    }
+    t.print();
+    println!("paper shape: Dobi matches/bests FLAP and LLM-Pruner at 0.8 (0% drop row).");
+}
+
+/// Tables 4/5: PPL across the model family (Llama-2/3 analogues).
+fn table45(ctx: &mut Ctx) {
+    for (model, paper) in [("llama2-nano", "Table 5 (Llama-2-7b analogue)"),
+                           ("llama3-nano", "Table 4 (Llama-3-8b analogue)")] {
+        if !ctx.m.models.contains_key(model) {
+            continue;
+        }
+        let mut t = Table::new(&format!("{paper} — wiki-syn PPL"),
+                               &["method", "0.8", "0.6", "0.4"]);
+        for method in ["llm_pruner", "wanda_sp", "dobi"] {
+            let mut row = vec![method.to_string()];
+            for r in RATIOS {
+                let id = ctx.find(model, method, r).map(|v| v.id.clone());
+                row.push(match id {
+                    Some(id) => fmt_f(ctx.ppl(&id, "wiki-syn"), 2),
+                    None => "-".into(),
+                });
+            }
+            t.row(row);
+        }
+        t.print();
+    }
+    println!("paper shape: Dobi rows flat-ish, pruning rows explode at 0.4 (121.5/160.5 vs 15.8).");
+}
+
+/// Table 6: the MMLU slot — harder mixed multi-choice suite vs ratio.
+fn table6(ctx: &mut Ctx) {
+    let Some(sf) = ctx.m.suites_file.clone() else { return };
+    let Ok(suites) = corpusio::read_suites(&ctx.m.path(&sf)) else { return };
+    let Some(mmlu) = suites.iter().find(|s| s.name == "mmlu-syn") else { return };
+    let mut t = Table::new("Table 6 — mmlu-syn accuracy vs ratio", &["ratio", "acc"]);
+    for (rname, id) in [("1.0", "llama-nano/dense".to_string()),
+                        ("0.8", "llama-nano/dobi_80".to_string()),
+                        ("0.6", "llama-nano/dobi_60".to_string()),
+                        ("0.4", "llama-nano/dobi_40".to_string())] {
+        let Some(model) = ctx.load(&id) else { continue };
+        let r = evalx::run_suite(&model, mmlu, ctx.b, ctx.s, 30).unwrap();
+        t.row(vec![rname.into(), fmt_f(r.accuracy, 3)]);
+    }
+    t.print();
+    println!("paper shape: monotone degradation, steep at 0.4 (63.3 -> 28.2 on Llama-3.1).");
+}
+
+/// Table 7: accuracy vs pruning at low ratios on the model family.
+fn table7(ctx: &mut Ctx) {
+    for model in ["llama2-nano", "llama3-nano"] {
+        if !ctx.m.models.contains_key(model) {
+            continue;
+        }
+        let mut t = Table::new(&format!("Table 7 — {model} avg task acc vs pruning"),
+                               &["ratio", "method", "avg-acc"]);
+        for r in [0.6, 0.4] {
+            for method in ["llm_pruner", "wanda_sp", "dobi"] {
+                let Some(v) = ctx.find(model, method, r) else { continue };
+                let id = v.id.clone();
+                let avg = avg_acc(&ctx.suite_accs(&id, 16));
+                t.row(vec![format!("{r:.1}"), method.into(), fmt_f(avg, 3)]);
+            }
+        }
+        t.print();
+    }
+}
+
+/// Table 8: remapping ablation.
+fn table8(ctx: &mut Ctx) {
+    let mut t = Table::new("Table 8 — remapping ablation (PPL)",
+                           &["ratio", "variant", "wiki", "c4", "ptb"]);
+    for r in RATIOS {
+        for (name, method) in [("Remap(16bit)", "dobi-remap16"),
+                               ("Remap(8+16bit)", "dobi"),
+                               ("W/o Remap", "dobi-noremap")] {
+            let Some(v) = ctx.find("llama-nano", method, r) else { continue };
+            let id = v.id.clone();
+            t.row(vec![
+                format!("{:.0}%", r * 100.0),
+                name.into(),
+                fmt_f(ctx.ppl(&id, "wiki-syn"), 2),
+                fmt_f(ctx.ppl(&id, "c4-syn"), 2),
+                fmt_f(ctx.ppl(&id, "ptb-syn"), 2),
+            ]);
+        }
+    }
+    t.print();
+    println!("paper shape: 16bit ~= 8+16bit (quantization is nearly free) << W/o Remap,\n\
+              and the remap advantage explodes at 0.4 (9.95 vs 58.02).");
+}
+
+/// Tables 9/22/23 (quality+memory half): Dobi x PTQ.
+fn table9(ctx: &mut Ctx) {
+    let mut t = Table::new("Table 9/22 — Dobi-SVD composed with PTQ (wiki PPL, stored MB)",
+                           &["ratio", "method", "ppl", "MB"]);
+    for r in RATIOS {
+        for method in ["dobi", "dobi+int8", "dobi+int4"] {
+            let Some(v) = ctx.find("llama-nano", method, r) else { continue };
+            let (id, bytes) = (v.id.clone(), v.bytes);
+            t.row(vec![
+                format!("{r:.1}"),
+                method.into(),
+                fmt_f(ctx.ppl(&id, "wiki-syn"), 2),
+                format!("{:.2}", bytes as f64 / 1e6),
+            ]);
+        }
+    }
+    t.print();
+    println!("paper shape: +int4 costs a little PPL for ~4x memory (9.95 -> 12.04, 6.8 -> 1.8GB).");
+}
+
+/// Table 11: VLM accuracy vs ratio.
+fn table11(ctx: &mut Ctx) {
+    let Some(vf) = ctx.m.vqa_file.clone() else { return };
+    let Ok((_, samples)) = corpusio::read_vqa(&ctx.m.path(&vf)) else { return };
+    let mut t = Table::new("Table 11 — VLM (vlm-nano) VQA accuracy vs ratio",
+                           &["ratio", "acc", "MB"]);
+    for (rname, id) in [("1.0", "vlm-nano/dense"), ("0.8", "vlm-nano/dobi_80"),
+                        ("0.6", "vlm-nano/dobi_60"), ("0.4", "vlm-nano/dobi_40")] {
+        let Ok(v) = ctx.m.variant(id) else { continue };
+        let bytes = v.bytes;
+        let Some(model) = ctx.load(id) else { continue };
+        let r = evalx::run_vqa(&model, &samples, ctx.b, ctx.s, 40).unwrap();
+        t.row(vec![rname.into(), fmt_f(r.accuracy, 3), format!("{:.2}", bytes as f64 / 1e6)]);
+    }
+    t.print();
+    println!("paper shape: near-lossless to 0.6, visible drop at 0.4 (77.2 -> 70.8 avg).");
+}
+
+/// Table 13: VLA metrics vs ratio.
+fn table13(ctx: &mut Ctx) {
+    let Some(vf) = ctx.m.vla_file.clone() else { return };
+    let Ok((_, samples)) = corpusio::read_vla(&ctx.m.path(&vf)) else { return };
+    let mut t = Table::new("Table 13 — VLA (vla-nano): MSE / accuracy / memory",
+                           &["ratio", "coords-mse", "angle-mse", "grip-acc", "MB"]);
+    for (rname, id) in [("1.0", "vla-nano/dense"), ("0.8", "vla-nano/dobi_80"),
+                        ("0.6", "vla-nano/dobi_60"), ("0.4", "vla-nano/dobi_40")] {
+        let Ok(v) = ctx.m.variant(id) else { continue };
+        let bytes = v.bytes;
+        let Some(model) = ctx.load(id) else { continue };
+        let r = evalx::run_vla(&model, &samples, ctx.b, ctx.s, 48).unwrap();
+        t.row(vec![
+            rname.into(),
+            fmt_f(r.coords_mse, 4),
+            fmt_f(r.angle_mse, 4),
+            fmt_f(r.gripper_acc, 3),
+            format!("{:.2}", bytes as f64 / 1e6),
+        ]);
+    }
+    t.print();
+    println!("paper shape: MSE creeps up slowly, accuracy ~flat to 0.6 (0.957 -> 0.930 at 0.4).");
+}
+
+/// Table 15: quantization error of the SVD factors per matrix kind
+/// (python-side analysis: the factors pre-quantization live only in the
+/// compression pipeline).
+fn table15(ctx: &Ctx) {
+    let Some(a) = ctx.m.analysis.get("table15") else { return };
+    let mut t = Table::new("Table 15 — int8 error of SVD factors per matrix (layer 1)",
+                           &["matrix", "MSE", "MAE"]);
+    if let Some(obj) = a.as_obj() {
+        for (k, v) in obj {
+            t.row(vec![
+                k.clone(),
+                format!("{:.2e}", v.f64_of("mse")),
+                format!("{:.2e}", v.f64_of("mae")),
+            ]);
+        }
+    }
+    t.print();
+    println!("paper shape: all ~1e-7 MSE; FFN matrices slightly cleaner than attention.");
+}
+
+/// Table 16: trained k vs uniform k (both without remap).
+fn table16(ctx: &mut Ctx) {
+    let mut t = Table::new("Table 16 — differentiable-k vs uniform-k (no remap), PPL",
+                           &["ratio", "variant", "wiki", "ptb", "c4"]);
+    for r in RATIOS {
+        for (name, method) in [("W/o Training", "uniform-noremap"),
+                               ("Training", "dobi-noremap")] {
+            let Some(v) = ctx.find("llama-nano", method, r) else { continue };
+            let id = v.id.clone();
+            t.row(vec![
+                format!("{r:.1}"),
+                name.into(),
+                fmt_f(ctx.ppl(&id, "wiki-syn"), 2),
+                fmt_f(ctx.ppl(&id, "ptb-syn"), 2),
+                fmt_f(ctx.ppl(&id, "c4-syn"), 2),
+            ]);
+        }
+    }
+    t.print();
+    println!("paper shape: trained k wins at every ratio, most at 0.4 (46.2 vs 58.0).");
+}
+
+/// Table 17: rank-perturbation sensitivity around dobi-0.4.
+fn table17(ctx: &mut Ctx) {
+    let base = ctx.ppl("llama-nano/dobi_40", "wiki-syn");
+    let mut rows: Vec<(usize, String)> = ctx
+        .m
+        .variants
+        .iter()
+        .filter(|v| v.method == "dobi-perturb")
+        .map(|v| (v.perturb_x.unwrap_or(0), v.id.clone()))
+        .collect();
+    rows.sort();
+    if rows.is_empty() {
+        return;
+    }
+    let mut t = Table::new("Table 17 — rank perturbation sensitivity (dobi-0.4, wiki-syn)",
+                           &["adjust x", "adjust %", "ppl", "degradation %"]);
+    t.row(vec!["0".into(), "0.000%".into(), fmt_f(base, 2), "0.0".into()]);
+    for (x, id) in rows {
+        let ppl = ctx.ppl(&id, "wiki-syn");
+        t.row(vec![
+            format!("{x}"),
+            format!("{:.3}%", 100.0 * x as f64 / 192.0),
+            fmt_f(ppl, 2),
+            fmt_f(100.0 * (ppl - base) / base, 2),
+        ]);
+    }
+    t.print();
+    println!("paper shape: degradation grows superlinearly with the perturbation\n\
+              (0.024% -> 0.7%, 1.2% -> 29% PPL hit) — trained ranks sit in a sharp optimum.");
+}
+
+/// Tables 18-21: the 13B-scale analogue (llama-nano-l).
+fn table18(ctx: &mut Ctx) {
+    if !ctx.m.models.contains_key("llama-nano-l") {
+        return;
+    }
+    let mut t = Table::new("Tables 18-21 — llama-nano-l (13B analogue), wiki-syn PPL",
+                           &["method", "0.8", "0.6", "0.4"]);
+    for method in ["llm_pruner", "wanda_sp", "flap", "dobi"] {
+        let mut row = vec![method.to_string()];
+        for r in RATIOS {
+            let id = ctx.find("llama-nano-l", method, r).map(|v| v.id.clone());
+            row.push(match id {
+                Some(id) => fmt_f(ctx.ppl(&id, "wiki-syn"), 2),
+                None => "-".into(),
+            });
+        }
+        t.row(row);
+    }
+    t.print();
+    println!("paper shape: the larger model compresses MORE gracefully (5.43 at 0.8 on 13B).");
+}
+
+/// Tables 24/25: compressed-big vs uncompressed-small.
+fn table24(ctx: &mut Ctx) {
+    if !ctx.m.models.contains_key("llama-nano-l") {
+        return;
+    }
+    let mut t = Table::new(
+        "Table 24/25 — compressed larger model vs dense smaller model",
+        &["model", "stored params", "wiki-ppl", "avg-acc"],
+    );
+    for id in ["llama-nano/dense", "llama-nano-l/dobi_60"] {
+        let Ok(v) = ctx.m.variant(id) else { continue };
+        let stored = v.stored_params;
+        let id_s = id.to_string();
+        let avg = avg_acc(&ctx.suite_accs(&id_s, 16));
+        t.row(vec![
+            id.into(),
+            format!("{stored}"),
+            fmt_f(ctx.ppl(&id_s, "wiki-syn"), 2),
+            fmt_f(avg, 3),
+        ]);
+    }
+    t.print();
+    println!("paper shape: Dobi-compressed 13B beats dense 7B at comparable footprint.");
+}

@@ -1,0 +1,245 @@
+//! Training-time figures regenerated from the compression pipeline's logs
+//! (manifest `analysis`/`training` sections) plus live reconstructions
+//! where the quantity is runtime-measurable:
+//!
+//!   fig3a  guided truncation (single vs multi layer)     [logs]
+//!   fig3b  training batch size 8 vs 2                    [logs]
+//!   fig3c  PCA vs IPCA memory                            [model + measured]
+//!   fig7   loss/PPL vs training step                     [logs]
+//!   fig8   k evolution per layer (+ figs 9/10 ratios)    [logs]
+//!   fig11  per-layer activation-vs-weight truncation     [logs]
+//!   gradstab  stable vs naive SVD backward norms         [logs]
+//!
+//!   cargo bench --bench bench_training_analysis -- fig7 fig8 ...
+
+use dobi::bench::{artifacts_available, artifacts_dir, fmt_f, Table};
+use dobi::config::Manifest;
+use dobi::json::Json;
+
+fn main() {
+    if !artifacts_available() {
+        eprintln!("[bench_training_analysis] artifacts not built — run `make artifacts`");
+        return;
+    }
+    let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    let want = |name: &str| filter.is_empty() || filter.iter().any(|f| f == name);
+    let m = Manifest::load(&artifacts_dir()).expect("manifest");
+
+    if want("fig3a") { fig3a(&m); }
+    if want("fig3b") { fig3b(&m); }
+    if want("fig3c") { fig3c(&m); }
+    if want("fig7") { fig7(&m); }
+    if want("fig8") { fig8(&m); }
+    if want("fig11") { fig11(&m); }
+    if want("gradstab") { gradstab(&m); }
+}
+
+fn series(j: &Json) -> Vec<f64> {
+    j.as_arr()
+        .map(|a| a.iter().filter_map(Json::as_f64).collect())
+        .unwrap_or_default()
+}
+
+fn sparkline(xs: &[f64]) -> String {
+    if xs.is_empty() {
+        return String::new();
+    }
+    let (lo, hi) = xs.iter().fold((f64::MAX, f64::MIN), |(l, h), &x| (l.min(x), h.max(x)));
+    let glyphs = ['_', '.', ':', '-', '=', '+', '*', '#'];
+    xs.iter()
+        .map(|&x| {
+            let t = if hi > lo { (x - lo) / (hi - lo) } else { 0.5 };
+            glyphs[((t * 7.0).round() as usize).min(7)]
+        })
+        .collect()
+}
+
+fn fig3a(m: &Manifest) {
+    let Some(a) = m.analysis.get("fig3a") else {
+        println!("[fig3a] not in manifest (quick profile)");
+        return;
+    };
+    let dense = a.get("dense_ppl").and_then(Json::as_f64).unwrap_or(f64::NAN);
+    let mut t = Table::new("Fig 3a — guided truncation: val PPL during k-training (ratio 0.85)",
+                           &["setting", "start", "end", "vs dense", "trace"]);
+    for key in ["single", "multi"] {
+        let Some(s) = a.get(key) else { continue };
+        let ppl = series(s.get("val_ppl").unwrap_or(&Json::Null));
+        if ppl.is_empty() {
+            continue;
+        }
+        t.row(vec![
+            format!("{key}-layer"),
+            fmt_f(ppl[0], 3),
+            fmt_f(*ppl.last().unwrap(), 3),
+            fmt_f(ppl.last().unwrap() - dense, 3),
+            sparkline(&ppl),
+        ]);
+    }
+    t.print();
+    println!("paper shape: truncating only late layers can even IMPROVE on dense\n\
+              (negative 'vs dense'), single-layer >= multi-layer.");
+}
+
+fn fig3b(m: &Manifest) {
+    let Some(a) = m.analysis.get("fig3b") else {
+        println!("[fig3b] not in manifest (quick profile)");
+        return;
+    };
+    let mut t = Table::new("Fig 3b — k-training with large vs small batch (ratio 0.6)",
+                           &["batch", "final val PPL", "val trace"]);
+    for key in ["batch8", "batch2"] {
+        let Some(s) = a.get(key) else { continue };
+        let ppl = series(s.get("val_ppl").unwrap_or(&Json::Null));
+        if ppl.is_empty() {
+            continue;
+        }
+        t.row(vec![key.into(), fmt_f(*ppl.last().unwrap(), 3), sparkline(&ppl)]);
+    }
+    t.print();
+    println!("paper shape: small-batch training lands within noise of large-batch\n\
+              (the 224-parameter optimization is sample-efficient).");
+}
+
+fn fig3c(m: &Manifest) {
+    let Some(a) = m.analysis.get("fig3c") else { return };
+    let dims = series(a.get("dims").unwrap_or(&Json::Null));
+    let pca = series(a.get("pca_bytes").unwrap_or(&Json::Null));
+    let ipca = series(a.get("ipca_bytes").unwrap_or(&Json::Null));
+    let mut t = Table::new("Fig 3c — PCA vs IPCA peak memory for n x n targets (8 batches)",
+                           &["n", "PCA MB", "IPCA MB", "ratio"]);
+    for i in 0..dims.len() {
+        t.row(vec![
+            format!("{}", dims[i] as usize),
+            fmt_f(pca[i] / 1e6, 2),
+            fmt_f(ipca[i] / 1e6, 2),
+            format!("{:.0}x", pca[i] / ipca[i]),
+        ]);
+    }
+    t.print();
+    if let (Some(d), Some(peak)) = (
+        a.get("subspace_distance").and_then(Json::as_f64),
+        a.get("ipca_peak_bytes_measured").and_then(Json::as_f64),
+    ) {
+        println!("measured: IPCA/full-PCA subspace distance {d:.4} (agreement), \
+                  measured IPCA peak {:.2} MB", peak / 1e6);
+    }
+    println!("paper shape: PCA grows with batch count & dimension (exponential-looking\n\
+              blow-up in Fig 3c), IPCA stays ~constant.");
+}
+
+fn fig7(m: &Manifest) {
+    let Some(kt) = m.training.path("llama-nano.ktrain") else { return };
+    let Some(obj) = kt.as_obj() else { return };
+    let mut t = Table::new("Fig 7 — k-training loss & val PPL vs step (llama-nano)",
+                           &["ratio", "loss start->end", "loss trace", "val ppl trace"]);
+    for (ratio, log) in obj {
+        let loss = series(log.get("loss_history").unwrap_or(&Json::Null));
+        let ppl = series(log.get("val_ppl_history").unwrap_or(&Json::Null));
+        if loss.is_empty() {
+            continue;
+        }
+        t.row(vec![
+            ratio.clone(),
+            format!("{:.3} -> {:.3}", loss[0], loss.last().unwrap()),
+            sparkline(&loss),
+            sparkline(&ppl),
+        ]);
+    }
+    t.print();
+    println!("paper shape: both curves decrease — the differentiable truncation\n\
+              genuinely optimizes the positions.");
+}
+
+fn fig8(m: &Manifest) {
+    let Some(kt) = m.training.path("llama-nano.ktrain") else { return };
+    let Some(obj) = kt.as_obj() else { return };
+    for (ratio, log) in obj {
+        let names: Vec<String> = log
+            .get("target_names")
+            .and_then(Json::as_arr)
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+        let hist = log.get("k_history").and_then(Json::as_arr);
+        let Some(hist) = hist else { continue };
+        if hist.is_empty() || names.is_empty() {
+            continue;
+        }
+        let first = series(&hist[0]);
+        let last = series(hist.last().unwrap());
+        let mut t = Table::new(
+            &format!("Figs 8/9/10 — k evolution per matrix (ratio {ratio})"),
+            &["matrix", "k start", "k end", "drift"],
+        );
+        // aggregate by matrix kind and by layer for readability
+        let mut by_kind: std::collections::BTreeMap<&str, (f64, f64, usize)> = Default::default();
+        let mut by_layer: std::collections::BTreeMap<String, (f64, f64, usize)> = Default::default();
+        for (i, n) in names.iter().enumerate() {
+            let kind = n.rsplit('.').next().unwrap_or(n);
+            let layer = n.split('.').nth(1).unwrap_or("?").to_string();
+            let e = by_kind.entry(kind).or_insert((0.0, 0.0, 0));
+            e.0 += first[i];
+            e.1 += last[i];
+            e.2 += 1;
+            let e2 = by_layer.entry(format!("layer {layer}")).or_insert((0.0, 0.0, 0));
+            e2.0 += first[i];
+            e2.1 += last[i];
+            e2.2 += 1;
+        }
+        let mut rows: Vec<(String, (f64, f64, usize))> =
+            by_kind.iter().map(|(k, v)| (k.to_string(), *v)).collect();
+        rows.extend(by_layer.iter().map(|(k, v)| (k.clone(), *v)));
+        for (kind, (f, l, c)) in rows {
+            let fs = f / c as f64;
+            let ls = l / c as f64;
+            t.row(vec![kind, fmt_f(fs, 1), fmt_f(ls, 1), format!("{:+.1}", ls - fs)]);
+        }
+        t.print();
+    }
+    println!("paper shape: wq/wk drift DOWN (attention tolerates low rank), w_down/wv\n\
+              drift UP; later layers accept more truncation than early ones.");
+}
+
+fn fig11(m: &Manifest) {
+    let Some(a) = m.analysis.get("fig11") else { return };
+    let Some(arr) = a.as_arr() else { return };
+    let mut t = Table::new(
+        "Fig 11 / A.10 — per-layer truncation: activations vs weights (PPL)",
+        &["layer", "k", "activation", "weight", "act wins"],
+    );
+    for e in arr {
+        let pa = e.f64_of("activation");
+        let pw = e.f64_of("weight");
+        t.row(vec![
+            format!("{}", e.usize_of("layer")),
+            format!("{}", e.usize_of("k")),
+            fmt_f(pa, 2),
+            fmt_f(pw, 2),
+            format!("{}", pa <= pw),
+        ]);
+    }
+    t.print();
+    println!("paper shape: activation truncation <= weight truncation at every (layer, k).");
+}
+
+fn gradstab(m: &Manifest) {
+    let Some(g) = m.analysis.get("gradstab") else { return };
+    let mut t = Table::new(
+        "Gradient stabilization ablation — SVD backward on a degenerate activation",
+        &["backward", "grad norm", "finite"],
+    );
+    t.row(vec![
+        "stabilized (Taylor + clamp)".into(),
+        format!("{:.4}", g.get("stable_norm").and_then(Json::as_f64).unwrap_or(f64::NAN)),
+        format!("{}", g.get("stable_finite").and_then(Json::as_bool).unwrap_or(false)),
+    ]);
+    let naive = g.get("naive_norm").and_then(Json::as_f64);
+    t.row(vec![
+        "naive 1/(s_j^2 - s_i^2)".into(),
+        naive.map(|x| format!("{x:.3e}")).unwrap_or_else(|| "NaN/Inf".into()),
+        format!("{}", g.get("naive_finite").and_then(Json::as_bool).unwrap_or(false)),
+    ]);
+    t.print();
+    println!("paper claim (Eq. 1-2): the naive rule explodes exactly where LLM\n\
+              activations live (near-degenerate spectra); the Taylor form stays finite.");
+}

@@ -1,0 +1,90 @@
+//! Open-loop workload generator for serving benches: Poisson arrivals at a
+//! target rate, fixed-duration runs, latency collection.  Closed-loop
+//! clients (the examples) understate tail latency because they self-throttle;
+//! the latency-vs-offered-load curve needs open-loop arrivals.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{Engine, Response, SubmitError};
+use crate::mathx::{summarize, Stats, XorShift};
+use crate::tokenizer::ByteTokenizer;
+
+#[derive(Debug, Clone)]
+pub struct LoadResult {
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub submitted: usize,
+    pub completed: usize,
+    pub rejected: usize,
+    pub latency: Stats,
+}
+
+/// Drive `engine` with Poisson arrivals at `rate_rps` for `duration`.
+/// Requests that hit backpressure count as rejected (that is the correct
+/// open-loop semantics: the client does not wait).
+pub fn poisson_load(engine: &Arc<Engine>, variant: &str, seq: usize, rate_rps: f64,
+                    duration: Duration, seed: u64) -> LoadResult {
+    let tok = ByteTokenizer;
+    let mut rng = XorShift::new(seed);
+    let window = tok.encode_window("the quick brown fox jumps over the lazy dog ", seq, 32);
+    let start = Instant::now();
+    let mut next_arrival = start;
+    let mut submitted = 0usize;
+    let mut rejected = 0usize;
+    let mut pending: Vec<mpsc::Receiver<Response>> = Vec::new();
+    while start.elapsed() < duration {
+        let now = Instant::now();
+        if now < next_arrival {
+            std::thread::sleep(next_arrival - now);
+        }
+        // exponential inter-arrival
+        let u = rng.f64().max(1e-12);
+        next_arrival += Duration::from_secs_f64(-u.ln() / rate_rps);
+        match engine.submit(variant, window.clone(), None) {
+            Ok(rx) => {
+                submitted += 1;
+                pending.push(rx);
+            }
+            Err(SubmitError::QueueFull { .. }) => rejected += 1,
+            Err(_) => break,
+        }
+    }
+    let mut latencies = Vec::with_capacity(pending.len());
+    let mut completed = 0usize;
+    for rx in pending {
+        if let Ok(resp) = rx.recv_timeout(Duration::from_secs(30)) {
+            latencies.push(resp.total_s);
+            completed += 1;
+        }
+    }
+    let wall = start.elapsed().as_secs_f64();
+    LoadResult {
+        offered_rps: rate_rps,
+        achieved_rps: completed as f64 / wall,
+        submitted,
+        completed,
+        rejected,
+        latency: summarize(&latencies),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::mathx::XorShift;
+
+    #[test]
+    fn exponential_interarrival_mean_matches_rate() {
+        let mut rng = XorShift::new(3);
+        let rate = 50.0;
+        let n = 20_000;
+        let mut total = 0.0;
+        for _ in 0..n {
+            let u: f64 = rng.f64().max(1e-12);
+            total += -u.ln() / rate;
+        }
+        let mean = total / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.002, "mean {mean}");
+    }
+}

@@ -1,0 +1,182 @@
+//! Measurement harness (criterion is not in the offline registry).
+//!
+//! Warmup + repeated timed runs + summary statistics, plus table rendering
+//! helpers shared by all `rust/benches/*` binaries so the paper tables
+//! print with consistent formatting.
+
+pub mod loadgen;
+
+use std::time::Instant;
+
+use crate::mathx::{summarize, Stats};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub stats: Stats,       // seconds per iteration
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, units_per_iter: f64) -> f64 {
+        if self.stats.mean > 0.0 {
+            units_per_iter / self.stats.mean
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), stats: summarize(&samples), iters }
+}
+
+/// Adaptive: run until `min_time_s` elapsed (at least `min_iters`).
+pub fn bench_for<F: FnMut()>(name: &str, min_time_s: f64, min_iters: usize,
+                             mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < min_time_s {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), stats: summarize(&samples), iters: samples.len() }
+}
+
+// ---------------------------------------------------------------------------
+// Table rendering (paper-style rows)
+// ---------------------------------------------------------------------------
+
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .zip(w)
+                .map(|(c, &w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.headers, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+pub fn fmt_f(x: f64, prec: usize) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{x:.prec$}")
+    }
+}
+
+/// Artifacts dir for tests/benches: $DOBI_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("DOBI_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from(crate::DEFAULT_ARTIFACTS))
+}
+
+/// True when artifacts exist; integration tests/benches skip otherwise
+/// (unit tests never need them).
+pub fn artifacts_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let r = bench("x", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.stats.mean >= 0.0);
+    }
+
+    #[test]
+    fn bench_for_reaches_min() {
+        let r = bench_for("x", 0.01, 3, || std::thread::sleep(std::time::Duration::from_micros(100)));
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "t".into(),
+            stats: Stats { mean: 0.5, ..Default::default() },
+            iters: 1,
+        };
+        assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(vec!["xx".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("== T =="));
+        assert!(s.contains("xx"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("T", &["a"]);
+        t.row(vec!["1".into(), "2".into()]);
+    }
+}

@@ -1,0 +1,42 @@
+//! Dev tool: execute /tmp/p_<name>.hlo.txt with /tmp/p_<name>.in inputs
+//! and diff against /tmp/p_<name>.npy (f32 raw after the npy header).
+use anyhow::{anyhow, Result};
+use dobi::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let name = std::env::args().nth(1).expect("probe name");
+    let rt = Runtime::new()?;
+    let exe = rt.compile_hlo(std::path::Path::new(&format!("/tmp/p_{name}.hlo.txt")))?;
+    let raw = std::fs::read(format!("/tmp/p_{name}.in"))?;
+    let mut i = 0usize;
+    let rd_u32 = |raw: &[u8], i: &mut usize| { let v = u32::from_le_bytes(raw[*i..*i+4].try_into().unwrap()); *i += 4; v };
+    let n = rd_u32(&raw, &mut i) as usize;
+    let mut lits = Vec::new();
+    for _ in 0..n {
+        let code = raw[i]; let ndim = raw[i+1] as usize; i += 2;
+        let mut shape = Vec::new();
+        for _ in 0..ndim { shape.push(rd_u32(&raw, &mut i) as usize); }
+        let elems: usize = shape.iter().product();
+        let nbytes = elems * 4;
+        let bytes = &raw[i..i+nbytes]; i += nbytes;
+        let ty = if code == 0 { xla::ElementType::F32 } else { xla::ElementType::S32 };
+        lits.push(xla::Literal::create_from_shape_and_untyped_data(ty, &shape, bytes)
+            .map_err(|e| anyhow!("{e:?}"))?);
+    }
+    let out = exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("{e:?}"))?;
+    let vals = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?
+        .to_tuple1().map_err(|e| anyhow!("{e:?}"))?
+        .to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+    let npy = std::fs::read(format!("/tmp/p_{name}.npy"))?;
+    let hlen = u16::from_le_bytes(npy[8..10].try_into().unwrap()) as usize;
+    let data = &npy[10 + hlen..];
+    let expect: Vec<f32> = data.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+    assert_eq!(vals.len(), expect.len(), "len mismatch {} vs {}", vals.len(), expect.len());
+    let mut max = 0f32; let mut worst = 0usize;
+    for (j, (a, b)) in vals.iter().zip(&expect).enumerate() {
+        let d = (a - b).abs();
+        if d > max { max = d; worst = j; }
+    }
+    println!("{name}: max|delta| = {max:.6} at {worst} (rust {} vs py {})", vals[worst], expect[worst]);
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! Tiny argument-parsing substrate (no clap offline).
+//!
+//! Grammar: `binary <subcommand> [--flag value] [--switch] [positional...]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    /// `switch_names` lists flags that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, switch_names: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.switches.push(name.to_string());
+                    } else {
+                        out.flags.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(switch_names: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), switch_names)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got `{v}`")))
+            .unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(v: &[&str], sw: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), sw)
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = mk(&["serve", "--port", "9000", "--verbose", "extra"], &["verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get("port"), Some("9000"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn parses_eq_form() {
+        let a = mk(&["eval", "--ratio=0.6"], &[]);
+        assert_eq!(a.f64_or("ratio", 1.0), 0.6);
+    }
+
+    #[test]
+    fn trailing_flag_becomes_switch() {
+        let a = mk(&["x", "--flag"], &[]);
+        assert!(a.has("flag"));
+    }
+
+    #[test]
+    fn flag_before_another_flag_is_switch() {
+        let a = mk(&["x", "--a", "--b", "1"], &[]);
+        assert!(a.has("a"));
+        assert_eq!(a.get("b"), Some("1"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = mk(&["x"], &[]);
+        assert_eq!(a.usize_or("n", 5), 5);
+        assert_eq!(a.get_or("s", "d"), "d");
+    }
+}

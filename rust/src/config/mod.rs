@@ -1,0 +1,278 @@
+//! Typed configuration: manifest parsing (the python→rust contract) and
+//! engine/serve tunables.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Result};
+
+use crate::json::{self, Json};
+
+// ---------------------------------------------------------------------------
+// Engine tunables
+// ---------------------------------------------------------------------------
+
+/// Coordinator/batcher knobs (defaults chosen by the §Perf pass).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Max requests fused into one executable call (must match an exported
+    /// HLO batch dim; the router picks the best available shape).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch before flushing.
+    pub batch_deadline_us: u64,
+    /// Bounded queue depth per variant (backpressure beyond this).
+    pub queue_depth: usize,
+    /// Worker threads (1 device → 1 executor by default; >1 exercises
+    /// contention handling in tests).
+    pub workers: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        // deadline=2000us: the §Perf batcher ablation shows a flat plateau
+        // from 500-8000us with +-15% run-to-run noise on 1 core; 2000us sits
+        // mid-plateau (EXPERIMENTS.md §Perf L3 / bench_speed -- batcher).
+        EngineConfig { max_batch: 4, batch_deadline_us: 2_000, queue_depth: 256, workers: 1 }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub img_dim: usize,
+    pub n_img_tokens: usize,
+    pub action_head: bool,
+    pub total_params: usize,
+    pub fixed_params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub id: String,
+    pub model: String,
+    pub method: String,
+    pub ratio: f64,
+    pub kind: String,   // dense | factorized | pruned
+    pub kernel: String, // xla | pallas
+    pub weights: String,
+    pub param_names: Vec<String>,
+    /// shape key "BxS" -> hlo file
+    pub hlo: BTreeMap<String, String>,
+    pub inputs: Vec<String>,
+    pub stored_params: usize,
+    pub bytes: usize,
+    pub ref_ppl: BTreeMap<String, f64>,
+    pub perturb_x: Option<usize>,
+    /// per-target truncation ranks (factorized variants only)
+    pub ranks: BTreeMap<String, usize>,
+}
+
+impl Variant {
+    /// Parse "4x64" -> (4, 64).
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.hlo.keys().filter_map(|k| parse_shape_key(k)).collect()
+    }
+
+    pub fn hlo_for(&self, batch: usize, seq: usize) -> Option<&str> {
+        self.hlo.get(&format!("{batch}x{seq}")).map(|s| s.as_str())
+    }
+
+    /// Best shape for a given number of pending requests at a seq length:
+    /// the smallest exported batch >= want (or the largest available).
+    pub fn pick_batch(&self, want: usize, seq: usize) -> Option<usize> {
+        let mut batches: Vec<usize> = self
+            .shapes()
+            .into_iter()
+            .filter(|&(_, s)| s == seq)
+            .map(|(b, _)| b)
+            .collect();
+        batches.sort_unstable();
+        batches.iter().copied().find(|&b| b >= want).or(batches.last().copied())
+    }
+}
+
+pub fn parse_shape_key(k: &str) -> Option<(usize, usize)> {
+    let (b, s) = k.split_once('x')?;
+    Some((b.parse().ok()?, s.parse().ok()?))
+}
+
+#[derive(Debug, Clone)]
+pub struct CorpusInfo {
+    pub name: String,
+    pub train: String,
+    pub eval_windows: String,
+    pub n_windows: usize,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub profile: String,
+    pub models: BTreeMap<String, ModelInfo>,
+    pub variants: Vec<Variant>,
+    pub corpora: BTreeMap<String, CorpusInfo>,
+    pub suites_file: Option<String>,
+    pub vqa_file: Option<String>,
+    pub vla_file: Option<String>,
+    pub eval_batch: usize,
+    pub eval_seq: usize,
+    pub eval_windows: usize,
+    pub analysis: Json,
+    pub training: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let doc = json::load(&dir.join("manifest.json"))?;
+        let mut models = BTreeMap::new();
+        for (name, m) in doc.get("models").and_then(Json::as_obj).into_iter().flatten() {
+            let c = m.get("config").ok_or_else(|| anyhow!("model {name}: no config"))?;
+            models.insert(
+                name.clone(),
+                ModelInfo {
+                    name: name.clone(),
+                    vocab: c.usize_of("vocab"),
+                    d_model: c.usize_of("d_model"),
+                    n_layers: c.usize_of("n_layers"),
+                    n_heads: c.usize_of("n_heads"),
+                    d_ff: c.usize_of("d_ff"),
+                    img_dim: c.usize_of("img_dim"),
+                    n_img_tokens: c.usize_of("n_img_tokens"),
+                    action_head: c.get("action_head").and_then(Json::as_bool).unwrap_or(false),
+                    total_params: m.usize_of("total_params"),
+                    fixed_params: m.usize_of("fixed_params"),
+                },
+            );
+        }
+        let mut variants = Vec::new();
+        for v in doc.get("variants").and_then(Json::as_arr).into_iter().flatten() {
+            let mut hlo = BTreeMap::new();
+            for (k, f) in v.get("hlo").and_then(Json::as_obj).into_iter().flatten() {
+                hlo.insert(k.clone(), f.as_str().unwrap_or_default().to_string());
+            }
+            let mut ref_ppl = BTreeMap::new();
+            for (k, f) in v.get("ref_ppl").and_then(Json::as_obj).into_iter().flatten() {
+                ref_ppl.insert(k.clone(), f.as_f64().unwrap_or(f64::NAN));
+            }
+            let mut ranks = BTreeMap::new();
+            for (k, f) in v.get("ranks").and_then(Json::as_obj).into_iter().flatten() {
+                ranks.insert(k.clone(), f.as_f64().unwrap_or(0.0) as usize);
+            }
+            variants.push(Variant {
+                id: v.str_of("id").to_string(),
+                model: v.str_of("model").to_string(),
+                method: v.str_of("method").to_string(),
+                ratio: v.f64_of("ratio"),
+                kind: v.str_of("kind").to_string(),
+                kernel: v.str_of("kernel").to_string(),
+                weights: v.str_of("weights").to_string(),
+                param_names: v
+                    .get("param_names")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                    .unwrap_or_default(),
+                hlo,
+                inputs: v
+                    .get("inputs")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+                    .unwrap_or_default(),
+                stored_params: v.usize_of("stored_params"),
+                bytes: v.usize_of("bytes"),
+                ref_ppl,
+                perturb_x: v.get("perturb_x").and_then(Json::as_usize),
+                ranks,
+            });
+        }
+        let mut corpora = BTreeMap::new();
+        for (name, c) in doc.get("corpora").and_then(Json::as_obj).into_iter().flatten() {
+            corpora.insert(
+                name.clone(),
+                CorpusInfo {
+                    name: name.clone(),
+                    train: c.str_of("train").to_string(),
+                    eval_windows: c.str_of("eval_windows").to_string(),
+                    n_windows: c.usize_of("n_windows"),
+                },
+            );
+        }
+        let eval = doc.get("eval").ok_or_else(|| anyhow!("manifest: missing eval"))?;
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            profile: doc.str_of("profile").to_string(),
+            models,
+            variants,
+            corpora,
+            suites_file: doc.get("suites").and_then(Json::as_str).map(String::from),
+            vqa_file: doc.get("vqa").and_then(Json::as_str).map(String::from),
+            vla_file: doc.get("vla").and_then(Json::as_str).map(String::from),
+            eval_batch: eval.usize_of("batch"),
+            eval_seq: eval.usize_of("seq"),
+            eval_windows: eval.usize_of("windows"),
+            analysis: doc.get("analysis").cloned().unwrap_or(Json::Null),
+            training: doc.get("training").cloned().unwrap_or(Json::Null),
+        })
+    }
+
+    pub fn variant(&self, id: &str) -> Result<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.id == id)
+            .ok_or_else(|| anyhow!("variant `{id}` not in manifest ({} known)", self.variants.len()))
+    }
+
+    pub fn variants_for_model(&self, model: &str) -> Vec<&Variant> {
+        self.variants.iter().filter(|v| v.model == model).collect()
+    }
+
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_key_parsing() {
+        assert_eq!(parse_shape_key("4x64"), Some((4, 64)));
+        assert_eq!(parse_shape_key("16x32"), Some((16, 32)));
+        assert_eq!(parse_shape_key("bad"), None);
+    }
+
+    #[test]
+    fn pick_batch_prefers_smallest_fitting() {
+        let mut hlo = BTreeMap::new();
+        for k in ["1x32", "4x32", "16x32", "4x64"] {
+            hlo.insert(k.to_string(), format!("{k}.hlo.txt"));
+        }
+        let v = Variant {
+            id: "m/x".into(), model: "m".into(), method: "dobi".into(), ratio: 0.6,
+            kind: "factorized".into(), kernel: "xla".into(), weights: "w".into(),
+            param_names: vec![], hlo, inputs: vec!["tokens".into()],
+            stored_params: 0, bytes: 0, ref_ppl: BTreeMap::new(), perturb_x: None,
+            ranks: BTreeMap::new(),
+        };
+        assert_eq!(v.pick_batch(3, 32), Some(4));
+        assert_eq!(v.pick_batch(1, 32), Some(1));
+        assert_eq!(v.pick_batch(99, 32), Some(16));
+        assert_eq!(v.pick_batch(2, 64), Some(4));
+        assert_eq!(v.pick_batch(1, 128), None);
+    }
+
+    #[test]
+    fn engine_defaults_sane() {
+        let c = EngineConfig::default();
+        assert!(c.max_batch >= 1 && c.queue_depth >= c.max_batch);
+    }
+}

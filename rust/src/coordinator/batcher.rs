@@ -1,0 +1,238 @@
+//! Dynamic batcher: groups pending requests per (variant, seq) key and
+//! flushes on either of two triggers (whichever first):
+//!   * size   — `max_batch` requests waiting, or
+//!   * time   — the oldest request has waited `deadline`.
+//!
+//! Pure data structure (no PJRT, no threads) so the policy is unit- and
+//! property-testable; the engine drives it from the executor loop.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+use super::request::Request;
+
+#[derive(Debug)]
+pub struct Batch {
+    pub variant: String,
+    pub seq: usize,
+    pub requests: Vec<Request>,
+}
+
+pub struct DynamicBatcher {
+    pub max_batch: usize,
+    pub deadline: Duration,
+    queues: BTreeMap<(String, usize), VecDeque<Request>>,
+    depth: usize,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, deadline: Duration) -> Self {
+        DynamicBatcher { max_batch: max_batch.max(1), deadline, queues: BTreeMap::new(), depth: 0 }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.depth += 1;
+        self.queues
+            .entry((req.variant.clone(), req.seq))
+            .or_default()
+            .push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.depth
+    }
+
+    /// Next batch to run, honoring the size/deadline policy.  Among ready
+    /// groups, picks the one whose head request is oldest (FIFO fairness
+    /// across variants).
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        let mut best: Option<(Instant, (String, usize))> = None;
+        for (key, q) in &self.queues {
+            let head = match q.front() {
+                Some(r) => r.enqueued,
+                None => continue,
+            };
+            let ready = q.len() >= self.max_batch || now.duration_since(head) >= self.deadline;
+            if ready && best.as_ref().map(|(t, _)| head < *t).unwrap_or(true) {
+                best = Some((head, key.clone()));
+            }
+        }
+        let (_, key) = best?;
+        let q = self.queues.get_mut(&key).unwrap();
+        let take = q.len().min(self.max_batch);
+        let requests: Vec<Request> = q.drain(..take).collect();
+        self.depth -= requests.len();
+        Some(Batch { variant: key.0, seq: key.1, requests })
+    }
+
+    /// Force-flush everything (engine shutdown).
+    pub fn drain_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        let keys: Vec<_> = self.queues.keys().cloned().collect();
+        for key in keys {
+            let q = self.queues.get_mut(&key).unwrap();
+            while !q.is_empty() {
+                let take = q.len().min(self.max_batch);
+                let requests: Vec<Request> = q.drain(..take).collect();
+                self.depth -= requests.len();
+                out.push(Batch { variant: key.0.clone(), seq: key.1, requests });
+            }
+        }
+        out
+    }
+
+    /// Time until the earliest pending deadline (engine idle sleep hint).
+    pub fn next_deadline_in(&self, now: Instant) -> Option<Duration> {
+        self.queues
+            .values()
+            .filter_map(|q| q.front())
+            .map(|r| {
+                let waited = now.duration_since(r.enqueued);
+                self.deadline.saturating_sub(waited)
+            })
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proptest::{check, Gen};
+    use std::sync::mpsc;
+
+    fn req(variant: &str, seq: usize, at: Instant) -> Request {
+        let (tx, _rx) = mpsc::channel();
+        Request {
+            id: 0,
+            variant: variant.into(),
+            seq,
+            tokens: vec![0; seq],
+            image: None,
+            enqueued: at,
+            respond: tx,
+        }
+    }
+
+    #[test]
+    fn flushes_on_size() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(100));
+        let t = Instant::now();
+        b.push(req("v", 8, t));
+        assert!(b.poll(t).is_none(), "below size, before deadline");
+        b.push(req("v", 8, t));
+        let batch = b.poll(t).expect("size trigger");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = DynamicBatcher::new(8, Duration::from_millis(5));
+        let t = Instant::now();
+        b.push(req("v", 8, t));
+        assert!(b.poll(t).is_none());
+        let batch = b.poll(t + Duration::from_millis(6)).expect("deadline trigger");
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn groups_by_variant_and_seq() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(100));
+        let t = Instant::now();
+        b.push(req("a", 8, t));
+        b.push(req("b", 8, t));
+        b.push(req("a", 16, t));
+        assert!(b.poll(t).is_none(), "no group reaches size 2");
+        b.push(req("a", 8, t));
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.variant, "a");
+        assert_eq!(batch.seq, 8);
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(b.pending(), 2);
+    }
+
+    #[test]
+    fn oldest_group_first() {
+        let mut b = DynamicBatcher::new(1, Duration::from_millis(0));
+        let t = Instant::now();
+        b.push(req("late", 8, t + Duration::from_millis(5)));
+        b.push(req("early", 8, t));
+        let batch = b.poll(t + Duration::from_millis(10)).unwrap();
+        assert_eq!(batch.variant, "early");
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = DynamicBatcher::new(2, Duration::from_secs(100));
+        let t = Instant::now();
+        for i in 0..5 {
+            b.push(req(if i % 2 == 0 { "a" } else { "b" }, 8, t));
+        }
+        let batches = b.drain_all();
+        assert_eq!(batches.iter().map(|x| x.requests.len()).sum::<usize>(), 5);
+        assert_eq!(b.pending(), 0);
+        assert!(batches.iter().all(|x| x.requests.len() <= 2));
+    }
+
+    #[test]
+    fn next_deadline_hint() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(10));
+        let t = Instant::now();
+        assert!(b.next_deadline_in(t).is_none());
+        b.push(req("v", 8, t));
+        let d = b.next_deadline_in(t + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+    }
+
+    #[test]
+    fn prop_no_request_lost_and_batches_bounded() {
+        check("batcher conservation", 50, |g: &mut Gen| {
+            let max_batch = g.usize_in(1, 6);
+            let mut b = DynamicBatcher::new(max_batch, Duration::from_millis(g.usize_in(0, 5) as u64));
+            let t = Instant::now();
+            let n = g.usize_in(1, 40);
+            for i in 0..n {
+                let v = ["a", "b", "c"][g.usize_in(0, 3)];
+                let s = [8, 16][g.usize_in(0, 2)];
+                b.push(req(v, s, t + Duration::from_millis(i as u64)));
+            }
+            let mut seen = 0;
+            let late = t + Duration::from_secs(10);
+            while let Some(batch) = b.poll(late) {
+                crate::prop_assert!(batch.requests.len() <= max_batch,
+                                    "batch over max: {}", batch.requests.len());
+                crate::prop_assert!(
+                    batch.requests.iter().all(|r| r.variant == batch.variant && r.seq == batch.seq),
+                    "mixed batch");
+                seen += batch.requests.len();
+            }
+            crate::prop_assert!(seen == n, "lost requests: {seen} != {n}");
+            crate::prop_assert!(b.pending() == 0, "pending nonzero");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_fifo_within_group() {
+        check("batcher fifo", 30, |g: &mut Gen| {
+            let mut b = DynamicBatcher::new(g.usize_in(1, 4), Duration::from_millis(0));
+            let t = Instant::now();
+            let n = g.usize_in(2, 20);
+            for i in 0..n {
+                let mut r = req("v", 8, t + Duration::from_millis(i as u64));
+                r.id = i as u64;
+                b.push(r);
+            }
+            let mut last = 0u64;
+            let mut first = true;
+            while let Some(batch) = b.poll(t + Duration::from_secs(1)) {
+                for r in &batch.requests {
+                    crate::prop_assert!(first || r.id > last, "out of order: {} after {last}", r.id);
+                    last = r.id;
+                    first = false;
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,419 @@
+//! The serving engine: a handle + an executor thread that owns all PJRT
+//! state (handles are not `Send`, so every touch of the runtime happens on
+//! that thread; the handle talks to it over channels).
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::{EngineConfig, Manifest};
+use crate::metrics::Registry;
+use crate::runtime::{LoadedModel, Runtime};
+
+use super::batcher::{Batch, DynamicBatcher};
+use super::request::{Request, RequestId, Response, SubmitError};
+use super::router::{Router, VariantMeta};
+
+enum Command {
+    Submit(Request),
+    Stop,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    pub served: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub queue_full_rejects: u64,
+}
+
+struct Shared {
+    pending: Mutex<BTreeMap<String, usize>>,
+    metrics: Registry,
+    served: AtomicU64,
+    batches: AtomicU64,
+    rejects: AtomicU64,
+}
+
+/// Handle to a running engine.  Cloneable across client threads.
+pub struct Engine {
+    tx: mpsc::Sender<Command>,
+    router: Router,
+    shared: Arc<Shared>,
+    cfg: EngineConfig,
+    next_id: AtomicU64,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl Engine {
+    /// Load `variant_ids` (all their exported shapes unless `shapes`
+    /// filters) and start the executor.  Blocks until loading finished so
+    /// submit() never races a cold model.
+    pub fn start(artifacts: PathBuf, variant_ids: &[String], cfg: EngineConfig,
+                 shapes: Option<Vec<(usize, usize)>>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifacts)?;
+        let mut router = Router::default();
+        for id in variant_ids {
+            let v = manifest.variant(id)?;
+            let mut seqs: Vec<usize> = v
+                .shapes()
+                .into_iter()
+                .filter(|bs| shapes.as_ref().map(|f| f.contains(bs)).unwrap_or(true))
+                .map(|(_, s)| s)
+                .collect();
+            seqs.sort_unstable();
+            seqs.dedup();
+            anyhow::ensure!(!seqs.is_empty(), "{id}: no shapes after filter");
+            router.register(VariantMeta {
+                id: v.id.clone(),
+                model: v.model.clone(),
+                ratio: v.ratio,
+                bytes: v.bytes,
+                seqs,
+            });
+        }
+        let shared = Arc::new(Shared {
+            pending: Mutex::new(BTreeMap::new()),
+            metrics: Registry::default(),
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rejects: AtomicU64::new(0),
+        });
+        let (tx, rx) = mpsc::channel::<Command>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let ids: Vec<String> = variant_ids.to_vec();
+        let shared2 = shared.clone();
+        let cfg2 = cfg.clone();
+        let join = std::thread::Builder::new()
+            .name("dobi-executor".into())
+            .spawn(move || {
+                executor_main(artifacts, ids, cfg2, shapes, rx, ready_tx, shared2);
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor died during load"))??;
+        Ok(Engine {
+            tx,
+            router,
+            shared,
+            cfg,
+            next_id: AtomicU64::new(1),
+            join: Mutex::new(Some(join)),
+        })
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Submit a right-aligned token window; returns the response channel.
+    pub fn submit(&self, variant: &str, tokens: Vec<i32>, image: Option<Vec<f32>>)
+                  -> Result<mpsc::Receiver<Response>, SubmitError> {
+        let meta = self
+            .router
+            .get(variant)
+            .ok_or_else(|| SubmitError::UnknownVariant(variant.to_string()))?;
+        if !meta.seqs.contains(&tokens.len()) {
+            return Err(SubmitError::BadShape { want_seq: meta.seqs.clone(), got: tokens.len() });
+        }
+        {
+            let mut pend = self.shared.pending.lock().unwrap();
+            let e = pend.entry(variant.to_string()).or_insert(0);
+            if *e >= self.cfg.queue_depth {
+                self.shared.rejects.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::QueueFull {
+                    variant: variant.to_string(),
+                    depth: self.cfg.queue_depth,
+                });
+            }
+            *e += 1;
+        }
+        let (rtx, rrx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            variant: variant.to_string(),
+            seq: tokens.len(),
+            tokens,
+            image,
+            enqueued: Instant::now(),
+            respond: rtx,
+        };
+        self.tx.send(Command::Submit(req)).map_err(|_| SubmitError::Stopped)?;
+        Ok(rrx)
+    }
+
+    /// Submit and wait (convenience for tests/examples).
+    pub fn infer(&self, variant: &str, tokens: Vec<i32>, image: Option<Vec<f32>>)
+                 -> Result<Response> {
+        let rx = self.submit(variant, tokens, image).map_err(|e| anyhow!("{e}"))?;
+        rx.recv().map_err(|_| anyhow!("engine dropped request"))
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        let lat = self.shared.metrics.histogram("request_latency").stats();
+        let served = self.shared.served.load(Ordering::Relaxed);
+        let batches = self.shared.batches.load(Ordering::Relaxed);
+        EngineStats {
+            served,
+            batches,
+            mean_batch: if batches > 0 { served as f64 / batches as f64 } else { 0.0 },
+            p50_latency_s: lat.p50,
+            p99_latency_s: lat.p99,
+            queue_full_rejects: self.shared.rejects.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn metrics_text(&self) -> String {
+        self.shared.metrics.render()
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Command::Stop);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Executor thread
+// ---------------------------------------------------------------------------
+
+fn executor_main(artifacts: PathBuf, ids: Vec<String>, cfg: EngineConfig,
+                 shapes: Option<Vec<(usize, usize)>>, rx: mpsc::Receiver<Command>,
+                 ready: mpsc::Sender<Result<()>>, shared: Arc<Shared>) {
+    let load = (|| -> Result<(Manifest, BTreeMap<String, LoadedModel>)> {
+        let manifest = Manifest::load(&artifacts)?;
+        let runtime = Runtime::new()?;
+        let mut models = BTreeMap::new();
+        for id in &ids {
+            let m = runtime.load_variant(&manifest, id, shapes.as_deref())?;
+            models.insert(id.clone(), m);
+        }
+        Ok((manifest, models))
+    })();
+    let models = match load {
+        Ok((_, models)) => {
+            let _ = ready.send(Ok(()));
+            models
+        }
+        Err(e) => {
+            let _ = ready.send(Err(e));
+            return;
+        }
+    };
+
+    let mut batcher = DynamicBatcher::new(cfg.max_batch, Duration::from_micros(cfg.batch_deadline_us));
+    let exec_hist = shared.metrics.histogram("execute_seconds");
+    let lat_hist = shared.metrics.histogram("request_latency");
+    loop {
+        let wait = batcher
+            .next_deadline_in(Instant::now())
+            .unwrap_or(Duration::from_millis(50))
+            .max(Duration::from_micros(50));
+        match rx.recv_timeout(wait) {
+            Ok(Command::Submit(req)) => batcher.push(req),
+            Ok(Command::Stop) => break,
+            Err(mpsc::RecvTimeoutError::Timeout) => {}
+            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+        // Drain any further queued commands without blocking.
+        loop {
+            match rx.try_recv() {
+                Ok(Command::Submit(req)) => batcher.push(req),
+                Ok(Command::Stop) => {
+                    run_remaining(&mut batcher, &models, &shared, &exec_hist, &lat_hist);
+                    return;
+                }
+                Err(_) => break,
+            }
+        }
+        while let Some(batch) = batcher.poll(Instant::now()) {
+            run_batch(batch, &models, &shared, &exec_hist, &lat_hist);
+        }
+    }
+    run_remaining(&mut batcher, &models, &shared, &exec_hist, &lat_hist);
+}
+
+fn run_remaining(batcher: &mut DynamicBatcher, models: &BTreeMap<String, LoadedModel>,
+                 shared: &Shared, exec_hist: &crate::metrics::Histogram,
+                 lat_hist: &crate::metrics::Histogram) {
+    for batch in batcher.drain_all() {
+        run_batch(batch, models, shared, exec_hist, lat_hist);
+    }
+}
+
+/// Plan how to split `n` pending requests across the exported batch dims:
+/// returns (exec_batch, take) chunks.  `avail` must be sorted ascending.
+/// Greedy: fill the largest shape while more than it remains, then the
+/// smallest shape that covers the tail (minimizes padded rows).
+pub fn plan_chunks(n: usize, avail: &[usize]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let Some(&bmax) = avail.last() else { return out };
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(bmax);
+        let b = avail.iter().copied().find(|&x| x >= take).unwrap_or(bmax);
+        out.push((b, take));
+        left -= take;
+    }
+    out
+}
+
+fn run_batch(batch: Batch, models: &BTreeMap<String, LoadedModel>, shared: &Shared,
+             exec_hist: &crate::metrics::Histogram, lat_hist: &crate::metrics::Histogram) {
+    let model = match models.get(&batch.variant) {
+        Some(m) => m,
+        None => return, // validated at submit; unreachable in practice
+    };
+    let seq = batch.seq;
+    let mut avail: Vec<usize> = model
+        .shapes()
+        .into_iter()
+        .filter(|&(_, s)| s == seq)
+        .map(|(b, _)| b)
+        .collect();
+    avail.sort_unstable();
+    let mut reqs = batch.requests;
+    for (b, take) in plan_chunks(reqs.len(), &avail) {
+        let chunk: Vec<Request> = reqs.drain(..take).collect();
+        execute_chunk(model, b, seq, chunk, shared, exec_hist, lat_hist);
+    }
+}
+
+fn execute_chunk(model: &LoadedModel, b: usize, seq: usize, chunk: Vec<Request>,
+                 shared: &Shared, exec_hist: &crate::metrics::Histogram,
+                 lat_hist: &crate::metrics::Histogram) {
+    let n = chunk.len();
+    let vocab = model.vocab;
+    let mut tokens = vec![0i32; b * seq];
+    for (r, req) in chunk.iter().enumerate() {
+        tokens[r * seq..(r + 1) * seq].copy_from_slice(&req.tokens);
+    }
+    // Pad rows replicate row 0 (harmless: outputs discarded).
+    for r in n..b {
+        let (head, tail) = tokens.split_at_mut(r * seq);
+        tail[..seq].copy_from_slice(&head[..seq]);
+    }
+    let image = if model.img_dim > 0 {
+        let mut img = vec![0f32; b * model.img_dim];
+        for (r, req) in chunk.iter().enumerate() {
+            if let Some(iv) = &req.image {
+                img[r * model.img_dim..(r + 1) * model.img_dim].copy_from_slice(iv);
+            }
+        }
+        Some(img)
+    } else {
+        None
+    };
+    let t0 = Instant::now();
+    let out = model.forward(b, seq, &tokens, image.as_deref());
+    let exec_s = t0.elapsed();
+    exec_hist.observe(exec_s);
+    shared.batches.fetch_add(1, Ordering::Relaxed);
+    match out {
+        Ok(vals) => {
+            for (r, req) in chunk.into_iter().enumerate() {
+                let output = if model.action_head {
+                    vals[r * 5..(r + 1) * 5].to_vec()
+                } else {
+                    // last-position logits of row r
+                    let base = (r * seq + seq - 1) * vocab;
+                    vals[base..base + vocab].to_vec()
+                };
+                finish(req, output, n, t0, shared, lat_hist);
+            }
+        }
+        Err(e) => {
+            eprintln!("[engine] execute failed: {e:#}");
+            for req in chunk {
+                finish(req, Vec::new(), n, t0, shared, lat_hist);
+            }
+        }
+    }
+}
+
+fn finish(req: Request, output: Vec<f32>, batch_size: usize, exec_start: Instant,
+          shared: &Shared, lat_hist: &crate::metrics::Histogram) {
+    let total = req.enqueued.elapsed();
+    lat_hist.observe(total);
+    shared.served.fetch_add(1, Ordering::Relaxed);
+    {
+        let mut pend = shared.pending.lock().unwrap();
+        if let Some(e) = pend.get_mut(&req.variant) {
+            *e = e.saturating_sub(1);
+        }
+    }
+    let resp = Response {
+        id: req.id,
+        output,
+        queue_s: exec_start.duration_since(req.enqueued).as_secs_f64(),
+        total_s: total.as_secs_f64(),
+        batch_size,
+    };
+    let _ = req.respond.send(resp);
+}
+
+pub type ResponseReceiver = mpsc::Receiver<Response>;
+pub type RequestIdT = RequestId;
+
+#[cfg(test)]
+mod tests {
+    use super::plan_chunks;
+    use crate::proptest::{check, Gen};
+
+    #[test]
+    fn plan_exact_fit() {
+        assert_eq!(plan_chunks(4, &[1, 4, 16]), vec![(4, 4)]);
+        assert_eq!(plan_chunks(1, &[1, 4, 16]), vec![(1, 1)]);
+    }
+
+    #[test]
+    fn plan_splits_overflow() {
+        assert_eq!(plan_chunks(20, &[1, 4, 16]), vec![(16, 16), (4, 4)]);
+        assert_eq!(plan_chunks(17, &[1, 4, 16]), vec![(16, 16), (1, 1)]);
+    }
+
+    #[test]
+    fn plan_pads_up_when_between_shapes() {
+        assert_eq!(plan_chunks(3, &[1, 4, 16]), vec![(4, 3)]);
+        assert_eq!(plan_chunks(5, &[4]), vec![(4, 4), (4, 1)]);
+    }
+
+    #[test]
+    fn plan_empty_avail() {
+        assert!(plan_chunks(3, &[]).is_empty());
+    }
+
+    #[test]
+    fn prop_plan_covers_all_without_overflow() {
+        check("plan_chunks conservation", 100, |g: &mut Gen| {
+            let n = g.usize_in(0, 100);
+            let mut avail: Vec<usize> = (0..g.usize_in(1, 4))
+                .map(|_| [1usize, 2, 4, 8, 16][g.usize_in(0, 5)])
+                .collect();
+            avail.sort_unstable();
+            avail.dedup();
+            let plan = plan_chunks(n, &avail);
+            let total: usize = plan.iter().map(|&(_, t)| t).sum();
+            crate::prop_assert!(total == n, "covered {total} of {n}");
+            for &(b, t) in &plan {
+                crate::prop_assert!(t <= b, "take {t} > batch {b}");
+                crate::prop_assert!(avail.contains(&b), "batch {b} not exported");
+            }
+            Ok(())
+        });
+    }
+}

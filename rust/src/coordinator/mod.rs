@@ -1,0 +1,29 @@
+//! L3 coordinator: request router + dynamic batcher + executor engine.
+//!
+//! Architecture (single-device CPU PJRT; the shape generalizes to one
+//! executor per device):
+//!
+//! ```text
+//!  clients ──submit()──► Router ──► per-(variant,seq) queues
+//!                                        │
+//!                               DynamicBatcher (size/deadline)
+//!                                        │ Batch
+//!                               executor thread (owns Runtime:
+//!                               PJRT handles are not Send)
+//!                                        │ logits
+//!                               respond via per-request channel
+//! ```
+//!
+//! Backpressure: bounded queues — `submit` fails fast with `QueueFull`
+//! when a variant's queue is at depth, which is what an upstream load
+//! balancer needs to see.
+
+pub mod batcher;
+pub mod engine;
+pub mod request;
+pub mod router;
+
+pub use batcher::{Batch, DynamicBatcher};
+pub use engine::{Engine, EngineStats};
+pub use request::{Request, RequestId, Response, SubmitError};
+pub use router::Router;

@@ -1,0 +1,69 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc;
+use std::time::Instant;
+
+pub type RequestId = u64;
+
+/// One inference request: a right-aligned token window of length `seq`
+/// (the tokenizer's `encode_window`), optional image features, and the
+/// channel the engine answers on.
+#[derive(Debug)]
+pub struct Request {
+    pub id: RequestId,
+    pub variant: String,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub image: Option<Vec<f32>>,
+    pub enqueued: Instant,
+    pub respond: mpsc::Sender<Response>,
+}
+
+/// Engine answer: the last-position logits (next-token distribution) or
+/// the VLA action vector, plus latency accounting.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: RequestId,
+    pub output: Vec<f32>,
+    pub queue_s: f64,
+    pub total_s: f64,
+    pub batch_size: usize,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    QueueFull { variant: String, depth: usize },
+    UnknownVariant(String),
+    BadShape { want_seq: Vec<usize>, got: usize },
+    Stopped,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { variant, depth } => {
+                write!(f, "queue for `{variant}` full at depth {depth}")
+            }
+            SubmitError::UnknownVariant(v) => write!(f, "unknown variant `{v}`"),
+            SubmitError::BadShape { want_seq, got } => {
+                write!(f, "no exported shape for seq {got} (have {want_seq:?})")
+            }
+            SubmitError::Stopped => write!(f, "engine stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn submit_error_display() {
+        let e = SubmitError::QueueFull { variant: "x".into(), depth: 4 };
+        assert!(e.to_string().contains("full"));
+        let e2 = SubmitError::BadShape { want_seq: vec![32, 64], got: 100 };
+        assert!(e2.to_string().contains("100"));
+    }
+}

@@ -1,0 +1,134 @@
+//! Request router: picks the serving variant for a request.
+//!
+//! Policies the paper's deployment story needs:
+//! * explicit   — client names the variant (benchmarks, ablations).
+//! * by-ratio   — client asks for a compression ratio; the router picks
+//!                the closest loaded variant of the requested model.
+//! * by-memory  — given a device budget (the Titan-Xp scenario), route to
+//!                the best-quality variant that fits: highest ratio whose
+//!                stored bytes <= budget.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub id: String,
+    pub model: String,
+    pub ratio: f64,
+    pub bytes: usize,
+    pub seqs: Vec<usize>,
+}
+
+#[derive(Debug, Default)]
+pub struct Router {
+    variants: BTreeMap<String, VariantMeta>,
+}
+
+impl Router {
+    pub fn register(&mut self, meta: VariantMeta) {
+        self.variants.insert(meta.id.clone(), meta);
+    }
+
+    pub fn known(&self, id: &str) -> bool {
+        self.variants.contains_key(id)
+    }
+
+    pub fn get(&self, id: &str) -> Option<&VariantMeta> {
+        self.variants.get(id)
+    }
+
+    pub fn ids(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Closest loaded ratio for `model` (ties -> higher ratio wins: prefer
+    /// quality when equidistant).
+    pub fn by_ratio(&self, model: &str, want: f64) -> Option<&VariantMeta> {
+        self.variants
+            .values()
+            .filter(|v| v.model == model)
+            .min_by(|a, b| {
+                let da = (a.ratio - want).abs();
+                let db = (b.ratio - want).abs();
+                if (da - db).abs() < 1e-9 {
+                    // equidistant -> prefer the higher-quality variant
+                    b.ratio.partial_cmp(&a.ratio).unwrap()
+                } else {
+                    da.partial_cmp(&db).unwrap()
+                }
+            })
+    }
+
+    /// Best-quality variant of `model` fitting `budget` bytes.
+    pub fn by_memory(&self, model: &str, budget: usize) -> Option<&VariantMeta> {
+        self.variants
+            .values()
+            .filter(|v| v.model == model && v.bytes <= budget)
+            .max_by(|a, b| a.ratio.partial_cmp(&b.ratio).unwrap())
+    }
+
+    /// Seq length to use for a prompt of `len` tokens: the smallest
+    /// exported seq >= len, else the largest available (window slides).
+    pub fn pick_seq(&self, id: &str, len: usize) -> Option<usize> {
+        let mut seqs = self.variants.get(id)?.seqs.clone();
+        seqs.sort_unstable();
+        seqs.iter().copied().find(|&s| s >= len).or(seqs.last().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn router() -> Router {
+        let mut r = Router::default();
+        for (id, ratio, bytes) in [
+            ("m/dense", 1.0, 1000usize),
+            ("m/dobi_80", 0.8, 800),
+            ("m/dobi_60", 0.6, 600),
+            ("m/dobi_40", 0.4, 400),
+        ] {
+            r.register(VariantMeta {
+                id: id.into(),
+                model: "m".into(),
+                ratio,
+                bytes,
+                seqs: vec![32, 64],
+            });
+        }
+        r
+    }
+
+    #[test]
+    fn by_ratio_closest() {
+        let r = router();
+        assert_eq!(r.by_ratio("m", 0.65).unwrap().id, "m/dobi_60");
+        assert_eq!(r.by_ratio("m", 1.0).unwrap().id, "m/dense");
+        assert_eq!(r.by_ratio("m", 0.0).unwrap().id, "m/dobi_40");
+        assert!(r.by_ratio("other", 0.5).is_none());
+    }
+
+    #[test]
+    fn by_ratio_tie_prefers_quality() {
+        let r = router();
+        // 0.7 is equidistant from 0.6 and 0.8 -> prefer 0.8
+        assert_eq!(r.by_ratio("m", 0.7).unwrap().id, "m/dobi_80");
+    }
+
+    #[test]
+    fn by_memory_best_fitting() {
+        let r = router();
+        assert_eq!(r.by_memory("m", 650).unwrap().id, "m/dobi_60");
+        assert_eq!(r.by_memory("m", 5000).unwrap().id, "m/dense");
+        assert!(r.by_memory("m", 100).is_none());
+    }
+
+    #[test]
+    fn pick_seq_smallest_fitting() {
+        let r = router();
+        assert_eq!(r.pick_seq("m/dense", 10), Some(32));
+        assert_eq!(r.pick_seq("m/dense", 40), Some(64));
+        assert_eq!(r.pick_seq("m/dense", 200), Some(64)); // slide window
+        assert_eq!(r.pick_seq("nope", 10), None);
+    }
+}

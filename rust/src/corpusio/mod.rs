@@ -1,0 +1,272 @@
+//! Readers for the python-produced corpus / task artifacts
+//! (`*.tokbin`, `tasks.json`, `vqa.json`, `vla.json`).
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::json::{self, Json};
+
+pub const TOKBIN_MAGIC: &[u8; 6] = b"DOBT1\x00";
+
+/// CRC-32 (IEEE 802.3, zlib-compatible) — the checksum the python writer
+/// uses; implemented here to stay dependency-free.
+pub fn crc32(data: &[u8]) -> u32 {
+    // table generated on first use
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = 0xFFFFFFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFFFFFF
+}
+
+/// Read a token stream: magic + u32 count + u16[count] LE + u32 crc.
+pub fn read_tokbin(path: &Path) -> Result<Vec<i32>> {
+    let raw = std::fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+    if raw.len() < 14 || &raw[..6] != TOKBIN_MAGIC {
+        bail!("{}: bad tokbin magic", path.display());
+    }
+    let n = u32::from_le_bytes(raw[6..10].try_into().unwrap()) as usize;
+    let body_end = 10 + 2 * n;
+    if raw.len() < body_end + 4 {
+        bail!("{}: truncated tokbin", path.display());
+    }
+    let body = &raw[10..body_end];
+    let want = u32::from_le_bytes(raw[body_end..body_end + 4].try_into().unwrap());
+    if crc32(body) != want {
+        bail!("{}: tokbin crc mismatch", path.display());
+    }
+    Ok(body
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]) as i32)
+        .collect())
+}
+
+// ---------------------------------------------------------------------------
+// Task suites (zero-shot multiple choice)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub prompt: String,
+    pub options: Vec<String>,
+    pub answer: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct TaskSuite {
+    pub name: String,
+    pub tasks: Vec<Task>,
+}
+
+pub fn read_suites(path: &Path) -> Result<Vec<TaskSuite>> {
+    let doc = json::load(path)?;
+    let suites = doc
+        .get("suites")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tasks.json: missing `suites`"))?;
+    suites.iter().map(parse_suite).collect()
+}
+
+fn parse_suite(j: &Json) -> Result<TaskSuite> {
+    let name = j.str_of("name").to_string();
+    let tasks = j
+        .get("tasks")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("suite {name}: missing tasks"))?
+        .iter()
+        .map(|t| {
+            let options: Vec<String> = t
+                .get("options")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|o| o.as_str().map(String::from)).collect())
+                .unwrap_or_default();
+            let answer = t.usize_of("answer");
+            anyhow::ensure!(answer < options.len(), "answer index out of range");
+            Ok(Task { prompt: t.str_of("prompt").to_string(), options, answer })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(TaskSuite { name, tasks })
+}
+
+// ---------------------------------------------------------------------------
+// Multimodal eval sets
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct VqaSample {
+    pub image: Vec<f32>,
+    pub question: String,
+    pub options: Vec<String>,
+    pub answer: usize,
+}
+
+pub fn read_vqa(path: &Path) -> Result<(usize, Vec<VqaSample>)> {
+    let doc = json::load(path)?;
+    let img_dim = doc.usize_of("img_dim");
+    let samples = doc
+        .get("samples")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("vqa.json: missing samples"))?
+        .iter()
+        .map(|s| {
+            let image: Vec<f32> = s
+                .get("image")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_f64().map(|f| f as f32)).collect())
+                .unwrap_or_default();
+            anyhow::ensure!(image.len() == img_dim, "image dim mismatch");
+            Ok(VqaSample {
+                image,
+                question: s.str_of("question").to_string(),
+                options: s
+                    .get("options")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(|o| o.as_str().map(String::from)).collect())
+                    .unwrap_or_default(),
+                answer: s.usize_of("answer"),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((img_dim, samples))
+}
+
+#[derive(Debug, Clone)]
+pub struct VlaSample {
+    pub image: Vec<f32>,
+    pub instruction: String,
+    pub coords: [f32; 3],
+    pub angle: f32,
+    pub gripper: i32,
+}
+
+pub fn read_vla(path: &Path) -> Result<(usize, Vec<VlaSample>)> {
+    let doc = json::load(path)?;
+    let img_dim = doc.usize_of("img_dim");
+    let samples = doc
+        .get("samples")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("vla.json: missing samples"))?
+        .iter()
+        .map(|s| {
+            let image: Vec<f32> = s
+                .get("image")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_f64().map(|f| f as f32)).collect())
+                .unwrap_or_default();
+            let cv: Vec<f32> = s
+                .get("coords")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(|x| x.as_f64().map(|f| f as f32)).collect())
+                .unwrap_or_default();
+            anyhow::ensure!(cv.len() == 3, "coords must be length 3");
+            Ok(VlaSample {
+                image,
+                instruction: s.str_of("instruction").to_string(),
+                coords: [cv[0], cv[1], cv[2]],
+                angle: s.f64_of("angle") as f32,
+                gripper: s.f64_of("gripper") as i32,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok((img_dim, samples))
+}
+
+/// Deterministic eval windows: the python side wrote `n * batch * seq`
+/// tokens flat; reshape to (n, batch*seq) blocks in order.
+pub fn eval_windows(tokens: &[i32], n: usize, batch: usize, seq: usize) -> Result<Vec<Vec<i32>>> {
+    let need = n * batch * seq;
+    anyhow::ensure!(tokens.len() >= need,
+                    "eval window stream too short: {} < {need}", tokens.len());
+    Ok((0..n).map(|i| tokens[i * batch * seq..(i + 1) * batch * seq].to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // zlib reference values
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b"hello"), 0x3610A686);
+    }
+
+    #[test]
+    fn tokbin_roundtrip(){
+        let dir = std::env::temp_dir().join("dobi_test_tokbin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.tokbin");
+        let toks: Vec<u16> = (0..300u16).map(|i| i % 256).collect();
+        let mut raw = Vec::new();
+        raw.extend_from_slice(TOKBIN_MAGIC);
+        raw.extend_from_slice(&(toks.len() as u32).to_le_bytes());
+        let body: Vec<u8> = toks.iter().flat_map(|t| t.to_le_bytes()).collect();
+        raw.extend_from_slice(&body);
+        raw.extend_from_slice(&crc32(&body).to_le_bytes());
+        std::fs::write(&p, &raw).unwrap();
+        let got = read_tokbin(&p).unwrap();
+        assert_eq!(got.len(), 300);
+        assert_eq!(got[257], 1);
+    }
+
+    #[test]
+    fn tokbin_rejects_corruption() {
+        let dir = std::env::temp_dir().join("dobi_test_tokbin2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.tokbin");
+        let mut raw = Vec::new();
+        raw.extend_from_slice(TOKBIN_MAGIC);
+        raw.extend_from_slice(&2u32.to_le_bytes());
+        raw.extend_from_slice(&[1, 0, 2, 0]);
+        raw.extend_from_slice(&crc32(&[1, 0, 2, 0]).to_le_bytes());
+        let mut bad = raw.clone();
+        bad[11] ^= 0xFF;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(read_tokbin(&p).is_err());
+    }
+
+    #[test]
+    fn suites_parse() {
+        let dir = std::env::temp_dir().join("dobi_test_suites");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tasks.json");
+        std::fs::write(&p, r#"{"suites":[{"name":"s","tasks":[
+            {"prompt":"p","options":["a","b"],"answer":1}]}]}"#).unwrap();
+        let s = read_suites(&p).unwrap();
+        assert_eq!(s[0].name, "s");
+        assert_eq!(s[0].tasks[0].answer, 1);
+    }
+
+    #[test]
+    fn suites_reject_bad_answer() {
+        let dir = std::env::temp_dir().join("dobi_test_suites2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tasks.json");
+        std::fs::write(&p, r#"{"suites":[{"name":"s","tasks":[
+            {"prompt":"p","options":["a"],"answer":3}]}]}"#).unwrap();
+        assert!(read_suites(&p).is_err());
+    }
+
+    #[test]
+    fn eval_windows_shapes() {
+        let toks: Vec<i32> = (0..24).collect();
+        let w = eval_windows(&toks, 2, 3, 4).unwrap();
+        assert_eq!(w.len(), 2);
+        assert_eq!(w[0], (0..12).collect::<Vec<i32>>());
+        assert!(eval_windows(&toks, 3, 3, 4).is_err());
+    }
+}

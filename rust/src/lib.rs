@@ -1,0 +1,35 @@
+//! # dobi — Dobi-SVD compression + serving stack
+//!
+//! Rust coordinator (L3) for the Dobi-SVD reproduction: loads AOT-compiled
+//! HLO artifacts produced by the python/JAX/Pallas compile path (L2/L1) and
+//! serves them through the PJRT CPU client — python is never on the
+//! request path.
+//!
+//! Module map (see DESIGN.md §2):
+//! * substrates: [`json`], [`cli`], [`mathx`], [`tokenizer`], [`corpusio`],
+//!   [`quant`], [`storage`], [`config`], [`metrics`], [`bench`], [`proptest`]
+//! * runtime:    [`runtime`] (PJRT wrapper, model registry)
+//! * coordinator:[`coordinator`] (router, dynamic batcher, workers)
+//! * evaluation: [`evalx`] (perplexity, task accuracy, generation)
+//! * deployment: [`memsim`] (capacity-limited device model), [`server`]
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod corpusio;
+pub mod evalx;
+pub mod json;
+pub mod mathx;
+pub mod memsim;
+pub mod metrics;
+pub mod perf;
+pub mod proptest;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod storage;
+pub mod tokenizer;
+
+/// Canonical artifacts directory (overridable everywhere via `--artifacts`).
+pub const DEFAULT_ARTIFACTS: &str = "artifacts";

@@ -1,0 +1,358 @@
+//! `dobi` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   inspect   — list artifacts: variants, sizes, ranks, ref PPLs
+//!   eval      — perplexity + task accuracy for one variant
+//!   generate  — sample text from a variant
+//!   serve     — TCP line-protocol server over the engine
+//!   memsim    — Table-10-style constrained-device projection
+//!   parity    — pallas-kernel vs xla-graph numerical parity check
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use dobi::cli::Args;
+use dobi::config::{EngineConfig, Manifest};
+use dobi::coordinator::Engine;
+use dobi::corpusio;
+use dobi::evalx;
+use dobi::memsim::DeviceModel;
+use dobi::runtime::Runtime;
+use dobi::server::Server;
+
+fn main() {
+    let args = Args::from_env(&["verbose", "all", "tasks"]);
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", dobi::DEFAULT_ARTIFACTS))
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("inspect") => inspect(args),
+        Some("eval") => eval(args),
+        Some("generate") => generate(args),
+        Some("serve") => serve(args),
+        Some("memsim") => memsim_cmd(args),
+        Some("parity") => parity(args),
+        Some("debug-fwd") => debug_fwd(args),
+        Some("debug-probe") => debug_probe(args),
+        Some("kernel-report") => kernel_report(args),
+        other => {
+            eprintln!(
+                "dobi — Dobi-SVD compression + serving stack\n\
+                 usage: dobi <inspect|eval|generate|serve|memsim|parity> [--artifacts DIR] ...\n\
+                 \n\
+                 inspect                      list variants and storage accounting\n\
+                 eval --variant ID [--tasks]  PPL on all corpora (+ task suites)\n\
+                 generate --variant ID --prompt TEXT [--tokens N] [--temperature T]\n\
+                 serve --variants A,B --port P\n\
+                 memsim --model NAME [--capacity-mb M] [--bandwidth-mbs B]\n\
+                 parity                       pallas vs xla HLO numerics"
+            );
+            if other.is_some() {
+                Err(anyhow!("unknown subcommand {other:?}"))
+            } else {
+                Ok(())
+            }
+        }
+    }
+}
+
+fn inspect(args: &Args) -> Result<()> {
+    let m = Manifest::load(&artifacts_dir(args))?;
+    println!("profile: {}  models: {}  variants: {}", m.profile, m.models.len(),
+             m.variants.len());
+    for (name, info) in &m.models {
+        println!("model {name}: d={} L={} H={} ff={} params={}", info.d_model,
+                 info.n_layers, info.n_heads, info.d_ff, info.total_params);
+    }
+    let mut t = dobi::bench::Table::new(
+        "variants",
+        &["id", "method", "ratio", "kind", "stored", "MB", "shapes", "ppl(wiki)"],
+    );
+    for v in &m.variants {
+        t.row(vec![
+            v.id.clone(),
+            v.method.clone(),
+            format!("{:.1}", v.ratio),
+            v.kind.clone(),
+            format!("{}", v.stored_params),
+            format!("{:.2}", v.bytes as f64 / 1e6),
+            format!("{}", v.hlo.len()),
+            v.ref_ppl
+                .get("wiki-syn")
+                .map(|p| format!("{p:.2}"))
+                .unwrap_or_else(|| "-".into()),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn eval(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)?;
+    let id = args.get("variant").ok_or_else(|| anyhow!("--variant required"))?;
+    let rt = Runtime::new()?;
+    let shapes = [(m.eval_batch, m.eval_seq)];
+    let model = rt.load_variant(&m, id, Some(&shapes))?;
+    println!("loaded {id}: {} weights bytes, compile {:.2}s",
+             model.stats.weight_bytes, model.stats.compile_s);
+    for corpus in m.corpora.keys() {
+        let ppl = evalx::perplexity(&model, &m, corpus)?;
+        let reference = m.variant(id)?.ref_ppl.get(corpus).copied();
+        match reference {
+            Some(r) if r.is_finite() => {
+                println!("{corpus}: ppl {ppl:.3} (python ref {r:.3}, diff {:+.2}%)",
+                         100.0 * (ppl - r) / r)
+            }
+            _ => println!("{corpus}: ppl {ppl:.3}"),
+        }
+    }
+    if args.has("tasks") {
+        let suites = corpusio::read_suites(&m.path(m.suites_file.as_deref().unwrap()))?;
+        for suite in &suites {
+            let r = evalx::run_suite(&model, suite, m.eval_batch, m.eval_seq, usize::MAX)?;
+            println!("{}: acc {:.3} (n={})", r.name, r.accuracy, r.n);
+        }
+    }
+    Ok(())
+}
+
+fn generate(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)?;
+    let id = args.get("variant").ok_or_else(|| anyhow!("--variant required"))?;
+    let prompt = args.get_or("prompt", "The ");
+    let n = args.usize_or("tokens", 64);
+    let temp = args.f64_or("temperature", 0.7) as f32;
+    let rt = Runtime::new()?;
+    let v = m.variant(id)?;
+    let (b, s) = v
+        .shapes()
+        .into_iter()
+        .min_by_key(|&(b, _)| b)
+        .ok_or_else(|| anyhow!("no shapes"))?;
+    let model = rt.load_variant(&m, id, Some(&[(b, s)]))?;
+    let t0 = std::time::Instant::now();
+    let text = evalx::generate(&model, b, s, prompt, n, temp, args.usize_or("seed", 7) as u64)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{prompt}{text}");
+    println!("\n[{n} tokens in {dt:.2}s = {:.1} tok/s]", n as f64 / dt);
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let ids: Vec<String> = args
+        .get("variants")
+        .ok_or_else(|| anyhow!("--variants A,B required"))?
+        .split(',')
+        .map(String::from)
+        .collect();
+    let cfg = EngineConfig {
+        max_batch: args.usize_or("max-batch", 4),
+        batch_deadline_us: args.usize_or("deadline-us", 2000) as u64,
+        queue_depth: args.usize_or("queue-depth", 256),
+        workers: 1,
+    };
+    let engine = Arc::new(Engine::start(dir, &ids, cfg, None)?);
+    let port = args.usize_or("port", 7433) as u16;
+    let server = Server::start(engine.clone(), port)?;
+    println!("serving {} on {} (ctrl-c to stop)", ids.join(", "), server.addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let s = engine.stats();
+        println!("served={} batches={} mean_batch={:.2} p50={:.1}ms p99={:.1}ms rejects={}",
+                 s.served, s.batches, s.mean_batch, s.p50_latency_s * 1e3,
+                 s.p99_latency_s * 1e3, s.queue_full_rejects);
+    }
+}
+
+fn memsim_cmd(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)?;
+    let model_name = args.get_or("model", "llama-nano");
+    let device = DeviceModel {
+        name: "custom".into(),
+        capacity: (args.f64_or("capacity-mb", 6.0) * 1e6) as usize,
+        bandwidth: args.f64_or("bandwidth-mbs", 64.0) * 1e6,
+    };
+    let rt = Runtime::new()?;
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let mut t = dobi::bench::Table::new(
+        &format!("memsim on {} (cap {:.1} MB)", device.name, device.capacity as f64 / 1e6),
+        &["variant", "MB", "resident", "tok/s", "speedup"],
+    );
+    let mut base_tps = None;
+    for v in m.variants_for_model(model_name) {
+        if !(v.method == "dense" || v.method == "dobi") || v.kernel == "pallas" {
+            continue;
+        }
+        if v.hlo_for(b, s).is_none() {
+            continue;
+        }
+        let model = rt.load_variant(&m, &v.id, Some(&[(b, s)]))?;
+        let tokens = vec![1i32; b * s];
+        let r = dobi::bench::bench("fwd", 1, 5, || {
+            model.forward(b, s, &tokens, None).unwrap();
+        });
+        let sim = device.tokens_per_s(v.bytes, r.stats.mean, b * s);
+        if v.method == "dense" {
+            base_tps = Some(sim.tokens_per_s);
+        }
+        let speedup = base_tps.map(|bt| sim.tokens_per_s / bt).unwrap_or(1.0);
+        t.row(vec![
+            v.id.clone(),
+            format!("{:.2}", v.bytes as f64 / 1e6),
+            format!("{}", sim.resident),
+            format!("{:.1}", sim.tokens_per_s),
+            format!("{speedup:.2}x"),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn debug_fwd(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)?;
+    let id = args.get_or("variant", "llama-nano/dense");
+    let rt = Runtime::new()?;
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let model = rt.load_variant(&m, id, Some(&[(b, s)]))?;
+    let tokens: Vec<i32> = (0..(b * s) as i32).map(|i| i % 251).collect();
+    let logits = model.forward(b, s, &tokens, None)?;
+    let base = (0 * s + s - 1) * model.vocab;
+    println!("rust logits[0,{},:6]: {:?}", s - 1, &logits[base..base + 6]);
+    let info = m.corpora.get("wiki-syn").unwrap();
+    let toks = corpusio::read_tokbin(&m.path(&info.eval_windows))?;
+    let w0 = &toks[..b * s];
+    let lg = model.forward(b, s, w0, None)?;
+    let ce = dobi::mathx::lm_cross_entropy(&lg, w0, b, s, model.vocab);
+    println!("rust CE window0: {ce} ppl: {}", (ce as f64).exp());
+    Ok(())
+}
+
+/// L1 structural perf report: VMEM/MXU/roofline estimates for every
+/// compressed matrix of a variant (EXPERIMENTS.md §Perf L1).
+fn kernel_report(args: &Args) -> Result<()> {
+    use dobi::perf::{estimate_factorized, estimate_gemm, speedup_estimate, DEFAULT_TILING};
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)?;
+    let id = args.get_or("variant", "llama-nano/dobi_60");
+    let v = m.variant(id)?;
+    let info = &m.models[&v.model];
+    let rows = m.eval_batch * m.eval_seq;
+    let mut t = dobi::bench::Table::new(
+        &format!("L1 kernel roofline — {id} (rows={rows}, tiling 128^3)"),
+        &["matrix", "m x n", "k", "VMEM KB", "MXU util", "AI f/B", "bound", "est speedup"],
+    );
+    let dims: Vec<(&str, usize, usize)> = vec![
+        ("wq/wk/wv/wo", info.d_model, info.d_model),
+        ("w_gate/w_up", info.d_model, info.d_ff),
+        ("w_down", info.d_ff, info.d_model),
+    ];
+    for (name, mm, nn) in dims {
+        // representative rank: mean over this matrix kind's trained ranks
+        let kind_key = name.split('/').next().unwrap();
+        let matching: Vec<usize> = v
+            .ranks
+            .iter()
+            .filter(|(rk, _)| rk.ends_with(kind_key))
+            .map(|(_, &k)| k)
+            .collect();
+        let k = if matching.is_empty() {
+            mm.min(nn) // dense variant: full rank
+        } else {
+            (matching.iter().sum::<usize>() / matching.len()).max(8)
+        };
+        let (g1, g2) = estimate_factorized(rows, mm, nn, k, DEFAULT_TILING, 4);
+        let dense = estimate_gemm(rows, mm, nn, DEFAULT_TILING, 4);
+        t.row(vec![
+            name.into(),
+            format!("{mm}x{nn}"),
+            format!("{k}"),
+            format!("{:.0}", g1.vmem_bytes.max(g2.vmem_bytes) as f64 / 1024.0),
+            format!("{:.2}", (g1.mxu_utilization + g2.mxu_utilization) / 2.0),
+            format!("{:.1}", g1.arithmetic_intensity.min(g2.arithmetic_intensity)),
+            if g1.compute_bound && g2.compute_bound { "compute" } else { "memory" }.into(),
+            format!("{:.2}x vs dense ({})",
+                    speedup_estimate(rows, mm, nn, k, DEFAULT_TILING),
+                    if dense.compute_bound { "compute" } else { "memory" }),
+        ]);
+    }
+    t.print();
+    println!("note: interpret-mode wallclock is not a TPU proxy; these are the\n\
+              structural estimates recorded in EXPERIMENTS.md §Perf (L1).");
+    Ok(())
+}
+
+fn debug_probe(args: &Args) -> Result<()> {
+    use dobi::runtime::{f32_literal, i32_literal};
+    use dobi::storage::Store;
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)?;
+    let v = m.variant(args.get_or("variant", "llama-nano/dense"))?;
+    let rt = Runtime::new()?;
+    let exe = rt.compile_hlo(std::path::Path::new(args.get_or("hlo", "/tmp/probe.hlo.txt")))?;
+    let store = Store::open(&m.path(&v.weights))?;
+    let tokens: Vec<i32> = (0..256).map(|i| i % 251).collect();
+    let mut lits = vec![i32_literal(&tokens, &[4, 64])?];
+    for name in &v.param_names {
+        let (vals, shape) = store.tensor_f32(name)?;
+        lits.push(f32_literal(&vals, &shape)?);
+    }
+    let out = exe.execute::<xla::Literal>(&lits).map_err(|e| anyhow!("{e:?}"))?;
+    let lit = out[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+    let vals = lit.to_tuple1().map_err(|e| anyhow!("{e:?}"))?
+        .to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+    println!("rust probe[:8]: {:?}", &vals[..8.min(vals.len())]);
+    println!("rust probe[-3:]: {:?}", &vals[vals.len().saturating_sub(3)..]);
+    Ok(())
+}
+
+fn parity(args: &Args) -> Result<()> {
+    let dir = artifacts_dir(args);
+    let m = Manifest::load(&dir)?;
+    let rt = Runtime::new()?;
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let pairs: Vec<(String, String)> = m
+        .variants
+        .iter()
+        .filter(|v| v.kernel == "pallas")
+        .filter_map(|vp| {
+            let base = vp.id.replace("-pallas", "");
+            m.variants.iter().find(|v| v.id == base).map(|vb| (vp.id.clone(), vb.id.clone()))
+        })
+        .collect();
+    anyhow::ensure!(!pairs.is_empty(), "no pallas variants in manifest");
+    for (pid, bid) in pairs {
+        let mp = rt.load_variant(&m, &pid, Some(&[(b, s)]))?;
+        let mb = rt.load_variant(&m, &bid, Some(&[(b, s)]))?;
+        let tokens: Vec<i32> = (0..b * s).map(|i| (i % 251) as i32).collect();
+        let lp = mp.forward(b, s, &tokens, None)?;
+        let lb = mb.forward(b, s, &tokens, None)?;
+        let max_abs = lp
+            .iter()
+            .zip(&lb)
+            .map(|(a, c)| (a - c).abs())
+            .fold(0f32, f32::max);
+        println!("{pid} vs {bid}: max |Δlogit| = {max_abs:.5}");
+        anyhow::ensure!(max_abs < 0.05, "pallas/xla parity broken: {max_abs}");
+    }
+    println!("parity OK");
+    Ok(())
+}

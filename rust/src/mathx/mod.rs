@@ -1,0 +1,275 @@
+//! Numeric substrate: stable softmax/logsumexp/NLL over logits, summary
+//! statistics, and a deterministic xorshift RNG (no rand crate offline).
+
+/// Numerically stable log-sum-exp over a slice.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    let m = xs.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// In-place softmax.
+pub fn softmax(xs: &mut [f32]) {
+    let lse = logsumexp(xs);
+    for x in xs.iter_mut() {
+        *x = (*x - lse).exp();
+    }
+}
+
+/// Negative log-likelihood of `target` under `logits` (one position).
+pub fn nll(logits: &[f32], target: usize) -> f32 {
+    logsumexp(logits) - logits[target]
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Mean next-token cross-entropy over a (B, S, V) logits block and (B, S)
+/// targets — identical definition to python's `lm_loss` so PPLs match.
+pub fn lm_cross_entropy(logits: &[f32], tokens: &[i32], b: usize, s: usize, v: usize) -> f32 {
+    assert_eq!(logits.len(), b * s * v, "logits size mismatch");
+    assert_eq!(tokens.len(), b * s, "tokens size mismatch");
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for bi in 0..b {
+        for si in 0..s.saturating_sub(1) {
+            let row = &logits[(bi * s + si) * v..(bi * s + si + 1) * v];
+            let tgt = tokens[bi * s + si + 1] as usize;
+            total += nll(row, tgt) as f64;
+            count += 1;
+        }
+    }
+    (total / count.max(1) as f64) as f32
+}
+
+/// Length-normalized NLL of a continuation span `[start, end)` within one
+/// sequence of a (B,S,V) block — the lm-eval-harness option score.
+pub fn span_nll(logits: &[f32], tokens: &[i32], s: usize, v: usize, bi: usize,
+                start: usize, end: usize) -> f32 {
+    let mut total = 0.0f32;
+    let mut n = 0usize;
+    for si in start.max(1)..end {
+        let row = &logits[(bi * s + si - 1) * v..(bi * s + si) * v];
+        total += nll(row, tokens[bi * s + si] as usize);
+        n += 1;
+    }
+    if n == 0 {
+        f32::INFINITY
+    } else {
+        total / n as f32
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Statistics
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub min: f64,
+    pub max: f64,
+    pub std: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Summary statistics of a sample (used by the bench harness and metrics).
+pub fn summarize(xs: &[f64]) -> Stats {
+    if xs.is_empty() {
+        return Stats::default();
+    }
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len();
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let q = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+    Stats {
+        n,
+        mean,
+        min: sorted[0],
+        max: sorted[n - 1],
+        std: var.sqrt(),
+        p50: q(0.5),
+        p95: q(0.95),
+        p99: q(0.99),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deterministic RNG (xorshift64*)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct XorShift {
+    state: u64,
+}
+
+impl XorShift {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n.max(1) as u64) as usize
+    }
+
+    /// Uniform f64 in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Sample an index from unnormalized positive weights.
+    pub fn weighted(&mut self, ws: &[f64]) -> usize {
+        let total: f64 = ws.iter().sum();
+        let mut r = self.f64() * total;
+        for (i, w) in ws.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        ws.len() - 1
+    }
+}
+
+/// Temperature sampling from logits (temperature 0 = greedy).
+pub fn sample_logits(logits: &[f32], temperature: f32, rng: &mut XorShift) -> usize {
+    if temperature <= 0.0 {
+        return argmax(logits);
+    }
+    let mut probs: Vec<f32> = logits.iter().map(|&x| x / temperature).collect();
+    softmax(&mut probs);
+    let ws: Vec<f64> = probs.iter().map(|&p| p as f64).collect();
+    rng.weighted(&ws)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logsumexp_stable() {
+        let xs = [1000.0f32, 1000.0, 1000.0];
+        let lse = logsumexp(&xs);
+        assert!((lse - (1000.0 + 3.0f32.ln())).abs() < 1e-3);
+        assert!(logsumexp(&[f32::NEG_INFINITY, 0.0]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one() {
+        let mut xs = vec![0.5f32, -1.0, 3.0, 0.0];
+        softmax(&mut xs);
+        let s: f32 = xs.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(xs.iter().all(|&p| p >= 0.0));
+    }
+
+    #[test]
+    fn nll_uniform_is_log_v() {
+        let logits = vec![0.0f32; 256];
+        assert!((nll(&logits, 7) - (256f32).ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn lm_ce_matches_manual() {
+        // B=1, S=3, V=2; logits prefer token 0 everywhere
+        let logits = vec![2.0, 0.0, 2.0, 0.0, 2.0, 0.0];
+        let tokens = vec![0, 0, 1];
+        let ce = lm_cross_entropy(&logits, &tokens, 1, 3, 2);
+        let p0 = nll(&[2.0, 0.0], 0);
+        let p1 = nll(&[2.0, 0.0], 1);
+        assert!((ce - (p0 + p1) / 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn span_nll_basic() {
+        let logits = vec![0.0f32; 4 * 3]; // S=4, V=3, B=1
+        let tokens = vec![0, 1, 2, 0];
+        let x = span_nll(&logits, &tokens, 4, 3, 0, 2, 4);
+        assert!((x - (3f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.p50 - 50.0).abs() <= 1.0);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert!(s.p99 >= 98.0);
+    }
+
+    #[test]
+    fn rng_deterministic_and_spread() {
+        let mut a = XorShift::new(42);
+        let mut b = XorShift::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut counts = [0usize; 10];
+        for _ in 0..10_000 {
+            counts[a.below(10)] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 700 && c < 1300));
+    }
+
+    #[test]
+    fn rng_normal_moments() {
+        let mut r = XorShift::new(7);
+        let xs: Vec<f64> = (0..20_000).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / xs.len() as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut r = XorShift::new(1);
+        assert_eq!(sample_logits(&[0.1, 5.0, 0.3], 0.0, &mut r), 1);
+    }
+
+    #[test]
+    fn weighted_sampling_biased() {
+        let mut r = XorShift::new(2);
+        let mut hits = 0;
+        for _ in 0..1000 {
+            if r.weighted(&[0.9, 0.1]) == 0 {
+                hits += 1;
+            }
+        }
+        assert!(hits > 800);
+    }
+}

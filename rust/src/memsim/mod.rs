@@ -1,0 +1,122 @@
+//! Capacity-constrained device simulator — the Table 10 substrate.
+//!
+//! The paper's 12.4x Titan-Xp speedup has one mechanism: the dense fp16
+//! LLaMA-7B (~14.8 GB) does not fit 12 GB, so every forward pages weights
+//! over PCIe, while the Dobi-compressed model is fully resident.  We model
+//! exactly that: a device with `capacity` bytes and `bandwidth` host->device
+//! bytes/s; any non-resident weight bytes are re-streamed once per forward
+//! pass (weights are consumed layer by layer, so an LRU of size `capacity`
+//! misses every non-resident byte every pass).  Compute time comes from
+//! *measured* executions on the real runtime; only the transfer is modeled.
+//!
+//! Scaled device presets mirror the paper's hardware grid at nano scale.
+
+#[derive(Debug, Clone)]
+pub struct DeviceModel {
+    pub name: String,
+    /// Usable weight memory (after framework workspace), bytes.
+    pub capacity: usize,
+    /// Effective host->device bandwidth, bytes/s.
+    pub bandwidth: f64,
+}
+
+impl DeviceModel {
+    /// "titan-nano": fits the compressed nano models (<= 3 MB remapped)
+    /// but not the dense fp16 one (3.64 MB) — the paper's 12 GB vs
+    /// 14.8 GB situation scaled to our substrate.  Host-link bandwidth is
+    /// scaled so paging dominates the pass time the way PCIe paging of
+    /// 2.8 GB dominated the paper's Titan Xp runs (their 2.09 tok/s).
+    pub fn titan_nano() -> DeviceModel {
+        DeviceModel { name: "titan-nano-3.2MB".into(), capacity: 3_200_000, bandwidth: 4e6 }
+    }
+
+    /// "a100-nano": everything fits; speedups come from FLOPs alone.
+    pub fn a100_nano() -> DeviceModel {
+        DeviceModel { name: "a100-nano-64MB".into(), capacity: 64 << 20, bandwidth: 2e9 }
+    }
+
+    pub fn fits(&self, model_bytes: usize) -> bool {
+        model_bytes <= self.capacity
+    }
+
+    /// Bytes that must be streamed from host per forward pass.
+    pub fn paged_bytes_per_pass(&self, model_bytes: usize) -> usize {
+        model_bytes.saturating_sub(self.capacity)
+    }
+
+    /// Seconds added to one forward pass by paging.
+    pub fn paging_seconds(&self, model_bytes: usize) -> f64 {
+        self.paged_bytes_per_pass(model_bytes) as f64 / self.bandwidth
+    }
+
+    /// End-to-end tokens/s on this device given the measured on-device
+    /// compute seconds per pass and tokens produced per pass.
+    pub fn tokens_per_s(&self, model_bytes: usize, compute_s_per_pass: f64,
+                        tokens_per_pass: usize) -> SimResult {
+        let paging = self.paging_seconds(model_bytes);
+        let total = compute_s_per_pass + paging;
+        SimResult {
+            resident: self.fits(model_bytes),
+            paged_bytes: self.paged_bytes_per_pass(model_bytes),
+            compute_s: compute_s_per_pass,
+            paging_s: paging,
+            tokens_per_s: tokens_per_pass as f64 / total,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    pub resident: bool,
+    pub paged_bytes: usize,
+    pub compute_s: f64,
+    pub paging_s: f64,
+    pub tokens_per_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resident_model_no_paging() {
+        let d = DeviceModel::titan_nano();
+        let r = d.tokens_per_s(1 << 20, 0.01, 32);
+        assert!(r.resident);
+        assert_eq!(r.paged_bytes, 0);
+        assert!((r.tokens_per_s - 3200.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn oversized_model_pays_bandwidth() {
+        let d = DeviceModel { name: "t".into(), capacity: 1000, bandwidth: 1000.0 };
+        let r = d.tokens_per_s(3000, 0.0, 10);
+        assert!(!r.resident);
+        assert_eq!(r.paged_bytes, 2000);
+        assert!((r.paging_s - 2.0).abs() < 1e-9);
+        assert!((r.tokens_per_s - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn speedup_shape_matches_paper() {
+        // dense doesn't fit, compressed does -> order-of-magnitude speedup
+        // even when the compressed model computes at the same rate.
+        let d = DeviceModel::titan_nano();
+        let dense = d.tokens_per_s(3_640_000, 0.013, 256); // fp16 dense > cap
+        let dobi = d.tokens_per_s(2_200_000, 0.013, 256);  // remapped fits
+        assert!(!dense.resident && dobi.resident);
+        let speedup = dobi.tokens_per_s / dense.tokens_per_s;
+        assert!(speedup > 5.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn monotone_in_model_size() {
+        let d = DeviceModel::titan_nano();
+        let mut last = f64::INFINITY;
+        for kb in [2_000usize, 3_000, 3_500, 5_000, 9_000] {
+            let r = d.tokens_per_s(kb * 1000, 0.002, 32);
+            assert!(r.tokens_per_s <= last + 1e-9);
+            last = r.tokens_per_s;
+        }
+    }
+}

@@ -1,0 +1,174 @@
+//! Serving metrics substrate: counters, gauges, latency histograms with
+//! streaming percentiles — shared by the coordinator and the bench harness.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::mathx::{summarize, Stats};
+
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Latency histogram: fixed log-spaced buckets (1us .. ~100s) plus a
+/// bounded reservoir of raw samples for exact percentiles in reports.
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    bounds_us: Vec<u64>,
+    samples: Mutex<Vec<f64>>, // seconds; capped reservoir
+    cap: usize,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new(4096)
+    }
+}
+
+impl Histogram {
+    pub fn new(cap: usize) -> Self {
+        let mut bounds_us = Vec::new();
+        let mut b = 1u64;
+        while b < 100_000_000 {
+            bounds_us.push(b);
+            b = (b as f64 * 1.6).ceil() as u64;
+        }
+        let buckets = (0..=bounds_us.len()).map(|_| AtomicU64::new(0)).collect();
+        Histogram { buckets, bounds_us, samples: Mutex::new(Vec::new()), cap }
+    }
+
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self.bounds_us.partition_point(|&b| b < us);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < self.cap {
+            s.push(d.as_secs_f64());
+        } else {
+            // reservoir: overwrite pseudo-randomly for long runs
+            let i = (us as usize * 2654435761) % self.cap;
+            s[i] = d.as_secs_f64();
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn stats(&self) -> Stats {
+        summarize(&self.samples.lock().unwrap())
+    }
+}
+
+/// Named registry the engine exposes (`dobi serve --metrics` dump).
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| std::sync::Arc::new(Histogram::default()))
+            .clone()
+    }
+
+    /// Plain-text dump (name value / name p50 p95 p99).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {}\n", c.get()));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            let s = h.stats();
+            out.push_str(&format!(
+                "{k} count={} mean={:.6}s p50={:.6}s p95={:.6}s p99={:.6}s\n",
+                h.count(), s.mean, s.p50, s.p95, s.p99
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = std::sync::Arc::new(Counter::default());
+        let mut hs = Vec::new();
+        for _ in 0..4 {
+            let c2 = c.clone();
+            hs.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    c2.inc();
+                }
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        assert_eq!(c.get(), 4000);
+    }
+
+    #[test]
+    fn histogram_percentiles() {
+        let h = Histogram::default();
+        for i in 1..=100 {
+            h.observe(Duration::from_millis(i));
+        }
+        let s = h.stats();
+        assert_eq!(h.count(), 100);
+        assert!((s.p50 - 0.05).abs() < 0.01);
+        assert!(s.p99 >= 0.09);
+    }
+
+    #[test]
+    fn registry_same_instance() {
+        let r = Registry::default();
+        r.counter("a").inc();
+        r.counter("a").inc();
+        assert_eq!(r.counter("a").get(), 2);
+        let text = r.render();
+        assert!(text.contains("a 2"));
+    }
+
+    #[test]
+    fn histogram_reservoir_bounded() {
+        let h = Histogram::new(16);
+        for i in 0..1000 {
+            h.observe(Duration::from_micros(i));
+        }
+        assert!(h.samples.lock().unwrap().len() <= 16);
+        assert_eq!(h.count(), 1000);
+    }
+}

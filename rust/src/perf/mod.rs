@@ -1,0 +1,142 @@
+//! L1 structural performance model — the TPU-side roofline estimates for
+//! EXPERIMENTS.md §Perf.  Interpret-mode Pallas gives CPU-numpy timings
+//! only, so kernel quality is assessed structurally: VMEM residency per
+//! program, MXU-issued vs useful FLOPs (padding waste), and arithmetic
+//! intensity against a TPUv4-class roofline.  Mirrors the python-side
+//! estimators in `kernels/matmul.py` (cross-checked by tests).
+
+/// One GEMM tiling choice.
+#[derive(Debug, Clone, Copy)]
+pub struct Tiling {
+    pub bm: usize,
+    pub bn: usize,
+    pub bk: usize,
+}
+
+pub const DEFAULT_TILING: Tiling = Tiling { bm: 128, bn: 128, bk: 128 };
+
+/// TPUv4-ish per-core budgets used for the ratio estimates.
+pub const VMEM_BYTES: usize = 16 << 20;           // ~16 MiB VMEM
+pub const MXU_FLOPS: f64 = 137.5e12 / 2.0;        // bf16 MXU, one core: ~68 TFLOP/s
+pub const HBM_BW: f64 = 600e9;                    // ~600 GB/s usable
+
+#[derive(Debug, Clone)]
+pub struct GemmEstimate {
+    pub m: usize,
+    pub n: usize,
+    pub k: usize,
+    pub vmem_bytes: usize,
+    pub mxu_utilization: f64,     // useful / issued FLOPs (padding waste)
+    pub arithmetic_intensity: f64, // FLOPs per HBM byte
+    pub compute_bound: bool,
+    pub est_seconds: f64,
+}
+
+fn ceil_to(x: usize, b: usize) -> usize {
+    x.div_ceil(b) * b
+}
+
+/// Structural estimate of one (m,k)@(k,n) GEMM under `t`.
+pub fn estimate_gemm(m: usize, k: usize, n: usize, t: Tiling, dtype_bytes: usize) -> GemmEstimate {
+    let bm = t.bm.min(ceil_to(m, 8));
+    let bn = t.bn.min(ceil_to(n, 8));
+    let bk = t.bk.min(ceil_to(k, 8));
+    let vmem = (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4;
+    let (mp, np_, kp) = (ceil_to(m, bm), ceil_to(n, bn), ceil_to(k, bk));
+    let useful = 2.0 * (m * n * k) as f64;
+    let issued = 2.0 * (mp * np_ * kp) as f64;
+    // bytes: stream x and w once per K-pass of each output tile; the
+    // accumulator stays resident.  Output written once.
+    let passes_over_x = (np_ / bn) as f64;
+    let passes_over_w = (mp / bm) as f64;
+    let bytes = (m * k) as f64 * dtype_bytes as f64 * passes_over_x
+        + (k * n) as f64 * dtype_bytes as f64 * passes_over_w
+        + (m * n) as f64 * dtype_bytes as f64;
+    let ai = useful / bytes;
+    let t_compute = issued / MXU_FLOPS;
+    let t_mem = bytes / HBM_BW;
+    GemmEstimate {
+        m,
+        n,
+        k,
+        vmem_bytes: vmem,
+        mxu_utilization: useful / issued,
+        arithmetic_intensity: ai,
+        compute_bound: t_compute >= t_mem,
+        est_seconds: t_compute.max(t_mem),
+    }
+}
+
+/// Factorized apply = two GEMMs sharing the rank-k intermediate.
+pub fn estimate_factorized(rows: usize, m: usize, n: usize, k: usize, t: Tiling,
+                           dtype_bytes: usize) -> (GemmEstimate, GemmEstimate) {
+    (estimate_gemm(rows, m, k, t, dtype_bytes), estimate_gemm(rows, k, n, t, dtype_bytes))
+}
+
+/// Paper-style efficiency ratio: achieved/roofline for the compressed
+/// layer vs the dense layer at the same tiling (the translate-the-ratio
+/// target of the PERF section — absolute TFLOPs are hardware-bound).
+pub fn speedup_estimate(rows: usize, m: usize, n: usize, k: usize, t: Tiling) -> f64 {
+    let dense = estimate_gemm(rows, m, n, t, 4);
+    let (a, b) = estimate_factorized(rows, m, n, k, t, 4);
+    dense.est_seconds / (a.est_seconds + b.est_seconds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vmem_within_budget_for_default_tiling() {
+        let e = estimate_gemm(256, 192, 192, DEFAULT_TILING, 4);
+        assert!(e.vmem_bytes < VMEM_BYTES);
+    }
+
+    #[test]
+    fn utilization_perfect_on_aligned_shapes() {
+        let e = estimate_gemm(256, 128, 256, DEFAULT_TILING, 4);
+        assert!((e.mxu_utilization - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utilization_degrades_with_padding() {
+        let aligned = estimate_gemm(128, 128, 128, DEFAULT_TILING, 4);
+        let ragged = estimate_gemm(130, 130, 130, DEFAULT_TILING, 4);
+        assert!(ragged.mxu_utilization < aligned.mxu_utilization);
+        // 130 -> 256x256x136 padding keeps only ~25% useful
+        assert!(ragged.mxu_utilization > 0.1);
+    }
+
+    #[test]
+    fn small_rank_is_memory_bound() {
+        // rank-16 factor GEMM: tiny arithmetic intensity
+        let e = estimate_gemm(256, 192, 16, DEFAULT_TILING, 4);
+        assert!(!e.compute_bound);
+        // Under the single-level streaming model, compute-boundedness needs
+        // tiles large enough to amortize operand re-streaming.
+        let big = estimate_gemm(4096, 4096, 4096, Tiling { bm: 512, bn: 512, bk: 512 }, 4);
+        assert!(big.compute_bound);
+    }
+
+    #[test]
+    fn factorized_speedup_positive_below_half_rank() {
+        // k << mn/(m+n): factorized must beat dense structurally
+        let s = speedup_estimate(256, 192, 192, 48, DEFAULT_TILING);
+        assert!(s > 1.0, "speedup {s}");
+        // and near-full rank it must NOT (more work than dense)
+        let s2 = speedup_estimate(256, 192, 192, 192, DEFAULT_TILING);
+        assert!(s2 < 1.0, "speedup {s2}");
+    }
+
+    #[test]
+    fn matches_python_mxu_estimator() {
+        // python: mxu_utilization_estimate(192,192,24,128,128,128)
+        let e = estimate_gemm(192, 24, 192, DEFAULT_TILING, 4);
+        // python pads each dim to block multiples the same way
+        let want = (192.0 * 192.0 * 24.0)
+            / ((192f64 / 128.0).ceil() * 128.0
+                * (192f64 / 128.0).ceil() * 128.0
+                * (24f64 / 24.0).ceil() * 24.0);
+        assert!((e.mxu_utilization - want).abs() < 0.05, "{} vs {want}", e.mxu_utilization);
+    }
+}

@@ -1,0 +1,194 @@
+//! Quantization substrate: f16 codec + int8/int4 absmax (de)quantization.
+//!
+//! Mirrors `python/compile/dobi/remap.py` so the `.dobiw` reader can
+//! reconstruct factors bit-identically to the python reference, and the
+//! memsim/storage accounting can price each precision.
+
+/// Convert one IEEE 754 half (as u16) to f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h >> 15) & 1) as u32;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign << 31 // signed zero
+        } else {
+            // subnormal: normalize
+            let mut e = 127 - 15 + 1;
+            let mut f = frac;
+            while f & 0x400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            (sign << 31) | ((e as u32) << 23) | ((f & 0x3FF) << 13)
+        }
+    } else if exp == 0x1F {
+        (sign << 31) | (0xFF << 23) | (frac << 13) // inf / nan
+    } else {
+        (sign << 31) | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert f32 to IEEE 754 half (round-to-nearest-even), saturating.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 31) & 1) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x7FFFFF;
+    if exp == 0xFF {
+        // inf / nan
+        return (sign << 15) | 0x7C00 | if frac != 0 { 0x200 } else { 0 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return (sign << 15) | 0x7C00; // overflow -> inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign << 15; // underflow -> zero
+        }
+        // subnormal
+        let f = (frac | 0x800000) >> (1 - e + 13);
+        return (sign << 15) | f as u16;
+    }
+    let mut h = (sign << 15) | ((e as u16) << 10) | ((frac >> 13) as u16);
+    // round to nearest even
+    let round_bits = frac & 0x1FFF;
+    if round_bits > 0x1000 || (round_bits == 0x1000 && (h & 1) == 1) {
+        h = h.wrapping_add(1);
+    }
+    h
+}
+
+pub fn f16_slice_to_f32(halves: &[u16]) -> Vec<f32> {
+    halves.iter().map(|&h| f16_to_f32(h)).collect()
+}
+
+/// Dequantize int8 codes with broadcastable scales.
+/// `q` is row-major (rows, cols); scales shape is (1, cols) or (rows, 1)
+/// exactly as the python writer emits.
+pub fn dequantize_i8(q: &[i8], rows: usize, cols: usize, scales: &[f32],
+                     scales_shape: (usize, usize)) -> Vec<f32> {
+    assert_eq!(q.len(), rows * cols, "code count mismatch");
+    let mut out = vec![0f32; rows * cols];
+    match scales_shape {
+        (1, c) => {
+            assert_eq!(c, cols, "per-column scales mismatch");
+            for r in 0..rows {
+                for cidx in 0..cols {
+                    out[r * cols + cidx] = q[r * cols + cidx] as f32 * scales[cidx];
+                }
+            }
+        }
+        (r, 1) => {
+            assert_eq!(r, rows, "per-row scales mismatch");
+            for ridx in 0..rows {
+                let s = scales[ridx];
+                for cidx in 0..cols {
+                    out[ridx * cols + cidx] = q[ridx * cols + cidx] as f32 * s;
+                }
+            }
+        }
+        other => panic!("unsupported scales shape {other:?}"),
+    }
+    out
+}
+
+/// Symmetric absmax quantization along columns (axis 0): returns
+/// (codes, per-column scales).  Matches `remap.quantize_absmax(axis=0)`.
+pub fn quantize_i8_cols(w: &[f32], rows: usize, cols: usize, bits: u32) -> (Vec<i8>, Vec<f32>) {
+    assert_eq!(w.len(), rows * cols);
+    let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+    let mut scales = vec![0f32; cols];
+    for c in 0..cols {
+        let mut m = 0f32;
+        for r in 0..rows {
+            m = m.max(w[r * cols + c].abs());
+        }
+        scales[c] = if m == 0.0 { 1.0 / qmax } else { m / qmax };
+    }
+    let mut q = vec![0i8; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = (w[r * cols + c] / scales[c]).round().clamp(-qmax, qmax);
+            q[r * cols + c] = v as i8;
+        }
+    }
+    (q, scales)
+}
+
+/// Bytes needed to store a tensor at the given precision (packed).
+pub fn storage_bytes(n_elems: usize, bits: u32) -> usize {
+    (n_elems * bits as usize + 7) / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_known_values() {
+        assert_eq!(f16_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_to_f32(0xC000), -2.0);
+        assert_eq!(f16_to_f32(0x0000), 0.0);
+        assert_eq!(f16_to_f32(0x7C00), f32::INFINITY);
+        assert!((f16_to_f32(0x3555) - 0.333252).abs() < 1e-5);
+    }
+
+    #[test]
+    fn f16_roundtrip_exactish() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 65504.0, 6.1e-5, 3.14159, -0.007] {
+            let back = f16_to_f32(f32_to_f16(x));
+            let tol = (x.abs() * 1e-3).max(1e-7);
+            assert!((back - x).abs() <= tol, "{x} -> {back}");
+        }
+    }
+
+    #[test]
+    fn f16_subnormals() {
+        let x = 1e-6f32;
+        let back = f16_to_f32(f32_to_f16(x));
+        assert!((back - x).abs() < 1e-6);
+        assert!(back > 0.0);
+    }
+
+    #[test]
+    fn f16_saturates() {
+        assert_eq!(f16_to_f32(f32_to_f16(1e10)), f32::INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn quant_dequant_roundtrip_cols() {
+        let w: Vec<f32> = (0..12).map(|i| (i as f32 - 6.0) * 0.1).collect();
+        let (q, s) = quantize_i8_cols(&w, 3, 4, 8);
+        let back = dequantize_i8(&q, 3, 4, &s, (1, 4));
+        for (a, b) in w.iter().zip(&back) {
+            assert!((a - b).abs() <= s.iter().cloned().fold(0f32, f32::max) / 2.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn dequant_row_scales() {
+        let q = vec![1i8, 2, 3, 4];
+        let out = dequantize_i8(&q, 2, 2, &[0.5, 2.0], (2, 1));
+        assert_eq!(out, vec![0.5, 1.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn zero_column_safe() {
+        let w = vec![0f32; 6];
+        let (q, s) = quantize_i8_cols(&w, 3, 2, 8);
+        assert!(q.iter().all(|&x| x == 0));
+        assert!(s.iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn storage_bytes_packed() {
+        assert_eq!(storage_bytes(100, 8), 100);
+        assert_eq!(storage_bytes(100, 4), 50);
+        assert_eq!(storage_bytes(101, 4), 51);
+        assert_eq!(storage_bytes(10, 16), 20);
+    }
+}

@@ -1,0 +1,259 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, uploads weights once, and
+//! executes forwards from the serve path.
+//!
+//! Loading pipeline per variant (see DESIGN.md §4):
+//!   manifest -> `.dobiw` store -> dequantized f32 host tensors ->
+//!   device buffers (uploaded once) -> `HloModuleProto::from_text_file`
+//!   -> `XlaComputation` -> `client.compile` per exported (B, S) shape.
+//!
+//! Per-request work is then ONE token-literal upload + `execute_b` over
+//! the resident weight buffers — no weight marshalling on the hot path.
+//! PJRT handles are not `Send`; the coordinator confines a `Runtime` to
+//! its executor thread (see `coordinator::engine`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{Manifest, Variant};
+use crate::storage::Store;
+
+/// Anything that can run a forward pass.  The evaluation harness and the
+/// coordinator are generic over this so their logic is unit-testable with
+/// mock models (no PJRT) while production uses [`LoadedModel`].
+pub trait ForwardModel {
+    /// Execute the (b, s) forward.  `tokens` is row-major (b, s); `image`
+    /// must be Some((b, img_dim) flat) iff `img_dim() > 0`.
+    fn forward(&self, b: usize, s: usize, tokens: &[i32],
+               image: Option<&[f32]>) -> Result<Vec<f32>>;
+    fn vocab(&self) -> usize;
+    fn img_dim(&self) -> usize;
+    fn action_head(&self) -> bool;
+}
+
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load a variant: weights uploaded, every exported shape compiled
+    /// (or only `shapes` if given — compilation is the slow part).
+    pub fn load_variant(&self, manifest: &Manifest, id: &str,
+                        shapes: Option<&[(usize, usize)]>) -> Result<LoadedModel> {
+        let v = manifest.variant(id)?.clone();
+        let minfo = manifest
+            .models
+            .get(&v.model)
+            .ok_or_else(|| anyhow!("model `{}` missing from manifest", v.model))?;
+        let t0 = Instant::now();
+        let store = Store::open(&manifest.path(&v.weights))?;
+        let mut weights = Vec::with_capacity(v.param_names.len());
+        let mut weight_lits = Vec::with_capacity(v.param_names.len());
+        let mut weight_bytes = 0usize;
+        for name in &v.param_names {
+            let (vals, shape) = store
+                .tensor_f32(name)
+                .with_context(|| format!("loading weight `{name}` for {id}"))?;
+            weight_bytes += vals.len() * 4;
+            let lit = f32_literal(&vals, &shape)?;
+            let buf = self
+                .client
+                .buffer_from_host_literal(None, &lit)
+                .map_err(|e| anyhow!("uploading `{name}`: {e:?}"))?;
+            // PJRT's host->device transfer is asynchronous: the source
+            // literal MUST outlive the copy.  Keep it for the model's
+            // lifetime (host RAM is cheap; dropping early is a UAF).
+            weight_lits.push(lit);
+            weights.push(buf);
+        }
+        let load_weights_s = t0.elapsed().as_secs_f64();
+
+        let mut exes = BTreeMap::new();
+        let mut compile_s = 0.0;
+        for (key, file) in &v.hlo {
+            if let Some(filter) = shapes {
+                let ok = crate::config::parse_shape_key(key)
+                    .map(|bs| filter.contains(&bs))
+                    .unwrap_or(false);
+                if !ok {
+                    continue;
+                }
+            }
+            let tc = Instant::now();
+            let exe = self.compile_hlo(&manifest.path(file))?;
+            compile_s += tc.elapsed().as_secs_f64();
+            exes.insert(key.clone(), exe);
+        }
+        anyhow::ensure!(!exes.is_empty(), "{id}: no executable compiled (shape filter?)");
+        Ok(LoadedModel {
+            variant: v,
+            vocab: minfo.vocab,
+            img_dim: minfo.img_dim,
+            action_head: minfo.action_head,
+            weights,
+            _weight_lits: weight_lits,
+            exes,
+            stats: LoadStats {
+                weight_bytes,
+                file_bytes: store.file_bytes,
+                payload_bytes: store.payload_bytes(),
+                load_weights_s,
+                compile_s,
+            },
+        })
+    }
+
+    pub fn compile_hlo(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+}
+
+pub fn f32_literal(vals: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, &bytes)
+        .map_err(|e| anyhow!("f32 literal: {e:?}"))
+}
+
+pub fn i32_literal(vals: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, &bytes)
+        .map_err(|e| anyhow!("i32 literal: {e:?}"))
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LoadStats {
+    pub weight_bytes: usize,   // f32-resident bytes on device
+    pub file_bytes: usize,     // .dobiw on disk
+    pub payload_bytes: usize,  // stored tensor payloads (quantized size)
+    pub load_weights_s: f64,
+    pub compile_s: f64,
+}
+
+/// A fully-resident model variant: weights on device + one executable per
+/// exported (batch, seq) shape.
+pub struct LoadedModel {
+    pub variant: Variant,
+    pub vocab: usize,
+    pub img_dim: usize,
+    pub action_head: bool,
+    weights: Vec<xla::PjRtBuffer>,
+    /// Host copies backing `weights` — PJRT uploads are async and borrow
+    /// the literal storage; see `load_variant`.
+    _weight_lits: Vec<xla::Literal>,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub stats: LoadStats,
+}
+
+impl LoadedModel {
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        self.exes.keys().filter_map(|k| crate::config::parse_shape_key(k)).collect()
+    }
+
+    pub fn has_shape(&self, b: usize, s: usize) -> bool {
+        self.exes.contains_key(&format!("{b}x{s}"))
+    }
+
+    /// Output element count per call for shape (b, s): logits b*s*vocab
+    /// for LMs, b*5 actions for the VLA head.
+    pub fn out_elems(&self, b: usize, s: usize) -> usize {
+        if self.action_head {
+            b * 5
+        } else {
+            b * s * self.vocab
+        }
+    }
+
+    /// Execute the (b, s) forward.  `tokens` is row-major (b, s);
+    /// `image` must be Some((b, img_dim) flat) for multimodal variants.
+    pub fn forward(&self, b: usize, s: usize, tokens: &[i32],
+                   image: Option<&[f32]>) -> Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == b * s, "tokens len {} != {b}x{s}", tokens.len());
+        let exe = self
+            .exes
+            .get(&format!("{b}x{s}"))
+            .ok_or_else(|| anyhow!("{}: shape {b}x{s} not compiled", self.variant.id))?;
+        let tok_lit = i32_literal(tokens, &[b, s])?;
+        let out = if self.img_dim > 0 {
+            // Multimodal path: xla_extension 0.5.1's buffer-args execute
+            // aborts on (tokens, image) input sets (see EXPERIMENTS.md
+            // known issues); the literal-args path is correct, at the cost
+            // of restaging weights per call.  Weight literals are already
+            // host-resident for the async-upload lifetime rule.
+            let img = image.ok_or_else(|| anyhow!("{}: image input required", self.variant.id))?;
+            anyhow::ensure!(img.len() == b * self.img_dim, "image len mismatch");
+            let img_lit = f32_literal(img, &[b, self.img_dim])?;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(2 + self._weight_lits.len());
+            args.push(&tok_lit);
+            args.push(&img_lit);
+            for w in &self._weight_lits {
+                args.push(w);
+            }
+            exe.execute::<&xla::Literal>(&args)
+                .map_err(|e| anyhow!("execute(mm) {}@{b}x{s}: {e:?}", self.variant.id))?
+        } else {
+            anyhow::ensure!(image.is_none(), "{}: unexpected image input", self.variant.id);
+            let client = self.first_weight_client()?;
+            let tok_buf = client
+                .buffer_from_host_literal(None, &tok_lit)
+                .map_err(|e| anyhow!("uploading tokens: {e:?}"))?;
+            let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + self.weights.len());
+            args.push(&tok_buf);
+            for w in &self.weights {
+                args.push(w);
+            }
+            exe.execute_b(&args)
+                .map_err(|e| anyhow!("execute {}@{b}x{s}: {e:?}", self.variant.id))?
+        };
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True -> 1-tuple.
+        let inner = lit.to_tuple1().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        let vals = inner.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        anyhow::ensure!(vals.len() == self.out_elems(b, s),
+                        "output len {} != expected {}", vals.len(), self.out_elems(b, s));
+        Ok(vals)
+    }
+
+    fn first_weight_client(&self) -> Result<&xla::PjRtClient> {
+        self.weights
+            .first()
+            .map(|w| w.client())
+            .ok_or_else(|| anyhow!("variant has no weights"))
+    }
+}
+
+impl ForwardModel for LoadedModel {
+    fn forward(&self, b: usize, s: usize, tokens: &[i32],
+               image: Option<&[f32]>) -> Result<Vec<f32>> {
+        LoadedModel::forward(self, b, s, tokens, image)
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn img_dim(&self) -> usize {
+        self.img_dim
+    }
+
+    fn action_head(&self) -> bool {
+        self.action_head
+    }
+}

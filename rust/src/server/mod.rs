@@ -1,0 +1,159 @@
+//! TCP line-protocol serving front-end over the engine.
+//!
+//! Protocol (one JSON object per line):
+//!   -> {"variant": "llama-nano/dobi_60", "prompt": "text", "max_tokens": 32,
+//!       "temperature": 0.0}
+//!   <- {"id": 1, "text": "...", "latency_s": 0.01, "tokens_per_s": 123.4}
+//!
+//! Generation runs a sliding-window loop over engine.submit(), so every
+//! generated token flows through the router/batcher like any other
+//! request — concurrent clients batch together naturally.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::Engine;
+use crate::json::Json;
+use crate::mathx::{sample_logits, XorShift};
+use crate::tokenizer::ByteTokenizer;
+
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and serve on a background thread.  `port` 0 picks a free port.
+    pub fn start(engine: Arc<Engine>, port: u16) -> Result<Server> {
+        let listener = TcpListener::bind(("127.0.0.1", port))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::Builder::new().name("dobi-server".into()).spawn(move || {
+            let mut clients: Vec<std::thread::JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let eng = engine.clone();
+                        let stop3 = stop2.clone();
+                        // Read timeout so handlers can observe shutdown even
+                        // when a client keeps an idle connection open.
+                        let _ = stream.set_read_timeout(
+                            Some(std::time::Duration::from_millis(200)));
+                        clients.push(std::thread::spawn(move || {
+                            let _ = handle_client(stream, eng, stop3);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for c in clients {
+                let _ = c.join();
+            }
+        })?;
+        Ok(Server { addr, stop, join: Some(join) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn handle_client(stream: TcpStream, engine: Arc<Engine>,
+                 stop: Arc<AtomicBool>) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut req_no = 0u64;
+    loop {
+        let mut line = String::new();
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // client closed
+            Ok(_) => {}
+            Err(e) if matches!(e.kind(), std::io::ErrorKind::WouldBlock
+                               | std::io::ErrorKind::TimedOut) => {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                continue;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        req_no += 1;
+        let reply = match serve_one(&engine, &line) {
+            Ok(mut obj) => {
+                obj.insert("id".into(), Json::Num(req_no as f64));
+                Json::Obj(obj).to_string()
+            }
+            Err(e) => {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("id".into(), Json::Num(req_no as f64));
+                m.insert("error".into(), Json::Str(format!("{e:#}")));
+                Json::Obj(m).to_string()
+            }
+        };
+        writer.write_all(reply.as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    let _ = peer;
+    Ok(())
+}
+
+fn serve_one(engine: &Engine, line: &str)
+             -> Result<std::collections::BTreeMap<String, Json>> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+    let variant = req.str_of("variant").to_string();
+    let prompt = req.str_of("prompt").to_string();
+    let max_tokens = req.get("max_tokens").and_then(Json::as_usize).unwrap_or(32);
+    let temperature = req.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32;
+    let seed = req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+
+    let tok = ByteTokenizer;
+    let mut ctx = tok.encode(&prompt);
+    let seq = engine
+        .router()
+        .pick_seq(&variant, ctx.len())
+        .ok_or_else(|| anyhow::anyhow!("unknown variant `{variant}`"))?;
+    let mut rng = XorShift::new(seed.max(1));
+    let mut out_tokens = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..max_tokens {
+        let mut window = vec![b' ' as i32; seq];
+        let take = ctx.len().min(seq);
+        window[seq - take..].copy_from_slice(&ctx[ctx.len() - take..]);
+        let resp = engine.infer(&variant, window, None)?;
+        anyhow::ensure!(!resp.output.is_empty(), "engine returned empty logits");
+        let next = sample_logits(&resp.output, temperature, &mut rng) as i32;
+        ctx.push(next);
+        out_tokens.push(next);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("text".into(), Json::Str(tok.decode(&out_tokens)));
+    m.insert("latency_s".into(), Json::Num(dt));
+    m.insert("tokens_per_s".into(), Json::Num(out_tokens.len() as f64 / dt.max(1e-9)));
+    Ok(m)
+}

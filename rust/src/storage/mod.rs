@@ -1,0 +1,303 @@
+//! `.dobiw` weight-container reader + storage accounting.
+//!
+//! Format (little-endian) — mirror of `python/compile/dobiw.py`:
+//! ```text
+//! magic "DOBIW1" | u32 n_tensors | per tensor:
+//!   u16 name_len | name | u8 dtype | u8 ndim | u32*ndim shape |
+//!   u64 payload_len | payload | u32 crc32(payload)
+//! ```
+//! dtype: 0 = f32, 1 = f16, 2 = i8, 3 = i32.
+//!
+//! Remapped Dobi factors arrive as `<name>.q8` + `<name>.scales`
+//! (broadcast-shaped); [`Store::tensor_f32`] reassembles the fp32 tensor
+//! exactly as `aot._arrays_from_store` does on the python side.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::corpusio::crc32;
+use crate::quant::{dequantize_i8, f16_slice_to_f32};
+
+pub const MAGIC: &[u8; 6] = b"DOBIW1";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F16,
+    I8,
+    I32,
+}
+
+impl Dtype {
+    fn from_code(c: u8) -> Result<Dtype> {
+        Ok(match c {
+            0 => Dtype::F32,
+            1 => Dtype::F16,
+            2 => Dtype::I8,
+            3 => Dtype::I32,
+            _ => bail!("unknown dtype code {c}"),
+        })
+    }
+
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::F16 => 2,
+            Dtype::I8 => 1,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn n_elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Decode to f32 (f16 upconverted; i8 returned as raw codes cast).
+    pub fn to_f32(&self) -> Vec<f32> {
+        match self.dtype {
+            Dtype::F32 => self
+                .data
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect(),
+            Dtype::F16 => {
+                let halves: Vec<u16> = self
+                    .data
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                f16_slice_to_f32(&halves)
+            }
+            Dtype::I8 => self.data.iter().map(|&b| b as i8 as f32).collect(),
+            Dtype::I32 => self
+                .data
+                .chunks_exact(4)
+                .map(|c| i32::from_le_bytes(c.try_into().unwrap()) as f32)
+                .collect(),
+        }
+    }
+
+    pub fn as_i8(&self) -> Vec<i8> {
+        assert_eq!(self.dtype, Dtype::I8);
+        self.data.iter().map(|&b| b as i8).collect()
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Store {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub file_bytes: usize,
+}
+
+impl Store {
+    pub fn open(path: &Path) -> Result<Store> {
+        let raw = std::fs::read(path).map_err(|e| anyhow!("reading {}: {e}", path.display()))?;
+        Self::parse(&raw).map_err(|e| anyhow!("{}: {e}", path.display()))
+    }
+
+    pub fn parse(raw: &[u8]) -> Result<Store> {
+        if raw.len() < 10 || &raw[..6] != MAGIC {
+            bail!("bad dobiw magic");
+        }
+        let n = u32::from_le_bytes(raw[6..10].try_into().unwrap()) as usize;
+        let mut i = 10usize;
+        let mut tensors = BTreeMap::new();
+        let take = |i: &mut usize, len: usize| -> Result<&[u8]> {
+            if *i + len > raw.len() {
+                bail!("truncated dobiw at byte {i}");
+            }
+            let s = &raw[*i..*i + len];
+            *i += len;
+            Ok(s)
+        };
+        for _ in 0..n {
+            let nl = u16::from_le_bytes(take(&mut i, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&mut i, nl)?.to_vec())?;
+            let hdr = take(&mut i, 2)?;
+            let dtype = Dtype::from_code(hdr[0])?;
+            let ndim = hdr[1] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap()) as usize);
+            }
+            let plen = u64::from_le_bytes(take(&mut i, 8)?.try_into().unwrap()) as usize;
+            let data = take(&mut i, plen)?.to_vec();
+            let want = u32::from_le_bytes(take(&mut i, 4)?.try_into().unwrap());
+            if crc32(&data) != want {
+                bail!("crc mismatch for tensor `{name}`");
+            }
+            let expect = shape.iter().product::<usize>() * dtype.elem_bytes();
+            if expect != data.len() {
+                bail!("tensor `{name}` payload {} != shape-implied {expect}", data.len());
+            }
+            tensors.insert(name.clone(), Tensor { name, dtype, shape, data });
+        }
+        Ok(Store { tensors, file_bytes: raw.len() })
+    }
+
+    /// Reassemble the named HLO parameter as f32 row-major + its shape.
+    /// Plain tensors pass through; `name.q8`+`name.scales` dequantize.
+    pub fn tensor_f32(&self, name: &str) -> Result<(Vec<f32>, Vec<usize>)> {
+        if let Some(t) = self.tensors.get(name) {
+            return Ok((t.to_f32(), t.shape.clone()));
+        }
+        let q = self
+            .tensors
+            .get(&format!("{name}.q8"))
+            .ok_or_else(|| anyhow!("tensor `{name}` not in store (plain or quantized)"))?;
+        let s = self
+            .tensors
+            .get(&format!("{name}.scales"))
+            .ok_or_else(|| anyhow!("tensor `{name}.scales` missing"))?;
+        anyhow::ensure!(q.shape.len() == 2 && s.shape.len() == 2,
+                        "quantized tensors must be 2-D");
+        let (rows, cols) = (q.shape[0], q.shape[1]);
+        let scales = s.to_f32();
+        let out = dequantize_i8(&q.as_i8(), rows, cols, &scales, (s.shape[0], s.shape[1]));
+        Ok((out, q.shape.clone()))
+    }
+
+    /// True bytes this parameter set occupies on disk per tensor payloads
+    /// (scales included) — the deployment memory the tables report.
+    pub fn payload_bytes(&self) -> usize {
+        self.tensors.values().map(|t| t.data.len()).sum()
+    }
+}
+
+/// Writer (round-trip tests + rust-side artifact generation).
+pub fn write_store(path: &Path, tensors: &[Tensor]) -> Result<()> {
+    let mut out: Vec<u8> = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for t in tensors {
+        let nb = t.name.as_bytes();
+        out.extend_from_slice(&(nb.len() as u16).to_le_bytes());
+        out.extend_from_slice(nb);
+        let code = match t.dtype {
+            Dtype::F32 => 0u8,
+            Dtype::F16 => 1,
+            Dtype::I8 => 2,
+            Dtype::I32 => 3,
+        };
+        out.push(code);
+        out.push(t.shape.len() as u8);
+        for &d in &t.shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&(t.data.len() as u64).to_le_bytes());
+        out.extend_from_slice(&t.data);
+        out.extend_from_slice(&crc32(&t.data).to_le_bytes());
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+pub fn f32_tensor(name: &str, shape: Vec<usize>, vals: &[f32]) -> Tensor {
+    assert_eq!(shape.iter().product::<usize>(), vals.len());
+    Tensor {
+        name: name.to_string(),
+        dtype: Dtype::F32,
+        shape,
+        data: vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("dobi_storage_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_f32() {
+        let p = tmp("a.dobiw");
+        let t = f32_tensor("x", vec![2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        write_store(&p, &[t]).unwrap();
+        let s = Store::open(&p).unwrap();
+        let (v, shape) = s.tensor_f32("x").unwrap();
+        assert_eq!(shape, vec![2, 3]);
+        assert_eq!(v, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn dequantizes_q8_pairs() {
+        let p = tmp("b.dobiw");
+        let q = Tensor {
+            name: "w.q8".into(),
+            dtype: Dtype::I8,
+            shape: vec![2, 2],
+            data: vec![10i8 as u8, 20i8 as u8, (-10i8) as u8, 5u8],
+        };
+        let s = f32_tensor("w.scales", vec![1, 2], &[0.1, 0.5]);
+        write_store(&p, &[q, s]).unwrap();
+        let store = Store::open(&p).unwrap();
+        let (v, shape) = store.tensor_f32("w").unwrap();
+        assert_eq!(shape, vec![2, 2]);
+        let want = [1.0f32, 10.0, -1.0, 2.5];
+        for (a, b) in v.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn crc_corruption_detected() {
+        let p = tmp("c.dobiw");
+        write_store(&p, &[f32_tensor("x", vec![4], &[1.0, 2.0, 3.0, 4.0])]).unwrap();
+        let mut raw = std::fs::read(&p).unwrap();
+        let n = raw.len();
+        raw[n - 8] ^= 0x1;
+        std::fs::write(&p, raw).unwrap();
+        assert!(Store::open(&p).is_err());
+    }
+
+    #[test]
+    fn shape_payload_mismatch_detected() {
+        let t = Tensor { name: "x".into(), dtype: Dtype::F32, shape: vec![3], data: vec![0; 8] };
+        let p = tmp("d.dobiw");
+        write_store(&p, &[t]).unwrap();
+        assert!(Store::open(&p).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error() {
+        let p = tmp("e.dobiw");
+        write_store(&p, &[f32_tensor("x", vec![1], &[0.0])]).unwrap();
+        let s = Store::open(&p).unwrap();
+        assert!(s.tensor_f32("y").is_err());
+    }
+
+    #[test]
+    fn f16_upconversion() {
+        let p = tmp("f.dobiw");
+        let halves: Vec<u8> = [0x3C00u16, 0xC000].iter().flat_map(|h| h.to_le_bytes()).collect();
+        let t = Tensor { name: "h".into(), dtype: Dtype::F16, shape: vec![2], data: halves };
+        write_store(&p, &[t]).unwrap();
+        let s = Store::open(&p).unwrap();
+        let (v, _) = s.tensor_f32("h").unwrap();
+        assert_eq!(v, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn payload_bytes_accounting() {
+        let p = tmp("g.dobiw");
+        write_store(&p, &[f32_tensor("x", vec![10], &[0.0; 10])]).unwrap();
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.payload_bytes(), 40);
+        assert!(s.file_bytes > 40);
+    }
+}

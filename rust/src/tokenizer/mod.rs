@@ -1,0 +1,99 @@
+//! Byte-level tokenizer — the exact contract of `python/compile/data.py`:
+//! token id == utf-8 byte value, vocab = 256.
+
+pub const VOCAB_SIZE: usize = 256;
+
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.as_bytes().iter().map(|&b| b as i32).collect()
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let bytes: Vec<u8> = tokens.iter().map(|&t| (t & 0xFF) as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Encode into a fixed window, left-truncating (keep the most recent
+    /// context) and right-aligning — the generation loop's sliding window.
+    pub fn encode_window(&self, text: &str, seq: usize, pad: i32) -> Vec<i32> {
+        let toks = self.encode(text);
+        let mut out = vec![pad; seq];
+        let take = toks.len().min(seq);
+        let src = &toks[toks.len() - take..];
+        out[seq - take..].copy_from_slice(src);
+        out
+    }
+
+    /// Encode prompt+continuation into a window, returning the
+    /// continuation's [start, end) token span (for option scoring).
+    /// Falls back to truncating the prompt from the left if needed.
+    pub fn encode_pair(&self, prompt: &str, cont: &str, seq: usize, pad: i32)
+                       -> (Vec<i32>, usize, usize) {
+        let p = self.encode(prompt);
+        let c = self.encode(cont);
+        let c_len = c.len().min(seq.saturating_sub(1));
+        let c = &c[..c_len];
+        let p_room = seq - c_len;
+        let p_take = p.len().min(p_room);
+        let p = &p[p.len() - p_take..];
+        let mut out = vec![pad; seq];
+        let start = p_take;
+        out[..p_take].copy_from_slice(p);
+        out[start..start + c_len].copy_from_slice(c);
+        (out, start, start + c_len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_ascii() {
+        let t = ByteTokenizer;
+        let s = "Hello, Dobi-SVD! 123";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn roundtrip_unicode() {
+        let t = ByteTokenizer;
+        let s = "ünïcödé ✓";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let t = ByteTokenizer;
+        assert!(t.encode("é✓ xyz").iter().all(|&x| (0..256).contains(&x)));
+    }
+
+    #[test]
+    fn window_right_aligned() {
+        let t = ByteTokenizer;
+        let w = t.encode_window("abcdef", 4, 0);
+        assert_eq!(w, t.encode("cdef"));
+        let w2 = t.encode_window("ab", 4, 32);
+        assert_eq!(w2, vec![32, 32, 97, 98]);
+    }
+
+    #[test]
+    fn pair_span_correct() {
+        let t = ByteTokenizer;
+        let (w, s, e) = t.encode_pair("abc", "XY", 8, 0);
+        assert_eq!(&w[s..e], &t.encode("XY")[..]);
+        assert_eq!(&w[..3], &t.encode("abc")[..]);
+        assert_eq!((s, e), (3, 5));
+    }
+
+    #[test]
+    fn pair_truncates_prompt_not_continuation() {
+        let t = ByteTokenizer;
+        let (w, s, e) = t.encode_pair("0123456789", "AB", 6, 0);
+        assert_eq!(&w[s..e], &t.encode("AB")[..]);
+        assert_eq!(&w[..s], &t.encode("6789")[..]);
+    }
+}

@@ -1,0 +1,109 @@
+//! Failure-injection: the loader/engine must fail loudly and precisely on
+//! corrupted or inconsistent artifacts — never serve garbage silently.
+
+use dobi::bench::{artifacts_available, artifacts_dir};
+use dobi::config::Manifest;
+use dobi::runtime::Runtime;
+use dobi::storage::{f32_tensor, write_store, Store};
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("[skip] artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn scratch(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("dobi_failure_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn corrupted_weights_rejected_at_load() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let v = m.variant("llama-nano/dense").unwrap();
+    let mut raw = std::fs::read(m.path(&v.weights)).unwrap();
+    let mid = raw.len() / 2;
+    raw[mid] ^= 0xFF;
+    let p = scratch("corrupt.dobiw");
+    std::fs::write(&p, raw).unwrap();
+    let err = Store::open(&p).unwrap_err().to_string();
+    assert!(err.contains("crc") || err.contains("truncated") || err.contains("payload"),
+            "unexpected error: {err}");
+}
+
+#[test]
+fn truncated_weights_rejected() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let v = m.variant("llama-nano/dense").unwrap();
+    let raw = std::fs::read(m.path(&v.weights)).unwrap();
+    let p = scratch("truncated.dobiw");
+    std::fs::write(&p, &raw[..raw.len() / 3]).unwrap();
+    assert!(Store::open(&p).is_err());
+}
+
+#[test]
+fn missing_tensor_fails_variant_load() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    // Build a store holding only one bogus tensor, swap it in for a
+    // variant via a doctored manifest dir? Simpler: exercise the loader
+    // API directly — Store::tensor_f32 must name the missing tensor.
+    let p = scratch("sparse.dobiw");
+    write_store(&p, &[f32_tensor("only", vec![2], &[1.0, 2.0])]).unwrap();
+    let s = Store::open(&p).unwrap();
+    let err = s.tensor_f32("embed").unwrap_err().to_string();
+    assert!(err.contains("embed"), "error should name the tensor: {err}");
+    let _ = m;
+}
+
+#[test]
+fn malformed_hlo_rejected_at_compile() {
+    require_artifacts!();
+    let p = scratch("bad.hlo.txt");
+    std::fs::write(&p, "HloModule garbage\nENTRY main { broken").unwrap();
+    let rt = Runtime::new().unwrap();
+    assert!(rt.compile_hlo(&p).is_err());
+}
+
+#[test]
+fn unknown_variant_fails_engine_start() {
+    require_artifacts!();
+    let err = dobi::coordinator::Engine::start(
+        artifacts_dir(),
+        &["llama-nano/never-exported".to_string()],
+        dobi::config::EngineConfig::default(),
+        None,
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn engine_shape_filter_mismatch_fails_start() {
+    require_artifacts!();
+    let err = dobi::coordinator::Engine::start(
+        artifacts_dir(),
+        &["llama-nano/dense".to_string()],
+        dobi::config::EngineConfig::default(),
+        Some(vec![(3, 999)]), // never exported
+    );
+    assert!(err.is_err());
+}
+
+#[test]
+fn forward_rejects_wrong_token_count() {
+    require_artifacts!();
+    let m = Manifest::load(&artifacts_dir()).unwrap();
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let rt = Runtime::new().unwrap();
+    let model = rt.load_variant(&m, "llama-nano/dense", Some(&[(b, s)])).unwrap();
+    assert!(model.forward(b, s, &vec![0; b * s - 1], None).is_err());
+    assert!(model.forward(b + 1, s, &vec![0; (b + 1) * s], None).is_err());
+    // LM variant must reject an image input
+    assert!(model.forward(b, s, &vec![0; b * s], Some(&vec![0.0; b])).is_err());
+}

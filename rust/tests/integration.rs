@@ -1,0 +1,321 @@
+//! Integration tests over real artifacts (runtime + eval + coordinator).
+//!
+//! Require `make artifacts` (or DOBI_ARTIFACTS pointing at a build); each
+//! test skips gracefully when artifacts are absent so `cargo test` stays
+//! green on a fresh checkout.
+
+use std::sync::Arc;
+
+use dobi::bench::{artifacts_available, artifacts_dir};
+use dobi::config::{EngineConfig, Manifest};
+use dobi::coordinator::{Engine, SubmitError};
+use dobi::corpusio;
+use dobi::evalx;
+use dobi::runtime::Runtime;
+use dobi::storage::Store;
+use dobi::tokenizer::ByteTokenizer;
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("[skip] artifacts not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn manifest() -> Manifest {
+    Manifest::load(&artifacts_dir()).expect("manifest loads")
+}
+
+#[test]
+fn manifest_is_consistent() {
+    require_artifacts!();
+    let m = manifest();
+    assert!(!m.variants.is_empty());
+    for v in &m.variants {
+        assert!(m.models.contains_key(&v.model), "{}: unknown model", v.id);
+        assert!(!v.param_names.is_empty(), "{}: no params", v.id);
+        assert!(!v.hlo.is_empty(), "{}: no hlo", v.id);
+        assert!(m.path(&v.weights).exists(), "{}: weights missing", v.id);
+        for f in v.hlo.values() {
+            assert!(m.path(f).exists(), "{}: hlo file {} missing", v.id, f);
+        }
+    }
+}
+
+#[test]
+fn storage_matches_manifest_params() {
+    require_artifacts!();
+    let m = manifest();
+    let v = m.variant("llama-nano/dense").unwrap();
+    let store = Store::open(&m.path(&v.weights)).unwrap();
+    let minfo = &m.models["llama-nano"];
+    let mut total = 0usize;
+    for name in &v.param_names {
+        let (vals, shape) = store.tensor_f32(name).unwrap();
+        assert_eq!(vals.len(), shape.iter().product::<usize>());
+        total += vals.len();
+    }
+    assert_eq!(total, minfo.total_params, "dense store must hold every param");
+}
+
+#[test]
+fn quantized_store_dequantizes_all_factors() {
+    require_artifacts!();
+    let m = manifest();
+    let v = m
+        .variants
+        .iter()
+        .find(|v| v.method == "dobi" && v.kernel == "xla")
+        .expect("a dobi variant");
+    let store = Store::open(&m.path(&v.weights)).unwrap();
+    let n_q8 = store.tensors.keys().filter(|k| k.ends_with(".q8")).count();
+    assert!(n_q8 > 0, "remapped variant stores int8 factors");
+    for name in &v.param_names {
+        let (vals, _) = store.tensor_f32(name).unwrap();
+        assert!(vals.iter().all(|x| x.is_finite()), "{name} has non-finite values");
+    }
+    // remapped on-disk payload must beat the dense fp32 footprint
+    let dense = m.variant("llama-nano/dense").unwrap();
+    let dstore = Store::open(&m.path(&dense.weights)).unwrap();
+    assert!(store.payload_bytes() < dstore.payload_bytes());
+}
+
+#[test]
+fn rust_ppl_matches_python_reference() {
+    require_artifacts!();
+    let m = manifest();
+    let rt = Runtime::new().unwrap();
+    let shapes = [(m.eval_batch, m.eval_seq)];
+    for id in ["llama-nano/dense", "llama-nano/dobi_60"] {
+        let v = m.variant(id).unwrap();
+        if v.ref_ppl.is_empty() {
+            continue;
+        }
+        let model = rt.load_variant(&m, id, Some(&shapes)).unwrap();
+        for (corpus, &ref_ppl) in &v.ref_ppl {
+            if !ref_ppl.is_finite() {
+                continue;
+            }
+            let ppl = evalx::perplexity(&model, &m, corpus).unwrap();
+            let rel = (ppl - ref_ppl).abs() / ref_ppl;
+            assert!(rel < 0.01,
+                    "{id}/{corpus}: rust {ppl:.3} vs python {ref_ppl:.3} ({rel:.3} rel)");
+        }
+    }
+}
+
+#[test]
+fn compression_quality_ordering() {
+    require_artifacts!();
+    let m = manifest();
+    // Headline shape: at the lowest ratio, Dobi-SVD beats direct weight
+    // truncation on in-domain PPL (python refs; measured live in benches).
+    let get = |id: &str| m.variant(id).ok().and_then(|v| v.ref_ppl.get("wiki-syn")).copied();
+    if let (Some(dobi), Some(wsvd)) = (get("llama-nano/dobi_40"), get("llama-nano/weight_svd_40")) {
+        assert!(dobi < wsvd, "dobi {dobi} !< weight_svd {wsvd}");
+    }
+    if let (Some(d), Some(dn)) = (get("llama-nano/dobi_40"), get("llama-nano/dense")) {
+        assert!(d >= dn * 0.8, "compressed model implausibly better than dense");
+    }
+}
+
+#[test]
+fn generation_is_deterministic_and_decodable() {
+    require_artifacts!();
+    let m = manifest();
+    let rt = Runtime::new().unwrap();
+    let v = m.variant("llama-nano/dense").unwrap();
+    let (b, s) = v.shapes().into_iter().min_by_key(|&(b, _)| b).unwrap();
+    let model = rt.load_variant(&m, "llama-nano/dense", Some(&[(b, s)])).unwrap();
+    let a = evalx::generate(&model, b, s, "The ", 24, 0.7, 42).unwrap();
+    let b2 = evalx::generate(&model, b, s, "The ", 24, 0.7, 42).unwrap();
+    assert_eq!(a, b2, "same seed must reproduce");
+    let c = evalx::generate(&model, b, s, "The ", 24, 0.7, 43).unwrap();
+    assert!(!c.is_empty());
+    // greedy differs from nothing: sanity only
+    let g = evalx::generate(&model, b, s, "The ", 8, 0.0, 1).unwrap();
+    assert_eq!(g.len(), ByteTokenizer.decode(&ByteTokenizer.encode(&g)).len());
+}
+
+#[test]
+fn task_suites_score_in_range() {
+    require_artifacts!();
+    let m = manifest();
+    let suites_file = match &m.suites_file {
+        Some(f) => f.clone(),
+        None => return,
+    };
+    let suites = corpusio::read_suites(&m.path(&suites_file)).unwrap();
+    let rt = Runtime::new().unwrap();
+    let model = rt
+        .load_variant(&m, "llama-nano/dense", Some(&[(m.eval_batch, m.eval_seq)]))
+        .unwrap();
+    let r = evalx::run_suite(&model, &suites[0], m.eval_batch, m.eval_seq, 10).unwrap();
+    assert!(r.accuracy >= 0.0 && r.accuracy <= 1.0);
+    assert_eq!(r.n, 10);
+}
+
+#[test]
+fn vla_eval_end_to_end() {
+    require_artifacts!();
+    let m = manifest();
+    let (vla_file, id) = match (&m.vla_file, m.variant("vla-nano/dense")) {
+        (Some(f), Ok(_)) => (f.clone(), "vla-nano/dense"),
+        _ => return,
+    };
+    let (_, samples) = corpusio::read_vla(&m.path(&vla_file)).unwrap();
+    let rt = Runtime::new().unwrap();
+    let model = rt.load_variant(&m, id, Some(&[(m.eval_batch, m.eval_seq)])).unwrap();
+    let r = evalx::run_vla(&model, &samples, m.eval_batch, m.eval_seq, 16).unwrap();
+    assert!(r.coords_mse.is_finite() && r.coords_mse < 2.0, "mse {}", r.coords_mse);
+    assert!(r.gripper_acc >= 0.3, "gripper acc {}", r.gripper_acc);
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator over the real runtime
+// ---------------------------------------------------------------------------
+
+#[test]
+fn engine_serves_concurrent_clients() {
+    require_artifacts!();
+    let m = manifest();
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 1500, queue_depth: 64, workers: 1 };
+    let engine = Arc::new(
+        Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()], cfg,
+                      Some(vec![(b, s)]))
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let eng = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let tok = ByteTokenizer;
+            for i in 0..6 {
+                let win = tok.encode_window(&format!("request {t} {i} the quick "), s, 32);
+                let resp = eng.infer("llama-nano/dense", win, None).unwrap();
+                assert_eq!(resp.output.len(), 256, "logit width");
+                assert!(resp.output.iter().all(|x| x.is_finite()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.served, 24);
+    assert!(stats.batches <= 24);
+    assert!(stats.mean_batch >= 1.0);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_batches_under_load() {
+    require_artifacts!();
+    let m = manifest();
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 20_000, queue_depth: 256, workers: 1 };
+    let engine = Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()], cfg,
+                               Some(vec![(b, s)])).unwrap();
+    let tok = ByteTokenizer;
+    // Burst-submit so the deadline window can coalesce them.
+    let rxs: Vec<_> = (0..12)
+        .map(|i| {
+            engine
+                .submit("llama-nano/dense",
+                        tok.encode_window(&format!("burst {i} "), s, 32), None)
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv().unwrap();
+        assert!(!resp.output.is_empty());
+    }
+    let stats = engine.stats();
+    assert!(stats.mean_batch > 1.2,
+            "expected batching under burst load, mean {}", stats.mean_batch);
+    engine.shutdown();
+}
+
+#[test]
+fn engine_rejects_bad_requests() {
+    require_artifacts!();
+    let m = manifest();
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let cfg = EngineConfig::default();
+    let engine = Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()], cfg,
+                               Some(vec![(b, s)])).unwrap();
+    match engine.submit("nope/nothere", vec![0; s], None) {
+        Err(SubmitError::UnknownVariant(_)) => {}
+        other => panic!("expected UnknownVariant, got {other:?}"),
+    }
+    match engine.submit("llama-nano/dense", vec![0; s + 1], None) {
+        Err(SubmitError::BadShape { .. }) => {}
+        other => panic!("expected BadShape, got {other:?}"),
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn engine_backpressure_queue_full() {
+    require_artifacts!();
+    let m = manifest();
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 500, queue_depth: 2, workers: 1 };
+    let engine = Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()], cfg,
+                               Some(vec![(b, s)])).unwrap();
+    let mut rejected = false;
+    let mut rxs = Vec::new();
+    for _ in 0..40 {
+        match engine.submit("llama-nano/dense", vec![32; s], None) {
+            Ok(rx) => rxs.push(rx),
+            Err(SubmitError::QueueFull { .. }) => {
+                rejected = true;
+                break;
+            }
+            Err(e) => panic!("unexpected: {e:?}"),
+        }
+    }
+    assert!(rejected, "depth-2 queue must reject a 40-burst");
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    engine.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Server protocol over TCP
+// ---------------------------------------------------------------------------
+
+#[test]
+fn server_line_protocol_roundtrip() {
+    require_artifacts!();
+    use std::io::{BufRead, BufReader, Write};
+    let m = manifest();
+    let (b, s) = (m.eval_batch, m.eval_seq);
+    let cfg = EngineConfig { max_batch: b, ..Default::default() };
+    let engine = Arc::new(Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()],
+                                        cfg, Some(vec![(b, s)])).unwrap());
+    let mut server = dobi::server::Server::start(engine.clone(), 0).unwrap();
+    let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
+    conn.write_all(
+        b"{\"variant\":\"llama-nano/dense\",\"prompt\":\"The \",\"max_tokens\":4}\n",
+    )
+    .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = dobi::json::Json::parse(&line).unwrap();
+    assert!(j.get("text").is_some(), "reply: {line}");
+    assert!(j.get("tokens_per_s").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    // malformed request -> error object, connection stays usable
+    conn.write_all(b"not json\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(dobi::json::Json::parse(&line).unwrap().get("error").is_some());
+    drop(conn);
+    server.shutdown();
+    engine.shutdown();
+}
