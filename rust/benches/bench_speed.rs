@@ -1,26 +1,34 @@
-//! Speed/deployment benches: Fig 4 (throughput vs batch & seqlen),
+//! Speed/deployment benches: the native low-rank factorized-vs-dense
+//! sweep (no artifacts needed), Fig 4 (throughput vs batch & seqlen),
 //! Table 10 (constrained-device speedup), Table 12 (VLM speed),
 //! Table 23 (speed vs PTQ), engine overhead, and the batcher-policy
 //! ablation (DESIGN.md §5.5).
 //!
-//!   cargo bench --bench bench_speed -- fig4 table10 table12 table23 engine batcher
+//!   cargo bench --bench bench_speed -- lowrank fig4 table10 table12 table23 engine batcher
 
 use std::sync::Arc;
 
 use dobi::bench::{artifacts_available, artifacts_dir, bench, bench_for, Table};
 use dobi::config::{EngineConfig, Manifest};
 use dobi::coordinator::Engine;
+use dobi::lowrank::{matmul, Factor, FactorizedLinear};
+use dobi::mathx::XorShift;
 use dobi::memsim::DeviceModel;
 use dobi::runtime::Runtime;
 use dobi::tokenizer::ByteTokenizer;
 
 fn main() {
-    if !artifacts_available() {
-        eprintln!("[bench_speed] artifacts not built — run `make artifacts` first");
-        return;
-    }
     let filter: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
     let want = |name: &str| filter.is_empty() || filter.iter().any(|f| f == name);
+
+    // Native sections first: they run on a fresh checkout, no artifacts.
+    if want("lowrank") { lowrank_sweep(); }
+
+    if !artifacts_available() {
+        eprintln!("[bench_speed] artifacts not built — PJRT sections skipped \
+                   (run `make artifacts`)");
+        return;
+    }
     let m = Manifest::load(&artifacts_dir()).expect("manifest");
     let rt = Runtime::new().expect("pjrt");
 
@@ -31,6 +39,68 @@ fn main() {
     if want("engine") { engine_overhead(&m, &rt); }
     if want("batcher") { batcher_ablation(&m); }
     if want("loadcurve") { load_curve(&m); }
+}
+
+/// Native backend: dense-equivalent vs rank-k factorized apply at several
+/// rank fractions, per factor precision.  The acceptance shape: wall-clock
+/// tracks the FLOP ratio `k(m+n)/mn`, and f16/int8 factors pay a bounded
+/// decode overhead for their 2x/4x memory saving.
+fn lowrank_sweep() {
+    let rows = 256; // eval_batch 4 x eval_seq 64 token rows
+    let dims: [(&str, usize, usize); 3] =
+        [("wq/wk/wv/wo", 192, 192), ("w_gate/w_up", 192, 512), ("w_down", 512, 192)];
+    let mut t = Table::new(
+        &format!("Native low-rank — factorized vs dense matmul ({rows} rows)"),
+        &["matrix", "m x n", "frac", "k", "dense ms", "f32 ms", "f16 ms",
+          "int8 ms", "flop ratio", "speedup"],
+    );
+    let mut rng = XorShift::new(11);
+    let mut randv = |n: usize, s: f32| -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * s).collect()
+    };
+    for (name, m, n) in dims {
+        let w = Factor::f32(m, n, randv(m * n, 0.05));
+        let x = randv(rows * m, 1.0);
+        let dense = bench_for("dense", 0.15, 5, || {
+            matmul(&x, rows, &w);
+        });
+        for frac in [0.2f64, 0.4, 0.6] {
+            let k = ((m.min(n) as f64 * frac).round() as usize).max(1);
+            let w1 = randv(m * k, 0.1);
+            let w2 = randv(k * n, 0.1);
+            let mk = |w1f: Factor, w2f: Factor| {
+                FactorizedLinear::new(name, w1f, w2f).expect("factor dims")
+            };
+            let lin32 = mk(Factor::f32(m, k, w1.clone()), Factor::f32(k, n, w2.clone()));
+            let lin16 = mk(Factor::f16_from_f32(m, k, &w1), Factor::f16_from_f32(k, n, &w2));
+            let lin8 = mk(Factor::i8_cols_from_f32(m, k, &w1), Factor::i8_rows_from_f32(k, n, &w2));
+            let r32 = bench_for("f32", 0.15, 5, || {
+                lin32.apply(&x, rows);
+            });
+            let r16 = bench_for("f16", 0.15, 5, || {
+                lin16.apply(&x, rows);
+            });
+            let r8 = bench_for("i8", 0.15, 5, || {
+                lin8.apply(&x, rows);
+            });
+            let flop_ratio = (k * (m + n)) as f64 / (m * n) as f64;
+            t.row(vec![
+                name.to_string(),
+                format!("{m}x{n}"),
+                format!("{frac:.1}"),
+                format!("{k}"),
+                format!("{:.3}", dense.stats.mean * 1e3),
+                format!("{:.3}", r32.stats.mean * 1e3),
+                format!("{:.3}", r16.stats.mean * 1e3),
+                format!("{:.3}", r8.stats.mean * 1e3),
+                format!("{flop_ratio:.2}"),
+                format!("{:.2}x", dense.stats.mean / r32.stats.mean),
+            ]);
+        }
+    }
+    t.print();
+    println!("shape to check: f32 speedup tracks 1/flop-ratio (k(m+n) vs mn); f16/int8\n\
+              factors trade a bounded decode cost for 2x/4x resident-memory savings.");
 }
 
 /// Latency vs offered load (open-loop Poisson arrivals) — the serving
@@ -44,7 +114,8 @@ fn load_curve(m: &Manifest) {
         return;
     }
     // calibrate: measure a saturated batch to place the sweep
-    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 2000, queue_depth: 64, workers: 1 };
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 2000, queue_depth: 64, workers: 1,
+                             ..Default::default() };
     let engine = Arc::new(
         Engine::start(artifacts_dir(), &[id.clone()], cfg, Some(vec![(b, s)])).unwrap());
     let mut t = Table::new(
@@ -238,7 +309,8 @@ fn engine_overhead(m: &Manifest, rt: &Runtime) {
         model.forward(b, s, &tokens, None).unwrap();
     });
 
-    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 1000, queue_depth: 256, workers: 1 };
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 1000, queue_depth: 256, workers: 1,
+                             ..Default::default() };
     let engine = Arc::new(
         Engine::start(artifacts_dir(), &[id.to_string()], cfg, Some(vec![(b, s)])).unwrap());
     let tok = ByteTokenizer;
@@ -277,7 +349,7 @@ fn batcher_ablation(m: &Manifest) {
                            &["deadline us", "req/s", "p50 ms", "p99 ms", "mean batch"]);
     for deadline_us in [0u64, 500, 2000, 8000] {
         let cfg = EngineConfig { max_batch: b, batch_deadline_us: deadline_us,
-                                 queue_depth: 1024, workers: 1 };
+                                 queue_depth: 1024, workers: 1, ..Default::default() };
         let engine = Arc::new(
             Engine::start(artifacts_dir(), &[id.clone()], cfg, Some(vec![(b, s)])).unwrap());
         let tok = ByteTokenizer;

@@ -34,7 +34,8 @@ fn main() -> Result<()> {
         .collect();
 
     println!("loading {} variants through the engine...", ids.len());
-    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 2_000, queue_depth: 512, workers: 1 };
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 2_000, queue_depth: 512, workers: 1,
+                             ..Default::default() };
     let engine = Arc::new(Engine::start(dir.clone(), &ids, cfg, Some(vec![(b, s)]))?);
 
     // Quality first: PPL per variant on a dedicated runtime (the engine's

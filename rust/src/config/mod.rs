@@ -4,9 +4,51 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::json::{self, Json};
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// Which execution backend serves forwards (see `runtime::make_backend`).
+///
+/// * `Pjrt`   — AOT HLO artifacts through the PJRT client (requires the
+///              real `xla` bindings; the offline build links a stub that
+///              fails cleanly at load time).
+/// * `Native` — in-process rank-truncated factorized inference
+///              (`lowrank::FactorizedModel`), no PJRT required.
+/// * `Auto`   — PJRT when it comes up, else fall back to native.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    #[default]
+    Auto,
+    Pjrt,
+    Native,
+}
+
+impl BackendKind {
+    /// Parse a `--backend` flag value.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        Ok(match s {
+            "auto" => BackendKind::Auto,
+            "pjrt" => BackendKind::Pjrt,
+            "native" | "lowrank" => BackendKind::Native,
+            other => bail!("unknown backend `{other}` (expected auto|pjrt|native)"),
+        })
+    }
+}
+
+impl std::fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            BackendKind::Auto => "auto",
+            BackendKind::Pjrt => "pjrt",
+            BackendKind::Native => "native",
+        })
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Engine tunables
@@ -25,6 +67,8 @@ pub struct EngineConfig {
     /// Worker threads (1 device → 1 executor by default; >1 exercises
     /// contention handling in tests).
     pub workers: usize,
+    /// Execution backend the executor thread instantiates.
+    pub backend: BackendKind,
 }
 
 impl Default for EngineConfig {
@@ -32,7 +76,13 @@ impl Default for EngineConfig {
         // deadline=2000us: the §Perf batcher ablation shows a flat plateau
         // from 500-8000us with +-15% run-to-run noise on 1 core; 2000us sits
         // mid-plateau (EXPERIMENTS.md §Perf L3 / bench_speed -- batcher).
-        EngineConfig { max_batch: 4, batch_deadline_us: 2_000, queue_depth: 256, workers: 1 }
+        EngineConfig {
+            max_batch: 4,
+            batch_deadline_us: 2_000,
+            queue_depth: 256,
+            workers: 1,
+            backend: BackendKind::Auto,
+        }
     }
 }
 
@@ -274,5 +324,16 @@ mod tests {
     fn engine_defaults_sane() {
         let c = EngineConfig::default();
         assert!(c.max_batch >= 1 && c.queue_depth >= c.max_batch);
+        assert_eq!(c.backend, BackendKind::Auto);
+    }
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("native").unwrap(), BackendKind::Native);
+        assert_eq!(BackendKind::parse("lowrank").unwrap(), BackendKind::Native);
+        assert!(BackendKind::parse("tpu").is_err());
+        assert_eq!(BackendKind::Native.to_string(), "native");
     }
 }

@@ -1,6 +1,9 @@
-//! The serving engine: a handle + an executor thread that owns all PJRT
-//! state (handles are not `Send`, so every touch of the runtime happens on
-//! that thread; the handle talks to it over channels).
+//! The serving engine: a handle + an executor thread that owns all backend
+//! state (PJRT handles are not `Send`, so every touch of the runtime
+//! happens on that thread; the handle talks to it over channels).  The
+//! executor instantiates the configured [`Backend`]
+//! (`EngineConfig.backend`): PJRT artifacts or the native low-rank models
+//! serve through the identical router/batcher path.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -12,7 +15,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::{EngineConfig, Manifest};
 use crate::metrics::Registry;
-use crate::runtime::{LoadedModel, Runtime};
+use crate::runtime::{make_backend, Backend, ForwardModel};
 
 use super::batcher::{Batch, DynamicBatcher};
 use super::request::{Request, RequestId, Response, SubmitError};
@@ -194,18 +197,18 @@ impl Drop for Engine {
 fn executor_main(artifacts: PathBuf, ids: Vec<String>, cfg: EngineConfig,
                  shapes: Option<Vec<(usize, usize)>>, rx: mpsc::Receiver<Command>,
                  ready: mpsc::Sender<Result<()>>, shared: Arc<Shared>) {
-    let load = (|| -> Result<(Manifest, BTreeMap<String, LoadedModel>)> {
+    let load = (|| -> Result<BTreeMap<String, Box<dyn ForwardModel>>> {
         let manifest = Manifest::load(&artifacts)?;
-        let runtime = Runtime::new()?;
+        let backend: Box<dyn Backend> = make_backend(cfg.backend)?;
         let mut models = BTreeMap::new();
         for id in &ids {
-            let m = runtime.load_variant(&manifest, id, shapes.as_deref())?;
-            models.insert(id.clone(), m);
+            let l = backend.load_variant(&manifest, id, shapes.as_deref())?;
+            models.insert(id.clone(), l.model);
         }
-        Ok((manifest, models))
+        Ok(models)
     })();
     let models = match load {
-        Ok((_, models)) => {
+        Ok(models) => {
             let _ = ready.send(Ok(()));
             models
         }
@@ -247,7 +250,8 @@ fn executor_main(artifacts: PathBuf, ids: Vec<String>, cfg: EngineConfig,
     run_remaining(&mut batcher, &models, &shared, &exec_hist, &lat_hist);
 }
 
-fn run_remaining(batcher: &mut DynamicBatcher, models: &BTreeMap<String, LoadedModel>,
+fn run_remaining(batcher: &mut DynamicBatcher,
+                 models: &BTreeMap<String, Box<dyn ForwardModel>>,
                  shared: &Shared, exec_hist: &crate::metrics::Histogram,
                  lat_hist: &crate::metrics::Histogram) {
     for batch in batcher.drain_all() {
@@ -272,10 +276,10 @@ pub fn plan_chunks(n: usize, avail: &[usize]) -> Vec<(usize, usize)> {
     out
 }
 
-fn run_batch(batch: Batch, models: &BTreeMap<String, LoadedModel>, shared: &Shared,
+fn run_batch(batch: Batch, models: &BTreeMap<String, Box<dyn ForwardModel>>, shared: &Shared,
              exec_hist: &crate::metrics::Histogram, lat_hist: &crate::metrics::Histogram) {
-    let model = match models.get(&batch.variant) {
-        Some(m) => m,
+    let model: &dyn ForwardModel = match models.get(&batch.variant) {
+        Some(m) => m.as_ref(),
         None => return, // validated at submit; unreachable in practice
     };
     let seq = batch.seq;
@@ -287,17 +291,22 @@ fn run_batch(batch: Batch, models: &BTreeMap<String, LoadedModel>, shared: &Shar
         .collect();
     avail.sort_unstable();
     let mut reqs = batch.requests;
+    if avail.is_empty() {
+        // Shape-agnostic backend (native low-rank): run the whole group as
+        // one exact-sized call, no padding.
+        avail.push(reqs.len().max(1));
+    }
     for (b, take) in plan_chunks(reqs.len(), &avail) {
         let chunk: Vec<Request> = reqs.drain(..take).collect();
         execute_chunk(model, b, seq, chunk, shared, exec_hist, lat_hist);
     }
 }
 
-fn execute_chunk(model: &LoadedModel, b: usize, seq: usize, chunk: Vec<Request>,
+fn execute_chunk(model: &dyn ForwardModel, b: usize, seq: usize, chunk: Vec<Request>,
                  shared: &Shared, exec_hist: &crate::metrics::Histogram,
                  lat_hist: &crate::metrics::Histogram) {
     let n = chunk.len();
-    let vocab = model.vocab;
+    let vocab = model.vocab();
     let mut tokens = vec![0i32; b * seq];
     for (r, req) in chunk.iter().enumerate() {
         tokens[r * seq..(r + 1) * seq].copy_from_slice(&req.tokens);
@@ -307,11 +316,12 @@ fn execute_chunk(model: &LoadedModel, b: usize, seq: usize, chunk: Vec<Request>,
         let (head, tail) = tokens.split_at_mut(r * seq);
         tail[..seq].copy_from_slice(&head[..seq]);
     }
-    let image = if model.img_dim > 0 {
-        let mut img = vec![0f32; b * model.img_dim];
+    let img_dim = model.img_dim();
+    let image = if img_dim > 0 {
+        let mut img = vec![0f32; b * img_dim];
         for (r, req) in chunk.iter().enumerate() {
             if let Some(iv) = &req.image {
-                img[r * model.img_dim..(r + 1) * model.img_dim].copy_from_slice(iv);
+                img[r * img_dim..(r + 1) * img_dim].copy_from_slice(iv);
             }
         }
         Some(img)
@@ -326,7 +336,7 @@ fn execute_chunk(model: &LoadedModel, b: usize, seq: usize, chunk: Vec<Request>,
     match out {
         Ok(vals) => {
             for (r, req) in chunk.into_iter().enumerate() {
-                let output = if model.action_head {
+                let output = if model.action_head() {
                     vals[r * 5..(r + 1) * 5].to_vec()
                 } else {
                     // last-position logits of row r

@@ -1,0 +1,510 @@
+//! Cache-blocked matmul over mixed-precision weight factors.
+//!
+//! The factorized apply is `y = x @ W1 @ W2` with `W1 = U_k Σ_k^{1/2}`
+//! (m×k) and `W2 = Σ_k^{1/2} V_kᵀ` (k×n) — the symmetric-sqrt split the
+//! Dobi remap emits (`python/compile/dobi/remap.py::factorize`), i.e. the
+//! paper's `y = U_k (Σ_k (V_kᵀ x))` in row-major convention.  Cost is
+//! `2·rows·k·(m+n)` FLOPs vs `2·rows·m·n` dense, so any `k < mn/(m+n)`
+//! is a genuine FLOP win.
+//!
+//! Factors stay in their stored precision (f32 / f16 / int8+scales) and
+//! are decoded tile-by-tile through the [`crate::quant`] codecs inside the
+//! GEMM: a `K_BLOCK`-row tile of the weight is dequantized once into an
+//! L1/L2-resident scratch and reused across every row of `x`, so decode
+//! cost amortizes over the batch while resident memory stays at the
+//! quantized footprint.
+
+use anyhow::{bail, Result};
+
+use crate::quant::{f16_to_f32, f32_to_f16, quantize_i8_cols};
+
+/// Rows of the weight operand decoded per tile.  64×512 f32 ≈ 128 KB worst
+/// case (w_gate/w_up at nano scale) — L2-resident on anything modern.
+pub const K_BLOCK: usize = 64;
+
+/// Stored payload of one weight factor.
+pub enum FactorData {
+    F32(Vec<f32>),
+    /// IEEE 754 half, little-endian u16 carriers (the `.dobiw` f16 dtype).
+    F16(Vec<u16>),
+    /// Symmetric absmax int8 codes + f32 scales.  `per_row == false` means
+    /// one scale per column (python `quantize_absmax(axis=0)`, the W1
+    /// convention); `per_row == true` means one scale per row (`axis=1`,
+    /// the W2 convention).
+    I8 { codes: Vec<i8>, scales: Vec<f32>, per_row: bool },
+}
+
+/// A 2-D weight operand in storage precision, decodable tile-by-tile.
+pub struct Factor {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: FactorData,
+}
+
+impl Factor {
+    pub fn f32(rows: usize, cols: usize, vals: Vec<f32>) -> Factor {
+        assert_eq!(vals.len(), rows * cols, "f32 factor shape mismatch");
+        Factor { rows, cols, data: FactorData::F32(vals) }
+    }
+
+    pub fn f16(rows: usize, cols: usize, halves: Vec<u16>) -> Factor {
+        assert_eq!(halves.len(), rows * cols, "f16 factor shape mismatch");
+        Factor { rows, cols, data: FactorData::F16(halves) }
+    }
+
+    /// Encode f32 values to an f16 factor (round-to-nearest-even).
+    pub fn f16_from_f32(rows: usize, cols: usize, vals: &[f32]) -> Factor {
+        assert_eq!(vals.len(), rows * cols, "f16 factor shape mismatch");
+        Factor::f16(rows, cols, vals.iter().map(|&v| f32_to_f16(v)).collect())
+    }
+
+    pub fn i8(rows: usize, cols: usize, codes: Vec<i8>, scales: Vec<f32>,
+              per_row: bool) -> Result<Factor> {
+        anyhow::ensure!(codes.len() == rows * cols, "i8 factor shape mismatch");
+        let want = if per_row { rows } else { cols };
+        anyhow::ensure!(scales.len() == want,
+                        "i8 factor scales len {} != {want}", scales.len());
+        Ok(Factor { rows, cols, data: FactorData::I8 { codes, scales, per_row } })
+    }
+
+    /// Quantize f32 values to int8 with per-column scales (the W1/axis=0
+    /// convention of `remap.quantize_absmax`).
+    pub fn i8_cols_from_f32(rows: usize, cols: usize, vals: &[f32]) -> Factor {
+        let (codes, scales) = quantize_i8_cols(vals, rows, cols, 8);
+        Factor { rows, cols, data: FactorData::I8 { codes, scales, per_row: false } }
+    }
+
+    /// Quantize f32 values to int8 with per-row scales (the W2/axis=1
+    /// convention): quantize the transpose per-column, then transpose back.
+    pub fn i8_rows_from_f32(rows: usize, cols: usize, vals: &[f32]) -> Factor {
+        let mut t = vec![0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                t[c * rows + r] = vals[r * cols + c];
+            }
+        }
+        let (codes_t, scales) = quantize_i8_cols(&t, cols, rows, 8);
+        let mut codes = vec![0i8; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                codes[r * cols + c] = codes_t[c * rows + r];
+            }
+        }
+        Factor { rows, cols, data: FactorData::I8 { codes, scales, per_row: true } }
+    }
+
+    pub fn n_elems(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Bytes this factor keeps resident in host memory (codes + scales).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.data {
+            FactorData::F32(v) => v.len() * 4,
+            FactorData::F16(v) => v.len() * 2,
+            FactorData::I8 { codes, scales, .. } => codes.len() + scales.len() * 4,
+        }
+    }
+
+    /// Decode rows `[r0, r0 + nr)` into `out[.. nr * cols]` (row-major f32).
+    pub fn decode_rows(&self, r0: usize, nr: usize, out: &mut [f32]) {
+        let c = self.cols;
+        debug_assert!(r0 + nr <= self.rows && out.len() >= nr * c);
+        match &self.data {
+            FactorData::F32(v) => out[..nr * c].copy_from_slice(&v[r0 * c..(r0 + nr) * c]),
+            FactorData::F16(h) => {
+                for (i, slot) in out[..nr * c].iter_mut().enumerate() {
+                    *slot = f16_to_f32(h[r0 * c + i]);
+                }
+            }
+            FactorData::I8 { codes, scales, per_row } => {
+                for r in 0..nr {
+                    let base = (r0 + r) * c;
+                    if *per_row {
+                        let s = scales[r0 + r];
+                        for j in 0..c {
+                            out[r * c + j] = codes[base + j] as f32 * s;
+                        }
+                    } else {
+                        for j in 0..c {
+                            out[r * c + j] = codes[base + j] as f32 * scales[j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Fully decode to f32 (tests, storage accounting cross-checks).
+    pub fn to_f32(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.n_elems()];
+        self.decode_rows(0, self.rows, &mut out);
+        out
+    }
+
+    /// Keep only the first `new_cols` columns (rank truncation on W1:
+    /// singular directions are stored in decreasing-σ order, so dropping
+    /// trailing columns IS the rank-k' truncation).
+    pub fn truncate_cols(&mut self, new_cols: usize) {
+        assert!(new_cols >= 1 && new_cols <= self.cols, "bad column truncation");
+        if new_cols == self.cols {
+            return;
+        }
+        let (rows, cols) = (self.rows, self.cols);
+        let pick = |i: usize| (i / new_cols) * cols + (i % new_cols);
+        match &mut self.data {
+            FactorData::F32(v) => {
+                let nv: Vec<f32> = (0..rows * new_cols).map(|i| v[pick(i)]).collect();
+                *v = nv;
+            }
+            FactorData::F16(v) => {
+                let nv: Vec<u16> = (0..rows * new_cols).map(|i| v[pick(i)]).collect();
+                *v = nv;
+            }
+            FactorData::I8 { codes, scales, per_row } => {
+                let nc: Vec<i8> = (0..rows * new_cols).map(|i| codes[pick(i)]).collect();
+                *codes = nc;
+                if !*per_row {
+                    scales.truncate(new_cols);
+                }
+            }
+        }
+        self.cols = new_cols;
+    }
+
+    /// Keep only the first `new_rows` rows (rank truncation on W2).
+    pub fn truncate_rows(&mut self, new_rows: usize) {
+        assert!(new_rows >= 1 && new_rows <= self.rows, "bad row truncation");
+        if new_rows == self.rows {
+            return;
+        }
+        let keep = new_rows * self.cols;
+        match &mut self.data {
+            FactorData::F32(v) => v.truncate(keep),
+            FactorData::F16(v) => v.truncate(keep),
+            FactorData::I8 { codes, scales, per_row } => {
+                codes.truncate(keep);
+                if *per_row {
+                    scales.truncate(new_rows);
+                }
+            }
+        }
+        self.rows = new_rows;
+    }
+}
+
+/// `y = x @ W`: `x` is (rows, w.rows) f32 row-major, result (rows, w.cols).
+/// Blocked over the shared dimension; each weight tile decodes once and is
+/// reused across all `rows` of `x`.
+pub fn matmul(x: &[f32], rows: usize, w: &Factor) -> Vec<f32> {
+    let mut out = vec![0f32; rows * w.cols];
+    matmul_into(x, rows, w, &mut out);
+    out
+}
+
+/// Accumulating core of [`matmul`] (`out` must be zeroed by the caller).
+pub fn matmul_into(x: &[f32], rows: usize, w: &Factor, out: &mut [f32]) {
+    let (inner, cols) = (w.rows, w.cols);
+    assert_eq!(x.len(), rows * inner, "x len {} != rows {rows} x inner {inner}", x.len());
+    assert_eq!(out.len(), rows * cols, "out len mismatch");
+    let mut tile = vec![0f32; K_BLOCK.min(inner) * cols];
+    let mut k0 = 0;
+    while k0 < inner {
+        let kb = K_BLOCK.min(inner - k0);
+        w.decode_rows(k0, kb, &mut tile);
+        for i in 0..rows {
+            let xrow = &x[i * inner + k0..i * inner + k0 + kb];
+            let orow = &mut out[i * cols..(i + 1) * cols];
+            for (dk, &a) in xrow.iter().enumerate() {
+                if a != 0.0 {
+                    let wrow = &tile[dk * cols..dk * cols + cols];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += a * wv;
+                    }
+                }
+            }
+        }
+        k0 += kb;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Linear layers
+// ---------------------------------------------------------------------------
+
+/// One rank-truncated compression target: `W ≈ W1 @ W2`.
+pub struct FactorizedLinear {
+    pub name: String,
+    /// (m, k) — `U_k Σ_k^{1/2}`.
+    pub w1: Factor,
+    /// (k, n) — `Σ_k^{1/2} V_kᵀ`.
+    pub w2: Factor,
+}
+
+impl FactorizedLinear {
+    pub fn new(name: &str, w1: Factor, w2: Factor) -> Result<FactorizedLinear> {
+        if w1.cols != w2.rows {
+            bail!("{name}: factor rank mismatch, w1 is {}x{} but w2 is {}x{}",
+                  w1.rows, w1.cols, w2.rows, w2.cols);
+        }
+        Ok(FactorizedLinear { name: name.to_string(), w1, w2 })
+    }
+
+    pub fn in_dim(&self) -> usize {
+        self.w1.rows
+    }
+
+    pub fn out_dim(&self) -> usize {
+        self.w2.cols
+    }
+
+    pub fn rank(&self) -> usize {
+        self.w1.cols
+    }
+
+    /// `y = (x @ W1) @ W2` for `x` (rows, m) → (rows, n).
+    pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mid = matmul(x, rows, &self.w1);
+        matmul(&mid, rows, &self.w2)
+    }
+
+    /// Truncate to rank `k` (clamped to `[1, rank()]`) — drops the smallest
+    /// singular directions, exactly the Dobi truncation-position semantics.
+    pub fn set_rank(&mut self, k: usize) {
+        let k = k.clamp(1, self.rank());
+        self.w1.truncate_cols(k);
+        self.w2.truncate_rows(k);
+    }
+
+    /// Factorized FLOPs for a (rows, m) input: `2·rows·k·(m+n)`.
+    pub fn flops(&self, rows: usize) -> u64 {
+        2 * rows as u64 * self.rank() as u64 * (self.in_dim() + self.out_dim()) as u64
+    }
+}
+
+/// A serving-side weight application: dense passthrough or low-rank.
+pub enum Linear {
+    Dense { name: String, w: Factor },
+    LowRank(FactorizedLinear),
+}
+
+impl Linear {
+    pub fn name(&self) -> &str {
+        match self {
+            Linear::Dense { name, .. } => name,
+            Linear::LowRank(f) => &f.name,
+        }
+    }
+
+    pub fn in_dim(&self) -> usize {
+        match self {
+            Linear::Dense { w, .. } => w.rows,
+            Linear::LowRank(f) => f.in_dim(),
+        }
+    }
+
+    pub fn out_dim(&self) -> usize {
+        match self {
+            Linear::Dense { w, .. } => w.cols,
+            Linear::LowRank(f) => f.out_dim(),
+        }
+    }
+
+    /// Effective rank (full for dense).
+    pub fn rank(&self) -> usize {
+        match self {
+            Linear::Dense { w, .. } => w.rows.min(w.cols),
+            Linear::LowRank(f) => f.rank(),
+        }
+    }
+
+    pub fn apply(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        match self {
+            Linear::Dense { w, .. } => matmul(x, rows, w),
+            Linear::LowRank(f) => f.apply(x, rows),
+        }
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            Linear::Dense { w, .. } => w.resident_bytes(),
+            Linear::LowRank(f) => f.w1.resident_bytes() + f.w2.resident_bytes(),
+        }
+    }
+
+    pub fn flops(&self, rows: usize) -> u64 {
+        match self {
+            Linear::Dense { w, .. } => 2 * rows as u64 * w.rows as u64 * w.cols as u64,
+            Linear::LowRank(f) => f.flops(rows),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mathx::XorShift;
+
+    /// Unblocked triple-loop reference.
+    fn naive(x: &[f32], rows: usize, w: &[f32], inner: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0f32; rows * cols];
+        for i in 0..rows {
+            for k in 0..inner {
+                let a = x[i * inner + k];
+                for j in 0..cols {
+                    out[i * cols + j] += a * w[k * cols + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn randv(rng: &mut XorShift, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_ragged_shapes() {
+        let mut rng = XorShift::new(1);
+        // deliberately not multiples of K_BLOCK
+        for &(rows, inner, cols) in &[(9usize, 67usize, 45usize), (1, 130, 3), (17, 64, 128)] {
+            let x = randv(&mut rng, rows * inner, 1.0);
+            let w = randv(&mut rng, inner * cols, 0.1);
+            let got = matmul(&x, rows, &Factor::f32(inner, cols, w.clone()));
+            let want = naive(&x, rows, &w, inner, cols);
+            assert!(max_abs_diff(&got, &want) < 1e-4, "{rows}x{inner}x{cols}");
+        }
+    }
+
+    #[test]
+    fn factorized_full_rank_matches_dense_reference() {
+        // Acceptance criterion: f32 full-rank factorized apply == dense W x
+        // within 1e-4.  W is defined as the exact product W1 @ W2.
+        let (rows, m, k, n) = (16usize, 48usize, 32usize, 32usize); // k == min(m, n)
+        let mut rng = XorShift::new(2);
+        let w1 = randv(&mut rng, m * k, 0.2);
+        let w2 = randv(&mut rng, k * n, 0.2);
+        let w = naive(&w1, m, &w2, k, n); // dense W = W1 @ W2, (m, n)
+        let x = randv(&mut rng, rows * m, 1.0);
+        let lin = FactorizedLinear::new(
+            "t", Factor::f32(m, k, w1), Factor::f32(k, n, w2)).unwrap();
+        let dense = naive(&x, rows, &w, m, n);
+        let fact = lin.apply(&x, rows);
+        assert!(max_abs_diff(&fact, &dense) < 1e-4,
+                "max diff {}", max_abs_diff(&fact, &dense));
+    }
+
+    #[test]
+    fn f16_factor_close_to_f32() {
+        let (rows, m, n) = (8usize, 40usize, 24usize);
+        let mut rng = XorShift::new(3);
+        let w = randv(&mut rng, m * n, 0.1);
+        let x = randv(&mut rng, rows * m, 1.0);
+        let exact = matmul(&x, rows, &Factor::f32(m, n, w.clone()));
+        let half = matmul(&x, rows, &Factor::f16_from_f32(m, n, &w));
+        // f16 has ~1e-3 relative precision; sums of 40 terms stay well under 0.1
+        assert!(max_abs_diff(&exact, &half) < 0.05);
+        assert!(max_abs_diff(&exact, &half) > 0.0, "f16 path suspiciously exact");
+    }
+
+    #[test]
+    fn i8_factors_close_to_f32_both_axes() {
+        let (rows, m, n) = (8usize, 32usize, 48usize);
+        let mut rng = XorShift::new(4);
+        let w = randv(&mut rng, m * n, 0.1);
+        let x = randv(&mut rng, rows * m, 1.0);
+        let exact = matmul(&x, rows, &Factor::f32(m, n, w.clone()));
+        for f in [Factor::i8_cols_from_f32(m, n, &w), Factor::i8_rows_from_f32(m, n, &w)] {
+            let got = matmul(&x, rows, &f);
+            // int8 absmax: ~0.4% per-element error; conservative bound
+            assert!(max_abs_diff(&exact, &got) < 0.2);
+        }
+    }
+
+    #[test]
+    fn i8_roundtrip_matches_quant_codec() {
+        // decode_rows must agree with quant::dequantize_i8 exactly
+        let (m, n) = (12usize, 10usize);
+        let mut rng = XorShift::new(5);
+        let w = randv(&mut rng, m * n, 0.3);
+        let f = Factor::i8_cols_from_f32(m, n, &w);
+        let via_tile = f.to_f32();
+        if let FactorData::I8 { codes, scales, .. } = &f.data {
+            let via_codec = crate::quant::dequantize_i8(codes, m, n, scales, (1, n));
+            assert_eq!(via_tile, via_codec);
+        } else {
+            panic!("expected i8 factor");
+        }
+    }
+
+    #[test]
+    fn set_rank_equals_manual_truncation() {
+        let (rows, m, k, n, k2) = (5usize, 20usize, 16usize, 12usize, 6usize);
+        let mut rng = XorShift::new(6);
+        let w1 = randv(&mut rng, m * k, 0.2);
+        let w2 = randv(&mut rng, k * n, 0.2);
+        // manual: keep first k2 cols of w1 / rows of w2
+        let w1t: Vec<f32> = (0..m * k2).map(|i| w1[(i / k2) * k + (i % k2)]).collect();
+        let w2t: Vec<f32> = w2[..k2 * n].to_vec();
+        let x = randv(&mut rng, rows * m, 1.0);
+        let manual = FactorizedLinear::new(
+            "m", Factor::f32(m, k2, w1t), Factor::f32(k2, n, w2t)).unwrap()
+            .apply(&x, rows);
+        let mut lin = FactorizedLinear::new(
+            "t", Factor::f32(m, k, w1), Factor::f32(k, n, w2)).unwrap();
+        lin.set_rank(k2);
+        assert_eq!(lin.rank(), k2);
+        assert!(max_abs_diff(&lin.apply(&x, rows), &manual) < 1e-6);
+    }
+
+    #[test]
+    fn truncation_preserves_i8_scales_layout() {
+        let (m, k) = (10usize, 8usize);
+        let mut rng = XorShift::new(7);
+        let w1 = randv(&mut rng, m * k, 0.2);
+        let mut f_cols = Factor::i8_cols_from_f32(m, k, &w1); // per-column scales
+        f_cols.truncate_cols(3);
+        assert_eq!((f_cols.rows, f_cols.cols), (m, 3));
+        if let FactorData::I8 { scales, .. } = &f_cols.data {
+            assert_eq!(scales.len(), 3);
+        }
+        let mut f_rows = Factor::i8_rows_from_f32(k, m, &w1); // per-row scales
+        f_rows.truncate_rows(5);
+        assert_eq!((f_rows.rows, f_rows.cols), (5, m));
+        if let FactorData::I8 { scales, .. } = &f_rows.data {
+            assert_eq!(scales.len(), 5);
+        }
+        // decoded truncation == truncated decode
+        let full = Factor::i8_cols_from_f32(m, k, &w1).to_f32();
+        let trunc = f_cols.to_f32();
+        for r in 0..m {
+            for c in 0..3 {
+                assert_eq!(trunc[r * 3 + c], full[r * k + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_mismatch_rejected() {
+        assert!(FactorizedLinear::new(
+            "bad",
+            Factor::f32(4, 3, vec![0.0; 12]),
+            Factor::f32(2, 5, vec![0.0; 10]),
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn flops_accounting() {
+        let lin = FactorizedLinear::new(
+            "f", Factor::f32(100, 10, vec![0.0; 1000]),
+            Factor::f32(10, 50, vec![0.0; 500])).unwrap();
+        assert_eq!(lin.flops(4), 2 * 4 * 10 * 150);
+        let dense = Linear::Dense { name: "d".into(), w: Factor::f32(100, 50, vec![0.0; 5000]) };
+        assert_eq!(dense.flops(4), 2 * 4 * 100 * 50);
+    }
+}

@@ -1,0 +1,141 @@
+//! Native low-rank execution backend — rank-truncated factorized
+//! inference in-process, no PJRT.
+//!
+//! This is the serving-side realization of the Dobi-SVD deliverable: a
+//! model whose compression targets are stored as `W ≈ W1 W2` rank-k
+//! factors (`W1 = U_k Σ_k^{1/2}`, `W2 = Σ_k^{1/2} V_kᵀ`, remap layout) and
+//! *executed* in that form, so the FLOP reduction `2·k·(m+n)` vs `2·m·n`
+//! is realized at inference time rather than only on disk — the point
+//! SVD-LLM V2 makes about truncation needing to pay off at serve time.
+//!
+//! Layering:
+//! * [`kernel`] — cache-blocked GEMM over f32/f16/int8 factors, decoded
+//!   tile-by-tile through [`crate::quant`]; [`kernel::FactorizedLinear`].
+//! * [`model`]  — [`model::FactorizedModel`], the full LLaMA-style forward
+//!   (RMSNorm / RoPE / causal attention / SwiGLU / tied head, plus
+//!   VLM prefix + VLA head) loadable from the `.dobiw` store.
+//! * [`synth`]  — deterministic synthetic models/stores so tests and
+//!   benches run without compiled artifacts.
+//! * [`NativeBackend`] — the [`crate::runtime::Backend`] implementation
+//!   the coordinator, eval harness, and CLI route to via `--backend`.
+
+pub mod kernel;
+pub mod model;
+pub mod synth;
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Manifest;
+use crate::runtime::{Backend, LoadStats, Loaded};
+use crate::storage::Store;
+
+pub use kernel::{matmul, Factor, FactorData, FactorizedLinear, Linear};
+pub use model::FactorizedModel;
+
+/// In-process factorized inference backend.
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native-lowrank"
+    }
+
+    /// `shapes` is ignored: the native forward is shape-agnostic, and the
+    /// engine validates requested shapes against the manifest upstream.
+    fn load_variant(&self, manifest: &Manifest, id: &str,
+                    _shapes: Option<&[(usize, usize)]>) -> Result<Loaded> {
+        let t0 = Instant::now();
+        let v = manifest.variant(id)?;
+        let info = manifest
+            .models
+            .get(&v.model)
+            .ok_or_else(|| anyhow!("model `{}` missing from manifest", v.model))?;
+        let store = Store::open(&manifest.path(&v.weights))?;
+        let model = FactorizedModel::from_store(info, v, &store)?;
+        let stats = LoadStats {
+            weight_bytes: model.resident_bytes(),
+            file_bytes: store.file_bytes,
+            payload_bytes: store.payload_bytes(),
+            load_weights_s: t0.elapsed().as_secs_f64(),
+            compile_s: 0.0,
+        };
+        Ok(Loaded { model: Box::new(model), stats })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::synth::{tiny_manifest_json, tiny_store_tensors, SynthStyle, TinyDims};
+    use super::*;
+    use crate::storage::write_store;
+
+    fn dims() -> TinyDims {
+        TinyDims { vocab: 61, d: 16, heads: 2, layers: 2, ff: 24 }
+    }
+
+    fn artifacts(style: SynthStyle, tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("dobi_lowrank_backend_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        let kind = if style == SynthStyle::DenseF32 { "dense" } else { "factorized" };
+        write_store(&dir.join("w.dobiw"), &tiny_store_tensors(dims(), 0, style)).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            tiny_manifest_json(dims(), 0, &[("tiny/x", kind, 0.6, "w.dobiw")]),
+        )
+        .unwrap();
+        dir
+    }
+
+    #[test]
+    fn backend_loads_dense_store_and_serves() {
+        let dir = artifacts(SynthStyle::DenseF32, "dense");
+        let m = Manifest::load(&dir).unwrap();
+        let loaded = NativeBackend.load_variant(&m, "tiny/x", None).unwrap();
+        assert!(loaded.stats.weight_bytes > 0);
+        let tokens: Vec<i32> = (0..32).map(|i| i % 61).collect();
+        let out = loaded.model.forward(2, 16, &tokens, None).unwrap();
+        assert_eq!(out.len(), 2 * 16 * 61);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // shape-agnostic: the engine exact-sizes native batches, no padding
+        assert!(loaded.model.shapes().is_empty());
+    }
+
+    #[test]
+    fn backend_loads_quantized_factors_and_tracks_footprint() {
+        let dense_dir = artifacts(SynthStyle::DenseF32, "dense2");
+        let q8_dir = artifacts(SynthStyle::FactorQ8, "q8");
+        let md = Manifest::load(&dense_dir).unwrap();
+        let mq = Manifest::load(&q8_dir).unwrap();
+        let dense = NativeBackend.load_variant(&md, "tiny/x", None).unwrap();
+        let q8 = NativeBackend.load_variant(&mq, "tiny/x", None).unwrap();
+        // int8 factors must be resident-smaller than the dense f32 twin
+        assert!(q8.stats.weight_bytes < dense.stats.weight_bytes,
+                "{} !< {}", q8.stats.weight_bytes, dense.stats.weight_bytes);
+        // and still compute something close to it
+        let tokens: Vec<i32> = (0..16).map(|i| (i * 3) % 61).collect();
+        let a = dense.model.forward(1, 16, &tokens, None).unwrap();
+        let b = q8.model.forward(1, 16, &tokens, None).unwrap();
+        let max = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+        assert!(max < 1.0, "quantized logits drifted by {max}");
+        assert!(max > 0.0, "quantization should not be bit-exact");
+    }
+
+    #[test]
+    fn backend_loads_f16_factors() {
+        let dir = artifacts(SynthStyle::FactorF16, "f16");
+        let m = Manifest::load(&dir).unwrap();
+        let loaded = NativeBackend.load_variant(&m, "tiny/x", None).unwrap();
+        let tokens: Vec<i32> = (0..16).collect();
+        assert!(loaded.model.forward(1, 16, &tokens, None).unwrap()
+            .iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn unknown_variant_fails() {
+        let dir = artifacts(SynthStyle::DenseF32, "dense3");
+        let m = Manifest::load(&dir).unwrap();
+        assert!(NativeBackend.load_variant(&m, "tiny/nope", None).is_err());
+    }
+}

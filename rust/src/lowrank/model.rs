@@ -1,0 +1,645 @@
+//! Native factorized transformer: the LLaMA-architecture forward
+//! (RMSNorm, interleaved RoPE, causal attention, SwiGLU, tied LM head)
+//! executed in-process over [`Linear`] weights — dense or rank-truncated
+//! factors — loaded straight from the `.dobiw` store.
+//!
+//! Mirrors `python/compile/model.py` exactly: same parameter naming
+//! (`embed`, `layers.{i}.{attn_norm,mlp_norm,wq,wk,wv,wo,w_gate,w_up,
+//! w_down}`, `final_norm`, optional `img_proj`/`act_head`), same RoPE
+//! pairing, same VLM prefix and VLA head semantics — so the byte-level
+//! corpora, eval harness, and coordinator work unchanged on this backend.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{ModelInfo, Variant};
+use crate::lowrank::kernel::{Factor, FactorData, FactorizedLinear, Linear};
+use crate::runtime::ForwardModel;
+use crate::storage::{Dtype, Store};
+
+/// RoPE base; `python/compile/model.py::ModelConfig.rope_theta` default.
+/// Not exported through the manifest, so pinned here.
+pub const ROPE_THETA: f64 = 10_000.0;
+
+const RMS_EPS: f32 = 1e-5;
+
+/// The seven per-layer compression targets, manifest order.
+pub const LAYER_MATS: [&str; 7] = ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"];
+
+/// (m, n) of one compression target given the model widths — the single
+/// source of truth shared by the loader and the synth fixture writer.
+pub fn target_dims(mat: &str, d: usize, ff: usize) -> (usize, usize) {
+    match mat {
+        "w_gate" | "w_up" => (d, ff),
+        "w_down" => (ff, d),
+        _ => (d, d), // wq wk wv wo
+    }
+}
+
+pub struct LayerWeights {
+    pub attn_norm: Vec<f32>,
+    pub mlp_norm: Vec<f32>,
+    pub wq: Linear,
+    pub wk: Linear,
+    pub wv: Linear,
+    pub wo: Linear,
+    pub w_gate: Linear,
+    pub w_up: Linear,
+    pub w_down: Linear,
+}
+
+impl LayerWeights {
+    pub fn mats(&self) -> [&Linear; 7] {
+        [&self.wq, &self.wk, &self.wv, &self.wo, &self.w_gate, &self.w_up, &self.w_down]
+    }
+
+    fn mats_mut(&mut self) -> [&mut Linear; 7] {
+        [&mut self.wq, &mut self.wk, &mut self.wv, &mut self.wo,
+         &mut self.w_gate, &mut self.w_up, &mut self.w_down]
+    }
+}
+
+/// A fully-resident native model: factors stay in storage precision and
+/// decode tile-by-tile inside the blocked GEMMs.
+pub struct FactorizedModel {
+    pub id: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub img_dim: usize,
+    pub n_img_tokens: usize,
+    pub action_head: bool,
+    pub embed: Vec<f32>,      // (vocab, d)
+    pub final_norm: Vec<f32>, // (d,)
+    pub layers: Vec<LayerWeights>,
+    pub img_proj: Option<Vec<f32>>, // (img_dim, n_img_tokens * d)
+    pub act_head: Option<Vec<f32>>, // (d, 5)
+}
+
+// ---------------------------------------------------------------------------
+// Loading
+// ---------------------------------------------------------------------------
+
+fn vec_f32(store: &Store, name: &str, want_len: usize) -> Result<Vec<f32>> {
+    let (vals, _) = store.tensor_f32(name)?;
+    anyhow::ensure!(vals.len() == want_len,
+                    "tensor `{name}`: {} elements, expected {want_len}", vals.len());
+    Ok(vals)
+}
+
+/// Read `name` from the store as a [`Factor`] in its stored precision:
+/// plain f32/f16 tensors pass through; `name.q8` + `name.scales` pairs stay
+/// int8 with their broadcast axis.  Returns Ok(None) when absent.
+fn factor_from_store(store: &Store, name: &str) -> Result<Option<Factor>> {
+    if let Some(t) = store.tensors.get(name) {
+        anyhow::ensure!(t.shape.len() == 2, "`{name}`: factors must be 2-D");
+        let (rows, cols) = (t.shape[0], t.shape[1]);
+        let data = match t.dtype {
+            Dtype::F32 => FactorData::F32(t.to_f32()),
+            Dtype::F16 => {
+                let halves: Vec<u16> = t
+                    .data
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                FactorData::F16(halves)
+            }
+            Dtype::I8 => bail!("`{name}`: bare int8 tensor without `.scales` companion"),
+            Dtype::I32 => bail!("`{name}`: int32 is not a weight precision"),
+        };
+        return Ok(Some(Factor { rows, cols, data }));
+    }
+    let Some(q) = store.tensors.get(&format!("{name}.q8")) else {
+        return Ok(None);
+    };
+    let s = store
+        .tensors
+        .get(&format!("{name}.scales"))
+        .ok_or_else(|| anyhow!("`{name}.q8` present but `{name}.scales` missing"))?;
+    anyhow::ensure!(q.shape.len() == 2 && s.shape.len() == 2,
+                    "`{name}`: quantized tensors must be 2-D");
+    anyhow::ensure!(q.dtype == Dtype::I8, "`{name}.q8`: expected int8 codes");
+    let (rows, cols) = (q.shape[0], q.shape[1]);
+    let per_row = match (s.shape[0], s.shape[1]) {
+        (1, c) if c == cols => false,
+        (r, 1) if r == rows => true,
+        other => bail!("`{name}.scales`: unsupported shape {other:?} for ({rows}, {cols})"),
+    };
+    Ok(Some(Factor::i8(rows, cols, q.as_i8(), s.to_f32(), per_row)?))
+}
+
+/// Load `name` as a [`Linear`]: a stored dense matrix, or a
+/// `name.w1`/`name.w2` factor pair (each possibly quantized).
+fn linear_from_store(store: &Store, name: &str, m: usize, n: usize) -> Result<Linear> {
+    if let Some(w) = factor_from_store(store, name)? {
+        anyhow::ensure!(w.rows == m && w.cols == n,
+                        "`{name}`: stored {}x{}, model wants {m}x{n}", w.rows, w.cols);
+        return Ok(Linear::Dense { name: name.to_string(), w });
+    }
+    let w1 = factor_from_store(store, &format!("{name}.w1"))?
+        .ok_or_else(|| anyhow!("`{name}`: neither dense nor `.w1`/`.w2` factors in store"))?;
+    let w2 = factor_from_store(store, &format!("{name}.w2"))?
+        .ok_or_else(|| anyhow!("`{name}.w2` missing (have `.w1`)"))?;
+    anyhow::ensure!(w1.rows == m && w2.cols == n,
+                    "`{name}`: factors give {}x{}, model wants {m}x{n}", w1.rows, w2.cols);
+    Ok(Linear::LowRank(FactorizedLinear::new(name, w1, w2)?))
+}
+
+impl FactorizedModel {
+    /// Assemble a model for `variant` from an open store.  Unlike the PJRT
+    /// loader there is no shape filter: the native forward accepts any
+    /// (b, s), and `ForwardModel::shapes()` stays empty (shape-agnostic)
+    /// so the engine runs exact-sized batches with no padding rows.
+    pub fn from_store(info: &ModelInfo, variant: &Variant,
+                      store: &Store) -> Result<FactorizedModel> {
+        if variant.kind == "pruned" {
+            bail!("{}: pruned variants need per-layer head counts that the manifest \
+                   does not carry; serve them via the PJRT backend", variant.id);
+        }
+        let (d, f) = (info.d_model, info.d_ff);
+        anyhow::ensure!(info.n_heads > 0 && d % info.n_heads == 0,
+                        "{}: d_model {d} not divisible by {} heads", variant.id, info.n_heads);
+        let mut layers = Vec::with_capacity(info.n_layers);
+        for li in 0..info.n_layers {
+            let attn_norm = vec_f32(store, &format!("layers.{li}.attn_norm"), d)?;
+            let mlp_norm = vec_f32(store, &format!("layers.{li}.mlp_norm"), d)?;
+            let mut mats = Vec::with_capacity(7);
+            for mat in LAYER_MATS {
+                let (m, n) = target_dims(mat, d, f);
+                mats.push(linear_from_store(store, &format!("layers.{li}.{mat}"), m, n)?);
+            }
+            let mut it = mats.into_iter();
+            let mut layer = LayerWeights {
+                attn_norm,
+                mlp_norm,
+                wq: it.next().unwrap(),
+                wk: it.next().unwrap(),
+                wv: it.next().unwrap(),
+                wo: it.next().unwrap(),
+                w_gate: it.next().unwrap(),
+                w_up: it.next().unwrap(),
+                w_down: it.next().unwrap(),
+            };
+            // Honor the Dobi pipeline's trained truncation positions: the
+            // manifest's per-target rank is authoritative when it is lower
+            // than what the store holds.
+            for lin in layer.mats_mut() {
+                let rank = variant.ranks.get(lin.name()).copied();
+                if let (Some(k), Linear::LowRank(fl)) = (rank, lin) {
+                    if k >= 1 && k < fl.rank() {
+                        fl.set_rank(k);
+                    }
+                }
+            }
+            layers.push(layer);
+        }
+        let embed = vec_f32(store, "embed", info.vocab * d)?;
+        let final_norm = vec_f32(store, "final_norm", d)?;
+        let img_proj = if info.img_dim > 0 {
+            Some(vec_f32(store, "img_proj", info.img_dim * info.n_img_tokens * d)?)
+        } else {
+            None
+        };
+        let act_head = if info.action_head {
+            Some(vec_f32(store, "act_head", d * 5)?)
+        } else {
+            None
+        };
+        Ok(FactorizedModel {
+            id: variant.id.clone(),
+            vocab: info.vocab,
+            d_model: d,
+            n_heads: info.n_heads,
+            d_ff: f,
+            img_dim: info.img_dim,
+            n_img_tokens: info.n_img_tokens,
+            action_head: info.action_head,
+            embed,
+            final_norm,
+            layers,
+            img_proj,
+            act_head,
+        })
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Host bytes kept resident (factors in storage precision + f32 rest).
+    pub fn resident_bytes(&self) -> usize {
+        let mut total = (self.embed.len() + self.final_norm.len()) * 4;
+        for l in &self.layers {
+            total += (l.attn_norm.len() + l.mlp_norm.len()) * 4;
+            for lin in l.mats() {
+                total += lin.resident_bytes();
+            }
+        }
+        total += self.img_proj.as_ref().map_or(0, |v| v.len() * 4);
+        total += self.act_head.as_ref().map_or(0, |v| v.len() * 4);
+        total
+    }
+
+    /// Matmul FLOPs of one forward at (b, s) — the quantity the speed
+    /// benches compare against the dense-equivalent model.
+    pub fn matmul_flops(&self, b: usize, s: usize) -> u64 {
+        let rows = b * (s + self.prefix_len());
+        let mut total = 0u64;
+        for l in &self.layers {
+            for lin in l.mats() {
+                total += lin.flops(rows);
+            }
+        }
+        // Output head, as forward() actually runs it: the tied LM head over
+        // the b*s non-prefix positions, or the (d, 5) action head over the
+        // b last positions for VLA models.
+        total
+            + if self.action_head {
+                2 * b as u64 * self.d_model as u64 * 5
+            } else {
+                2 * (b * s) as u64 * self.d_model as u64 * self.vocab as u64
+            }
+    }
+
+    /// Uniformly scale every factorized target's rank to
+    /// `ceil(fraction * current_rank)` (min 1) — the bench sweep knob.
+    pub fn set_rank_fraction(&mut self, fraction: f64) {
+        for l in &mut self.layers {
+            for lin in l.mats_mut() {
+                if let Linear::LowRank(fl) = lin {
+                    let k = ((fl.rank() as f64 * fraction).ceil() as usize).max(1);
+                    fl.set_rank(k);
+                }
+            }
+        }
+    }
+
+    fn prefix_len(&self) -> usize {
+        if self.img_dim > 0 {
+            self.n_img_tokens
+        } else {
+            0
+        }
+    }
+
+    // -- forward pass -------------------------------------------------------
+
+    /// Execute the (b, s) forward.  `tokens` row-major (b, s); `image`
+    /// required iff `img_dim > 0`.  Returns logits (b, s, vocab) or VLA
+    /// actions (b, 5).
+    pub fn forward(&self, b: usize, s: usize, tokens: &[i32],
+                   image: Option<&[f32]>) -> Result<Vec<f32>> {
+        anyhow::ensure!(b > 0 && s > 0, "{}: empty shape {b}x{s}", self.id);
+        anyhow::ensure!(tokens.len() == b * s, "tokens len {} != {b}x{s}", tokens.len());
+        let d = self.d_model;
+        let p = self.prefix_len();
+        let st = p + s; // total sequence length inside the trunk
+        let rows = b * st;
+
+        // Embedding (+ projected image prefix for VLM/VLA).
+        let mut h = vec![0f32; rows * d];
+        if p > 0 {
+            let img = image.ok_or_else(|| anyhow!("{}: image input required", self.id))?;
+            anyhow::ensure!(img.len() == b * self.img_dim, "image len mismatch");
+            let proj = self.img_proj.as_ref().expect("img_proj present when img_dim > 0");
+            // prefix = image @ img_proj, accumulated straight into the
+            // zeroed h rows (no per-request weight copy on the hot path).
+            let pd = p * d;
+            for bi in 0..b {
+                let dst = &mut h[bi * st * d..bi * st * d + pd];
+                let xrow = &img[bi * self.img_dim..(bi + 1) * self.img_dim];
+                for (ii, &xv) in xrow.iter().enumerate() {
+                    if xv != 0.0 {
+                        let wrow = &proj[ii * pd..(ii + 1) * pd];
+                        for (slot, &wv) in dst.iter_mut().zip(wrow) {
+                            *slot += xv * wv;
+                        }
+                    }
+                }
+            }
+        } else {
+            anyhow::ensure!(image.is_none(), "{}: unexpected image input", self.id);
+        }
+        for bi in 0..b {
+            for si in 0..s {
+                let t = tokens[bi * s + si];
+                if t < 0 || t as usize >= self.vocab {
+                    bail!("{}: token id {t} outside vocab {}", self.id, self.vocab);
+                }
+                let dst = (bi * st + p + si) * d;
+                h[dst..dst + d].copy_from_slice(&self.embed[t as usize * d..(t as usize + 1) * d]);
+            }
+        }
+
+        let (cos, sin) = rope_cache(st, self.d_head());
+        let mut normed = vec![0f32; rows * d];
+        for layer in &self.layers {
+            rmsnorm(&h, &layer.attn_norm, d, &mut normed);
+            let attn = self.attention(&normed, layer, b, st, &cos, &sin);
+            add_inplace(&mut h, &attn);
+            rmsnorm(&h, &layer.mlp_norm, d, &mut normed);
+            let mlp = mlp(&normed, rows, layer);
+            add_inplace(&mut h, &mlp);
+        }
+        rmsnorm(&h, &self.final_norm, d, &mut normed);
+
+        if self.action_head {
+            // VLA: last position -> (x, y, z, angle, gripper-logit).
+            let head = self.act_head.as_ref().expect("act_head present");
+            let mut out = vec![0f32; b * 5];
+            for bi in 0..b {
+                let hrow = &normed[(bi * st + st - 1) * d..(bi * st + st) * d];
+                for j in 0..5 {
+                    let mut acc = 0f32;
+                    for (k, &x) in hrow.iter().enumerate() {
+                        acc += x * head[k * 5 + j];
+                    }
+                    out[bi * 5 + j] = if j < 4 { acc.tanh() } else { acc };
+                }
+            }
+            return Ok(out);
+        }
+
+        // Tied LM head over the non-prefix positions: logits = h @ embedᵀ.
+        let v = self.vocab;
+        let mut logits = vec![0f32; b * s * v];
+        for bi in 0..b {
+            for si in 0..s {
+                let hrow = &normed[(bi * st + p + si) * d..(bi * st + p + si + 1) * d];
+                let orow = &mut logits[(bi * s + si) * v..(bi * s + si + 1) * v];
+                for (vi, slot) in orow.iter_mut().enumerate() {
+                    let erow = &self.embed[vi * d..(vi + 1) * d];
+                    let mut acc = 0f32;
+                    for k in 0..d {
+                        acc += hrow[k] * erow[k];
+                    }
+                    *slot = acc;
+                }
+            }
+        }
+        Ok(logits)
+    }
+
+    /// Multi-head causal attention over (b, st) rows of `x` (post-norm).
+    fn attention(&self, x: &[f32], layer: &LayerWeights, b: usize, st: usize,
+                 cos: &[f32], sin: &[f32]) -> Vec<f32> {
+        let d = self.d_model;
+        let nh = self.n_heads;
+        let dh = self.d_head();
+        let rows = b * st;
+        let mut q = layer.wq.apply(x, rows);
+        let mut k = layer.wk.apply(x, rows);
+        let v = layer.wv.apply(x, rows);
+        apply_rope(&mut q, b, st, nh, dh, cos, sin);
+        apply_rope(&mut k, b, st, nh, dh, cos, sin);
+
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut ctx = vec![0f32; rows * d];
+        let mut scores = vec![0f32; st];
+        for bi in 0..b {
+            for hi in 0..nh {
+                let off = hi * dh;
+                for i in 0..st {
+                    let qrow = &q[(bi * st + i) * d + off..(bi * st + i) * d + off + dh];
+                    // causal: keys 0..=i
+                    let mut max = f32::NEG_INFINITY;
+                    for (j, slot) in scores[..=i].iter_mut().enumerate() {
+                        let krow = &k[(bi * st + j) * d + off..(bi * st + j) * d + off + dh];
+                        let mut acc = 0f32;
+                        for t in 0..dh {
+                            acc += qrow[t] * krow[t];
+                        }
+                        let sc = acc * scale;
+                        *slot = sc;
+                        max = max.max(sc);
+                    }
+                    let mut denom = 0f32;
+                    for slot in scores[..=i].iter_mut() {
+                        *slot = (*slot - max).exp();
+                        denom += *slot;
+                    }
+                    let inv = 1.0 / denom;
+                    let crow = &mut ctx[(bi * st + i) * d + off..(bi * st + i) * d + off + dh];
+                    for (j, &w) in scores[..=i].iter().enumerate() {
+                        let vrow = &v[(bi * st + j) * d + off..(bi * st + j) * d + off + dh];
+                        let w = w * inv;
+                        for t in 0..dh {
+                            crow[t] += w * vrow[t];
+                        }
+                    }
+                }
+            }
+        }
+        layer.wo.apply(&ctx, rows)
+    }
+}
+
+/// RMSNorm rows of `x` (rows × d) into `out` with gain `g`.
+fn rmsnorm(x: &[f32], g: &[f32], d: usize, out: &mut [f32]) {
+    debug_assert_eq!(g.len(), d);
+    for (xrow, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms: f32 = xrow.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + RMS_EPS).sqrt();
+        for j in 0..d {
+            orow[j] = xrow[j] * inv * g[j];
+        }
+    }
+}
+
+/// LLaMA interleaved RoPE applied in place to a (b·st, nh·dh) buffer.
+/// Positions run over the full (prefix + text) sequence, matching the
+/// python trunk.
+fn apply_rope(x: &mut [f32], b: usize, st: usize, nh: usize, dh: usize,
+              cos: &[f32], sin: &[f32]) {
+    let half = dh / 2;
+    let d = nh * dh;
+    for bi in 0..b {
+        for pos in 0..st {
+            let row = (bi * st + pos) * d;
+            for hi in 0..nh {
+                let off = row + hi * dh;
+                for j in 0..half {
+                    let c = cos[pos * half + j];
+                    let s = sin[pos * half + j];
+                    let e = x[off + 2 * j];
+                    let o = x[off + 2 * j + 1];
+                    x[off + 2 * j] = e * c - o * s;
+                    x[off + 2 * j + 1] = e * s + o * c;
+                }
+            }
+        }
+    }
+}
+
+/// (cos, sin) caches of shape (st, dh/2), angle = pos · θ^(−2i/dh).
+fn rope_cache(st: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+    let half = dh / 2;
+    let mut cos = vec![0f32; st * half];
+    let mut sin = vec![0f32; st * half];
+    for pos in 0..st {
+        for j in 0..half {
+            let inv = ROPE_THETA.powf(-((2 * j) as f64) / dh as f64);
+            let ang = pos as f64 * inv;
+            cos[pos * half + j] = ang.cos() as f32;
+            sin[pos * half + j] = ang.sin() as f32;
+        }
+    }
+    (cos, sin)
+}
+
+/// SwiGLU MLP over (rows, d) post-norm activations.
+fn mlp(x: &[f32], rows: usize, layer: &LayerWeights) -> Vec<f32> {
+    let g = layer.w_gate.apply(x, rows);
+    let mut u = layer.w_up.apply(x, rows);
+    for (ui, &gi) in u.iter_mut().zip(&g) {
+        let silu = gi / (1.0 + (-gi).exp());
+        *ui *= silu;
+    }
+    layer.w_down.apply(&u, rows)
+}
+
+fn add_inplace(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (ai, &bi) in a.iter_mut().zip(b) {
+        *ai += bi;
+    }
+}
+
+impl ForwardModel for FactorizedModel {
+    fn forward(&self, b: usize, s: usize, tokens: &[i32],
+               image: Option<&[f32]>) -> Result<Vec<f32>> {
+        FactorizedModel::forward(self, b, s, tokens, image)
+    }
+
+    fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    fn img_dim(&self) -> usize {
+        self.img_dim
+    }
+
+    fn action_head(&self) -> bool {
+        self.action_head
+    }
+
+    // `shapes()` keeps the trait default (empty = shape-agnostic): the
+    // engine then packs each native batch to its exact request count
+    // instead of padding to an exported PJRT batch dim.
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::synth::{tiny_model, TinyDims};
+    use crate::mathx::XorShift;
+
+    fn dims() -> TinyDims {
+        TinyDims { vocab: 61, d: 16, heads: 2, layers: 2, ff: 24 }
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let m = tiny_model(dims(), 0, false);
+        let (b, s) = (2usize, 7usize);
+        let tokens: Vec<i32> = (0..(b * s) as i32).map(|i| i % 61).collect();
+        let out = m.forward(b, s, &tokens, None).unwrap();
+        assert_eq!(out.len(), b * s * 61);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn causal_mask_blocks_future_tokens() {
+        let m = tiny_model(dims(), 0, false);
+        let (b, s) = (1usize, 8usize);
+        let mut tokens: Vec<i32> = (0..s as i32).collect();
+        let base = m.forward(b, s, &tokens, None).unwrap();
+        tokens[s - 1] = 60; // perturb only the last position
+        let pert = m.forward(b, s, &tokens, None).unwrap();
+        let v = m.vocab;
+        // positions 0..s-2 must be bit-identical; the last may change
+        assert_eq!(&base[..(s - 1) * v], &pert[..(s - 1) * v]);
+        assert!(base[(s - 1) * v..] != pert[(s - 1) * v..],
+                "last-position logits should react to its own token");
+    }
+
+    #[test]
+    fn forward_deterministic() {
+        let m = tiny_model(dims(), 0, false);
+        let tokens: Vec<i32> = (0..12).map(|i| (i * 7) % 61).collect();
+        let a = m.forward(2, 6, &tokens, None).unwrap();
+        let b = m.forward(2, 6, &tokens, None).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let m = tiny_model(dims(), 0, false);
+        assert!(m.forward(1, 4, &[0, 1, 2], None).is_err()); // wrong len
+        assert!(m.forward(1, 4, &[0, 1, 2, 61], None).is_err()); // token OOB
+        assert!(m.forward(1, 4, &[0, 1, 2, -1], None).is_err()); // negative id
+        assert!(m.forward(1, 4, &[0, 1, 2, 3], Some(&[0.0; 4])).is_err()); // no img path
+    }
+
+    #[test]
+    fn factorized_full_rank_matches_dense_model() {
+        // Same weights, one model dense and one with exact full-rank
+        // factors: logits must agree to f32-accumulation tolerance.
+        let dense = tiny_model(dims(), 0, false);
+        let fact = tiny_model(dims(), 0, true);
+        let tokens: Vec<i32> = (0..20).map(|i| (i * 13) % 61).collect();
+        let a = dense.forward(2, 10, &tokens, None).unwrap();
+        let b = fact.forward(2, 10, &tokens, None).unwrap();
+        let max = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max);
+        assert!(max < 1e-3, "max logit diff {max}");
+    }
+
+    #[test]
+    fn vlm_prefix_and_vla_head() {
+        let m = tiny_model(dims(), 6, false); // img_dim 6, 2 prefix tokens
+        let (b, s) = (2usize, 5usize);
+        let tokens = vec![1i32; b * s];
+        let image: Vec<f32> = (0..b * 6).map(|i| i as f32 * 0.1).collect();
+        assert!(m.forward(b, s, &tokens, None).is_err()); // image required
+        let out = m.forward(b, s, &tokens, Some(&image)).unwrap();
+        assert_eq!(out.len(), b * s * m.vocab);
+        // different images must change the logits (prefix is attended to)
+        let image2: Vec<f32> = image.iter().map(|x| x + 1.0).collect();
+        let out2 = m.forward(b, s, &tokens, Some(&image2)).unwrap();
+        assert!(out != out2);
+
+        let mut vla = tiny_model(dims(), 6, false);
+        vla.action_head = true;
+        let mut rng = XorShift::new(9);
+        vla.act_head = Some((0..vla.d_model * 5).map(|_| rng.normal() as f32 * 0.3).collect());
+        let act = vla.forward(b, s, &tokens, Some(&image)).unwrap();
+        assert_eq!(act.len(), b * 5);
+        for bi in 0..b {
+            for j in 0..4 {
+                assert!(act[bi * 5 + j].abs() <= 1.0, "coords/angle are tanh-bounded");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_fraction_reduces_flops() {
+        let mut m = tiny_model(dims(), 0, true);
+        let full = m.matmul_flops(2, 8);
+        m.set_rank_fraction(0.25);
+        let quarter = m.matmul_flops(2, 8);
+        assert!(quarter < full, "{quarter} !< {full}");
+        let tokens: Vec<i32> = (0..16).collect();
+        assert!(m.forward(2, 8, &tokens, None).unwrap().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn resident_bytes_counts_quantized_footprint() {
+        let dense = tiny_model(dims(), 0, false);
+        let bytes = dense.resident_bytes();
+        // embed + norms + 2 layers x 7 mats, all f32
+        let td = dims();
+        let per_layer = 2 * td.d + 4 * td.d * td.d + 2 * td.d * td.ff + td.ff * td.d;
+        let want = 4 * (td.vocab * td.d + td.d + td.layers * per_layer);
+        assert_eq!(bytes, want);
+    }
+}

@@ -1,0 +1,239 @@
+//! Synthetic nano-model builders: deterministic random weights shaped like
+//! `python/compile/model.py` checkpoints, as in-memory [`FactorizedModel`]s
+//! or as `.dobiw` tensor lists.  Used by unit/integration tests and the
+//! speed benches so the native backend is exercisable on a fresh checkout
+//! with no compiled artifacts.
+
+use crate::lowrank::kernel::{matmul, Factor, FactorizedLinear, Linear};
+use crate::lowrank::model::{target_dims, FactorizedModel, LayerWeights, LAYER_MATS};
+use crate::mathx::XorShift;
+use crate::quant::f32_to_f16;
+use crate::storage::{f32_tensor, Dtype, Tensor};
+
+/// Number of projected image prefix tokens synthetic VLM models use.
+pub const SYNTH_IMG_TOKENS: usize = 2;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TinyDims {
+    pub vocab: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub ff: usize,
+}
+
+impl TinyDims {
+    /// (m, n) of one compression target (delegates to the loader's
+    /// [`target_dims`] so fixtures and loader cannot drift).
+    pub fn mat_dims(&self, mat: &str) -> (usize, usize) {
+        target_dims(mat, self.d, self.ff)
+    }
+}
+
+/// How the synthetic store encodes the seven per-layer targets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SynthStyle {
+    /// Plain dense f32 matrices.
+    DenseF32,
+    /// `name.w1`/`name.w2` int8 factor pairs with absmax scales
+    /// (the remapped Dobi layout: W1 per-column, W2 per-row scales).
+    FactorQ8,
+    /// `name.w1`/`name.w2` f16 factor pairs (the precision-16 ablation).
+    FactorF16,
+}
+
+fn randv(rng: &mut XorShift, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32 * scale).collect()
+}
+
+/// Deterministic factor pair for one target: W1 (m, k), W2 (k, n) with
+/// k = min(m, n) (full rank, so dense and factorized twins agree).
+fn factors(rng: &mut XorShift, m: usize, n: usize) -> (Vec<f32>, Vec<f32>, usize) {
+    let k = m.min(n);
+    let scale = 1.0 / (m as f32).sqrt();
+    (randv(rng, m * k, scale), randv(rng, k * n, scale), k)
+}
+
+/// Build an in-memory model.  `factorized` picks low-rank vs dense layers;
+/// the dense twin uses the exact products `W1 @ W2`, so for a fixed
+/// `TinyDims`/`img_dim` both twins compute the same function.
+pub fn tiny_model(dims: TinyDims, img_dim: usize, factorized: bool) -> FactorizedModel {
+    let mut rng = XorShift::new(42);
+    let d = dims.d;
+    let embed = randv(&mut rng, dims.vocab * d, 0.05);
+    let mut layers = Vec::new();
+    for li in 0..dims.layers {
+        let mut mats: Vec<Linear> = Vec::with_capacity(7);
+        for mat in LAYER_MATS {
+            let (m, n) = dims.mat_dims(mat);
+            let (w1, w2, k) = factors(&mut rng, m, n);
+            let name = format!("layers.{li}.{mat}");
+            if factorized {
+                mats.push(Linear::LowRank(
+                    FactorizedLinear::new(&name, Factor::f32(m, k, w1), Factor::f32(k, n, w2))
+                        .expect("synth factors consistent"),
+                ));
+            } else {
+                let w = matmul(&w1, m, &Factor::f32(k, n, w2));
+                mats.push(Linear::Dense { name, w: Factor::f32(m, n, w) });
+            }
+        }
+        let mut it = mats.into_iter();
+        layers.push(LayerWeights {
+            attn_norm: vec![1.0; d],
+            mlp_norm: vec![1.0; d],
+            wq: it.next().unwrap(),
+            wk: it.next().unwrap(),
+            wv: it.next().unwrap(),
+            wo: it.next().unwrap(),
+            w_gate: it.next().unwrap(),
+            w_up: it.next().unwrap(),
+            w_down: it.next().unwrap(),
+        });
+    }
+    let img_proj = if img_dim > 0 {
+        Some(randv(&mut rng, img_dim * SYNTH_IMG_TOKENS * d, 0.1))
+    } else {
+        None
+    };
+    FactorizedModel {
+        id: "synth/tiny".into(),
+        vocab: dims.vocab,
+        d_model: d,
+        n_heads: dims.heads,
+        d_ff: dims.ff,
+        img_dim,
+        n_img_tokens: if img_dim > 0 { SYNTH_IMG_TOKENS } else { 0 },
+        action_head: false,
+        embed,
+        final_norm: vec![1.0; d],
+        layers,
+        img_proj,
+        act_head: None,
+    }
+}
+
+fn i8_tensor(name: &str, shape: Vec<usize>, codes: &[i8]) -> Tensor {
+    assert_eq!(shape.iter().product::<usize>(), codes.len());
+    Tensor {
+        name: name.to_string(),
+        dtype: Dtype::I8,
+        shape,
+        data: codes.iter().map(|&c| c as u8).collect(),
+    }
+}
+
+fn f16_tensor(name: &str, shape: Vec<usize>, vals: &[f32]) -> Tensor {
+    assert_eq!(shape.iter().product::<usize>(), vals.len());
+    Tensor {
+        name: name.to_string(),
+        dtype: Dtype::F16,
+        shape,
+        data: vals.iter().flat_map(|&v| f32_to_f16(v).to_le_bytes()).collect(),
+    }
+}
+
+/// Tensors for a `.dobiw` store holding the same weights [`tiny_model`]
+/// builds (same seed stream), in the requested storage style.
+pub fn tiny_store_tensors(dims: TinyDims, img_dim: usize, style: SynthStyle) -> Vec<Tensor> {
+    let mut rng = XorShift::new(42);
+    let d = dims.d;
+    let ones = vec![1.0f32; d];
+    let mut out = Vec::new();
+    out.push(f32_tensor("embed", vec![dims.vocab, d], &randv(&mut rng, dims.vocab * d, 0.05)));
+    for li in 0..dims.layers {
+        out.push(f32_tensor(&format!("layers.{li}.attn_norm"), vec![d], &ones));
+        out.push(f32_tensor(&format!("layers.{li}.mlp_norm"), vec![d], &ones));
+        for mat in LAYER_MATS {
+            let (m, n) = dims.mat_dims(mat);
+            let (w1, w2, k) = factors(&mut rng, m, n);
+            let name = format!("layers.{li}.{mat}");
+            match style {
+                SynthStyle::DenseF32 => {
+                    let w = matmul(&w1, m, &Factor::f32(k, n, w2));
+                    out.push(f32_tensor(&name, vec![m, n], &w));
+                }
+                SynthStyle::FactorF16 => {
+                    out.push(f16_tensor(&format!("{name}.w1"), vec![m, k], &w1));
+                    out.push(f16_tensor(&format!("{name}.w2"), vec![k, n], &w2));
+                }
+                SynthStyle::FactorQ8 => {
+                    let f1 = Factor::i8_cols_from_f32(m, k, &w1);
+                    let f2 = Factor::i8_rows_from_f32(k, n, &w2);
+                    for (fname, f, scale_shape) in [
+                        (format!("{name}.w1"), f1, vec![1, k]),
+                        (format!("{name}.w2"), f2, vec![k, 1]),
+                    ] {
+                        let (rows, cols) = (f.rows, f.cols);
+                        if let crate::lowrank::kernel::FactorData::I8 { codes, scales, .. } =
+                            f.data
+                        {
+                            out.push(i8_tensor(&format!("{fname}.q8"), vec![rows, cols], &codes));
+                            out.push(f32_tensor(&format!("{fname}.scales"), scale_shape, &scales));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out.push(f32_tensor("final_norm", vec![d], &ones));
+    if img_dim > 0 {
+        out.push(f32_tensor(
+            "img_proj",
+            vec![img_dim, SYNTH_IMG_TOKENS * d],
+            &randv(&mut rng, img_dim * SYNTH_IMG_TOKENS * d, 0.1),
+        ));
+    }
+    out
+}
+
+/// Manifest JSON (one model, the given variants) for a synthetic artifacts
+/// dir — enough structure for `Manifest::load` and the native backend.
+pub fn tiny_manifest_json(dims: TinyDims, img_dim: usize,
+                          variants: &[(&str, &str, f64, &str)]) -> String {
+    // variants: (id, kind, ratio, weights-file)
+    let mats: usize = LAYER_MATS
+        .iter()
+        .map(|m| {
+            let (a, b) = dims.mat_dims(m);
+            a * b
+        })
+        .sum();
+    let total = dims.vocab * dims.d + dims.d + dims.layers * (2 * dims.d + mats);
+    let mut vjson = Vec::new();
+    for (id, kind, ratio, weights) in variants {
+        vjson.push(format!(
+            r#"{{"id": "{id}", "model": "tiny", "method": "dobi", "ratio": {ratio},
+                "kind": "{kind}", "kernel": "xla", "weights": "{weights}",
+                "param_names": [], "hlo": {{"2x16": "unused.hlo.txt"}},
+                "inputs": ["tokens"], "stored_params": {total}, "bytes": 1000,
+                "ref_ppl": {{}}, "ranks": {{}}}}"#
+        ));
+    }
+    format!(
+        r#"{{
+  "profile": "synthetic",
+  "models": {{
+    "tiny": {{
+      "config": {{"vocab": {vocab}, "d_model": {d}, "n_layers": {layers},
+                  "n_heads": {heads}, "d_ff": {ff}, "img_dim": {img},
+                  "n_img_tokens": {imgtok}}},
+      "total_params": {total},
+      "fixed_params": 0
+    }}
+  }},
+  "variants": [{variants}],
+  "corpora": {{}},
+  "eval": {{"batch": 2, "seq": 16, "windows": 1}}
+}}"#,
+        vocab = dims.vocab,
+        d = dims.d,
+        layers = dims.layers,
+        heads = dims.heads,
+        ff = dims.ff,
+        img = img_dim,
+        imgtok = if img_dim > 0 { SYNTH_IMG_TOKENS } else { 0 },
+        total = total,
+        variants = vjson.join(", ")
+    )
+}

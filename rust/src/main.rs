@@ -14,12 +14,12 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use dobi::cli::Args;
-use dobi::config::{EngineConfig, Manifest};
+use dobi::config::{BackendKind, EngineConfig, Manifest};
 use dobi::coordinator::Engine;
 use dobi::corpusio;
 use dobi::evalx;
 use dobi::memsim::DeviceModel;
-use dobi::runtime::Runtime;
+use dobi::runtime::{make_backend, Backend, ForwardModel, Runtime};
 use dobi::server::Server;
 
 fn main() {
@@ -38,6 +38,14 @@ fn artifacts_dir(args: &Args) -> PathBuf {
     PathBuf::from(args.get_or("artifacts", dobi::DEFAULT_ARTIFACTS))
 }
 
+fn backend_kind(args: &Args) -> Result<BackendKind> {
+    BackendKind::parse(args.get_or("backend", "auto"))
+}
+
+fn backend(args: &Args) -> Result<Box<dyn Backend>> {
+    make_backend(backend_kind(args)?)
+}
+
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("inspect") => inspect(args),
@@ -52,14 +60,19 @@ fn run(args: &Args) -> Result<()> {
         other => {
             eprintln!(
                 "dobi — Dobi-SVD compression + serving stack\n\
-                 usage: dobi <inspect|eval|generate|serve|memsim|parity> [--artifacts DIR] ...\n\
+                 usage: dobi <inspect|eval|generate|serve|memsim|parity> [--artifacts DIR]\n\
+                 \x20      [--backend auto|pjrt|native] ...\n\
                  \n\
                  inspect                      list variants and storage accounting\n\
                  eval --variant ID [--tasks]  PPL on all corpora (+ task suites)\n\
                  generate --variant ID --prompt TEXT [--tokens N] [--temperature T]\n\
                  serve --variants A,B --port P\n\
                  memsim --model NAME [--capacity-mb M] [--bandwidth-mbs B]\n\
-                 parity                       pallas vs xla HLO numerics"
+                 parity                       pallas vs xla HLO numerics (pjrt only)\n\
+                 \n\
+                 --backend: pjrt executes AOT HLO artifacts (needs the real xla\n\
+                 bindings); native runs rank-truncated factorized inference\n\
+                 in-process; auto prefers pjrt and falls back to native."
             );
             if other.is_some() {
                 Err(anyhow!("unknown subcommand {other:?}"))
@@ -105,11 +118,13 @@ fn eval(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let m = Manifest::load(&dir)?;
     let id = args.get("variant").ok_or_else(|| anyhow!("--variant required"))?;
-    let rt = Runtime::new()?;
+    let be = backend(args)?;
     let shapes = [(m.eval_batch, m.eval_seq)];
-    let model = rt.load_variant(&m, id, Some(&shapes))?;
-    println!("loaded {id}: {} weights bytes, compile {:.2}s",
-             model.stats.weight_bytes, model.stats.compile_s);
+    let loaded = be.load_variant(&m, id, Some(&shapes))?;
+    let model = loaded.model;
+    println!("loaded {id} [{}]: {} resident bytes, load {:.2}s, compile {:.2}s",
+             be.name(), loaded.stats.weight_bytes, loaded.stats.load_weights_s,
+             loaded.stats.compile_s);
     for corpus in m.corpora.keys() {
         let ppl = evalx::perplexity(&model, &m, corpus)?;
         let reference = m.variant(id)?.ref_ppl.get(corpus).copied();
@@ -138,14 +153,14 @@ fn generate(args: &Args) -> Result<()> {
     let prompt = args.get_or("prompt", "The ");
     let n = args.usize_or("tokens", 64);
     let temp = args.f64_or("temperature", 0.7) as f32;
-    let rt = Runtime::new()?;
+    let be = backend(args)?;
     let v = m.variant(id)?;
     let (b, s) = v
         .shapes()
         .into_iter()
         .min_by_key(|&(b, _)| b)
         .ok_or_else(|| anyhow!("no shapes"))?;
-    let model = rt.load_variant(&m, id, Some(&[(b, s)]))?;
+    let model = be.load_variant(&m, id, Some(&[(b, s)]))?.model;
     let t0 = std::time::Instant::now();
     let text = evalx::generate(&model, b, s, prompt, n, temp, args.usize_or("seed", 7) as u64)?;
     let dt = t0.elapsed().as_secs_f64();
@@ -167,6 +182,7 @@ fn serve(args: &Args) -> Result<()> {
         batch_deadline_us: args.usize_or("deadline-us", 2000) as u64,
         queue_depth: args.usize_or("queue-depth", 256),
         workers: 1,
+        backend: backend_kind(args)?,
     };
     let engine = Arc::new(Engine::start(dir, &ids, cfg, None)?);
     let port = args.usize_or("port", 7433) as u16;
@@ -190,21 +206,25 @@ fn memsim_cmd(args: &Args) -> Result<()> {
         capacity: (args.f64_or("capacity-mb", 6.0) * 1e6) as usize,
         bandwidth: args.f64_or("bandwidth-mbs", 64.0) * 1e6,
     };
-    let rt = Runtime::new()?;
+    let be = backend(args)?;
     let (b, s) = (m.eval_batch, m.eval_seq);
     let mut t = dobi::bench::Table::new(
-        &format!("memsim on {} (cap {:.1} MB)", device.name, device.capacity as f64 / 1e6),
+        &format!("memsim on {} (cap {:.1} MB, {} backend)",
+                 device.name, device.capacity as f64 / 1e6, be.name()),
         &["variant", "MB", "resident", "tok/s", "speedup"],
     );
     let mut base_tps = None;
+    let needs_hlo = be.name() == "pjrt";
     for v in m.variants_for_model(model_name) {
         if !(v.method == "dense" || v.method == "dobi") || v.kernel == "pallas" {
             continue;
         }
-        if v.hlo_for(b, s).is_none() {
+        // The native backend serves any shape; only PJRT needs an exported
+        // HLO for the eval shape.
+        if needs_hlo && v.hlo_for(b, s).is_none() {
             continue;
         }
-        let model = rt.load_variant(&m, &v.id, Some(&[(b, s)]))?;
+        let model = be.load_variant(&m, &v.id, Some(&[(b, s)]))?.model;
         let tokens = vec![1i32; b * s];
         let r = dobi::bench::bench("fwd", 1, 5, || {
             model.forward(b, s, &tokens, None).unwrap();
@@ -230,18 +250,19 @@ fn debug_fwd(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let m = Manifest::load(&dir)?;
     let id = args.get_or("variant", "llama-nano/dense");
-    let rt = Runtime::new()?;
+    let be = backend(args)?;
     let (b, s) = (m.eval_batch, m.eval_seq);
-    let model = rt.load_variant(&m, id, Some(&[(b, s)]))?;
+    let model = be.load_variant(&m, id, Some(&[(b, s)]))?.model;
+    let vocab = model.vocab();
     let tokens: Vec<i32> = (0..(b * s) as i32).map(|i| i % 251).collect();
     let logits = model.forward(b, s, &tokens, None)?;
-    let base = (0 * s + s - 1) * model.vocab;
+    let base = (s - 1) * vocab;
     println!("rust logits[0,{},:6]: {:?}", s - 1, &logits[base..base + 6]);
     let info = m.corpora.get("wiki-syn").unwrap();
     let toks = corpusio::read_tokbin(&m.path(&info.eval_windows))?;
     let w0 = &toks[..b * s];
     let lg = model.forward(b, s, w0, None)?;
-    let ce = dobi::mathx::lm_cross_entropy(&lg, w0, b, s, model.vocab);
+    let ce = dobi::mathx::lm_cross_entropy(&lg, w0, b, s, vocab);
     println!("rust CE window0: {ce} ppl: {}", (ce as f64).exp());
     Ok(())
 }

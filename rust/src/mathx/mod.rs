@@ -20,8 +20,16 @@ pub fn softmax(xs: &mut [f32]) {
 }
 
 /// Negative log-likelihood of `target` under `logits` (one position).
+///
+/// A target outside the vocabulary has probability zero, so its NLL is
+/// `+inf` — returned rather than panicking, so a corrupt token stream
+/// poisons the measurement loudly instead of aborting the serving
+/// process.  Callers ([`lm_cross_entropy`], [`span_nll`]) propagate it.
 pub fn nll(logits: &[f32], target: usize) -> f32 {
-    logsumexp(logits) - logits[target]
+    match logits.get(target) {
+        Some(&l) => logsumexp(logits) - l,
+        None => f32::INFINITY,
+    }
 }
 
 pub fn argmax(xs: &[f32]) -> usize {
@@ -199,6 +207,33 @@ mod tests {
     fn nll_uniform_is_log_v() {
         let logits = vec![0.0f32; 256];
         assert!((nll(&logits, 7) - (256f32).ln()).abs() < 1e-4);
+    }
+
+    #[test]
+    fn nll_out_of_vocab_is_infinite_not_panic() {
+        // regression: `logits[target]` used to panic on ids >= V
+        let logits = vec![0.0f32; 8];
+        assert_eq!(nll(&logits, 8), f32::INFINITY);
+        assert_eq!(nll(&logits, usize::MAX), f32::INFINITY);
+    }
+
+    #[test]
+    fn lm_ce_survives_corrupt_token_ids() {
+        // V=4 but the stream contains an id far outside the vocab (e.g. a
+        // negative i32 cast): the mean must go +inf, not abort.
+        let logits = vec![0.0f32; 3 * 4];
+        let ce = lm_cross_entropy(&logits, &[0, -1, 2], 1, 3, 4);
+        assert!(ce.is_infinite() && ce > 0.0);
+        // and a clean stream stays finite
+        let ok = lm_cross_entropy(&logits, &[0, 1, 2], 1, 3, 4);
+        assert!(ok.is_finite());
+    }
+
+    #[test]
+    fn span_nll_survives_corrupt_token_ids() {
+        let logits = vec![0.0f32; 4 * 3];
+        let x = span_nll(&logits, &[0, 1, 9, 0], 4, 3, 0, 2, 4);
+        assert!(x.is_infinite() && x > 0.0);
     }
 
     #[test]

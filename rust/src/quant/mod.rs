@@ -46,10 +46,17 @@ pub fn f32_to_f16(x: f32) -> u16 {
     }
     if e <= 0 {
         if e < -10 {
-            return sign << 15; // underflow -> zero
+            return sign << 15; // underflow -> zero (|x| < 2^-25 half-ulp)
         }
-        // subnormal
-        let f = (frac | 0x800000) >> (1 - e + 13);
+        // subnormal: shift the implicit-1 mantissa into place with
+        // round-to-nearest-even (a carry out of the mantissa correctly
+        // promotes to the smallest normal).
+        let m = frac | 0x800000;
+        let shift = (14 - e) as u32; // 14..=24
+        let f = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let f = if rem > half || (rem == half && (f & 1) == 1) { f + 1 } else { f };
         return (sign << 15) | f as u16;
     }
     let mut h = (sign << 15) | ((e as u16) << 10) | ((frac >> 13) as u16);
@@ -157,6 +164,76 @@ mod tests {
     fn f16_saturates() {
         assert_eq!(f16_to_f32(f32_to_f16(1e10)), f32::INFINITY);
         assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_signed_zero_and_infinities() {
+        assert_eq!(f32_to_f16(0.0), 0x0000);
+        assert_eq!(f32_to_f16(-0.0), 0x8000);
+        assert!(f16_to_f32(0x8000) == 0.0 && f16_to_f32(0x8000).is_sign_negative());
+        assert_eq!(f32_to_f16(f32::INFINITY), 0x7C00);
+        assert_eq!(f32_to_f16(f32::NEG_INFINITY), 0xFC00);
+        assert_eq!(f16_to_f32(0xFC00), f32::NEG_INFINITY);
+        // NaN encodes to a quiet NaN with a nonzero payload, either sign
+        let h = f32_to_f16(f32::NAN);
+        assert_eq!(h & 0x7C00, 0x7C00);
+        assert_ne!(h & 0x03FF, 0);
+    }
+
+    #[test]
+    fn f16_exhaustive_decode_encode_roundtrip() {
+        // Every finite half and both infinities must survive
+        // f16 -> f32 -> f16 bit-exactly (decode is exact, and re-encoding
+        // an exactly-representable value must not round).  NaNs excluded:
+        // payloads legitimately collapse to a canonical quiet NaN.
+        for h in 0u16..=u16::MAX {
+            let is_nan = (h & 0x7C00) == 0x7C00 && (h & 0x03FF) != 0;
+            if is_nan {
+                continue;
+            }
+            let back = f32_to_f16(f16_to_f32(h));
+            assert_eq!(back, h, "h={h:#06x} -> {} -> {back:#06x}", f16_to_f32(h));
+        }
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even_ties_normal_range() {
+        // 1 + 2^-11 sits exactly between 0x3C00 (1.0) and 0x3C01: the tie
+        // must go to the even mantissa (0x3C00).
+        assert_eq!(f32_to_f16(1.0 + 2f32.powi(-11)), 0x3C00);
+        // 1 + 2^-10 + 2^-11 ties between 0x3C01 (odd) and 0x3C02 (even).
+        assert_eq!(f32_to_f16(1.0 + 2f32.powi(-10) + 2f32.powi(-11)), 0x3C02);
+        // just above the tie rounds up
+        assert_eq!(f32_to_f16(1.0 + 2f32.powi(-11) + 2f32.powi(-20)), 0x3C01);
+        // mantissa carry into the exponent: 2047.5 ulp of 0x67FF -> 0x6800
+        let just_below_2048 = 2047.9999f32;
+        assert_eq!(f32_to_f16(just_below_2048), 0x6800); // rounds to 2048.0
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even_ties_subnormal_range() {
+        let min_sub = 2f32.powi(-24); // smallest positive half-subnormal
+        // 1.5 * 2^-24 ties between codes 1 and 2 -> even (2)
+        assert_eq!(f32_to_f16(1.5 * min_sub), 2);
+        // 2.5 * 2^-24 ties between 2 and 3 -> even (2)
+        assert_eq!(f32_to_f16(2.5 * min_sub), 2);
+        // half the smallest subnormal ties with zero -> zero (even)
+        assert_eq!(f32_to_f16(0.5 * min_sub), 0);
+        // just above that must round up to the smallest subnormal
+        assert_eq!(f32_to_f16(0.75 * min_sub), 1);
+        // and the subnormal/normal boundary: the largest subnormal + half
+        // an ulp promotes to the smallest normal (0x0400)
+        let largest_sub = 1023.0 * min_sub;
+        let half_ulp = 0.5 * min_sub;
+        assert_eq!(f32_to_f16(largest_sub + half_ulp), 0x0400);
+    }
+
+    #[test]
+    fn f16_subnormal_decode_values() {
+        assert_eq!(f16_to_f32(0x0001), 2f32.powi(-24));
+        assert_eq!(f16_to_f32(0x0200), 2f32.powi(-15)); // 512 * 2^-24
+        assert_eq!(f16_to_f32(0x03FF), 1023.0 * 2f32.powi(-24));
+        assert_eq!(f16_to_f32(0x0400), 2f32.powi(-14)); // smallest normal
     }
 
     #[test]

@@ -1,5 +1,16 @@
-//! PJRT runtime: loads AOT HLO-text artifacts, uploads weights once, and
-//! executes forwards from the serve path.
+//! Execution runtimes: the [`Backend`] abstraction over the two ways a
+//! variant can serve forwards, plus the PJRT implementation.
+//!
+//! * [`PjrtBackend`] — AOT HLO artifacts through the PJRT client (this
+//!   module; requires the real `xla` bindings — the offline build links
+//!   an API stub whose client constructor fails cleanly).
+//! * [`crate::lowrank::NativeBackend`] — in-process rank-truncated
+//!   factorized inference, no PJRT.
+//!
+//! [`make_backend`] maps a [`BackendKind`] (the CLI `--backend` flag /
+//! `EngineConfig.backend`) to an instance; `Auto` prefers PJRT and falls
+//! back to native, so the same binary serves real artifacts when the
+//! native library is present and synthetic/low-rank models everywhere.
 //!
 //! Loading pipeline per variant (see DESIGN.md §4):
 //!   manifest -> `.dobiw` store -> dequantized f32 host tensors ->
@@ -17,12 +28,13 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::{Manifest, Variant};
+use crate::config::{BackendKind, Manifest, Variant};
 use crate::storage::Store;
 
 /// Anything that can run a forward pass.  The evaluation harness and the
 /// coordinator are generic over this so their logic is unit-testable with
-/// mock models (no PJRT) while production uses [`LoadedModel`].
+/// mock models (no PJRT) while production uses [`LoadedModel`] or the
+/// native [`crate::lowrank::FactorizedModel`].
 pub trait ForwardModel {
     /// Execute the (b, s) forward.  `tokens` is row-major (b, s); `image`
     /// must be Some((b, img_dim) flat) iff `img_dim() > 0`.
@@ -31,6 +43,99 @@ pub trait ForwardModel {
     fn vocab(&self) -> usize;
     fn img_dim(&self) -> usize;
     fn action_head(&self) -> bool;
+
+    /// (batch, seq) shapes this model serves.  Empty means
+    /// shape-agnostic — any (b, s) executes (native backend, mocks); the
+    /// batch planner then packs to the request count.
+    fn shapes(&self) -> Vec<(usize, usize)> {
+        Vec::new()
+    }
+}
+
+impl ForwardModel for Box<dyn ForwardModel> {
+    fn forward(&self, b: usize, s: usize, tokens: &[i32],
+               image: Option<&[f32]>) -> Result<Vec<f32>> {
+        (**self).forward(b, s, tokens, image)
+    }
+
+    fn vocab(&self) -> usize {
+        (**self).vocab()
+    }
+
+    fn img_dim(&self) -> usize {
+        (**self).img_dim()
+    }
+
+    fn action_head(&self) -> bool {
+        (**self).action_head()
+    }
+
+    fn shapes(&self) -> Vec<(usize, usize)> {
+        (**self).shapes()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Backend abstraction
+// ---------------------------------------------------------------------------
+
+/// A loaded variant plus its load-time accounting, backend-agnostic.
+pub struct Loaded {
+    pub model: Box<dyn ForwardModel>,
+    pub stats: LoadStats,
+}
+
+/// An execution backend: turns a manifest variant into a servable model.
+/// The coordinator engine, eval harness, memsim CLI, and benches are
+/// routed through this so PJRT artifacts and native low-rank factors are
+/// interchangeable behind the `--backend` flag.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn load_variant(&self, manifest: &Manifest, id: &str,
+                    shapes: Option<&[(usize, usize)]>) -> Result<Loaded>;
+}
+
+/// PJRT-artifact backend (thin [`Backend`] shim over [`Runtime`]).
+pub struct PjrtBackend {
+    pub runtime: Runtime,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        Ok(PjrtBackend { runtime: Runtime::new()? })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn load_variant(&self, manifest: &Manifest, id: &str,
+                    shapes: Option<&[(usize, usize)]>) -> Result<Loaded> {
+        let model = self.runtime.load_variant(manifest, id, shapes)?;
+        let stats = model.stats.clone();
+        Ok(Loaded { model: Box::new(model), stats })
+    }
+}
+
+/// Instantiate the backend for `kind`.  `Auto` tries PJRT first (real
+/// artifacts, real xla bindings) and falls back to the native low-rank
+/// backend when the PJRT client cannot come up (e.g. the offline stub).
+pub fn make_backend(kind: BackendKind) -> Result<Box<dyn Backend>> {
+    match kind {
+        BackendKind::Pjrt => Ok(Box::new(PjrtBackend::new()?)),
+        BackendKind::Native => Ok(Box::new(crate::lowrank::NativeBackend)),
+        BackendKind::Auto => match PjrtBackend::new() {
+            Ok(b) => Ok(Box::new(b)),
+            Err(e) => {
+                // Loud fallback: a user with real artifacts must be able to
+                // see they are NOT being served by PJRT and why.
+                eprintln!("[backend] PJRT unavailable ({e:#}); falling back to native-lowrank");
+                Ok(Box::new(crate::lowrank::NativeBackend))
+            }
+        },
+    }
 }
 
 pub struct Runtime {
@@ -255,5 +360,28 @@ impl ForwardModel for LoadedModel {
 
     fn action_head(&self) -> bool {
         self.action_head
+    }
+
+    fn shapes(&self) -> Vec<(usize, usize)> {
+        LoadedModel::shapes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::BackendKind;
+
+    #[test]
+    fn auto_backend_always_resolves() {
+        // With the real xla bindings this is PJRT; with the offline stub it
+        // must fall back to the native low-rank backend instead of failing.
+        let b = make_backend(BackendKind::Auto).unwrap();
+        assert!(b.name() == "pjrt" || b.name() == "native-lowrank");
+    }
+
+    #[test]
+    fn native_backend_always_available() {
+        assert_eq!(make_backend(BackendKind::Native).unwrap().name(), "native-lowrank");
     }
 }

@@ -2,12 +2,17 @@
 //!
 //! Require `make artifacts` (or DOBI_ARTIFACTS pointing at a build); each
 //! test skips gracefully when artifacts are absent so `cargo test` stays
-//! green on a fresh checkout.
+//! green on a fresh checkout.  Tests that additionally need a working PJRT
+//! client are `#[ignore]`d (the offline build links the xla API stub);
+//! run them with `cargo test -- --ignored` on a machine with the real
+//! bindings.  `tests/native_backend.rs` covers the same serving paths on
+//! the native backend with synthetic artifacts, so CI still exercises the
+//! engine end to end.
 
 use std::sync::Arc;
 
 use dobi::bench::{artifacts_available, artifacts_dir};
-use dobi::config::{EngineConfig, Manifest};
+use dobi::config::{BackendKind, EngineConfig, Manifest};
 use dobi::coordinator::{Engine, SubmitError};
 use dobi::corpusio;
 use dobi::evalx;
@@ -83,6 +88,7 @@ fn quantized_store_dequantizes_all_factors() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla bindings; the offline xla-stub cannot execute HLO"]
 fn rust_ppl_matches_python_reference() {
     require_artifacts!();
     let m = manifest();
@@ -122,6 +128,7 @@ fn compression_quality_ordering() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla bindings; the offline xla-stub cannot execute HLO"]
 fn generation_is_deterministic_and_decodable() {
     require_artifacts!();
     let m = manifest();
@@ -140,6 +147,7 @@ fn generation_is_deterministic_and_decodable() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla bindings; the offline xla-stub cannot execute HLO"]
 fn task_suites_score_in_range() {
     require_artifacts!();
     let m = manifest();
@@ -158,6 +166,7 @@ fn task_suites_score_in_range() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla bindings; the offline xla-stub cannot execute HLO"]
 fn vla_eval_end_to_end() {
     require_artifacts!();
     let m = manifest();
@@ -178,11 +187,13 @@ fn vla_eval_end_to_end() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla bindings; the offline xla-stub cannot execute HLO"]
 fn engine_serves_concurrent_clients() {
     require_artifacts!();
     let m = manifest();
     let (b, s) = (m.eval_batch, m.eval_seq);
-    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 1500, queue_depth: 64, workers: 1 };
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 1500, queue_depth: 64, workers: 1,
+                             backend: BackendKind::Pjrt };
     let engine = Arc::new(
         Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()], cfg,
                       Some(vec![(b, s)]))
@@ -212,11 +223,13 @@ fn engine_serves_concurrent_clients() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla bindings; the offline xla-stub cannot execute HLO"]
 fn engine_batches_under_load() {
     require_artifacts!();
     let m = manifest();
     let (b, s) = (m.eval_batch, m.eval_seq);
-    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 20_000, queue_depth: 256, workers: 1 };
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 20_000, queue_depth: 256, workers: 1,
+                             backend: BackendKind::Pjrt };
     let engine = Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()], cfg,
                                Some(vec![(b, s)])).unwrap();
     let tok = ByteTokenizer;
@@ -240,11 +253,12 @@ fn engine_batches_under_load() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla bindings; the offline xla-stub cannot execute HLO"]
 fn engine_rejects_bad_requests() {
     require_artifacts!();
     let m = manifest();
     let (b, s) = (m.eval_batch, m.eval_seq);
-    let cfg = EngineConfig::default();
+    let cfg = EngineConfig { backend: BackendKind::Pjrt, ..Default::default() };
     let engine = Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()], cfg,
                                Some(vec![(b, s)])).unwrap();
     match engine.submit("nope/nothere", vec![0; s], None) {
@@ -259,11 +273,13 @@ fn engine_rejects_bad_requests() {
 }
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla bindings; the offline xla-stub cannot execute HLO"]
 fn engine_backpressure_queue_full() {
     require_artifacts!();
     let m = manifest();
     let (b, s) = (m.eval_batch, m.eval_seq);
-    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 500, queue_depth: 2, workers: 1 };
+    let cfg = EngineConfig { max_batch: b, batch_deadline_us: 500, queue_depth: 2, workers: 1,
+                             backend: BackendKind::Pjrt };
     let engine = Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()], cfg,
                                Some(vec![(b, s)])).unwrap();
     let mut rejected = false;
@@ -290,12 +306,13 @@ fn engine_backpressure_queue_full() {
 // ---------------------------------------------------------------------------
 
 #[test]
+#[ignore = "requires PJRT artifacts (make artifacts) and the real xla bindings; the offline xla-stub cannot execute HLO"]
 fn server_line_protocol_roundtrip() {
     require_artifacts!();
     use std::io::{BufRead, BufReader, Write};
     let m = manifest();
     let (b, s) = (m.eval_batch, m.eval_seq);
-    let cfg = EngineConfig { max_batch: b, ..Default::default() };
+    let cfg = EngineConfig { max_batch: b, backend: BackendKind::Pjrt, ..Default::default() };
     let engine = Arc::new(Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()],
                                         cfg, Some(vec![(b, s)])).unwrap());
     let mut server = dobi::server::Server::start(engine.clone(), 0).unwrap();

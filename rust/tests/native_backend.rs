@@ -1,0 +1,148 @@
+//! End-to-end coverage of the native low-rank backend over synthetic
+//! artifacts — storage → backend → coordinator → eval, no PJRT and no
+//! `make artifacts`, so these run on every fresh checkout and in CI.
+
+use std::sync::Arc;
+
+use dobi::config::{BackendKind, EngineConfig, Manifest};
+use dobi::coordinator::{Engine, SubmitError};
+use dobi::evalx;
+use dobi::lowrank::synth::{tiny_manifest_json, tiny_store_tensors, SynthStyle, TinyDims};
+use dobi::lowrank::NativeBackend;
+use dobi::runtime::{make_backend, Backend};
+use dobi::storage::write_store;
+use dobi::tokenizer::ByteTokenizer;
+
+/// vocab 256 so the byte tokenizer's ids are always in range.
+fn dims() -> TinyDims {
+    TinyDims { vocab: 256, d: 24, heads: 2, layers: 2, ff: 32 }
+}
+
+/// Write a synthetic artifacts dir with a dense and a factorized-int8
+/// variant of the same tiny model; returns the dir.
+fn build_artifacts(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dobi_native_it_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    write_store(&dir.join("dense.dobiw"),
+                &tiny_store_tensors(dims(), 0, SynthStyle::DenseF32)).unwrap();
+    write_store(&dir.join("q8.dobiw"),
+                &tiny_store_tensors(dims(), 0, SynthStyle::FactorQ8)).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        tiny_manifest_json(dims(), 0, &[
+            ("tiny/dense", "dense", 1.0, "dense.dobiw"),
+            ("tiny/dobi_60", "factorized", 0.6, "q8.dobiw"),
+        ]),
+    )
+    .unwrap();
+    dir
+}
+
+fn native_cfg(max_batch: usize) -> EngineConfig {
+    EngineConfig { max_batch, backend: BackendKind::Native, ..Default::default() }
+}
+
+#[test]
+fn engine_serves_native_models_end_to_end() {
+    let dir = build_artifacts("engine");
+    let ids = vec!["tiny/dense".to_string(), "tiny/dobi_60".to_string()];
+    let engine = Arc::new(Engine::start(dir, &ids, native_cfg(2), None).unwrap());
+    let tok = ByteTokenizer;
+    let mut handles = Vec::new();
+    for t in 0..3 {
+        let eng = engine.clone();
+        handles.push(std::thread::spawn(move || {
+            let tok = ByteTokenizer;
+            for i in 0..4 {
+                let id = if i % 2 == 0 { "tiny/dense" } else { "tiny/dobi_60" };
+                let win = tok.encode_window(&format!("client {t} msg {i} "), 16, 32);
+                let resp = eng.infer(id, win, None).unwrap();
+                assert_eq!(resp.output.len(), 256, "last-position logit width");
+                assert!(resp.output.iter().all(|x| x.is_finite()));
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.served, 12);
+    assert!(stats.batches >= 1 && stats.batches <= 12);
+    // router sanity on native-registered variants
+    assert_eq!(engine.router().by_ratio("tiny", 0.5).unwrap().id, "tiny/dobi_60");
+    // bad requests still rejected before reaching the backend
+    match engine.submit("tiny/nope", tok.encode_window("x", 16, 32), None) {
+        Err(SubmitError::UnknownVariant(_)) => {}
+        other => panic!("expected UnknownVariant, got {other:?}"),
+    }
+    match engine.submit("tiny/dense", vec![0; 5], None) {
+        Err(SubmitError::BadShape { .. }) => {}
+        other => panic!("expected BadShape, got {other:?}"),
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn engine_start_fails_on_missing_weights_file() {
+    let dir = std::env::temp_dir().join("dobi_native_it_missing");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        tiny_manifest_json(dims(), 0, &[("tiny/ghost", "dense", 1.0, "nope.dobiw")]),
+    )
+    .unwrap();
+    assert!(Engine::start(dir, &["tiny/ghost".to_string()], native_cfg(2), None).is_err());
+}
+
+#[test]
+fn generation_deterministic_on_native_backend() {
+    let dir = build_artifacts("gen");
+    let m = Manifest::load(&dir).unwrap();
+    let be = make_backend(BackendKind::Native).unwrap();
+    assert_eq!(be.name(), "native-lowrank");
+    let model = be.load_variant(&m, "tiny/dense", Some(&[(1, 16)])).unwrap().model;
+    let a = evalx::generate(&model, 1, 16, "The ", 12, 0.8, 42).unwrap();
+    let b = evalx::generate(&model, 1, 16, "The ", 12, 0.8, 42).unwrap();
+    assert_eq!(a, b, "same seed must reproduce");
+    assert!(!a.is_empty());
+    let greedy = evalx::generate(&model, 1, 16, "The ", 8, 0.0, 1).unwrap();
+    assert_eq!(greedy, evalx::generate(&model, 1, 16, "The ", 8, 0.0, 9).unwrap(),
+               "greedy is seed-independent");
+}
+
+#[test]
+fn task_scoring_runs_on_native_backend() {
+    let dir = build_artifacts("tasks");
+    let m = Manifest::load(&dir).unwrap();
+    let loaded = NativeBackend.load_variant(&m, "tiny/dobi_60", None).unwrap();
+    let suite = dobi::corpusio::TaskSuite {
+        name: "synthetic".into(),
+        tasks: vec![dobi::corpusio::Task {
+            prompt: "the quick brown ".into(),
+            options: vec!["fox".into(), "qqq".into()],
+            answer: 0,
+        }],
+    };
+    let r = evalx::run_suite(&loaded.model, &suite, 2, 16, usize::MAX).unwrap();
+    assert_eq!(r.n, 1);
+    assert!(r.accuracy == 0.0 || r.accuracy == 1.0);
+}
+
+#[test]
+fn quantized_variant_is_smaller_and_close() {
+    let dir = build_artifacts("size");
+    let m = Manifest::load(&dir).unwrap();
+    let dense = NativeBackend.load_variant(&m, "tiny/dense", None).unwrap();
+    let q8 = NativeBackend.load_variant(&m, "tiny/dobi_60", None).unwrap();
+    assert!(q8.stats.payload_bytes < dense.stats.payload_bytes,
+            "int8 factors must shrink the on-disk payload");
+    assert!(q8.stats.weight_bytes < dense.stats.weight_bytes,
+            "int8 factors must shrink the resident footprint");
+    let tokens: Vec<i32> = (0..32).map(|i| (i * 31) % 256).collect();
+    let a = dense.model.forward(2, 16, &tokens, None).unwrap();
+    let b = q8.model.forward(2, 16, &tokens, None).unwrap();
+    assert_eq!(a.len(), b.len());
+    let mean_abs: f32 =
+        a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum::<f32>() / a.len() as f32;
+    assert!(mean_abs < 0.5, "quantized twin drifted: mean |Δlogit| = {mean_abs}");
+}

@@ -1,0 +1,164 @@
+//! Compile-time stand-in for the `xla` crate (xla_extension PJRT bindings).
+//!
+//! The PJRT/XLA native library is not available in offline build
+//! environments, so this crate provides the exact API surface the `dobi`
+//! runtime uses — same type and method names — with every constructor
+//! returning a descriptive error.  The PJRT execution path therefore
+//! *compiles* everywhere and *fails cleanly at runtime*, and the serving
+//! stack falls back to the native low-rank backend (see
+//! `dobi::runtime::make_backend`).
+//!
+//! To run against real PJRT, point the `xla` dependency in
+//! `rust/Cargo.toml` at the actual `xla` bindings instead of this stub; no
+//! source change is required anywhere else.
+
+use std::fmt;
+
+const UNAVAILABLE: &str = "PJRT unavailable: built against the in-tree `xla-stub` crate \
+     (no XLA native library in this environment); use the native low-rank backend \
+     (--backend native) or link the real `xla` bindings in rust/Cargo.toml";
+
+/// Error type standing in for `xla::Error`.  Implements `std::error::Error`
+/// so `anyhow`-style `?`/`.context(..)` conversions work unchanged.
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(UNAVAILABLE.to_string())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _data: &[u8],
+    ) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<std::path::Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _literal: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct PjRtBuffer {
+    client: PjRtClient,
+}
+
+impl PjRtBuffer {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_fail_with_guidance() {
+        let e = PjRtClient::cpu().err().unwrap();
+        assert!(e.to_string().contains("--backend native"), "{e}");
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+    }
+}
