@@ -1,16 +1,23 @@
 //! Speed/deployment benches: the native low-rank factorized-vs-dense
-//! sweep (no artifacts needed), Fig 4 (throughput vs batch & seqlen),
-//! Table 10 (constrained-device speedup), Table 12 (VLM speed),
-//! Table 23 (speed vs PTQ), engine overhead, and the batcher-policy
-//! ablation (DESIGN.md §5.5).
+//! sweep and the native compression pipeline (no artifacts needed),
+//! Fig 4 (throughput vs batch & seqlen), Table 10 (constrained-device
+//! speedup), Table 12 (VLM speed), Table 23 (speed vs PTQ), engine
+//! overhead, and the batcher-policy ablation (DESIGN.md §5.5).
 //!
-//!   cargo bench --bench bench_speed -- lowrank fig4 table10 table12 table23 engine batcher
+//! The native sections additionally emit machine-readable
+//! `BENCH_speed.json` / `BENCH_compress.json` (ratio, tok/s, params
+//! kept) so the perf trajectory is tracked across PRs.
+//!
+//!   cargo bench --bench bench_speed -- lowrank compress fig4 table10 table12 table23 engine batcher
 
 use std::sync::Arc;
 
-use dobi::bench::{artifacts_available, artifacts_dir, bench, bench_for, Table};
-use dobi::config::{EngineConfig, Manifest};
+use dobi::bench::{artifacts_available, artifacts_dir, bench, bench_for, write_bench_json,
+                  Table};
+use dobi::config::{CompressConfig, EngineConfig, Manifest, Precision};
 use dobi::coordinator::Engine;
+use dobi::json::Json;
+use dobi::lowrank::synth::{tiny_model, TinyDims};
 use dobi::lowrank::{matmul, Factor, FactorizedLinear};
 use dobi::mathx::XorShift;
 use dobi::memsim::DeviceModel;
@@ -23,6 +30,7 @@ fn main() {
 
     // Native sections first: they run on a fresh checkout, no artifacts.
     if want("lowrank") { lowrank_sweep(); }
+    if want("compress") { compress_bench(); }
 
     if !artifacts_available() {
         eprintln!("[bench_speed] artifacts not built — PJRT sections skipped \
@@ -58,6 +66,7 @@ fn lowrank_sweep() {
     let mut randv = |n: usize, s: f32| -> Vec<f32> {
         (0..n).map(|_| rng.normal() as f32 * s).collect()
     };
+    let mut json_rows: Vec<Json> = Vec::new();
     for (name, m, n) in dims {
         let w = Factor::f32(m, n, randv(m * n, 0.05));
         let x = randv(rows * m, 1.0);
@@ -96,11 +105,119 @@ fn lowrank_sweep() {
                 format!("{flop_ratio:.2}"),
                 format!("{:.2}x", dense.stats.mean / r32.stats.mean),
             ]);
+            json_rows.push(Json::obj(vec![
+                ("matrix", Json::Str(name.to_string())),
+                ("m", Json::Num(m as f64)),
+                ("n", Json::Num(n as f64)),
+                ("rank_fraction", Json::Num(frac)),
+                ("k", Json::Num(k as f64)),
+                ("dense_ms", Json::Num(dense.stats.mean * 1e3)),
+                ("f32_ms", Json::Num(r32.stats.mean * 1e3)),
+                ("f16_ms", Json::Num(r16.stats.mean * 1e3)),
+                ("i8_ms", Json::Num(r8.stats.mean * 1e3)),
+                ("flop_ratio", Json::Num(flop_ratio)),
+                ("rows_per_s", Json::Num(rows as f64 / r32.stats.mean)),
+                ("speedup_vs_dense", Json::Num(dense.stats.mean / r32.stats.mean)),
+            ]));
         }
     }
     t.print();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("lowrank_sweep".into())),
+        ("rows", Json::Num(rows as f64)),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    match write_bench_json("speed", &doc) {
+        Ok(p) => println!("[bench_speed] wrote {}", p.display()),
+        Err(e) => eprintln!("[bench_speed] could not write BENCH_speed.json: {e}"),
+    }
     println!("shape to check: f32 speedup tracks 1/flop-ratio (k(m+n) vs mn); f16/int8\n\
               factors trade a bounded decode cost for 2x/4x resident-memory savings.");
+}
+
+/// Native compression pipeline sweep: synth dense nano model compressed
+/// at several global ratios; reports achieved ratio, params kept, eval
+/// CE delta vs dense, and serve-side tokens/s of the compressed model —
+/// emitted both as a table and as `BENCH_compress.json`.
+fn compress_bench() {
+    use dobi::compress::{calib, compress_model, eval_loss, write_artifacts};
+    let dims = TinyDims::nano();
+    let dense = tiny_model(dims, 0, false);
+    let corpus = calib::synth_calib_tokens(256, 4096, 19);
+    let (b, s) = (2usize, 32usize);
+    let tokens: Vec<i32> = (0..(b * s) as i32).map(|i| i % 251).collect();
+    let l_dense = eval_loss(&dense, &corpus, b, 16, 6, 5).expect("dense eval");
+    let dense_fwd = bench_for("dense-fwd", 0.2, 3, || {
+        dense.forward(b, s, &tokens, None).unwrap();
+    });
+    let dense_tps = dense_fwd.throughput((b * s) as f64);
+    let mut t = Table::new(
+        "Native compression — dobi compress sweep (synth nano, q8)",
+        &["ratio", "achieved", "params kept", "compress s", "CE delta", "tok/s", "vs dense"],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    for ratio in [0.2f64, 0.4, 0.6] {
+        let cfg = CompressConfig { ratio, precision: Precision::Q8, ..Default::default() };
+        let t0 = std::time::Instant::now();
+        let art = compress_model(&dense, "tiny", &cfg, &corpus).expect("compress");
+        let compress_s = t0.elapsed().as_secs_f64();
+        // measure the REAL deliverable: the q8 store round-tripped through
+        // the writer + native loader (int8 decode cost and quantization
+        // drift included), not the in-memory f32 reference twin
+        let dir = std::env::temp_dir()
+            .join(format!("dobi_bench_compress_{}", (ratio * 100.0).round() as usize));
+        let _ = std::fs::remove_dir_all(&dir);
+        write_artifacts(&dir, &art).expect("artifacts");
+        let m = Manifest::load(&dir).expect("manifest");
+        let v = m.variant(&art.variant_id).expect("variant");
+        let store = dobi::storage::Store::open(&m.path(&v.weights)).expect("store");
+        let model = dobi::lowrank::FactorizedModel::from_store(&m.models["tiny"], v, &store)
+            .expect("load");
+        let ce = eval_loss(&model, &corpus, b, 16, 6, 5).expect("eval");
+        let fwd = bench_for("fwd", 0.2, 3, || {
+            model.forward(b, s, &tokens, None).unwrap();
+        });
+        let tps = fwd.throughput((b * s) as f64);
+        t.row(vec![
+            format!("{ratio:.1}"),
+            format!("{:.3}", art.achieved_ratio),
+            format!("{}/{}", art.stored_params, art.total_params),
+            format!("{compress_s:.2}"),
+            format!("{:+.3}", ce - l_dense),
+            format!("{tps:.0}"),
+            format!("{:.2}x", tps / dense_tps),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("ratio", Json::Num(ratio)),
+            ("achieved_ratio", Json::Num(art.achieved_ratio)),
+            ("params_kept", Json::Num(art.stored_params as f64)),
+            ("total_params", Json::Num(art.total_params as f64)),
+            ("payload_bytes", Json::Num(art.payload_bytes as f64)),
+            ("compress_seconds", Json::Num(compress_s)),
+            ("eval_ce", Json::Num(ce)),
+            ("eval_ce_dense", Json::Num(l_dense)),
+            ("tokens_per_s", Json::Num(tps)),
+            ("speedup_vs_dense", Json::Num(tps / dense_tps)),
+        ]));
+    }
+    t.print();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("compress_sweep".into())),
+        ("model", Json::obj(vec![
+            ("vocab", Json::Num(dims.vocab as f64)),
+            ("d_model", Json::Num(dims.d as f64)),
+            ("n_layers", Json::Num(dims.layers as f64)),
+            ("d_ff", Json::Num(dims.ff as f64)),
+        ])),
+        ("dense_tokens_per_s", Json::Num(dense_tps)),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    match write_bench_json("compress", &doc) {
+        Ok(p) => println!("[bench_speed] wrote {}", p.display()),
+        Err(e) => eprintln!("[bench_speed] could not write BENCH_compress.json: {e}"),
+    }
+    println!("shape to check: tok/s grows as the ratio drops (rank-k matmuls do less\n\
+              work); CE delta grows smoothly — the compression/quality frontier.");
 }
 
 /// Latency vs offered load (open-loop Poisson arrivals) — the serving

@@ -135,6 +135,19 @@ pub fn artifacts_available() -> bool {
     artifacts_dir().join("manifest.json").exists()
 }
 
+/// Write a machine-readable bench report (`BENCH_<name>.json`) so the
+/// perf trajectory is trackable across PRs.  Emitted into $BENCH_OUT (or
+/// the working directory); returns the path written.
+pub fn write_bench_json(name: &str, doc: &crate::json::Json)
+                        -> std::io::Result<std::path::PathBuf> {
+    let dir = std::env::var("BENCH_OUT")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("."));
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, doc.to_string())?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,168 @@
+//! Calibration capture: sample token windows, run the dense forward, and
+//! collect the per-target input activations the truncation search and the
+//! IPCA reconstruction consume — the native mirror of
+//! `python/compile/dobi/pipeline.py::collect_calibration`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::lowrank::FactorizedModel;
+use crate::mathx::XorShift;
+
+/// Representative tap key of a compression target: targets that multiply
+/// the same buffer share one stored tap (wq/wk/wv the post-attn-norm
+/// matrix, w_gate/w_up the post-mlp-norm matrix), so calibration keeps 4
+/// buffers per layer instead of 7 identical-copy ones.  Mirrors the
+/// capture points `FactorizedModel::run_trunk` records.
+pub fn tap_key(name: &str) -> String {
+    for (alias, rep) in [(".wk", ".wq"), (".wv", ".wq"), (".w_up", ".w_gate")] {
+        if let Some(prefix) = name.strip_suffix(alias) {
+            return format!("{prefix}{rep}");
+        }
+    }
+    name.to_string()
+}
+
+/// Per-target calibration activations: one row-major (rows, in_dim)
+/// input matrix per calibration batch, stored per capture point (see
+/// [`tap_key`]) and looked up per target.
+#[derive(Debug, Default)]
+pub struct Calibration {
+    pub taps: BTreeMap<String, Vec<Vec<f32>>>,
+    pub n_batches: usize,
+}
+
+impl Calibration {
+    /// Batches captured for target `name`, resolved through [`tap_key`]
+    /// (empty slice when the name is unknown).
+    pub fn batches(&self, name: &str) -> &[Vec<f32>] {
+        self.taps.get(&tap_key(name)).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+/// Deterministic synthetic calibration corpus (token ids in [0, vocab)),
+/// for fixtures and `dobi compress --synth` where no tokbin is supplied.
+pub fn synth_calib_tokens(vocab: usize, len: usize, seed: u64) -> Vec<i32> {
+    let mut rng = XorShift::new(seed);
+    (0..len).map(|_| rng.below(vocab.max(1)) as i32).collect()
+}
+
+/// Draw `b` random contiguous windows of `s` tokens each (the python
+/// pipeline's `rng.integers(0, hi)` scheme), concatenated row-major —
+/// the window sampling shared by calibration and eval-loss batches.
+pub fn sample_windows(tokens: &[i32], b: usize, s: usize,
+                      rng: &mut XorShift) -> Result<Vec<i32>> {
+    anyhow::ensure!(b >= 1 && s >= 1, "windows need b/s >= 1");
+    anyhow::ensure!(tokens.len() > s + 1,
+                    "corpus too short: {} tokens for seq {s}", tokens.len());
+    let hi = tokens.len() - s - 1;
+    let mut toks = Vec::with_capacity(b * s);
+    for _ in 0..b {
+        let at = rng.below(hi);
+        toks.extend_from_slice(&tokens[at..at + s]);
+    }
+    Ok(toks)
+}
+
+/// Run `n_batches` calibration forwards of shape (batch, seq) over random
+/// windows of `tokens`, collecting every target's input.  VLM/VLA trunks
+/// calibrate with a zero image (the text path dominates the compression
+/// targets).  Windows are sampled with the same `rng.integers(0, hi)`
+/// scheme as the python pipeline.
+pub fn collect(model: &FactorizedModel, tokens: &[i32], n_batches: usize,
+               batch: usize, seq: usize, seed: u64) -> Result<Calibration> {
+    anyhow::ensure!(n_batches >= 1, "calibration needs n_batches >= 1");
+    for (i, &t) in tokens.iter().enumerate() {
+        anyhow::ensure!(t >= 0 && (t as usize) < model.vocab,
+                        "calibration token {t} at {i} outside vocab {}", model.vocab);
+    }
+    let mut rng = XorShift::new(seed);
+    let image = if model.img_dim > 0 { Some(vec![0f32; batch * model.img_dim]) } else { None };
+    let mut cal = Calibration::default();
+    for _ in 0..n_batches {
+        let toks = sample_windows(tokens, batch, seq, &mut rng)?;
+        let taps = model.forward_taps(batch, seq, &toks, image.as_deref())?;
+        for (name, x) in taps {
+            cal.taps.entry(name).or_default().push(x);
+        }
+    }
+    cal.n_batches = n_batches;
+    Ok(cal)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::synth::{tiny_model, TinyDims};
+
+    fn dims() -> TinyDims {
+        TinyDims { vocab: 61, d: 16, heads: 2, layers: 2, ff: 24 }
+    }
+
+    #[test]
+    fn collects_per_batch_taps_for_all_targets() {
+        let m = tiny_model(dims(), 0, false);
+        let tokens = synth_calib_tokens(61, 400, 9);
+        let cal = collect(&m, &tokens, 3, 2, 8, 5).unwrap();
+        assert_eq!(cal.n_batches, 3);
+        // stored: one tap per capture point...
+        assert_eq!(cal.taps.len(), 4 * dims().layers);
+        // ...resolvable for every one of the 7 per-layer targets
+        for li in 0..dims().layers {
+            for mat in ["wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down"] {
+                let name = format!("layers.{li}.{mat}");
+                let batches = cal.batches(&name);
+                assert_eq!(batches.len(), 3, "{name}: one tap per batch");
+                let in_dim = if mat == "w_down" { dims().ff } else { dims().d };
+                for x in batches {
+                    assert_eq!(x.len(), 2 * 8 * in_dim, "{name}: (rows, in_dim)");
+                }
+            }
+        }
+        // aliases resolve to the same stored buffer
+        assert_eq!(cal.batches("layers.0.wk"), cal.batches("layers.0.wq"));
+        assert_eq!(cal.batches("layers.1.w_up"), cal.batches("layers.1.w_gate"));
+        assert!(cal.batches("layers.0.nope").is_empty());
+    }
+
+    #[test]
+    fn tap_key_resolves_aliases_only() {
+        assert_eq!(tap_key("layers.3.wk"), "layers.3.wq");
+        assert_eq!(tap_key("layers.3.wv"), "layers.3.wq");
+        assert_eq!(tap_key("layers.0.w_up"), "layers.0.w_gate");
+        for stay in ["layers.0.wq", "layers.0.wo", "layers.2.w_gate", "layers.2.w_down"] {
+            assert_eq!(tap_key(stay), stay);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let m = tiny_model(dims(), 0, false);
+        let tokens = synth_calib_tokens(61, 300, 1);
+        let a = collect(&m, &tokens, 2, 2, 6, 7).unwrap();
+        let b = collect(&m, &tokens, 2, 2, 6, 7).unwrap();
+        assert_eq!(a.taps, b.taps);
+        let c = collect(&m, &tokens, 2, 2, 6, 8).unwrap();
+        assert!(a.taps != c.taps, "different seed must sample different windows");
+    }
+
+    #[test]
+    fn rejects_short_corpus_and_bad_tokens() {
+        let m = tiny_model(dims(), 0, false);
+        assert!(collect(&m, &[1, 2, 3], 1, 1, 8, 0).is_err());
+        let mut toks = synth_calib_tokens(61, 100, 2);
+        toks[50] = 61; // out of vocab
+        assert!(collect(&m, &toks, 1, 1, 8, 0).is_err());
+    }
+
+    #[test]
+    fn vlm_trunk_calibrates_with_zero_image() {
+        let m = tiny_model(dims(), 6, false);
+        let tokens = synth_calib_tokens(61, 200, 3);
+        let cal = collect(&m, &tokens, 2, 2, 6, 4).unwrap();
+        // prefix rows count toward the tap: rows = b * (prefix + s)
+        let rows = 2 * (m.n_img_tokens + 6);
+        assert_eq!(cal.batches("layers.0.wq")[0].len(), rows * dims().d);
+    }
+}

@@ -1,0 +1,56 @@
+//! Native compression pipeline — dense weights in, a servable compressed
+//! `.dobiw` store out, no Python on the path.
+//!
+//! This subsystem mirrors `python/compile/dobi/` in Rust, closing the
+//! loop the serving stack opened: `dobi compress` turns a dense model
+//! into rank-truncated remapped factors that the native backend executes
+//! directly.  Layering:
+//!
+//! * [`svd`]      — one-sided Jacobi thin SVD + Cholesky (pure Rust, f32
+//!   in/out, f64 accumulation, deterministic).
+//! * [`calib`]    — calibration windows through the existing low-rank
+//!   forward, tapping every compression target's input.
+//! * [`rank`]     — SVD-LLM-style whitened truncation-loss spectra and
+//!   greedy waterfilling of ranks under a global parameter budget.
+//! * [`remap`]    — IPCA dominant-subspace tracking, EYM-optimal weight
+//!   reconstruction `W~ = W V V^T`, and the symmetric-sqrt factor split.
+//! * [`pipeline`] — the whole-model driver + `.dobiw`/manifest writers
+//!   (factor-only manifests with an empty `hlo` map, served through the
+//!   router's any-seq mode).
+
+pub mod calib;
+pub mod pipeline;
+pub mod rank;
+pub mod remap;
+pub mod svd;
+
+pub use calib::{collect, sample_windows, synth_calib_tokens, tap_key, Calibration};
+pub use pipeline::{compress_model, eval_loss, write_artifacts, CompressedArtifact};
+pub use rank::{allocate_ranks, whitened_spectrum, whitener, TargetSpectrum, Whitener};
+pub use remap::{reconstruct_factors, Ipca};
+pub use svd::{cholesky_lower, svd_thin, Svd};
+
+/// Test helpers shared by this subsystem's unit-test modules.
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::mathx::XorShift;
+
+    /// Deterministic N(0, scale²) vector off the shared xorshift stream.
+    pub fn randv(rng: &mut XorShift, n: usize, scale: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * scale).collect()
+    }
+
+    /// Unblocked triple-loop reference matmul: (m, k) @ (k, n) row-major.
+    pub fn matmul_ref(a: &[f32], m: usize, k: usize, b: &[f32], n: usize) -> Vec<f32> {
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for t in 0..k {
+                let av = a[i * k + t];
+                for j in 0..n {
+                    out[i * n + j] += av * b[t * n + j];
+                }
+            }
+        }
+        out
+    }
+}

@@ -1,0 +1,437 @@
+//! Whole-model native compression driver: dense `.dobiw` weights in,
+//! rank-allocated remapped factors + a factor-only manifest out — the
+//! Rust mirror of `python/compile/dobi/pipeline.py::dobi_compress`, end
+//! to end: calibration → whitened truncation-position search → budgeted
+//! rank allocation → IPCA weight reconstruction → remap quantization →
+//! `.dobiw` writer.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{CompressConfig, Precision};
+use crate::json::Json;
+use crate::lowrank::kernel::{Factor, FactorData, FactorizedLinear, Linear};
+use crate::lowrank::model::{target_dims, LayerWeights, LAYER_MATS};
+use crate::lowrank::FactorizedModel;
+use crate::mathx::{self, XorShift};
+use crate::runtime::ForwardModel;
+use crate::storage::{f16_tensor, f32_tensor, i8_tensor, write_store, Tensor};
+
+use super::calib;
+use super::rank::{allocate_ranks, whitener, TargetSpectrum, Whitener};
+use super::remap::reconstruct_factors;
+
+/// Everything `dobi compress` produces for one model: the store tensors,
+/// the rank plan and its accounting, and an in-memory f32-factor twin
+/// (the "directly factorized" reference the round-trip parity tests
+/// compare the reloaded store against).
+pub struct CompressedArtifact {
+    pub model_name: String,
+    pub variant_id: String,
+    pub tensors: Vec<Tensor>,
+    pub ranks: BTreeMap<String, usize>,
+    pub spectra: Vec<TargetSpectrum>,
+    pub total_params: usize,
+    pub fixed_params: usize,
+    /// Remapped stored-parameter accounting: fixed + sum k·max(m, n).
+    pub stored_params: usize,
+    pub achieved_ratio: f64,
+    pub payload_bytes: usize,
+    pub reference: FactorizedModel,
+}
+
+fn dense_weight(lin: &Linear, id: &str) -> Result<Vec<f32>> {
+    match lin {
+        Linear::Dense { w, .. } => Ok(w.to_f32()),
+        Linear::LowRank(_) => bail!(
+            "{id}: `{}` is already factorized — compress expects a dense source variant",
+            lin.name()
+        ),
+    }
+}
+
+/// Push the storage tensors of one factor pair at the requested precision,
+/// using exactly the layout `aot._arrays_from_store` / the native loader
+/// expect: plain `<f>.w1`/`<f>.w2` tensors, or `.q8` + `.scales` pairs
+/// with W1 per-column (1, k) and W2 per-row (k, 1) scales.
+fn push_factor_tensors(out: &mut Vec<Tensor>, name: &str, w1: &[f32], w2: &[f32],
+                       m: usize, n: usize, k: usize, precision: Precision) {
+    match precision {
+        Precision::F32 => {
+            out.push(f32_tensor(&format!("{name}.w1"), vec![m, k], w1));
+            out.push(f32_tensor(&format!("{name}.w2"), vec![k, n], w2));
+        }
+        Precision::F16 => {
+            out.push(f16_tensor(&format!("{name}.w1"), vec![m, k], w1));
+            out.push(f16_tensor(&format!("{name}.w2"), vec![k, n], w2));
+        }
+        Precision::Q8 => {
+            let f1 = Factor::i8_cols_from_f32(m, k, w1);
+            let f2 = Factor::i8_rows_from_f32(k, n, w2);
+            for (fname, f, scale_shape) in [
+                (format!("{name}.w1"), f1, vec![1, k]),
+                (format!("{name}.w2"), f2, vec![k, 1]),
+            ] {
+                let (rows, cols) = (f.rows, f.cols);
+                if let FactorData::I8 { codes, scales, .. } = f.data {
+                    out.push(i8_tensor(&format!("{fname}.q8"), vec![rows, cols], &codes));
+                    out.push(f32_tensor(&format!("{fname}.scales"), scale_shape, &scales));
+                }
+            }
+        }
+    }
+}
+
+/// Compress a dense model: calibrate, search truncation positions under
+/// the global budget, reconstruct weights from truncated activations, and
+/// emit remap-quantized store tensors plus the in-memory reference twin.
+pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressConfig,
+                      calib_tokens: &[i32]) -> Result<CompressedArtifact> {
+    anyhow::ensure!(cfg.ratio > 0.0 && cfg.ratio <= 1.0,
+                    "ratio {} outside (0, 1]", cfg.ratio);
+    let d = dense.d_model;
+    let ff = dense.d_ff;
+
+    // Target inventory + dense weights (manifest order).
+    let mut names = Vec::new();
+    let mut weights = Vec::new();
+    let mut dims = Vec::new();
+    for (li, layer) in dense.layers.iter().enumerate() {
+        for (mat, lin) in LAYER_MATS.iter().zip(layer.mats()) {
+            let name = format!("layers.{li}.{mat}");
+            weights.push(dense_weight(lin, &name)?);
+            dims.push(target_dims(mat, d, ff));
+            names.push(name);
+        }
+    }
+    let target_params: usize = dims.iter().map(|&(m, n)| m * n).sum();
+    let fixed_params = count_fixed_params(dense);
+    let total_params = fixed_params + target_params;
+
+    // Calibration + whitened truncation-loss spectra.  Targets that
+    // multiply the same activations (wq/wk/wv; w_gate/w_up) share one
+    // whitener — the Gram + Cholesky is the expensive part of scoring.
+    let cal = calib::collect(dense, calib_tokens, cfg.calib_batches, cfg.calib_batch,
+                             cfg.calib_seq, cfg.seed)?;
+    let mut whiteners: BTreeMap<String, Whitener> = BTreeMap::new();
+    let mut spectra = Vec::with_capacity(names.len());
+    for ((name, w), &(m, n)) in names.iter().zip(&weights).zip(&dims) {
+        let wh = whiteners
+            .entry(calib::tap_key(name))
+            .or_insert_with(|| whitener(cal.batches(name), m));
+        spectra.push(wh.spectrum(name, w, n)?);
+    }
+
+    // Global budget (stored params, remapped accounting) -> per-target ranks.
+    let budget = cfg.budget.unwrap_or((cfg.ratio * total_params as f64).round() as usize);
+    let (ks, _) = allocate_ranks(&spectra, budget.saturating_sub(fixed_params), cfg.k_min);
+
+    // Reconstruct + quantize each target; assemble the reference twin.
+    let mut tensors = Vec::new();
+    tensors.push(f32_tensor("embed", vec![dense.vocab, d], &dense.embed));
+    let mut ranks = BTreeMap::new();
+    let mut stored_params = fixed_params;
+    let mut ref_layers = Vec::with_capacity(dense.layers.len());
+    let mut ti = 0usize;
+    for (li, layer) in dense.layers.iter().enumerate() {
+        tensors.push(f32_tensor(&format!("layers.{li}.attn_norm"), vec![d], &layer.attn_norm));
+        tensors.push(f32_tensor(&format!("layers.{li}.mlp_norm"), vec![d], &layer.mlp_norm));
+        let mut mats: Vec<Linear> = Vec::with_capacity(7);
+        for _ in LAYER_MATS {
+            let name = &names[ti];
+            let (m, n) = dims[ti];
+            let (w1, w2, k) = reconstruct_factors(&weights[ti], m, n,
+                                                  cal.batches(name), ks[ti]);
+            push_factor_tensors(&mut tensors, name, &w1, &w2, m, n, k, cfg.precision);
+            mats.push(Linear::LowRank(FactorizedLinear::new(
+                name, Factor::f32(m, k, w1), Factor::f32(k, n, w2))?));
+            ranks.insert(name.clone(), k);
+            stored_params += k * m.max(n);
+            ti += 1;
+        }
+        let mut it = mats.into_iter();
+        ref_layers.push(LayerWeights {
+            attn_norm: layer.attn_norm.clone(),
+            mlp_norm: layer.mlp_norm.clone(),
+            wq: it.next().unwrap(),
+            wk: it.next().unwrap(),
+            wv: it.next().unwrap(),
+            wo: it.next().unwrap(),
+            w_gate: it.next().unwrap(),
+            w_up: it.next().unwrap(),
+            w_down: it.next().unwrap(),
+        });
+    }
+    tensors.push(f32_tensor("final_norm", vec![d], &dense.final_norm));
+    if let Some(proj) = &dense.img_proj {
+        tensors.push(f32_tensor("img_proj",
+                                vec![dense.img_dim, dense.n_img_tokens * d], proj));
+    }
+    if let Some(head) = &dense.act_head {
+        tensors.push(f32_tensor("act_head", vec![d, 5], head));
+    }
+
+    // Name by the effective target ratio so `--budget` runs are labeled
+    // truthfully rather than inheriting the unused default `--ratio`.
+    let name_ratio = match cfg.budget {
+        Some(b) => b as f64 / total_params as f64,
+        None => cfg.ratio,
+    };
+    let variant_id = format!("{model_name}/dobi_{:.0}", name_ratio * 100.0);
+    let payload_bytes = tensors.iter().map(|t| t.data.len()).sum();
+    let reference = FactorizedModel {
+        id: variant_id.clone(),
+        vocab: dense.vocab,
+        d_model: d,
+        n_heads: dense.n_heads,
+        d_ff: ff,
+        img_dim: dense.img_dim,
+        n_img_tokens: dense.n_img_tokens,
+        action_head: dense.action_head,
+        embed: dense.embed.clone(),
+        final_norm: dense.final_norm.clone(),
+        layers: ref_layers,
+        img_proj: dense.img_proj.clone(),
+        act_head: dense.act_head.clone(),
+    };
+    Ok(CompressedArtifact {
+        model_name: model_name.to_string(),
+        variant_id,
+        tensors,
+        ranks,
+        spectra,
+        total_params,
+        fixed_params,
+        stored_params,
+        achieved_ratio: stored_params as f64 / total_params as f64,
+        payload_bytes,
+        reference,
+    })
+}
+
+fn count_fixed_params(m: &FactorizedModel) -> usize {
+    let mut fixed = m.embed.len() + m.final_norm.len();
+    for l in &m.layers {
+        fixed += l.attn_norm.len() + l.mlp_norm.len();
+    }
+    fixed += m.img_proj.as_ref().map_or(0, |v| v.len());
+    fixed += m.act_head.as_ref().map_or(0, |v| v.len());
+    fixed
+}
+
+// ---------------------------------------------------------------------------
+// Artifacts-dir writer (store + factor-only manifest)
+// ---------------------------------------------------------------------------
+
+fn jnum(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+/// Manifest JSON for a compressed artifacts dir: one model, one
+/// factor-only variant with an **empty** `hlo` map — served natively at
+/// any shape via the router's any-seq mode, no phantom HLO entries.
+pub fn manifest_json(art: &CompressedArtifact, weights_file: &str,
+                     eval_batch: usize, eval_seq: usize) -> String {
+    let m = &art.reference;
+    let config = Json::obj(vec![
+        ("vocab", jnum(m.vocab)),
+        ("d_model", jnum(m.d_model)),
+        ("n_layers", jnum(m.layers.len())),
+        ("n_heads", jnum(m.n_heads)),
+        ("d_ff", jnum(m.d_ff)),
+        ("img_dim", jnum(m.img_dim)),
+        ("n_img_tokens", jnum(m.n_img_tokens)),
+        ("action_head", Json::Bool(m.action_head)),
+    ]);
+    let model = Json::obj(vec![
+        ("config", config),
+        ("total_params", jnum(art.total_params)),
+        ("fixed_params", jnum(art.fixed_params)),
+    ]);
+    let ranks = Json::Obj(art.ranks.iter().map(|(k, &v)| (k.clone(), jnum(v))).collect());
+    let variant = Json::obj(vec![
+        ("id", Json::Str(art.variant_id.clone())),
+        ("model", Json::Str(art.model_name.clone())),
+        ("method", Json::Str("dobi".into())),
+        ("ratio", Json::Num(art.achieved_ratio)),
+        ("kind", Json::Str("factorized".into())),
+        ("kernel", Json::Str("native".into())),
+        ("weights", Json::Str(weights_file.into())),
+        ("param_names", Json::Arr(Vec::new())),
+        ("hlo", Json::Obj(BTreeMap::new())),
+        ("inputs", Json::Arr(vec![Json::Str("tokens".into())])),
+        ("stored_params", jnum(art.stored_params)),
+        ("bytes", jnum(art.payload_bytes)),
+        ("ref_ppl", Json::Obj(BTreeMap::new())),
+        ("ranks", ranks),
+    ]);
+    Json::obj(vec![
+        ("profile", Json::Str("native-compress".into())),
+        ("models", Json::Obj(BTreeMap::from([(art.model_name.clone(), model)]))),
+        ("variants", Json::Arr(vec![variant])),
+        ("corpora", Json::Obj(BTreeMap::new())),
+        ("eval", Json::obj(vec![
+            ("batch", jnum(eval_batch)),
+            ("seq", jnum(eval_seq)),
+            ("windows", jnum(1)),
+        ])),
+    ])
+    .to_string()
+}
+
+/// Write a self-contained artifacts dir (`manifest.json` + the compressed
+/// `.dobiw` store) loadable by `Manifest::load` + the native backend.
+/// Returns the weights path.
+pub fn write_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)
+        .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
+    let weights_file = format!("{}.dobiw", art.variant_id.replace('/', "_"));
+    let wpath = dir.join(&weights_file);
+    write_store(&wpath, &art.tensors)?;
+    std::fs::write(dir.join("manifest.json"), manifest_json(art, &weights_file, 2, 16))
+        .map_err(|e| anyhow!("writing manifest: {e}"))?;
+    Ok(wpath)
+}
+
+/// Mean LM cross-entropy over `n_windows` deterministic (b, s) windows of
+/// `tokens` — the eval-loss scalar the round-trip parity tests compare
+/// between the reloaded store and the in-memory reference.
+pub fn eval_loss<M: ForwardModel>(model: &M, tokens: &[i32], b: usize, s: usize,
+                                  n_windows: usize, seed: u64) -> Result<f64> {
+    let mut rng = XorShift::new(seed);
+    let vocab = model.vocab();
+    let mut total = 0f64;
+    for _ in 0..n_windows {
+        let toks = calib::sample_windows(tokens, b, s, &mut rng)?;
+        let logits = model.forward(b, s, &toks, None)?;
+        total += mathx::lm_cross_entropy(&logits, &toks, b, s, vocab) as f64;
+    }
+    Ok(total / n_windows as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Manifest;
+    use crate::lowrank::synth::{tiny_model, TinyDims};
+
+    fn dims() -> TinyDims {
+        TinyDims { vocab: 61, d: 16, heads: 2, layers: 2, ff: 24 }
+    }
+
+    fn cfg(ratio: f64, precision: Precision) -> CompressConfig {
+        CompressConfig {
+            ratio,
+            precision,
+            calib_batches: 3,
+            calib_batch: 2,
+            calib_seq: 12,
+            ..Default::default()
+        }
+    }
+
+    fn corpus() -> Vec<i32> {
+        super::super::calib::synth_calib_tokens(61, 600, 17)
+    }
+
+    #[test]
+    fn compress_meets_budget_and_builds_reference() {
+        let dense = tiny_model(dims(), 0, false);
+        let art = compress_model(&dense, "tiny", &cfg(0.4, Precision::Q8), &corpus()).unwrap();
+        assert_eq!(art.ranks.len(), 7 * dims().layers);
+        let budget = (0.4 * art.total_params as f64).round() as usize;
+        assert!(art.stored_params <= budget,
+                "stored {} over budget {budget}", art.stored_params);
+        assert!(art.achieved_ratio > 0.05, "suspiciously tiny ratio");
+        assert!(art.ranks.values().all(|&k| k >= 1));
+        // reference twin serves and has the allocated ranks
+        for layer in &art.reference.layers {
+            for lin in layer.mats() {
+                assert_eq!(lin.rank(), art.ranks[lin.name()], "{}", lin.name());
+            }
+        }
+        let tokens: Vec<i32> = (0..24).map(|i| i % 61).collect();
+        let out = art.reference.forward(2, 12, &tokens, None).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn higher_ratio_buys_rank_and_keeps_quality() {
+        let dense = tiny_model(dims(), 0, false);
+        let toks = corpus();
+        let lo = compress_model(&dense, "tiny", &cfg(0.3, Precision::F32), &toks).unwrap();
+        let hi = compress_model(&dense, "tiny", &cfg(0.6, Precision::F32), &toks).unwrap();
+        assert!(hi.stored_params > lo.stored_params,
+                "0.6 must store more than 0.3: {} vs {}", hi.stored_params, lo.stored_params);
+        let sum = |a: &CompressedArtifact| a.ranks.values().sum::<usize>();
+        assert!(sum(&hi) > sum(&lo), "larger budget must buy rank somewhere");
+        let l_lo = eval_loss(&lo.reference, &toks, 2, 12, 4, 3).unwrap();
+        let l_hi = eval_loss(&hi.reference, &toks, 2, 12, 4, 3).unwrap();
+        let l_dense = eval_loss(&dense, &toks, 2, 12, 4, 3).unwrap();
+        assert!(l_hi <= l_lo + 0.1, "more budget hurt: {l_hi} vs {l_lo}");
+        assert!(l_dense <= l_lo + 0.1, "dense must be best: {l_dense} vs {l_lo}");
+    }
+
+    #[test]
+    fn explicit_budget_overrides_ratio() {
+        let dense = tiny_model(dims(), 0, false);
+        let mut c = cfg(0.9, Precision::F32);
+        let total = 61 * 16 + 16 + 2 * (2 * 16 + 4 * 16 * 16 + 3 * 16 * 24);
+        c.budget = Some(total * 3 / 10);
+        let art = compress_model(&dense, "tiny", &c, &corpus()).unwrap();
+        assert_eq!(art.total_params, total);
+        assert!(art.stored_params <= total * 3 / 10,
+                "stored {} over explicit budget {}", art.stored_params, total * 3 / 10);
+    }
+
+    #[test]
+    fn rejects_factorized_source_and_bad_ratio() {
+        let fact = tiny_model(dims(), 0, true);
+        assert!(compress_model(&fact, "tiny", &cfg(0.4, Precision::Q8), &corpus()).is_err());
+        let dense = tiny_model(dims(), 0, false);
+        assert!(compress_model(&dense, "tiny", &cfg(0.0, Precision::Q8), &corpus()).is_err());
+        assert!(compress_model(&dense, "tiny", &cfg(1.5, Precision::Q8), &corpus()).is_err());
+    }
+
+    #[test]
+    fn artifacts_dir_loads_through_manifest() {
+        let dense = tiny_model(dims(), 0, false);
+        let art = compress_model(&dense, "tiny", &cfg(0.5, Precision::Q8), &corpus()).unwrap();
+        let dir = std::env::temp_dir().join("dobi_compress_pipe_manifest");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_artifacts(&dir, &art).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.profile, "native-compress");
+        let v = m.variant("tiny/dobi_50").unwrap();
+        assert!(v.hlo.is_empty(), "factor-only manifest must carry no HLO entries");
+        assert_eq!(v.kind, "factorized");
+        assert_eq!(v.stored_params, art.stored_params);
+        assert_eq!(v.ranks.len(), art.ranks.len());
+        assert!(m.path(&v.weights).exists());
+        let info = &m.models["tiny"];
+        assert_eq!(info.vocab, 61);
+        assert_eq!(info.d_model, 16);
+        assert_eq!(info.n_layers, 2);
+    }
+
+    #[test]
+    fn q8_store_tracks_f32_reference_closely() {
+        let dense = tiny_model(dims(), 0, false);
+        let toks = corpus();
+        let art = compress_model(&dense, "tiny", &cfg(0.5, Precision::Q8), &toks).unwrap();
+        let dir = std::env::temp_dir().join("dobi_compress_pipe_q8");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_artifacts(&dir, &art).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant(&art.variant_id).unwrap();
+        let store = crate::storage::Store::open(&m.path(&v.weights)).unwrap();
+        let loaded =
+            FactorizedModel::from_store(&m.models["tiny"], v, &store).unwrap();
+        let l_store = eval_loss(&loaded, &toks, 2, 12, 4, 9).unwrap();
+        let l_ref = eval_loss(&art.reference, &toks, 2, 12, 4, 9).unwrap();
+        assert!((l_store - l_ref).abs() < 0.3,
+                "int8 store drifted from f32 reference: {l_store} vs {l_ref}");
+    }
+}

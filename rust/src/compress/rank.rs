@@ -1,0 +1,324 @@
+//! Activation-aware truncation-position search: whitened per-target
+//! spectra + global budgeted rank allocation.
+//!
+//! For each compression target W (m_in x n_out) with calibration inputs
+//! X_i, the loss of truncating the *activation* A = [X_1; ...; X_B] W at
+//! rank k is `sum_{i>k} sigma_i^2(A)`.  Rather than stacking activations,
+//! we whiten per SVD-LLM (Wang et al., 2024): with the Gram matrix
+//! `G = sum_i X_i^T X_i = L L^T` (Cholesky), the singular values of
+//! `L^T W` are exactly those of the stacked A — so one weight-sized SVD
+//! per target yields the full truncation-loss curve.
+//!
+//! Ranks are then allocated across all targets under a global stored-
+//! parameter budget by greedy waterfilling over loss sensitivity: each
+//! step spends `max(m, n)` parameters (the remapped storage cost of one
+//! rank unit, `truncation.py::remap_ratio`) on the target with the
+//! largest marginal loss reduction per parameter — the discrete-grid
+//! evaluation of the paper's differentiable truncation objective, in the
+//! loss-sensitivity-balanced spirit of Zero Sum SVD (Abbasi et al., 2025).
+
+use anyhow::Result;
+
+use super::svd::{cholesky_lower, svd_thin};
+
+/// Truncation-loss curve of one compression target.
+#[derive(Debug, Clone)]
+pub struct TargetSpectrum {
+    pub name: String,
+    /// Input (row) dimension of the target matrix.
+    pub m: usize,
+    /// Output (column) dimension.
+    pub n: usize,
+    /// `sigma_i^2` of the whitened weight, descending; len min(m, n).
+    pub sigma2: Vec<f64>,
+}
+
+impl TargetSpectrum {
+    /// Remapped storage cost of one rank unit (Algo 3: k·max(m,n) params).
+    pub fn unit_cost(&self) -> usize {
+        self.m.max(self.n)
+    }
+
+    pub fn max_rank(&self) -> usize {
+        self.m.min(self.n)
+    }
+
+    /// Normalized truncation loss at rank k: tail energy / total energy.
+    pub fn loss_at(&self, k: usize) -> f64 {
+        let total: f64 = self.sigma2.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        self.sigma2.iter().skip(k).sum::<f64>() / total
+    }
+}
+
+/// Accumulate the Gram matrix `G = sum_i X_i^T X_i` (m x m, f64) from
+/// per-batch row-major (rows, m) activations.
+pub fn gram(xs: &[Vec<f32>], m: usize) -> Vec<f64> {
+    let mut g = vec![0f64; m * m];
+    for x in xs {
+        assert_eq!(x.len() % m, 0, "calibration batch not row-major (rows, {m})");
+        let rows = x.len() / m;
+        for r in 0..rows {
+            let row = &x[r * m..(r + 1) * m];
+            for i in 0..m {
+                let xi = row[i] as f64;
+                if xi != 0.0 {
+                    for j in 0..m {
+                        g[i * m + j] += xi * row[j] as f64;
+                    }
+                }
+            }
+        }
+    }
+    g
+}
+
+/// The whitening factor of one calibration input, reusable across every
+/// target that multiplies the same activations (wq/wk/wv share their
+/// post-attn-norm input, w_gate/w_up their post-mlp-norm input — the
+/// Gram + Cholesky, the expensive part at O(rows·m²) + O(m³), is paid
+/// once per shared input instead of once per target).
+pub struct Whitener {
+    m: usize,
+    /// Lower Cholesky factor of the (jittered) Gram; `None` when the Gram
+    /// is numerically degenerate even after jitter (e.g. all-zero
+    /// calibration) — spectra then fall back to the plain weight SVD so
+    /// compression never aborts on a pathological target.
+    l: Option<Vec<f64>>,
+}
+
+/// Build the whitener `L` with `sum_i X_i^T X_i + jit·I = L L^T`,
+/// escalating the diagonal jitter until the factorization succeeds.
+pub fn whitener(xs: &[Vec<f32>], m: usize) -> Whitener {
+    let g = gram(xs, m);
+    let mean_diag = (0..m).map(|i| g[i * m + i]).sum::<f64>() / m as f64;
+    // Degenerate calibration (all-zero or non-finite activations) carries
+    // no whitening signal: take the documented plain-weight-spectrum
+    // fallback instead of Cholesky-factoring a pure-jitter Gram, whose
+    // ~1e-20-scaled spectrum would starve the target in allocation.
+    if !mean_diag.is_finite() || mean_diag <= 0.0 {
+        return Whitener { m, l: None };
+    }
+    let mut l = None;
+    for jit_scale in [1e-8, 1e-6, 1e-4] {
+        let jit = jit_scale * mean_diag;
+        let mut gj = g.clone();
+        for i in 0..m {
+            gj[i * m + i] += jit;
+        }
+        if let Some(found) = cholesky_lower(&gj, m) {
+            l = Some(found);
+            break;
+        }
+    }
+    Whitener { m, l }
+}
+
+impl Whitener {
+    /// Whitened spectrum of one target: `sigma^2(L^T W)` — exactly the
+    /// singular values of the stacked calibration activations `X W`.
+    pub fn spectrum(&self, name: &str, w: &[f32], n: usize) -> Result<TargetSpectrum> {
+        let m = self.m;
+        anyhow::ensure!(w.len() == m * n, "{name}: weight is not {m}x{n}");
+        let spectrum_of = |mat: &[f32]| -> Vec<f64> {
+            svd_thin(mat, m, n).s.iter().map(|&s| (s as f64) * (s as f64)).collect()
+        };
+        let sigma2 = match &self.l {
+            Some(l) => {
+                // L^T W: (m, n); L is lower so L^T[i, r] = L[r, i], r >= i.
+                // Rows accumulate in f64 (the subsystem's working
+                // precision) and cast once, so the tail singular values
+                // the allocator compares are not f32 rounding noise.
+                let mut lw = vec![0f32; m * n];
+                let mut row = vec![0f64; n];
+                for i in 0..m {
+                    row.iter_mut().for_each(|v| *v = 0.0);
+                    for r in i..m {
+                        let lv = l[r * m + i];
+                        if lv != 0.0 {
+                            let wrow = &w[r * n..(r + 1) * n];
+                            for (o, &wv) in row.iter_mut().zip(wrow) {
+                                *o += lv * wv as f64;
+                            }
+                        }
+                    }
+                    for (o, &v) in lw[i * n..(i + 1) * n].iter_mut().zip(row.iter()) {
+                        *o = v as f32;
+                    }
+                }
+                spectrum_of(&lw)
+            }
+            None => spectrum_of(w),
+        };
+        Ok(TargetSpectrum { name: name.to_string(), m, n, sigma2 })
+    }
+}
+
+/// One-shot convenience: build the whitener for `xs` and score `w`.
+pub fn whitened_spectrum(name: &str, w: &[f32], m: usize, n: usize,
+                         xs: &[Vec<f32>]) -> Result<TargetSpectrum> {
+    whitener(xs, m).spectrum(name, w, n)
+}
+
+/// Greedy waterfilling: allocate integer ranks to every target under a
+/// global budget of stored parameters (remapped accounting: a rank unit
+/// on target t costs `max(m_t, n_t)`).  Starts all targets at
+/// `min(k_min, max_rank)` and repeatedly buys the rank increment with the
+/// best marginal `sigma^2 / cost` until the budget is exhausted or every
+/// target is full rank.  Deterministic: ties resolve to the lowest index.
+///
+/// Returns `(ranks, spent)`.  The floor allocation is granted even when
+/// it exceeds the budget (a model cannot serve rank-0 factors); callers
+/// see the overshoot in `spent`.
+pub fn allocate_ranks(specs: &[TargetSpectrum], budget: usize,
+                      k_min: usize) -> (Vec<usize>, usize) {
+    let k_min = k_min.max(1);
+    let mut ks: Vec<usize> = specs.iter().map(|t| k_min.min(t.max_rank())).collect();
+    let mut spent: usize = specs.iter().zip(&ks).map(|(t, &k)| k * t.unit_cost()).sum();
+    loop {
+        let mut best: Option<(usize, f64)> = None;
+        for (i, t) in specs.iter().enumerate() {
+            if ks[i] >= t.max_rank() || spent + t.unit_cost() > budget {
+                continue;
+            }
+            // marginal loss reduction of rank ks[i] -> ks[i]+1, per param
+            let gain = t.sigma2.get(ks[i]).copied().unwrap_or(0.0) / t.unit_cost() as f64;
+            match best {
+                Some((_, g)) if gain <= g => {}
+                _ => best = Some((i, gain)),
+            }
+        }
+        let Some((i, _)) = best else { break };
+        ks[i] += 1;
+        spent += specs[i].unit_cost();
+    }
+    (ks, spent)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::randv;
+    use crate::mathx::XorShift;
+
+    /// sigma^2 of the stacked activations [X_1 W; ...; X_B W], via the
+    /// unwhitened route (direct SVD of the tall stack) — the reference the
+    /// whitened computation must match.
+    fn stacked_spectrum(xs: &[Vec<f32>], w: &[f32], m: usize, n: usize) -> Vec<f64> {
+        let rows: usize = xs.iter().map(|x| x.len() / m).sum();
+        let mut a = vec![0f32; rows * n];
+        let mut r0 = 0usize;
+        for x in xs {
+            let br = x.len() / m;
+            for r in 0..br {
+                for j in 0..n {
+                    let mut acc = 0f32;
+                    for t in 0..m {
+                        acc += x[r * m + t] * w[t * n + j];
+                    }
+                    a[(r0 + r) * n + j] = acc;
+                }
+            }
+            r0 += br;
+        }
+        svd_thin(&a, rows, n).s.iter().map(|&s| (s as f64) * (s as f64)).collect()
+    }
+
+    #[test]
+    fn whitened_matches_stacked_activation_spectrum() {
+        let mut rng = XorShift::new(11);
+        let (m, n) = (10usize, 8usize);
+        let w = randv(&mut rng, m * n, 0.4);
+        let xs: Vec<Vec<f32>> = (0..3).map(|_| randv(&mut rng, 20 * m, 1.0)).collect();
+        let spec = whitened_spectrum("t", &w, m, n, &xs).unwrap();
+        let reference = stacked_spectrum(&xs, &w, m, n);
+        assert_eq!(spec.sigma2.len(), n);
+        for (a, b) in spec.sigma2.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-3 * reference[0].max(1.0),
+                    "whitened {a} vs stacked {b}");
+        }
+    }
+
+    #[test]
+    fn degenerate_calibration_falls_back_to_weight_spectrum() {
+        let mut rng = XorShift::new(12);
+        let (m, n) = (6usize, 5usize);
+        let w = randv(&mut rng, m * n, 0.4);
+        let xs = vec![vec![0f32; 4 * m]]; // all-zero activations
+        let spec = whitened_spectrum("t", &w, m, n, &xs).unwrap();
+        // the fallback is the PLAIN weight spectrum — not a jitter-scaled
+        // near-zero one that would starve the target during allocation
+        let plain: Vec<f64> =
+            svd_thin(&w, m, n).s.iter().map(|&s| (s as f64) * (s as f64)).collect();
+        assert_eq!(spec.sigma2.len(), plain.len());
+        for (a, b) in spec.sigma2.iter().zip(&plain) {
+            assert!((a - b).abs() < 1e-9 * plain[0].max(1.0), "{a} vs {b}");
+        }
+        assert!(spec.sigma2[0] > 1e-3, "weight energy must survive the fallback");
+    }
+
+    fn spec(name: &str, m: usize, n: usize, sigma2: Vec<f64>) -> TargetSpectrum {
+        TargetSpectrum { name: name.into(), m, n, sigma2 }
+    }
+
+    #[test]
+    fn waterfill_respects_budget_and_prefers_energy() {
+        // target a holds all the energy; b is nearly flat noise.
+        let a = spec("a", 10, 10, vec![100.0, 50.0, 25.0, 12.0, 6.0, 3.0, 1.0, 0.5, 0.2, 0.1]);
+        let b = spec("b", 10, 10, vec![1.0; 10]);
+        let budget = 8 * 10; // 8 rank units at cost 10 each
+        let (ks, spent) = allocate_ranks(&[a, b], budget, 1);
+        assert!(spent <= budget);
+        assert_eq!(spent, 80, "greedy fills the whole budget when gains remain");
+        assert!(ks[0] > ks[1], "energy-heavy target gets more rank: {ks:?}");
+        assert!(ks[0] >= 1 && ks[1] >= 1);
+    }
+
+    #[test]
+    fn waterfill_floor_allocation_when_budget_tiny() {
+        let a = spec("a", 4, 6, vec![1.0, 0.5, 0.2, 0.1]);
+        let b = spec("b", 6, 4, vec![1.0, 0.5, 0.2, 0.1]);
+        let (ks, spent) = allocate_ranks(&[a, b], 0, 1);
+        assert_eq!(ks, vec![1, 1], "floor rank granted even over budget");
+        assert_eq!(spent, 12);
+    }
+
+    #[test]
+    fn waterfill_monotone_in_budget() {
+        let mut rng = XorShift::new(13);
+        let specs: Vec<TargetSpectrum> = (0..4)
+            .map(|i| {
+                let mut s2: Vec<f64> =
+                    (0..8).map(|_| (rng.normal().abs() + 0.01) * 10.0).collect();
+                s2.sort_by(|a, b| b.partial_cmp(a).unwrap());
+                spec(&format!("t{i}"), 8, 8 + i, s2)
+            })
+            .collect();
+        let (lo, _) = allocate_ranks(&specs, 100, 1);
+        let (hi, _) = allocate_ranks(&specs, 200, 1);
+        for (a, b) in lo.iter().zip(&hi) {
+            assert!(b >= a, "rank shrank with a larger budget: {lo:?} vs {hi:?}");
+        }
+    }
+
+    #[test]
+    fn waterfill_caps_at_full_rank() {
+        let a = spec("a", 4, 4, vec![5.0, 3.0, 2.0, 1.0]);
+        let (ks, spent) = allocate_ranks(&[a], usize::MAX / 2, 1);
+        assert_eq!(ks, vec![4]);
+        assert_eq!(spent, 16);
+    }
+
+    #[test]
+    fn loss_curve_monotone() {
+        let t = spec("t", 6, 6, vec![10.0, 5.0, 2.0, 1.0, 0.5, 0.1]);
+        let losses: Vec<f64> = (0..=6).map(|k| t.loss_at(k)).collect();
+        assert!((losses[0] - 1.0).abs() < 1e-12);
+        assert_eq!(losses[6], 0.0);
+        for w in losses.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+    }
+}

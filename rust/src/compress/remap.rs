@@ -1,0 +1,300 @@
+//! IPCA weight reconstruction + remapped factor extraction — the native
+//! mirror of `python/compile/dobi/ipca.py` and `remap.py`.
+//!
+//! Given calibration activations `A_i = X_i W`, the EYM-optimal rank-k
+//! update is `W~ = W V V^T` where `V` spans the dominant subspace of the
+//! stacked per-batch right-singular bases (paper §3.2, Algo 2).  Full PCA
+//! would materialize an n x (batches*k) stack; [`Ipca`] keeps an n x k
+//! running basis and folds one batch at a time, weighting columns by
+//! their accumulated singular values so early batches are not washed out.
+//!
+//! [`reconstruct_factors`] then exploits that `W~` is already a rank-k
+//! product: with `B0 = W V` (m x k), a single small SVD `B0 = U S P^T`
+//! yields `W~ = U S (V P)^T`, and the symmetric-sqrt split
+//! `W1 = U sqrt(S)`, `W2 = sqrt(S) (V P)^T` keeps both factors at
+//! comparable dynamic range — the property that makes them int8-friendly
+//! (`remap.py::factorize`, paper Fig 5/6).
+
+use super::svd::svd_thin;
+
+/// Streaming dominant-subspace tracker over right-singular bases.
+/// Peak memory O(n * 2k), constant in the number of batches (Fig 3c).
+pub struct Ipca {
+    n: usize,
+    k: usize,
+    /// (n, kk) row-major orthonormal columns; kk <= k grows to k.
+    basis: Vec<f32>,
+    /// kk accumulated singular weights.
+    weights: Vec<f32>,
+    kk: usize,
+    n_seen: usize,
+}
+
+impl Ipca {
+    pub fn new(n: usize, k: usize) -> Ipca {
+        assert!(k >= 1 && k <= n, "ipca: k {k} outside [1, {n}]");
+        Ipca { n, k, basis: Vec::new(), weights: Vec::new(), kk: 0, n_seen: 0 }
+    }
+
+    pub fn n_seen(&self) -> usize {
+        self.n_seen
+    }
+
+    /// Fold one batch's (basis: (n, kin) row-major, weights: kin).
+    pub fn partial_fit(&mut self, v_i: &[f32], s_i: &[f32]) {
+        let kin = s_i.len();
+        assert_eq!(v_i.len(), self.n * kin, "ipca: basis not (n, {kin})");
+        self.n_seen += 1;
+        if self.kk == 0 {
+            self.kk = kin.min(self.k);
+            self.basis = vec![0f32; self.n * self.kk];
+            for i in 0..self.n {
+                for j in 0..self.kk {
+                    self.basis[i * self.kk + j] = v_i[i * kin + j];
+                }
+            }
+            self.weights = s_i[..self.kk].to_vec();
+            return;
+        }
+        // stacked = [basis * weights | v_i * s_i]  (n, kk + kin)
+        let cols = self.kk + kin;
+        let mut stacked = vec![0f32; self.n * cols];
+        for i in 0..self.n {
+            for j in 0..self.kk {
+                stacked[i * cols + j] = self.basis[i * self.kk + j] * self.weights[j];
+            }
+            for j in 0..kin {
+                stacked[i * cols + self.kk + j] = v_i[i * kin + j] * s_i[j];
+            }
+        }
+        let svd = svd_thin(&stacked, self.n, cols);
+        let r = svd.rank();
+        let kk = self.k.min(r);
+        let mut basis = vec![0f32; self.n * kk];
+        for i in 0..self.n {
+            for j in 0..kk {
+                basis[i * kk + j] = svd.u[i * r + j];
+            }
+        }
+        self.basis = basis;
+        self.weights = svd.s[..kk].to_vec();
+        self.kk = kk;
+    }
+
+    /// The tracked orthonormal basis as ((n, kk) row-major, kk).
+    pub fn components(&self) -> (&[f32], usize) {
+        assert!(self.kk > 0, "ipca: partial_fit never called");
+        (&self.basis, self.kk)
+    }
+}
+
+/// Top-k right-singular basis of one activation batch (rows, n):
+/// returns (V_k: (n, k) row-major, s_k).
+pub fn batch_right_basis(a: &[f32], rows: usize, n: usize,
+                         k: usize) -> (Vec<f32>, Vec<f32>) {
+    let svd = svd_thin(a, rows, n);
+    let r = svd.rank();
+    let k = k.min(r);
+    let mut v = vec![0f32; n * k];
+    for i in 0..n {
+        for j in 0..k {
+            v[i * k + j] = svd.vt[j * n + i];
+        }
+    }
+    (v, svd.s[..k].to_vec())
+}
+
+/// Reconstructed rank-k factors of one target from truncated calibration
+/// activations.  `w` is (m, n) row-major; `xs` are per-batch (rows, m)
+/// calibration inputs.  Returns `(w1: (m, k'), w2: (k', n), k')` with
+/// `k' = k` unless the calibration subspace is narrower (then `k' < k`).
+pub fn reconstruct_factors(w: &[f32], m: usize, n: usize, xs: &[Vec<f32>],
+                           k: usize) -> (Vec<f32>, Vec<f32>, usize) {
+    assert_eq!(w.len(), m * n, "reconstruct: weight not {m}x{n}");
+    assert!(k >= 1 && k <= m.min(n), "reconstruct: rank {k} outside [1, {}]", m.min(n));
+    assert!(!xs.is_empty(), "reconstruct: no calibration batches");
+    // Track a basis wider than k (as the python pipeline does) so the
+    // k-dim cut of the converged subspace is stable.
+    let k_track = (k + 16).max(k * 5 / 4).min(m.min(n));
+    let mut tracker = Ipca::new(n, k_track);
+    for x in xs {
+        let rows = x.len() / m;
+        assert_eq!(x.len(), rows * m, "calibration batch not (rows, {m})");
+        // a = x @ w  (rows, n)
+        let mut a = vec![0f32; rows * n];
+        for r in 0..rows {
+            for t in 0..m {
+                let xv = x[r * m + t];
+                if xv != 0.0 {
+                    let wrow = &w[t * n..(t + 1) * n];
+                    let orow = &mut a[r * n..(r + 1) * n];
+                    for (o, &wv) in orow.iter_mut().zip(wrow) {
+                        *o += xv * wv;
+                    }
+                }
+            }
+        }
+        let (v_i, s_i) = batch_right_basis(&a, rows, n, k_track);
+        tracker.partial_fit(&v_i, &s_i);
+    }
+    let (basis, kk) = tracker.components();
+    let k = k.min(kk);
+    // v: (n, k) leading columns of the tracked basis
+    let mut v = vec![0f32; n * k];
+    for i in 0..n {
+        for j in 0..k {
+            v[i * k + j] = basis[i * kk + j];
+        }
+    }
+    // b0 = w @ v  (m, k)
+    let mut b0 = vec![0f32; m * k];
+    for i in 0..m {
+        for t in 0..n {
+            let wv = w[i * n + t];
+            if wv != 0.0 {
+                for j in 0..k {
+                    b0[i * k + j] += wv * v[t * k + j];
+                }
+            }
+        }
+    }
+    // b0 = U S P^T  (m >= k always: k <= min(m, n)), so rank == k slots.
+    let svd = svd_thin(&b0, m, k);
+    let r = svd.rank(); // == k
+    let rs: Vec<f32> = svd.s.iter().map(|&s| s.max(0.0).sqrt()).collect();
+    // w1 = U sqrt(S)  (m, k)
+    let mut w1 = vec![0f32; m * k];
+    for i in 0..m {
+        for j in 0..k {
+            w1[i * k + j] = svd.u[i * r + j] * rs[j];
+        }
+    }
+    // w2 = sqrt(S) P^T V^T  (k, n): first ps = diag(rs) @ vt  (k, k),
+    // then w2[j, i] = sum_l ps[j, l] * v[i, l].
+    let mut w2 = vec![0f32; k * n];
+    for j in 0..k {
+        for i in 0..n {
+            let mut acc = 0f32;
+            for l in 0..k {
+                acc += rs[j] * svd.vt[j * k + l] * v[i * k + l];
+            }
+            w2[j * n + i] = acc;
+        }
+    }
+    (w1, w2, k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::{matmul_ref, randv};
+    use crate::mathx::XorShift;
+
+    fn fro(xs: &[f32]) -> f64 {
+        xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    #[test]
+    fn ipca_tracks_dominant_subspace_of_identical_batches() {
+        // Every batch contributes the same basis: IPCA must return it.
+        let n = 6usize;
+        let k = 2usize;
+        // orthonormal 2-col basis: e0, e3
+        let mut v = vec![0f32; n * k];
+        v[0] = 1.0;
+        v[3 * k + 1] = 1.0;
+        let s = vec![5.0f32, 2.0];
+        let mut tr = Ipca::new(n, k);
+        for _ in 0..4 {
+            tr.partial_fit(&v, &s);
+        }
+        let (b, kk) = tr.components();
+        assert_eq!(kk, k);
+        assert_eq!(tr.n_seen(), 4);
+        // columns span {e0, e3} (up to sign): check projector equality
+        let proj = |basis: &[f32]| -> Vec<f32> {
+            let mut bt = vec![0f32; k * n];
+            for i in 0..n {
+                for j in 0..k {
+                    bt[j * n + i] = basis[i * k + j];
+                }
+            }
+            matmul_ref(basis, n, k, &bt, n)
+        };
+        let got = proj(b);
+        let want = proj(&v);
+        for (a, c) in got.iter().zip(&want) {
+            assert!((a - c).abs() < 1e-4, "projector drifted");
+        }
+    }
+
+    #[test]
+    fn reconstruct_matches_oracle_on_lowrank_activations() {
+        // X has an exact rank-3 column space => rank-3 reconstruction must
+        // reproduce X W almost exactly.
+        let mut rng = XorShift::new(21);
+        let (m, n, true_k) = (10usize, 8usize, 3usize);
+        let w = randv(&mut rng, m * n, 0.5);
+        let mix = randv(&mut rng, true_k * m, 0.8);
+        let xs: Vec<Vec<f32>> = (0..3)
+            .map(|_| {
+                let z = randv(&mut rng, 20 * true_k, 1.0);
+                matmul_ref(&z, 20, true_k, &mix, m)
+            })
+            .collect();
+        let (w1, w2, k) = reconstruct_factors(&w, m, n, &xs, true_k);
+        assert_eq!(k, true_k);
+        let wk = matmul_ref(&w1, m, k, &w2, n);
+        for x in &xs {
+            let rows = x.len() / m;
+            let a = matmul_ref(x, rows, m, &w, n);
+            let ak = matmul_ref(x, rows, m, &wk, n);
+            let err = a.iter().zip(&ak).map(|(p, q)| (p - q).abs()).fold(0f32, f32::max);
+            assert!(err < 1e-3 * (1.0 + fro(&a) as f32), "activation err {err}");
+        }
+    }
+
+    #[test]
+    fn full_rank_reconstruction_recovers_weight() {
+        // k = min(m, n) with rich calibration => W~ == W (VV^T == I on the
+        // activation row space, which is everything).
+        let mut rng = XorShift::new(22);
+        let (m, n) = (7usize, 6usize);
+        let w = randv(&mut rng, m * n, 0.5);
+        let xs: Vec<Vec<f32>> = (0..3).map(|_| randv(&mut rng, 15 * m, 1.0)).collect();
+        let (w1, w2, k) = reconstruct_factors(&w, m, n, &xs, n);
+        assert_eq!(k, n);
+        let wk = matmul_ref(&w1, m, k, &w2, n);
+        let err = wk.iter().zip(&w).map(|(p, q)| (p - q).abs()).fold(0f32, f32::max);
+        assert!(err < 1e-3, "full-rank reconstruction err {err}");
+    }
+
+    #[test]
+    fn factors_have_balanced_scale() {
+        // symmetric-sqrt split: ||W1||_F ~= ||W2||_F (the int8-friendliness
+        // property the remap relies on).
+        let mut rng = XorShift::new(23);
+        let (m, n, k) = (12usize, 9usize, 4usize);
+        let w = randv(&mut rng, m * n, 0.5);
+        let xs: Vec<Vec<f32>> = (0..2).map(|_| randv(&mut rng, 20 * m, 1.0)).collect();
+        let (w1, w2, _) = reconstruct_factors(&w, m, n, &xs, k);
+        let (f1, f2) = (fro(&w1), fro(&w2));
+        assert!(f1 > 0.0 && f2 > 0.0);
+        let ratio = f1 / f2;
+        assert!(ratio > 0.5 && ratio < 2.0, "factor scales unbalanced: {ratio}");
+    }
+
+    #[test]
+    fn narrow_calibration_clamps_rank() {
+        // 2-row batches can only witness a 2-dim activation subspace; a
+        // rank-5 request must clamp to what the calibration supports.
+        let mut rng = XorShift::new(24);
+        let (m, n) = (8usize, 6usize);
+        let w = randv(&mut rng, m * n, 0.5);
+        let xs = vec![randv(&mut rng, 2 * m, 1.0)];
+        let (w1, w2, k) = reconstruct_factors(&w, m, n, &xs, 5);
+        assert!(k <= 2, "rank {k} exceeds witnessed subspace");
+        assert_eq!(w1.len(), m * k);
+        assert_eq!(w2.len(), k * n);
+    }
+}

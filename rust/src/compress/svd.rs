@@ -1,0 +1,392 @@
+//! Pure-Rust thin SVD via one-sided Jacobi — the factorization kernel of
+//! the native compression pipeline (no LAPACK offline).
+//!
+//! One-sided Jacobi orthogonalizes the *columns* of A by plane rotations:
+//! after convergence the column norms are the singular values, the
+//! normalized columns are U, and the accumulated rotations are V.  It is
+//! slower than bidiagonalization-based drivers but is simple, numerically
+//! robust (every step is an exact orthogonal transform), and fully
+//! deterministic — the pair sweep order is fixed, so identical inputs
+//! produce identical factors on every platform.  Accumulation runs in f64
+//! (mirroring `python/compile/dobi/ipca.py::robust_svd` working precision);
+//! inputs and outputs are the crate-wide f32.
+
+/// Relative off-diagonal threshold: rotate while
+/// `|a_p . a_q| > TOL * ||a_p|| * ||a_q||`.
+const TOL: f64 = 1e-9;
+
+/// Sweep cap — one-sided Jacobi converges quadratically, so ~10 sweeps
+/// suffice in practice; 60 is a generous safety bound.
+const MAX_SWEEPS: usize = 60;
+
+/// Thin SVD `A = U diag(s) Vt` of a row-major (m, n) matrix with
+/// `r = min(m, n)`: `u` is (m, r), `s` is descending, `vt` is (r, n).
+#[derive(Debug, Clone)]
+pub struct Svd {
+    pub u: Vec<f32>,
+    pub s: Vec<f32>,
+    pub vt: Vec<f32>,
+}
+
+impl Svd {
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+}
+
+/// Thin SVD of a row-major (m, n) f32 matrix.  Non-finite entries are
+/// sanitized to zero (the `robust_svd` contract).  Singular vectors of
+/// zero singular values come out as zero columns — callers truncate well
+/// above that regime.
+pub fn svd_thin(a: &[f32], m: usize, n: usize) -> Svd {
+    assert_eq!(a.len(), m * n, "svd_thin: {m}x{n} needs {} elems", m * n);
+    assert!(m > 0 && n > 0, "svd_thin: empty matrix");
+    let clean: Vec<f64> =
+        a.iter().map(|&x| if x.is_finite() { x as f64 } else { 0.0 }).collect();
+    if m >= n {
+        let (u, s, vt) = jacobi_tall(&clean, m, n);
+        Svd {
+            u: u.iter().map(|&x| x as f32).collect(),
+            s: s.iter().map(|&x| x as f32).collect(),
+            vt: vt.iter().map(|&x| x as f32).collect(),
+        }
+    } else {
+        // Wide: decompose the transpose.  A^T = U1 S V1^T  =>
+        // A = V1 S U1^T, so U = V1 (m, m) and Vt = U1^T (m, n).
+        let mut at = vec![0f64; n * m];
+        for i in 0..m {
+            for j in 0..n {
+                at[j * m + i] = clean[i * n + j];
+            }
+        }
+        let (u1, s, vt1) = jacobi_tall(&at, n, m); // u1 (n, m), vt1 (m, m)
+        let mut u = vec![0f32; m * m];
+        for r in 0..m {
+            for c in 0..m {
+                u[r * m + c] = vt1[c * m + r] as f32;
+            }
+        }
+        let mut vt = vec![0f32; m * n];
+        for r in 0..m {
+            for c in 0..n {
+                vt[r * n + c] = u1[c * m + r] as f32;
+            }
+        }
+        Svd { u, s: s.iter().map(|&x| x as f32).collect(), vt }
+    }
+}
+
+/// One-sided Jacobi on a tall row-major (m, n) matrix, m >= n.
+/// Returns (u: (m, n) row-major, s: n descending, vt: (n, n) row-major).
+fn jacobi_tall(a: &[f64], m: usize, n: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    debug_assert!(m >= n);
+    // Column-contiguous working copies: cols[j*m..] is column j of A,
+    // vcols[j*n..] is column j of V (accumulated rotations, init I).
+    let mut cols = vec![0f64; n * m];
+    for i in 0..m {
+        for j in 0..n {
+            cols[j * m + i] = a[i * n + j];
+        }
+    }
+    let mut vcols = vec![0f64; n * n];
+    for j in 0..n {
+        vcols[j * n + j] = 1.0;
+    }
+    for _sweep in 0..MAX_SWEEPS {
+        let mut converged = true;
+        for p in 0..n.saturating_sub(1) {
+            for q in p + 1..n {
+                let (alpha, beta, gamma) = {
+                    let cp = &cols[p * m..p * m + m];
+                    let cq = &cols[q * m..q * m + m];
+                    let mut aa = 0f64;
+                    let mut bb = 0f64;
+                    let mut gg = 0f64;
+                    for i in 0..m {
+                        aa += cp[i] * cp[i];
+                        bb += cq[i] * cq[i];
+                        gg += cp[i] * cq[i];
+                    }
+                    (aa, bb, gg)
+                };
+                if gamma == 0.0 || gamma.abs() <= TOL * (alpha * beta).sqrt() {
+                    continue;
+                }
+                converged = false;
+                let zeta = (beta - alpha) / (2.0 * gamma);
+                let t = if zeta >= 0.0 {
+                    1.0 / (zeta + (1.0 + zeta * zeta).sqrt())
+                } else {
+                    -1.0 / (-zeta + (1.0 + zeta * zeta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                rotate_pair(&mut cols, m, p, q, c, s);
+                rotate_pair(&mut vcols, n, p, q, c, s);
+            }
+        }
+        if converged {
+            break;
+        }
+    }
+    // Column norms are the singular values; sort descending (ties by
+    // original index, so the result is deterministic).
+    let sigma: Vec<f64> = (0..n)
+        .map(|j| cols[j * m..j * m + m].iter().map(|&x| x * x).sum::<f64>().sqrt())
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&x, &y| sigma[y].partial_cmp(&sigma[x]).unwrap().then(x.cmp(&y)));
+    let mut u = vec![0f64; m * n];
+    let mut s_out = vec![0f64; n];
+    let mut vt = vec![0f64; n * n];
+    for (jj, &j) in order.iter().enumerate() {
+        s_out[jj] = sigma[j];
+        if sigma[j] > 1e-300 {
+            let inv = 1.0 / sigma[j];
+            for i in 0..m {
+                u[i * n + jj] = cols[j * m + i] * inv;
+            }
+        }
+        for i in 0..n {
+            vt[jj * n + i] = vcols[j * n + i];
+        }
+    }
+    (u, s_out, vt)
+}
+
+/// Apply the plane rotation to columns p < q of a column-contiguous
+/// (len, k) buffer: col_p <- c*col_p - s*col_q, col_q <- s*col_p + c*col_q.
+fn rotate_pair(cols: &mut [f64], len: usize, p: usize, q: usize, c: f64, s: f64) {
+    debug_assert!(p < q);
+    let (lo, hi) = cols.split_at_mut(q * len);
+    let cp = &mut lo[p * len..p * len + len];
+    let cq = &mut hi[..len];
+    for i in 0..len {
+        let x = cp[i];
+        let y = cq[i];
+        cp[i] = c * x - s * y;
+        cq[i] = s * x + c * y;
+    }
+}
+
+/// Lower-triangular Cholesky factor of a symmetric PSD row-major (n, n)
+/// matrix: `G = L L^T`.  Returns `None` when a pivot is non-positive
+/// (G not positive definite) — callers jitter the diagonal and retry.
+pub fn cholesky_lower(g: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(g.len(), n * n, "cholesky: shape mismatch");
+    let mut l = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = g[i * n + j];
+            for t in 0..j {
+                s -= l[i * n + t] * l[j * n + t];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::{matmul_ref, randv};
+    use crate::mathx::XorShift;
+
+    fn max_abs(xs: &[f32]) -> f32 {
+        xs.iter().fold(0f32, |acc, &x| acc.max(x.abs()))
+    }
+
+    /// ||U diag(s) Vt - A||_max
+    fn recon_err(svd: &Svd, a: &[f32], m: usize, n: usize) -> f32 {
+        let r = svd.rank();
+        let mut us = svd.u.clone(); // (m, r) scaled by s
+        for i in 0..m {
+            for j in 0..r {
+                us[i * r + j] *= svd.s[j];
+            }
+        }
+        let recon = matmul_ref(&us, m, r, &svd.vt, n);
+        recon.iter().zip(a).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+    }
+
+    /// ||M^T M - I||_max for a row-major (rows, c) matrix with orthonormal
+    /// columns.
+    fn orth_err(mat: &[f32], rows: usize, c: usize) -> f32 {
+        let mut worst = 0f32;
+        for i in 0..c {
+            for j in 0..c {
+                let mut acc = 0f32;
+                for r in 0..rows {
+                    acc += mat[r * c + i] * mat[r * c + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((acc - want).abs());
+            }
+        }
+        worst
+    }
+
+    #[test]
+    fn known_diagonal_decomposition() {
+        // A = diag(3, 2, 1) embedded in 4x3: exact singular values known.
+        let mut a = vec![0f32; 12];
+        a[0] = 3.0;
+        a[1 * 3 + 1] = 2.0;
+        a[2 * 3 + 2] = 1.0;
+        let svd = svd_thin(&a, 4, 3);
+        assert!((svd.s[0] - 3.0).abs() < 1e-5);
+        assert!((svd.s[1] - 2.0).abs() < 1e-5);
+        assert!((svd.s[2] - 1.0).abs() < 1e-5);
+        assert!(recon_err(&svd, &a, 4, 3) < 1e-5);
+    }
+
+    #[test]
+    fn known_rank_one_outer_product() {
+        // A = u v^T with ||u|| = 5, ||v|| = sqrt(2): sigma = 5*sqrt(2).
+        let u = [3.0f32, 4.0];
+        let v = [1.0f32, 1.0, 0.0];
+        let mut a = vec![0f32; 6];
+        for i in 0..2 {
+            for j in 0..3 {
+                a[i * 3 + j] = u[i] * v[j];
+            }
+        }
+        let svd = svd_thin(&a, 2, 3);
+        assert!((svd.s[0] - 5.0 * 2f32.sqrt()).abs() < 1e-4, "sigma {}", svd.s[0]);
+        assert!(svd.s[1].abs() < 1e-5, "rank-1 matrix has one singular value");
+        assert!(recon_err(&svd, &a, 2, 3) < 1e-5);
+    }
+
+    #[test]
+    fn orthogonality_and_reconstruction_random() {
+        let mut rng = XorShift::new(3);
+        for &(m, n) in &[(8usize, 8usize), (20, 12), (12, 20), (40, 9), (1, 5), (5, 1)] {
+            let a = randv(&mut rng, m * n, 0.7);
+            let svd = svd_thin(&a, m, n);
+            let r = m.min(n);
+            assert_eq!(svd.u.len(), m * r);
+            assert_eq!(svd.vt.len(), r * n);
+            let scale = max_abs(&a).max(1.0);
+            assert!(recon_err(&svd, &a, m, n) < 1e-4 * scale, "{m}x{n} recon");
+            assert!(orth_err(&svd.u, m, r) < 1e-4, "{m}x{n} U orth");
+            // rows of Vt are the columns of V: check V^T V = I via the
+            // transpose view (Vt is (r, n); its rows must be orthonormal).
+            let mut v = vec![0f32; n * r];
+            for i in 0..r {
+                for j in 0..n {
+                    v[j * r + i] = svd.vt[i * n + j];
+                }
+            }
+            assert!(orth_err(&v, n, r) < 1e-4, "{m}x{n} V orth");
+            // descending order
+            for w in svd.s.windows(2) {
+                assert!(w[0] >= w[1], "singular values not sorted: {:?}", svd.s);
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_input_truncates_cleanly() {
+        // A = B C with inner dim 3 => exactly 3 nonzero singular values.
+        let mut rng = XorShift::new(4);
+        let b = randv(&mut rng, 10 * 3, 1.0);
+        let c = randv(&mut rng, 3 * 8, 1.0);
+        let a = matmul_ref(&b, 10, 3, &c, 8);
+        let svd = svd_thin(&a, 10, 8);
+        assert!(svd.s[2] > 1e-3, "true rank directions survive");
+        for &s in &svd.s[3..] {
+            assert!(s < 1e-4 * svd.s[0], "spurious singular value {s}");
+        }
+        assert!(recon_err(&svd, &a, 10, 8) < 1e-4 * max_abs(&a));
+    }
+
+    #[test]
+    fn deterministic_across_calls() {
+        let mut rng = XorShift::new(5);
+        let a = randv(&mut rng, 16 * 12, 0.5);
+        let s1 = svd_thin(&a, 16, 12);
+        let s2 = svd_thin(&a, 16, 12);
+        assert_eq!(s1.u, s2.u);
+        assert_eq!(s1.s, s2.s);
+        assert_eq!(s1.vt, s2.vt);
+    }
+
+    #[test]
+    fn sanitizes_non_finite() {
+        let a = vec![f32::NAN, 1.0, f32::INFINITY, 2.0];
+        let svd = svd_thin(&a, 2, 2);
+        assert!(svd.s.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn matches_gram_eigenvalues() {
+        // sigma_i^2 must equal the eigenvalues of A^T A; cross-check via
+        // trace identities: sum sigma^2 == tr(A^T A), sum sigma^4 == ||A^T A||_F^2.
+        let mut rng = XorShift::new(6);
+        let (m, n) = (14usize, 9usize);
+        let a = randv(&mut rng, m * n, 0.8);
+        let svd = svd_thin(&a, m, n);
+        let mut at = vec![0f32; n * m];
+        for i in 0..m {
+            for j in 0..n {
+                at[j * m + i] = a[i * n + j];
+            }
+        }
+        let gram = matmul_ref(&at, n, m, &a, n);
+        let tr: f32 = (0..n).map(|i| gram[i * n + i]).sum();
+        let fro2: f32 = gram.iter().map(|&x| x * x).sum();
+        let s2: f32 = svd.s.iter().map(|&s| s * s).sum();
+        let s4: f32 = svd.s.iter().map(|&s| s * s * s * s).sum();
+        assert!((tr - s2).abs() < 1e-3 * tr.abs(), "{tr} vs {s2}");
+        assert!((fro2 - s4).abs() < 1e-3 * fro2.abs(), "{fro2} vs {s4}");
+    }
+
+    #[test]
+    fn cholesky_recovers_spd_factor() {
+        // G = B B^T + I is SPD; check L L^T == G.
+        let mut rng = XorShift::new(7);
+        let n = 10usize;
+        let b = randv(&mut rng, n * n, 0.5);
+        let mut g = vec![0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for t in 0..n {
+                    acc += b[i * n + t] as f64 * b[j * n + t] as f64;
+                }
+                g[i * n + j] = acc + if i == j { 1.0 } else { 0.0 };
+            }
+        }
+        let l = cholesky_lower(&g, n).expect("SPD factors");
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0f64;
+                for t in 0..n {
+                    acc += l[i * n + t] * l[j * n + t];
+                }
+                assert!((acc - g[i * n + j]).abs() < 1e-9, "LL^T mismatch at ({i},{j})");
+            }
+        }
+        // upper entries untouched (strictly lower + diagonal only)
+        for i in 0..n {
+            for j in i + 1..n {
+                assert_eq!(l[i * n + j], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        // G = [[1, 2], [2, 1]] has a negative eigenvalue.
+        let g = vec![1.0, 2.0, 2.0, 1.0];
+        assert!(cholesky_lower(&g, 2).is_none());
+    }
+}

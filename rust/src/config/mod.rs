@@ -51,6 +51,78 @@ impl std::fmt::Display for BackendKind {
 }
 
 // ---------------------------------------------------------------------------
+// Compression tunables
+// ---------------------------------------------------------------------------
+
+/// Storage precision of the remapped factors `dobi compress` emits
+/// (paper Algo 3: "8+16" packs int8 halves into one fp16 footprint; the
+/// "16" ablation keeps both factors at fp16; f32 is the lossless
+/// debugging layout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    #[default]
+    Q8,
+    F16,
+    F32,
+}
+
+impl Precision {
+    /// Parse a `--precision` flag value.
+    pub fn parse(s: &str) -> Result<Precision> {
+        Ok(match s {
+            "q8" | "8+16" | "int8" => Precision::Q8,
+            "f16" | "16" => Precision::F16,
+            "f32" | "32" => Precision::F32,
+            other => bail!("unknown precision `{other}` (expected q8|f16|f32)"),
+        })
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::Q8 => "q8",
+            Precision::F16 => "f16",
+            Precision::F32 => "f32",
+        })
+    }
+}
+
+/// `dobi compress` knobs (defaults mirror the python pipeline's
+/// calibration schedule at nano scale).
+#[derive(Debug, Clone)]
+pub struct CompressConfig {
+    /// Target stored-parameter ratio in (0, 1].
+    pub ratio: f64,
+    /// Explicit stored-parameter budget; overrides `ratio` when set.
+    pub budget: Option<usize>,
+    /// Factor storage precision.
+    pub precision: Precision,
+    /// Calibration batches / batch size / window length / window seed.
+    pub calib_batches: usize,
+    pub calib_batch: usize,
+    pub calib_seq: usize,
+    pub seed: u64,
+    /// Rank floor per target (every target keeps at least this rank).
+    pub k_min: usize,
+}
+
+impl Default for CompressConfig {
+    fn default() -> Self {
+        CompressConfig {
+            ratio: 0.4,
+            budget: None,
+            precision: Precision::Q8,
+            calib_batches: 8,
+            calib_batch: 4,
+            calib_seq: 32,
+            seed: 11,
+            k_min: 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Engine tunables
 // ---------------------------------------------------------------------------
 
@@ -325,6 +397,25 @@ mod tests {
         let c = EngineConfig::default();
         assert!(c.max_batch >= 1 && c.queue_depth >= c.max_batch);
         assert_eq!(c.backend, BackendKind::Auto);
+    }
+
+    #[test]
+    fn precision_parses() {
+        assert_eq!(Precision::parse("q8").unwrap(), Precision::Q8);
+        assert_eq!(Precision::parse("8+16").unwrap(), Precision::Q8);
+        assert_eq!(Precision::parse("f16").unwrap(), Precision::F16);
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert!(Precision::parse("int3").is_err());
+        assert_eq!(Precision::F16.to_string(), "f16");
+    }
+
+    #[test]
+    fn compress_defaults_sane() {
+        let c = CompressConfig::default();
+        assert!(c.ratio > 0.0 && c.ratio <= 1.0);
+        assert!(c.calib_batches >= 1 && c.calib_batch >= 1 && c.calib_seq >= 1);
+        assert_eq!(c.precision, Precision::Q8);
+        assert!(c.budget.is_none());
     }
 
     #[test]

@@ -72,7 +72,13 @@ impl Engine {
                 .collect();
             seqs.sort_unstable();
             seqs.dedup();
-            anyhow::ensure!(!seqs.is_empty(), "{id}: no shapes after filter");
+            // Factor-only manifests carry no HLO entries: the native
+            // forward is shape-agnostic, so register the variant in
+            // any-seq mode (empty seq list) instead of demanding phantom
+            // exported shapes.  A non-empty hlo map that the shape filter
+            // emptied is still an error.
+            anyhow::ensure!(!seqs.is_empty() || v.hlo.is_empty(),
+                            "{id}: no shapes after filter");
             router.register(VariantMeta {
                 id: v.id.clone(),
                 model: v.model.clone(),
@@ -122,7 +128,7 @@ impl Engine {
             .router
             .get(variant)
             .ok_or_else(|| SubmitError::UnknownVariant(variant.to_string()))?;
-        if !meta.seqs.contains(&tokens.len()) {
+        if !meta.accepts_seq(tokens.len()) {
             return Err(SubmitError::BadShape { want_seq: meta.seqs.clone(), got: tokens.len() });
         }
         {

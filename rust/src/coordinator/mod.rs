@@ -26,4 +26,4 @@ pub mod router;
 pub use batcher::{Batch, DynamicBatcher};
 pub use engine::{Engine, EngineStats};
 pub use request::{Request, RequestId, Response, SubmitError};
-pub use router::Router;
+pub use router::{Router, MAX_ANY_SEQ};

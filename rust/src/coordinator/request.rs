@@ -46,7 +46,14 @@ impl std::fmt::Display for SubmitError {
             }
             SubmitError::UnknownVariant(v) => write!(f, "unknown variant `{v}`"),
             SubmitError::BadShape { want_seq, got } => {
-                write!(f, "no exported shape for seq {got} (have {want_seq:?})")
+                if want_seq.is_empty() {
+                    // any-seq variant: the bound is the global cap, not an
+                    // exported-shape list
+                    write!(f, "window of {got} tokens outside any-seq bounds 1..={}",
+                           super::router::MAX_ANY_SEQ)
+                } else {
+                    write!(f, "no exported shape for seq {got} (have {want_seq:?})")
+                }
             }
             SubmitError::Stopped => write!(f, "engine stopped"),
         }
@@ -65,5 +72,9 @@ mod tests {
         assert!(e.to_string().contains("full"));
         let e2 = SubmitError::BadShape { want_seq: vec![32, 64], got: 100 };
         assert!(e2.to_string().contains("100"));
+        // any-seq rejection names the actual admission rule, not "have []"
+        let e3 = SubmitError::BadShape { want_seq: Vec::new(), got: 2000 };
+        let msg = e3.to_string();
+        assert!(msg.contains("2000") && msg.contains("any-seq"), "msg: {msg}");
     }
 }

@@ -10,13 +10,42 @@
 
 use std::collections::BTreeMap;
 
+/// Longest window an any-seq variant admits.  The native forward's
+/// attention is O(s²) time and memory on the shared executor thread, so
+/// unbounded client-supplied lengths would let one request stall every
+/// other; exported-shape variants are bounded by their largest HLO seq,
+/// this constant bounds the factor-only ones (8x the python
+/// `ModelConfig.max_seq`, plenty for the nano family).
+pub const MAX_ANY_SEQ: usize = 1024;
+
 #[derive(Debug, Clone)]
 pub struct VariantMeta {
     pub id: String,
     pub model: String,
     pub ratio: f64,
     pub bytes: usize,
+    /// Seq lengths with exported shapes.  **Empty means "any seq"**: the
+    /// variant came from a factor-only manifest (no HLO entries) and the
+    /// shape-agnostic native backend serves every request length exactly
+    /// (up to [`MAX_ANY_SEQ`]).
     pub seqs: Vec<usize>,
+}
+
+impl VariantMeta {
+    /// True when this variant serves arbitrary sequence lengths (no
+    /// exported-shape admission control).
+    pub fn any_seq(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    /// Can a window of `len` tokens be submitted to this variant?
+    pub fn accepts_seq(&self, len: usize) -> bool {
+        if self.any_seq() {
+            len >= 1 && len <= MAX_ANY_SEQ
+        } else {
+            self.seqs.contains(&len)
+        }
+    }
 }
 
 #[derive(Debug, Default)]
@@ -69,8 +98,15 @@ impl Router {
 
     /// Seq length to use for a prompt of `len` tokens: the smallest
     /// exported seq >= len, else the largest available (window slides).
+    /// Any-seq variants serve the prompt at its exact length, capped at
+    /// [`MAX_ANY_SEQ`] (longer prompts slide, like oversize windows do on
+    /// exported shapes).
     pub fn pick_seq(&self, id: &str, len: usize) -> Option<usize> {
-        let mut seqs = self.variants.get(id)?.seqs.clone();
+        let meta = self.variants.get(id)?;
+        if meta.any_seq() {
+            return Some(len.clamp(1, MAX_ANY_SEQ));
+        }
+        let mut seqs = meta.seqs.clone();
         seqs.sort_unstable();
         seqs.iter().copied().find(|&s| s >= len).or(seqs.last().copied())
     }
@@ -130,5 +166,34 @@ mod tests {
         assert_eq!(r.pick_seq("m/dense", 40), Some(64));
         assert_eq!(r.pick_seq("m/dense", 200), Some(64)); // slide window
         assert_eq!(r.pick_seq("nope", 10), None);
+    }
+
+    #[test]
+    fn any_seq_variant_accepts_every_length() {
+        let mut r = router();
+        r.register(VariantMeta {
+            id: "m/native_40".into(),
+            model: "m".into(),
+            ratio: 0.4,
+            bytes: 400,
+            seqs: vec![], // factor-only manifest: no exported shapes
+        });
+        let meta = r.get("m/native_40").unwrap();
+        assert!(meta.any_seq());
+        for len in [1usize, 13, 64, MAX_ANY_SEQ] {
+            assert!(meta.accepts_seq(len), "any-seq must accept len {len}");
+            assert_eq!(r.pick_seq("m/native_40", len), Some(len));
+        }
+        assert!(!meta.accepts_seq(0), "empty windows are never servable");
+        // unbounded client lengths are capped, not served verbatim: one
+        // huge prompt must not buy an O(s^2) attention on the executor
+        assert!(!meta.accepts_seq(MAX_ANY_SEQ + 1));
+        assert_eq!(r.pick_seq("m/native_40", 1 << 20), Some(MAX_ANY_SEQ));
+        // exported-shape variants keep strict admission
+        let dense = r.get("m/dense").unwrap();
+        assert!(!dense.any_seq());
+        assert!(dense.accepts_seq(32) && !dense.accepts_seq(33));
+        // any-seq variants still participate in ratio/memory routing
+        assert_eq!(r.by_ratio("m", 0.45).unwrap().id, "m/native_40");
     }
 }

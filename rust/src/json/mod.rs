@@ -118,6 +118,12 @@ impl Json {
         self.f64_of(key) as usize
     }
 
+    /// Build an object from (key, value) pairs — writer-side convenience
+    /// shared by the manifest writer and the bench-report emitters.
+    pub fn obj(entries: Vec<(&str, Json)>) -> Json {
+        Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
     // -- serializer ----------------------------------------------------------
     pub fn to_string(&self) -> String {
         let mut out = String::new();

@@ -10,6 +10,8 @@
 //!   [`quant`], [`storage`], [`config`], [`metrics`], [`bench`], [`proptest`]
 //! * runtime:    [`runtime`] (the `Backend` trait, PJRT wrapper, model
 //!   registry) and [`lowrank`] (native rank-truncated factorized backend)
+//! * compression:[`compress`] (native Dobi pipeline: Jacobi SVD, whitened
+//!   rank search, IPCA reconstruction, remap quantization, store writer)
 //! * coordinator:[`coordinator`] (router, dynamic batcher, workers)
 //! * evaluation: [`evalx`] (perplexity, task accuracy, generation)
 //! * deployment: [`memsim`] (capacity-limited device model), [`server`]
@@ -27,6 +29,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod corpusio;

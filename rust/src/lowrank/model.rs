@@ -284,10 +284,9 @@ impl FactorizedModel {
 
     // -- forward pass -------------------------------------------------------
 
-    /// Execute the (b, s) forward.  `tokens` row-major (b, s); `image`
-    /// required iff `img_dim > 0`.  Returns logits (b, s, vocab) or VLA
-    /// actions (b, 5).
-    pub fn forward(&self, b: usize, s: usize, tokens: &[i32],
+    /// Embedding (+ projected image prefix for VLM/VLA): the (b*(p+s), d)
+    /// trunk input shared by [`Self::forward`] and [`Self::forward_taps`].
+    fn embed_input(&self, b: usize, s: usize, tokens: &[i32],
                    image: Option<&[f32]>) -> Result<Vec<f32>> {
         anyhow::ensure!(b > 0 && s > 0, "{}: empty shape {b}x{s}", self.id);
         anyhow::ensure!(tokens.len() == b * s, "tokens len {} != {b}x{s}", tokens.len());
@@ -295,8 +294,6 @@ impl FactorizedModel {
         let p = self.prefix_len();
         let st = p + s; // total sequence length inside the trunk
         let rows = b * st;
-
-        // Embedding (+ projected image prefix for VLM/VLA).
         let mut h = vec![0f32; rows * d];
         if p > 0 {
             let img = image.ok_or_else(|| anyhow!("{}: image input required", self.id))?;
@@ -330,17 +327,65 @@ impl FactorizedModel {
                 h[dst..dst + d].copy_from_slice(&self.embed[t as usize * d..(t as usize + 1) * d]);
             }
         }
+        Ok(h)
+    }
 
+    /// Run every transformer layer over `h` in place — the ONE trunk loop
+    /// shared by serving ([`Self::forward`]) and calibration
+    /// ([`Self::forward_taps`]), so the activations compression sees are
+    /// by construction the activations serving computes.
+    ///
+    /// `taps`, when set, receives one copy per *capture point* (four per
+    /// layer), keyed by the representative target: `layers.{i}.wq`
+    /// (post-attn-norm, shared by wq/wk/wv), `layers.{i}.wo` (attention
+    /// context), `layers.{i}.w_gate` (post-mlp-norm, shared by
+    /// w_gate/w_up), and `layers.{i}.w_down` (gated hidden).  Storing
+    /// representatives instead of per-target clones keeps calibration
+    /// memory at 4 buffers/layer instead of 7;
+    /// `compress::calib::tap_key` maps any target name to its
+    /// representative.
+    fn run_trunk(&self, h: &mut [f32], b: usize, st: usize,
+                 mut taps: Option<&mut std::collections::BTreeMap<String, Vec<f32>>>) {
+        let d = self.d_model;
+        let rows = b * st;
         let (cos, sin) = rope_cache(st, self.d_head());
         let mut normed = vec![0f32; rows * d];
-        for layer in &self.layers {
-            rmsnorm(&h, &layer.attn_norm, d, &mut normed);
-            let attn = self.attention(&normed, layer, b, st, &cos, &sin);
-            add_inplace(&mut h, &attn);
-            rmsnorm(&h, &layer.mlp_norm, d, &mut normed);
-            let mlp = mlp(&normed, rows, layer);
-            add_inplace(&mut h, &mlp);
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(h, &layer.attn_norm, d, &mut normed);
+            if let Some(t) = taps.as_deref_mut() {
+                t.insert(format!("layers.{li}.wq"), normed.clone());
+            }
+            let mut wo_in = taps.as_ref().map(|_| Vec::new());
+            let attn = self.attention(&normed, layer, b, st, &cos, &sin, wo_in.as_mut());
+            if let (Some(t), Some(x)) = (taps.as_deref_mut(), wo_in) {
+                t.insert(format!("layers.{li}.wo"), x);
+            }
+            add_inplace(h, &attn);
+            rmsnorm(h, &layer.mlp_norm, d, &mut normed);
+            if let Some(t) = taps.as_deref_mut() {
+                t.insert(format!("layers.{li}.w_gate"), normed.clone());
+            }
+            let mut down_in = taps.as_ref().map(|_| Vec::new());
+            let out = mlp(&normed, rows, layer, down_in.as_mut());
+            if let (Some(t), Some(x)) = (taps.as_deref_mut(), down_in) {
+                t.insert(format!("layers.{li}.w_down"), x);
+            }
+            add_inplace(h, &out);
         }
+    }
+
+    /// Execute the (b, s) forward.  `tokens` row-major (b, s); `image`
+    /// required iff `img_dim > 0`.  Returns logits (b, s, vocab) or VLA
+    /// actions (b, 5).
+    pub fn forward(&self, b: usize, s: usize, tokens: &[i32],
+                   image: Option<&[f32]>) -> Result<Vec<f32>> {
+        let mut h = self.embed_input(b, s, tokens, image)?;
+        let d = self.d_model;
+        let p = self.prefix_len();
+        let st = p + s;
+        let rows = b * st;
+        self.run_trunk(&mut h, b, st, None);
+        let mut normed = vec![0f32; rows * d];
         rmsnorm(&h, &self.final_norm, d, &mut normed);
 
         if self.action_head {
@@ -380,9 +425,26 @@ impl FactorizedModel {
         Ok(logits)
     }
 
+    /// Calibration pass: run the trunk and capture each compression
+    /// target's row-major (b·(p+s), in_dim) input — the native mirror of
+    /// `python/compile/dobi/pipeline.py::collect_calibration`.  Keyed by
+    /// representative target name (see [`Self::run_trunk`]); resolve an
+    /// arbitrary target with `compress::calib::tap_key`.
+    pub fn forward_taps(&self, b: usize, s: usize, tokens: &[i32],
+                        image: Option<&[f32]>)
+                        -> Result<std::collections::BTreeMap<String, Vec<f32>>> {
+        let mut h = self.embed_input(b, s, tokens, image)?;
+        let st = self.prefix_len() + s;
+        let mut taps = std::collections::BTreeMap::new();
+        self.run_trunk(&mut h, b, st, Some(&mut taps));
+        Ok(taps)
+    }
+
     /// Multi-head causal attention over (b, st) rows of `x` (post-norm).
+    /// `wo_tap`, when set, receives a copy of the context rows — the input
+    /// of the `wo` compression target (calibration capture).
     fn attention(&self, x: &[f32], layer: &LayerWeights, b: usize, st: usize,
-                 cos: &[f32], sin: &[f32]) -> Vec<f32> {
+                 cos: &[f32], sin: &[f32], wo_tap: Option<&mut Vec<f32>>) -> Vec<f32> {
         let d = self.d_model;
         let nh = self.n_heads;
         let dh = self.d_head();
@@ -429,6 +491,9 @@ impl FactorizedModel {
                     }
                 }
             }
+        }
+        if let Some(tap) = wo_tap {
+            *tap = ctx.clone();
         }
         layer.wo.apply(&ctx, rows)
     }
@@ -487,13 +552,19 @@ fn rope_cache(st: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
     (cos, sin)
 }
 
-/// SwiGLU MLP over (rows, d) post-norm activations.
-fn mlp(x: &[f32], rows: usize, layer: &LayerWeights) -> Vec<f32> {
+/// SwiGLU MLP over (rows, d) post-norm activations.  `down_tap`, when
+/// set, receives a copy of the gated hidden rows — the input of the
+/// `w_down` compression target (calibration capture).
+fn mlp(x: &[f32], rows: usize, layer: &LayerWeights,
+       down_tap: Option<&mut Vec<f32>>) -> Vec<f32> {
     let g = layer.w_gate.apply(x, rows);
     let mut u = layer.w_up.apply(x, rows);
     for (ui, &gi) in u.iter_mut().zip(&g) {
         let silu = gi / (1.0 + (-gi).exp());
         *ui *= silu;
+    }
+    if let Some(tap) = down_tap {
+        *tap = u.clone();
     }
     layer.w_down.apply(&u, rows)
 }
@@ -630,6 +701,32 @@ mod tests {
         assert!(quarter < full, "{quarter} !< {full}");
         let tokens: Vec<i32> = (0..16).collect();
         assert!(m.forward(2, 8, &tokens, None).unwrap().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn forward_taps_capture_every_capture_point() {
+        let m = tiny_model(dims(), 0, false);
+        let (b, s) = (2usize, 6usize);
+        let tokens: Vec<i32> = (0..(b * s) as i32).map(|i| i % 61).collect();
+        let taps = m.forward_taps(b, s, &tokens, None).unwrap();
+        let td = dims();
+        // four capture points per layer (wk/wv alias wq, w_up aliases
+        // w_gate — that resolution lives in compress::calib::tap_key)
+        assert_eq!(taps.len(), 4 * td.layers);
+        let rows = b * s;
+        for li in 0..td.layers {
+            for rep in ["wq", "wo", "w_gate", "w_down"] {
+                let (in_dim, _) = target_dims(rep, td.d, td.ff);
+                let tap = &taps[&format!("layers.{li}.{rep}")];
+                assert_eq!(tap.len(), rows * in_dim, "layers.{li}.{rep} tap shape");
+                assert!(tap.iter().all(|x| x.is_finite()));
+            }
+        }
+        // tapping must not perturb the forward itself
+        let a = m.forward(b, s, &tokens, None).unwrap();
+        let _ = m.forward_taps(b, s, &tokens, None).unwrap();
+        let c = m.forward(b, s, &tokens, None).unwrap();
+        assert_eq!(a, c);
     }
 
     #[test]

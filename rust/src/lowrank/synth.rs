@@ -7,8 +7,7 @@
 use crate::lowrank::kernel::{matmul, Factor, FactorizedLinear, Linear};
 use crate::lowrank::model::{target_dims, FactorizedModel, LayerWeights, LAYER_MATS};
 use crate::mathx::XorShift;
-use crate::quant::f32_to_f16;
-use crate::storage::{f32_tensor, Dtype, Tensor};
+use crate::storage::{f16_tensor, f32_tensor, i8_tensor, Tensor};
 
 /// Number of projected image prefix tokens synthetic VLM models use.
 pub const SYNTH_IMG_TOKENS: usize = 2;
@@ -27,6 +26,15 @@ impl TinyDims {
     /// [`target_dims`] so fixtures and loader cannot drift).
     pub fn mat_dims(&self, mat: &str) -> (usize, usize) {
         target_dims(mat, self.d, self.ff)
+    }
+
+    /// The synthetic nano model `dobi compress --synth`, the compress
+    /// bench, and the compress e2e tests all share: byte vocab (so the
+    /// tokenizer's ids are always in range) with d/ff sized so the
+    /// compression targets dominate the embedding — a 0.4 global ratio
+    /// then leaves a meaningful per-target budget to allocate.
+    pub fn nano() -> TinyDims {
+        TinyDims { vocab: 256, d: 48, heads: 2, layers: 2, ff: 64 }
     }
 }
 
@@ -110,26 +118,6 @@ pub fn tiny_model(dims: TinyDims, img_dim: usize, factorized: bool) -> Factorize
         layers,
         img_proj,
         act_head: None,
-    }
-}
-
-fn i8_tensor(name: &str, shape: Vec<usize>, codes: &[i8]) -> Tensor {
-    assert_eq!(shape.iter().product::<usize>(), codes.len());
-    Tensor {
-        name: name.to_string(),
-        dtype: Dtype::I8,
-        shape,
-        data: codes.iter().map(|&c| c as u8).collect(),
-    }
-}
-
-fn f16_tensor(name: &str, shape: Vec<usize>, vals: &[f32]) -> Tensor {
-    assert_eq!(shape.iter().product::<usize>(), vals.len());
-    Tensor {
-        name: name.to_string(),
-        dtype: Dtype::F16,
-        shape,
-        data: vals.iter().flat_map(|&v| f32_to_f16(v).to_le_bytes()).collect(),
     }
 }
 

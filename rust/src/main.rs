@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   inspect   — list artifacts: variants, sizes, ranks, ref PPLs
+//!   compress  — native Dobi compression: dense store -> remapped factors
 //!   eval      — perplexity + task accuracy for one variant
 //!   generate  — sample text from a variant
 //!   serve     — TCP line-protocol server over the engine
@@ -14,7 +15,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use dobi::cli::Args;
-use dobi::config::{BackendKind, EngineConfig, Manifest};
+use dobi::config::{BackendKind, CompressConfig, EngineConfig, Manifest, Precision};
 use dobi::coordinator::Engine;
 use dobi::corpusio;
 use dobi::evalx;
@@ -23,7 +24,7 @@ use dobi::runtime::{make_backend, Backend, ForwardModel, Runtime};
 use dobi::server::Server;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "all", "tasks"]);
+    let args = Args::from_env(&["verbose", "all", "tasks", "synth"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -49,6 +50,7 @@ fn backend(args: &Args) -> Result<Box<dyn Backend>> {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("inspect") => inspect(args),
+        Some("compress") => compress(args),
         Some("eval") => eval(args),
         Some("generate") => generate(args),
         Some("serve") => serve(args),
@@ -60,10 +62,14 @@ fn run(args: &Args) -> Result<()> {
         other => {
             eprintln!(
                 "dobi — Dobi-SVD compression + serving stack\n\
-                 usage: dobi <inspect|eval|generate|serve|memsim|parity> [--artifacts DIR]\n\
-                 \x20      [--backend auto|pjrt|native] ...\n\
+                 usage: dobi <inspect|compress|eval|generate|serve|memsim|parity>\n\
+                 \x20      [--artifacts DIR] [--backend auto|pjrt|native] ...\n\
                  \n\
                  inspect                      list variants and storage accounting\n\
+                 compress --out DIR [--ratio R] [--precision q8|f16|f32]\n\
+                 \x20        [--variant ID | --synth] [--calib FILE.tokbin]\n\
+                 \x20        [--budget PARAMS]        native Dobi compression:\n\
+                 \x20        dense store -> rank-allocated remapped factors\n\
                  eval --variant ID [--tasks]  PPL on all corpora (+ task suites)\n\
                  generate --variant ID --prompt TEXT [--tokens N] [--temperature T]\n\
                  serve --variants A,B --port P\n\
@@ -114,6 +120,79 @@ fn inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Native compression: a dense source (a manifest variant, or the synth
+/// nano model with `--synth`) -> calibrated rank allocation -> remapped
+/// factors -> a self-contained artifacts dir servable by `--backend
+/// native` (factor-only manifest, no HLO entries).
+fn compress(args: &Args) -> Result<()> {
+    use dobi::compress::{calib, compress_model, write_artifacts};
+    use dobi::lowrank::synth::{tiny_model, TinyDims};
+    use dobi::lowrank::FactorizedModel;
+    use dobi::storage::Store;
+
+    let out = PathBuf::from(args.get("out").ok_or_else(|| anyhow!("--out DIR required"))?);
+    let cfg = CompressConfig {
+        ratio: args.f64_or("ratio", 0.4),
+        budget: args.get("budget").map(|v| {
+            v.parse().unwrap_or_else(|_| panic!("--budget expects an integer, got `{v}`"))
+        }),
+        precision: Precision::parse(args.get_or("precision", "q8"))?,
+        calib_batches: args.usize_or("calib-batches", 8),
+        calib_batch: args.usize_or("calib-batch", 4),
+        calib_seq: args.usize_or("calib-seq", 32),
+        seed: args.usize_or("seed", 11) as u64,
+        k_min: args.usize_or("k-min", 1),
+    };
+    let (model_name, dense) = if args.has("synth") {
+        ("tiny".to_string(), tiny_model(TinyDims::nano(), 0, false))
+    } else {
+        let m = Manifest::load(&artifacts_dir(args))?;
+        let id = args
+            .get("variant")
+            .ok_or_else(|| anyhow!("--variant ID required (or --synth)"))?;
+        let v = m.variant(id)?;
+        let info = m
+            .models
+            .get(&v.model)
+            .ok_or_else(|| anyhow!("model `{}` missing from manifest", v.model))?;
+        let store = Store::open(&m.path(&v.weights))?;
+        (v.model.clone(), FactorizedModel::from_store(info, v, &store)?)
+    };
+    let calib_tokens = match args.get("calib") {
+        Some(path) => corpusio::read_tokbin(std::path::Path::new(path))?,
+        None => calib::synth_calib_tokens(dense.vocab, 4096, cfg.seed),
+    };
+    let t0 = std::time::Instant::now();
+    let art = compress_model(&dense, &model_name, &cfg, &calib_tokens)?;
+    let wpath = write_artifacts(&out, &art)?;
+    let dt = t0.elapsed().as_secs_f64();
+
+    let mut t = dobi::bench::Table::new(
+        &format!("dobi compress — {} @ ratio {:.2} [{}]", art.variant_id, cfg.ratio,
+                 cfg.precision),
+        &["target", "m x n", "rank", "kept", "trunc loss"],
+    );
+    for spec in &art.spectra {
+        let k = art.ranks[&spec.name];
+        t.row(vec![
+            spec.name.clone(),
+            format!("{}x{}", spec.m, spec.n),
+            format!("{k}"),
+            format!("{:.2}", k as f64 / spec.max_rank() as f64),
+            format!("{:.4}", spec.loss_at(k)),
+        ]);
+    }
+    t.print();
+    println!(
+        "stored {} / {} params (achieved ratio {:.3}), {} payload bytes -> {}\n\
+         compressed in {dt:.2}s; serve with: dobi generate --artifacts {} \\\n\
+         \x20 --variant {} --backend native",
+        art.stored_params, art.total_params, art.achieved_ratio, art.payload_bytes,
+        wpath.display(), out.display(), art.variant_id
+    );
+    Ok(())
+}
+
 fn eval(args: &Args) -> Result<()> {
     let dir = artifacts_dir(args);
     let m = Manifest::load(&dir)?;
@@ -155,11 +234,13 @@ fn generate(args: &Args) -> Result<()> {
     let temp = args.f64_or("temperature", 0.7) as f32;
     let be = backend(args)?;
     let v = m.variant(id)?;
+    // Factor-only variants export no HLO shapes: the native forward is
+    // shape-agnostic, so fall back to (1, eval_seq).
     let (b, s) = v
         .shapes()
         .into_iter()
         .min_by_key(|&(b, _)| b)
-        .ok_or_else(|| anyhow!("no shapes"))?;
+        .unwrap_or((1, m.eval_seq));
     let model = be.load_variant(&m, id, Some(&[(b, s)]))?.model;
     let t0 = std::time::Instant::now();
     let text = evalx::generate(&model, b, s, prompt, n, temp, args.usize_or("seed", 7) as u64)?;

@@ -18,7 +18,7 @@ use std::path::Path;
 use anyhow::{anyhow, bail, Result};
 
 use crate::corpusio::crc32;
-use crate::quant::{dequantize_i8, f16_slice_to_f32};
+use crate::quant::{dequantize_i8, f16_slice_to_f32, f32_to_f16};
 
 pub const MAGIC: &[u8; 6] = b"DOBIW1";
 
@@ -213,6 +213,37 @@ pub fn f32_tensor(name: &str, shape: Vec<usize>, vals: &[f32]) -> Tensor {
     }
 }
 
+/// Encode f32 values as an f16 tensor (round-to-nearest-even).
+pub fn f16_tensor(name: &str, shape: Vec<usize>, vals: &[f32]) -> Tensor {
+    assert_eq!(shape.iter().product::<usize>(), vals.len());
+    Tensor {
+        name: name.to_string(),
+        dtype: Dtype::F16,
+        shape,
+        data: vals.iter().flat_map(|&v| f32_to_f16(v).to_le_bytes()).collect(),
+    }
+}
+
+pub fn i8_tensor(name: &str, shape: Vec<usize>, codes: &[i8]) -> Tensor {
+    assert_eq!(shape.iter().product::<usize>(), codes.len());
+    Tensor {
+        name: name.to_string(),
+        dtype: Dtype::I8,
+        shape,
+        data: codes.iter().map(|&c| c as u8).collect(),
+    }
+}
+
+pub fn i32_tensor(name: &str, shape: Vec<usize>, vals: &[i32]) -> Tensor {
+    assert_eq!(shape.iter().product::<usize>(), vals.len());
+    Tensor {
+        name: name.to_string(),
+        dtype: Dtype::I32,
+        shape,
+        data: vals.iter().flat_map(|v| v.to_le_bytes()).collect(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -290,6 +321,82 @@ mod tests {
         let s = Store::open(&p).unwrap();
         let (v, _) = s.tensor_f32("h").unwrap();
         assert_eq!(v, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        // Writer-side coverage: every dtype survives write -> read with
+        // exact payload bytes, shapes, and decoded values.
+        let p = tmp("all_dtypes.dobiw");
+        let tensors = vec![
+            f32_tensor("a", vec![2, 2], &[1.5, -2.5, 0.0, 3.25]),
+            f16_tensor("b", vec![3], &[1.0, -2.0, 0.5]),
+            i8_tensor("c", vec![2, 2], &[1, -1, 127, -127]),
+            i32_tensor("d", vec![2], &[-7, 1_000_000]),
+        ];
+        write_store(&p, &tensors).unwrap();
+        let s = Store::open(&p).unwrap();
+        assert_eq!(s.tensors.len(), 4);
+        for t in &tensors {
+            let got = &s.tensors[&t.name];
+            assert_eq!(got.dtype, t.dtype, "{}: dtype", t.name);
+            assert_eq!(got.shape, t.shape, "{}: shape", t.name);
+            assert_eq!(got.data, t.data, "{}: payload", t.name);
+        }
+        assert_eq!(s.tensors["a"].to_f32(), vec![1.5, -2.5, 0.0, 3.25]);
+        assert_eq!(s.tensors["b"].to_f32(), vec![1.0, -2.0, 0.5]);
+        assert_eq!(s.tensors["c"].as_i8(), vec![1, -1, 127, -127]);
+        assert_eq!(s.tensors["d"].to_f32(), vec![-7.0, 1_000_000.0]);
+    }
+
+    #[test]
+    fn truncated_file_rejected_at_every_cut() {
+        let p = tmp("trunc.dobiw");
+        write_store(&p, &[
+            f32_tensor("x", vec![3], &[1.0, 2.0, 3.0]),
+            i8_tensor("y", vec![2], &[4, -4]),
+        ])
+        .unwrap();
+        let raw = std::fs::read(&p).unwrap();
+        // any strict prefix must fail to parse (header, name, payload, crc)
+        for cut in [raw.len() - 1, raw.len() - 4, raw.len() / 2, 9, 6, 1] {
+            assert!(Store::parse(&raw[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+        assert!(Store::parse(&raw).is_ok());
+    }
+
+    #[test]
+    fn bad_crc_rejected_in_any_tensor() {
+        let p = tmp("crc2.dobiw");
+        write_store(&p, &[
+            f32_tensor("x", vec![2], &[1.0, 2.0]),
+            f32_tensor("y", vec![2], &[3.0, 4.0]),
+        ])
+        .unwrap();
+        let good = std::fs::read(&p).unwrap();
+        // flip one payload byte of each tensor in turn; the reader must
+        // reject both (not just the first)
+        let mut seen_rejects = 0;
+        for i in 10..good.len() {
+            let mut raw = good.clone();
+            raw[i] ^= 0x40;
+            if Store::parse(&raw).is_err() {
+                seen_rejects += 1;
+            }
+        }
+        // every byte after the header matters (name, dtype, shape, payload,
+        // or crc corruption all fail): a large majority must reject
+        assert!(seen_rejects > (good.len() - 10) * 3 / 4,
+                "only {seen_rejects} corruptions detected");
+    }
+
+    #[test]
+    fn writer_is_deterministic() {
+        let t = || vec![f32_tensor("x", vec![2], &[1.0, 2.0]), i8_tensor("q", vec![1], &[5])];
+        let (p1, p2) = (tmp("det1.dobiw"), tmp("det2.dobiw"));
+        write_store(&p1, &t()).unwrap();
+        write_store(&p2, &t()).unwrap();
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
     }
 
     #[test]
