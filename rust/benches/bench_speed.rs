@@ -8,7 +8,7 @@
 //! `BENCH_speed.json` / `BENCH_compress.json` (ratio, tok/s, params
 //! kept) so the perf trajectory is tracked across PRs.
 //!
-//!   cargo bench --bench bench_speed -- lowrank compress fig4 table10 table12 table23 engine batcher
+//!   cargo bench --bench bench_speed -- lowrank compress decode fig4 table10 table12 table23 engine batcher
 
 use std::sync::Arc;
 
@@ -31,6 +31,7 @@ fn main() {
     // Native sections first: they run on a fresh checkout, no artifacts.
     if want("lowrank") { lowrank_sweep(); }
     if want("compress") { compress_bench(); }
+    if want("decode") { decode_bench(); }
 
     if !artifacts_available() {
         eprintln!("[bench_speed] artifacts not built — PJRT sections skipped \
@@ -218,6 +219,128 @@ fn compress_bench() {
     }
     println!("shape to check: tok/s grows as the ratio drops (rank-k matmuls do less\n\
               work); CE delta grows smoothly — the compression/quality frontier.");
+}
+
+/// Incremental decode vs the sliding-window loop it replaced: prefill a
+/// 256-token prompt, then decode 64 tokens — once through a KV-cached
+/// session (`forward_kv`: O(len) attention + single-row logits head per
+/// token) and once the old way (a full forward over the whole window per
+/// token).  Run on the synth dense nano model AND its `dobi compress` q8
+/// twin, so the table shows the compounding: low-rank factors shrink the
+/// matmuls, the KV runtime stops re-running them.  Emits
+/// `BENCH_decode.json`; acceptance floor is >= 3x tokens/s with KV reuse.
+fn decode_bench() {
+    use dobi::compress::{calib, compress_model};
+    use dobi::mathx::argmax;
+    use dobi::serve::DecodeSession;
+
+    let dims = TinyDims::nano();
+    let dense = tiny_model(dims, 0, false);
+    let corpus = calib::synth_calib_tokens(dims.vocab, 4096, 23);
+    let cfg = CompressConfig { ratio: 0.4, precision: Precision::Q8, ..Default::default() };
+    let art = compress_model(&dense, "tiny", &cfg, &corpus).expect("compress");
+    // round-trip the q8 store through the writer + native loader so the
+    // measured decode includes the real int8 tile-decode cost
+    let dir = std::env::temp_dir().join("dobi_bench_decode_q8");
+    let _ = std::fs::remove_dir_all(&dir);
+    dobi::compress::write_artifacts(&dir, &art).expect("artifacts");
+    let m = Manifest::load(&dir).expect("manifest");
+    let v = m.variant(&art.variant_id).expect("variant");
+    let store = dobi::storage::Store::open(&m.path(&v.weights)).expect("store");
+    let q8_model = dobi::lowrank::FactorizedModel::from_store(&m.models["tiny"], v, &store)
+        .expect("load");
+    let q8 = &q8_model;
+
+    let (prefill_len, n_decode) = (256usize, 64usize);
+    let prompt: Vec<i32> = (0..prefill_len as i32).map(|i| (i * 31 + 7) % 251).collect();
+    let mut t = Table::new(
+        &format!("Incremental decode — {prefill_len}-token prefill + {n_decode}-token decode"),
+        &["model", "path", "prefill ms", "decode tok/s", "speedup", "max |Δlogit|"],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    for (name, model) in [("dense", &dense), ("dobi_40 q8", q8)] {
+        // KV-cached session: prefill once, then one step per token.
+        let mut session = DecodeSession::new(1, name, model, prefill_len + n_decode + 1);
+        let t0 = std::time::Instant::now();
+        let mut logits = session.prefill(model, &prompt, None).expect("prefill");
+        let prefill_s = t0.elapsed().as_secs_f64();
+        let mut kv_tokens = Vec::with_capacity(n_decode);
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_decode {
+            let next = argmax(&logits) as i32;
+            kv_tokens.push(next);
+            logits = session.step(model, next).expect("step");
+        }
+        let kv_s = t0.elapsed().as_secs_f64();
+        let kv_tps = n_decode as f64 / kv_s;
+
+        // Sliding-window baseline: the old serve path — a full forward
+        // over the entire context per generated token.
+        let vocab = model.vocab;
+        let mut ctx = prompt.clone();
+        let mut win_tokens = Vec::with_capacity(n_decode);
+        let mut drift = 0f32;
+        let t0 = std::time::Instant::now();
+        for _ in 0..n_decode {
+            let s = ctx.len();
+            let out = model.forward(1, s, &ctx, None).expect("window forward");
+            let last = &out[(s - 1) * vocab..s * vocab];
+            let next = argmax(last) as i32;
+            win_tokens.push(next);
+            ctx.push(next);
+        }
+        let win_s = t0.elapsed().as_secs_f64();
+        let win_tps = n_decode as f64 / win_s;
+        assert_eq!(kv_tokens, win_tokens,
+                   "{name}: KV decode diverged from the sliding-window reference");
+        // parity telemetry: final-step logits vs the full forward's
+        let want = {
+            let s = ctx.len();
+            let out = model.forward(1, s, &ctx, None).expect("parity forward");
+            out[(s - 1) * vocab..s * vocab].to_vec()
+        };
+        for (a, b) in logits.iter().zip(&want) {
+            drift = drift.max((a - b).abs());
+        }
+
+        let speedup = kv_tps / win_tps;
+        t.row(vec![
+            name.to_string(),
+            "kv vs window".into(),
+            format!("{:.2}", prefill_s * 1e3),
+            format!("{kv_tps:.0} vs {win_tps:.0}"),
+            format!("{speedup:.1}x"),
+            format!("{drift:.2e}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("model", Json::Str(name.to_string())),
+            ("prefill_tokens", Json::Num(prefill_len as f64)),
+            ("decode_tokens", Json::Num(n_decode as f64)),
+            ("prefill_seconds", Json::Num(prefill_s)),
+            ("kv_tokens_per_s", Json::Num(kv_tps)),
+            ("window_tokens_per_s", Json::Num(win_tps)),
+            ("speedup_kv_vs_window", Json::Num(speedup)),
+            ("max_abs_logit_drift", Json::Num(drift as f64)),
+        ]));
+    }
+    t.print();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("decode_sweep".into())),
+        ("model", Json::obj(vec![
+            ("vocab", Json::Num(dims.vocab as f64)),
+            ("d_model", Json::Num(dims.d as f64)),
+            ("n_layers", Json::Num(dims.layers as f64)),
+            ("d_ff", Json::Num(dims.ff as f64)),
+        ])),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    match write_bench_json("decode", &doc) {
+        Ok(p) => println!("[bench_speed] wrote {}", p.display()),
+        Err(e) => eprintln!("[bench_speed] could not write BENCH_decode.json: {e}"),
+    }
+    println!("shape to check: >= 3x tokens/s from KV reuse (acceptance floor; expect far\n\
+              more — the window path pays O(len^2) attention AND a (len, vocab) logits\n\
+              head per token), with zero token divergence and ~1e-5 logit drift.");
 }
 
 /// Latency vs offered load (open-loop Poisson arrivals) — the serving

@@ -25,7 +25,8 @@ pub mod remap;
 pub mod svd;
 
 pub use calib::{collect, sample_windows, synth_calib_tokens, tap_key, Calibration};
-pub use pipeline::{compress_model, eval_loss, write_artifacts, CompressedArtifact};
+pub use pipeline::{append_artifacts, compress_model, eval_loss, write_artifacts,
+                   CompressedArtifact};
 pub use rank::{allocate_ranks, whitened_spectrum, whitener, TargetSpectrum, Whitener};
 pub use remap::{reconstruct_factors, Ipca};
 pub use svd::{cholesky_lower, svd_thin, Svd};

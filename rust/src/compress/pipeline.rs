@@ -229,11 +229,8 @@ fn jnum(x: usize) -> Json {
     Json::Num(x as f64)
 }
 
-/// Manifest JSON for a compressed artifacts dir: one model, one
-/// factor-only variant with an **empty** `hlo` map — served natively at
-/// any shape via the router's any-seq mode, no phantom HLO entries.
-pub fn manifest_json(art: &CompressedArtifact, weights_file: &str,
-                     eval_batch: usize, eval_seq: usize) -> String {
+/// The `models.<name>` manifest entry for this artifact.
+fn model_json(art: &CompressedArtifact) -> Json {
     let m = &art.reference;
     let config = Json::obj(vec![
         ("vocab", jnum(m.vocab)),
@@ -245,13 +242,19 @@ pub fn manifest_json(art: &CompressedArtifact, weights_file: &str,
         ("n_img_tokens", jnum(m.n_img_tokens)),
         ("action_head", Json::Bool(m.action_head)),
     ]);
-    let model = Json::obj(vec![
+    Json::obj(vec![
         ("config", config),
         ("total_params", jnum(art.total_params)),
         ("fixed_params", jnum(art.fixed_params)),
-    ]);
+    ])
+}
+
+/// The factor-only variant entry: an **empty** `hlo` map — served
+/// natively at any shape via the router's any-seq mode, no phantom HLO
+/// entries.
+fn variant_json(art: &CompressedArtifact, weights_file: &str) -> Json {
     let ranks = Json::Obj(art.ranks.iter().map(|(k, &v)| (k.clone(), jnum(v))).collect());
-    let variant = Json::obj(vec![
+    Json::obj(vec![
         ("id", Json::Str(art.variant_id.clone())),
         ("model", Json::Str(art.model_name.clone())),
         ("method", Json::Str("dobi".into())),
@@ -266,11 +269,17 @@ pub fn manifest_json(art: &CompressedArtifact, weights_file: &str,
         ("bytes", jnum(art.payload_bytes)),
         ("ref_ppl", Json::Obj(BTreeMap::new())),
         ("ranks", ranks),
-    ]);
+    ])
+}
+
+/// Manifest JSON for a standalone compressed artifacts dir: one model,
+/// one factor-only variant.
+pub fn manifest_json(art: &CompressedArtifact, weights_file: &str,
+                     eval_batch: usize, eval_seq: usize) -> String {
     Json::obj(vec![
         ("profile", Json::Str("native-compress".into())),
-        ("models", Json::Obj(BTreeMap::from([(art.model_name.clone(), model)]))),
-        ("variants", Json::Arr(vec![variant])),
+        ("models", Json::Obj(BTreeMap::from([(art.model_name.clone(), model_json(art))]))),
+        ("variants", Json::Arr(vec![variant_json(art, weights_file)])),
         ("corpora", Json::Obj(BTreeMap::new())),
         ("eval", Json::obj(vec![
             ("batch", jnum(eval_batch)),
@@ -291,6 +300,70 @@ pub fn write_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf> 
     let wpath = dir.join(&weights_file);
     write_store(&wpath, &art.tensors)?;
     std::fs::write(dir.join("manifest.json"), manifest_json(art, &weights_file, 2, 16))
+        .map_err(|e| anyhow!("writing manifest: {e}"))?;
+    Ok(wpath)
+}
+
+/// Append the compressed variant to an **existing** artifacts dir: write
+/// the store beside the resident ones and merge the manifest in place —
+/// the variant list gains one entry, the model entry is added if absent
+/// (and shape-checked when present), every other manifest field (corpora,
+/// eval, suites, other models/variants) is preserved byte-for-byte at the
+/// JSON level.  Dense and compressed variants then serve from a single
+/// manifest.  Returns the weights path.
+pub fn append_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf> {
+    let mpath = dir.join("manifest.json");
+    anyhow::ensure!(mpath.exists(),
+                    "--append expects an existing artifacts dir (no {})", mpath.display());
+    let doc = crate::json::load(&mpath)?;
+    let Json::Obj(mut root) = doc else { bail!("manifest root must be an object") };
+
+    // Variant ids are unique per manifest: re-compressing at the same
+    // ratio must be an explicit overwrite decision, not a silent dup.
+    let mut variants = match root.remove("variants") {
+        Some(Json::Arr(v)) => v,
+        _ => bail!("manifest has no `variants` array"),
+    };
+    if variants.iter().any(|v| v.get("id").and_then(Json::as_str) == Some(&art.variant_id)) {
+        bail!("variant `{}` already in {} (pick another --ratio/--budget, \
+               or write a standalone dir with --out)", art.variant_id, mpath.display());
+    }
+
+    // Model entry: insert, or verify the resident one matches our source.
+    let mut models = match root.remove("models") {
+        Some(Json::Obj(m)) => m,
+        _ => bail!("manifest has no `models` object"),
+    };
+    match models.get(&art.model_name) {
+        None => {
+            models.insert(art.model_name.clone(), model_json(art));
+        }
+        Some(existing) => {
+            let c = existing
+                .get("config")
+                .ok_or_else(|| anyhow!("model `{}`: no config", art.model_name))?;
+            let m = &art.reference;
+            for (key, want) in [("vocab", m.vocab), ("d_model", m.d_model),
+                                ("n_layers", m.layers.len()), ("n_heads", m.n_heads),
+                                ("d_ff", m.d_ff)] {
+                // non-panicking read: a hand-edited/foreign manifest with a
+                // missing or non-numeric field is a merge refusal, not a crash
+                let have = c.get(key).and_then(Json::as_usize);
+                anyhow::ensure!(have == Some(want),
+                                "model `{}` in the resident manifest has {key}={have:?}, \
+                                 compressed source has {want} — refusing to merge",
+                                art.model_name);
+            }
+        }
+    }
+
+    let weights_file = format!("{}.dobiw", art.variant_id.replace('/', "_"));
+    let wpath = dir.join(&weights_file);
+    write_store(&wpath, &art.tensors)?;
+    variants.push(variant_json(art, &weights_file));
+    root.insert("models".into(), Json::Obj(models));
+    root.insert("variants".into(), Json::Arr(variants));
+    std::fs::write(&mpath, Json::Obj(root).to_string())
         .map_err(|e| anyhow!("writing manifest: {e}"))?;
     Ok(wpath)
 }
@@ -414,6 +487,54 @@ mod tests {
         assert_eq!(info.vocab, 61);
         assert_eq!(info.d_model, 16);
         assert_eq!(info.n_layers, 2);
+    }
+
+    #[test]
+    fn append_merges_variants_into_one_manifest() {
+        let dense = tiny_model(dims(), 0, false);
+        let toks = corpus();
+        let a40 = compress_model(&dense, "tiny", &cfg(0.4, Precision::Q8), &toks).unwrap();
+        let a60 = compress_model(&dense, "tiny", &cfg(0.6, Precision::Q8), &toks).unwrap();
+        let dir = std::env::temp_dir().join("dobi_compress_pipe_append");
+        let _ = std::fs::remove_dir_all(&dir);
+        // no manifest yet: append must refuse (standalone write is --out)
+        assert!(append_artifacts(&dir, &a40).is_err());
+        write_artifacts(&dir, &a40).unwrap();
+        append_artifacts(&dir, &a60).unwrap();
+        // duplicate id refused
+        assert!(append_artifacts(&dir, &a60).is_err());
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 1, "both variants share the one model entry");
+        assert_eq!(m.variants.len(), 2);
+        for id in ["tiny/dobi_40", "tiny/dobi_60"] {
+            let v = m.variant(id).unwrap();
+            assert!(v.hlo.is_empty());
+            assert!(m.path(&v.weights).exists(), "{id} store written");
+            // both serve from the merged manifest
+            let store = crate::storage::Store::open(&m.path(&v.weights)).unwrap();
+            let loaded = FactorizedModel::from_store(&m.models["tiny"], v, &store).unwrap();
+            let out = loaded.forward(1, 8, &[1, 2, 3, 4, 5, 6, 7, 8], None).unwrap();
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+        // eval block preserved from the original standalone write
+        assert_eq!((m.eval_batch, m.eval_seq), (2, 16));
+    }
+
+    #[test]
+    fn append_refuses_model_shape_mismatch() {
+        let toks = corpus();
+        let dense = tiny_model(dims(), 0, false);
+        let art = compress_model(&dense, "tiny", &cfg(0.4, Precision::F32), &toks).unwrap();
+        let dir = std::env::temp_dir().join("dobi_compress_pipe_append_clash");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_artifacts(&dir, &art).unwrap();
+        // same model name, different geometry
+        let other_dims = TinyDims { vocab: 61, d: 20, heads: 2, layers: 2, ff: 24 };
+        let other = tiny_model(other_dims, 0, false);
+        let toks61 = corpus();
+        let clash = compress_model(&other, "tiny", &cfg(0.6, Precision::F32), &toks61).unwrap();
+        let err = append_artifacts(&dir, &clash).unwrap_err().to_string();
+        assert!(err.contains("refusing to merge"), "err: {err}");
     }
 
     #[test]

@@ -158,6 +158,32 @@ impl Default for EngineConfig {
     }
 }
 
+/// Incremental decode runtime knobs (`serve::ServeRuntime` — the
+/// KV-cached continuous-batching scheduler behind `dobi serve`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Sessions decoding concurrently per scheduler tick; further opens
+    /// queue FIFO-fair until a slot frees.
+    pub max_sessions: usize,
+    /// Queued-session bound beyond which opens are rejected
+    /// (backpressure, mirroring `EngineConfig.queue_depth`).
+    pub queue_depth: usize,
+    /// Per-session KV capacity in positions (image prefix + prompt +
+    /// generated); sessions that would outgrow it finish early with a
+    /// `length` stop reason.
+    pub kv_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            max_sessions: 8,
+            queue_depth: 256,
+            kv_capacity: crate::coordinator::MAX_ANY_SEQ,
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Manifest
 // ---------------------------------------------------------------------------
@@ -397,6 +423,13 @@ mod tests {
         let c = EngineConfig::default();
         assert!(c.max_batch >= 1 && c.queue_depth >= c.max_batch);
         assert_eq!(c.backend, BackendKind::Auto);
+    }
+
+    #[test]
+    fn serve_defaults_sane() {
+        let c = ServeConfig::default();
+        assert!(c.max_sessions >= 1 && c.queue_depth >= c.max_sessions);
+        assert_eq!(c.kv_capacity, crate::coordinator::MAX_ANY_SEQ);
     }
 
     #[test]

@@ -1,39 +1,60 @@
-//! Dynamic batcher: groups pending requests per (variant, seq) key and
+//! Dynamic batcher: groups pending items per (variant, seq) key and
 //! flushes on either of two triggers (whichever first):
-//!   * size   — `max_batch` requests waiting, or
-//!   * time   — the oldest request has waited `deadline`.
+//!   * size   — `max_batch` items waiting, or
+//!   * time   — the oldest item has waited `deadline`.
 //!
 //! Pure data structure (no PJRT, no threads) so the policy is unit- and
-//! property-testable; the engine drives it from the executor loop.
+//! property-testable.  Generic over anything [`Batchable`]: the engine
+//! drives it with [`Request`]s from the executor loop, and the incremental
+//! decode scheduler (`serve::scheduler`) reuses the same FIFO-fair
+//! grouping for session admission.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use super::request::Request;
 
-#[derive(Debug)]
-pub struct Batch {
-    pub variant: String,
-    pub seq: usize,
-    pub requests: Vec<Request>,
+/// Anything the batcher can queue: a (variant, seq) grouping key plus the
+/// enqueue time that drives deadline flushes and FIFO fairness.
+pub trait Batchable {
+    fn group(&self) -> (&str, usize);
+    fn enqueued(&self) -> Instant;
 }
 
-pub struct DynamicBatcher {
+impl Batchable for Request {
+    fn group(&self) -> (&str, usize) {
+        (&self.variant, self.seq)
+    }
+
+    fn enqueued(&self) -> Instant {
+        self.enqueued
+    }
+}
+
+#[derive(Debug)]
+pub struct Batch<T = Request> {
+    pub variant: String,
+    pub seq: usize,
+    pub requests: Vec<T>,
+}
+
+pub struct DynamicBatcher<T = Request> {
     pub max_batch: usize,
     pub deadline: Duration,
-    queues: BTreeMap<(String, usize), VecDeque<Request>>,
+    queues: BTreeMap<(String, usize), VecDeque<T>>,
     depth: usize,
 }
 
-impl DynamicBatcher {
+impl<T: Batchable> DynamicBatcher<T> {
     pub fn new(max_batch: usize, deadline: Duration) -> Self {
         DynamicBatcher { max_batch: max_batch.max(1), deadline, queues: BTreeMap::new(), depth: 0 }
     }
 
-    pub fn push(&mut self, req: Request) {
+    pub fn push(&mut self, req: T) {
         self.depth += 1;
+        let (variant, seq) = req.group();
         self.queues
-            .entry((req.variant.clone(), req.seq))
+            .entry((variant.to_string(), seq))
             .or_default()
             .push_back(req);
     }
@@ -43,13 +64,24 @@ impl DynamicBatcher {
     }
 
     /// Next batch to run, honoring the size/deadline policy.  Among ready
-    /// groups, picks the one whose head request is oldest (FIFO fairness
+    /// groups, picks the one whose head item is oldest (FIFO fairness
     /// across variants).
-    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+    pub fn poll(&mut self, now: Instant) -> Option<Batch<T>> {
+        self.poll_up_to(now, self.max_batch)
+    }
+
+    /// [`Self::poll`] with an additional per-call size cap — the decode
+    /// scheduler admits into however many session slots are free, which
+    /// can be fewer than `max_batch`.
+    pub fn poll_up_to(&mut self, now: Instant, cap: usize) -> Option<Batch<T>> {
+        let cap = cap.min(self.max_batch);
+        if cap == 0 {
+            return None;
+        }
         let mut best: Option<(Instant, (String, usize))> = None;
         for (key, q) in &self.queues {
             let head = match q.front() {
-                Some(r) => r.enqueued,
+                Some(r) => r.enqueued(),
                 None => continue,
             };
             let ready = q.len() >= self.max_batch || now.duration_since(head) >= self.deadline;
@@ -59,21 +91,21 @@ impl DynamicBatcher {
         }
         let (_, key) = best?;
         let q = self.queues.get_mut(&key).unwrap();
-        let take = q.len().min(self.max_batch);
-        let requests: Vec<Request> = q.drain(..take).collect();
+        let take = q.len().min(cap);
+        let requests: Vec<T> = q.drain(..take).collect();
         self.depth -= requests.len();
         Some(Batch { variant: key.0, seq: key.1, requests })
     }
 
     /// Force-flush everything (engine shutdown).
-    pub fn drain_all(&mut self) -> Vec<Batch> {
+    pub fn drain_all(&mut self) -> Vec<Batch<T>> {
         let mut out = Vec::new();
         let keys: Vec<_> = self.queues.keys().cloned().collect();
         for key in keys {
             let q = self.queues.get_mut(&key).unwrap();
             while !q.is_empty() {
                 let take = q.len().min(self.max_batch);
-                let requests: Vec<Request> = q.drain(..take).collect();
+                let requests: Vec<T> = q.drain(..take).collect();
                 self.depth -= requests.len();
                 out.push(Batch { variant: key.0.clone(), seq: key.1, requests });
             }
@@ -87,7 +119,7 @@ impl DynamicBatcher {
             .values()
             .filter_map(|q| q.front())
             .map(|r| {
-                let waited = now.duration_since(r.enqueued);
+                let waited = now.duration_since(r.enqueued());
                 self.deadline.saturating_sub(waited)
             })
             .min()
@@ -159,6 +191,21 @@ mod tests {
         b.push(req("early", 8, t));
         let batch = b.poll(t + Duration::from_millis(10)).unwrap();
         assert_eq!(batch.variant, "early");
+    }
+
+    #[test]
+    fn poll_up_to_caps_the_take() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(0));
+        let t = Instant::now();
+        for _ in 0..3 {
+            b.push(req("v", 8, t));
+        }
+        assert!(b.poll_up_to(t, 0).is_none(), "zero slots never yields");
+        let first = b.poll_up_to(t, 2).expect("capped take");
+        assert_eq!(first.requests.len(), 2);
+        let rest = b.poll_up_to(t, 2).expect("remainder");
+        assert_eq!(rest.requests.len(), 1);
+        assert_eq!(b.pending(), 0);
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod engine;
 pub mod request;
 pub mod router;
 
-pub use batcher::{Batch, DynamicBatcher};
+pub use batcher::{Batch, Batchable, DynamicBatcher};
 pub use engine::{Engine, EngineStats};
 pub use request::{Request, RequestId, Response, SubmitError};
 pub use router::{Router, MAX_ANY_SEQ};

@@ -124,13 +124,7 @@ impl Json {
         Json::Obj(entries.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
-    // -- serializer ----------------------------------------------------------
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
+    // -- serializer (via `Display`; `.to_string()` comes with it) ------------
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -167,6 +161,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl fmt::Display for Json {
+    /// Compact single-line serialization — one reply per line is the
+    /// server's framing, so no pretty-printing.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -13,19 +13,13 @@
 //! * compression:[`compress`] (native Dobi pipeline: Jacobi SVD, whitened
 //!   rank search, IPCA reconstruction, remap quantization, store writer)
 //! * coordinator:[`coordinator`] (router, dynamic batcher, workers)
+//! * decode:     [`serve`] (per-session KV caches, continuous batching,
+//!   token streaming — the incremental decode runtime)
 //! * evaluation: [`evalx`] (perplexity, task accuracy, generation)
 //! * deployment: [`memsim`] (capacity-limited device model), [`server`]
 
-// Numeric-kernel code trips a handful of style lints by design (index
-// loops that mirror the math, long argument lists on forwards).
-#![allow(
-    clippy::too_many_arguments,
-    clippy::type_complexity,
-    clippy::needless_range_loop,
-    clippy::manual_range_contains,
-    clippy::new_without_default,
-    clippy::uninlined_format_args
-)]
+// Lint policy lives in the workspace Cargo.toml ([workspace.lints]) so
+// benches/examples/tests inherit the same kernel-idiom allows.
 
 pub mod bench;
 pub mod cli;
@@ -43,6 +37,7 @@ pub mod perf;
 pub mod proptest;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod server;
 pub mod storage;
 pub mod tokenizer;

@@ -32,7 +32,7 @@ use crate::runtime::{Backend, LoadStats, Loaded};
 use crate::storage::Store;
 
 pub use kernel::{matmul, Factor, FactorData, FactorizedLinear, Linear};
-pub use model::FactorizedModel;
+pub use model::{FactorizedModel, KvCache};
 
 /// In-process factorized inference backend.
 pub struct NativeBackend;

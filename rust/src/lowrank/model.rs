@@ -348,7 +348,7 @@ impl FactorizedModel {
                  mut taps: Option<&mut std::collections::BTreeMap<String, Vec<f32>>>) {
         let d = self.d_model;
         let rows = b * st;
-        let (cos, sin) = rope_cache(st, self.d_head());
+        let (cos, sin) = rope_cache(0, st, self.d_head());
         let mut normed = vec![0f32; rows * d];
         for (li, layer) in self.layers.iter().enumerate() {
             rmsnorm(h, &layer.attn_norm, d, &mut normed);
@@ -455,47 +455,223 @@ impl FactorizedModel {
         apply_rope(&mut q, b, st, nh, dh, cos, sin);
         apply_rope(&mut k, b, st, nh, dh, cos, sin);
 
-        let scale = 1.0 / (dh as f32).sqrt();
         let mut ctx = vec![0f32; rows * d];
-        let mut scores = vec![0f32; st];
         for bi in 0..b {
-            for hi in 0..nh {
-                let off = hi * dh;
-                for i in 0..st {
-                    let qrow = &q[(bi * st + i) * d + off..(bi * st + i) * d + off + dh];
-                    // causal: keys 0..=i
-                    let mut max = f32::NEG_INFINITY;
-                    for (j, slot) in scores[..=i].iter_mut().enumerate() {
-                        let krow = &k[(bi * st + j) * d + off..(bi * st + j) * d + off + dh];
-                        let mut acc = 0f32;
-                        for t in 0..dh {
-                            acc += qrow[t] * krow[t];
-                        }
-                        let sc = acc * scale;
-                        *slot = sc;
-                        max = max.max(sc);
-                    }
-                    let mut denom = 0f32;
-                    for slot in scores[..=i].iter_mut() {
-                        *slot = (*slot - max).exp();
-                        denom += *slot;
-                    }
-                    let inv = 1.0 / denom;
-                    let crow = &mut ctx[(bi * st + i) * d + off..(bi * st + i) * d + off + dh];
-                    for (j, &w) in scores[..=i].iter().enumerate() {
-                        let vrow = &v[(bi * st + j) * d + off..(bi * st + j) * d + off + dh];
-                        let w = w * inv;
-                        for t in 0..dh {
-                            crow[t] += w * vrow[t];
-                        }
-                    }
-                }
-            }
+            let span = bi * st * d..(bi + 1) * st * d;
+            causal_attend(&q[span.clone()], &k[span.clone()], &v[span.clone()],
+                          st, st, nh, dh, &mut ctx[span]);
         }
         if let Some(tap) = wo_tap {
             *tap = ctx.clone();
         }
         layer.wo.apply(&ctx, rows)
+    }
+}
+
+/// Causal softmax attention of `n_q` query rows over `n_k` key/value rows,
+/// all in the head-interleaved (rows, nh·dh) layout.  Query row `i` holds
+/// absolute position `n_k - n_q + i` and attends keys `0..=` that position
+/// — with `n_q == n_k` this is the full batched forward's causal mask;
+/// with `n_q < n_k` it is the KV-cache decode step (new rows attend the
+/// whole cache plus themselves).  The ONE attention kernel shared by both
+/// paths, so incremental decode is numerically the full forward.
+fn causal_attend(q: &[f32], k: &[f32], v: &[f32], n_q: usize, n_k: usize,
+                 nh: usize, dh: usize, ctx: &mut [f32]) {
+    debug_assert!(n_k >= n_q);
+    let d = nh * dh;
+    debug_assert!(q.len() == n_q * d && k.len() == n_k * d && v.len() == n_k * d);
+    let scale = 1.0 / (dh as f32).sqrt();
+    let base = n_k - n_q;
+    let mut scores = vec![0f32; n_k];
+    for hi in 0..nh {
+        let off = hi * dh;
+        for i in 0..n_q {
+            let last = base + i; // causal: keys 0..=last
+            let qrow = &q[i * d + off..i * d + off + dh];
+            let mut max = f32::NEG_INFINITY;
+            for (j, slot) in scores[..=last].iter_mut().enumerate() {
+                let krow = &k[j * d + off..j * d + off + dh];
+                let mut acc = 0f32;
+                for t in 0..dh {
+                    acc += qrow[t] * krow[t];
+                }
+                let sc = acc * scale;
+                *slot = sc;
+                max = max.max(sc);
+            }
+            let mut denom = 0f32;
+            for slot in scores[..=last].iter_mut() {
+                *slot = (*slot - max).exp();
+                denom += *slot;
+            }
+            let inv = 1.0 / denom;
+            let crow = &mut ctx[i * d + off..i * d + off + dh];
+            for (j, &w) in scores[..=last].iter().enumerate() {
+                let vrow = &v[j * d + off..j * d + off + dh];
+                let w = w * inv;
+                for t in 0..dh {
+                    crow[t] += w * vrow[t];
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Incremental decode (per-session KV cache)
+// ---------------------------------------------------------------------------
+
+/// One layer's decode state: RoPE-rotated key rows and raw value rows,
+/// each (len, d) row-major, appended as the session decodes.
+struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+/// Per-session attention state across all layers.  Buffers are allocated
+/// to `capacity` rows up front so the decode hot loop never reallocates;
+/// `len` counts appended positions (image prefix + prompt + generated).
+pub struct KvCache {
+    layers: Vec<LayerKv>,
+    len: usize,
+    capacity: usize,
+    d: usize,
+}
+
+impl KvCache {
+    /// Appended positions so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Maximum positions this cache admits.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Positions still available before the cache is full.
+    pub fn remaining(&self) -> usize {
+        self.capacity - self.len
+    }
+
+    /// Drop cached rows (session reset) without releasing the buffers.
+    pub fn clear(&mut self) {
+        for l in &mut self.layers {
+            l.k.clear();
+            l.v.clear();
+        }
+        self.len = 0;
+    }
+
+    /// Host bytes of the K/V rows cached so far.
+    pub fn resident_bytes(&self) -> usize {
+        self.layers.len() * 2 * self.len * self.d * 4
+    }
+}
+
+impl FactorizedModel {
+    /// Allocate a decode session's KV cache: per-layer K/V buffers sized
+    /// for `capacity` total positions (prefix + prompt + generated).
+    pub fn new_kv_cache(&self, capacity: usize) -> KvCache {
+        let d = self.d_model;
+        let layers = (0..self.layers.len())
+            .map(|_| LayerKv {
+                k: Vec::with_capacity(capacity * d),
+                v: Vec::with_capacity(capacity * d),
+            })
+            .collect();
+        KvCache { layers, len: 0, capacity, d }
+    }
+
+    /// KV-aware incremental forward: append `tokens` (plus the projected
+    /// image prefix on the very first call of a VLM session) to the cache
+    /// and return the **last position's** logits (vocab,) — the single-row
+    /// logits head; decode never materializes the (s, vocab) matrix the
+    /// batched forward pays for.
+    ///
+    /// Runs the same trunk math as [`Self::forward`] — shared RMSNorm /
+    /// RoPE (at the absolute position offset) / [`causal_attend`] / SwiGLU
+    /// helpers — over only the new rows, attending cached K/V, so
+    /// `prefill(prompt)` + `step(token)*` reproduces the full forward's
+    /// logits at every decoded position while doing O(len) attention work
+    /// per token instead of O(len²) per window.
+    pub fn forward_kv(&self, tokens: &[i32], kv: &mut KvCache,
+                      image: Option<&[f32]>) -> Result<Vec<f32>> {
+        anyhow::ensure!(!self.action_head,
+                        "{}: VLA heads emit one action, not a token stream — \
+                         no incremental decode path", self.id);
+        anyhow::ensure!(kv.layers.len() == self.layers.len() && kv.d == self.d_model,
+                        "{}: KV cache built for a different model", self.id);
+        anyhow::ensure!(!tokens.is_empty(), "{}: empty decode step", self.id);
+        let d = self.d_model;
+        let base = kv.len;
+        // New trunk rows: the image prefix participates only at the first
+        // call (absolute position 0), exactly as in the batched forward.
+        let (mut h, s_new) = if base == 0 {
+            let h = self.embed_input(1, tokens.len(), tokens, image)?;
+            (h, self.prefix_len() + tokens.len())
+        } else {
+            anyhow::ensure!(image.is_none(),
+                            "{}: image features are consumed at prefill", self.id);
+            let mut h = vec![0f32; tokens.len() * d];
+            for (si, &t) in tokens.iter().enumerate() {
+                if t < 0 || t as usize >= self.vocab {
+                    bail!("{}: token id {t} outside vocab {}", self.id, self.vocab);
+                }
+                h[si * d..(si + 1) * d]
+                    .copy_from_slice(&self.embed[t as usize * d..(t as usize + 1) * d]);
+            }
+            (h, tokens.len())
+        };
+        anyhow::ensure!(base + s_new <= kv.capacity,
+                        "{}: KV cache overflow ({base} + {s_new} > capacity {})",
+                        self.id, kv.capacity);
+        let nh = self.n_heads;
+        let dh = self.d_head();
+        let (cos, sin) = rope_cache(base, s_new, dh);
+        let n_k = base + s_new;
+        let mut normed = vec![0f32; s_new * d];
+        let mut ctx = vec![0f32; s_new * d];
+        for (layer, lkv) in self.layers.iter().zip(kv.layers.iter_mut()) {
+            rmsnorm(&h, &layer.attn_norm, d, &mut normed);
+            let mut q = layer.wq.apply(&normed, s_new);
+            let mut k_new = layer.wk.apply(&normed, s_new);
+            let v_new = layer.wv.apply(&normed, s_new);
+            apply_rope(&mut q, 1, s_new, nh, dh, &cos, &sin);
+            apply_rope(&mut k_new, 1, s_new, nh, dh, &cos, &sin);
+            lkv.k.extend_from_slice(&k_new);
+            lkv.v.extend_from_slice(&v_new);
+            for slot in ctx.iter_mut() {
+                *slot = 0.0;
+            }
+            causal_attend(&q, &lkv.k, &lkv.v, s_new, n_k, nh, dh, &mut ctx);
+            let attn = layer.wo.apply(&ctx, s_new);
+            add_inplace(&mut h, &attn);
+            rmsnorm(&h, &layer.mlp_norm, d, &mut normed);
+            let out = mlp(&normed, s_new, layer, None);
+            add_inplace(&mut h, &out);
+        }
+        kv.len = n_k;
+        // Single-row logits head: final norm + tied LM head on the last
+        // appended position only.
+        let last = &h[(s_new - 1) * d..s_new * d];
+        let mut normed_last = vec![0f32; d];
+        rmsnorm(last, &self.final_norm, d, &mut normed_last);
+        let v = self.vocab;
+        let mut logits = vec![0f32; v];
+        for (vi, slot) in logits.iter_mut().enumerate() {
+            let erow = &self.embed[vi * d..(vi + 1) * d];
+            let mut acc = 0f32;
+            for t in 0..d {
+                acc += normed_last[t] * erow[t];
+            }
+            *slot = acc;
+        }
+        Ok(logits)
     }
 }
 
@@ -536,17 +712,20 @@ fn apply_rope(x: &mut [f32], b: usize, st: usize, nh: usize, dh: usize,
     }
 }
 
-/// (cos, sin) caches of shape (st, dh/2), angle = pos · θ^(−2i/dh).
-fn rope_cache(st: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
+/// (cos, sin) caches of shape (len, dh/2) for absolute positions
+/// `start..start + len`, angle = pos · θ^(−2i/dh).  The full forward uses
+/// `start = 0`; the KV-cache decode path rotates appended rows at their
+/// absolute offset so cached and freshly-computed keys share one frame.
+fn rope_cache(start: usize, len: usize, dh: usize) -> (Vec<f32>, Vec<f32>) {
     let half = dh / 2;
-    let mut cos = vec![0f32; st * half];
-    let mut sin = vec![0f32; st * half];
-    for pos in 0..st {
+    let mut cos = vec![0f32; len * half];
+    let mut sin = vec![0f32; len * half];
+    for i in 0..len {
         for j in 0..half {
             let inv = ROPE_THETA.powf(-((2 * j) as f64) / dh as f64);
-            let ang = pos as f64 * inv;
-            cos[pos * half + j] = ang.cos() as f32;
-            sin[pos * half + j] = ang.sin() as f32;
+            let ang = (start + i) as f64 * inv;
+            cos[i * half + j] = ang.cos() as f32;
+            sin[i * half + j] = ang.sin() as f32;
         }
     }
     (cos, sin)
@@ -602,7 +781,7 @@ impl ForwardModel for FactorizedModel {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::lowrank::synth::{tiny_model, TinyDims};
+    use crate::lowrank::synth::{tiny_model, SYNTH_IMG_TOKENS, TinyDims};
     use crate::mathx::XorShift;
 
     fn dims() -> TinyDims {
@@ -727,6 +906,105 @@ mod tests {
         let _ = m.forward_taps(b, s, &tokens, None).unwrap();
         let c = m.forward(b, s, &tokens, None).unwrap();
         assert_eq!(a, c);
+    }
+
+    /// Last-position logits of a full (1, s) forward — the reference the
+    /// incremental path must reproduce.
+    fn full_last_logits(m: &FactorizedModel, ctx: &[i32], image: Option<&[f32]>) -> Vec<f32> {
+        let s = ctx.len();
+        let out = m.forward(1, s, ctx, image).unwrap();
+        out[(s - 1) * m.vocab..s * m.vocab].to_vec()
+    }
+
+    fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+    }
+
+    #[test]
+    fn kv_prefill_and_steps_match_full_forward() {
+        for factorized in [false, true] {
+            let m = tiny_model(dims(), 0, factorized);
+            let prompt: Vec<i32> = (0..9).map(|i| (i * 11) % 61).collect();
+            let mut kv = m.new_kv_cache(32);
+            let pre = m.forward_kv(&prompt, &mut kv, None).unwrap();
+            assert_eq!(kv.len(), prompt.len());
+            let mut ctx = prompt.clone();
+            let want = full_last_logits(&m, &ctx, None);
+            assert!(max_abs_diff(&pre, &want) < 1e-4,
+                    "prefill logits drifted (factorized={factorized})");
+            // greedy-decode 6 positions; every step must match the full
+            // forward over the grown context
+            let mut last = pre;
+            for _ in 0..6 {
+                let next = crate::mathx::argmax(&last) as i32;
+                ctx.push(next);
+                last = m.forward_kv(&[next], &mut kv, None).unwrap();
+                let want = full_last_logits(&m, &ctx, None);
+                assert!(max_abs_diff(&last, &want) < 1e-4,
+                        "step logits drifted at len {} (factorized={factorized})", ctx.len());
+            }
+            assert_eq!(kv.len(), ctx.len());
+            assert!(kv.resident_bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn kv_multi_token_steps_match_single_token_steps() {
+        let m = tiny_model(dims(), 0, false);
+        let toks: Vec<i32> = (0..12).map(|i| (i * 7 + 3) % 61).collect();
+        // one prefill of 12 vs prefill(5) + step batches of 4 and 3
+        let mut kv_a = m.new_kv_cache(16);
+        let a = m.forward_kv(&toks, &mut kv_a, None).unwrap();
+        let mut kv_b = m.new_kv_cache(16);
+        m.forward_kv(&toks[..5], &mut kv_b, None).unwrap();
+        m.forward_kv(&toks[5..9], &mut kv_b, None).unwrap();
+        let b = m.forward_kv(&toks[9..], &mut kv_b, None).unwrap();
+        assert_eq!(kv_a.len(), kv_b.len());
+        assert!(max_abs_diff(&a, &b) < 1e-5, "chunked decode drifted");
+    }
+
+    #[test]
+    fn kv_vlm_prefix_applied_once_at_prefill() {
+        let m = tiny_model(dims(), 6, false); // 2 prefix tokens
+        let prompt = vec![1i32, 2, 3];
+        let image: Vec<f32> = (0..6).map(|i| i as f32 * 0.2).collect();
+        let mut kv = m.new_kv_cache(16);
+        // image required at prefill, rejected afterwards
+        assert!(m.forward_kv(&prompt, &mut kv, None).is_err());
+        let pre = m.forward_kv(&prompt, &mut kv, Some(&image)).unwrap();
+        assert_eq!(kv.len(), SYNTH_IMG_TOKENS + prompt.len());
+        let want = full_last_logits(&m, &prompt, Some(&image));
+        assert!(max_abs_diff(&pre, &want) < 1e-4);
+        assert!(m.forward_kv(&[4], &mut kv, Some(&image)).is_err(), "image after prefill");
+        let step = m.forward_kv(&[4], &mut kv, None).unwrap();
+        let ctx = vec![1i32, 2, 3, 4];
+        let want = full_last_logits(&m, &ctx, Some(&image));
+        assert!(max_abs_diff(&step, &want) < 1e-4);
+    }
+
+    #[test]
+    fn kv_cache_enforces_capacity_and_model_match() {
+        let m = tiny_model(dims(), 0, false);
+        let mut kv = m.new_kv_cache(4);
+        assert_eq!(kv.remaining(), 4);
+        m.forward_kv(&[1, 2, 3], &mut kv, None).unwrap();
+        assert_eq!(kv.remaining(), 1);
+        assert!(m.forward_kv(&[4, 5], &mut kv, None).is_err(), "overflow must fail");
+        m.forward_kv(&[4], &mut kv, None).unwrap();
+        assert_eq!(kv.remaining(), 0);
+        kv.clear();
+        assert!(kv.is_empty() && kv.capacity() == 4);
+        m.forward_kv(&[7, 8], &mut kv, None).unwrap();
+        // a cache from a differently-shaped model is rejected
+        let other = tiny_model(TinyDims { vocab: 61, d: 16, heads: 2, layers: 3, ff: 24 }, 0, false);
+        let mut kv_other = other.new_kv_cache(8);
+        assert!(m.forward_kv(&[1], &mut kv_other, None).is_err());
+        // VLA models have no decode path
+        let mut vla = tiny_model(dims(), 6, false);
+        vla.action_head = true;
+        vla.act_head = Some(vec![0.1; vla.d_model * 5]);
+        let mut kv_vla = vla.new_kv_cache(8);
+        assert!(vla.forward_kv(&[1], &mut kv_vla, None).is_err());
     }
 
     #[test]

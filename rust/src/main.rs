@@ -15,16 +15,17 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use dobi::cli::Args;
-use dobi::config::{BackendKind, CompressConfig, EngineConfig, Manifest, Precision};
+use dobi::config::{BackendKind, CompressConfig, EngineConfig, Manifest, Precision, ServeConfig};
 use dobi::coordinator::Engine;
 use dobi::corpusio;
 use dobi::evalx;
 use dobi::memsim::DeviceModel;
 use dobi::runtime::{make_backend, Backend, ForwardModel, Runtime};
+use dobi::serve::ServeRuntime;
 use dobi::server::Server;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "all", "tasks", "synth"]);
+    let args = Args::from_env(&["verbose", "all", "tasks", "synth", "stream", "no-stream"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -66,13 +67,17 @@ fn run(args: &Args) -> Result<()> {
                  \x20      [--artifacts DIR] [--backend auto|pjrt|native] ...\n\
                  \n\
                  inspect                      list variants and storage accounting\n\
-                 compress --out DIR [--ratio R] [--precision q8|f16|f32]\n\
-                 \x20        [--variant ID | --synth] [--calib FILE.tokbin]\n\
-                 \x20        [--budget PARAMS]        native Dobi compression:\n\
-                 \x20        dense store -> rank-allocated remapped factors\n\
+                 compress --out DIR | --append DIR [--ratio R]\n\
+                 \x20        [--precision q8|f16|f32] [--variant ID | --synth]\n\
+                 \x20        [--calib FILE.tokbin] [--budget PARAMS]\n\
+                 \x20        native Dobi compression: dense store ->\n\
+                 \x20        rank-allocated remapped factors; --append merges\n\
+                 \x20        the variant into an existing artifacts dir\n\
                  eval --variant ID [--tasks]  PPL on all corpora (+ task suites)\n\
                  generate --variant ID --prompt TEXT [--tokens N] [--temperature T]\n\
-                 serve --variants A,B --port P\n\
+                 serve --variants A,B --port P [--max-sessions N]\n\
+                 \x20     [--stream | --no-stream]  incremental decode runtime\n\
+                 \x20     (KV cache + continuous batching + token streaming)\n\
                  memsim --model NAME [--capacity-mb M] [--bandwidth-mbs B]\n\
                  parity                       pallas vs xla HLO numerics (pjrt only)\n\
                  \n\
@@ -125,12 +130,18 @@ fn inspect(args: &Args) -> Result<()> {
 /// factors -> a self-contained artifacts dir servable by `--backend
 /// native` (factor-only manifest, no HLO entries).
 fn compress(args: &Args) -> Result<()> {
-    use dobi::compress::{calib, compress_model, write_artifacts};
+    use dobi::compress::{append_artifacts, calib, compress_model, write_artifacts};
     use dobi::lowrank::synth::{tiny_model, TinyDims};
     use dobi::lowrank::FactorizedModel;
     use dobi::storage::Store;
 
-    let out = PathBuf::from(args.get("out").ok_or_else(|| anyhow!("--out DIR required"))?);
+    let append = args.get("append").map(PathBuf::from);
+    let out = match (&append, args.get("out")) {
+        (Some(_), Some(_)) => return Err(anyhow!("--out and --append are exclusive")),
+        (Some(dir), None) => dir.clone(),
+        (None, Some(o)) => PathBuf::from(o),
+        (None, None) => return Err(anyhow!("--out DIR (or --append DIR) required")),
+    };
     let cfg = CompressConfig {
         ratio: args.f64_or("ratio", 0.4),
         budget: args.get("budget").map(|v| {
@@ -164,7 +175,11 @@ fn compress(args: &Args) -> Result<()> {
     };
     let t0 = std::time::Instant::now();
     let art = compress_model(&dense, &model_name, &cfg, &calib_tokens)?;
-    let wpath = write_artifacts(&out, &art)?;
+    let wpath = if append.is_some() {
+        append_artifacts(&out, &art)?
+    } else {
+        write_artifacts(&out, &art)?
+    };
     let dt = t0.elapsed().as_secs_f64();
 
     let mut t = dobi::bench::Table::new(
@@ -265,16 +280,67 @@ fn serve(args: &Args) -> Result<()> {
         workers: 1,
         backend: backend_kind(args)?,
     };
-    let engine = Arc::new(Engine::start(dir, &ids, cfg, None)?);
+    // Incremental decode runtime (KV caches + continuous batching +
+    // streaming), on by default; `--no-stream` keeps only the legacy
+    // sliding-window engine path, `--stream` makes its absence an error
+    // instead of a warning (e.g. PJRT-only artifacts).
+    let serve_cfg = ServeConfig {
+        max_sessions: args.usize_or("max-sessions", 8),
+        queue_depth: args.usize_or("queue-depth", 256),
+        ..Default::default()
+    };
+    let runtime = if args.has("no-stream") {
+        None
+    } else {
+        match ServeRuntime::start(dir.clone(), &ids, serve_cfg) {
+            Ok(rt) => Some(Arc::new(rt)),
+            Err(e) if args.has("stream") => {
+                return Err(anyhow!("--stream requested but the decode runtime \
+                                    cannot serve these variants: {e:#}"));
+            }
+            Err(e) => {
+                eprintln!("[serve] incremental decode unavailable ({e:#}); \
+                           sliding-window fallback only");
+                None
+            }
+        }
+    };
+    // The engine exists for variants the decode runtime does not serve
+    // (PJRT-only artifacts): starting it with only those avoids loading
+    // every native model's weights twice.
+    let fallback_ids: Vec<String> = match &runtime {
+        Some(rt) => ids.iter().filter(|id| !rt.variants().contains(*id)).cloned().collect(),
+        None => ids.clone(),
+    };
+    let engine = if fallback_ids.is_empty() {
+        None
+    } else {
+        Some(Arc::new(Engine::start(dir, &fallback_ids, cfg, None)?))
+    };
     let port = args.usize_or("port", 7433) as u16;
-    let server = Server::start(engine.clone(), port)?;
-    println!("serving {} on {} (ctrl-c to stop)", ids.join(", "), server.addr);
+    let server = Server::start_with(engine.clone(), runtime.clone(), port)?;
+    println!("serving {} on {} (streaming {}; ctrl-c to stop)", ids.join(", "), server.addr,
+             if runtime.is_some() { "on" } else { "off" });
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
-        let s = engine.stats();
-        println!("served={} batches={} mean_batch={:.2} p50={:.1}ms p99={:.1}ms rejects={}",
-                 s.served, s.batches, s.mean_batch, s.p50_latency_s * 1e3,
-                 s.p99_latency_s * 1e3, s.queue_full_rejects);
+        let mut status = String::new();
+        if let Some(engine) = &engine {
+            let s = engine.stats();
+            status.push_str(&format!(
+                "served={} batches={} mean_batch={:.2} p50={:.1}ms p99={:.1}ms rejects={}",
+                s.served, s.batches, s.mean_batch, s.p50_latency_s * 1e3,
+                s.p99_latency_s * 1e3, s.queue_full_rejects));
+        }
+        if let Some(rt) = &runtime {
+            let d = rt.stats();
+            if !status.is_empty() {
+                status.push_str(" | ");
+            }
+            status.push_str(&format!("sessions: active={} queued={} finished={} tokens={}",
+                                     d.active_sessions, d.queue_depth, d.sessions_finished,
+                                     d.tokens_emitted));
+        }
+        println!("{status}");
     }
 }
 

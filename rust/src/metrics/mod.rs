@@ -2,7 +2,7 @@
 //! streaming percentiles — shared by the coordinator and the bench harness.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -21,6 +21,29 @@ impl Counter {
     }
 
     pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time level (queue depth, active sessions) — unlike a
+/// [`Counter`] it moves both ways.
+#[derive(Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, dv: i64) {
+        self.0.fetch_add(dv, Ordering::Relaxed);
+    }
+
+    pub fn sub(&self, dv: i64) {
+        self.0.fetch_sub(dv, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -79,12 +102,22 @@ impl Histogram {
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
 impl Registry {
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -106,6 +139,9 @@ impl Registry {
         let mut out = String::new();
         for (k, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{k} {}\n", c.get()));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{k} {}\n", g.get()));
         }
         for (k, h) in self.histograms.lock().unwrap().iter() {
             let s = h.stats();
@@ -160,6 +196,18 @@ mod tests {
         assert_eq!(r.counter("a").get(), 2);
         let text = r.render();
         assert!(text.contains("a 2"));
+    }
+
+    #[test]
+    fn gauge_moves_both_ways() {
+        let r = Registry::default();
+        let g = r.gauge("active");
+        g.add(3);
+        g.sub(1);
+        assert_eq!(r.gauge("active").get(), 2);
+        g.set(-4);
+        assert_eq!(g.get(), -4);
+        assert!(r.render().contains("active -4"));
     }
 
     #[test]

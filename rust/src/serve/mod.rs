@@ -1,0 +1,31 @@
+//! Incremental decode runtime: per-session KV caches, continuous
+//! batching, token streaming.
+//!
+//! The serving win Dobi-SVD promises — rank-truncated factors making each
+//! *token* cheaper — only materializes with decode state: the old path
+//! re-ran a full sliding-window forward per generated token, recomputing
+//! O(len²) attention and a (len, vocab) logits head every step.  This
+//! subsystem replaces that loop:
+//!
+//! * [`session`]   — [`session::DecodeSession`]: one request's prefill /
+//!   step lifecycle over a preallocated per-layer KV cache
+//!   ([`crate::lowrank::model::KvCache`]), each step O(len) attention over
+//!   cached state plus a single-row logits head.
+//! * [`scheduler`] — [`scheduler::ServeRuntime`]: a continuous-batching
+//!   scheduler thread that owns the loaded models, admits sessions
+//!   mid-flight (FIFO-fair via the coordinator's [`DynamicBatcher`]
+//!   grouping), steps every active session per tick grouped by variant,
+//!   and evicts on stop-token / `max_tokens` / KV capacity.
+//! * [`stream`]    — the `{"id", "delta", "done"}` token-streaming framing
+//!   on the existing TCP line protocol (`"stream": true`), plus the
+//!   scheduler-backed one-shot reply.
+//!
+//! [`DynamicBatcher`]: crate::coordinator::DynamicBatcher
+
+pub mod scheduler;
+pub mod session;
+pub mod stream;
+
+pub use scheduler::{FinishReason, GenEvent, ServeRuntime, ServeStats, SessionRequest};
+pub use session::DecodeSession;
+pub use stream::GenParams;

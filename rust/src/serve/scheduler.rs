@@ -1,0 +1,686 @@
+//! Continuous-batching decode scheduler: the stateful replacement for the
+//! submit-per-token sliding-window loop.
+//!
+//! One scheduler thread owns the loaded [`FactorizedModel`]s (weights are
+//! shared across sessions; per-session state is just a KV cache) and runs
+//! a tick loop:
+//!
+//! ```text
+//!  clients ──open()──► waiting (DynamicBatcher, FIFO-fair per variant)
+//!                          │ admit while slots free   ◄── evictions free slots
+//!                          ▼
+//!                  active sessions ── each tick: step() every session
+//!                          │            grouped by variant, one token each
+//!                          ▼
+//!                  GenEvent stream per session (Token / Done / Error)
+//! ```
+//!
+//! New sessions are admitted *between ticks* — mid-flight of everyone
+//! else's decode (continuous batching) — and evicted the moment they hit
+//! their stop token, `max_tokens`, or KV capacity, so a long generation
+//! never blocks short ones behind it.  Queue depth, active sessions, and
+//! per-phase latencies are exported through [`crate::metrics`].
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{Manifest, ServeConfig};
+use crate::coordinator::batcher::{Batchable, DynamicBatcher};
+use crate::coordinator::request::SubmitError;
+use crate::lowrank::FactorizedModel;
+use crate::mathx::{sample_logits, XorShift};
+use crate::metrics::Registry;
+use crate::storage::Store;
+
+use super::session::DecodeSession;
+
+/// Why a session's stream ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Emitted the requested `max_tokens`.
+    MaxTokens,
+    /// Sampled the client's stop token.
+    Stop,
+    /// KV capacity exhausted before `max_tokens`.
+    Length,
+}
+
+impl FinishReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::Stop => "stop",
+            FinishReason::Length => "length",
+        }
+    }
+}
+
+/// One event on a session's stream.  `Token`s arrive in `index` order;
+/// exactly one `Done` or `Error` terminates the stream.
+#[derive(Debug, Clone)]
+pub enum GenEvent {
+    Token { index: usize, token: i32 },
+    Done { n_tokens: usize, reason: FinishReason, prefill_s: f64, decode_s: f64 },
+    Error(String),
+}
+
+/// A client's request to open a decode session.
+pub struct SessionRequest {
+    pub variant: String,
+    pub prompt: Vec<i32>,
+    /// Image features for VLM variants (consumed at prefill).
+    pub image: Option<Vec<f32>>,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub seed: u64,
+    /// Optional EOS: sampling this token ends the stream (it IS emitted).
+    pub stop_token: Option<i32>,
+    /// Where the scheduler delivers this session's [`GenEvent`]s.
+    pub events: mpsc::Sender<GenEvent>,
+}
+
+/// Queued request + admission timestamp (FIFO fairness key).
+struct Pending {
+    req: SessionRequest,
+    enqueued: Instant,
+}
+
+impl Batchable for Pending {
+    fn group(&self) -> (&str, usize) {
+        // decode sessions have heterogeneous lengths by design: the
+        // batcher's (variant, seq) key collapses to variant-only
+        (&self.req.variant, 0)
+    }
+
+    fn enqueued(&self) -> Instant {
+        self.enqueued
+    }
+}
+
+enum Cmd {
+    Open(Pending),
+    Stop,
+}
+
+/// Aggregate counters for the status line / tests.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub active_sessions: i64,
+    pub queue_depth: i64,
+    pub sessions_opened: u64,
+    pub sessions_finished: u64,
+    pub tokens_emitted: u64,
+}
+
+struct ServeShared {
+    metrics: Registry,
+}
+
+/// Handle to the running scheduler.  Cloneable across client threads via
+/// `Arc`; dropping the last handle shuts the scheduler down.
+pub struct ServeRuntime {
+    tx: mpsc::Sender<Cmd>,
+    shared: Arc<ServeShared>,
+    variants: Vec<String>,
+    cfg: ServeConfig,
+    join: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+impl ServeRuntime {
+    /// Load `variant_ids` from `artifacts` as native [`FactorizedModel`]s
+    /// on the scheduler thread and start ticking.  Blocks until loading
+    /// finished so `open()` never races a cold model.  Variants that
+    /// cannot serve incrementally (pruned stores, VLA heads, missing
+    /// weights) are skipped with a warning — the caller keeps them on its
+    /// fallback path via [`Self::variants`]; only a manifest that yields
+    /// NO servable variant is an error.
+    pub fn start(artifacts: PathBuf, variant_ids: &[String],
+                 cfg: ServeConfig) -> Result<ServeRuntime> {
+        anyhow::ensure!(!variant_ids.is_empty(), "no variants to serve");
+        anyhow::ensure!(cfg.max_sessions >= 1, "max_sessions must be >= 1");
+        anyhow::ensure!(cfg.kv_capacity >= 2, "kv_capacity {} too small", cfg.kv_capacity);
+        let shared = Arc::new(ServeShared { metrics: Registry::default() });
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<String>>>();
+        let ids: Vec<String> = variant_ids.to_vec();
+        let shared2 = shared.clone();
+        let cfg2 = cfg.clone();
+        let join = std::thread::Builder::new()
+            .name("dobi-decode-scheduler".into())
+            .spawn(move || {
+                let load = (|| -> Result<BTreeMap<String, FactorizedModel>> {
+                    let manifest = Manifest::load(&artifacts)?;
+                    let mut models = BTreeMap::new();
+                    let mut errors = Vec::new();
+                    for id in &ids {
+                        match load_variant(&manifest, id) {
+                            Ok(model) => {
+                                models.insert(id.clone(), model);
+                            }
+                            Err(e) => {
+                                eprintln!("[serve] `{id}` not incrementally servable \
+                                           ({e:#}); leaving it on the fallback path");
+                                errors.push(format!("{id}: {e:#}"));
+                            }
+                        }
+                    }
+                    anyhow::ensure!(!models.is_empty(),
+                                    "no variant is incrementally servable: {}",
+                                    errors.join("; "));
+                    Ok(models)
+                })();
+                match load {
+                    Ok(models) => {
+                        let _ = ready_tx.send(Ok(models.keys().cloned().collect()));
+                        scheduler_main(models, cfg2, rx, shared2);
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                    }
+                }
+            })?;
+        let served = ready_rx.recv().map_err(|_| anyhow!("scheduler died during load"))??;
+        Ok(ServeRuntime { tx, shared, variants: served, cfg, join: Mutex::new(Some(join)) })
+    }
+
+    /// Variants this runtime decodes (the servable subset of what
+    /// [`Self::start`] was asked for).
+    pub fn variants(&self) -> &[String] {
+        &self.variants
+    }
+
+    /// Queue a session.  Fails fast (no thread hop) on unknown variants
+    /// and queue overflow — the same backpressure contract as
+    /// `Engine::submit`.
+    pub fn open(&self, req: SessionRequest) -> Result<(), SubmitError> {
+        if !self.variants.iter().any(|v| v == &req.variant) {
+            return Err(SubmitError::UnknownVariant(req.variant));
+        }
+        let depth = self.shared.metrics.gauge("serve_queue_depth");
+        if depth.get() >= self.cfg.queue_depth as i64 {
+            return Err(SubmitError::QueueFull {
+                variant: req.variant,
+                depth: self.cfg.queue_depth,
+            });
+        }
+        depth.add(1);
+        self.tx
+            .send(Cmd::Open(Pending { req, enqueued: Instant::now() }))
+            .map_err(|_| {
+                depth.sub(1); // never enqueued: keep the gauge honest
+                SubmitError::Stopped
+            })
+    }
+
+    /// Open a session and block until it finishes; returns the generated
+    /// tokens (the non-streaming reply path, and the test harness).
+    pub fn generate(&self, variant: &str, prompt: &[i32], max_tokens: usize,
+                    temperature: f32, seed: u64) -> Result<Vec<i32>> {
+        let (etx, erx) = mpsc::channel();
+        self.open(SessionRequest {
+            variant: variant.to_string(),
+            prompt: prompt.to_vec(),
+            image: None,
+            max_tokens,
+            temperature,
+            seed,
+            stop_token: None,
+            events: etx,
+        })
+        .map_err(|e| anyhow!("{e}"))?;
+        let mut out = Vec::new();
+        for ev in erx {
+            match ev {
+                GenEvent::Token { token, .. } => out.push(token),
+                GenEvent::Done { .. } => return Ok(out),
+                GenEvent::Error(e) => bail!("session failed: {e}"),
+            }
+        }
+        bail!("scheduler dropped the session")
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        let m = &self.shared.metrics;
+        ServeStats {
+            active_sessions: m.gauge("serve_active_sessions").get(),
+            queue_depth: m.gauge("serve_queue_depth").get(),
+            sessions_opened: m.counter("serve_sessions_opened").get(),
+            sessions_finished: m.counter("serve_sessions_finished").get(),
+            tokens_emitted: m.counter("serve_tokens_emitted").get(),
+        }
+    }
+
+    pub fn metrics_text(&self) -> String {
+        self.shared.metrics.render()
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Cmd::Stop);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServeRuntime {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Load one variant as an incrementally-servable native model.
+fn load_variant(manifest: &Manifest, id: &str) -> Result<FactorizedModel> {
+    let v = manifest.variant(id)?;
+    let info = manifest
+        .models
+        .get(&v.model)
+        .ok_or_else(|| anyhow!("model `{}` missing from manifest", v.model))?;
+    let store = Store::open(&manifest.path(&v.weights))?;
+    let model = FactorizedModel::from_store(info, v, &store)?;
+    anyhow::ensure!(!model.action_head, "VLA variants have no token stream to decode");
+    Ok(model)
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler thread
+// ---------------------------------------------------------------------------
+
+/// One admitted session mid-decode.
+struct Running {
+    session: DecodeSession,
+    /// Last sampled token — the next `step()` input.
+    last: i32,
+    temperature: f32,
+    rng: XorShift,
+    max_tokens: usize,
+    /// `max_tokens` was clipped by KV capacity: report `Length`, not
+    /// `MaxTokens`, when the clipped budget runs out.
+    clipped: bool,
+    stop_token: Option<i32>,
+    events: mpsc::Sender<GenEvent>,
+    emitted: usize,
+    prefill_s: f64,
+    decode_s: f64,
+    done: Option<FinishReason>,
+    /// Client hung up or the step failed: evict without a Done event.
+    dead: bool,
+}
+
+fn scheduler_main(models: BTreeMap<String, FactorizedModel>, cfg: ServeConfig,
+                  rx: mpsc::Receiver<Cmd>, shared: Arc<ServeShared>) {
+    let m = &shared.metrics;
+    let queue_g = m.gauge("serve_queue_depth");
+    let active_g = m.gauge("serve_active_sessions");
+    let opened_c = m.counter("serve_sessions_opened");
+    let finished_c = m.counter("serve_sessions_finished");
+    let tokens_c = m.counter("serve_tokens_emitted");
+    let prefill_h = m.histogram("serve_prefill_seconds");
+    let step_h = m.histogram("serve_step_seconds");
+
+    // deadline 0: a queued session is ready for admission immediately;
+    // the batcher contributes per-variant FIFO fairness and grouping.
+    let mut waiting: DynamicBatcher<Pending> =
+        DynamicBatcher::new(cfg.max_sessions.max(1), Duration::from_millis(0));
+    let mut active: Vec<Running> = Vec::new();
+    let mut next_id = 1u64;
+    let mut stop = false;
+
+    'sched: loop {
+        // Ingest: block when idle, otherwise just drain what arrived
+        // during the last tick (this is where continuous batching happens:
+        // opens land between ticks of everyone else's decode).
+        if active.is_empty() && waiting.pending() == 0 {
+            if stop {
+                break 'sched;
+            }
+            match rx.recv_timeout(Duration::from_millis(100)) {
+                Ok(Cmd::Open(p)) => waiting.push(p),
+                Ok(Cmd::Stop) => stop = true,
+                Err(mpsc::RecvTimeoutError::Timeout) => continue 'sched,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break 'sched,
+            }
+        }
+        loop {
+            match rx.try_recv() {
+                Ok(Cmd::Open(p)) => waiting.push(p),
+                Ok(Cmd::Stop) | Err(mpsc::TryRecvError::Disconnected) => {
+                    stop = true;
+                    break;
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+            }
+        }
+        if stop {
+            break 'sched;
+        }
+
+        // Admit into free slots (FIFO-fair across variants via the
+        // batcher's oldest-head-first poll).
+        while active.len() < cfg.max_sessions {
+            let free = cfg.max_sessions - active.len();
+            let Some(batch) = waiting.poll_up_to(Instant::now(), free) else { break };
+            for p in batch.requests {
+                queue_g.sub(1);
+                opened_c.inc();
+                if let Some(r) = admit(p.req, &models, &cfg, next_id, &tokens_c, &prefill_h) {
+                    next_id += 1;
+                    active.push(r);
+                } else {
+                    // terminated at admission (zero budget / error)
+                    finished_c.inc();
+                }
+            }
+        }
+        active_g.set(active.len() as i64);
+
+        // Tick: one decode step per live session, grouped by variant so a
+        // group's weights stream through cache together.
+        let mut order: Vec<usize> =
+            (0..active.len()).filter(|&i| active[i].done.is_none() && !active[i].dead).collect();
+        order.sort_by(|&a, &b| active[a].session.variant.cmp(&active[b].session.variant));
+        for i in order {
+            let r = &mut active[i];
+            let model = models.get(&r.session.variant).expect("validated at open");
+            let t0 = Instant::now();
+            match r.session.step(model, r.last) {
+                Ok(logits) => {
+                    let dt = t0.elapsed();
+                    r.decode_s += dt.as_secs_f64();
+                    step_h.observe(dt);
+                    emit_next(r, &logits, &tokens_c);
+                }
+                Err(e) => {
+                    let _ = r.events.send(GenEvent::Error(format!("{e:#}")));
+                    r.dead = true;
+                }
+            }
+        }
+
+        // Evict finished/dead sessions, emitting the terminal event.
+        active.retain_mut(|r| {
+            if r.dead {
+                finished_c.inc();
+                return false;
+            }
+            if let Some(reason) = r.done {
+                // count before notifying: a client that wakes on Done must
+                // already see itself in `sessions_finished`
+                finished_c.inc();
+                let _ = r.events.send(GenEvent::Done {
+                    n_tokens: r.emitted,
+                    reason,
+                    prefill_s: r.prefill_s,
+                    decode_s: r.decode_s,
+                });
+                return false;
+            }
+            true
+        });
+        active_g.set(active.len() as i64);
+    }
+
+    // Shutdown: everything still queued or mid-decode gets an Error event
+    // (clients observe a clean terminal line instead of a hangup).
+    loop {
+        match rx.try_recv() {
+            Ok(Cmd::Open(p)) => waiting.push(p),
+            Ok(Cmd::Stop) => {}
+            Err(_) => break,
+        }
+    }
+    for batch in waiting.drain_all() {
+        for p in batch.requests {
+            queue_g.sub(1);
+            let _ = p.req.events.send(GenEvent::Error("scheduler stopped".into()));
+        }
+    }
+    for r in active.drain(..) {
+        // these were opened (counted): close the books before notifying
+        finished_c.inc();
+        let _ = r.events.send(GenEvent::Error("scheduler stopped".into()));
+    }
+    active_g.set(0);
+}
+
+/// Prefill a newly admitted session and emit its first token.  Returns
+/// None when the session terminated at admission (zero budget, prefill
+/// error, or client already gone).
+fn admit(req: SessionRequest, models: &BTreeMap<String, FactorizedModel>, cfg: &ServeConfig,
+         id: u64, tokens_c: &crate::metrics::Counter,
+         prefill_h: &crate::metrics::Histogram) -> Option<Running> {
+    let Some(model) = models.get(&req.variant) else {
+        // open() validates; a missing model here means start/open disagree
+        let _ = req.events.send(GenEvent::Error(format!("unknown variant `{}`", req.variant)));
+        return None;
+    };
+    if req.max_tokens == 0 {
+        let _ = req.events.send(GenEvent::Done {
+            n_tokens: 0,
+            reason: FinishReason::MaxTokens,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+        });
+        return None;
+    }
+    // Budget the KV capacity: the prompt comes first (context quality —
+    // oversize prompts keep their most recent tail, the sliding-window
+    // semantics of the old serve path, leaving one slot to step into),
+    // then the generation budget is clipped to what the cache can still
+    // hold: g tokens cost g−1 steps after the prefill row.
+    let prefix = if req.image.is_some() { model.n_img_tokens } else { 0 };
+    let cap = cfg.kv_capacity;
+    if prefix + 2 > cap {
+        let _ = req.events.send(GenEvent::Error(format!(
+            "kv capacity {cap} cannot hold the {prefix}-token image prefix"
+        )));
+        return None;
+    }
+    let mut prompt = req.prompt;
+    if prompt.is_empty() {
+        prompt.push(b' ' as i32);
+    }
+    let keep = prompt.len().min(cap - prefix - 1);
+    if keep < prompt.len() {
+        prompt.drain(..prompt.len() - keep);
+    }
+    let gen_budget = req.max_tokens.min(cap - prefix - keep + 1);
+    let mut session = DecodeSession::new(id, &req.variant, model, cap);
+    let t0 = Instant::now();
+    let logits = match session.prefill(model, &prompt, req.image.as_deref()) {
+        Ok(l) => l,
+        Err(e) => {
+            let _ = req.events.send(GenEvent::Error(format!("{e:#}")));
+            return None;
+        }
+    };
+    let dt = t0.elapsed();
+    prefill_h.observe(dt);
+    let mut r = Running {
+        session,
+        last: 0,
+        temperature: req.temperature,
+        rng: XorShift::new(req.seed.max(1)),
+        max_tokens: gen_budget,
+        clipped: gen_budget < req.max_tokens,
+        stop_token: req.stop_token,
+        events: req.events,
+        emitted: 0,
+        prefill_s: dt.as_secs_f64(),
+        decode_s: 0.0,
+        done: None,
+        dead: false,
+    };
+    emit_next(&mut r, &logits, tokens_c);
+    Some(r)
+}
+
+/// Sample from `logits`, stream the token, and update the session's
+/// stop conditions.
+fn emit_next(r: &mut Running, logits: &[f32], tokens_c: &crate::metrics::Counter) {
+    let tok = sample_logits(logits, r.temperature, &mut r.rng) as i32;
+    r.last = tok;
+    let index = r.emitted;
+    r.emitted += 1;
+    tokens_c.inc();
+    if r.events.send(GenEvent::Token { index, token: tok }).is_err() {
+        r.dead = true; // client hung up: free the slot without more work
+        return;
+    }
+    if r.stop_token == Some(tok) {
+        r.done = Some(FinishReason::Stop);
+    } else if r.emitted >= r.max_tokens {
+        r.done = Some(if r.clipped { FinishReason::Length } else { FinishReason::MaxTokens });
+    } else if r.session.remaining() == 0 {
+        r.done = Some(FinishReason::Length);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::synth::{tiny_manifest_json, tiny_store_tensors, SynthStyle, TinyDims};
+    use crate::storage::write_store;
+
+    fn dims() -> TinyDims {
+        TinyDims { vocab: 256, d: 24, heads: 2, layers: 2, ff: 32 }
+    }
+
+    fn artifacts(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dobi_serve_sched_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_store(&dir.join("dense.dobiw"),
+                    &tiny_store_tensors(dims(), 0, SynthStyle::DenseF32)).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            tiny_manifest_json(dims(), 0, &[("tiny/dense", "dense", 1.0, "dense.dobiw")]),
+        )
+        .unwrap();
+        dir
+    }
+
+    fn rt(tag: &str, cfg: ServeConfig) -> ServeRuntime {
+        ServeRuntime::start(artifacts(tag), &["tiny/dense".to_string()], cfg).unwrap()
+    }
+
+    #[test]
+    fn generate_emits_exactly_max_tokens() {
+        let rt = rt("gen", ServeConfig { max_sessions: 2, ..Default::default() });
+        let prompt: Vec<i32> = "The ".bytes().map(|b| b as i32).collect();
+        let out = rt.generate("tiny/dense", &prompt, 7, 0.0, 1).unwrap();
+        assert_eq!(out.len(), 7);
+        assert!(out.iter().all(|&t| (0..256).contains(&t)));
+        let again = rt.generate("tiny/dense", &prompt, 7, 0.0, 99).unwrap();
+        assert_eq!(out, again, "greedy decode is seed-independent");
+        let st = rt.stats();
+        assert_eq!(st.sessions_finished, 2);
+        assert_eq!(st.tokens_emitted, 14);
+        assert_eq!(st.active_sessions, 0);
+        rt.shutdown();
+    }
+
+    #[test]
+    fn open_rejects_unknown_variant_and_zero_budget_finishes_clean() {
+        let rt = rt("rej", ServeConfig::default());
+        let (etx, _erx) = mpsc::channel();
+        let bad = rt.open(SessionRequest {
+            variant: "tiny/nope".into(),
+            prompt: vec![1],
+            image: None,
+            max_tokens: 4,
+            temperature: 0.0,
+            seed: 1,
+            stop_token: None,
+            events: etx,
+        });
+        assert!(matches!(bad, Err(SubmitError::UnknownVariant(_))));
+        let out = rt.generate("tiny/dense", &[1, 2], 0, 0.0, 1).unwrap();
+        assert!(out.is_empty(), "max_tokens=0 must finish with zero tokens");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn stop_token_ends_the_stream_early() {
+        let rt = rt("stop", ServeConfig::default());
+        // discover what greedy emits first, then ask to stop on it
+        let first = rt.generate("tiny/dense", &[65, 66], 1, 0.0, 1).unwrap()[0];
+        let (etx, erx) = mpsc::channel();
+        rt.open(SessionRequest {
+            variant: "tiny/dense".into(),
+            prompt: vec![65, 66],
+            image: None,
+            max_tokens: 32,
+            temperature: 0.0,
+            seed: 1,
+            stop_token: Some(first),
+            events: etx,
+        })
+        .unwrap();
+        let mut got = Vec::new();
+        let mut reason = None;
+        for ev in erx {
+            match ev {
+                GenEvent::Token { token, .. } => got.push(token),
+                GenEvent::Done { reason: r, .. } => {
+                    reason = Some(r);
+                    break;
+                }
+                GenEvent::Error(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        assert_eq!(got, vec![first], "stream stops on (and includes) the stop token");
+        assert_eq!(reason, Some(FinishReason::Stop));
+        rt.shutdown();
+    }
+
+    /// Run one session to completion, returning (tokens emitted, reason).
+    fn run_session(rt: &ServeRuntime, prompt: Vec<i32>, max_tokens: usize)
+                   -> (usize, FinishReason) {
+        let (etx, erx) = mpsc::channel();
+        rt.open(SessionRequest {
+            variant: "tiny/dense".into(),
+            prompt,
+            image: None,
+            max_tokens,
+            temperature: 0.0,
+            seed: 1,
+            stop_token: None,
+            events: etx,
+        })
+        .unwrap();
+        let mut n = 0usize;
+        for ev in erx {
+            match ev {
+                GenEvent::Token { .. } => n += 1,
+                GenEvent::Done { n_tokens, reason, .. } => {
+                    assert_eq!(n_tokens, n);
+                    return (n, reason);
+                }
+                GenEvent::Error(e) => panic!("unexpected error: {e}"),
+            }
+        }
+        panic!("stream ended without Done");
+    }
+
+    #[test]
+    fn kv_capacity_clips_generation_with_length_reason() {
+        let rt = rt("cap", ServeConfig { kv_capacity: 8, ..Default::default() });
+        // prompt longer than capacity: the most recent 7 tokens are kept
+        // (prompt has priority), leaving 1 step slot -> 2 tokens emitted
+        let (n, reason) = run_session(&rt, (0..20).collect(), 100);
+        assert_eq!(n, 2, "7-token prompt tail + 1 step slot = 2 tokens");
+        assert_eq!(reason, FinishReason::Length, "clipped budget reports length");
+        // short prompt: the rest of the cache goes to generation
+        let (n, reason) = run_session(&rt, vec![1, 2], 100);
+        assert_eq!(n, 7, "2 prompt rows + 6 step slots = 7 tokens");
+        assert_eq!(reason, FinishReason::Length);
+        // fits entirely: max_tokens honored with the normal reason
+        let (n, reason) = run_session(&rt, vec![1, 2], 3);
+        assert_eq!(n, 3);
+        assert_eq!(reason, FinishReason::MaxTokens);
+        rt.shutdown();
+    }
+}

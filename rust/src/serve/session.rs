@@ -1,0 +1,123 @@
+//! Per-request decode sessions: one [`DecodeSession`] owns one
+//! preallocated [`KvCache`] and exposes the two incremental entry points
+//! the scheduler drives — `prefill(tokens)` once, then `step(token)` per
+//! generated token — each returning the last position's logits from
+//! [`FactorizedModel::forward_kv`].
+//!
+//! The session is deliberately model-*borrowing*: the scheduler owns the
+//! loaded models (one per variant, shared across sessions) and passes the
+//! right one in, so a thousand sessions cost a thousand KV caches, not a
+//! thousand weight copies.
+
+use anyhow::Result;
+
+use crate::lowrank::model::KvCache;
+use crate::lowrank::FactorizedModel;
+
+/// One client generation in flight: prompt consumed, `kv` holding every
+/// attended position, plus budget accounting.
+pub struct DecodeSession {
+    pub id: u64,
+    pub variant: String,
+    kv: KvCache,
+    n_prompt: usize,
+    n_generated: usize,
+}
+
+impl DecodeSession {
+    /// A fresh session for `variant`, its cache sized to `capacity`
+    /// positions of `model`'s geometry.
+    pub fn new(id: u64, variant: &str, model: &FactorizedModel, capacity: usize) -> DecodeSession {
+        DecodeSession {
+            id,
+            variant: variant.to_string(),
+            kv: model.new_kv_cache(capacity),
+            n_prompt: 0,
+            n_generated: 0,
+        }
+    }
+
+    /// Consume the prompt (and image features for VLM variants) in one
+    /// batched incremental forward; returns the next-token logits.
+    pub fn prefill(&mut self, model: &FactorizedModel, tokens: &[i32],
+                   image: Option<&[f32]>) -> Result<Vec<f32>> {
+        anyhow::ensure!(self.kv.is_empty(), "session {} already prefilled", self.id);
+        let logits = model.forward_kv(tokens, &mut self.kv, image)?;
+        self.n_prompt = self.kv.len();
+        Ok(logits)
+    }
+
+    /// Append one generated token and return the logits for the next.
+    pub fn step(&mut self, model: &FactorizedModel, token: i32) -> Result<Vec<f32>> {
+        anyhow::ensure!(!self.kv.is_empty(), "session {}: step before prefill", self.id);
+        let logits = model.forward_kv(&[token], &mut self.kv, None)?;
+        self.n_generated += 1;
+        Ok(logits)
+    }
+
+    /// Attended positions so far (prefix + prompt + generated).
+    pub fn positions(&self) -> usize {
+        self.kv.len()
+    }
+
+    /// Prompt positions consumed at prefill (incl. any image prefix).
+    pub fn prompt_len(&self) -> usize {
+        self.n_prompt
+    }
+
+    /// Tokens appended via [`Self::step`].
+    pub fn generated(&self) -> usize {
+        self.n_generated
+    }
+
+    /// Steps still admissible before the KV cache is full.
+    pub fn remaining(&self) -> usize {
+        self.kv.remaining()
+    }
+
+    /// Host bytes this session's cache currently pins.
+    pub fn kv_bytes(&self) -> usize {
+        self.kv.resident_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::synth::{tiny_model, TinyDims};
+    use crate::mathx::argmax;
+
+    fn model() -> FactorizedModel {
+        tiny_model(TinyDims { vocab: 61, d: 16, heads: 2, layers: 2, ff: 24 }, 0, false)
+    }
+
+    #[test]
+    fn session_lifecycle_and_accounting() {
+        let m = model();
+        let mut s = DecodeSession::new(7, "tiny/x", &m, 16);
+        assert!(s.step(&m, 1).is_err(), "step before prefill must fail");
+        let prompt: Vec<i32> = (0..5).collect();
+        let logits = s.prefill(&m, &prompt, None).unwrap();
+        assert_eq!(logits.len(), m.vocab);
+        assert_eq!((s.prompt_len(), s.positions(), s.generated()), (5, 5, 0));
+        assert!(s.prefill(&m, &prompt, None).is_err(), "double prefill must fail");
+        let next = argmax(&logits) as i32;
+        let logits = s.step(&m, next).unwrap();
+        assert_eq!(logits.len(), m.vocab);
+        assert_eq!((s.positions(), s.generated(), s.remaining()), (6, 1, 10));
+        assert!(s.kv_bytes() > 0);
+    }
+
+    #[test]
+    fn session_runs_out_of_capacity_cleanly() {
+        let m = model();
+        let mut s = DecodeSession::new(1, "tiny/x", &m, 6);
+        s.prefill(&m, &[1, 2, 3, 4], None).unwrap();
+        s.step(&m, 5).unwrap();
+        s.step(&m, 6).unwrap();
+        assert_eq!(s.remaining(), 0);
+        assert!(s.step(&m, 7).is_err(), "stepping past capacity must fail");
+        // the failed step must not corrupt accounting
+        assert_eq!((s.positions(), s.generated()), (6, 2));
+    }
+}

@@ -1,0 +1,214 @@
+//! Token streaming over the existing TCP line protocol.
+//!
+//! Request (one JSON object per line, same as the one-shot path, plus the
+//! `stream` switch):
+//!   -> {"variant": "tiny/dobi_40", "prompt": "The ", "max_tokens": 32,
+//!       "temperature": 0.0, "stream": true, "stop_token": 10}
+//!
+//! Streaming reply: one line per generated token, then a terminal line —
+//!   <- {"id": 1, "index": 0, "delta": "t", "token": 116, "done": false}
+//!   <- ...
+//!   <- {"id": 1, "done": true, "text": "the...", "n_tokens": 32,
+//!       "finish": "max_tokens", "latency_s": 0.01, "tokens_per_s": 3200.0}
+//!
+//! Without `"stream": true` the reply is the single legacy object
+//! (`{"id", "text", "latency_s", "tokens_per_s"}`), but still decoded
+//! incrementally through the scheduler when it serves the variant.
+//!
+//! Deltas are per-token byte decodes: a multi-byte UTF-8 character split
+//! across tokens renders as replacement characters in the deltas; the
+//! terminal line's `text` is the lossless whole-stream decode clients
+//! should reconcile against.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::json::Json;
+use crate::tokenizer::ByteTokenizer;
+
+use super::scheduler::{FinishReason, GenEvent, ServeRuntime, SessionRequest};
+
+/// Generation parameters shared by the streaming and one-shot paths.
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub variant: String,
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f32,
+    pub seed: u64,
+    pub stop_token: Option<i32>,
+    pub stream: bool,
+}
+
+/// Pull the generation fields out of a parsed request line.  Missing
+/// `variant`/`prompt` become empty strings — the open/serve path then
+/// answers a proper error line instead of panicking the handler.
+pub fn parse_params(req: &Json) -> GenParams {
+    GenParams {
+        variant: req.get("variant").and_then(Json::as_str).unwrap_or_default().to_string(),
+        prompt: req.get("prompt").and_then(Json::as_str).unwrap_or_default().to_string(),
+        max_tokens: req.get("max_tokens").and_then(Json::as_usize).unwrap_or(32),
+        temperature: req.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32,
+        seed: req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+        stop_token: req.get("stop_token").and_then(Json::as_usize).map(|t| t as i32),
+        stream: req.get("stream").and_then(Json::as_bool).unwrap_or(false),
+    }
+}
+
+/// Open a decode session for `p`; returns the event stream.
+fn open_session(rt: &ServeRuntime, p: &GenParams) -> Result<mpsc::Receiver<GenEvent>> {
+    let (etx, erx) = mpsc::channel();
+    rt.open(SessionRequest {
+        variant: p.variant.clone(),
+        prompt: ByteTokenizer.encode(&p.prompt),
+        image: None,
+        max_tokens: p.max_tokens,
+        temperature: p.temperature,
+        seed: p.seed,
+        stop_token: p.stop_token,
+        events: etx,
+    })
+    .map_err(|e| anyhow!("{e}"))?;
+    Ok(erx)
+}
+
+fn jstr(s: impl Into<String>) -> Json {
+    Json::Str(s.into())
+}
+
+/// Terminal-line payload shared by every reply shape (streaming terminal
+/// line, scheduler one-shot, and the server's engine-fallback one-shot).
+pub(crate) fn finish_fields(m: &mut BTreeMap<String, Json>, tokens: &[i32],
+                            reason: Option<FinishReason>, latency_s: f64) {
+    m.insert("text".into(), jstr(ByteTokenizer.decode(tokens)));
+    m.insert("latency_s".into(), Json::Num(latency_s));
+    m.insert("tokens_per_s".into(),
+             Json::Num(tokens.len() as f64 / latency_s.max(1e-9)));
+    m.insert("n_tokens".into(), Json::Num(tokens.len() as f64));
+    if let Some(r) = reason {
+        m.insert("finish".into(), jstr(r.as_str()));
+    }
+}
+
+/// Stream one generation: a `{"id", "index", "delta", "done": false}` line
+/// per token, then the terminal `{"id", "done": true, ...}` line.  A
+/// session error becomes an `{"id", "error"}` line (the connection stays
+/// usable).  IO errors propagate (client gone).
+pub fn run_streaming<W: Write>(rt: &ServeRuntime, p: &GenParams, id: u64,
+                               w: &mut W) -> Result<()> {
+    let t0 = Instant::now();
+    let erx = match open_session(rt, p) {
+        Ok(erx) => erx,
+        Err(e) => {
+            let mut m = BTreeMap::new();
+            m.insert("id".into(), Json::Num(id as f64));
+            m.insert("error".into(), jstr(format!("{e:#}")));
+            writeln!(w, "{}", Json::Obj(m))?;
+            w.flush()?;
+            return Ok(());
+        }
+    };
+    let tok = ByteTokenizer;
+    let mut tokens = Vec::new();
+    let mut reason = None;
+    let mut error = None;
+    for ev in erx {
+        match ev {
+            GenEvent::Token { index, token } => {
+                tokens.push(token);
+                let mut m = BTreeMap::new();
+                m.insert("id".into(), Json::Num(id as f64));
+                m.insert("index".into(), Json::Num(index as f64));
+                m.insert("delta".into(), jstr(tok.decode(&[token])));
+                // raw id too: byte-level clients reassembling multi-byte
+                // UTF-8 need the token, not the lossy per-byte delta
+                m.insert("token".into(), Json::Num(token as f64));
+                m.insert("done".into(), Json::Bool(false));
+                writeln!(w, "{}", Json::Obj(m))?;
+                w.flush()?;
+            }
+            GenEvent::Done { reason: r, .. } => {
+                reason = Some(r);
+                break;
+            }
+            GenEvent::Error(e) => {
+                error = Some(e);
+                break;
+            }
+        }
+    }
+    // A vanished channel without a terminal event (scheduler died) is an
+    // error, not a completed stream — mirror run_oneshot's guard.
+    if error.is_none() && reason.is_none() {
+        error = Some("scheduler dropped the session".into());
+    }
+    let mut m = BTreeMap::new();
+    m.insert("id".into(), Json::Num(id as f64));
+    match error {
+        Some(e) => {
+            m.insert("error".into(), jstr(e));
+        }
+        None => {
+            m.insert("done".into(), Json::Bool(true));
+            finish_fields(&mut m, &tokens, reason, t0.elapsed().as_secs_f64());
+        }
+    }
+    writeln!(w, "{}", Json::Obj(m))?;
+    w.flush()?;
+    Ok(())
+}
+
+/// One-shot reply through the scheduler (KV-cached decode, no per-token
+/// lines): the legacy `{"text", "latency_s", "tokens_per_s"}` map.
+pub fn run_oneshot(rt: &ServeRuntime, p: &GenParams) -> Result<BTreeMap<String, Json>> {
+    let t0 = Instant::now();
+    let erx = open_session(rt, p)?;
+    let mut tokens = Vec::new();
+    let mut reason = None;
+    for ev in erx {
+        match ev {
+            GenEvent::Token { token, .. } => tokens.push(token),
+            GenEvent::Done { reason: r, .. } => {
+                reason = Some(r);
+                break;
+            }
+            GenEvent::Error(e) => bail!("session failed: {e}"),
+        }
+    }
+    anyhow::ensure!(reason.is_some(), "scheduler dropped the session");
+    let mut m = BTreeMap::new();
+    finish_fields(&mut m, &tokens, reason, t0.elapsed().as_secs_f64());
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_params_defaults_and_overrides() {
+        let req = Json::parse(
+            r#"{"variant": "m/x", "prompt": "hi", "stream": true,
+                "max_tokens": 5, "temperature": 0.5, "seed": 9, "stop_token": 10}"#,
+        )
+        .unwrap();
+        let p = parse_params(&req);
+        assert_eq!(p.variant, "m/x");
+        assert_eq!(p.prompt, "hi");
+        assert!(p.stream);
+        assert_eq!(p.max_tokens, 5);
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.stop_token, Some(10));
+        assert!((p.temperature - 0.5).abs() < 1e-6);
+
+        let bare = Json::parse(r#"{"variant": "m/x", "prompt": ""}"#).unwrap();
+        let p = parse_params(&bare);
+        assert!(!p.stream);
+        assert_eq!(p.max_tokens, 32);
+        assert_eq!(p.stop_token, None);
+    }
+}

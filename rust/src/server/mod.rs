@@ -1,13 +1,19 @@
-//! TCP line-protocol serving front-end over the engine.
+//! TCP line-protocol serving front-end.
 //!
 //! Protocol (one JSON object per line):
 //!   -> {"variant": "llama-nano/dobi_60", "prompt": "text", "max_tokens": 32,
 //!       "temperature": 0.0}
 //!   <- {"id": 1, "text": "...", "latency_s": 0.01, "tokens_per_s": 123.4}
 //!
-//! Generation runs a sliding-window loop over engine.submit(), so every
-//! generated token flows through the router/batcher like any other
-//! request — concurrent clients batch together naturally.
+//! With `"stream": true` the reply is one `{"id", "delta", "done"}` line
+//! per token (see [`crate::serve::stream`]).
+//!
+//! Generation routes through the incremental decode runtime
+//! ([`ServeRuntime`]) when one is attached and serves the variant: KV
+//! caches make each token O(len) instead of a full O(len²) window
+//! recompute.  Variants the runtime does not carry (PJRT-only artifacts)
+//! fall back to the legacy sliding-window loop over `engine.submit()`,
+//! where concurrent clients still batch together.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -20,6 +26,7 @@ use anyhow::Result;
 use crate::coordinator::Engine;
 use crate::json::Json;
 use crate::mathx::{sample_logits, XorShift};
+use crate::serve::{stream as sstream, FinishReason, ServeRuntime};
 use crate::tokenizer::ByteTokenizer;
 
 pub struct Server {
@@ -29,8 +36,21 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind and serve on a background thread.  `port` 0 picks a free port.
+    /// Bind and serve on a background thread with the legacy engine path
+    /// only.  `port` 0 picks a free port.
     pub fn start(engine: Arc<Engine>, port: u16) -> Result<Server> {
+        Server::start_with(Some(engine), None, port)
+    }
+
+    /// [`Server::start`] generalized: generation for variants the decode
+    /// runtime serves goes through its scheduler (required for
+    /// `"stream": true` requests); everything else falls back to the
+    /// engine.  Both are optional so a pure-native deployment does not
+    /// load every model twice — at least one must be attached.
+    pub fn start_with(engine: Option<Arc<Engine>>, runtime: Option<Arc<ServeRuntime>>,
+                      port: u16) -> Result<Server> {
+        anyhow::ensure!(engine.is_some() || runtime.is_some(),
+                        "server needs an engine or a decode runtime");
         let listener = TcpListener::bind(("127.0.0.1", port))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -42,13 +62,14 @@ impl Server {
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let eng = engine.clone();
+                        let rt = runtime.clone();
                         let stop3 = stop2.clone();
                         // Read timeout so handlers can observe shutdown even
                         // when a client keeps an idle connection open.
                         let _ = stream.set_read_timeout(
                             Some(std::time::Duration::from_millis(200)));
                         clients.push(std::thread::spawn(move || {
-                            let _ = handle_client(stream, eng, stop3);
+                            let _ = handle_client(stream, eng, rt, stop3);
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -78,8 +99,8 @@ impl Drop for Server {
     }
 }
 
-fn handle_client(stream: TcpStream, engine: Arc<Engine>,
-                 stop: Arc<AtomicBool>) -> Result<()> {
+fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
+                 runtime: Option<Arc<ServeRuntime>>, stop: Arc<AtomicBool>) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -102,17 +123,37 @@ fn handle_client(stream: TcpStream, engine: Arc<Engine>,
             continue;
         }
         req_no += 1;
-        let reply = match serve_one(&engine, &line) {
+        // Parse once; param extraction is shared by the streaming and
+        // one-shot routes below.
+        let params = match Json::parse(&line) {
+            Ok(req) => sstream::parse_params(&req),
+            Err(e) => {
+                writer.write_all(error_line(req_no, &format!("bad request json: {e}"))
+                    .as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                continue;
+            }
+        };
+        // Streaming requests (for variants the decode runtime carries)
+        // write their own line-per-token reply; IO failures mid-stream
+        // mean the client hung up — drop them.  Unservable streaming
+        // requests fall through to serve_one's explanatory error line.
+        if params.stream {
+            if let Some(rt) = runtime
+                .as_ref()
+                .filter(|rt| rt.variants().iter().any(|v| v == &params.variant))
+            {
+                sstream::run_streaming(rt, &params, req_no, &mut writer)?;
+                continue;
+            }
+        }
+        let reply = match serve_one(engine.as_deref(), runtime.as_deref(), &params) {
             Ok(mut obj) => {
                 obj.insert("id".into(), Json::Num(req_no as f64));
                 Json::Obj(obj).to_string()
             }
-            Err(e) => {
-                let mut m = std::collections::BTreeMap::new();
-                m.insert("id".into(), Json::Num(req_no as f64));
-                m.insert("error".into(), Json::Str(format!("{e:#}")));
-                Json::Obj(m).to_string()
-            }
+            Err(e) => error_line(req_no, &format!("{e:#}")),
         };
         writer.write_all(reply.as_bytes())?;
         writer.write_all(b"\n")?;
@@ -122,38 +163,58 @@ fn handle_client(stream: TcpStream, engine: Arc<Engine>,
     Ok(())
 }
 
-fn serve_one(engine: &Engine, line: &str)
-             -> Result<std::collections::BTreeMap<String, Json>> {
-    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
-    let variant = req.str_of("variant").to_string();
-    let prompt = req.str_of("prompt").to_string();
-    let max_tokens = req.get("max_tokens").and_then(Json::as_usize).unwrap_or(32);
-    let temperature = req.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32;
-    let seed = req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+fn error_line(id: u64, msg: &str) -> String {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("id".into(), Json::Num(id as f64));
+    m.insert("error".into(), Json::Str(msg.to_string()));
+    Json::Obj(m).to_string()
+}
 
+fn serve_one(engine: Option<&Engine>, runtime: Option<&ServeRuntime>,
+             params: &sstream::GenParams)
+             -> Result<std::collections::BTreeMap<String, Json>> {
+    anyhow::ensure!(!params.stream,
+                    "streaming needs the incremental decode runtime for `{}` \
+                     (serve without --no-stream, native-loadable variant)", params.variant);
+    // One-shot through the scheduler when it serves the variant: the KV
+    // path decodes in O(len) per token instead of re-running full windows.
+    if let Some(rt) = runtime {
+        if rt.variants().iter().any(|v| v == &params.variant) {
+            return sstream::run_oneshot(rt, params);
+        }
+    }
+    // Legacy sliding-window loop over the batching engine (PJRT variants).
+    let Some(engine) = engine else {
+        anyhow::bail!("variant `{}` is not served by the decode runtime and no \
+                       fallback engine is attached", params.variant);
+    };
     let tok = ByteTokenizer;
-    let mut ctx = tok.encode(&prompt);
+    let mut ctx = tok.encode(&params.prompt);
     let seq = engine
         .router()
-        .pick_seq(&variant, ctx.len())
-        .ok_or_else(|| anyhow::anyhow!("unknown variant `{variant}`"))?;
-    let mut rng = XorShift::new(seed.max(1));
+        .pick_seq(&params.variant, ctx.len())
+        .ok_or_else(|| anyhow::anyhow!("unknown variant `{}`", params.variant))?;
+    let mut rng = XorShift::new(params.seed.max(1));
     let mut out_tokens = Vec::new();
+    let mut finish = FinishReason::MaxTokens;
     let t0 = Instant::now();
-    for _ in 0..max_tokens {
+    for _ in 0..params.max_tokens {
         let mut window = vec![b' ' as i32; seq];
         let take = ctx.len().min(seq);
         window[seq - take..].copy_from_slice(&ctx[ctx.len() - take..]);
-        let resp = engine.infer(&variant, window, None)?;
+        let resp = engine.infer(&params.variant, window, None)?;
         anyhow::ensure!(!resp.output.is_empty(), "engine returned empty logits");
-        let next = sample_logits(&resp.output, temperature, &mut rng) as i32;
+        let next = sample_logits(&resp.output, params.temperature, &mut rng) as i32;
         ctx.push(next);
         out_tokens.push(next);
+        // same stop-token contract as the decode runtime: emit, then end
+        if params.stop_token == Some(next) {
+            finish = FinishReason::Stop;
+            break;
+        }
     }
-    let dt = t0.elapsed().as_secs_f64();
     let mut m = std::collections::BTreeMap::new();
-    m.insert("text".into(), Json::Str(tok.decode(&out_tokens)));
-    m.insert("latency_s".into(), Json::Num(dt));
-    m.insert("tokens_per_s".into(), Json::Num(out_tokens.len() as f64 / dt.max(1e-9)));
+    // one terminal-payload builder for every reply shape
+    sstream::finish_fields(&mut m, &out_tokens, Some(finish), t0.elapsed().as_secs_f64());
     Ok(m)
 }

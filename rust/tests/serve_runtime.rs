@@ -1,0 +1,253 @@
+//! End-to-end coverage of the incremental decode runtime: KV-parity
+//! against the full forward (the acceptance criterion), the
+//! continuous-batching scheduler against serial greedy decode, and the
+//! streaming TCP protocol — all over synthetic artifacts, no PJRT.
+
+use std::sync::Arc;
+
+use dobi::compress::{calib, compress_model, write_artifacts};
+use dobi::config::{CompressConfig, Manifest, Precision, ServeConfig};
+use dobi::lowrank::synth::{tiny_manifest_json, tiny_store_tensors, SynthStyle, TinyDims};
+use dobi::lowrank::FactorizedModel;
+use dobi::mathx::argmax;
+use dobi::serve::{DecodeSession, ServeRuntime};
+use dobi::storage::{write_store, Store};
+use dobi::tokenizer::ByteTokenizer;
+
+/// vocab 256 so the byte tokenizer's ids are always in range.
+fn dims() -> TinyDims {
+    TinyDims { vocab: 256, d: 24, heads: 2, layers: 2, ff: 32 }
+}
+
+fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
+}
+
+/// Full-forward last-position logits — the incremental path's reference.
+fn full_last_logits(m: &FactorizedModel, ctx: &[i32]) -> Vec<f32> {
+    let s = ctx.len();
+    let out = m.forward(1, s, ctx, None).unwrap();
+    out[(s - 1) * m.vocab..s * m.vocab].to_vec()
+}
+
+/// The acceptance parity check: `prefill` + `step` logits must match the
+/// full forward within 1e-4 at every decoded position.
+fn assert_kv_parity(model: &FactorizedModel, prompt: &[i32], n_decode: usize, tag: &str) {
+    let mut session = DecodeSession::new(1, tag, model, prompt.len() + n_decode + 1);
+    let mut logits = session.prefill(model, prompt, None).unwrap();
+    let mut ctx = prompt.to_vec();
+    let want = full_last_logits(model, &ctx);
+    let d0 = max_abs_diff(&logits, &want);
+    assert!(d0 < 1e-4, "{tag}: prefill logits off by {d0}");
+    for i in 0..n_decode {
+        let next = argmax(&logits) as i32;
+        ctx.push(next);
+        logits = session.step(model, next).unwrap();
+        let want = full_last_logits(model, &ctx);
+        let d = max_abs_diff(&logits, &want);
+        assert!(d < 1e-4, "{tag}: step {i} logits off by {d}");
+        // and the greedy choice both paths would make next is identical
+        assert_eq!(argmax(&logits), argmax(&want), "{tag}: greedy divergence at step {i}");
+    }
+}
+
+#[test]
+fn kv_parity_on_synth_dense_model() {
+    let model = tiny_model_dense();
+    let prompt: Vec<i32> = "The quick brown fox".bytes().map(|b| b as i32).collect();
+    assert_kv_parity(&model, &prompt, 12, "synth-dense");
+}
+
+fn tiny_model_dense() -> FactorizedModel {
+    dobi::lowrank::synth::tiny_model(TinyDims::nano(), 0, false)
+}
+
+#[test]
+fn kv_parity_on_compressed_q8_fixture() {
+    // the `dobi compress --synth` fixture: nano dense -> ratio-0.4 q8
+    // store -> reload through the native loader (int8 decode included)
+    let dense = tiny_model_dense();
+    let corpus = calib::synth_calib_tokens(dense.vocab, 4096, 11);
+    let cfg = CompressConfig { ratio: 0.4, precision: Precision::Q8, ..Default::default() };
+    let art = compress_model(&dense, "tiny", &cfg, &corpus).unwrap();
+    let dir = std::env::temp_dir().join("dobi_serve_it_q8_fixture");
+    let _ = std::fs::remove_dir_all(&dir);
+    write_artifacts(&dir, &art).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let v = m.variant(&art.variant_id).unwrap();
+    let store = Store::open(&m.path(&v.weights)).unwrap();
+    let model = FactorizedModel::from_store(&m.models["tiny"], v, &store).unwrap();
+    let prompt: Vec<i32> = "Dobi decodes incrementally".bytes().map(|b| b as i32).collect();
+    assert_kv_parity(&model, &prompt, 12, "compress-q8");
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler: continuous batching vs serial greedy
+// ---------------------------------------------------------------------------
+
+fn build_artifacts(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("dobi_serve_it_{tag}"));
+    std::fs::create_dir_all(&dir).unwrap();
+    write_store(&dir.join("dense.dobiw"),
+                &tiny_store_tensors(dims(), 0, SynthStyle::DenseF32)).unwrap();
+    write_store(&dir.join("q8.dobiw"),
+                &tiny_store_tensors(dims(), 0, SynthStyle::FactorQ8)).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        tiny_manifest_json(dims(), 0, &[
+            ("tiny/dense", "dense", 1.0, "dense.dobiw"),
+            ("tiny/dobi_60", "factorized", 0.6, "q8.dobiw"),
+        ]),
+    )
+    .unwrap();
+    dir
+}
+
+#[test]
+fn concurrent_sessions_match_serial_greedy_decode() {
+    let dir = build_artifacts("sched");
+    // serial reference: one session at a time, straight on the model
+    let m = Manifest::load(&dir).unwrap();
+    let prompts: Vec<Vec<i32>> = [
+        "a", "some longer prompt here", "mid-size words", "yet another different one!",
+    ]
+    .iter()
+    .map(|p| ByteTokenizer.encode(p))
+    .collect();
+    let n_tokens = 10usize;
+    let mut serial: Vec<Vec<i32>> = Vec::new();
+    for (vi, prompt) in prompts.iter().enumerate() {
+        let variant = if vi % 2 == 0 { "tiny/dense" } else { "tiny/dobi_60" };
+        let v = m.variant(variant).unwrap();
+        let store = Store::open(&m.path(&v.weights)).unwrap();
+        let model = FactorizedModel::from_store(&m.models["tiny"], v, &store).unwrap();
+        let mut session = DecodeSession::new(1, variant, &model, 256);
+        let mut logits = session.prefill(&model, prompt, None).unwrap();
+        let mut toks = Vec::new();
+        for _ in 0..n_tokens {
+            let next = argmax(&logits) as i32;
+            toks.push(next);
+            if toks.len() < n_tokens {
+                logits = session.step(&model, next).unwrap();
+            }
+        }
+        serial.push(toks);
+    }
+    // concurrent: all four sessions in flight at once (max_sessions 2 so
+    // admission happens mid-decode of earlier sessions — continuous
+    // batching, not one-shot fan-out)
+    let ids = vec!["tiny/dense".to_string(), "tiny/dobi_60".to_string()];
+    let rt = Arc::new(ServeRuntime::start(
+        dir,
+        &ids,
+        ServeConfig { max_sessions: 2, ..Default::default() },
+    )
+    .unwrap());
+    let mut handles = Vec::new();
+    for (vi, prompt) in prompts.iter().enumerate() {
+        let rt = rt.clone();
+        let prompt = prompt.clone();
+        let variant = if vi % 2 == 0 { "tiny/dense" } else { "tiny/dobi_60" }.to_string();
+        handles.push(std::thread::spawn(move || {
+            rt.generate(&variant, &prompt, n_tokens, 0.0, 1 + vi as u64).unwrap()
+        }));
+    }
+    let concurrent: Vec<Vec<i32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(concurrent, serial,
+               "interleaved decoding must not change any session's greedy tokens");
+    let st = rt.stats();
+    assert_eq!(st.sessions_finished, prompts.len() as u64);
+    assert_eq!(st.tokens_emitted, (prompts.len() * n_tokens) as u64);
+    rt.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Streaming TCP protocol
+// ---------------------------------------------------------------------------
+
+#[test]
+fn server_streams_tokens_and_matches_oneshot_reply() {
+    use std::io::{BufRead, BufReader, Write};
+    let dir = build_artifacts("stream");
+    let ids = vec!["tiny/dense".to_string()];
+    let rt = Arc::new(ServeRuntime::start(dir, &ids, ServeConfig::default()).unwrap());
+    // runtime-only server: every variant decodes incrementally, so no
+    // fallback engine is attached (the dobi serve wiring does the same —
+    // weights load once, not twice)
+    let mut server = dobi::server::Server::start_with(None, Some(rt.clone()), 0).unwrap();
+    let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    // one-shot reply (also scheduler-served: greedy, deterministic)
+    conn.write_all(
+        b"{\"variant\":\"tiny/dense\",\"prompt\":\"The \",\"max_tokens\":8,\"temperature\":0}\n",
+    )
+    .unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let oneshot = dobi::json::Json::parse(&line).unwrap();
+    let text = oneshot.str_of("text").to_string();
+    assert!(!text.is_empty());
+    assert!(oneshot.get("tokens_per_s").and_then(|x| x.as_f64()).unwrap() > 0.0);
+
+    // streaming reply: 8 delta lines then the terminal line
+    conn.write_all(
+        b"{\"variant\":\"tiny/dense\",\"prompt\":\"The \",\"max_tokens\":8,\
+          \"temperature\":0,\"stream\":true}\n",
+    )
+    .unwrap();
+    let mut tokens = Vec::new();
+    loop {
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        let j = dobi::json::Json::parse(&line).unwrap();
+        assert!(j.get("error").is_none(), "stream errored: {line}");
+        if j.get("done").and_then(|x| x.as_bool()).unwrap_or(false) {
+            assert_eq!(j.str_of("text"), text,
+                       "streamed text must equal the one-shot greedy reply");
+            assert_eq!(j.get("n_tokens").and_then(|x| x.as_usize()), Some(8));
+            assert_eq!(j.str_of("finish"), "max_tokens");
+            break;
+        }
+        assert_eq!(j.get("index").and_then(|x| x.as_usize()), Some(tokens.len()),
+                   "delta lines arrive in order");
+        assert!(j.get("delta").is_some());
+        tokens.push(j.get("token").and_then(|x| x.as_f64()).unwrap() as i32);
+    }
+    assert_eq!(tokens.len(), 8, "one line per generated token");
+    assert_eq!(ByteTokenizer.decode(&tokens), text,
+               "streamed token ids reconstruct the one-shot text");
+
+    // malformed request still answers an error object on one line
+    conn.write_all(b"not json\n").unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(dobi::json::Json::parse(&line).unwrap().get("error").is_some());
+
+    // a variant neither the runtime nor any engine serves: error line
+    conn.write_all(b"{\"variant\":\"tiny/ghost\",\"prompt\":\"x\",\"max_tokens\":2}\n")
+        .unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    let err = dobi::json::Json::parse(&line).unwrap();
+    assert!(err.get("error").is_some(), "unservable variant must error: {line}");
+
+    drop(conn);
+    server.shutdown();
+    rt.shutdown();
+}
+
+#[test]
+fn runtime_refuses_unservable_variants() {
+    // a manifest whose store is missing: start must fail, not hang
+    let dir = std::env::temp_dir().join("dobi_serve_it_missing");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        tiny_manifest_json(dims(), 0, &[("tiny/ghost", "dense", 1.0, "nope.dobiw")]),
+    )
+    .unwrap();
+    assert!(ServeRuntime::start(dir, &["tiny/ghost".to_string()], ServeConfig::default())
+        .is_err());
+}

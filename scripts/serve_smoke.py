@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Smoke-drive a running `dobi serve` over the TCP line protocol.
+
+Usage: serve_smoke.py PORT VARIANT
+
+Sends one non-streaming and one streaming request (both greedy, so the
+outputs must agree), asserts token deltas arrive one line each, and that
+the streamed terminal text matches the one-shot reply.  Exits non-zero on
+any protocol violation — the CI `serve-smoke` job's pass/fail signal.
+"""
+import json
+import socket
+import sys
+import time
+
+
+def connect(port, attempts=60, delay=0.5):
+    last = None
+    for _ in range(attempts):
+        try:
+            return socket.create_connection(("127.0.0.1", port), timeout=30)
+        except OSError as e:
+            last = e
+            time.sleep(delay)
+    raise SystemExit(f"server never came up on :{port}: {last}")
+
+
+def main():
+    port, variant = int(sys.argv[1]), sys.argv[2]
+    conn = connect(port)
+    rfile = conn.makefile("r", encoding="utf-8")
+
+    def request(obj):
+        conn.sendall((json.dumps(obj) + "\n").encode())
+
+    base = {"variant": variant, "prompt": "The ", "max_tokens": 12, "temperature": 0}
+
+    # one-shot
+    request(base)
+    reply = json.loads(rfile.readline())
+    assert "error" not in reply, f"one-shot errored: {reply}"
+    text = reply["text"]
+    assert reply["tokens_per_s"] > 0, reply
+    print(f"[smoke] one-shot ok: {len(text)}-char text at {reply['tokens_per_s']:.0f} tok/s")
+
+    # streaming: per-token delta lines, terminal line matches the one-shot
+    request({**base, "stream": True})
+    n_deltas = 0
+    while True:
+        line = rfile.readline()
+        assert line, "connection closed mid-stream"
+        msg = json.loads(line)
+        assert "error" not in msg, f"stream errored: {msg}"
+        if msg.get("done"):
+            assert msg["text"] == text, (
+                f"greedy stream diverged from one-shot: {msg['text']!r} != {text!r}")
+            assert msg["n_tokens"] == 12, msg
+            assert msg["finish"] == "max_tokens", msg
+            break
+        assert msg["index"] == n_deltas, f"out-of-order delta: {msg}"
+        assert "delta" in msg and "token" in msg, msg
+        n_deltas += 1
+    assert n_deltas == 12, f"expected 12 delta lines, got {n_deltas}"
+    print(f"[smoke] streaming ok: {n_deltas} deltas, final text matches one-shot")
+
+    # malformed line still yields a one-line error object
+    conn.sendall(b"not json\n")
+    err = json.loads(rfile.readline())
+    assert "error" in err, err
+    print("[smoke] malformed-request error path ok")
+
+
+if __name__ == "__main__":
+    main()
