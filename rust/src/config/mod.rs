@@ -172,6 +172,11 @@ pub struct ServeConfig {
     /// generated); sessions that would outgrow it finish early with a
     /// `length` stop reason.
     pub kv_capacity: usize,
+    /// Worker threads the blocked GEMM fans output columns across inside
+    /// the decode scheduler (`dobi serve --decode-threads`); 1 keeps the
+    /// single-threaded kernel.  Threaded and serial GEMMs are
+    /// bit-identical, so this is purely a throughput knob.
+    pub decode_threads: usize,
 }
 
 impl Default for ServeConfig {
@@ -180,6 +185,7 @@ impl Default for ServeConfig {
             max_sessions: 8,
             queue_depth: 256,
             kv_capacity: crate::coordinator::MAX_ANY_SEQ,
+            decode_threads: 1,
         }
     }
 }
@@ -430,6 +436,7 @@ mod tests {
         let c = ServeConfig::default();
         assert!(c.max_sessions >= 1 && c.queue_depth >= c.max_sessions);
         assert_eq!(c.kv_capacity, crate::coordinator::MAX_ANY_SEQ);
+        assert!(c.decode_threads >= 1);
     }
 
     #[test]

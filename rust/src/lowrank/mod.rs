@@ -31,7 +31,8 @@ use crate::config::Manifest;
 use crate::runtime::{Backend, LoadStats, Loaded};
 use crate::storage::Store;
 
-pub use kernel::{matmul, Factor, FactorData, FactorizedLinear, Linear};
+pub use kernel::{decode_threads, matmul, set_decode_threads, Factor, FactorData,
+                 FactorizedLinear, Linear};
 pub use model::{FactorizedModel, KvCache};
 
 /// In-process factorized inference backend.

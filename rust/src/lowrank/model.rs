@@ -567,9 +567,14 @@ impl KvCache {
         self.len = 0;
     }
 
-    /// Host bytes of the K/V rows cached so far.
+    /// Host bytes of the K/V rows cached so far, derived from the actual
+    /// buffer contents — not a hardcoded bytes-per-element — so the
+    /// accounting stays honest if cached rows stop being f32.
     pub fn resident_bytes(&self) -> usize {
-        self.layers.len() * 2 * self.len * self.d * 4
+        self.layers
+            .iter()
+            .map(|l| std::mem::size_of_val(l.k.as_slice()) + std::mem::size_of_val(l.v.as_slice()))
+            .sum()
     }
 }
 
@@ -601,6 +606,14 @@ impl FactorizedModel {
     /// per token instead of O(len²) per window.
     pub fn forward_kv(&self, tokens: &[i32], kv: &mut KvCache,
                       image: Option<&[f32]>) -> Result<Vec<f32>> {
+        if kv.len > 0 && tokens.len() == 1 && image.is_none() {
+            // Single-token decode step: run the fused path at n=1 so the
+            // step math exists exactly ONCE — serial stepping and the
+            // scheduler's fused ticks cannot drift apart.
+            let mut refs: [&mut KvCache; 1] = [kv];
+            let mut all = self.forward_kv_multi(tokens, &mut refs)?;
+            return Ok(all.pop().expect("n=1 forward returns one row"));
+        }
         anyhow::ensure!(!self.action_head,
                         "{}: VLA heads emit one action, not a token stream — \
                          no incremental decode path", self.id);
@@ -672,6 +685,110 @@ impl FactorizedModel {
             *slot = acc;
         }
         Ok(logits)
+    }
+
+    /// Fused multi-session decode step: one single-token step for each of
+    /// `tokens.len()` *prefilled* sessions, their rows stacked into one
+    /// (n_sessions, d) batch so the trunk — and every quantized weight
+    /// tile inside the blocked GEMMs — is walked ONCE per call instead of
+    /// once per session.  RMSNorm / SwiGLU / the matmuls run over the
+    /// stacked rows; RoPE rotates each row at its own session's absolute
+    /// position; attention stays per-session against each session's own
+    /// [`KvCache`]; the logits head is batched over the stacked rows.
+    ///
+    /// Every per-row computation is the same code in the same order as
+    /// [`Self::forward_kv`] with a single token, so the fused step is
+    /// **bit-identical** to stepping the sessions serially — the
+    /// scheduler's parity contract (and its error-fallback path) relies
+    /// on this.  Validation happens up front: on `Err` no cache has been
+    /// touched, so callers can retry sessions individually.
+    pub fn forward_kv_multi(&self, tokens: &[i32],
+                            kvs: &mut [&mut KvCache]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(!self.action_head,
+                        "{}: VLA heads emit one action, not a token stream — \
+                         no incremental decode path", self.id);
+        let n = tokens.len();
+        anyhow::ensure!(n > 0 && kvs.len() == n,
+                        "{}: {} tokens for {} sessions", self.id, n, kvs.len());
+        let d = self.d_model;
+        for (i, kv) in kvs.iter().enumerate() {
+            anyhow::ensure!(kv.layers.len() == self.layers.len() && kv.d == d,
+                            "{}: KV cache {i} built for a different model", self.id);
+            anyhow::ensure!(!kv.is_empty(),
+                            "{}: session {i} not prefilled — fused steps are step-only",
+                            self.id);
+            anyhow::ensure!(kv.len + 1 <= kv.capacity,
+                            "{}: KV cache {i} overflow ({} + 1 > capacity {})",
+                            self.id, kv.len, kv.capacity);
+        }
+        // Stacked embedding rows, one per session.
+        let mut h = vec![0f32; n * d];
+        for (si, &t) in tokens.iter().enumerate() {
+            if t < 0 || t as usize >= self.vocab {
+                bail!("{}: token id {t} outside vocab {}", self.id, self.vocab);
+            }
+            h[si * d..(si + 1) * d]
+                .copy_from_slice(&self.embed[t as usize * d..(t as usize + 1) * d]);
+        }
+        let nh = self.n_heads;
+        let dh = self.d_head();
+        let half = dh / 2;
+        // Per-row RoPE tables at each session's own absolute position —
+        // the same `rope_cache(base, 1, _)` values the serial step uses.
+        let mut cos = vec![0f32; n * half];
+        let mut sin = vec![0f32; n * half];
+        for (i, kv) in kvs.iter().enumerate() {
+            let (c, s) = rope_cache(kv.len, 1, dh);
+            cos[i * half..(i + 1) * half].copy_from_slice(&c);
+            sin[i * half..(i + 1) * half].copy_from_slice(&s);
+        }
+        let mut normed = vec![0f32; n * d];
+        let mut ctx = vec![0f32; n * d];
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(&h, &layer.attn_norm, d, &mut normed);
+            let mut q = layer.wq.apply(&normed, n);
+            let mut k_new = layer.wk.apply(&normed, n);
+            let v_new = layer.wv.apply(&normed, n);
+            apply_rope(&mut q, 1, n, nh, dh, &cos, &sin);
+            apply_rope(&mut k_new, 1, n, nh, dh, &cos, &sin);
+            for slot in ctx.iter_mut() {
+                *slot = 0.0;
+            }
+            for (i, kv) in kvs.iter_mut().enumerate() {
+                let lkv = &mut kv.layers[li];
+                lkv.k.extend_from_slice(&k_new[i * d..(i + 1) * d]);
+                lkv.v.extend_from_slice(&v_new[i * d..(i + 1) * d]);
+                causal_attend(&q[i * d..(i + 1) * d], &lkv.k, &lkv.v, 1, kv.len + 1,
+                              nh, dh, &mut ctx[i * d..(i + 1) * d]);
+            }
+            let attn = layer.wo.apply(&ctx, n);
+            add_inplace(&mut h, &attn);
+            rmsnorm(&h, &layer.mlp_norm, d, &mut normed);
+            let out = mlp(&normed, n, layer, None);
+            add_inplace(&mut h, &out);
+        }
+        for kv in kvs.iter_mut() {
+            kv.len += 1;
+        }
+        // Batched single-row logits head: final norm + tied LM head over
+        // the n stacked last-position rows.
+        rmsnorm(&h, &self.final_norm, d, &mut normed);
+        let v = self.vocab;
+        let mut all = Vec::with_capacity(n);
+        for i in 0..n {
+            let nrow = &normed[i * d..(i + 1) * d];
+            let mut logits = vec![0f32; v];
+            for (vi, slot) in logits.iter_mut().enumerate() {
+                let erow = &self.embed[vi * d..(vi + 1) * d];
+                let mut acc = 0f32;
+                for t in 0..d {
+                    acc += nrow[t] * erow[t];
+                }
+                *slot = acc;
+            }
+            all.push(logits);
+        }
+        Ok(all)
     }
 }
 
@@ -1005,6 +1122,85 @@ mod tests {
         vla.act_head = Some(vec![0.1; vla.d_model * 5]);
         let mut kv_vla = vla.new_kv_cache(8);
         assert!(vla.forward_kv(&[1], &mut kv_vla, None).is_err());
+    }
+
+    #[test]
+    fn fused_multi_step_bit_identical_to_serial_steps() {
+        for factorized in [false, true] {
+            let m = tiny_model(dims(), 0, factorized);
+            // three sessions at *different* context lengths (distinct RoPE
+            // offsets per stacked row — the hard part of fusing)
+            let prompts: [Vec<i32>; 3] = [
+                (0..5).map(|i| (i * 11) % 61).collect(),
+                (0..9).map(|i| (i * 7 + 2) % 61).collect(),
+                (0..2).map(|i| (i * 13 + 5) % 61).collect(),
+            ];
+            let mut serial: Vec<KvCache> = Vec::new();
+            let mut fused: Vec<KvCache> = Vec::new();
+            let mut last_serial = Vec::new();
+            for p in &prompts {
+                let mut a = m.new_kv_cache(32);
+                last_serial.push(m.forward_kv(p, &mut a, None).unwrap());
+                serial.push(a);
+                let mut b = m.new_kv_cache(32);
+                m.forward_kv(p, &mut b, None).unwrap();
+                fused.push(b);
+            }
+            for round in 0..5 {
+                // greedy next token per session off the serial logits
+                let toks: Vec<i32> = last_serial
+                    .iter()
+                    .map(|l| crate::mathx::argmax(l) as i32)
+                    .collect();
+                for (i, kv) in serial.iter_mut().enumerate() {
+                    last_serial[i] = m.forward_kv(&[toks[i]], kv, None).unwrap();
+                }
+                let mut refs: Vec<&mut KvCache> = fused.iter_mut().collect();
+                let got = m.forward_kv_multi(&toks, &mut refs).unwrap();
+                assert_eq!(got, last_serial,
+                           "fused round {round} drifted (factorized={factorized})");
+            }
+            for (a, b) in serial.iter().zip(&fused) {
+                assert_eq!(a.len(), b.len());
+            }
+        }
+    }
+
+    #[test]
+    fn fused_multi_step_validates_without_mutating() {
+        let m = tiny_model(dims(), 0, false);
+        let mut ready = m.new_kv_cache(8);
+        m.forward_kv(&[1, 2, 3], &mut ready, None).unwrap();
+        // un-prefilled partner: the whole call must fail...
+        let mut empty = m.new_kv_cache(8);
+        {
+            let mut refs: Vec<&mut KvCache> = vec![&mut ready, &mut empty];
+            assert!(m.forward_kv_multi(&[4, 5], &mut refs).is_err());
+        }
+        // ...without having touched the prefilled cache
+        assert_eq!(ready.len(), 3);
+        // full partner: same contract
+        let mut full = m.new_kv_cache(4);
+        m.forward_kv(&[1, 2, 3, 4], &mut full, None).unwrap();
+        {
+            let mut refs: Vec<&mut KvCache> = vec![&mut ready, &mut full];
+            assert!(m.forward_kv_multi(&[5, 6], &mut refs).is_err());
+        }
+        assert_eq!(ready.len(), 3);
+        assert_eq!(full.len(), 4);
+        // arity mismatch and token OOB
+        {
+            let mut refs: Vec<&mut KvCache> = vec![&mut ready];
+            assert!(m.forward_kv_multi(&[1, 2], &mut refs).is_err());
+            assert!(m.forward_kv_multi(&[61], &mut refs).is_err());
+        }
+        // fused-vs-serial single-session degenerate case still exact
+        let mut alone = m.new_kv_cache(8);
+        m.forward_kv(&[1, 2, 3], &mut alone, None).unwrap();
+        let want = m.forward_kv(&[7], &mut ready, None).unwrap();
+        let mut refs: Vec<&mut KvCache> = vec![&mut alone];
+        let got = m.forward_kv_multi(&[7], &mut refs).unwrap();
+        assert_eq!(got[0], want);
     }
 
     #[test]

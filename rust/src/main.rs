@@ -76,8 +76,10 @@ fn run(args: &Args) -> Result<()> {
                  eval --variant ID [--tasks]  PPL on all corpora (+ task suites)\n\
                  generate --variant ID --prompt TEXT [--tokens N] [--temperature T]\n\
                  serve --variants A,B --port P [--max-sessions N]\n\
-                 \x20     [--stream | --no-stream]  incremental decode runtime\n\
-                 \x20     (KV cache + continuous batching + token streaming)\n\
+                 \x20     [--decode-threads T] [--stream | --no-stream]\n\
+                 \x20     incremental decode runtime (KV cache + continuous\n\
+                 \x20     batching + fused multi-session steps + streaming;\n\
+                 \x20     T > 1 threads the blocked GEMM column-wise)\n\
                  memsim --model NAME [--capacity-mb M] [--bandwidth-mbs B]\n\
                  parity                       pallas vs xla HLO numerics (pjrt only)\n\
                  \n\
@@ -287,6 +289,7 @@ fn serve(args: &Args) -> Result<()> {
     let serve_cfg = ServeConfig {
         max_sessions: args.usize_or("max-sessions", 8),
         queue_depth: args.usize_or("queue-depth", 256),
+        decode_threads: args.usize_or("decode-threads", 1),
         ..Default::default()
     };
     let runtime = if args.has("no-stream") {

@@ -76,16 +76,28 @@ impl Histogram {
     }
 
     pub fn observe(&self, d: Duration) {
-        let us = d.as_micros() as u64;
+        self.observe_raw(d.as_micros() as u64, d.as_secs_f64());
+    }
+
+    /// Record a dimensionless value (e.g. a fused batch size) — same
+    /// reservoir/percentile machinery; the log-bucket counters are
+    /// latency-shaped and not meaningful for these, stats come from the
+    /// reservoir.  Name such histograms `*_size` so [`Registry::render`]
+    /// omits the seconds label.
+    pub fn observe_value(&self, v: f64) {
+        self.observe_raw((v * 1e6) as u64, v);
+    }
+
+    fn observe_raw(&self, us: u64, v: f64) {
         let idx = self.bounds_us.partition_point(|&b| b < us);
         self.buckets[idx].fetch_add(1, Ordering::Relaxed);
         let mut s = self.samples.lock().unwrap();
         if s.len() < self.cap {
-            s.push(d.as_secs_f64());
+            s.push(v);
         } else {
             // reservoir: overwrite pseudo-randomly for long runs
             let i = (us as usize * 2654435761) % self.cap;
-            s[i] = d.as_secs_f64();
+            s[i] = v;
         }
     }
 
@@ -145,8 +157,11 @@ impl Registry {
         }
         for (k, h) in self.histograms.lock().unwrap().iter() {
             let s = h.stats();
+            // dimensionless histograms (observe_value: `*_size` batch
+            // sizes etc.) get no seconds label
+            let u = if k.ends_with("_size") { "" } else { "s" };
             out.push_str(&format!(
-                "{k} count={} mean={:.6}s p50={:.6}s p95={:.6}s p99={:.6}s\n",
+                "{k} count={} mean={:.6}{u} p50={:.6}{u} p95={:.6}{u} p99={:.6}{u}\n",
                 h.count(), s.mean, s.p50, s.p95, s.p99
             ));
         }
@@ -208,6 +223,18 @@ mod tests {
         g.set(-4);
         assert_eq!(g.get(), -4);
         assert!(r.render().contains("active -4"));
+    }
+
+    #[test]
+    fn histogram_observes_raw_values() {
+        let h = Histogram::default();
+        for v in [1.0f64, 2.0, 3.0, 4.0] {
+            h.observe_value(v);
+        }
+        let s = h.stats();
+        assert_eq!(h.count(), 4);
+        assert!((s.mean - 2.5).abs() < 1e-9);
+        assert!(s.p50 >= 2.0 && s.p50 <= 3.0);
     }
 
     #[test]

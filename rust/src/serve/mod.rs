@@ -14,8 +14,12 @@
 //! * [`scheduler`] — [`scheduler::ServeRuntime`]: a continuous-batching
 //!   scheduler thread that owns the loaded models, admits sessions
 //!   mid-flight (FIFO-fair via the coordinator's [`DynamicBatcher`]
-//!   grouping), steps every active session per tick grouped by variant,
-//!   and evicts on stop-token / `max_tokens` / KV capacity.
+//!   grouping), advances each tick's live sessions per variant through
+//!   ONE fused multi-session trunk walk
+//!   ([`crate::lowrank::FactorizedModel::forward_kv_multi`] — weight
+//!   tiles dequantize once per tick, not once per session; bit-identical
+//!   to serial stepping), and evicts on stop-token / `max_tokens` / KV
+//!   capacity.
 //! * [`stream`]    — the `{"id", "delta", "done"}` token-streaming framing
 //!   on the existing TCP line protocol (`"stream": true`), plus the
 //!   scheduler-backed one-shot reply.

@@ -55,6 +55,28 @@ impl DecodeSession {
         Ok(logits)
     }
 
+    /// Fused step: advance every session by one token in a single batched
+    /// trunk walk ([`FactorizedModel::forward_kv_multi`]) — each weight
+    /// tile dequantizes once for the whole group instead of once per
+    /// session.  `tokens[i]` goes to `sessions[i]`; all sessions must
+    /// share `model`'s variant and be prefilled.  Bit-identical to
+    /// calling [`Self::step`] on each session in turn; on `Err` no
+    /// session has advanced, so the caller can fall back to serial steps.
+    pub fn step_many(model: &FactorizedModel, sessions: &mut [&mut DecodeSession],
+                     tokens: &[i32]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(sessions.len() == tokens.len(),
+                        "{} sessions for {} tokens", sessions.len(), tokens.len());
+        for s in sessions.iter() {
+            anyhow::ensure!(!s.kv.is_empty(), "session {}: step before prefill", s.id);
+        }
+        let mut kvs: Vec<&mut KvCache> = sessions.iter_mut().map(|s| &mut s.kv).collect();
+        let logits = model.forward_kv_multi(tokens, &mut kvs)?;
+        for s in sessions.iter_mut() {
+            s.n_generated += 1;
+        }
+        Ok(logits)
+    }
+
     /// Attended positions so far (prefix + prompt + generated).
     pub fn positions(&self) -> usize {
         self.kv.len()
@@ -106,6 +128,31 @@ mod tests {
         assert_eq!(logits.len(), m.vocab);
         assert_eq!((s.positions(), s.generated(), s.remaining()), (6, 1, 10));
         assert!(s.kv_bytes() > 0);
+    }
+
+    #[test]
+    fn step_many_matches_serial_steps() {
+        let m = model();
+        let mut a1 = DecodeSession::new(1, "tiny/x", &m, 16);
+        let mut a2 = DecodeSession::new(2, "tiny/x", &m, 16);
+        let mut b1 = DecodeSession::new(3, "tiny/x", &m, 16);
+        let mut b2 = DecodeSession::new(4, "tiny/x", &m, 16);
+        let l1 = a1.prefill(&m, &[1, 2, 3], None).unwrap();
+        let l2 = a2.prefill(&m, &[4, 5], None).unwrap();
+        b1.prefill(&m, &[1, 2, 3], None).unwrap();
+        b2.prefill(&m, &[4, 5], None).unwrap();
+        let t1 = argmax(&l1) as i32;
+        let t2 = argmax(&l2) as i32;
+        let s1 = a1.step(&m, t1).unwrap();
+        let s2 = a2.step(&m, t2).unwrap();
+        let fused = DecodeSession::step_many(&m, &mut [&mut b1, &mut b2], &[t1, t2]).unwrap();
+        assert_eq!(fused, vec![s1, s2], "fused step must be bit-identical to serial");
+        assert_eq!((b1.generated(), b2.generated()), (1, 1));
+        assert_eq!(b1.positions(), a1.positions());
+        // an un-prefilled member fails the whole call without advancing anyone
+        let mut c = DecodeSession::new(5, "tiny/x", &m, 16);
+        assert!(DecodeSession::step_many(&m, &mut [&mut b1, &mut c], &[t1, t2]).is_err());
+        assert_eq!(b1.generated(), 1);
     }
 
     #[test]

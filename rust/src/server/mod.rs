@@ -61,6 +61,17 @@ impl Server {
             while !stop2.load(Ordering::Relaxed) {
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        // Reap finished handlers before tracking another:
+                        // under connection churn the vec would otherwise
+                        // grow one dead JoinHandle per client forever.
+                        let mut i = 0;
+                        while i < clients.len() {
+                            if clients[i].is_finished() {
+                                let _ = clients.swap_remove(i).join();
+                            } else {
+                                i += 1;
+                            }
+                        }
                         let eng = engine.clone();
                         let rt = runtime.clone();
                         let stop3 = stop2.clone();

@@ -10,7 +10,7 @@ use dobi::config::{CompressConfig, Manifest, Precision, ServeConfig};
 use dobi::lowrank::synth::{tiny_manifest_json, tiny_store_tensors, SynthStyle, TinyDims};
 use dobi::lowrank::FactorizedModel;
 use dobi::mathx::argmax;
-use dobi::serve::{DecodeSession, ServeRuntime};
+use dobi::serve::{DecodeSession, FinishReason, GenEvent, ServeRuntime, SessionRequest};
 use dobi::storage::{write_store, Store};
 use dobi::tokenizer::ByteTokenizer;
 
@@ -160,6 +160,128 @@ fn concurrent_sessions_match_serial_greedy_decode() {
     assert_eq!(st.sessions_finished, prompts.len() as u64);
     assert_eq!(st.tokens_emitted, (prompts.len() * n_tokens) as u64);
     rt.shutdown();
+}
+
+/// Serial single-session reference mirroring the scheduler's admission
+/// budget (prompt tail keeps priority, generation clipped to what the KV
+/// cache can still hold) — what any session must emit no matter how many
+/// neighbors shared its fused ticks.
+fn serial_reference(m: &Manifest, variant: &str, prompt: &[i32], max_tokens: usize,
+                    cap: usize) -> (Vec<i32>, FinishReason) {
+    let v = m.variant(variant).unwrap();
+    let store = Store::open(&m.path(&v.weights)).unwrap();
+    let model = FactorizedModel::from_store(&m.models["tiny"], v, &store).unwrap();
+    let mut prompt = prompt.to_vec();
+    let keep = prompt.len().min(cap - 1);
+    if keep < prompt.len() {
+        prompt.drain(..prompt.len() - keep);
+    }
+    let budget = max_tokens.min(cap - keep + 1);
+    let clipped = budget < max_tokens;
+    let mut session = DecodeSession::new(1, variant, &model, cap);
+    let mut logits = session.prefill(&model, &prompt, None).unwrap();
+    let mut toks = Vec::new();
+    loop {
+        let next = argmax(&logits) as i32;
+        toks.push(next);
+        if toks.len() >= budget || session.remaining() == 0 {
+            break;
+        }
+        logits = session.step(&model, next).unwrap();
+    }
+    let reason = if toks.len() >= budget {
+        if clipped { FinishReason::Length } else { FinishReason::MaxTokens }
+    } else {
+        FinishReason::Length
+    };
+    (toks, reason)
+}
+
+/// Open one scheduler session and collect its full stream.
+fn run_to_completion(rt: &ServeRuntime, variant: &str, prompt: Vec<i32>,
+                     max_tokens: usize) -> (Vec<i32>, FinishReason) {
+    let (etx, erx) = std::sync::mpsc::channel();
+    rt.open(SessionRequest {
+        variant: variant.to_string(),
+        prompt,
+        image: None,
+        max_tokens,
+        temperature: 0.0,
+        seed: 7,
+        stop_token: None,
+        events: etx,
+    })
+    .unwrap();
+    let mut toks = Vec::new();
+    for ev in erx {
+        match ev {
+            GenEvent::Token { token, .. } => toks.push(token),
+            GenEvent::Done { reason, n_tokens, .. } => {
+                assert_eq!(n_tokens, toks.len());
+                return (toks, reason);
+            }
+            GenEvent::Error(e) => panic!("session failed: {e}"),
+        }
+    }
+    panic!("stream ended without Done");
+}
+
+#[test]
+fn fused_concurrent_sessions_match_serial_incl_midflight_join_and_kv_eviction() {
+    let dir = build_artifacts("fused");
+    let m = Manifest::load(&dir).unwrap();
+    let cap = 48usize;
+    // five sessions across both variants; the last one's budget outruns
+    // the KV capacity, so it decodes long past everyone else and finishes
+    // evicted with a `length` reason
+    let specs: [(&str, &str, usize); 5] = [
+        ("tiny/dense", "a tale of fused decoding", 12),
+        ("tiny/dobi_60", "some longer prompt here", 12),
+        ("tiny/dense", "mid-size words", 12),
+        ("tiny/dobi_60", "yet another different one!", 12),
+        ("tiny/dense", "short", 400),
+    ];
+    let serial: Vec<(Vec<i32>, FinishReason)> = specs
+        .iter()
+        .map(|(variant, prompt, max_tokens)| {
+            serial_reference(&m, variant, &ByteTokenizer.encode(prompt), *max_tokens, cap)
+        })
+        .collect();
+    // sanity on the fixture itself: the long session really is clipped
+    assert_eq!(serial[4].1, FinishReason::Length);
+    assert!(serial[4].0.len() > 12, "eviction session should outlive the others");
+    // concurrent: max_sessions 3 < 5 sessions, so the tail joins
+    // mid-flight of the others' decode (continuous batching into fused
+    // ticks); decode_threads 2 runs the same ticks on the threaded GEMM
+    let ids = vec!["tiny/dense".to_string(), "tiny/dobi_60".to_string()];
+    let rt = Arc::new(
+        ServeRuntime::start(
+            dir,
+            &ids,
+            ServeConfig { max_sessions: 3, kv_capacity: cap, decode_threads: 2,
+                          ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for (variant, prompt, max_tokens) in specs {
+        let rt = rt.clone();
+        let prompt = ByteTokenizer.encode(prompt);
+        handles.push(std::thread::spawn(move || {
+            run_to_completion(&rt, variant, prompt, max_tokens)
+        }));
+    }
+    let concurrent: Vec<(Vec<i32>, FinishReason)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (i, (got, want)) in concurrent.iter().zip(&serial).enumerate() {
+        assert_eq!(got, want, "session {i}: fused/concurrent decode diverged from serial");
+    }
+    rt.shutdown(); // scheduler joined: counters and gauges are final
+    let st = rt.stats();
+    assert_eq!(st.sessions_finished, specs.len() as u64);
+    assert_eq!(st.active_sessions, 0);
+    assert_eq!(st.tokens_emitted,
+               serial.iter().map(|(t, _)| t.len() as u64).sum::<u64>());
 }
 
 // ---------------------------------------------------------------------------

@@ -5,12 +5,17 @@ Usage: serve_smoke.py PORT VARIANT
 
 Sends one non-streaming and one streaming request (both greedy, so the
 outputs must agree), asserts token deltas arrive one line each, and that
-the streamed terminal text matches the one-shot reply.  Exits non-zero on
-any protocol violation — the CI `serve-smoke` job's pass/fail signal.
+the streamed terminal text matches the one-shot reply.  Then drives TWO
+simultaneous streaming clients (distinct prompts) so the scheduler's
+fused multi-session step is exercised end to end: both streams must be
+well-ordered and match their own one-shot greedy references.  Exits
+non-zero on any protocol violation — the CI `serve-smoke` job's
+pass/fail signal.
 """
 import json
 import socket
 import sys
+import threading
 import time
 
 
@@ -68,6 +73,64 @@ def main():
     err = json.loads(rfile.readline())
     assert "error" in err, err
     print("[smoke] malformed-request error path ok")
+
+    # two SIMULTANEOUS streaming clients: distinct prompts, long enough
+    # generations that their decode windows overlap — the scheduler fuses
+    # their trunk walks into one batched step per tick.  Greedy output
+    # must be byte-identical to each prompt's one-shot reference (the
+    # fused step is bit-identical to serial stepping).
+    prompts = ["The quick ", "A different opening "]
+    references = []
+    for p in prompts:
+        request({"variant": variant, "prompt": p, "max_tokens": 48, "temperature": 0})
+        ref = json.loads(rfile.readline())
+        assert "error" not in ref, f"reference one-shot errored: {ref}"
+        references.append(ref["text"])
+
+    def stream_one(prompt, out, errs, idx):
+        # runs in a worker thread: exceptions are collected and re-raised
+        # by main after join — a thread's AssertionError alone would not
+        # fail the process (CI would go green on a protocol violation)
+        try:
+            c = connect(port)
+            rf = c.makefile("r", encoding="utf-8")
+            c.sendall((json.dumps({"variant": variant, "prompt": prompt,
+                                   "max_tokens": 48, "temperature": 0,
+                                   "stream": True}) + "\n").encode())
+            n = 0
+            while True:
+                msg = json.loads(rf.readline())
+                assert "error" not in msg, f"client {idx} stream errored: {msg}"
+                if msg.get("done"):
+                    out[idx] = msg["text"]
+                    break
+                assert msg["index"] == n, f"client {idx} out-of-order delta: {msg}"
+                n += 1
+            assert n == 48, f"client {idx}: expected 48 deltas, got {n}"
+            c.close()
+        except BaseException as e:  # noqa: BLE001 - re-raised in main
+            errs[idx] = e
+
+    texts = [None, None]
+    errors = [None, None]
+    threads = [threading.Thread(target=stream_one, args=(p, texts, errors, i))
+               for i, p in enumerate(prompts)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for e in errors:
+        if e is not None:
+            raise e
+    for i, (got, want) in enumerate(zip(texts, references)):
+        assert got == want, (
+            f"client {i}: concurrent stream diverged from serial one-shot: "
+            f"{got!r} != {want!r}")
+    if references[0] == references[1]:
+        # not a protocol violation (a degenerate synth model could emit
+        # prompt-independent streams), but worth surfacing
+        print("[smoke] warning: both prompts produced identical text")
+    print("[smoke] two concurrent streaming clients ok: fused decode matches serial")
 
 
 if __name__ == "__main__":
