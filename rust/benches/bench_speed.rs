@@ -8,13 +8,13 @@
 //! `BENCH_speed.json` / `BENCH_compress.json` (ratio, tok/s, params
 //! kept) so the perf trajectory is tracked across PRs.
 //!
-//!   cargo bench --bench bench_speed -- lowrank compress decode fig4 table10 table12 table23 engine batcher
+//!   cargo bench --bench bench_speed -- lowrank compress alloc decode fig4 table10 table12 table23 engine batcher
 
 use std::sync::Arc;
 
 use dobi::bench::{artifacts_available, artifacts_dir, bench, bench_for, write_bench_json,
                   Table};
-use dobi::config::{CompressConfig, EngineConfig, Manifest, Precision};
+use dobi::config::{AllocMode, CompressConfig, EngineConfig, Manifest, Precision};
 use dobi::coordinator::Engine;
 use dobi::json::Json;
 use dobi::lowrank::synth::{tiny_model, TinyDims};
@@ -31,6 +31,7 @@ fn main() {
     // Native sections first: they run on a fresh checkout, no artifacts.
     if want("lowrank") { lowrank_sweep(); }
     if want("compress") { compress_bench(); }
+    if want("alloc") { alloc_bench(); }
     if want("decode") { decode_bench(); }
 
     if !artifacts_available() {
@@ -219,6 +220,95 @@ fn compress_bench() {
     }
     println!("shape to check: tok/s grows as the ratio drops (rank-k matmuls do less\n\
               work); CE delta grows smoothly — the compression/quality frontier.");
+}
+
+/// Allocation-mode sweep: greedy waterfill vs the learned differentiable
+/// truncation-position optimizer at matched stored-param budgets on the
+/// synth nano twin.  Each ratio compresses once with the waterfill, then
+/// hands the learned allocator the waterfill's *achieved* budget — the
+/// apples-to-apples comparison the acceptance test pins: eval CE of the
+/// learned allocation must never exceed the waterfill's (the rounding is
+/// waterfill-guarded, so ties collapse to identical plans).  Emits
+/// `BENCH_alloc.json` with eval CE, the discrete surrogate losses, which
+/// rounding the guard picked, and the optimizer wall-clock.
+fn alloc_bench() {
+    use dobi::compress::{calib, compress_model, eval_loss, AllocPick};
+    let dims = TinyDims::nano();
+    let dense = tiny_model(dims, 0, false);
+    let corpus = calib::synth_calib_tokens(256, 4096, 19);
+    let l_dense = eval_loss(&dense, &corpus, 2, 16, 6, 5).expect("dense eval");
+    let mut t = Table::new(
+        "Allocation modes — waterfill vs learned at matched budgets (synth nano, f32)",
+        &["ratio", "budget", "wf CE", "learned CE", "delta", "picked", "train s"],
+    );
+    let mut json_rows: Vec<Json> = Vec::new();
+    for ratio in [0.3f64, 0.4, 0.6] {
+        let wf_cfg = CompressConfig { ratio, precision: Precision::F32, ..Default::default() };
+        let wf = compress_model(&dense, "tiny", &wf_cfg, &corpus).expect("waterfill");
+        let learned_cfg = CompressConfig {
+            ratio,
+            budget: Some(wf.stored_params), // matched stored-param budget
+            precision: Precision::F32,
+            alloc: AllocMode::Learned,
+            ..Default::default()
+        };
+        let t0 = std::time::Instant::now();
+        let learned = compress_model(&dense, "tiny", &learned_cfg, &corpus).expect("learned");
+        let train_s = t0.elapsed().as_secs_f64();
+        assert!(learned.stored_params <= wf.stored_params,
+                "learned overspent the matched budget");
+        let ce_wf = eval_loss(&wf.reference, &corpus, 2, 16, 6, 5).expect("wf eval");
+        let ce_learned =
+            eval_loss(&learned.reference, &corpus, 2, 16, 6, 5).expect("learned eval");
+        let report = learned.train_report.as_ref().expect("learned report");
+        let picked = match report.picked {
+            AllocPick::Learned => "learned",
+            AllocPick::Waterfill => "waterfill",
+        };
+        t.row(vec![
+            format!("{ratio:.1}"),
+            format!("{}", wf.stored_params),
+            format!("{ce_wf:.4}"),
+            format!("{ce_learned:.4}"),
+            format!("{:+.5}", ce_learned - ce_wf),
+            picked.to_string(),
+            format!("{train_s:.2}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("ratio", Json::Num(ratio)),
+            ("budget_params", Json::Num(wf.stored_params as f64)),
+            ("waterfill_eval_ce", Json::Num(ce_wf)),
+            ("learned_eval_ce", Json::Num(ce_learned)),
+            ("eval_ce_delta", Json::Num(ce_learned - ce_wf)),
+            ("dense_eval_ce", Json::Num(l_dense)),
+            ("waterfill_surrogate", Json::Num(report.waterfill_surrogate)),
+            ("learned_surrogate", Json::Num(report.learned_surrogate)),
+            ("picked", Json::Str(picked.into())),
+            ("train_iters", Json::Num(report.iters as f64)),
+            ("train_seconds", Json::Num(train_s)),
+            ("lambda", Json::Num(report.lambda)),
+        ]));
+    }
+    t.print();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str("alloc_sweep".into())),
+        ("model", Json::obj(vec![
+            ("vocab", Json::Num(dims.vocab as f64)),
+            ("d_model", Json::Num(dims.d as f64)),
+            ("n_layers", Json::Num(dims.layers as f64)),
+            ("d_ff", Json::Num(dims.ff as f64)),
+        ])),
+        ("dense_eval_ce", Json::Num(l_dense)),
+        ("results", Json::Arr(json_rows)),
+    ]);
+    match write_bench_json("alloc", &doc) {
+        Ok(p) => println!("[bench_speed] wrote {}", p.display()),
+        Err(e) => eprintln!("[bench_speed] could not write BENCH_alloc.json: {e}"),
+    }
+    println!("shape to check: learned CE <= waterfill CE at every matched budget (the\n\
+              guard makes SURROGATE regressions impossible and ties emit the greedy plan\n\
+              bit-for-bit, so CE deltas are 0 unless the optimizer strictly improves the\n\
+              surrogate — where better CE is expected, not structurally guaranteed).");
 }
 
 /// Incremental decode vs the sliding-window loop it replaced: prefill a

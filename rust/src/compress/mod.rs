@@ -10,8 +10,11 @@
 //!   in/out, f64 accumulation, deterministic).
 //! * [`calib`]    — calibration windows through the existing low-rank
 //!   forward, tapping every compression target's input.
-//! * [`rank`]     — SVD-LLM-style whitened truncation-loss spectra and
-//!   greedy waterfilling of ranks under a global parameter budget.
+//! * [`rank`]     — SVD-LLM-style whitened truncation-loss spectra, the
+//!   [`rank::RankAllocator`] trait, and the greedy waterfill baseline.
+//! * [`train`]    — the differentiable truncation-position optimizer
+//!   (autodiff tape, sigmoid truncation gates, Taylor-stabilized SVD
+//!   gradients, Adam + exact budget renormalization): `--alloc learned`.
 //! * [`remap`]    — IPCA dominant-subspace tracking, EYM-optimal weight
 //!   reconstruction `W~ = W V V^T`, and the symmetric-sqrt factor split.
 //! * [`pipeline`] — the whole-model driver + `.dobiw`/manifest writers
@@ -23,13 +26,16 @@ pub mod pipeline;
 pub mod rank;
 pub mod remap;
 pub mod svd;
+pub mod train;
 
 pub use calib::{collect, sample_windows, synth_calib_tokens, tap_key, Calibration};
-pub use pipeline::{append_artifacts, compress_model, eval_loss, write_artifacts,
-                   CompressedArtifact};
-pub use rank::{allocate_ranks, whitened_spectrum, whitener, TargetSpectrum, Whitener};
+pub use pipeline::{append_artifacts, append_artifacts_opts, compress_model, eval_loss,
+                   gc_orphan_stores, write_artifacts, CompressedArtifact};
+pub use rank::{allocate_ranks, whitened_spectrum, whitener, RankAllocator, TargetSpectrum,
+               Waterfill, Whitener};
 pub use remap::{reconstruct_factors, Ipca};
-pub use svd::{cholesky_lower, svd_thin, Svd};
+pub use svd::{cholesky_lower, set_svd_threads, svd_thin, svd_thin_f64, Svd, SvdF64};
+pub use train::{learn_ranks, AllocPick, LearnedAlloc, TrainConfig, TrainReport};
 
 /// Test helpers shared by this subsystem's unit-test modules.
 #[cfg(test)]

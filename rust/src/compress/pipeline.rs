@@ -10,7 +10,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::config::{CompressConfig, Precision};
+use crate::config::{AllocMode, CompressConfig, Precision};
 use crate::json::Json;
 use crate::lowrank::kernel::{Factor, FactorData, FactorizedLinear, Linear};
 use crate::lowrank::model::{target_dims, LayerWeights, LAYER_MATS};
@@ -20,8 +20,10 @@ use crate::runtime::ForwardModel;
 use crate::storage::{f16_tensor, f32_tensor, i8_tensor, write_store, Tensor};
 
 use super::calib;
-use super::rank::{allocate_ranks, whitener, TargetSpectrum, Whitener};
+use super::rank::{whitener, RankAllocator, TargetSpectrum, Waterfill, Whitener};
 use super::remap::reconstruct_factors;
+use super::svd::set_svd_threads;
+use super::train::{LearnedAlloc, TrainReport};
 
 /// Everything `dobi compress` produces for one model: the store tensors,
 /// the rank plan and its accounting, and an in-memory f32-factor twin
@@ -40,6 +42,10 @@ pub struct CompressedArtifact {
     pub achieved_ratio: f64,
     pub payload_bytes: usize,
     pub reference: FactorizedModel,
+    /// Rank-allocation mode that produced the plan ("waterfill"/"learned").
+    pub alloc: String,
+    /// Optimizer diagnostics when the learned allocator ran.
+    pub train_report: Option<TrainReport>,
 }
 
 fn dense_weight(lin: &Linear, id: &str) -> Result<Vec<f32>> {
@@ -85,12 +91,17 @@ fn push_factor_tensors(out: &mut Vec<Tensor>, name: &str, w1: &[f32], w2: &[f32]
 }
 
 /// Compress a dense model: calibrate, search truncation positions under
-/// the global budget, reconstruct weights from truncated activations, and
-/// emit remap-quantized store tensors plus the in-memory reference twin.
+/// the global budget (greedy waterfill or the learned differentiable
+/// optimizer, per `cfg.alloc`), reconstruct weights from truncated
+/// activations, and emit remap-quantized store tensors plus the in-memory
+/// reference twin.
 pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressConfig,
                       calib_tokens: &[i32]) -> Result<CompressedArtifact> {
     anyhow::ensure!(cfg.ratio > 0.0 && cfg.ratio <= 1.0,
                     "ratio {} outside (0, 1]", cfg.ratio);
+    // Jacobi sweep workers for every SVD this run performs (whitened
+    // spectra + IPCA folds); results are bit-identical at any count.
+    set_svd_threads(cfg.svd_threads);
     let d = dense.d_model;
     let ff = dense.d_ff;
 
@@ -124,9 +135,21 @@ pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressC
         spectra.push(wh.spectrum(name, w, n)?);
     }
 
-    // Global budget (stored params, remapped accounting) -> per-target ranks.
+    // Global budget (stored params, remapped accounting) -> per-target
+    // ranks, through the configured allocator behind the one
+    // `RankAllocator` trait.  The learned impl additionally parks its
+    // optimizer diagnostics, drained here for the CLI/bench reports.
     let budget = cfg.budget.unwrap_or((cfg.ratio * total_params as f64).round() as usize);
-    let (ks, _) = allocate_ranks(&spectra, budget.saturating_sub(fixed_params), cfg.k_min);
+    let target_budget = budget.saturating_sub(fixed_params);
+    let learned = match cfg.alloc {
+        AllocMode::Learned => Some(LearnedAlloc::new(cfg.train_iters, cfg.train_lr)),
+        AllocMode::Waterfill => None,
+    };
+    let allocator: &dyn RankAllocator =
+        learned.as_ref().map(|l| l as &dyn RankAllocator).unwrap_or(&Waterfill);
+    debug_assert_eq!(allocator.name(), cfg.alloc.to_string());
+    let (ks, _) = allocator.allocate(&spectra, target_budget, cfg.k_min);
+    let train_report: Option<TrainReport> = learned.as_ref().and_then(|l| l.take_report());
 
     // Reconstruct + quantize each target; assemble the reference twin.
     let mut tensors = Vec::new();
@@ -175,11 +198,17 @@ pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressC
 
     // Name by the effective target ratio so `--budget` runs are labeled
     // truthfully rather than inheriting the unused default `--ratio`.
+    // Learned-allocation variants carry a `-learned` tag so both modes of
+    // the same ratio can coexist in one appended manifest.
     let name_ratio = match cfg.budget {
         Some(b) => b as f64 / total_params as f64,
         None => cfg.ratio,
     };
-    let variant_id = format!("{model_name}/dobi_{:.0}", name_ratio * 100.0);
+    let alloc_tag = match cfg.alloc {
+        AllocMode::Waterfill => "",
+        AllocMode::Learned => "-learned",
+    };
+    let variant_id = format!("{model_name}/dobi{alloc_tag}_{:.0}", name_ratio * 100.0);
     let payload_bytes = tensors.iter().map(|t| t.data.len()).sum();
     let reference = FactorizedModel {
         id: variant_id.clone(),
@@ -208,6 +237,8 @@ pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressC
         achieved_ratio: stored_params as f64 / total_params as f64,
         payload_bytes,
         reference,
+        alloc: cfg.alloc.to_string(),
+        train_report,
     })
 }
 
@@ -269,6 +300,7 @@ fn variant_json(art: &CompressedArtifact, weights_file: &str) -> Json {
         ("bytes", jnum(art.payload_bytes)),
         ("ref_ppl", Json::Obj(BTreeMap::new())),
         ("ranks", ranks),
+        ("alloc", Json::Str(art.alloc.clone())),
     ])
 }
 
@@ -292,7 +324,11 @@ pub fn manifest_json(art: &CompressedArtifact, weights_file: &str,
 
 /// Write a self-contained artifacts dir (`manifest.json` + the compressed
 /// `.dobiw` store) loadable by `Manifest::load` + the native backend.
-/// Returns the weights path.
+/// Deliberately does NOT garbage-collect stores a previous manifest in
+/// the dir referenced: an accidental `--out` into a populated artifacts
+/// dir already clobbers the manifest, but the store files stay
+/// recoverable on disk — deleting them is reserved for the explicit
+/// `--replace` path and [`gc_orphan_stores`].  Returns the weights path.
 pub fn write_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf> {
     std::fs::create_dir_all(dir)
         .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
@@ -304,14 +340,67 @@ pub fn write_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf> 
     Ok(wpath)
 }
 
+/// Delete `.dobiw` stores in `dir` that no variant of its manifest
+/// references — the leak left behind when a variant is replaced (or a
+/// standalone `write_artifacts` overwrites an older manifest).  Only
+/// top-level `.dobiw` files are candidates; anything a variant's
+/// `weights` field names (by relative path or bare file name) survives.
+/// Returns the deleted paths.
+pub fn gc_orphan_stores(dir: &Path) -> Result<Vec<PathBuf>> {
+    let m = crate::json::load(&dir.join("manifest.json"))?;
+    let mut referenced = std::collections::BTreeSet::new();
+    for v in m.get("variants").and_then(Json::as_arr).into_iter().flatten() {
+        if let Some(w) = v.get("weights").and_then(Json::as_str) {
+            referenced.insert(w.to_string());
+            if let Some(name) = Path::new(w).file_name().and_then(|f| f.to_str()) {
+                referenced.insert(name.to_string());
+            }
+        }
+    }
+    let mut removed = Vec::new();
+    let entries = std::fs::read_dir(dir)
+        .map_err(|e| anyhow!("reading {}: {e}", dir.display()))?;
+    for entry in entries {
+        let entry = entry.map_err(|e| anyhow!("reading {}: {e}", dir.display()))?;
+        let path = entry.path();
+        let is_store = path.is_file()
+            && path.extension().and_then(|e| e.to_str()) == Some("dobiw");
+        if !is_store {
+            continue;
+        }
+        let name = match path.file_name().and_then(|f| f.to_str()) {
+            Some(n) => n.to_string(),
+            None => continue,
+        };
+        if !referenced.contains(&name) {
+            std::fs::remove_file(&path)
+                .map_err(|e| anyhow!("removing orphan {}: {e}", path.display()))?;
+            removed.push(path);
+        }
+    }
+    Ok(removed)
+}
+
 /// Append the compressed variant to an **existing** artifacts dir: write
 /// the store beside the resident ones and merge the manifest in place —
 /// the variant list gains one entry, the model entry is added if absent
 /// (and shape-checked when present), every other manifest field (corpora,
 /// eval, suites, other models/variants) is preserved byte-for-byte at the
 /// JSON level.  Dense and compressed variants then serve from a single
-/// manifest.  Returns the weights path.
+/// manifest.  Duplicate variant ids are refused; see
+/// [`append_artifacts_opts`] for the explicit-replacement mode.  Returns
+/// the weights path.
 pub fn append_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf> {
+    append_artifacts_opts(dir, art, false)
+}
+
+/// [`append_artifacts`] with replacement: when `replace` is set and the
+/// manifest already carries the variant id, the resident entry is swapped
+/// for the new one and any store file the replacement orphaned is
+/// garbage-collected ([`gc_orphan_stores`]) — re-compressing at the same
+/// ratio no longer leaks the superseded `.dobiw` on disk.
+pub fn append_artifacts_opts(dir: &Path, art: &CompressedArtifact,
+                             replace: bool) -> Result<PathBuf> {
     let mpath = dir.join("manifest.json");
     anyhow::ensure!(mpath.exists(),
                     "--append expects an existing artifacts dir (no {})", mpath.display());
@@ -319,14 +408,21 @@ pub fn append_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf>
     let Json::Obj(mut root) = doc else { bail!("manifest root must be an object") };
 
     // Variant ids are unique per manifest: re-compressing at the same
-    // ratio must be an explicit overwrite decision, not a silent dup.
+    // ratio must be an explicit overwrite decision (--replace), not a
+    // silent dup.
     let mut variants = match root.remove("variants") {
         Some(Json::Arr(v)) => v,
         _ => bail!("manifest has no `variants` array"),
     };
-    if variants.iter().any(|v| v.get("id").and_then(Json::as_str) == Some(&art.variant_id)) {
-        bail!("variant `{}` already in {} (pick another --ratio/--budget, \
-               or write a standalone dir with --out)", art.variant_id, mpath.display());
+    let resident =
+        variants.iter().any(|v| v.get("id").and_then(Json::as_str) == Some(&art.variant_id));
+    if resident && !replace {
+        bail!("variant `{}` already in {} (pick another --ratio/--budget, pass \
+               --replace to swap it, or write a standalone dir with --out)",
+              art.variant_id, mpath.display());
+    }
+    if resident {
+        variants.retain(|v| v.get("id").and_then(Json::as_str) != Some(&art.variant_id));
     }
 
     // Model entry: insert, or verify the resident one matches our source.
@@ -365,6 +461,11 @@ pub fn append_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf>
     root.insert("variants".into(), Json::Arr(variants));
     std::fs::write(&mpath, Json::Obj(root).to_string())
         .map_err(|e| anyhow!("writing manifest: {e}"))?;
+    if resident {
+        // The replaced entry may have pointed at a differently-named
+        // store (foreign naming scheme, pre-rename manifest): collect it.
+        gc_orphan_stores(dir)?;
+    }
     Ok(wpath)
 }
 
@@ -535,6 +636,101 @@ mod tests {
         let clash = compress_model(&other, "tiny", &cfg(0.6, Precision::F32), &toks61).unwrap();
         let err = append_artifacts(&dir, &clash).unwrap_err().to_string();
         assert!(err.contains("refusing to merge"), "err: {err}");
+    }
+
+    #[test]
+    fn learned_alloc_compresses_end_to_end() {
+        let dense = tiny_model(dims(), 0, false);
+        let mut c = cfg(0.4, Precision::F32);
+        c.alloc = crate::config::AllocMode::Learned;
+        c.train_iters = 60;
+        let art = compress_model(&dense, "tiny", &c, &corpus()).unwrap();
+        assert_eq!(art.variant_id, "tiny/dobi-learned_40",
+                   "learned variants carry the alloc tag");
+        assert_eq!(art.alloc, "learned");
+        let report = art.train_report.as_ref().expect("learned mode reports");
+        assert_eq!(report.iters, 60);
+        assert!((report.shares.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let budget = (0.4 * art.total_params as f64).round() as usize;
+        assert!(art.stored_params <= budget,
+                "stored {} over budget {budget}", art.stored_params);
+        assert!(art.ranks.values().all(|&k| k >= 1));
+        let tokens: Vec<i32> = (0..24).map(|i| i % 61).collect();
+        let out = art.reference.forward(2, 12, &tokens, None).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()));
+        // the manifest round-trips the alloc mode
+        let dir = std::env::temp_dir().join("dobi_compress_pipe_learned");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_artifacts(&dir, &art).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant("tiny/dobi-learned_40").unwrap();
+        assert_eq!(v.alloc, "learned");
+        // waterfill manifests read back their mode too (and old manifests
+        // without the field default to it — covered by Manifest::load)
+        let wf = compress_model(&dense, "tiny", &cfg(0.4, Precision::F32), &corpus()).unwrap();
+        assert_eq!(wf.alloc, "waterfill");
+        assert!(wf.train_report.is_none());
+    }
+
+    #[test]
+    fn single_layer_model_compresses() {
+        // the single-layer degenerate case from the waterfill edge-case
+        // sweep, driven through the whole pipeline
+        let one = TinyDims { vocab: 61, d: 16, heads: 2, layers: 1, ff: 24 };
+        let dense = tiny_model(one, 0, false);
+        let art = compress_model(&dense, "tiny", &cfg(0.5, Precision::F32), &corpus()).unwrap();
+        assert_eq!(art.ranks.len(), 7, "one layer -> seven targets");
+        assert_eq!(art.spectra.len(), 7);
+        assert!(art.ranks.values().all(|&k| k >= 1));
+        let out = art.reference.forward(1, 8, &[1, 2, 3, 4, 5, 6, 7, 8], None).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn replace_swaps_variant_and_gc_collects_orphans() {
+        let dense = tiny_model(dims(), 0, false);
+        let toks = corpus();
+        let a40 = compress_model(&dense, "tiny", &cfg(0.4, Precision::Q8), &toks).unwrap();
+        let a60 = compress_model(&dense, "tiny", &cfg(0.6, Precision::Q8), &toks).unwrap();
+        let dir = std::env::temp_dir().join("dobi_compress_pipe_replace");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_artifacts(&dir, &a40).unwrap();
+        append_artifacts(&dir, &a60).unwrap();
+        // same id again: refused without --replace, swapped with it
+        assert!(append_artifacts(&dir, &a60).is_err());
+        let a60f32 = compress_model(&dense, "tiny", &cfg(0.6, Precision::F32), &toks).unwrap();
+        assert_eq!(a60f32.variant_id, a60.variant_id);
+        append_artifacts_opts(&dir, &a60f32, true).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.variants.len(), 2, "replace must not grow the variant list");
+        // the replacement is live: f32 payload is the larger one
+        let v = m.variant("tiny/dobi_60").unwrap();
+        assert_eq!(v.bytes, a60f32.payload_bytes);
+        let store = crate::storage::Store::open(&m.path(&v.weights)).unwrap();
+        let loaded = FactorizedModel::from_store(&m.models["tiny"], v, &store).unwrap();
+        let out = loaded.forward(1, 8, &[1, 2, 3, 4, 5, 6, 7, 8], None).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()));
+        // a stray store nothing references is collected on demand
+        let stray = dir.join("tiny_dobi_99.dobiw");
+        std::fs::write(&stray, b"junk").unwrap();
+        let removed = gc_orphan_stores(&dir).unwrap();
+        assert_eq!(removed, vec![stray.clone()]);
+        assert!(!stray.exists());
+        // referenced stores survive GC
+        assert!(m.path(&v.weights).exists());
+        assert!(dir.join("tiny_dobi_40.dobiw").exists());
+        // a standalone --out write into the same dir clobbers the manifest
+        // but must NOT delete the now-unreferenced stores (only the
+        // explicit --replace path and gc_orphan_stores may do that)
+        write_artifacts(&dir, &a40).unwrap();
+        let m2 = Manifest::load(&dir).unwrap();
+        assert_eq!(m2.variants.len(), 1);
+        assert!(dir.join("tiny_dobi_40.dobiw").exists());
+        assert!(dir.join("tiny_dobi_60.dobiw").exists(),
+                "standalone writes must leave foreign stores recoverable");
+        // the explicit collector then reclaims it on request
+        let removed = gc_orphan_stores(&dir).unwrap();
+        assert_eq!(removed, vec![dir.join("tiny_dobi_60.dobiw")]);
     }
 
     #[test]

@@ -162,6 +162,38 @@ pub fn whitened_spectrum(name: &str, w: &[f32], m: usize, n: usize,
     whitener(xs, m).spectrum(name, w, n)
 }
 
+/// A rank-allocation policy: integer ranks for every target under a
+/// global stored-parameter budget.  Two implementations exist — the
+/// greedy discrete [`Waterfill`] below, and the differentiable
+/// truncation-position optimizer (`train::LearnedAlloc`, the paper's
+/// actual "Dobi" objective) — and the compression pipeline consumes
+/// either through this one trait (`dobi compress --alloc`).
+pub trait RankAllocator {
+    /// Short mode name recorded in the variant manifest (`alloc` field).
+    fn name(&self) -> &'static str;
+
+    /// Returns `(ranks, spent)` with the same contract as
+    /// [`allocate_ranks`]: every target gets at least
+    /// `min(k_min, max_rank)` even when that floor overshoots `budget`.
+    fn allocate(&self, specs: &[TargetSpectrum], budget: usize,
+                k_min: usize) -> (Vec<usize>, usize);
+}
+
+/// The SVD-LLM-style greedy waterfill baseline as a [`RankAllocator`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Waterfill;
+
+impl RankAllocator for Waterfill {
+    fn name(&self) -> &'static str {
+        "waterfill"
+    }
+
+    fn allocate(&self, specs: &[TargetSpectrum], budget: usize,
+                k_min: usize) -> (Vec<usize>, usize) {
+        allocate_ranks(specs, budget, k_min)
+    }
+}
+
 /// Greedy waterfilling: allocate integer ranks to every target under a
 /// global budget of stored parameters (remapped accounting: a rank unit
 /// on target t costs `max(m_t, n_t)`).  Starts all targets at
@@ -309,6 +341,86 @@ mod tests {
         let (ks, spent) = allocate_ranks(&[a], usize::MAX / 2, 1);
         assert_eq!(ks, vec![4]);
         assert_eq!(spent, 16);
+    }
+
+    #[test]
+    fn zero_budget_grants_exactly_the_floor() {
+        // zero budget: every target still gets its floor (a model cannot
+        // serve rank-0 factors) and nothing more — `spent` reports the
+        // overshoot honestly
+        let specs = vec![
+            spec("a", 8, 4, vec![9.0, 4.0, 1.0, 0.5]),
+            spec("b", 4, 8, vec![9.0, 4.0, 1.0, 0.5]),
+            spec("c", 2, 2, vec![1.0, 0.1]),
+        ];
+        let (ks, spent) = allocate_ranks(&specs, 0, 3);
+        assert_eq!(ks, vec![3, 3, 2], "floor is min(k_min, max_rank) per target");
+        assert_eq!(spent, 3 * 8 + 3 * 8 + 2 * 2);
+        // a budget exactly equal to the floor cost adds nothing
+        let (ks2, spent2) = allocate_ranks(&specs, spent, 3);
+        assert_eq!(ks2, ks);
+        assert_eq!(spent2, spent);
+    }
+
+    #[test]
+    fn budget_above_all_ranks_fills_everything_and_stops() {
+        let specs = vec![
+            spec("a", 6, 4, vec![5.0, 3.0, 2.0, 1.0]),
+            spec("b", 4, 10, vec![8.0, 4.0, 2.0, 1.0]),
+            spec("c", 3, 3, vec![1.0, 1.0, 1.0]),
+        ];
+        let full: usize = specs.iter().map(|t| t.max_rank() * t.unit_cost()).sum();
+        for budget in [full, full + 1, full * 10, usize::MAX / 4] {
+            let (ks, spent) = allocate_ranks(&specs, budget, 1);
+            assert_eq!(ks, vec![4, 4, 3], "budget {budget}");
+            assert_eq!(spent, full, "never spends past full rank");
+        }
+        // one param short of full: something must stay truncated
+        let (ks, spent) = allocate_ranks(&specs, full - 1, 1);
+        assert!(spent < full);
+        assert!(ks.iter().zip(&specs).any(|(&k, t)| k < t.max_rank()),
+                "budget {} cannot buy full rank everywhere", full - 1);
+    }
+
+    #[test]
+    fn exact_tie_spectra_break_to_the_lowest_index() {
+        // identical spectra and costs: every marginal gain ties, so the
+        // deterministic tie-break must hand the odd increment to the
+        // lowest index — bit-stable across runs and platforms
+        let mk = || spec("t", 6, 6, vec![7.0, 7.0, 3.0, 1.0, 0.5, 0.25]);
+        let specs = vec![mk(), mk(), mk()];
+        // floor 3 x 1 = 18 params; budget for 7 increments of cost 6
+        let (ks, spent) = allocate_ranks(&specs, 18 + 7 * 6, 1);
+        assert_eq!(spent, 18 + 7 * 6, "ties must not stall the fill");
+        assert_eq!(ks, vec![4, 3, 3],
+                   "7 = 3+2+2 round-robin-by-gain with lowest-index ties: {ks:?}");
+        let (ks2, _) = allocate_ranks(&specs, 18 + 7 * 6, 1);
+        assert_eq!(ks, ks2, "tie-break must be deterministic");
+    }
+
+    #[test]
+    fn single_target_model_allocates_standalone() {
+        // the single-layer / single-target degenerate case: the whole
+        // budget belongs to one spectrum
+        let a = spec("only", 12, 8, vec![20.0, 10.0, 5.0, 2.0, 1.0, 0.5, 0.2, 0.1]);
+        let (ks, spent) = allocate_ranks(std::slice::from_ref(&a), 5 * 12, 1);
+        assert_eq!(ks, vec![5]);
+        assert_eq!(spent, 5 * 12);
+        // budget between rank steps: partial remainder stays unspent
+        let (ks2, spent2) = allocate_ranks(std::slice::from_ref(&a), 5 * 12 + 7, 1);
+        assert_eq!(ks2, vec![5]);
+        assert_eq!(spent2, 5 * 12, "7 params cannot buy a 12-param rank unit");
+    }
+
+    #[test]
+    fn waterfill_trait_impl_matches_free_function() {
+        let specs = vec![
+            spec("a", 10, 10, vec![100.0, 50.0, 25.0, 12.0, 6.0, 3.0, 1.0, 0.5, 0.2, 0.1]),
+            spec("b", 10, 10, vec![1.0; 10]),
+        ];
+        let alloc: &dyn RankAllocator = &Waterfill;
+        assert_eq!(alloc.name(), "waterfill");
+        assert_eq!(alloc.allocate(&specs, 80, 1), allocate_ranks(&specs, 80, 1));
     }
 
     #[test]

@@ -6,10 +6,22 @@
 //! normalized columns are U, and the accumulated rotations are V.  It is
 //! slower than bidiagonalization-based drivers but is simple, numerically
 //! robust (every step is an exact orthogonal transform), and fully
-//! deterministic — the pair sweep order is fixed, so identical inputs
-//! produce identical factors on every platform.  Accumulation runs in f64
-//! (mirroring `python/compile/dobi/ipca.py::robust_svd` working precision);
-//! inputs and outputs are the crate-wide f32.
+//! deterministic.  Accumulation runs in f64 (mirroring
+//! `python/compile/dobi/ipca.py::robust_svd` working precision); the
+//! classic entry point [`svd_thin`] is f32 in/out, and [`svd_thin_f64`]
+//! exposes the full-precision factors (the train subsystem's
+//! finite-difference gradient checks need them).
+//!
+//! ## Parallel sweeps
+//!
+//! Pairs are visited in the round-robin tournament ordering: each sweep
+//! is `n-1` rounds of `⌊n/2⌋` *disjoint* column pairs.  Because the pairs
+//! of a round share no columns, their rotations commute — a round can be
+//! fanned across scoped worker threads ([`set_svd_threads`], the
+//! `decode_threads` idiom from `lowrank::kernel`, including its
+//! work-floor guard) and the result is **bit-identical for every thread
+//! count**: the ordering is fixed, each pair's rotation depends only on
+//! its own two columns, and no accumulation order changes.
 
 /// Relative off-diagonal threshold: rotate while
 /// `|a_p . a_q| > TOL * ||a_p|| * ||a_q||`.
@@ -18,6 +30,32 @@ const TOL: f64 = 1e-9;
 /// Sweep cap — one-sided Jacobi converges quadratically, so ~10 sweeps
 /// suffice in practice; 60 is a generous safety bound.
 const MAX_SWEEPS: usize = 60;
+
+thread_local! {
+    /// Worker threads the Jacobi sweeps may fan rotation pairs across.
+    /// Thread-local like `kernel::DECODE_THREADS`: `dobi compress
+    /// --svd-threads` sets it on the one thread running the pipeline, so
+    /// concurrent SVDs elsewhere can't oversubscribe the host.
+    static SVD_THREADS: std::cell::Cell<usize> = const { std::cell::Cell::new(1) };
+}
+
+/// Work floor: a round is threaded only when its pair count times the
+/// column length clears this (each pair costs ~5·m MACs).  Workers are
+/// scoped-spawned per ROUND — tens of µs each — so the floor is set
+/// where a round's compute (~5·2^16 MACs ≈ hundreds of µs) clearly
+/// dominates the spawn; a persistent worker pool would lift the
+/// overhead for smaller rounds (same follow-up as the GEMM pool).
+const PAR_MIN_PAIR_ELEMS: usize = 1 << 16;
+
+/// Set the calling thread's Jacobi worker count (clamped to >= 1).
+pub fn set_svd_threads(n: usize) {
+    SVD_THREADS.with(|c| c.set(n.max(1)));
+}
+
+/// The calling thread's Jacobi worker count.
+pub fn svd_threads() -> usize {
+    SVD_THREADS.with(|c| c.get())
+}
 
 /// Thin SVD `A = U diag(s) Vt` of a row-major (m, n) matrix with
 /// `r = min(m, n)`: `u` is (m, r), `s` is descending, `vt` is (r, n).
@@ -34,22 +72,50 @@ impl Svd {
     }
 }
 
+/// [`Svd`] at the f64 working precision of the Jacobi core.
+#[derive(Debug, Clone)]
+pub struct SvdF64 {
+    pub u: Vec<f64>,
+    pub s: Vec<f64>,
+    pub vt: Vec<f64>,
+}
+
+impl SvdF64 {
+    pub fn rank(&self) -> usize {
+        self.s.len()
+    }
+}
+
 /// Thin SVD of a row-major (m, n) f32 matrix.  Non-finite entries are
 /// sanitized to zero (the `robust_svd` contract).  Singular vectors of
 /// zero singular values come out as zero columns — callers truncate well
 /// above that regime.
 pub fn svd_thin(a: &[f32], m: usize, n: usize) -> Svd {
     assert_eq!(a.len(), m * n, "svd_thin: {m}x{n} needs {} elems", m * n);
-    assert!(m > 0 && n > 0, "svd_thin: empty matrix");
+    // sanitize fused into the widening cast: ONE pass over the matrix
     let clean: Vec<f64> =
         a.iter().map(|&x| if x.is_finite() { x as f64 } else { 0.0 }).collect();
+    let svd = svd_thin_sanitized(clean, m, n);
+    Svd {
+        u: svd.u.iter().map(|&x| x as f32).collect(),
+        s: svd.s.iter().map(|&x| x as f32).collect(),
+        vt: svd.vt.iter().map(|&x| x as f32).collect(),
+    }
+}
+
+/// Thin SVD of a row-major (m, n) f64 matrix (non-finite sanitized to 0).
+pub fn svd_thin_f64(a: &[f64], m: usize, n: usize) -> SvdF64 {
+    assert_eq!(a.len(), m * n, "svd_thin_f64: {m}x{n} needs {} elems", m * n);
+    let clean: Vec<f64> = a.iter().map(|&x| if x.is_finite() { x } else { 0.0 }).collect();
+    svd_thin_sanitized(clean, m, n)
+}
+
+/// Core thin-SVD entry over an already-sanitized owned buffer.
+fn svd_thin_sanitized(clean: Vec<f64>, m: usize, n: usize) -> SvdF64 {
+    assert!(m > 0 && n > 0, "svd_thin: empty matrix");
     if m >= n {
         let (u, s, vt) = jacobi_tall(&clean, m, n);
-        Svd {
-            u: u.iter().map(|&x| x as f32).collect(),
-            s: s.iter().map(|&x| x as f32).collect(),
-            vt: vt.iter().map(|&x| x as f32).collect(),
-        }
+        SvdF64 { u, s, vt }
     } else {
         // Wide: decompose the transpose.  A^T = U1 S V1^T  =>
         // A = V1 S U1^T, so U = V1 (m, m) and Vt = U1^T (m, n).
@@ -60,70 +126,128 @@ pub fn svd_thin(a: &[f32], m: usize, n: usize) -> Svd {
             }
         }
         let (u1, s, vt1) = jacobi_tall(&at, n, m); // u1 (n, m), vt1 (m, m)
-        let mut u = vec![0f32; m * m];
+        let mut u = vec![0f64; m * m];
         for r in 0..m {
             for c in 0..m {
-                u[r * m + c] = vt1[c * m + r] as f32;
+                u[r * m + c] = vt1[c * m + r];
             }
         }
-        let mut vt = vec![0f32; m * n];
+        let mut vt = vec![0f64; m * n];
         for r in 0..m {
             for c in 0..n {
-                vt[r * n + c] = u1[c * m + r] as f32;
+                vt[r * n + c] = u1[c * m + r];
             }
         }
-        Svd { u, s: s.iter().map(|&x| x as f32).collect(), vt }
+        SvdF64 { u, s, vt }
     }
+}
+
+/// The round-robin (circle-method) tournament schedule for `n` columns:
+/// `n-1` rounds (n rounded up to even) of disjoint `(p < q)` pairs, every
+/// unordered pair exactly once per cycle.  Fixed schedule → fixed
+/// rotation ordering → deterministic factors at any thread count.
+fn round_robin_rounds(n: usize) -> Vec<Vec<(usize, usize)>> {
+    if n < 2 {
+        return Vec::new();
+    }
+    let np = n + n % 2; // pad odd n with a bye slot
+    let mut rot: Vec<usize> = (1..np).collect();
+    let mut rounds = Vec::with_capacity(np - 1);
+    for _ in 0..np - 1 {
+        let mut pairs = Vec::with_capacity(np / 2);
+        let seat = |i: usize| if i == 0 { 0 } else { rot[i - 1] };
+        for i in 0..np / 2 {
+            let (a, b) = (seat(i), seat(np - 1 - i));
+            if a < n && b < n {
+                pairs.push((a.min(b), a.max(b)));
+            }
+        }
+        rounds.push(pairs);
+        rot.rotate_left(1);
+    }
+    rounds
+}
+
+/// One Jacobi pair step on owned column data: decide from the current
+/// dot products, rotate both the data columns (len m) and the V
+/// accumulator columns (len n).  Returns whether a rotation was applied.
+/// Depends only on this pair's columns — the disjoint pairs of a round
+/// can run in any order (or in parallel) with identical results.
+fn rotate_if_needed(cp: &mut [f64], cq: &mut [f64], vp: &mut [f64], vq: &mut [f64]) -> bool {
+    let mut alpha = 0f64;
+    let mut beta = 0f64;
+    let mut gamma = 0f64;
+    for (x, y) in cp.iter().zip(cq.iter()) {
+        alpha += x * x;
+        beta += y * y;
+        gamma += x * y;
+    }
+    if gamma == 0.0 || gamma.abs() <= TOL * (alpha * beta).sqrt() {
+        return false;
+    }
+    let zeta = (beta - alpha) / (2.0 * gamma);
+    let t = if zeta >= 0.0 {
+        1.0 / (zeta + (1.0 + zeta * zeta).sqrt())
+    } else {
+        -1.0 / (-zeta + (1.0 + zeta * zeta).sqrt())
+    };
+    let c = 1.0 / (1.0 + t * t).sqrt();
+    let s = c * t;
+    for (x, y) in cp.iter_mut().zip(cq.iter_mut()) {
+        let (a, b) = (*x, *y);
+        *x = c * a - s * b;
+        *y = s * a + c * b;
+    }
+    for (x, y) in vp.iter_mut().zip(vq.iter_mut()) {
+        let (a, b) = (*x, *y);
+        *x = c * a - s * b;
+        *y = s * a + c * b;
+    }
+    true
 }
 
 /// One-sided Jacobi on a tall row-major (m, n) matrix, m >= n.
 /// Returns (u: (m, n) row-major, s: n descending, vt: (n, n) row-major).
 fn jacobi_tall(a: &[f64], m: usize, n: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
+    // Per-call worker count: the caller's setting, gated by the work
+    // floor (threading a trivial round just pays spawn cost).
+    let threads = if (n / 2) * m >= PAR_MIN_PAIR_ELEMS { svd_threads() } else { 1 };
+    jacobi_tall_threads(a, m, n, threads)
+}
+
+/// [`jacobi_tall`] with an explicit worker count (the floor-free entry the
+/// bit-equality tests drive directly, mirroring `matmul_into_striped`).
+fn jacobi_tall_threads(a: &[f64], m: usize, n: usize,
+                       threads: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) {
     debug_assert!(m >= n);
-    // Column-contiguous working copies: cols[j*m..] is column j of A,
-    // vcols[j*n..] is column j of V (accumulated rotations, init I).
-    let mut cols = vec![0f64; n * m];
-    for i in 0..m {
-        for j in 0..n {
-            cols[j * m + i] = a[i * n + j];
-        }
-    }
-    let mut vcols = vec![0f64; n * n];
-    for j in 0..n {
-        vcols[j * n + j] = 1.0;
-    }
+    // Column-owned working copies: cols[j] is column j of A (len m),
+    // vcols[j] is column j of V (len n, accumulated rotations, init I).
+    let mut cols: Vec<Vec<f64>> = (0..n)
+        .map(|j| (0..m).map(|i| a[i * n + j]).collect())
+        .collect();
+    let mut vcols: Vec<Vec<f64>> = (0..n)
+        .map(|j| {
+            let mut v = vec![0f64; n];
+            v[j] = 1.0;
+            v
+        })
+        .collect();
+    let rounds = round_robin_rounds(n);
     for _sweep in 0..MAX_SWEEPS {
         let mut converged = true;
-        for p in 0..n.saturating_sub(1) {
-            for q in p + 1..n {
-                let (alpha, beta, gamma) = {
-                    let cp = &cols[p * m..p * m + m];
-                    let cq = &cols[q * m..q * m + m];
-                    let mut aa = 0f64;
-                    let mut bb = 0f64;
-                    let mut gg = 0f64;
-                    for i in 0..m {
-                        aa += cp[i] * cp[i];
-                        bb += cq[i] * cq[i];
-                        gg += cp[i] * cq[i];
-                    }
-                    (aa, bb, gg)
-                };
-                if gamma == 0.0 || gamma.abs() <= TOL * (alpha * beta).sqrt() {
-                    continue;
+        for pairs in &rounds {
+            let rotated = if threads > 1 && pairs.len() >= 2 {
+                run_round_parallel(&mut cols, &mut vcols, pairs, threads)
+            } else {
+                let mut any = false;
+                for &(p, q) in pairs {
+                    let (cp, cq) = pair_mut(&mut cols, p, q);
+                    let (vp, vq) = pair_mut(&mut vcols, p, q);
+                    any |= rotate_if_needed(cp, cq, vp, vq);
                 }
-                converged = false;
-                let zeta = (beta - alpha) / (2.0 * gamma);
-                let t = if zeta >= 0.0 {
-                    1.0 / (zeta + (1.0 + zeta * zeta).sqrt())
-                } else {
-                    -1.0 / (-zeta + (1.0 + zeta * zeta).sqrt())
-                };
-                let c = 1.0 / (1.0 + t * t).sqrt();
-                let s = c * t;
-                rotate_pair(&mut cols, m, p, q, c, s);
-                rotate_pair(&mut vcols, n, p, q, c, s);
-            }
+                any
+            };
+            converged &= !rotated;
         }
         if converged {
             break;
@@ -132,7 +256,7 @@ fn jacobi_tall(a: &[f64], m: usize, n: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) 
     // Column norms are the singular values; sort descending (ties by
     // original index, so the result is deterministic).
     let sigma: Vec<f64> = (0..n)
-        .map(|j| cols[j * m..j * m + m].iter().map(|&x| x * x).sum::<f64>().sqrt())
+        .map(|j| cols[j].iter().map(|&x| x * x).sum::<f64>().sqrt())
         .collect();
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&x, &y| sigma[y].partial_cmp(&sigma[x]).unwrap().then(x.cmp(&y)));
@@ -144,29 +268,75 @@ fn jacobi_tall(a: &[f64], m: usize, n: usize) -> (Vec<f64>, Vec<f64>, Vec<f64>) 
         if sigma[j] > 1e-300 {
             let inv = 1.0 / sigma[j];
             for i in 0..m {
-                u[i * n + jj] = cols[j * m + i] * inv;
+                u[i * n + jj] = cols[j][i] * inv;
             }
         }
-        for i in 0..n {
-            vt[jj * n + i] = vcols[j * n + i];
-        }
+        vt[jj * n..(jj + 1) * n].copy_from_slice(&vcols[j]);
     }
     (u, s_out, vt)
 }
 
-/// Apply the plane rotation to columns p < q of a column-contiguous
-/// (len, k) buffer: col_p <- c*col_p - s*col_q, col_q <- s*col_p + c*col_q.
-fn rotate_pair(cols: &mut [f64], len: usize, p: usize, q: usize, c: f64, s: f64) {
+/// Two distinct mutable column borrows out of the column store.
+fn pair_mut(cols: &mut [Vec<f64>], p: usize, q: usize) -> (&mut [f64], &mut [f64]) {
     debug_assert!(p < q);
-    let (lo, hi) = cols.split_at_mut(q * len);
-    let cp = &mut lo[p * len..p * len + len];
-    let cq = &mut hi[..len];
-    for i in 0..len {
-        let x = cp[i];
-        let y = cq[i];
-        cp[i] = c * x - s * y;
-        cq[i] = s * x + c * y;
+    let (lo, hi) = cols.split_at_mut(q);
+    (&mut lo[p], &mut hi[0])
+}
+
+/// Run one round's disjoint pairs across scoped worker threads.  Each
+/// worker *owns* its pairs' four column vectors (moved out of the store,
+/// moved back after the join) — no shared mutable state, no unsafe.
+/// Chunking is deterministic but irrelevant to the result: disjoint
+/// pairs commute exactly.
+fn run_round_parallel(cols: &mut [Vec<f64>], vcols: &mut [Vec<f64>],
+                      pairs: &[(usize, usize)], threads: usize) -> bool {
+    struct Task {
+        p: usize,
+        q: usize,
+        cp: Vec<f64>,
+        cq: Vec<f64>,
+        vp: Vec<f64>,
+        vq: Vec<f64>,
     }
+    let mut tasks: Vec<Task> = pairs
+        .iter()
+        .map(|&(p, q)| Task {
+            p,
+            q,
+            cp: std::mem::take(&mut cols[p]),
+            cq: std::mem::take(&mut cols[q]),
+            vp: std::mem::take(&mut vcols[p]),
+            vq: std::mem::take(&mut vcols[q]),
+        })
+        .collect();
+    let workers = threads.min(tasks.len());
+    let chunk = tasks.len().div_ceil(workers);
+    let mut any = false;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = tasks
+            .chunks_mut(chunk)
+            .map(|batch| {
+                scope.spawn(move || {
+                    let mut rotated = false;
+                    for t in batch {
+                        rotated |=
+                            rotate_if_needed(&mut t.cp, &mut t.cq, &mut t.vp, &mut t.vq);
+                    }
+                    rotated
+                })
+            })
+            .collect();
+        for h in handles {
+            any |= h.join().expect("jacobi worker panicked");
+        }
+    });
+    for t in tasks {
+        cols[t.p] = t.cp;
+        cols[t.q] = t.cq;
+        vcols[t.p] = t.vp;
+        vcols[t.q] = t.vq;
+    }
+    any
 }
 
 /// Lower-triangular Cholesky factor of a symmetric PSD row-major (n, n)
@@ -347,6 +517,96 @@ mod tests {
         let s4: f32 = svd.s.iter().map(|&s| s * s * s * s).sum();
         assert!((tr - s2).abs() < 1e-3 * tr.abs(), "{tr} vs {s2}");
         assert!((fro2 - s4).abs() < 1e-3 * fro2.abs(), "{fro2} vs {s4}");
+    }
+
+    #[test]
+    fn f64_entry_matches_f32_entry() {
+        let mut rng = XorShift::new(8);
+        let a32 = randv(&mut rng, 15 * 10, 0.6);
+        let a64: Vec<f64> = a32.iter().map(|&x| x as f64).collect();
+        let s32 = svd_thin(&a32, 15, 10);
+        let s64 = svd_thin_f64(&a64, 15, 10);
+        assert_eq!(s64.rank(), 10);
+        for (a, b) in s32.s.iter().zip(&s64.s) {
+            assert!((*a as f64 - b).abs() < 1e-6, "{a} vs {b}");
+        }
+        // f64 factors are strictly more orthogonal than the f32 casts
+        let u32: Vec<f32> = s64.u.iter().map(|&x| x as f32).collect();
+        assert!(orth_err(&u32, 15, 10) < 1e-5);
+    }
+
+    #[test]
+    fn round_robin_schedule_is_a_partition() {
+        for n in [2usize, 3, 5, 8, 13] {
+            let rounds = round_robin_rounds(n);
+            let expected_rounds = n + n % 2 - 1;
+            assert_eq!(rounds.len(), expected_rounds, "n={n}");
+            let mut seen = std::collections::BTreeSet::new();
+            for pairs in &rounds {
+                let mut used = std::collections::BTreeSet::new();
+                for &(p, q) in pairs {
+                    assert!(p < q && q < n, "n={n}: bad pair ({p},{q})");
+                    // disjoint within the round — the parallel-safety invariant
+                    assert!(used.insert(p) && used.insert(q),
+                            "n={n}: column reused within a round");
+                    assert!(seen.insert((p, q)), "n={n}: pair ({p},{q}) repeated");
+                }
+            }
+            assert_eq!(seen.len(), n * (n - 1) / 2, "n={n}: pairs missing");
+        }
+        assert!(round_robin_rounds(1).is_empty());
+    }
+
+    #[test]
+    fn threaded_sweeps_bit_identical_to_serial() {
+        // Forced worker counts through the floor-free entry, exactly like
+        // the kernel's striped-GEMM test: every thread count must produce
+        // the same bits, because each round's pairs are disjoint.
+        let mut rng = XorShift::new(9);
+        for &(m, n) in &[(24usize, 16usize), (20, 7), (12, 12)] {
+            let a: Vec<f64> =
+                randv(&mut rng, m * n, 0.5).iter().map(|&x| x as f64).collect();
+            let serial = jacobi_tall_threads(&a, m, n, 1);
+            for t in [2usize, 3, 4] {
+                let par = jacobi_tall_threads(&a, m, n, t);
+                assert_eq!(serial.0, par.0, "{m}x{n} u drifted at {t} threads");
+                assert_eq!(serial.1, par.1, "{m}x{n} s drifted at {t} threads");
+                assert_eq!(serial.2, par.2, "{m}x{n} vt drifted at {t} threads");
+            }
+        }
+    }
+
+    #[test]
+    fn public_path_bit_identical_above_work_floor() {
+        // (n/2)*m = 4*16384 == PAR_MIN_PAIR_ELEMS: the public entry
+        // engages the worker pool, and must still match the serial bits.
+        let (m, n) = (16384usize, 8usize);
+        let mut rng = XorShift::new(10);
+        let a = randv(&mut rng, m * n, 0.3);
+        set_svd_threads(1);
+        let serial = svd_thin(&a, m, n);
+        set_svd_threads(3);
+        let par = svd_thin(&a, m, n);
+        set_svd_threads(1);
+        assert_eq!(serial.u, par.u);
+        assert_eq!(serial.s, par.s);
+        assert_eq!(serial.vt, par.vt);
+    }
+
+    #[test]
+    fn svd_threads_clamped_and_thread_local() {
+        set_svd_threads(0);
+        assert_eq!(svd_threads(), 1, "zero must clamp to 1");
+        set_svd_threads(5);
+        assert_eq!(svd_threads(), 5);
+        std::thread::spawn(|| {
+            assert_eq!(svd_threads(), 1, "setting must not leak across threads");
+            set_svd_threads(9);
+        })
+        .join()
+        .unwrap();
+        assert_eq!(svd_threads(), 5);
+        set_svd_threads(1);
     }
 
     #[test]

@@ -1,0 +1,364 @@
+//! Continuous truncation gates: the differentiable surrogate of "keep the
+//! top-k singular values of every target".
+//!
+//! Each compression target `i` carries ONE learnable scalar — its
+//! continuous truncation position `k̃_i` — from which per-singular-value
+//! gates are derived as a temperature-`τ` soft step:
+//!
+//! ```text
+//! g_ij = sigmoid((k̃_i - j - 1/2) / τ)        j = 0 .. r_i-1
+//! ```
+//!
+//! so `g ≈ 1` for indices below the position and `≈ 0` above it, with a
+//! `τ`-wide transition band.  Parameterizing the *position* (not one free
+//! logit per singular value) matches the paper's objective — Dobi-SVD
+//! learns where to truncate, not an arbitrary re-weighting — and avoids
+//! the partial-credit pathology of independent gates, whose convex
+//! continuous optimum smears fractional gate mass over the whole spectrum
+//! and rounds badly.
+//!
+//! The training objective combines, through the autodiff [`Tape`]:
+//!
+//! * the **whitened truncation loss** `Σ_i Σ_j (1 - g_ij)² σ²_ij / E`
+//!   (exactly the activation-space reconstruction error the waterfill
+//!   allocator discretely greedifies, normalized by total energy `E`);
+//! * the **Lagrangian budget term** `λ · Σ_i c_i Σ_j g_ij / C_tot`, whose
+//!   multiplier the driver adapts from the projection step so that
+//!   per-target gradients carry a sign (grow if the spectrum justifies
+//!   the parameters, shrink otherwise);
+//! * the softmax-ish [`Tape::normalize`] of per-target expected costs —
+//!   the *budget shares* diagnostic surfaced in the train report.
+//!
+//! The **expected stored-parameter cost** of a target is
+//! `c_i · Σ_j g_ij` with `c_i = max(m, n)` (remapped rank-unit cost, same
+//! accounting as `rank::allocate_ranks`), so budget feasibility is
+//! differentiable too — [`super::optim::project_to_budget`] renormalizes
+//! it to the exact budget after every step.
+
+use super::super::rank::TargetSpectrum;
+use super::tape::{sigmoid, Tape};
+
+/// Initial soft-step temperature (annealed down by the driver).
+pub const TAU_HI: f64 = 2.0;
+/// Final temperature: sharp enough that rounding the position and
+/// rounding the expected rank agree.
+pub const TAU_LO: f64 = 0.25;
+
+/// One compression target's slice of the gate model.
+pub struct GateTarget {
+    pub name: String,
+    /// Stored-parameter cost of one rank unit: `max(m, n)`.
+    pub cost: f64,
+    /// Whitened squared singular values, descending.
+    pub sigma2: Vec<f64>,
+    /// Rank floor (from the allocator's `k_min`, clamped to max rank).
+    pub k_min: usize,
+}
+
+/// Everything the objective needs from one evaluation of the tape.
+pub struct Objective {
+    /// Full scalar objective (tail + Lagrangian term).
+    pub loss: f64,
+    /// Normalized truncation-loss component alone.
+    pub tail: f64,
+    /// Expected stored params `Σ c_i Σ g_ij` at the current positions.
+    pub expected_cost: f64,
+    /// d loss / d k̃_i.
+    pub grad: Vec<f64>,
+    /// Normalized per-target budget shares (sum to 1).
+    pub shares: Vec<f64>,
+}
+
+/// The learnable truncation positions over all targets.
+pub struct GateModel {
+    pub targets: Vec<GateTarget>,
+    /// Continuous truncation positions, one per target, in `[0, r_i]`.
+    pub pos: Vec<f64>,
+    /// Current soft-step temperature.
+    pub tau: f64,
+    /// Total spectral energy `Σ σ²` (objective normalizer).
+    pub energy: f64,
+    /// `Σ_i c_i r_i` (cost-term normalizer).
+    pub cost_total: f64,
+}
+
+/// Sum of the soft-step gates of one target at position `pos` — the
+/// target's expected rank.  Allocation-free scalar form shared by the
+/// model accessors and the budget projection's bisection probes (which
+/// call it tens of times per optimizer step).
+pub fn gate_sum(pos: f64, r: usize, tau: f64) -> f64 {
+    (0..r).map(|j| sigmoid((pos - j as f64 - 0.5) / tau)).sum()
+}
+
+impl GateModel {
+    /// Build from spectra, warm-started at an integer allocation (the
+    /// greedy waterfill solution — the optimizer explores around it).
+    pub fn from_ranks(specs: &[TargetSpectrum], init: &[usize], k_min: usize) -> GateModel {
+        assert_eq!(specs.len(), init.len(), "gate model: init rank per target");
+        let targets: Vec<GateTarget> = specs
+            .iter()
+            .map(|t| GateTarget {
+                name: t.name.clone(),
+                cost: t.unit_cost() as f64,
+                sigma2: t.sigma2.clone(),
+                k_min: k_min.max(1).min(t.max_rank()),
+            })
+            .collect();
+        let energy: f64 = targets.iter().map(|t| t.sigma2.iter().sum::<f64>()).sum();
+        let cost_total: f64 =
+            targets.iter().map(|t| t.cost * t.sigma2.len() as f64).sum();
+        let pos = init.iter().map(|&k| k as f64).collect();
+        GateModel {
+            targets,
+            pos,
+            tau: TAU_HI,
+            energy: energy.max(f64::MIN_POSITIVE),
+            cost_total: cost_total.max(1.0),
+        }
+    }
+
+    /// Soft gates of target `i` at the current position/temperature.
+    pub fn gates(&self, i: usize) -> Vec<f64> {
+        let r = self.targets[i].sigma2.len();
+        (0..r)
+            .map(|j| sigmoid((self.pos[i] - j as f64 - 0.5) / self.tau))
+            .collect()
+    }
+
+    /// Expected stored params of target `i`: `c_i · Σ_j g_ij`.
+    pub fn target_cost(&self, i: usize) -> f64 {
+        self.targets[i].cost * gate_sum(self.pos[i], self.targets[i].sigma2.len(), self.tau)
+    }
+
+    /// Expected stored params across all targets (the budget surface the
+    /// projection step pins).
+    pub fn expected_cost(&self) -> f64 {
+        (0..self.targets.len()).map(|i| self.target_cost(i)).sum()
+    }
+
+    /// Build the objective graph on a fresh tape, run backward, and
+    /// return value + gradients + diagnostics.
+    pub fn objective(&self, lambda: f64) -> Objective {
+        let mut tape = Tape::new();
+        let mut pos_vars = Vec::with_capacity(self.targets.len());
+        let mut cost_vars = Vec::with_capacity(self.targets.len());
+        let mut tail_acc: Option<usize> = None;
+        for (i, t) in self.targets.iter().enumerate() {
+            let r = t.sigma2.len();
+            let pos = tape.leaf(&[self.pos[i]]);
+            pos_vars.push(pos);
+            let idx: Vec<f64> = (0..r).map(|j| j as f64 + 0.5).collect();
+            let idx = tape.constant(&idx);
+            let d = tape.sub(pos, idx);
+            let z = tape.scale(d, 1.0 / self.tau);
+            let g = tape.sigmoid(z);
+            let ones = tape.constant(&vec![1.0; r]);
+            let omg = tape.sub(ones, g);
+            let sq = tape.mul(omg, omg);
+            let s2 = tape.constant(&t.sigma2);
+            // (1, r) @ (r, 1) — the per-target whitened tail energy
+            let tail = tape.matmul(sq, 1, r, s2, 1);
+            tail_acc = Some(match tail_acc {
+                None => tail,
+                Some(acc) => tape.add(acc, tail),
+            });
+            let gsum = tape.sum(g);
+            cost_vars.push(tape.scale(gsum, t.cost));
+        }
+        let tail_total = tail_acc.expect("gate model has no targets");
+        let costs = tape.concat(&cost_vars);
+        let shares = tape.normalize(costs);
+        let cost_sum = tape.sum(costs);
+        let tail_term = tape.scale(tail_total, 1.0 / self.energy);
+        let cost_term = tape.scale(cost_sum, lambda / self.cost_total);
+        let obj = tape.add(tail_term, cost_term);
+        let grads = tape.backward(obj);
+        Objective {
+            loss: tape.value(obj)[0],
+            tail: tape.value(tail_term)[0],
+            expected_cost: tape.value(cost_sum)[0],
+            grad: pos_vars.iter().map(|&v| grads.wrt(v)[0]).collect(),
+            shares: tape.value(shares).to_vec(),
+        }
+    }
+
+    /// Round the continuous positions to integer ranks under the budget:
+    /// nearest-integer positions (clamped to `[k_min, r]`), then a
+    /// deterministic local repair — sell the cheapest marginal energy
+    /// while over budget, buy the best marginal energy-per-param while
+    /// under (the same move set as the waterfill, so the result is always
+    /// single-unit-exchange stable).  Ties resolve to the lowest index.
+    /// Returns `(ranks, spent)`; like the waterfill, the floor allocation
+    /// may overshoot a tiny budget.
+    pub fn round_to_ranks(&self, budget: usize) -> (Vec<usize>, usize) {
+        let mut ks: Vec<usize> = self
+            .targets
+            .iter()
+            .zip(&self.pos)
+            .map(|(t, &p)| {
+                (p.round() as isize).clamp(t.k_min as isize, t.sigma2.len() as isize) as usize
+            })
+            .collect();
+        let cost = |i: usize| self.targets[i].cost as usize;
+        let mut spent: usize = ks.iter().enumerate().map(|(i, &k)| k * cost(i)).sum();
+        // sell while over budget (stop at the floor: a floor allocation
+        // over a tiny budget is granted, mirroring `allocate_ranks`)
+        while spent > budget {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, t) in self.targets.iter().enumerate() {
+                if ks[i] <= t.k_min {
+                    continue;
+                }
+                let pain = t.sigma2.get(ks[i] - 1).copied().unwrap_or(0.0) / t.cost;
+                match best {
+                    Some((_, b)) if pain >= b => {}
+                    _ => best = Some((i, pain)),
+                }
+            }
+            let Some((i, _)) = best else { break };
+            ks[i] -= 1;
+            spent -= cost(i);
+        }
+        // buy while affordable gains remain
+        loop {
+            let mut best: Option<(usize, f64)> = None;
+            for (i, t) in self.targets.iter().enumerate() {
+                if ks[i] >= t.sigma2.len() || spent + cost(i) > budget {
+                    continue;
+                }
+                let gain = t.sigma2.get(ks[i]).copied().unwrap_or(0.0) / t.cost;
+                match best {
+                    Some((_, b)) if gain <= b => {}
+                    _ => best = Some((i, gain)),
+                }
+            }
+            let Some((i, _)) = best else { break };
+            ks[i] += 1;
+            spent += cost(i);
+        }
+        (ks, spent)
+    }
+}
+
+/// Whitened truncation loss of an integer allocation: `Σ_i tail_i(k_i)` —
+/// the discrete objective both allocators are scored on.
+pub fn surrogate_loss(specs: &[TargetSpectrum], ks: &[usize]) -> f64 {
+    specs
+        .iter()
+        .zip(ks)
+        .map(|(t, &k)| t.sigma2.iter().skip(k).sum::<f64>())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, m: usize, n: usize, sigma2: Vec<f64>) -> TargetSpectrum {
+        TargetSpectrum { name: name.into(), m, n, sigma2 }
+    }
+
+    fn toy() -> Vec<TargetSpectrum> {
+        vec![
+            spec("a", 8, 6, vec![50.0, 20.0, 8.0, 3.0, 1.0, 0.4]),
+            spec("b", 6, 8, vec![10.0, 9.0, 8.0, 7.0, 6.0, 5.0]),
+        ]
+    }
+
+    #[test]
+    fn soft_gates_are_a_descending_step() {
+        let specs = toy();
+        let mut m = GateModel::from_ranks(&specs, &[3, 2], 1);
+        m.tau = 0.25;
+        let g = m.gates(0);
+        for w in g.windows(2) {
+            assert!(w[0] >= w[1], "gates not monotone: {g:?}");
+        }
+        assert!(g[0] > 0.99 && g[2] > 0.85, "kept indices must be open: {g:?}");
+        assert!(g[3] < 0.15 && g[5] < 0.01, "dropped indices must be closed: {g:?}");
+    }
+
+    #[test]
+    fn expected_cost_tracks_positions() {
+        let specs = toy();
+        let m = GateModel::from_ranks(&specs, &[3, 2], 1);
+        // at tau = TAU_HI the soft step is wide, but cost must still be
+        // roughly cost-weighted positions
+        let want = 8.0 * 3.0 + 8.0 * 2.0;
+        let got = m.expected_cost();
+        assert!((got - want).abs() < want * 0.35, "expected {want}, got {got}");
+        // sharpening the step tightens the agreement
+        let mut sharp = GateModel::from_ranks(&specs, &[3, 2], 1);
+        sharp.tau = 0.1;
+        assert!((sharp.expected_cost() - want).abs() < 0.5);
+    }
+
+    #[test]
+    fn objective_gradient_matches_fd() {
+        let specs = toy();
+        let mut m = GateModel::from_ranks(&specs, &[3, 4], 1);
+        m.tau = 0.6;
+        m.pos = vec![2.7, 3.2];
+        let lambda = 0.8;
+        let obj = m.objective(lambda);
+        let h = 1e-6;
+        for i in 0..2 {
+            let mut up = GateModel::from_ranks(&specs, &[3, 4], 1);
+            up.tau = 0.6;
+            up.pos = m.pos.clone();
+            up.pos[i] += h;
+            let mut dn = GateModel::from_ranks(&specs, &[3, 4], 1);
+            dn.tau = 0.6;
+            dn.pos = m.pos.clone();
+            dn.pos[i] -= h;
+            let fd = (up.objective(lambda).loss - dn.objective(lambda).loss) / (2.0 * h);
+            assert!((obj.grad[i] - fd).abs() < 1e-6 * (1.0 + fd.abs()),
+                    "d/dpos[{i}]: {} vs fd {fd}", obj.grad[i]);
+        }
+    }
+
+    #[test]
+    fn shares_sum_to_one_and_follow_cost() {
+        let specs = toy();
+        let m = GateModel::from_ranks(&specs, &[4, 1], 1);
+        let obj = m.objective(0.0);
+        let total: f64 = obj.shares.iter().sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        assert!(obj.shares[0] > obj.shares[1],
+                "target with more expected rank must hold the larger share");
+        assert!((obj.expected_cost - m.expected_cost()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rounding_repairs_to_budget() {
+        let specs = toy();
+        let mut m = GateModel::from_ranks(&specs, &[3, 3], 1);
+        m.pos = vec![4.4, 4.4]; // naive rounding would cost (4+4)*8 = 64
+        let budget = 6 * 8;
+        let (ks, spent) = m.round_to_ranks(budget);
+        assert!(spent <= budget, "spent {spent} over budget {budget}");
+        assert_eq!(spent, budget, "repair must re-buy the freed budget");
+        // target a holds concentrated energy, so it keeps more rank
+        assert!(ks[0] >= ks[1], "{ks:?}");
+    }
+
+    #[test]
+    fn rounding_honors_floor_even_over_budget() {
+        let specs = toy();
+        let mut m = GateModel::from_ranks(&specs, &[2, 2], 2);
+        m.pos = vec![0.0, 0.0];
+        let (ks, spent) = m.round_to_ranks(0);
+        assert_eq!(ks, vec![2, 2], "floor ranks granted");
+        assert_eq!(spent, 2 * 8 + 2 * 8);
+    }
+
+    #[test]
+    fn surrogate_matches_loss_at_definition() {
+        let specs = toy();
+        let l = surrogate_loss(&specs, &[3, 2]);
+        let want: f64 = specs[0].sigma2[3..].iter().sum::<f64>()
+            + specs[1].sigma2[2..].iter().sum::<f64>();
+        assert!((l - want).abs() < 1e-12);
+        assert_eq!(surrogate_loss(&specs, &[6, 6]), 0.0);
+    }
+}

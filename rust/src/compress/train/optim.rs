@@ -1,0 +1,220 @@
+//! Optimizer machinery for the gate model: Adam over the truncation
+//! positions, plus the Lagrangian renormalization step that pins the
+//! expected stored-parameter cost to the budget after every update.
+//!
+//! The projection solves, by bisection on the shared multiplier step δ,
+//!
+//! ```text
+//! Σ_i c_i Σ_j sigmoid((k̃_i - δ·ĉ_i - j - ½) / τ)  =  budget
+//! ```
+//!
+//! with `ĉ_i = c_i / mean(c)` — a *cost-weighted* logit shift, i.e. one
+//! dual-ascent step of the budget Lagrangian rather than a plain uniform
+//! shift: targets whose rank units cost more params are pushed harder,
+//! which is what makes the optimizer's fixed point balance marginal
+//! energy **per parameter** (the waterfill criterion) instead of raw
+//! marginal energy.  The expected cost is strictly decreasing in δ, so
+//! bisection is exact to tolerance and fully deterministic.  δ feeds back
+//! into the objective's λ (dual tracking) so per-position gradients carry
+//! the grow/shrink sign Adam needs.
+
+use super::gate::{gate_sum, GateModel};
+
+/// Adam over one scalar position per target, with an optional per-target
+/// learning-rate damping (the Taylor sensitivity scaling the driver
+/// derives for ill-conditioned spectra).
+pub struct Adam {
+    lr: f64,
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    t: u32,
+    m: Vec<f64>,
+    v: Vec<f64>,
+}
+
+impl Adam {
+    pub fn new(lr: f64, n: usize) -> Adam {
+        Adam { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    /// One bias-corrected step; `lr_scale[i]` damps target i's step.
+    pub fn step(&mut self, pos: &mut [f64], grad: &[f64], lr_scale: &[f64]) {
+        assert_eq!(pos.len(), self.m.len(), "adam: position count changed");
+        assert_eq!(grad.len(), pos.len());
+        assert_eq!(lr_scale.len(), pos.len());
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for i in 0..pos.len() {
+            self.m[i] = self.beta1 * self.m[i] + (1.0 - self.beta1) * grad[i];
+            self.v[i] = self.beta2 * self.v[i] + (1.0 - self.beta2) * grad[i] * grad[i];
+            let mh = self.m[i] / bc1;
+            let vh = self.v[i] / bc2;
+            pos[i] -= self.lr * lr_scale[i] * mh / (vh.sqrt() + self.eps);
+        }
+    }
+}
+
+/// Bisection bounds for the multiplier step.  Positions live in
+/// `[0, r_i]` with r at most a few thousand, so ±1e4 mean-cost units of
+/// shift saturate every gate long before the bracket is exhausted.
+const DELTA_BRACKET: f64 = 1e4;
+/// Bisection iteration cap; the loop normally exits earlier on
+/// [`COST_TOL`], the cap only bounds pathological plateaus.
+const BISECT_ITERS: usize = 60;
+/// Relative expected-cost tolerance at which the bisection stops — far
+/// tighter than the integer rounding can distinguish, far cheaper than
+/// driving the bracket to 2^-60.
+const COST_TOL: f64 = 1e-9;
+
+/// Renormalize the model's expected stored-parameter cost to exactly
+/// `budget` (to bisection tolerance) via the cost-weighted position
+/// shift.  Positions are NOT clamped to `[0, r_i]` here — the soft step
+/// is defined on all of ℝ and only saturation of every gate can reach
+/// the extreme budgets; the integer rounding clamps at the end.  Returns
+/// the multiplier step δ (positive = the step had to shrink the model).
+/// Budgets outside the attainable open interval saturate at the nearest
+/// bracket bound.
+pub fn project_to_budget(model: &mut GateModel, budget: f64) -> f64 {
+    let n = model.targets.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let mean_cost: f64 = model.targets.iter().map(|t| t.cost).sum::<f64>() / n as f64;
+    let chat: Vec<f64> = model.targets.iter().map(|t| t.cost / mean_cost).collect();
+    let base = model.pos.clone();
+    // Allocation-free probe: the bisection evaluates the cost surface
+    // O(BISECT_ITERS) times per optimizer step, so it must not
+    // materialize gate vectors or touch the model until the final write.
+    let tau = model.tau;
+    let dims: Vec<(f64, usize)> =
+        model.targets.iter().map(|t| (t.cost, t.sigma2.len())).collect();
+    let cost_at = |d: f64| -> f64 {
+        dims.iter()
+            .zip(&base)
+            .zip(&chat)
+            .map(|(((c, r), b), ch)| c * gate_sum(b - d * ch, *r, tau))
+            .sum()
+    };
+    let (mut lo, mut hi) = (-DELTA_BRACKET, DELTA_BRACKET);
+    let tol = COST_TOL * budget.abs().max(1.0);
+    let delta = if cost_at(lo) < budget {
+        lo // budget above the attainable max: saturate open
+    } else if cost_at(hi) > budget {
+        hi // budget below the attainable min: saturate closed
+    } else {
+        let mut mid = 0.5 * (lo + hi);
+        for _ in 0..BISECT_ITERS {
+            let c = cost_at(mid);
+            if (c - budget).abs() <= tol {
+                break;
+            }
+            if c > budget {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+            mid = 0.5 * (lo + hi);
+        }
+        mid
+    };
+    for i in 0..n {
+        model.pos[i] = base[i] - delta * chat[i];
+    }
+    delta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::rank::TargetSpectrum;
+
+    fn spec(name: &str, m: usize, n: usize, sigma2: Vec<f64>) -> TargetSpectrum {
+        TargetSpectrum { name: name.into(), m, n, sigma2 }
+    }
+
+    fn model() -> GateModel {
+        let specs = vec![
+            spec("a", 8, 6, vec![50.0, 20.0, 8.0, 3.0, 1.0, 0.4]),
+            spec("b", 12, 6, vec![10.0, 9.0, 8.0, 7.0, 6.0, 5.0]),
+        ];
+        GateModel::from_ranks(&specs, &[3, 3], 1)
+    }
+
+    #[test]
+    fn adam_descends_a_quadratic() {
+        // minimize (x - 3)² + (y + 1)²
+        let mut pos = vec![0.0, 0.0];
+        let mut adam = Adam::new(0.1, 2);
+        for _ in 0..500 {
+            let grad = vec![2.0 * (pos[0] - 3.0), 2.0 * (pos[1] + 1.0)];
+            adam.step(&mut pos, &grad, &[1.0, 1.0]);
+        }
+        assert!((pos[0] - 3.0).abs() < 1e-2 && (pos[1] + 1.0).abs() < 1e-2, "{pos:?}");
+    }
+
+    #[test]
+    fn adam_lr_scale_damps_a_coordinate() {
+        let mut pos = vec![0.0, 0.0];
+        let mut adam = Adam::new(0.1, 2);
+        for _ in 0..20 {
+            let grad = vec![1.0, 1.0];
+            adam.step(&mut pos, &grad, &[1.0, 0.1]);
+        }
+        assert!(pos[0].abs() > 5.0 * pos[1].abs(),
+                "damped coordinate moved as fast: {pos:?}");
+    }
+
+    #[test]
+    fn projection_pins_expected_cost() {
+        let mut m = model();
+        for budget in [20.0f64, 40.0, 60.0] {
+            project_to_budget(&mut m, budget);
+            assert!((m.expected_cost() - budget).abs() < 1e-6,
+                    "expected cost {} != budget {budget}", m.expected_cost());
+        }
+    }
+
+    #[test]
+    fn projection_direction_matches_sign() {
+        let mut m = model();
+        let over = m.expected_cost() + 15.0;
+        let d_grow = project_to_budget(&mut m, over);
+        assert!(d_grow < 0.0, "growing the budget must shift positions up");
+        let mut m2 = model();
+        let under = m2.expected_cost() - 15.0;
+        let d_shrink = project_to_budget(&mut m2, under);
+        assert!(d_shrink > 0.0, "shrinking the budget must shift positions down");
+    }
+
+    #[test]
+    fn projection_saturates_out_of_range_budgets() {
+        let mut m = model();
+        // max attainable: all gates open -> sum c_i r_i = 8*6 + 12*6 = 120
+        project_to_budget(&mut m, 1e9);
+        assert!(m.expected_cost() > 119.9, "gates must saturate open: {}", m.expected_cost());
+        assert!(m.pos.iter().zip(&m.targets).all(|(&p, t)| p >= t.sigma2.len() as f64),
+                "positions must clear full rank: {:?}", m.pos);
+        let mut m2 = model();
+        project_to_budget(&mut m2, 0.0);
+        assert!(m2.expected_cost() < 1.0, "near-zero budget must close the gates");
+    }
+
+    #[test]
+    fn projection_weights_shift_by_cost() {
+        // equal spectra, unequal unit costs: the expensive target must be
+        // pushed down harder by a shrinking projection
+        let specs = vec![
+            spec("cheap", 6, 6, vec![1.0; 6]),
+            spec("dear", 60, 6, vec![1.0; 6]),
+        ];
+        let mut m = GateModel::from_ranks(&specs, &[3, 3], 1);
+        let before = m.pos.clone();
+        project_to_budget(&mut m, m.expected_cost() * 0.5);
+        let drop0 = before[0] - m.pos[0];
+        let drop1 = before[1] - m.pos[1];
+        assert!(drop1 > drop0 * 2.0,
+                "cost-weighted shift missing: cheap dropped {drop0}, dear {drop1}");
+    }
+}

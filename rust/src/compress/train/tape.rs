@@ -1,0 +1,475 @@
+//! Minimal reverse-mode autodiff over f64 vectors — the engine under the
+//! differentiable truncation-position objective.
+//!
+//! A [`Tape`] is an append-only list of nodes; every op records its
+//! parents and returns a [`Var`] handle.  [`Tape::backward`] seeds the
+//! (scalar) root with 1 and walks the nodes in reverse, accumulating
+//! vector-Jacobian products into per-node gradient buffers.  The op set
+//! is exactly what the Dobi gate objective needs — sigmoid, elementwise
+//! add/sub/mul, constant scale, sum, matmul, concat, and the softmax-ish
+//! `normalize` (x / sum x) used for the budget-share diagnostics — all in
+//! f64 so the finite-difference validation tests can run at 1e-6 steps
+//! without drowning in rounding noise.
+//!
+//! Broadcasting is deliberately tiny: `add`/`sub`/`mul` accept a length-1
+//! *left* operand against a vector right operand (the `k̃ - j` soft-step
+//! argument in the gate model), nothing else.  Graphs here are a few
+//! hundred nodes, so the tape is rebuilt every iteration rather than
+//! retaining structure between steps.
+
+/// Handle to one tape node.
+pub type Var = usize;
+
+/// Numerically stable logistic function (never overflows `exp`).
+pub fn sigmoid(x: f64) -> f64 {
+    if x >= 0.0 {
+        1.0 / (1.0 + (-x).exp())
+    } else {
+        let e = x.exp();
+        e / (1.0 + e)
+    }
+}
+
+enum Op {
+    /// Differentiable input (gradients are accumulated and reported).
+    Leaf,
+    /// Constant input — a terminal like [`Op::Leaf`]; callers simply
+    /// never read gradients back for it.
+    Const,
+    Sigmoid { x: Var },
+    Add { a: Var, b: Var },
+    Sub { a: Var, b: Var },
+    Mul { a: Var, b: Var },
+    Scale { a: Var, c: f64 },
+    Sum { a: Var },
+    /// (m, k) @ (k, n) row-major.
+    Matmul { a: Var, b: Var, m: usize, k: usize, n: usize },
+    Concat { parts: Vec<Var> },
+    /// y = x / sum(x).
+    Normalize { a: Var },
+}
+
+struct Node {
+    op: Op,
+    value: Vec<f64>,
+}
+
+/// Reverse-mode tape; build a fresh one per optimization step.
+#[derive(Default)]
+pub struct Tape {
+    nodes: Vec<Node>,
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape { nodes: Vec::new() }
+    }
+
+    fn push(&mut self, op: Op, value: Vec<f64>) -> Var {
+        self.nodes.push(Node { op, value });
+        self.nodes.len() - 1
+    }
+
+    /// Differentiable input vector.
+    pub fn leaf(&mut self, vals: &[f64]) -> Var {
+        self.push(Op::Leaf, vals.to_vec())
+    }
+
+    /// Constant (no gradient flows into it).
+    pub fn constant(&mut self, vals: &[f64]) -> Var {
+        self.push(Op::Const, vals.to_vec())
+    }
+
+    pub fn value(&self, v: Var) -> &[f64] {
+        &self.nodes[v].value
+    }
+
+    pub fn sigmoid(&mut self, x: Var) -> Var {
+        let y: Vec<f64> = self.nodes[x].value.iter().map(|&v| sigmoid(v)).collect();
+        self.push(Op::Sigmoid { x }, y)
+    }
+
+    /// Elementwise a + b (a may be length 1, broadcast against b).
+    pub fn add(&mut self, a: Var, b: Var) -> Var {
+        let y = self.broadcast_zip(a, b, |x, y| x + y);
+        self.push(Op::Add { a, b }, y)
+    }
+
+    /// Elementwise a - b (a may be length 1, broadcast against b).
+    pub fn sub(&mut self, a: Var, b: Var) -> Var {
+        let y = self.broadcast_zip(a, b, |x, y| x - y);
+        self.push(Op::Sub { a, b }, y)
+    }
+
+    /// Elementwise a * b (a may be length 1, broadcast against b).
+    pub fn mul(&mut self, a: Var, b: Var) -> Var {
+        let y = self.broadcast_zip(a, b, |x, y| x * y);
+        self.push(Op::Mul { a, b }, y)
+    }
+
+    pub fn scale(&mut self, a: Var, c: f64) -> Var {
+        let y: Vec<f64> = self.nodes[a].value.iter().map(|&v| v * c).collect();
+        self.push(Op::Scale { a, c }, y)
+    }
+
+    /// Scalar (length-1) sum of all elements.
+    pub fn sum(&mut self, a: Var) -> Var {
+        let s: f64 = self.nodes[a].value.iter().sum();
+        self.push(Op::Sum { a }, vec![s])
+    }
+
+    /// Row-major (m, k) @ (k, n).  `dot` is the (1, k) @ (k, 1) case.
+    pub fn matmul(&mut self, a: Var, m: usize, k: usize, b: Var, n: usize) -> Var {
+        assert_eq!(self.nodes[a].value.len(), m * k, "matmul: a is not {m}x{k}");
+        assert_eq!(self.nodes[b].value.len(), k * n, "matmul: b is not {k}x{n}");
+        let (av, bv) = (&self.nodes[a].value, &self.nodes[b].value);
+        let mut y = vec![0f64; m * n];
+        for i in 0..m {
+            for t in 0..k {
+                let x = av[i * k + t];
+                if x != 0.0 {
+                    for j in 0..n {
+                        y[i * n + j] += x * bv[t * n + j];
+                    }
+                }
+            }
+        }
+        self.push(Op::Matmul { a, b, m, k, n }, y)
+    }
+
+    /// Concatenate parts into one vector (gradients split back).
+    pub fn concat(&mut self, parts: &[Var]) -> Var {
+        let mut y = Vec::new();
+        for &p in parts {
+            y.extend_from_slice(&self.nodes[p].value);
+        }
+        self.push(Op::Concat { parts: parts.to_vec() }, y)
+    }
+
+    /// Softmax-ish normalization y = x / sum(x) — turns nonnegative
+    /// magnitudes into shares summing to 1 (the budget-share view of the
+    /// expected per-target costs).
+    pub fn normalize(&mut self, a: Var) -> Var {
+        let s: f64 = self.nodes[a].value.iter().sum();
+        assert!(s != 0.0, "normalize: zero-sum input");
+        let y: Vec<f64> = self.nodes[a].value.iter().map(|&v| v / s).collect();
+        self.push(Op::Normalize { a }, y)
+    }
+
+    fn broadcast_zip(&self, a: Var, b: Var, f: impl Fn(f64, f64) -> f64) -> Vec<f64> {
+        let (av, bv) = (&self.nodes[a].value, &self.nodes[b].value);
+        if av.len() == bv.len() {
+            av.iter().zip(bv).map(|(&x, &y)| f(x, y)).collect()
+        } else if av.len() == 1 {
+            bv.iter().map(|&y| f(av[0], y)).collect()
+        } else {
+            panic!("shape mismatch: {} vs {} (only length-1 LEFT broadcast)", av.len(), bv.len());
+        }
+    }
+
+    /// Reverse sweep from a scalar root.  Returns per-node gradients;
+    /// read them back with [`Gradients::wrt`].
+    pub fn backward(&self, root: Var) -> Gradients {
+        assert_eq!(self.nodes[root].value.len(), 1, "backward root must be scalar");
+        let mut g: Vec<Vec<f64>> = self.nodes.iter().map(|n| vec![0f64; n.value.len()]).collect();
+        g[root][0] = 1.0;
+        for id in (0..=root).rev() {
+            if g[id].iter().all(|&x| x == 0.0) {
+                continue;
+            }
+            let gy = g[id].clone();
+            match &self.nodes[id].op {
+                Op::Leaf | Op::Const => {}
+                Op::Sigmoid { x } => {
+                    let y = &self.nodes[id].value;
+                    for (i, &gv) in gy.iter().enumerate() {
+                        g[*x][i] += gv * y[i] * (1.0 - y[i]);
+                    }
+                }
+                Op::Add { a, b } => {
+                    self.accum_bcast(&mut g, *a, &gy, 1.0);
+                    self.accum_full(&mut g, *b, &gy, 1.0);
+                }
+                Op::Sub { a, b } => {
+                    self.accum_bcast(&mut g, *a, &gy, 1.0);
+                    self.accum_full(&mut g, *b, &gy, -1.0);
+                }
+                Op::Mul { a, b } => {
+                    let bv = self.nodes[*b].value.clone();
+                    if self.nodes[*a].value.len() == 1 {
+                        g[*a][0] += gy.iter().zip(&bv).map(|(&gv, &y)| gv * y).sum::<f64>();
+                    } else {
+                        for (i, &gv) in gy.iter().enumerate() {
+                            g[*a][i] += gv * bv[i];
+                        }
+                    }
+                    let av = &self.nodes[*a].value;
+                    for (i, &gv) in gy.iter().enumerate() {
+                        let x = if av.len() == 1 { av[0] } else { av[i] };
+                        g[*b][i] += gv * x;
+                    }
+                }
+                Op::Scale { a, c } => {
+                    self.accum_full(&mut g, *a, &gy, *c);
+                }
+                Op::Sum { a } => {
+                    for gv in g[*a].iter_mut() {
+                        *gv += gy[0];
+                    }
+                }
+                Op::Matmul { a, b, m, k, n } => {
+                    // dL/dA = dY @ B^T; dL/dB = A^T @ dY
+                    let (m, k, n) = (*m, *k, *n);
+                    let bv = self.nodes[*b].value.clone();
+                    let av = self.nodes[*a].value.clone();
+                    for i in 0..m {
+                        for t in 0..k {
+                            let mut acc = 0f64;
+                            for j in 0..n {
+                                acc += gy[i * n + j] * bv[t * n + j];
+                            }
+                            g[*a][i * k + t] += acc;
+                        }
+                    }
+                    for t in 0..k {
+                        for j in 0..n {
+                            let mut acc = 0f64;
+                            for i in 0..m {
+                                acc += av[i * k + t] * gy[i * n + j];
+                            }
+                            g[*b][t * n + j] += acc;
+                        }
+                    }
+                }
+                Op::Concat { parts } => {
+                    let mut at = 0usize;
+                    for &p in parts.iter() {
+                        let len = self.nodes[p].value.len();
+                        for i in 0..len {
+                            g[p][i] += gy[at + i];
+                        }
+                        at += len;
+                    }
+                }
+                Op::Normalize { a } => {
+                    // y_i = x_i / s: dL/dx_i = (g_i - sum_j g_j y_j) / s
+                    let y = self.nodes[id].value.clone();
+                    let s: f64 = self.nodes[*a].value.iter().sum();
+                    let gdoty: f64 = gy.iter().zip(&y).map(|(&gv, &yv)| gv * yv).sum();
+                    for (i, &gv) in gy.iter().enumerate() {
+                        g[*a][i] += (gv - gdoty) / s;
+                    }
+                }
+            }
+        }
+        Gradients { g }
+    }
+
+    fn accum_full(&self, g: &mut [Vec<f64>], dst: Var, gy: &[f64], w: f64) {
+        debug_assert_eq!(self.nodes[dst].value.len(), gy.len());
+        for (o, &gv) in g[dst].iter_mut().zip(gy) {
+            *o += w * gv;
+        }
+    }
+
+    /// Accumulate into a possibly-broadcast (length-1) left operand.
+    fn accum_bcast(&self, g: &mut [Vec<f64>], dst: Var, gy: &[f64], w: f64) {
+        if self.nodes[dst].value.len() == 1 && gy.len() != 1 {
+            g[dst][0] += w * gy.iter().sum::<f64>();
+        } else {
+            self.accum_full(g, dst, gy, w);
+        }
+    }
+}
+
+/// Per-node gradients from one [`Tape::backward`] sweep.
+pub struct Gradients {
+    g: Vec<Vec<f64>>,
+}
+
+impl Gradients {
+    pub fn wrt(&self, v: Var) -> &[f64] {
+        &self.g[v]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Central finite difference of a scalar tape program at `x`.
+    fn fd(build: impl Fn(&mut Tape, Var) -> Var, x: &[f64], h: f64) -> Vec<f64> {
+        let eval = |xs: &[f64]| -> f64 {
+            let mut t = Tape::new();
+            let leaf = t.leaf(xs);
+            let root = build(&mut t, leaf);
+            t.value(root)[0]
+        };
+        (0..x.len())
+            .map(|i| {
+                let mut up = x.to_vec();
+                up[i] += h;
+                let mut dn = x.to_vec();
+                dn[i] -= h;
+                (eval(&up) - eval(&dn)) / (2.0 * h)
+            })
+            .collect()
+    }
+
+    fn check(build: impl Fn(&mut Tape, Var) -> Var + Copy, x: &[f64]) {
+        let mut t = Tape::new();
+        let leaf = t.leaf(x);
+        let root = build(&mut t, leaf);
+        let grads = t.backward(root);
+        let analytic = grads.wrt(leaf);
+        let numeric = fd(build, x, 1e-6);
+        for (i, (a, n)) in analytic.iter().zip(&numeric).enumerate() {
+            assert!((a - n).abs() < 1e-6 * (1.0 + n.abs()),
+                    "grad[{i}]: analytic {a} vs fd {n}");
+        }
+    }
+
+    #[test]
+    fn sigmoid_sum_grad_matches_fd() {
+        check(|t, x| {
+            let s = t.sigmoid(x);
+            t.sum(s)
+        }, &[-3.0, -0.5, 0.0, 0.7, 4.0]);
+    }
+
+    #[test]
+    fn stable_sigmoid_extremes() {
+        assert_eq!(sigmoid(800.0), 1.0);
+        assert_eq!(sigmoid(-800.0), 0.0);
+        assert!((sigmoid(0.0) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn elementwise_chain_grad_matches_fd() {
+        // sum((1 - sigmoid(x))^2 * w) — the per-target tail-loss shape
+        check(|t, x| {
+            let g = t.sigmoid(x);
+            let one = t.constant(&[1.0, 1.0, 1.0, 1.0]);
+            let r = t.sub(one, g);
+            let sq = t.mul(r, r);
+            let w = t.constant(&[4.0, 2.0, 1.0, 0.5]);
+            let wl = t.mul(sq, w);
+            t.sum(wl)
+        }, &[1.5, 0.2, -0.4, -2.0]);
+    }
+
+    #[test]
+    fn broadcast_sub_grad_matches_fd() {
+        // scalar position against an index ramp: the soft-step argument
+        check(|t, x| {
+            let idx = t.constant(&[0.5, 1.5, 2.5, 3.5, 4.5]);
+            let d = t.sub(x, idx);
+            let z = t.scale(d, 1.0 / 0.7);
+            let g = t.sigmoid(z);
+            t.sum(g)
+        }, &[2.3]);
+    }
+
+    #[test]
+    fn matmul_grad_matches_fd() {
+        let b = [1.0, -2.0, 0.5, 3.0, 0.25, -1.0];
+        check(move |t, x| {
+            let bv = t.constant(&b); // (3, 2)
+            let y = t.matmul(x, 2, 3, bv, 2); // (2, 3) @ (3, 2)
+            let sq = t.mul(y, y);
+            t.sum(sq)
+        }, &[0.3, -1.2, 0.8, 2.0, -0.1, 0.6]);
+    }
+
+    #[test]
+    fn matmul_grad_wrt_right_operand() {
+        let a = [0.3, -1.2, 0.8, 2.0, -0.1, 0.6];
+        check(move |t, x| {
+            let av = t.constant(&a); // (2, 3)
+            let y = t.matmul(av, 2, 3, x, 2); // x is (3, 2)
+            let sq = t.mul(y, y);
+            t.sum(sq)
+        }, &[1.0, -2.0, 0.5, 3.0, 0.25, -1.0]);
+    }
+
+    #[test]
+    fn normalize_grad_matches_fd() {
+        check(|t, x| {
+            let y = t.normalize(x);
+            let w = t.constant(&[3.0, 1.0, -2.0, 0.5]);
+            let wy = t.mul(y, w);
+            t.sum(wy)
+        }, &[2.0, 1.0, 4.0, 0.5]);
+    }
+
+    #[test]
+    fn normalize_outputs_shares() {
+        let mut t = Tape::new();
+        let x = t.leaf(&[1.0, 3.0]);
+        let y = t.normalize(x);
+        assert_eq!(t.value(y), &[0.25, 0.75]);
+    }
+
+    #[test]
+    fn concat_routes_gradients_to_parts() {
+        let mut t = Tape::new();
+        let a = t.leaf(&[1.0, 2.0]);
+        let b = t.leaf(&[3.0]);
+        let c = t.concat(&[a, b]);
+        let w = t.constant(&[5.0, 7.0, 11.0]);
+        let wc = t.mul(c, w);
+        let root = t.sum(wc);
+        assert_eq!(t.value(root), &[5.0 + 14.0 + 33.0]);
+        let g = t.backward(root);
+        assert_eq!(g.wrt(a), &[5.0, 7.0]);
+        assert_eq!(g.wrt(b), &[11.0]);
+    }
+
+    #[test]
+    fn composite_objective_grad_matches_fd() {
+        // A miniature of the full gate objective: soft-step gates from a
+        // position scalar, tail loss via matmul, plus a cost term.
+        check(|t, x| {
+            let idx = t.constant(&[0.5, 1.5, 2.5, 3.5]);
+            let d = t.sub(x, idx);
+            let z = t.scale(d, 2.0);
+            let g = t.sigmoid(z);
+            let one = t.constant(&[1.0; 4]);
+            let r = t.sub(one, g);
+            let sq = t.mul(r, r);
+            let s2 = t.constant(&[9.0, 4.0, 1.0, 0.25]);
+            let tail = t.matmul(sq, 1, 4, s2, 1);
+            let cost = t.sum(g);
+            let cost_term = t.scale(cost, 0.35);
+            t.add(tail, cost_term)
+        }, &[1.8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn mismatched_lengths_rejected() {
+        let mut t = Tape::new();
+        let a = t.leaf(&[1.0, 2.0]);
+        let b = t.leaf(&[1.0, 2.0, 3.0]);
+        t.add(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "backward root must be scalar")]
+    fn vector_root_rejected() {
+        let mut t = Tape::new();
+        let a = t.leaf(&[1.0, 2.0]);
+        t.backward(a);
+    }
+
+    #[test]
+    fn constants_receive_no_reported_grad_but_leaves_do() {
+        let mut t = Tape::new();
+        let a = t.leaf(&[2.0]);
+        let c = t.constant(&[3.0]);
+        let y = t.mul(a, c);
+        let root = t.sum(y);
+        let g = t.backward(root);
+        assert_eq!(g.wrt(a), &[3.0]);
+    }
+}

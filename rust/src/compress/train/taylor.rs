@@ -1,0 +1,487 @@
+//! Taylor-series-stabilized gradient through the gated truncated-SVD
+//! reconstruction — the numerical fix that makes Dobi-SVD's truncation
+//! objective differentiable in practice (paper §3.1).
+//!
+//! The map is `A -> Â = U diag(g ∘ σ) Vᵀ` with `A = U diag(σ) Vᵀ` the
+//! thin SVD and `g` the per-singular-value truncation gates.  The exact
+//! adjoint routes through the SVD differential, whose rotation terms
+//! carry factors `F_ij = 1 / (σ_j² - σ_i²)`: for near-degenerate
+//! singular-value pairs the raw coefficient diverges (the singular
+//! subspace is arbitrarily rotatable, so a hard truncation boundary
+//! INSIDE a degenerate cluster has an exploding, direction-unstable
+//! gradient — exactly the failure the paper patches with a Taylor
+//! expansion of the offending terms).  [`stabilized_inv_gap`] replaces
+//! `1/d` with `d / (d² + ε²)`, the first Padé/Taylor regularization of
+//! the inverse gap: it agrees with `1/d` to O(ε²/d²) for well-separated
+//! pairs and is bounded by `1/(2ε)` at exact degeneracy.
+//!
+//! Derivation of the adjoint (validated to machine precision against
+//! JAX autodiff, and to 1e-4 against central finite differences by the
+//! tests below): with `T = Uᵀ Ḡ V`, `M = T Σ D_g`, `N = Tᵀ D_g Σ`,
+//! `K = F ∘ M`, `K' = F ∘ N`,
+//!
+//! ```text
+//! Ā = U [ (K + Kᵀ) Σ  +  diag(g ∘ diag(T))  +  Σ (K' + K'ᵀ) ] Vᵀ
+//!     + (I - U Uᵀ) Ḡ V D_g Vᵀ                 (thin part, m > n only)
+//! ḡ_j = σ_j T_jj
+//! ```
+//!
+//! Note the projection term needs no `Σ^{-1}`: the gate scaling
+//! `h(σ) = g σ` is linear in σ, so the usual small-singular-value
+//! instability of the thin-SVD adjoint cancels structurally.
+
+use super::super::svd::svd_thin_f64;
+
+/// Relative Taylor regularization scale: `ε = TAYLOR_EPS_REL · σ_max²`.
+/// Small enough that well-separated spectra (gap ≳ 1e-2·σ_max²) see an
+/// O(1e-8) relative perturbation — the finite-difference tests pass at
+/// 1e-4 — while exact degeneracy stays bounded by `1/(2ε)`.
+pub const TAYLOR_EPS_REL: f64 = 1e-6;
+
+/// Taylor-stabilized inverse spectral gap `1/d` with `d = σ_j² - σ_i²`:
+/// `d / (d² + ε²)`, `ε = TAYLOR_EPS_REL · scale2`.  The denominator is
+/// floored at `MIN_POSITIVE`: for an (all-)zero spectrum `ε²` underflows
+/// to 0.0 and the exact-degenerate gap would otherwise return 0/0 = NaN
+/// — the floor keeps it an exact 0 (and subnormal gaps merely large, not
+/// infinite).
+pub fn stabilized_inv_gap(d: f64, scale2: f64) -> f64 {
+    let eps = TAYLOR_EPS_REL * scale2;
+    d / (d * d + eps * eps).max(f64::MIN_POSITIVE)
+}
+
+/// Output of [`gated_recon_grad`]: the reconstruction loss pieces and the
+/// stabilized adjoints.
+pub struct GatedGrad {
+    /// `Â = U diag(g∘σ) Vᵀ`, row-major (m, n).
+    pub recon: Vec<f64>,
+    /// `dL/dA` for `L = Σ ḡ ∘ Â` with the provided upstream `ḡ = d_recon`.
+    pub d_a: Vec<f64>,
+    /// `dL/dg_j = σ_j uⱼᵀ Ḡ vⱼ`.
+    pub d_g: Vec<f64>,
+    /// Singular values of `A`, descending.
+    pub sigma: Vec<f64>,
+}
+
+/// Gated-truncation reconstruction and its stabilized gradients.
+///
+/// `a` is row-major (m, n); `gates` has `min(m, n)` entries in [0, 1];
+/// `d_recon` is the upstream gradient `∂L/∂Â` (same shape as `a`).
+/// Works for any aspect ratio (wide inputs route through the transpose,
+/// mirroring `svd_thin`).
+pub fn gated_recon_grad(a: &[f64], m: usize, n: usize, gates: &[f64],
+                        d_recon: &[f64]) -> GatedGrad {
+    assert_eq!(a.len(), m * n, "gated_recon_grad: a is not {m}x{n}");
+    assert_eq!(d_recon.len(), m * n, "gated_recon_grad: upstream is not {m}x{n}");
+    assert_eq!(gates.len(), m.min(n), "gated_recon_grad: need min(m, n) gates");
+    if m >= n {
+        return gated_recon_grad_tall(a, m, n, gates, d_recon);
+    }
+    // Wide: SVD(Aᵀ) = V Σ Uᵀ shares singular values, and the gated
+    // reconstruction commutes with transposition, so run the tall path on
+    // Aᵀ with Ḡᵀ and transpose the matrix outputs back.
+    let at = transpose(a, m, n);
+    let dt = transpose(d_recon, m, n);
+    let g = gated_recon_grad_tall(&at, n, m, gates, &dt);
+    GatedGrad {
+        recon: transpose(&g.recon, n, m),
+        d_a: transpose(&g.d_a, n, m),
+        d_g: g.d_g,
+        sigma: g.sigma,
+    }
+}
+
+fn transpose(a: &[f64], m: usize, n: usize) -> Vec<f64> {
+    let mut t = vec![0f64; n * m];
+    for i in 0..m {
+        for j in 0..n {
+            t[j * m + i] = a[i * n + j];
+        }
+    }
+    t
+}
+
+fn gated_recon_grad_tall(a: &[f64], m: usize, n: usize, gates: &[f64],
+                         d_recon: &[f64]) -> GatedGrad {
+    debug_assert!(m >= n);
+    // Full f64 SVD: the finite-difference validation runs at 1e-5 steps,
+    // which an f32-rounded factorization could not support.
+    let svd = svd_thin_f64(a, m, n);
+    let (u, s, vt) = (svd.u, svd.s, svd.vt); // (m, n), n, (n, n)
+
+    // Â = U diag(g σ) Vᵀ
+    let mut recon = vec![0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let h = gates[j] * s[j];
+            if h != 0.0 {
+                let uij = u[i * n + j];
+                for c in 0..n {
+                    recon[i * n + c] += uij * h * vt[j * n + c];
+                }
+            }
+        }
+    }
+
+    // T = Uᵀ Ḡ V  (n, n): T_jc = Σ_i u_ij (Ḡ V)_ic
+    let gv = {
+        // Ḡ V: (m, n); V_tc = vt[c * n + t]
+        let mut out = vec![0f64; m * n];
+        for i in 0..m {
+            for t in 0..n {
+                let x = d_recon[i * n + t];
+                if x != 0.0 {
+                    for c in 0..n {
+                        out[i * n + c] += x * vt[c * n + t];
+                    }
+                }
+            }
+        }
+        out
+    };
+    let mut tmat = vec![0f64; n * n];
+    for j in 0..n {
+        for c in 0..n {
+            let mut acc = 0f64;
+            for i in 0..m {
+                acc += u[i * n + j] * gv[i * n + c];
+            }
+            tmat[j * n + c] = acc;
+        }
+    }
+
+    // dL/dg_j = σ_j T_jj
+    let d_g: Vec<f64> = (0..n).map(|j| s[j] * tmat[j * n + j]).collect();
+
+    // Rotation terms with the stabilized inverse gaps.
+    // K_ij  = F_ij M_ij,  M_ij = T_ij σ_j g_j
+    // K'_ij = F_ij N_ij,  N_ij = T_ji g_j σ_j
+    let scale2 = s[0] * s[0];
+    let mut core = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                let f = stabilized_inv_gap(s[j] * s[j] - s[i] * s[i], scale2);
+                let k_ij = f * tmat[i * n + j] * s[j] * gates[j];
+                let kp_ij = f * tmat[j * n + i] * gates[j] * s[j];
+                // (K + Kᵀ)Σ lands σ_j on column j; Σ(K' + K'ᵀ) lands σ_i
+                // on row i — accumulate each K entry into both places.
+                core[i * n + j] += k_ij * s[j];
+                core[j * n + i] += k_ij * s[i];
+                core[i * n + j] += kp_ij * s[i];
+                core[j * n + i] += kp_ij * s[j];
+            }
+        }
+    }
+    for j in 0..n {
+        core[j * n + j] += gates[j] * tmat[j * n + j];
+    }
+
+    // Ā = U core Vᵀ + (I - UUᵀ) Ḡ V D_g Vᵀ.  First cv = core Vᵀ (n, n),
+    // then accumulate U cv.
+    let mut cv = vec![0f64; n * n];
+    for j in 0..n {
+        for t in 0..n {
+            let x = core[j * n + t];
+            if x != 0.0 {
+                for c in 0..n {
+                    cv[j * n + c] += x * vt[t * n + c];
+                }
+            }
+        }
+    }
+    let mut d_a = vec![0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let uij = u[i * n + j];
+            if uij != 0.0 {
+                for c in 0..n {
+                    d_a[i * n + c] += uij * cv[j * n + c];
+                }
+            }
+        }
+    }
+    // thin projection part: W = Ḡ V D_g; Ā += (W - U (Uᵀ W)) Vᵀ
+    let mut w = gv;
+    for i in 0..m {
+        for j in 0..n {
+            w[i * n + j] *= gates[j];
+        }
+    }
+    let mut utw = vec![0f64; n * n];
+    for j in 0..n {
+        for c in 0..n {
+            let mut acc = 0f64;
+            for i in 0..m {
+                acc += u[i * n + j] * w[i * n + c];
+            }
+            utw[j * n + c] = acc;
+        }
+    }
+    let mut proj = w; // becomes W - U (Uᵀ W)
+    for i in 0..m {
+        for j in 0..n {
+            let uij = u[i * n + j];
+            if uij != 0.0 {
+                for c in 0..n {
+                    proj[i * n + c] -= uij * utw[j * n + c];
+                }
+            }
+        }
+    }
+    for i in 0..m {
+        for t in 0..n {
+            let x = proj[i * n + t];
+            if x != 0.0 {
+                for c in 0..n {
+                    d_a[i * n + c] += x * vt[t * n + c];
+                }
+            }
+        }
+    }
+    GatedGrad { recon, d_a, d_g, sigma: s }
+}
+
+/// Frobenius norm of the stabilized `dL/dA` under an all-ones downstream
+/// probe on the canonical spectral embedding `A = diag(σ)` — a per-target
+/// conditioning score for the truncation objective.  Spectra with
+/// near-degenerate pairs straddling partially-open gates score high
+/// (their reconstruction rotates freely under calibration noise); the
+/// train driver damps those targets' learning rates accordingly.
+///
+/// Closed form: on the diagonal embedding `U = V = I` and `T = Ḡ = 1`,
+/// so the projection term vanishes and the adjoint core collapses to the
+/// symmetric matrix
+///
+/// ```text
+/// core_jj   = g_j
+/// core_ij   = F_ij (σ_j g_j - σ_i g_i)(σ_i + σ_j)        i ≠ j
+/// ```
+///
+/// (substitute `T = 1` into the `(K+Kᵀ)Σ + Σ(K'+K'ᵀ)` terms and collect;
+/// the i↔j contributions coincide).  Evaluating it directly is O(r²)
+/// with no SVD — on real-model spectra (r in the thousands) the general
+/// [`gated_recon_grad`] route would pay an O(r³) Jacobi factorization of
+/// an already-diagonal matrix per target.  A test pins this closed form
+/// to the general path.
+pub fn spectrum_sensitivity(sigma: &[f64], gates: &[f64]) -> f64 {
+    let r = sigma.len();
+    assert_eq!(gates.len(), r, "sensitivity: gates/sigma length mismatch");
+    if r == 0 {
+        return 0.0;
+    }
+    let scale2 = sigma[0] * sigma[0];
+    let mut fro2 = 0f64;
+    for j in 0..r {
+        fro2 += gates[j] * gates[j];
+        for i in 0..j {
+            let f = stabilized_inv_gap(sigma[j] * sigma[j] - sigma[i] * sigma[i], scale2);
+            let core = f * (sigma[j] * gates[j] - sigma[i] * gates[i])
+                * (sigma[i] + sigma[j]);
+            fro2 += 2.0 * core * core;
+        }
+    }
+    (fro2 / r as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::testutil::randv;
+    use crate::mathx::XorShift;
+
+    /// Build (m, n) with a prescribed spectrum via two random rotations
+    /// (U0, V0 from the f64 SVD of seeded Gaussian matrices).
+    fn with_spectrum(sigmas: &[f64], m: usize, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = XorShift::new(seed);
+        let ru: Vec<f64> = randv(&mut rng, m * m, 1.0).iter().map(|&x| x as f64).collect();
+        let rv: Vec<f64> = randv(&mut rng, n * n, 1.0).iter().map(|&x| x as f64).collect();
+        let us = svd_thin_f64(&ru, m, m);
+        let vs = svd_thin_f64(&rv, n, n);
+        let r = m.min(n);
+        assert!(sigmas.len() <= r);
+        let mut a = vec![0f64; m * n];
+        for (k, &sg) in sigmas.iter().enumerate() {
+            for i in 0..m {
+                for j in 0..n {
+                    a[i * n + j] += us.u[i * m + k] * sg * vs.u[j * n + k];
+                }
+            }
+        }
+        a
+    }
+
+    fn probe_loss(a: &[f64], m: usize, n: usize, gates: &[f64], c: &[f64]) -> f64 {
+        let zeros = vec![0f64; m * n];
+        let g = gated_recon_grad(a, m, n, gates, &zeros);
+        g.recon.iter().zip(c).map(|(&r, &w)| r * w).sum()
+    }
+
+    /// The acceptance-criterion test: central finite differences validate
+    /// the Taylor-stabilized gradient to 1e-4 on a synthetic
+    /// near-degenerate spectrum (gap 1% of σ_max — wide enough that the
+    /// true gradient exists, narrow enough that the raw `1/(σ²-σ²)`
+    /// coefficients are ~100x amplified).
+    #[test]
+    fn fd_validates_gradient_on_near_degenerate_spectrum() {
+        let (m, n) = (6usize, 5usize);
+        let a = with_spectrum(&[3.0, 1.01, 1.0, 0.3, 0.05], m, n, 41);
+        let mut rng = XorShift::new(42);
+        let gates: Vec<f64> = (0..n).map(|_| {
+            super::super::tape::sigmoid(rng.normal())
+        }).collect();
+        let c: Vec<f64> = randv(&mut rng, m * n, 1.0).iter().map(|&x| x as f64).collect();
+        let g = gated_recon_grad(&a, m, n, &gates, &c);
+        // h balances central-difference truncation (O(h²), amplified by
+        // the near-degenerate third derivative) against the Jacobi SVD's
+        // 1e-9 convergence noise divided by 2h.
+        let h = 1e-4;
+        let mut worst = 0f64;
+        let mut gmax = 0f64;
+        for p in 0..m * n {
+            let mut up = a.clone();
+            up[p] += h;
+            let mut dn = a.clone();
+            dn[p] -= h;
+            let fd = (probe_loss(&up, m, n, &gates, &c)
+                      - probe_loss(&dn, m, n, &gates, &c)) / (2.0 * h);
+            worst = worst.max((g.d_a[p] - fd).abs());
+            gmax = gmax.max(fd.abs());
+        }
+        assert!(worst < 1e-4 * gmax.max(1.0),
+                "stabilized dA drifted {worst} from FD (scale {gmax})");
+        // gate gradient to the same bar
+        for j in 0..n {
+            let mut up = gates.clone();
+            up[j] += h;
+            let mut dn = gates.clone();
+            dn[j] -= h;
+            let fd = (probe_loss(&a, m, n, &up, &c) - probe_loss(&a, m, n, &dn, &c))
+                / (2.0 * h);
+            assert!((g.d_g[j] - fd).abs() < 1e-4 * fd.abs().max(1.0),
+                    "d_g[{j}] {} vs fd {fd}", g.d_g[j]);
+        }
+    }
+
+    #[test]
+    fn fd_validates_gradient_wide_and_square() {
+        let mut rng = XorShift::new(43);
+        for &(m, n) in &[(4usize, 7usize), (5, 5)] {
+            let r = m.min(n);
+            let a: Vec<f64> = randv(&mut rng, m * n, 0.8).iter().map(|&x| x as f64).collect();
+            let gates: Vec<f64> =
+                (0..r).map(|_| super::super::tape::sigmoid(rng.normal())).collect();
+            let c: Vec<f64> = randv(&mut rng, m * n, 1.0).iter().map(|&x| x as f64).collect();
+            let g = gated_recon_grad(&a, m, n, &gates, &c);
+            let h = 1e-4;
+            for p in (0..m * n).step_by(3) {
+                let mut up = a.clone();
+                up[p] += h;
+                let mut dn = a.clone();
+                dn[p] -= h;
+                let fd = (probe_loss(&up, m, n, &gates, &c)
+                          - probe_loss(&dn, m, n, &gates, &c)) / (2.0 * h);
+                assert!((g.d_a[p] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                        "{m}x{n} dA[{p}]: {} vs {fd}", g.d_a[p]);
+            }
+        }
+    }
+
+    /// Exactly degenerate pairs: the raw adjoint is unbounded (the true
+    /// map is non-differentiable), the stabilized one must stay finite and
+    /// below the ε-bound — the whole point of the Taylor fix.
+    #[test]
+    fn exact_degeneracy_stays_bounded() {
+        let (m, n) = (6usize, 5usize);
+        let a = with_spectrum(&[2.0, 1.0, 1.0, 1.0, 1e-9], m, n, 44);
+        let gates = [0.9, 0.8, 0.5, 0.2, 0.1];
+        let c = vec![1.0; m * n];
+        let g = gated_recon_grad(&a, m, n, &gates, &c);
+        assert!(g.d_a.iter().all(|x| x.is_finite()), "degenerate gradient not finite");
+        // |F| <= 1/(2ε) with ε = TAYLOR_EPS_REL σ_max²; the full contraction
+        // adds O(n²) bounded terms — generous structural bound:
+        let bound = (n * n) as f64 / (2.0 * TAYLOR_EPS_REL) * 10.0;
+        assert!(g.d_a.iter().all(|&x| x.abs() < bound),
+                "stabilized gradient exceeded the ε-bound");
+    }
+
+    #[test]
+    fn stabilized_gap_limits() {
+        // far from degeneracy: matches 1/d to O(ε²/d²)
+        let d = 0.5;
+        assert!((stabilized_inv_gap(d, 1.0) - 1.0 / d).abs() < 1e-10);
+        // at degeneracy: exactly 0 (odd function), near it: bounded
+        assert_eq!(stabilized_inv_gap(0.0, 1.0), 0.0);
+        let eps = TAYLOR_EPS_REL;
+        assert!(stabilized_inv_gap(eps, 1.0) <= 1.0 / (2.0 * eps) + 1.0);
+        // odd symmetry
+        assert_eq!(stabilized_inv_gap(-d, 1.0), -stabilized_inv_gap(d, 1.0));
+        // zero/denormal scale (all-zero spectrum): never NaN/inf
+        assert_eq!(stabilized_inv_gap(0.0, 0.0), 0.0);
+        assert!(stabilized_inv_gap(1e-300, 0.0).is_finite());
+    }
+
+    #[test]
+    fn zero_spectrum_sensitivity_is_finite() {
+        // a pruned / zero-init target: sensitivity must stay finite so it
+        // cannot poison the mean-based LR damping in learn_ranks
+        let s = spectrum_sensitivity(&[0.0, 0.0, 0.0], &[0.9, 0.5, 0.1]);
+        assert!(s.is_finite(), "zero spectrum gave {s}");
+        // only the diagonal (gate) terms survive: sqrt(sum g² / r)
+        let want = ((0.81 + 0.25 + 0.01f64) / 3.0).sqrt();
+        assert!((s - want).abs() < 1e-12, "{s} vs {want}");
+    }
+
+    #[test]
+    fn reconstruction_matches_gated_spectrum() {
+        // On A = diag(σ): Â must be diag(g∘σ) exactly (up to SVD noise).
+        let sigma = [4.0, 2.0, 1.0];
+        let gates = [1.0, 0.5, 0.0];
+        let mut a = vec![0f64; 9];
+        for j in 0..3 {
+            a[j * 3 + j] = sigma[j];
+        }
+        let zeros = vec![0f64; 9];
+        let g = gated_recon_grad(&a, 3, 3, &gates, &zeros);
+        for i in 0..3 {
+            for j in 0..3 {
+                let want = if i == j { gates[j] * sigma[j] } else { 0.0 };
+                assert!((g.recon[i * 3 + j] - want).abs() < 1e-5,
+                        "recon[{i},{j}] = {}", g.recon[i * 3 + j]);
+            }
+        }
+        assert!((g.sigma[0] - 4.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sensitivity_closed_form_matches_general_adjoint() {
+        // The O(r²) closed form must agree with running the full stabilized
+        // adjoint on the diagonal embedding under the all-ones probe.
+        let sigma = [5.0f64, 2.5, 2.49, 0.9, 0.1];
+        let gates = [0.97, 0.8, 0.55, 0.3, 0.02];
+        let r = sigma.len();
+        let mut a = vec![0f64; r * r];
+        for j in 0..r {
+            a[j * r + j] = sigma[j];
+        }
+        let ones = vec![1.0; r * r];
+        let g = gated_recon_grad(&a, r, r, &gates, &ones);
+        let general = (g.d_a.iter().map(|&x| x * x).sum::<f64>() / r as f64).sqrt();
+        let closed = spectrum_sensitivity(&sigma, &gates);
+        assert!((closed - general).abs() < 1e-6 * general.max(1.0),
+                "closed form {closed} vs general adjoint {general}");
+    }
+
+    #[test]
+    fn sensitivity_ranks_degenerate_spectra_higher() {
+        // same energy, one spectrum has a near-degenerate pair under a
+        // half-open gate: its truncation gradient must be far larger
+        let clean = [3.0f64, 2.0, 1.0, 0.5];
+        let degen = [3.0f64, 1.50001, 1.5, 0.5];
+        let gates = [1.0, 0.6, 0.4, 0.1];
+        let s_clean = spectrum_sensitivity(&clean, &gates);
+        let s_degen = spectrum_sensitivity(&degen, &gates);
+        assert!(s_clean.is_finite() && s_degen.is_finite());
+        assert!(s_degen > 4.0 * s_clean,
+                "degenerate spectrum not flagged: {s_degen} vs {s_clean}");
+    }
+}

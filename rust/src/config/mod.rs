@@ -88,6 +88,42 @@ impl std::fmt::Display for Precision {
     }
 }
 
+/// How `dobi compress` allocates ranks across targets under the global
+/// budget (`--alloc`):
+///
+/// * `Waterfill` — the SVD-LLM-style greedy discrete waterfill
+///   (`compress::rank::Waterfill`), the fast baseline.
+/// * `Learned`   — the paper's differentiable truncation-position
+///   optimizer (`compress::train::LearnedAlloc`): sigmoid gates over the
+///   whitened spectra, Adam under an exact Lagrangian budget
+///   renormalization, waterfill-guarded rounding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AllocMode {
+    #[default]
+    Waterfill,
+    Learned,
+}
+
+impl AllocMode {
+    /// Parse an `--alloc` flag value.
+    pub fn parse(s: &str) -> Result<AllocMode> {
+        Ok(match s {
+            "waterfill" | "greedy" => AllocMode::Waterfill,
+            "learned" | "dobi" | "train" => AllocMode::Learned,
+            other => bail!("unknown alloc mode `{other}` (expected waterfill|learned)"),
+        })
+    }
+}
+
+impl std::fmt::Display for AllocMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AllocMode::Waterfill => "waterfill",
+            AllocMode::Learned => "learned",
+        })
+    }
+}
+
 /// `dobi compress` knobs (defaults mirror the python pipeline's
 /// calibration schedule at nano scale).
 #[derive(Debug, Clone)]
@@ -105,6 +141,15 @@ pub struct CompressConfig {
     pub seed: u64,
     /// Rank floor per target (every target keeps at least this rank).
     pub k_min: usize,
+    /// Rank-allocation policy (waterfill baseline vs learned positions).
+    pub alloc: AllocMode,
+    /// Learned-mode optimization steps (`--train-iters`).
+    pub train_iters: usize,
+    /// Learned-mode Adam learning rate (`--train-lr`).
+    pub train_lr: f64,
+    /// Worker threads for the one-sided Jacobi SVD sweeps
+    /// (`--svd-threads`; bit-identical results at any count).
+    pub svd_threads: usize,
 }
 
 impl Default for CompressConfig {
@@ -118,6 +163,10 @@ impl Default for CompressConfig {
             calib_seq: 32,
             seed: 11,
             k_min: 1,
+            alloc: AllocMode::Waterfill,
+            train_iters: 300,
+            train_lr: 0.3,
+            svd_threads: 1,
         }
     }
 }
@@ -228,6 +277,9 @@ pub struct Variant {
     pub perturb_x: Option<usize>,
     /// per-target truncation ranks (factorized variants only)
     pub ranks: BTreeMap<String, usize>,
+    /// rank-allocation mode that produced the variant ("waterfill" /
+    /// "learned"); older manifests without the field read as waterfill
+    pub alloc: String,
 }
 
 impl Variant {
@@ -345,6 +397,11 @@ impl Manifest {
                 ref_ppl,
                 perturb_x: v.get("perturb_x").and_then(Json::as_usize),
                 ranks,
+                alloc: v
+                    .get("alloc")
+                    .and_then(Json::as_str)
+                    .unwrap_or("waterfill")
+                    .to_string(),
             });
         }
         let mut corpora = BTreeMap::new();
@@ -415,7 +472,7 @@ mod tests {
             kind: "factorized".into(), kernel: "xla".into(), weights: "w".into(),
             param_names: vec![], hlo, inputs: vec!["tokens".into()],
             stored_params: 0, bytes: 0, ref_ppl: BTreeMap::new(), perturb_x: None,
-            ranks: BTreeMap::new(),
+            ranks: BTreeMap::new(), alloc: "waterfill".into(),
         };
         assert_eq!(v.pick_batch(3, 32), Some(4));
         assert_eq!(v.pick_batch(1, 32), Some(1));
@@ -456,6 +513,20 @@ mod tests {
         assert!(c.calib_batches >= 1 && c.calib_batch >= 1 && c.calib_seq >= 1);
         assert_eq!(c.precision, Precision::Q8);
         assert!(c.budget.is_none());
+        assert_eq!(c.alloc, AllocMode::Waterfill, "waterfill stays the default");
+        assert!(c.train_iters >= 1 && c.train_lr > 0.0);
+        assert_eq!(c.svd_threads, 1);
+    }
+
+    #[test]
+    fn alloc_mode_parses() {
+        assert_eq!(AllocMode::parse("waterfill").unwrap(), AllocMode::Waterfill);
+        assert_eq!(AllocMode::parse("greedy").unwrap(), AllocMode::Waterfill);
+        assert_eq!(AllocMode::parse("learned").unwrap(), AllocMode::Learned);
+        assert_eq!(AllocMode::parse("dobi").unwrap(), AllocMode::Learned);
+        assert!(AllocMode::parse("magic").is_err());
+        assert_eq!(AllocMode::Learned.to_string(), "learned");
+        assert_eq!(AllocMode::default(), AllocMode::Waterfill);
     }
 
     #[test]

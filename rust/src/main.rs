@@ -15,7 +15,8 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 
 use dobi::cli::Args;
-use dobi::config::{BackendKind, CompressConfig, EngineConfig, Manifest, Precision, ServeConfig};
+use dobi::config::{AllocMode, BackendKind, CompressConfig, EngineConfig, Manifest, Precision,
+                   ServeConfig};
 use dobi::coordinator::Engine;
 use dobi::corpusio;
 use dobi::evalx;
@@ -25,7 +26,8 @@ use dobi::serve::ServeRuntime;
 use dobi::server::Server;
 
 fn main() {
-    let args = Args::from_env(&["verbose", "all", "tasks", "synth", "stream", "no-stream"]);
+    let args = Args::from_env(&["verbose", "all", "tasks", "synth", "stream", "no-stream",
+                                "replace"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -67,12 +69,16 @@ fn run(args: &Args) -> Result<()> {
                  \x20      [--artifacts DIR] [--backend auto|pjrt|native] ...\n\
                  \n\
                  inspect                      list variants and storage accounting\n\
-                 compress --out DIR | --append DIR [--ratio R]\n\
+                 compress --out DIR | --append DIR [--replace] [--ratio R]\n\
+                 \x20        [--alloc waterfill|learned] [--train-iters N] [--train-lr F]\n\
                  \x20        [--precision q8|f16|f32] [--variant ID | --synth]\n\
-                 \x20        [--calib FILE.tokbin] [--budget PARAMS]\n\
+                 \x20        [--calib FILE.tokbin] [--budget PARAMS] [--svd-threads T]\n\
                  \x20        native Dobi compression: dense store ->\n\
                  \x20        rank-allocated remapped factors; --append merges\n\
                  \x20        the variant into an existing artifacts dir\n\
+                 \x20        (--replace swaps a resident variant and GCs its\n\
+                 \x20        orphaned store); --alloc learned runs the\n\
+                 \x20        differentiable truncation-position optimizer\n\
                  eval --variant ID [--tasks]  PPL on all corpora (+ task suites)\n\
                  generate --variant ID --prompt TEXT [--tokens N] [--temperature T]\n\
                  serve --variants A,B --port P [--max-sessions N]\n\
@@ -106,13 +112,14 @@ fn inspect(args: &Args) -> Result<()> {
     }
     let mut t = dobi::bench::Table::new(
         "variants",
-        &["id", "method", "ratio", "kind", "stored", "MB", "shapes", "ppl(wiki)"],
+        &["id", "method", "ratio", "alloc", "kind", "stored", "MB", "shapes", "ppl(wiki)"],
     );
     for v in &m.variants {
         t.row(vec![
             v.id.clone(),
             v.method.clone(),
             format!("{:.1}", v.ratio),
+            if v.kind == "factorized" { v.alloc.clone() } else { "-".into() },
             v.kind.clone(),
             format!("{}", v.stored_params),
             format!("{:.2}", v.bytes as f64 / 1e6),
@@ -132,7 +139,8 @@ fn inspect(args: &Args) -> Result<()> {
 /// factors -> a self-contained artifacts dir servable by `--backend
 /// native` (factor-only manifest, no HLO entries).
 fn compress(args: &Args) -> Result<()> {
-    use dobi::compress::{append_artifacts, calib, compress_model, write_artifacts};
+    use dobi::compress::{append_artifacts_opts, calib, compress_model, write_artifacts,
+                         AllocPick};
     use dobi::lowrank::synth::{tiny_model, TinyDims};
     use dobi::lowrank::FactorizedModel;
     use dobi::storage::Store;
@@ -144,6 +152,7 @@ fn compress(args: &Args) -> Result<()> {
         (None, Some(o)) => PathBuf::from(o),
         (None, None) => return Err(anyhow!("--out DIR (or --append DIR) required")),
     };
+    let defaults = CompressConfig::default();
     let cfg = CompressConfig {
         ratio: args.f64_or("ratio", 0.4),
         budget: args.get("budget").map(|v| {
@@ -155,6 +164,10 @@ fn compress(args: &Args) -> Result<()> {
         calib_seq: args.usize_or("calib-seq", 32),
         seed: args.usize_or("seed", 11) as u64,
         k_min: args.usize_or("k-min", 1),
+        alloc: AllocMode::parse(args.get_or("alloc", "waterfill"))?,
+        train_iters: args.usize_or("train-iters", defaults.train_iters),
+        train_lr: args.f64_or("train-lr", defaults.train_lr),
+        svd_threads: args.usize_or("svd-threads", 1),
     };
     let (model_name, dense) = if args.has("synth") {
         ("tiny".to_string(), tiny_model(TinyDims::nano(), 0, false))
@@ -178,15 +191,26 @@ fn compress(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let art = compress_model(&dense, &model_name, &cfg, &calib_tokens)?;
     let wpath = if append.is_some() {
-        append_artifacts(&out, &art)?
+        append_artifacts_opts(&out, &art, args.has("replace"))?
     } else {
         write_artifacts(&out, &art)?
     };
     let dt = t0.elapsed().as_secs_f64();
 
+    if let Some(r) = &art.train_report {
+        let picked = match r.picked {
+            AllocPick::Learned => "learned rounding (strictly better surrogate)",
+            AllocPick::Waterfill => "waterfill rounding (guard: greedy was >= as good)",
+        };
+        println!(
+            "[train] {} iters: tail {:.5} -> {:.5}, lambda {:.4}, expected cost {:.0}\n\
+             [train] surrogate learned {:.5} vs waterfill {:.5} -> {picked}",
+            r.iters, r.tail_init, r.tail_final, r.lambda, r.expected_cost,
+            r.learned_surrogate, r.waterfill_surrogate);
+    }
     let mut t = dobi::bench::Table::new(
-        &format!("dobi compress — {} @ ratio {:.2} [{}]", art.variant_id, cfg.ratio,
-                 cfg.precision),
+        &format!("dobi compress — {} @ ratio {:.2} [{}] alloc {}", art.variant_id, cfg.ratio,
+                 cfg.precision, cfg.alloc),
         &["target", "m x n", "rank", "kept", "trunc loss"],
     );
     for spec in &art.spectra {

@@ -12,7 +12,7 @@
 use std::sync::Arc;
 
 use dobi::compress::{calib, compress_model, eval_loss, write_artifacts, CompressedArtifact};
-use dobi::config::{BackendKind, CompressConfig, EngineConfig, Manifest, Precision};
+use dobi::config::{AllocMode, BackendKind, CompressConfig, EngineConfig, Manifest, Precision};
 use dobi::coordinator::{Engine, SubmitError};
 use dobi::evalx;
 use dobi::lowrank::synth::{tiny_model, TinyDims};
@@ -155,6 +155,129 @@ fn engine_serves_compressed_any_seq_variant() {
         other => panic!("expected BadShape for empty window, got {other:?}"),
     }
     engine.shutdown();
+}
+
+/// The ISSUE acceptance criterion for the differentiable allocator:
+/// learned allocation at ratio 0.4 on the compress-fixture twin achieves
+/// eval loss <= the greedy waterfill baseline **at the same stored-param
+/// budget**.  The learned rounding is waterfill-guarded, so ties collapse
+/// to the identical plan (identical eval loss) and strict improvements of
+/// the whitened surrogate are the only way the plans can differ.  On THIS
+/// fixture the optimizer rounds to the exact waterfill allocation
+/// (pre-verified by numeric replay), so the comparison is an identity; if
+/// the fixture ever changes such that the guard picks a strictly-better
+/// surrogate plan, the eval inequality becomes an expectation rather than
+/// a construction — re-verify before tightening anything here.
+#[test]
+fn learned_alloc_at_matched_budget_never_loses_to_waterfill() {
+    let dense = tiny_model(dims(), 0, false);
+    let toks = corpus();
+    let wf = compress_model(&dense, "tiny", &cfg(0.4, Precision::F32), &toks)
+        .expect("waterfill compression");
+    let mut learned_cfg = cfg(0.4, Precision::F32);
+    learned_cfg.alloc = AllocMode::Learned;
+    learned_cfg.budget = Some(wf.stored_params); // the SAME stored-param budget
+    learned_cfg.train_iters = 150;
+    let learned = compress_model(&dense, "tiny", &learned_cfg, &toks)
+        .expect("learned compression");
+    assert!(learned.stored_params <= wf.stored_params,
+            "learned overspent the matched budget: {} vs {}",
+            learned.stored_params, wf.stored_params);
+    let l_wf = eval_loss(&wf.reference, &toks, 2, 16, 6, 5).unwrap();
+    let l_learned = eval_loss(&learned.reference, &toks, 2, 16, 6, 5).unwrap();
+    assert!(l_learned <= l_wf + 1e-9,
+            "learned allocation lost to waterfill at the same budget: \
+             {l_learned} vs {l_wf}");
+    // the guard's bookkeeping is visible and consistent
+    let report = learned.train_report.as_ref().expect("learned mode reports");
+    assert!(report.learned_surrogate <= report.waterfill_surrogate + 1e-12
+            || learned.ranks.values().sum::<usize>() == wf.ranks.values().sum::<usize>());
+    // and the learned variant serves through the native backend like any
+    // other compressed store
+    let dir = std::env::temp_dir().join("dobi_compress_it_learned");
+    let _ = std::fs::remove_dir_all(&dir);
+    write_artifacts(&dir, &learned).unwrap();
+    let m = Manifest::load(&dir).unwrap();
+    let v = m.variant(&learned.variant_id).unwrap();
+    assert_eq!(v.alloc, "learned");
+    let loaded = NativeBackend.load_variant(&m, &learned.variant_id, None).unwrap();
+    let l_store = eval_loss(&loaded.model, &toks, 2, 16, 6, 5).unwrap();
+    assert!((l_store - l_learned).abs() < 1e-3,
+            "served learned store drifted: {l_store} vs {l_learned}");
+}
+
+/// Acceptance criterion for the autodiff machinery, driven through the
+/// public API: central finite differences validate the tape objective
+/// gradient AND the Taylor-stabilized gated-SVD-reconstruction gradient
+/// to 1e-4 on a synthetic near-degenerate spectrum (pair gap 1% of the
+/// top singular value, where the raw 1/(σ²-σ²) coefficients are ~100x
+/// amplified but the true gradient still exists).
+#[test]
+fn finite_differences_validate_tape_and_taylor_gradients() {
+    use dobi::compress::train::tape::Tape;
+    use dobi::compress::train::taylor::gated_recon_grad;
+
+    // --- tape: a gate-objective-shaped program over a scalar position ---
+    let sigma2 = [9.0f64, 4.0, 1.0, 0.25, 0.01];
+    let eval = |p: f64| -> (f64, f64) {
+        let mut t = Tape::new();
+        let pos = t.leaf(&[p]);
+        let idx = t.constant(&[0.5, 1.5, 2.5, 3.5, 4.5]);
+        let d = t.sub(pos, idx);
+        let z = t.scale(d, 1.0 / 0.4);
+        let g = t.sigmoid(z);
+        let ones = t.constant(&[1.0; 5]);
+        let omg = t.sub(ones, g);
+        let sq = t.mul(omg, omg);
+        let s2 = t.constant(&sigma2);
+        let tail = t.matmul(sq, 1, 5, s2, 1);
+        let cost = t.sum(g);
+        let pen = t.scale(cost, 0.3);
+        let root = t.add(tail, pen);
+        let grad = t.backward(root);
+        (t.value(root)[0], grad.wrt(pos)[0])
+    };
+    let (_, analytic) = eval(2.3);
+    let h = 1e-6;
+    let fd = (eval(2.3 + h).0 - eval(2.3 - h).0) / (2.0 * h);
+    assert!((analytic - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+            "tape gradient {analytic} vs finite difference {fd}");
+
+    // --- taylor: near-degenerate spectrum through the gated SVD recon ---
+    let (m, n) = (6usize, 5usize);
+    // diag embedding keeps the spectrum exact: σ = [3, 1.01, 1.0, .3, .05]
+    let sigma = [3.0f64, 1.01, 1.0, 0.3, 0.05];
+    let mut a = vec![0f64; m * n];
+    for (j, &s) in sigma.iter().enumerate() {
+        a[j * n + j] = s;
+    }
+    let gates = [0.95, 0.7, 0.45, 0.2, 0.05];
+    // fixed non-uniform probe so rotation terms participate
+    let probe: Vec<f64> = (0..m * n).map(|i| ((i * 7 + 3) % 11) as f64 / 11.0 - 0.4).collect();
+    let g = gated_recon_grad(&a, m, n, &gates, &probe);
+    let loss = |mat: &[f64]| -> f64 {
+        let zero = vec![0f64; m * n];
+        gated_recon_grad(mat, m, n, &gates, &zero)
+            .recon
+            .iter()
+            .zip(&probe)
+            .map(|(r, c)| r * c)
+            .sum()
+    };
+    let h = 1e-4;
+    let mut gmax = 0f64;
+    let mut worst = 0f64;
+    for p in 0..m * n {
+        let mut up = a.clone();
+        up[p] += h;
+        let mut dn = a.clone();
+        dn[p] -= h;
+        let fd = (loss(&up) - loss(&dn)) / (2.0 * h);
+        gmax = gmax.max(fd.abs());
+        worst = worst.max((g.d_a[p] - fd).abs());
+    }
+    assert!(worst < 1e-4 * gmax.max(1.0),
+            "Taylor-stabilized SVD gradient drifted {worst} from FD (scale {gmax})");
 }
 
 /// The compressed store must also load as a plain `FactorizedModel` with
