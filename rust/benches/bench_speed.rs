@@ -172,7 +172,7 @@ fn compress_bench() {
         write_artifacts(&dir, &art).expect("artifacts");
         let m = Manifest::load(&dir).expect("manifest");
         let v = m.variant(&art.variant_id).expect("variant");
-        let store = dobi::storage::Store::open(&m.path(&v.weights)).expect("store");
+        let store = m.open_store(v).expect("store");
         let model = dobi::lowrank::FactorizedModel::from_store(&m.models["tiny"], v, &store)
             .expect("load");
         let ce = eval_loss(&model, &corpus, b, 16, 6, 5).expect("eval");
@@ -336,7 +336,7 @@ fn decode_bench() {
     dobi::compress::write_artifacts(&dir, &art).expect("artifacts");
     let m = Manifest::load(&dir).expect("manifest");
     let v = m.variant(&art.variant_id).expect("variant");
-    let store = dobi::storage::Store::open(&m.path(&v.weights)).expect("store");
+    let store = m.open_store(v).expect("store");
     let q8_model = dobi::lowrank::FactorizedModel::from_store(&m.models["tiny"], v, &store)
         .expect("load");
     let q8 = &q8_model;

@@ -17,7 +17,7 @@ use crate::lowrank::model::{target_dims, LayerWeights, LAYER_MATS};
 use crate::lowrank::FactorizedModel;
 use crate::mathx::{self, XorShift};
 use crate::runtime::ForwardModel;
-use crate::storage::{f16_tensor, f32_tensor, i8_tensor, write_store, Tensor};
+use crate::storage::{encode_store, f16_tensor, f32_tensor, hash, i8_tensor, write_store, Tensor};
 
 use super::calib;
 use super::rank::{whitener, RankAllocator, TargetSpectrum, Waterfill, Whitener};
@@ -46,6 +46,9 @@ pub struct CompressedArtifact {
     pub alloc: String,
     /// Optimizer diagnostics when the learned allocator ran.
     pub train_report: Option<TrainReport>,
+    /// The full knob set that produced this artifact — stamped verbatim
+    /// into the release's provenance block.
+    pub config: CompressConfig,
 }
 
 fn dense_weight(lin: &Linear, id: &str) -> Result<Vec<f32>> {
@@ -239,6 +242,7 @@ pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressC
         reference,
         alloc: cfg.alloc.to_string(),
         train_report,
+        config: cfg.clone(),
     })
 }
 
@@ -280,6 +284,30 @@ fn model_json(art: &CompressedArtifact) -> Json {
     ])
 }
 
+/// The provenance block stamped into the variant entry: the content hash
+/// of the exact container bytes the writer emits (deterministic encode —
+/// see `storage::encode_store`), per-tensor section hashes, the full
+/// `CompressConfig` dump, and the writer's identity.  Loads re-hash the
+/// on-disk store against this pin and refuse mismatches.
+fn provenance_json(art: &CompressedArtifact) -> Json {
+    let raw = encode_store(&art.tensors);
+    let tensors: BTreeMap<String, Json> = art
+        .tensors
+        .iter()
+        .map(|t| (t.name.clone(), Json::Str(hash::sha256_hex(&t.data))))
+        .collect();
+    Json::obj(vec![
+        ("store_sha256", Json::Str(hash::sha256_hex(&raw))),
+        ("tensors", Json::Obj(tensors)),
+        ("config", art.config.to_json()),
+        ("toolchain", Json::obj(vec![
+            ("writer", Json::Str("dobi-native".into())),
+            ("format", Json::Str("DOBIW1".into())),
+            ("crate_version", Json::Str(env!("CARGO_PKG_VERSION").into())),
+        ])),
+    ])
+}
+
 /// The factor-only variant entry: an **empty** `hlo` map — served
 /// natively at any shape via the router's any-seq mode, no phantom HLO
 /// entries.
@@ -301,6 +329,7 @@ fn variant_json(art: &CompressedArtifact, weights_file: &str) -> Json {
         ("ref_ppl", Json::Obj(BTreeMap::new())),
         ("ranks", ranks),
         ("alloc", Json::Str(art.alloc.clone())),
+        ("provenance", provenance_json(art)),
     ])
 }
 
@@ -731,6 +760,47 @@ mod tests {
         // the explicit collector then reclaims it on request
         let removed = gc_orphan_stores(&dir).unwrap();
         assert_eq!(removed, vec![dir.join("tiny_dobi_60.dobiw")]);
+    }
+
+    #[test]
+    fn provenance_stamped_and_tampered_store_refused() {
+        let dense = tiny_model(dims(), 0, false);
+        let art = compress_model(&dense, "tiny", &cfg(0.4, Precision::Q8), &corpus()).unwrap();
+        let dir = std::env::temp_dir().join("dobi_compress_pipe_prov");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_artifacts(&dir, &art).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant(&art.variant_id).unwrap();
+        let p = v.provenance.as_ref().expect("compress stamps provenance");
+        assert_eq!(p.store_sha256.len(), 64);
+        assert_eq!(p.tensors.len(), art.tensors.len(), "every tensor gets a section hash");
+        assert_eq!(p.config.path("alloc").and_then(Json::as_str), Some("waterfill"));
+        assert_eq!(p.config.path("seed").and_then(Json::as_usize),
+                   Some(art.config.seed as usize));
+        assert_eq!(p.toolchain.path("format").and_then(Json::as_str), Some("DOBIW1"));
+        // verified load succeeds, and the pin is the hash of what's on disk
+        let store = m.open_store(v).unwrap();
+        assert_eq!(store.content_sha256, p.store_sha256);
+        // wholesale replacement with a DIFFERENT valid store: CRC-clean,
+        // so the raw reader accepts it — only the provenance pin refuses
+        let other = compress_model(&dense, "tiny", &cfg(0.4, Precision::F32), &corpus()).unwrap();
+        write_store(&m.path(&v.weights), &other.tensors).unwrap();
+        assert!(crate::storage::Store::open(&m.path(&v.weights)).is_ok(),
+                "replacement store must be structurally valid for this test to bite");
+        let err = m.open_store(v).unwrap_err().to_string();
+        assert!(err.contains("provenance mismatch"), "err: {err}");
+        // restoring the original bytes makes the pin verify again
+        write_store(&m.path(&v.weights), &art.tensors).unwrap();
+        assert!(m.open_store(v).is_ok());
+        // append path stamps provenance too
+        let a60 = compress_model(&dense, "tiny", &cfg(0.6, Precision::Q8), &corpus()).unwrap();
+        append_artifacts(&dir, &a60).unwrap();
+        let m2 = Manifest::load(&dir).unwrap();
+        for id in [art.variant_id.as_str(), a60.variant_id.as_str()] {
+            let v = m2.variant(id).unwrap();
+            assert!(v.provenance.is_some(), "{id} missing provenance");
+            assert!(m2.open_store(v).is_ok(), "{id} must verify");
+        }
     }
 
     #[test]

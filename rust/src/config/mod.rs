@@ -171,6 +171,28 @@ impl Default for CompressConfig {
     }
 }
 
+impl CompressConfig {
+    /// Full-fidelity JSON dump of the knobs that produced an artifact —
+    /// stamped into the variant's provenance block so a release records
+    /// exactly how to reproduce it.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("ratio", Json::Num(self.ratio)),
+            ("budget", self.budget.map_or(Json::Null, |b| Json::Num(b as f64))),
+            ("precision", Json::Str(self.precision.to_string())),
+            ("calib_batches", Json::Num(self.calib_batches as f64)),
+            ("calib_batch", Json::Num(self.calib_batch as f64)),
+            ("calib_seq", Json::Num(self.calib_seq as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+            ("k_min", Json::Num(self.k_min as f64)),
+            ("alloc", Json::Str(self.alloc.to_string())),
+            ("train_iters", Json::Num(self.train_iters as f64)),
+            ("train_lr", Json::Num(self.train_lr)),
+            ("svd_threads", Json::Num(self.svd_threads as f64)),
+        ])
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Engine tunables
 // ---------------------------------------------------------------------------
@@ -258,6 +280,62 @@ pub struct ModelInfo {
     pub fixed_params: usize,
 }
 
+/// Content-hash pinning a variant's `.dobiw` release: the manifest
+/// records what `dobi compress` wrote, every load re-hashes what is on
+/// disk, and a mismatch is a refusal — not a warning.  Manifests written
+/// before provenance stamping simply lack the block (`None`): they load
+/// unverified, preserving back-compat with the synth fixtures and any
+/// python-side artifacts.
+#[derive(Debug, Clone)]
+pub struct Provenance {
+    /// SHA-256 (hex) of the whole `.dobiw` container file.
+    pub store_sha256: String,
+    /// SHA-256 (hex) per tensor payload (section hashes).
+    pub tensors: BTreeMap<String, String>,
+    /// The `CompressConfig` dump that produced the release.
+    pub config: Json,
+    /// Writer identity: format magic, crate version.
+    pub toolchain: Json,
+}
+
+impl Provenance {
+    pub fn to_json(&self) -> Json {
+        let tensors =
+            Json::Obj(self.tensors.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect());
+        Json::obj(vec![
+            ("store_sha256", Json::Str(self.store_sha256.clone())),
+            ("tensors", tensors),
+            ("config", self.config.clone()),
+            ("toolchain", self.toolchain.clone()),
+        ])
+    }
+
+    /// Parse a variant's `provenance` block.  Returns `None` when the
+    /// block is absent; a present block must carry a string
+    /// `store_sha256` (anything else is a malformed manifest).
+    fn from_json(v: &Json) -> Result<Option<Provenance>> {
+        let Some(p) = v.get("provenance") else { return Ok(None) };
+        let store_sha256 = p
+            .get("store_sha256")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("provenance block without a `store_sha256` string"))?
+            .to_string();
+        let mut tensors = BTreeMap::new();
+        for (name, h) in p.get("tensors").and_then(Json::as_obj).into_iter().flatten() {
+            let hex = h
+                .as_str()
+                .ok_or_else(|| anyhow!("provenance tensor hash for `{name}` is not a string"))?;
+            tensors.insert(name.clone(), hex.to_string());
+        }
+        Ok(Some(Provenance {
+            store_sha256,
+            tensors,
+            config: p.get("config").cloned().unwrap_or(Json::Null),
+            toolchain: p.get("toolchain").cloned().unwrap_or(Json::Null),
+        }))
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct Variant {
     pub id: String,
@@ -280,6 +358,9 @@ pub struct Variant {
     /// rank-allocation mode that produced the variant ("waterfill" /
     /// "learned"); older manifests without the field read as waterfill
     pub alloc: String,
+    /// Content-hash pin for the weights store; `None` on pre-provenance
+    /// manifests (loaded unverified).
+    pub provenance: Option<Provenance>,
 }
 
 impl Variant {
@@ -402,6 +483,7 @@ impl Manifest {
                     .and_then(Json::as_str)
                     .unwrap_or("waterfill")
                     .to_string(),
+                provenance: Provenance::from_json(v)?,
             });
         }
         let mut corpora = BTreeMap::new();
@@ -448,6 +530,37 @@ impl Manifest {
     pub fn path(&self, rel: &str) -> PathBuf {
         self.dir.join(rel)
     }
+
+    /// Open a variant's weights store, verifying its content hashes
+    /// against the manifest's provenance pin when one is present.  This
+    /// is THE load path for `.dobiw` stores: a release whose bytes do not
+    /// match what `dobi compress` stamped is refused loudly, before any
+    /// tensor reaches a model.  Pre-provenance manifests (no block) load
+    /// unverified for back-compat.
+    pub fn open_store(&self, v: &Variant) -> Result<crate::storage::Store> {
+        let path = self.path(&v.weights);
+        let store = crate::storage::Store::open(&path)?;
+        let Some(p) = &v.provenance else { return Ok(store) };
+        anyhow::ensure!(
+            store.content_sha256 == p.store_sha256,
+            "provenance mismatch for `{}`: {} hashes to {} but the manifest pins {} — \
+             the store was modified or replaced since `dobi compress` wrote it; refusing to load",
+            v.id, path.display(), store.content_sha256, p.store_sha256
+        );
+        for (name, want) in &p.tensors {
+            let t = store.tensors.get(name).ok_or_else(|| {
+                anyhow!("provenance mismatch for `{}`: tensor `{name}` pinned in the \
+                         manifest is missing from {}", v.id, path.display())
+            })?;
+            let got = t.payload_sha256();
+            anyhow::ensure!(
+                &got == want,
+                "provenance mismatch for `{}`: tensor `{name}` hashes to {got} but the \
+                 manifest pins {want} — refusing to load", v.id
+            );
+        }
+        Ok(store)
+    }
 }
 
 #[cfg(test)]
@@ -472,7 +585,7 @@ mod tests {
             kind: "factorized".into(), kernel: "xla".into(), weights: "w".into(),
             param_names: vec![], hlo, inputs: vec!["tokens".into()],
             stored_params: 0, bytes: 0, ref_ppl: BTreeMap::new(), perturb_x: None,
-            ranks: BTreeMap::new(), alloc: "waterfill".into(),
+            ranks: BTreeMap::new(), alloc: "waterfill".into(), provenance: None,
         };
         assert_eq!(v.pick_batch(3, 32), Some(4));
         assert_eq!(v.pick_batch(1, 32), Some(1));
@@ -527,6 +640,48 @@ mod tests {
         assert!(AllocMode::parse("magic").is_err());
         assert_eq!(AllocMode::Learned.to_string(), "learned");
         assert_eq!(AllocMode::default(), AllocMode::Waterfill);
+    }
+
+    #[test]
+    fn provenance_round_trips_and_rejects_malformed() {
+        let p = Provenance {
+            store_sha256: "ab".repeat(32),
+            tensors: BTreeMap::from([("embed".to_string(), "cd".repeat(32))]),
+            config: CompressConfig::default().to_json(),
+            toolchain: Json::obj(vec![("writer", Json::Str("dobi-native".into()))]),
+        };
+        let v = Json::obj(vec![("id", Json::Str("m/x".into())), ("provenance", p.to_json())]);
+        let back = Provenance::from_json(&v).unwrap().expect("block present");
+        assert_eq!(back.store_sha256, p.store_sha256);
+        assert_eq!(back.tensors, p.tensors);
+        assert_eq!(back.config.path("alloc").and_then(Json::as_str), Some("waterfill"));
+        // absent block -> None (pre-provenance manifests load unverified)
+        let bare = Json::obj(vec![("id", Json::Str("m/x".into()))]);
+        assert!(Provenance::from_json(&bare).unwrap().is_none());
+        // present-but-malformed block is a manifest error, not a silent skip
+        let bad = Json::obj(vec![(
+            "provenance",
+            Json::obj(vec![("store_sha256", Json::Num(7.0))]),
+        )]);
+        assert!(Provenance::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn compress_config_json_dump_is_complete() {
+        let c = CompressConfig {
+            budget: Some(1234),
+            alloc: AllocMode::Learned,
+            ..Default::default()
+        };
+        let j = c.to_json();
+        assert_eq!(j.path("budget").and_then(Json::as_usize), Some(1234));
+        assert_eq!(j.path("precision").and_then(Json::as_str), Some("q8"));
+        assert_eq!(j.path("alloc").and_then(Json::as_str), Some("learned"));
+        assert_eq!(j.path("seed").and_then(Json::as_usize), Some(11));
+        assert_eq!(j.path("train_iters").and_then(Json::as_usize), Some(300));
+        // unset budget serializes as null, not a fake number
+        assert!(matches!(CompressConfig::default().to_json().path("budget"),
+                         Some(Json::Null)));
     }
 
     #[test]

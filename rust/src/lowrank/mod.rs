@@ -29,7 +29,6 @@ use anyhow::{anyhow, Result};
 
 use crate::config::Manifest;
 use crate::runtime::{Backend, LoadStats, Loaded};
-use crate::storage::Store;
 
 pub use kernel::{decode_threads, matmul, set_decode_threads, Factor, FactorData,
                  FactorizedLinear, Linear};
@@ -53,7 +52,7 @@ impl Backend for NativeBackend {
             .models
             .get(&v.model)
             .ok_or_else(|| anyhow!("model `{}` missing from manifest", v.model))?;
-        let store = Store::open(&manifest.path(&v.weights))?;
+        let store = manifest.open_store(v)?;
         let model = FactorizedModel::from_store(info, v, &store)?;
         let stats = LoadStats {
             weight_bytes: model.resident_bytes(),

@@ -27,7 +27,7 @@ use dobi::server::Server;
 
 fn main() {
     let args = Args::from_env(&["verbose", "all", "tasks", "synth", "stream", "no-stream",
-                                "replace"]);
+                                "no-control", "replace"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -83,9 +83,12 @@ fn run(args: &Args) -> Result<()> {
                  generate --variant ID --prompt TEXT [--tokens N] [--temperature T]\n\
                  serve --variants A,B --port P [--max-sessions N]\n\
                  \x20     [--decode-threads T] [--stream | --no-stream]\n\
+                 \x20     [--no-control]\n\
                  \x20     incremental decode runtime (KV cache + continuous\n\
                  \x20     batching + fused multi-session steps + streaming;\n\
-                 \x20     T > 1 threads the blocked GEMM column-wise)\n\
+                 \x20     T > 1 threads the blocked GEMM column-wise);\n\
+                 \x20     control ops {\"op\":\"swap\"|\"list\"|\"health\"} manage\n\
+                 \x20     zero-downtime hot swaps unless --no-control\n\
                  memsim --model NAME [--capacity-mb M] [--bandwidth-mbs B]\n\
                  parity                       pallas vs xla HLO numerics (pjrt only)\n\
                  \n\
@@ -112,7 +115,8 @@ fn inspect(args: &Args) -> Result<()> {
     }
     let mut t = dobi::bench::Table::new(
         "variants",
-        &["id", "method", "ratio", "alloc", "kind", "stored", "MB", "shapes", "ppl(wiki)"],
+        &["id", "method", "ratio", "alloc", "kind", "stored", "MB", "shapes", "sha256",
+          "ppl(wiki)"],
     );
     for v in &m.variants {
         t.row(vec![
@@ -124,6 +128,12 @@ fn inspect(args: &Args) -> Result<()> {
             format!("{}", v.stored_params),
             format!("{:.2}", v.bytes as f64 / 1e6),
             format!("{}", v.hlo.len()),
+            // provenance pin: the manifest's content hash of the store
+            // (verified at every load); pre-provenance variants show "-"
+            v.provenance
+                .as_ref()
+                .map(|p| p.store_sha256[..12].to_string())
+                .unwrap_or_else(|| "-".into()),
             v.ref_ppl
                 .get("wiki-syn")
                 .map(|p| format!("{p:.2}"))
@@ -143,7 +153,6 @@ fn compress(args: &Args) -> Result<()> {
                          AllocPick};
     use dobi::lowrank::synth::{tiny_model, TinyDims};
     use dobi::lowrank::FactorizedModel;
-    use dobi::storage::Store;
 
     let append = args.get("append").map(PathBuf::from);
     let out = match (&append, args.get("out")) {
@@ -181,7 +190,7 @@ fn compress(args: &Args) -> Result<()> {
             .models
             .get(&v.model)
             .ok_or_else(|| anyhow!("model `{}` missing from manifest", v.model))?;
-        let store = Store::open(&m.path(&v.weights))?;
+        let store = m.open_store(v)?;
         (v.model.clone(), FactorizedModel::from_store(info, v, &store)?)
     };
     let calib_tokens = match args.get("calib") {
@@ -345,9 +354,18 @@ fn serve(args: &Args) -> Result<()> {
         Some(Arc::new(Engine::start(dir, &fallback_ids, cfg, None)?))
     };
     let port = args.usize_or("port", 7433) as u16;
-    let server = Server::start_with(engine.clone(), runtime.clone(), port)?;
-    println!("serving {} on {} (streaming {}; ctrl-c to stop)", ids.join(", "), server.addr,
-             if runtime.is_some() { "on" } else { "off" });
+    let mut builder = Server::builder().port(port).control(!args.has("no-control"));
+    if let Some(engine) = &engine {
+        builder = builder.engine(engine.clone());
+    }
+    if let Some(rt) = &runtime {
+        builder = builder.runtime(rt.clone());
+    }
+    let server = builder.start()?;
+    println!("serving {} on {} (streaming {}, control ops {}; ctrl-c to stop)",
+             ids.join(", "), server.addr,
+             if runtime.is_some() { "on" } else { "off" },
+             if args.has("no-control") { "off" } else { "on" });
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         let mut status = String::new();
@@ -363,9 +381,10 @@ fn serve(args: &Args) -> Result<()> {
             if !status.is_empty() {
                 status.push_str(" | ");
             }
-            status.push_str(&format!("sessions: active={} queued={} finished={} tokens={}",
-                                     d.active_sessions, d.queue_depth, d.sessions_finished,
-                                     d.tokens_emitted));
+            status.push_str(&format!(
+                "sessions: active={} queued={} finished={} tokens={} swaps={} draining={}",
+                d.active_sessions, d.queue_depth, d.sessions_finished, d.tokens_emitted,
+                d.swaps, d.draining_sessions));
         }
         println!("{status}");
     }
@@ -497,13 +516,12 @@ fn kernel_report(args: &Args) -> Result<()> {
 
 fn debug_probe(args: &Args) -> Result<()> {
     use dobi::runtime::{f32_literal, i32_literal};
-    use dobi::storage::Store;
     let dir = artifacts_dir(args);
     let m = Manifest::load(&dir)?;
     let v = m.variant(args.get_or("variant", "llama-nano/dense"))?;
     let rt = Runtime::new()?;
     let exe = rt.compile_hlo(std::path::Path::new(args.get_or("hlo", "/tmp/probe.hlo.txt")))?;
-    let store = Store::open(&m.path(&v.weights))?;
+    let store = m.open_store(v)?;
     let tokens: Vec<i32> = (0..256).map(|i| i % 251).collect();
     let mut lits = vec![i32_literal(&tokens, &[4, 64])?];
     for name in &v.param_names {

@@ -29,7 +29,6 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{BackendKind, Manifest, Variant};
-use crate::storage::Store;
 
 /// Anything that can run a forward pass.  The evaluation harness and the
 /// coordinator are generic over this so their logic is unit-testable with
@@ -162,7 +161,7 @@ impl Runtime {
             .get(&v.model)
             .ok_or_else(|| anyhow!("model `{}` missing from manifest", v.model))?;
         let t0 = Instant::now();
-        let store = Store::open(&manifest.path(&v.weights))?;
+        let store = manifest.open_store(&v)?;
         let mut weights = Vec::with_capacity(v.param_names.len());
         let mut weight_lits = Vec::with_capacity(v.param_names.len());
         let mut weight_bytes = 0usize;

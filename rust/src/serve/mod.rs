@@ -20,16 +20,24 @@
 //!   tiles dequantize once per tick, not once per session; bit-identical
 //!   to serial stepping), and evicts on stop-token / `max_tokens` / KV
 //!   capacity.
-//! * [`stream`]    — the `{"id", "delta", "done"}` token-streaming framing
-//!   on the existing TCP line protocol (`"stream": true`), plus the
-//!   scheduler-backed one-shot reply.
+//! * [`registry`]  — [`registry::VariantRegistry`]: the live variant
+//!   table.  Each variant serves an `Arc`-held, hash-verified
+//!   [`registry::ModelRelease`]; `{"op":"swap"}` installs a new
+//!   generation while in-flight sessions drain on the old one, which is
+//!   garbage-collected after its last session finishes.
+//! * [`stream`]    — the typed [`stream::Request`] protocol parsed off
+//!   the TCP line framing (generate / swap / list / health), the
+//!   `{"id", "delta", "done"}` token-streaming framing
+//!   (`"stream": true`), plus the scheduler-backed one-shot reply.
 //!
 //! [`DynamicBatcher`]: crate::coordinator::DynamicBatcher
 
+pub mod registry;
 pub mod scheduler;
 pub mod session;
 pub mod stream;
 
+pub use registry::{ModelRelease, VariantRegistry, VariantStatus};
 pub use scheduler::{FinishReason, GenEvent, ServeRuntime, ServeStats, SessionRequest};
 pub use session::DecodeSession;
-pub use stream::GenParams;
+pub use stream::{GenParams, ReqError, Request};

@@ -1,0 +1,275 @@
+//! Live variant table behind the decode scheduler: which release of each
+//! variant serves new sessions, which superseded releases are still
+//! draining, and the provenance of every one of them.
+//!
+//! A **release** is one verified load of a variant's weights
+//! ([`ModelRelease`]): the model, the generation number, and the content
+//! hash the manifest pinned.  The registry owns the current release per
+//! variant; every admitted session holds an `Arc` to the release it
+//! decodes against.  A hot swap ([`VariantRegistry::install`]) replaces
+//! the current release — new admissions route to the new generation
+//! immediately, in-flight sessions keep decoding on the old `Arc` until
+//! they finish (drain), and [`VariantRegistry::sweep`] garbage-collects a
+//! drained release the moment the registry holds its last reference.
+//! Nothing is ever torn out from under a session: correctness comes from
+//! `Arc` ownership, not locks around the decode loop.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Manifest;
+use crate::lowrank::FactorizedModel;
+
+/// One immutable, verified load of a variant's weights.
+pub struct ModelRelease {
+    pub variant: String,
+    /// Monotonic per-variant install counter (1 = initial load).
+    pub generation: u64,
+    pub model: FactorizedModel,
+    /// Content hash the manifest pinned (`None` on pre-provenance
+    /// manifests, which load unverified).
+    pub store_sha256: Option<String>,
+    /// Rank-allocation mode recorded in the manifest.
+    pub alloc: String,
+    /// Achieved stored-parameter ratio recorded in the manifest.
+    pub ratio: f64,
+}
+
+/// A variant's weights loaded through the verified manifest path, not yet
+/// assigned a generation — what [`VariantRegistry::install`] consumes.
+pub struct LoadedVariant {
+    pub model: FactorizedModel,
+    pub store_sha256: Option<String>,
+    pub alloc: String,
+    pub ratio: f64,
+}
+
+/// Load one variant as an incrementally-servable native model, verifying
+/// the store's content hashes against the manifest's provenance pin
+/// ([`Manifest::open_store`]).  Every release the registry ever holds
+/// comes through here — there is no unverified side door.
+pub fn load_release(manifest: &Manifest, id: &str) -> Result<LoadedVariant> {
+    let v = manifest.variant(id)?;
+    let info = manifest
+        .models
+        .get(&v.model)
+        .ok_or_else(|| anyhow!("model `{}` missing from manifest", v.model))?;
+    let store = manifest.open_store(v)?;
+    let model = FactorizedModel::from_store(info, v, &store)?;
+    anyhow::ensure!(!model.action_head, "VLA variants have no token stream to decode");
+    Ok(LoadedVariant {
+        model,
+        store_sha256: v.provenance.as_ref().map(|p| p.store_sha256.clone()),
+        alloc: v.alloc.clone(),
+        ratio: v.ratio,
+    })
+}
+
+struct Slot {
+    current: Arc<ModelRelease>,
+    /// Superseded releases still referenced by in-flight sessions (or
+    /// awaiting the next sweep).
+    draining: Vec<Arc<ModelRelease>>,
+}
+
+/// Point-in-time view of one variant's slot — what `{"op":"list"}` and
+/// `dobi inspect` render.
+#[derive(Debug, Clone)]
+pub struct VariantStatus {
+    pub variant: String,
+    pub generation: u64,
+    pub store_sha256: Option<String>,
+    pub alloc: String,
+    pub ratio: f64,
+    /// Sessions currently holding the live release.
+    pub active_sessions: usize,
+    /// Superseded generations still draining, with their session counts.
+    pub draining: Vec<(u64, usize)>,
+}
+
+/// The live variant table.  Shared between the scheduler thread (admission
+/// + sweep) and server control handlers (swap/list) behind a mutex; the
+/// lock guards only the table itself — decode steps run on `Arc`-held
+/// releases outside it.
+#[derive(Default)]
+pub struct VariantRegistry {
+    slots: BTreeMap<String, Slot>,
+}
+
+impl VariantRegistry {
+    /// The release new sessions for `variant` should decode against.
+    pub fn current(&self, variant: &str) -> Option<Arc<ModelRelease>> {
+        self.slots.get(variant).map(|s| s.current.clone())
+    }
+
+    pub fn variants(&self) -> Vec<String> {
+        self.slots.keys().cloned().collect()
+    }
+
+    pub fn has(&self, variant: &str) -> bool {
+        self.slots.contains_key(variant)
+    }
+
+    /// Install a freshly loaded release as `variant`'s current one and
+    /// return its generation.  An existing current release moves to the
+    /// draining list — sessions holding it are untouched; new admissions
+    /// see the new generation from this call on.
+    pub fn install(&mut self, variant: &str, loaded: LoadedVariant) -> u64 {
+        let (generation, drained) = match self.slots.remove(variant) {
+            Some(slot) => {
+                let gen = slot.current.generation + 1;
+                let mut draining = slot.draining;
+                draining.push(slot.current);
+                (gen, draining)
+            }
+            None => (1, Vec::new()),
+        };
+        let release = Arc::new(ModelRelease {
+            variant: variant.to_string(),
+            generation,
+            model: loaded.model,
+            store_sha256: loaded.store_sha256,
+            alloc: loaded.alloc,
+            ratio: loaded.ratio,
+        });
+        self.slots.insert(variant.to_string(), Slot { current: release, draining: drained });
+        generation
+    }
+
+    /// Drop draining releases no session references anymore (the registry
+    /// holds the last `Arc`) and return how many were freed.  Called by
+    /// the scheduler after each tick's evictions — the GC point where a
+    /// superseded store's memory is actually released.
+    pub fn sweep(&mut self) -> usize {
+        let mut freed = 0;
+        for slot in self.slots.values_mut() {
+            let before = slot.draining.len();
+            slot.draining.retain(|r| Arc::strong_count(r) > 1);
+            freed += before - slot.draining.len();
+        }
+        freed
+    }
+
+    /// Total in-flight sessions still pinned to superseded releases.
+    pub fn draining_sessions(&self) -> usize {
+        self.slots
+            .values()
+            .flat_map(|s| &s.draining)
+            .map(|r| Arc::strong_count(r) - 1)
+            .sum()
+    }
+
+    /// Snapshot every slot for the control plane / CLI.
+    pub fn snapshot(&self) -> Vec<VariantStatus> {
+        self.slots
+            .values()
+            .map(|s| VariantStatus {
+                variant: s.current.variant.clone(),
+                generation: s.current.generation,
+                store_sha256: s.current.store_sha256.clone(),
+                alloc: s.current.alloc.clone(),
+                ratio: s.current.ratio,
+                active_sessions: Arc::strong_count(&s.current) - 1,
+                draining: s
+                    .draining
+                    .iter()
+                    .map(|r| (r.generation, Arc::strong_count(r) - 1))
+                    .collect(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::synth::{tiny_manifest_json, tiny_store_tensors, SynthStyle, TinyDims};
+    use crate::storage::write_store;
+
+    fn dims() -> TinyDims {
+        TinyDims { vocab: 61, d: 16, heads: 2, layers: 2, ff: 24 }
+    }
+
+    fn artifacts(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("dobi_registry_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_store(&dir.join("w.dobiw"),
+                    &tiny_store_tensors(dims(), 0, SynthStyle::DenseF32)).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            tiny_manifest_json(dims(), 0, &[("tiny/dense", "dense", 1.0, "w.dobiw")]),
+        )
+        .unwrap();
+        dir
+    }
+
+    fn load(tag: &str) -> LoadedVariant {
+        let m = Manifest::load(&artifacts(tag)).unwrap();
+        load_release(&m, "tiny/dense").unwrap()
+    }
+
+    #[test]
+    fn install_bumps_generation_and_drains_old_current() {
+        let mut reg = VariantRegistry::default();
+        assert_eq!(reg.install("tiny/dense", load("gen")), 1);
+        // a "session" pins generation 1
+        let session = reg.current("tiny/dense").unwrap();
+        assert_eq!(session.generation, 1);
+        // swap: new admissions see generation 2 immediately
+        assert_eq!(reg.install("tiny/dense", load("gen")), 2);
+        assert_eq!(reg.current("tiny/dense").unwrap().generation, 2);
+        // the old release drains while the session still holds it
+        assert_eq!(reg.draining_sessions(), 1);
+        assert_eq!(reg.sweep(), 0, "a referenced release must not be freed");
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].generation, 2);
+        assert_eq!(snap[0].draining, vec![(1, 1)]);
+        // session finishes -> next sweep frees exactly that release
+        drop(session);
+        assert_eq!(reg.draining_sessions(), 0);
+        assert_eq!(reg.sweep(), 1);
+        assert!(reg.snapshot()[0].draining.is_empty());
+    }
+
+    #[test]
+    fn two_swaps_stack_draining_generations() {
+        let mut reg = VariantRegistry::default();
+        reg.install("tiny/dense", load("stack"));
+        let s1 = reg.current("tiny/dense").unwrap();
+        reg.install("tiny/dense", load("stack"));
+        let s2 = reg.current("tiny/dense").unwrap();
+        reg.install("tiny/dense", load("stack"));
+        assert_eq!(reg.current("tiny/dense").unwrap().generation, 3);
+        assert_eq!(reg.draining_sessions(), 2);
+        assert_eq!(reg.snapshot()[0].draining, vec![(1, 1), (2, 1)]);
+        // generations free independently, in whatever order sessions end
+        drop(s2);
+        assert_eq!(reg.sweep(), 1);
+        assert_eq!(reg.snapshot()[0].draining, vec![(1, 1)]);
+        drop(s1);
+        assert_eq!(reg.sweep(), 1);
+        assert_eq!(reg.draining_sessions(), 0);
+    }
+
+    #[test]
+    fn unreferenced_old_release_frees_on_first_sweep() {
+        let mut reg = VariantRegistry::default();
+        reg.install("tiny/dense", load("free"));
+        reg.install("tiny/dense", load("free"));
+        // nobody held generation 1: the first sweep reclaims it
+        assert_eq!(reg.sweep(), 1);
+        assert_eq!(reg.sweep(), 0);
+    }
+
+    #[test]
+    fn load_release_reports_manifest_metadata() {
+        let m = Manifest::load(&artifacts("meta")).unwrap();
+        let l = load_release(&m, "tiny/dense").unwrap();
+        assert_eq!(l.alloc, "waterfill");
+        assert!(l.store_sha256.is_none(), "synth fixture has no provenance block");
+        assert!(load_release(&m, "tiny/nope").is_err());
+    }
+}

@@ -1,9 +1,10 @@
 //! Continuous-batching decode scheduler: the stateful replacement for the
 //! submit-per-token sliding-window loop.
 //!
-//! One scheduler thread owns the loaded [`FactorizedModel`]s (weights are
-//! shared across sessions; per-session state is just a KV cache) and runs
-//! a tick loop:
+//! Loaded weights live in a [`VariantRegistry`] of `Arc`-held
+//! [`ModelRelease`]s (weights are shared across sessions; per-session
+//! state is just a KV cache plus the release `Arc` it decodes against),
+//! and one scheduler thread runs a tick loop:
 //!
 //! ```text
 //!  clients ──open()──► waiting (DynamicBatcher, FIFO-fair per variant)
@@ -29,7 +30,6 @@
 //! batch sizes, and per-phase latencies are exported through
 //! [`crate::metrics`].
 
-use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -42,8 +42,8 @@ use crate::coordinator::request::SubmitError;
 use crate::lowrank::{set_decode_threads, FactorizedModel};
 use crate::mathx::{sample_logits, XorShift};
 use crate::metrics::Registry;
-use crate::storage::Store;
 
+use super::registry::{load_release, ModelRelease, VariantRegistry, VariantStatus};
 use super::session::DecodeSession;
 
 /// Why a session's stream ended.
@@ -122,10 +122,17 @@ pub struct ServeStats {
     pub sessions_opened: u64,
     pub sessions_finished: u64,
     pub tokens_emitted: u64,
+    /// Hot swaps applied since start (`{"op":"swap"}` successes).
+    pub swaps: u64,
+    /// In-flight sessions still decoding on superseded releases.
+    pub draining_sessions: i64,
 }
 
 struct ServeShared {
     metrics: Registry,
+    /// The live variant table — admission reads it, swaps write it, the
+    /// scheduler sweeps it after each tick's evictions.
+    registry: Mutex<VariantRegistry>,
 }
 
 /// Handle to the running scheduler.  Cloneable across client threads via
@@ -133,15 +140,18 @@ struct ServeShared {
 pub struct ServeRuntime {
     tx: mpsc::Sender<Cmd>,
     shared: Arc<ServeShared>,
-    variants: Vec<String>,
+    /// Artifacts dir swaps reload the manifest + stores from.
+    artifacts: PathBuf,
     cfg: ServeConfig,
     join: Mutex<Option<std::thread::JoinHandle<()>>>,
 }
 
 impl ServeRuntime {
     /// Load `variant_ids` from `artifacts` as native [`FactorizedModel`]s
-    /// on the scheduler thread and start ticking.  Blocks until loading
-    /// finished so `open()` never races a cold model.  Variants that
+    /// (content-hash-verified against the manifest's provenance pins) on
+    /// the scheduler thread, install them as generation-1 releases, and
+    /// start ticking.  Blocks until loading finished so `open()` never
+    /// races a cold model.  Variants that
     /// cannot serve incrementally (pruned stores, VLA heads, missing
     /// weights) are skipped with a warning — the caller keeps them on its
     /// fallback path via [`Self::variants`]; only a manifest that yields
@@ -151,24 +161,29 @@ impl ServeRuntime {
         anyhow::ensure!(!variant_ids.is_empty(), "no variants to serve");
         anyhow::ensure!(cfg.max_sessions >= 1, "max_sessions must be >= 1");
         anyhow::ensure!(cfg.kv_capacity >= 2, "kv_capacity {} too small", cfg.kv_capacity);
-        let shared = Arc::new(ServeShared { metrics: Registry::default() });
+        let shared = Arc::new(ServeShared {
+            metrics: Registry::default(),
+            registry: Mutex::new(VariantRegistry::default()),
+        });
         let (tx, rx) = mpsc::channel::<Cmd>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<String>>>();
         let ids: Vec<String> = variant_ids.to_vec();
+        let dir = artifacts.clone();
         let shared2 = shared.clone();
         let cfg2 = cfg.clone();
         let join = std::thread::Builder::new()
             .name("dobi-decode-scheduler".into())
             .spawn(move || {
-                let load = (|| -> Result<BTreeMap<String, FactorizedModel>> {
-                    let manifest = Manifest::load(&artifacts)?;
-                    let mut models = BTreeMap::new();
+                // Load every variant (content hashes verified against the
+                // manifest's provenance pins) BEFORE installing anything:
+                // a partially-populated registry never becomes visible.
+                let load = (|| -> Result<Vec<(String, super::registry::LoadedVariant)>> {
+                    let manifest = Manifest::load(&dir)?;
+                    let mut loads = Vec::new();
                     let mut errors = Vec::new();
                     for id in &ids {
-                        match load_variant(&manifest, id) {
-                            Ok(model) => {
-                                models.insert(id.clone(), model);
-                            }
+                        match load_release(&manifest, id) {
+                            Ok(l) => loads.push((id.clone(), l)),
                             Err(e) => {
                                 eprintln!("[serve] `{id}` not incrementally servable \
                                            ({e:#}); leaving it on the fallback path");
@@ -176,36 +191,80 @@ impl ServeRuntime {
                             }
                         }
                     }
-                    anyhow::ensure!(!models.is_empty(),
+                    anyhow::ensure!(!loads.is_empty(),
                                     "no variant is incrementally servable: {}",
                                     errors.join("; "));
-                    Ok(models)
+                    Ok(loads)
                 })();
                 match load {
-                    Ok(models) => {
-                        let _ = ready_tx.send(Ok(models.keys().cloned().collect()));
-                        scheduler_main(models, cfg2, rx, shared2);
+                    Ok(loads) => {
+                        let served: Vec<String> =
+                            loads.iter().map(|(id, _)| id.clone()).collect();
+                        {
+                            let mut reg = shared2.registry.lock().unwrap();
+                            for (id, l) in loads {
+                                reg.install(&id, l);
+                            }
+                        }
+                        let _ = ready_tx.send(Ok(served));
+                        scheduler_main(cfg2, rx, shared2);
                     }
                     Err(e) => {
                         let _ = ready_tx.send(Err(e));
                     }
                 }
             })?;
-        let served = ready_rx.recv().map_err(|_| anyhow!("scheduler died during load"))??;
-        Ok(ServeRuntime { tx, shared, variants: served, cfg, join: Mutex::new(Some(join)) })
+        ready_rx.recv().map_err(|_| anyhow!("scheduler died during load"))??;
+        Ok(ServeRuntime { tx, shared, artifacts, cfg, join: Mutex::new(Some(join)) })
     }
 
-    /// Variants this runtime decodes (the servable subset of what
-    /// [`Self::start`] was asked for).
-    pub fn variants(&self) -> &[String] {
-        &self.variants
+    /// Variants this runtime decodes — a snapshot of the registry's keys
+    /// (the servable subset of what [`Self::start`] was asked for, plus
+    /// anything a later swap introduced).
+    pub fn variants(&self) -> Vec<String> {
+        self.shared.registry.lock().unwrap().variants()
+    }
+
+    /// Hot-swap `variant` to whatever its manifest entry currently points
+    /// at on disk: reload the manifest, load + hash-verify the store (on
+    /// the CALLER's thread — the scheduler keeps ticking throughout), and
+    /// install the release as the variant's new generation.  In-flight
+    /// sessions drain on the old release; new admissions decode the new
+    /// one from the moment this returns.  On any error the registry is
+    /// untouched and the old generation keeps serving.
+    pub fn swap(&self, variant: &str) -> Result<VariantStatus> {
+        let m = &self.shared.metrics;
+        let outcome = (|| -> Result<VariantStatus> {
+            let manifest = Manifest::load(&self.artifacts)?;
+            let loaded = load_release(&manifest, variant)?;
+            let mut reg = self.shared.registry.lock().unwrap();
+            let generation = reg.install(variant, loaded);
+            let status = reg
+                .snapshot()
+                .into_iter()
+                .find(|s| s.variant == variant)
+                .expect("just installed");
+            debug_assert_eq!(status.generation, generation);
+            Ok(status)
+        })();
+        match &outcome {
+            Ok(_) => m.counter("serve_swap_applied").inc(),
+            Err(_) => m.counter("serve_swap_failed").inc(),
+        }
+        outcome
+    }
+
+    /// Point-in-time view of the live variant table (generations,
+    /// provenance, drain state) — the `{"op":"list"}` payload.
+    pub fn registry_snapshot(&self) -> Vec<VariantStatus> {
+        self.shared.registry.lock().unwrap().snapshot()
     }
 
     /// Queue a session.  Fails fast (no thread hop) on unknown variants
     /// and queue overflow — the same backpressure contract as
     /// `Engine::submit`.
     pub fn open(&self, req: SessionRequest) -> Result<(), SubmitError> {
-        if !self.variants.iter().any(|v| v == &req.variant) {
+        if !self.shared.registry.lock().unwrap().has(&req.variant) {
             return Err(SubmitError::UnknownVariant(req.variant));
         }
         let depth = self.shared.metrics.gauge("serve_queue_depth");
@@ -259,6 +318,8 @@ impl ServeRuntime {
             sessions_opened: m.counter("serve_sessions_opened").get(),
             sessions_finished: m.counter("serve_sessions_finished").get(),
             tokens_emitted: m.counter("serve_tokens_emitted").get(),
+            swaps: m.counter("serve_swap_applied").get(),
+            draining_sessions: m.gauge("serve_swap_draining_sessions").get(),
         }
     }
 
@@ -280,26 +341,18 @@ impl Drop for ServeRuntime {
     }
 }
 
-/// Load one variant as an incrementally-servable native model.
-fn load_variant(manifest: &Manifest, id: &str) -> Result<FactorizedModel> {
-    let v = manifest.variant(id)?;
-    let info = manifest
-        .models
-        .get(&v.model)
-        .ok_or_else(|| anyhow!("model `{}` missing from manifest", v.model))?;
-    let store = Store::open(&manifest.path(&v.weights))?;
-    let model = FactorizedModel::from_store(info, v, &store)?;
-    anyhow::ensure!(!model.action_head, "VLA variants have no token stream to decode");
-    Ok(model)
-}
-
 // ---------------------------------------------------------------------------
 // Scheduler thread
 // ---------------------------------------------------------------------------
 
-/// One admitted session mid-decode.
+/// One admitted session mid-decode.  Holding the `release` Arc is what
+/// pins a superseded generation through a hot swap: the registry cannot
+/// sweep a release while any `Running` still references it.
 struct Running {
     session: DecodeSession,
+    /// The release (model + generation) this session decodes against for
+    /// its whole lifetime — swaps never re-point a live session.
+    release: Arc<ModelRelease>,
     /// Last sampled token — the next `step()` input.
     last: i32,
     temperature: f32,
@@ -318,15 +371,16 @@ struct Running {
     dead: bool,
 }
 
-fn scheduler_main(models: BTreeMap<String, FactorizedModel>, cfg: ServeConfig,
-                  rx: mpsc::Receiver<Cmd>, shared: Arc<ServeShared>) {
+fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeShared>) {
     let m = &shared.metrics;
     let queue_g = m.gauge("serve_queue_depth");
     let active_g = m.gauge("serve_active_sessions");
     let kv_bytes_g = m.gauge("serve_kv_bytes");
+    let draining_g = m.gauge("serve_swap_draining_sessions");
     let opened_c = m.counter("serve_sessions_opened");
     let finished_c = m.counter("serve_sessions_finished");
     let tokens_c = m.counter("serve_tokens_emitted");
+    let gced_c = m.counter("serve_swap_releases_gced");
     let prefill_h = m.histogram("serve_prefill_seconds");
     let step_h = m.histogram("serve_step_seconds");
     let fused_h = m.histogram("serve_fused_batch_size");
@@ -379,7 +433,12 @@ fn scheduler_main(models: BTreeMap<String, FactorizedModel>, cfg: ServeConfig,
             for p in batch.requests {
                 queue_g.sub(1);
                 opened_c.inc();
-                if let Some(r) = admit(p.req, &models, &cfg, next_id, &tokens_c, &prefill_h) {
+                // Resolve the variant's CURRENT release at admission time
+                // — this is the hot-swap routing point: sessions opened
+                // after an install decode the new generation while earlier
+                // ones drain on the Arc they already hold.
+                let release = shared.registry.lock().unwrap().current(&p.req.variant);
+                if let Some(r) = admit(p.req, release, &cfg, next_id, &tokens_c, &prefill_h) {
                     next_id += 1;
                     active.push(r);
                 } else {
@@ -392,23 +451,35 @@ fn scheduler_main(models: BTreeMap<String, FactorizedModel>, cfg: ServeConfig,
         kv_bytes_g.set(active.iter().map(|r| r.session.kv_bytes() as i64).sum());
 
         // Tick: one decode step per live session.  Sessions are grouped
-        // by variant and each multi-session group advances through ONE
-        // fused batched trunk walk (`DecodeSession::step_many`), so every
-        // weight tile dequantizes once per tick instead of once per
-        // session; singleton groups take the plain serial step.
-        let mut variants: Vec<String> = active
+        // by (variant, generation) — mid-drain, old- and new-generation
+        // sessions of the same variant hold DIFFERENT weights and must
+        // not share a trunk walk — and each multi-session group advances
+        // through ONE fused batched trunk walk
+        // (`DecodeSession::step_many`), so every weight tile dequantizes
+        // once per tick instead of once per session; singleton groups
+        // take the plain serial step.
+        let mut groups: Vec<(String, u64)> = active
             .iter()
             .filter(|r| r.done.is_none() && !r.dead)
-            .map(|r| r.session.variant.clone())
+            .map(|r| (r.session.variant.clone(), r.release.generation))
             .collect();
-        variants.sort();
-        variants.dedup();
-        for var in variants {
-            let model = models.get(&var).expect("validated at open");
+        groups.sort();
+        groups.dedup();
+        for (var, generation) in groups {
             let mut group: Vec<&mut Running> = active
                 .iter_mut()
-                .filter(|r| r.done.is_none() && !r.dead && r.session.variant == var)
+                .filter(|r| {
+                    r.done.is_none()
+                        && !r.dead
+                        && r.session.variant == var
+                        && r.release.generation == generation
+                })
                 .collect();
+            // clone the Arc BEFORE borrowing the sessions mutably: the
+            // model lives behind the same Running structs the fused step
+            // needs `&mut` access to
+            let release = group[0].release.clone();
+            let model = &release.model;
             if group.len() >= 2 {
                 let tokens: Vec<i32> = group.iter().map(|r| r.last).collect();
                 let t0 = Instant::now();
@@ -468,6 +539,18 @@ fn scheduler_main(models: BTreeMap<String, FactorizedModel>, cfg: ServeConfig,
         // their freed KV bytes until the next tick starts.
         active_g.set(active.len() as i64);
         kv_bytes_g.set(active.iter().map(|r| r.session.kv_bytes() as i64).sum());
+
+        // GC point: evictions above dropped Running (and its release Arc)
+        // for finished sessions, so superseded releases whose last session
+        // just ended are reclaimable right now.
+        {
+            let mut reg = shared.registry.lock().unwrap();
+            let freed = reg.sweep();
+            if freed > 0 {
+                gced_c.add(freed as u64);
+            }
+            draining_g.set(reg.draining_sessions() as i64);
+        }
     }
 
     // Shutdown: everything still queued or mid-decode gets an Error event
@@ -515,15 +598,17 @@ fn step_serial(r: &mut Running, model: &FactorizedModel,
 
 /// Prefill a newly admitted session and emit its first token.  Returns
 /// None when the session terminated at admission (zero budget, prefill
-/// error, or client already gone).
-fn admit(req: SessionRequest, models: &BTreeMap<String, FactorizedModel>, cfg: &ServeConfig,
+/// error, or client already gone).  `release` is the registry's current
+/// release for the variant, resolved by the caller at admission time.
+fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>, cfg: &ServeConfig,
          id: u64, tokens_c: &crate::metrics::Counter,
          prefill_h: &crate::metrics::Histogram) -> Option<Running> {
-    let Some(model) = models.get(&req.variant) else {
-        // open() validates; a missing model here means start/open disagree
+    let Some(release) = release else {
+        // open() validates; a missing release here means start/open disagree
         let _ = req.events.send(GenEvent::Error(format!("unknown variant `{}`", req.variant)));
         return None;
     };
+    let model = &release.model;
     if req.max_tokens == 0 {
         let _ = req.events.send(GenEvent::Done {
             n_tokens: 0,
@@ -568,6 +653,7 @@ fn admit(req: SessionRequest, models: &BTreeMap<String, FactorizedModel>, cfg: &
     prefill_h.observe(dt);
     let mut r = Running {
         session,
+        release: release.clone(),
         last: 0,
         temperature: req.temperature,
         rng: XorShift::new(req.seed.max(1)),
@@ -762,6 +848,35 @@ mod tests {
         assert_eq!(rt.shared.metrics.gauge("serve_kv_bytes").get(), 0,
                    "freed sessions must not leave ghost KV bytes on the gauge");
         assert_eq!(rt.shared.metrics.gauge("serve_active_sessions").get(), 0);
+    }
+
+    #[test]
+    fn swap_bumps_generation_and_keeps_serving() {
+        let rt = rt("swap", ServeConfig::default());
+        let prompt: Vec<i32> = "The ".bytes().map(|b| b as i32).collect();
+        let before = rt.generate("tiny/dense", &prompt, 6, 0.0, 1).unwrap();
+        // same bytes on disk: the swap installs an identical generation 2
+        let status = rt.swap("tiny/dense").unwrap();
+        assert_eq!(status.generation, 2);
+        assert_eq!(rt.stats().swaps, 1);
+        let after = rt.generate("tiny/dense", &prompt, 6, 0.0, 1).unwrap();
+        assert_eq!(before, after, "identical weights decode identically across the swap");
+        // swapping a variant the manifest doesn't know fails without
+        // touching the table
+        assert!(rt.swap("tiny/nope").is_err());
+        let snap = rt.registry_snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].generation, 2);
+        // nobody held generation 1 past its eviction: the tick sweep frees
+        // it; poll briefly since GC happens on the scheduler thread
+        let t0 = Instant::now();
+        while rt.shared.metrics.counter("serve_swap_releases_gced").get() == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "generation 1 never GCed");
+            // ticks only happen while sessions run: drive one
+            rt.generate("tiny/dense", &prompt, 1, 0.0, 1).unwrap();
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        rt.shutdown();
     }
 
     #[test]

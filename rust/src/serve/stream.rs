@@ -1,7 +1,10 @@
-//! Token streaming over the existing TCP line protocol.
+//! The typed request protocol and token streaming over the TCP line
+//! framing.
 //!
-//! Request (one JSON object per line, same as the one-shot path, plus the
-//! `stream` switch):
+//! Every inbound line parses through [`parse_request`] into a [`Request`]
+//! — generate (the default when `op` is absent), or the control ops
+//! `swap` / `list` / `health`.  A generate request (one JSON object per
+//! line, same as the one-shot path, plus the `stream` switch):
 //!   -> {"variant": "tiny/dobi_40", "prompt": "The ", "max_tokens": 32,
 //!       "temperature": 0.0, "stream": true, "stop_token": 10}
 //!
@@ -44,18 +47,131 @@ pub struct GenParams {
     pub stream: bool,
 }
 
-/// Pull the generation fields out of a parsed request line.  Missing
-/// `variant`/`prompt` become empty strings — the open/serve path then
-/// answers a proper error line instead of panicking the handler.
-pub fn parse_params(req: &Json) -> GenParams {
-    GenParams {
-        variant: req.get("variant").and_then(Json::as_str).unwrap_or_default().to_string(),
-        prompt: req.get("prompt").and_then(Json::as_str).unwrap_or_default().to_string(),
-        max_tokens: req.get("max_tokens").and_then(Json::as_usize).unwrap_or(32),
-        temperature: req.get("temperature").and_then(Json::as_f64).unwrap_or(0.0) as f32,
-        seed: req.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
-        stop_token: req.get("stop_token").and_then(Json::as_usize).map(|t| t as i32),
-        stream: req.get("stream").and_then(Json::as_bool).unwrap_or(false),
+/// One request line, typed.  Every op the wire protocol speaks is parsed
+/// in exactly one place ([`parse_request`]); the server dispatches on the
+/// variant and never touches raw JSON fields again.
+#[derive(Debug, Clone)]
+pub enum Request {
+    /// Run a generation (the default when `op` is absent — every
+    /// pre-registry client line still means this).
+    Generate(GenParams),
+    /// Hot-swap `variant` to whatever its manifest entry points at now.
+    Swap { variant: String },
+    /// Snapshot the live variant table (generations, provenance, drain).
+    List,
+    /// Liveness + aggregate serve counters.
+    Health,
+}
+
+/// A malformed request line: which field was wrong (when attributable)
+/// and why.  Serialized as `{"id", "error", "field"}` by the server.
+#[derive(Debug, Clone)]
+pub struct ReqError {
+    pub field: Option<String>,
+    pub msg: String,
+}
+
+impl ReqError {
+    fn field(name: &str, msg: String) -> ReqError {
+        ReqError { field: Some(name.to_string()), msg }
+    }
+}
+
+fn json_type(v: &Json) -> &'static str {
+    match v {
+        Json::Null => "null",
+        Json::Bool(_) => "a bool",
+        Json::Num(_) => "a number",
+        Json::Str(_) => "a string",
+        Json::Arr(_) => "an array",
+        Json::Obj(_) => "an object",
+    }
+}
+
+/// Typed field access: absent (or explicit `null`) falls back to the
+/// default, but a PRESENT field of the wrong type is an error naming the
+/// field — silent coercion is how a client's `"max_tokens": "32"` turns
+/// into a confusing default instead of a fixable diagnostic.
+fn opt_str(req: &Json, name: &str, default: &str) -> Result<String, ReqError> {
+    match req.get(name) {
+        None | Some(Json::Null) => Ok(default.to_string()),
+        Some(Json::Str(s)) => Ok(s.clone()),
+        Some(v) => Err(ReqError::field(
+            name,
+            format!("`{name}` must be a string, got {}", json_type(v)),
+        )),
+    }
+}
+
+fn opt_num(req: &Json, name: &str, default: f64) -> Result<f64, ReqError> {
+    match req.get(name) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Num(n)) => Ok(*n),
+        Some(v) => Err(ReqError::field(
+            name,
+            format!("`{name}` must be a number, got {}", json_type(v)),
+        )),
+    }
+}
+
+fn opt_uint(req: &Json, name: &str, default: Option<u64>) -> Result<Option<u64>, ReqError> {
+    match req.get(name) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Num(n)) if n.fract() == 0.0 && *n >= 0.0 => Ok(Some(*n as u64)),
+        Some(Json::Num(n)) => Err(ReqError::field(
+            name,
+            format!("`{name}` must be a non-negative integer, got {n}"),
+        )),
+        Some(v) => Err(ReqError::field(
+            name,
+            format!("`{name}` must be a non-negative integer, got {}", json_type(v)),
+        )),
+    }
+}
+
+fn opt_bool(req: &Json, name: &str, default: bool) -> Result<bool, ReqError> {
+    match req.get(name) {
+        None | Some(Json::Null) => Ok(default),
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(v) => Err(ReqError::field(
+            name,
+            format!("`{name}` must be a bool, got {}", json_type(v)),
+        )),
+    }
+}
+
+/// Parse one request line into a typed [`Request`].
+///
+/// Back-compat contract: a line with no `op` is a generate — every field
+/// keeps its historical default (`variant`/`prompt` empty, `max_tokens`
+/// 32, greedy, no stop token, one-shot reply) so pre-registry clients
+/// work unchanged.  What tightened: a field that IS present with the
+/// wrong type no longer coerces silently — it errors, naming the field.
+pub fn parse_request(req: &Json) -> Result<Request, ReqError> {
+    match opt_str(req, "op", "generate")?.as_str() {
+        "generate" => Ok(Request::Generate(GenParams {
+            variant: opt_str(req, "variant", "")?,
+            prompt: opt_str(req, "prompt", "")?,
+            max_tokens: opt_uint(req, "max_tokens", Some(32))?.unwrap() as usize,
+            temperature: opt_num(req, "temperature", 0.0)? as f32,
+            seed: opt_uint(req, "seed", Some(0))?.unwrap(),
+            stop_token: opt_uint(req, "stop_token", None)?.map(|t| t as i32),
+            stream: opt_bool(req, "stream", false)?,
+        })),
+        "swap" => match req.get("variant") {
+            Some(Json::Str(s)) => Ok(Request::Swap { variant: s.clone() }),
+            Some(v) => Err(ReqError::field(
+                "variant",
+                format!("`variant` must be a string, got {}", json_type(v)),
+            )),
+            None => Err(ReqError::field("variant", "swap requires `variant`".into())),
+        },
+        "list" => Ok(Request::List),
+        "health" => Ok(Request::Health),
+        other => Err(ReqError::field(
+            "op",
+            format!("unknown op `{other}` (expected generate, swap, list, or health)"),
+        )),
     }
 }
 
@@ -189,14 +305,21 @@ pub fn run_oneshot(rt: &ServeRuntime, p: &GenParams) -> Result<BTreeMap<String, 
 mod tests {
     use super::*;
 
+    fn gen(line: &str) -> GenParams {
+        match parse_request(&Json::parse(line).unwrap()).unwrap() {
+            Request::Generate(p) => p,
+            other => panic!("expected Generate, got {other:?}"),
+        }
+    }
+
+    fn err(line: &str) -> ReqError {
+        parse_request(&Json::parse(line).unwrap()).unwrap_err()
+    }
+
     #[test]
-    fn parse_params_defaults_and_overrides() {
-        let req = Json::parse(
-            r#"{"variant": "m/x", "prompt": "hi", "stream": true,
-                "max_tokens": 5, "temperature": 0.5, "seed": 9, "stop_token": 10}"#,
-        )
-        .unwrap();
-        let p = parse_params(&req);
+    fn generate_defaults_and_overrides() {
+        let p = gen(r#"{"variant": "m/x", "prompt": "hi", "stream": true,
+                        "max_tokens": 5, "temperature": 0.5, "seed": 9, "stop_token": 10}"#);
         assert_eq!(p.variant, "m/x");
         assert_eq!(p.prompt, "hi");
         assert!(p.stream);
@@ -205,10 +328,63 @@ mod tests {
         assert_eq!(p.stop_token, Some(10));
         assert!((p.temperature - 0.5).abs() < 1e-6);
 
-        let bare = Json::parse(r#"{"variant": "m/x", "prompt": ""}"#).unwrap();
-        let p = parse_params(&bare);
+        // op-less line == generate, historical defaults intact (the
+        // pre-registry wire contract)
+        let p = gen(r#"{"variant": "m/x", "prompt": ""}"#);
         assert!(!p.stream);
         assert_eq!(p.max_tokens, 32);
+        assert_eq!(p.stop_token, None);
+        // explicit op spells the same thing
+        let p = gen(r#"{"op": "generate", "prompt": "x"}"#);
+        assert_eq!(p.prompt, "x");
+        assert_eq!(p.variant, "");
+    }
+
+    #[test]
+    fn control_ops_parse() {
+        assert!(matches!(parse_request(&Json::parse(r#"{"op": "list"}"#).unwrap()),
+                         Ok(Request::List)));
+        assert!(matches!(parse_request(&Json::parse(r#"{"op": "health"}"#).unwrap()),
+                         Ok(Request::Health)));
+        match parse_request(&Json::parse(r#"{"op": "swap", "variant": "m/x"}"#).unwrap()) {
+            Ok(Request::Swap { variant }) => assert_eq!(variant, "m/x"),
+            other => panic!("expected Swap, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_fields_error_naming_the_field() {
+        let e = err(r#"{"op": "teleport"}"#);
+        assert_eq!(e.field.as_deref(), Some("op"));
+        assert!(e.msg.contains("teleport"), "{}", e.msg);
+
+        let e = err(r#"{"op": "swap"}"#);
+        assert_eq!(e.field.as_deref(), Some("variant"));
+
+        let e = err(r#"{"op": "swap", "variant": 7}"#);
+        assert_eq!(e.field.as_deref(), Some("variant"));
+
+        let e = err(r#"{"prompt": "x", "max_tokens": "32"}"#);
+        assert_eq!(e.field.as_deref(), Some("max_tokens"));
+        assert!(e.msg.contains("string"), "{}", e.msg);
+
+        let e = err(r#"{"prompt": "x", "max_tokens": -3}"#);
+        assert_eq!(e.field.as_deref(), Some("max_tokens"));
+
+        let e = err(r#"{"prompt": "x", "max_tokens": 2.5}"#);
+        assert_eq!(e.field.as_deref(), Some("max_tokens"));
+
+        let e = err(r#"{"variant": ["m/x"]}"#);
+        assert_eq!(e.field.as_deref(), Some("variant"));
+
+        let e = err(r#"{"stream": "yes"}"#);
+        assert_eq!(e.field.as_deref(), Some("stream"));
+
+        let e = err(r#"{"temperature": "hot"}"#);
+        assert_eq!(e.field.as_deref(), Some("temperature"));
+
+        // explicit null == absent, not a type error
+        let p = gen(r#"{"prompt": "x", "stop_token": null}"#);
         assert_eq!(p.stop_token, None);
     }
 }

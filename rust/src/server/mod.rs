@@ -1,12 +1,15 @@
 //! TCP line-protocol serving front-end.
 //!
-//! Protocol (one JSON object per line):
+//! Protocol (one JSON object per line, parsed into a typed
+//! [`sstream::Request`] — see `README.md` for the versioned spec):
 //!   -> {"variant": "llama-nano/dobi_60", "prompt": "text", "max_tokens": 32,
 //!       "temperature": 0.0}
 //!   <- {"id": 1, "text": "...", "latency_s": 0.01, "tokens_per_s": 123.4}
 //!
 //! With `"stream": true` the reply is one `{"id", "delta", "done"}` line
-//! per token (see [`crate::serve::stream`]).
+//! per token (see [`crate::serve::stream`]).  Control ops (`{"op":"swap"}`
+//! / `list` / `health`) manage the decode runtime's variant registry over
+//! the same connection; malformed lines answer `{"id","error","field"}`.
 //!
 //! Generation routes through the incremental decode runtime
 //! ([`ServeRuntime`]) when one is attached and serves the variant: KV
@@ -14,7 +17,14 @@
 //! recompute.  Variants the runtime does not carry (PJRT-only artifacts)
 //! fall back to the legacy sliding-window loop over `engine.submit()`,
 //! where concurrent clients still batch together.
+//!
+//! Construction goes through [`Server::builder`]:
+//!
+//! ```ignore
+//! let server = Server::builder().runtime(rt).port(7461).control(true).start()?;
+//! ```
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -35,20 +45,53 @@ pub struct Server {
     join: Option<std::thread::JoinHandle<()>>,
 }
 
-impl Server {
-    /// Bind and serve on a background thread with the legacy engine path
-    /// only.  `port` 0 picks a free port.
-    pub fn start(engine: Arc<Engine>, port: u16) -> Result<Server> {
-        Server::start_with(Some(engine), None, port)
+/// The one way to construct a [`Server`].  Generation for variants the
+/// decode runtime serves goes through its scheduler (required for
+/// `"stream": true` requests and all control ops); everything else falls
+/// back to the engine.  Both backends are optional so a pure-native
+/// deployment does not load every model twice — at least one must be
+/// attached by `start()` time.
+#[derive(Default)]
+pub struct ServerBuilder {
+    engine: Option<Arc<Engine>>,
+    runtime: Option<Arc<ServeRuntime>>,
+    port: u16,
+    control: Option<bool>,
+}
+
+impl ServerBuilder {
+    /// Legacy sliding-window fallback for variants the runtime lacks.
+    pub fn engine(mut self, engine: Arc<Engine>) -> Self {
+        self.engine = Some(engine);
+        self
     }
 
-    /// [`Server::start`] generalized: generation for variants the decode
-    /// runtime serves goes through its scheduler (required for
-    /// `"stream": true` requests); everything else falls back to the
-    /// engine.  Both are optional so a pure-native deployment does not
-    /// load every model twice — at least one must be attached.
-    pub fn start_with(engine: Option<Arc<Engine>>, runtime: Option<Arc<ServeRuntime>>,
-                      port: u16) -> Result<Server> {
+    /// Incremental decode runtime (streaming, KV-cached one-shot, and the
+    /// swap/list/health control plane).
+    pub fn runtime(mut self, runtime: Arc<ServeRuntime>) -> Self {
+        self.runtime = Some(runtime);
+        self
+    }
+
+    /// TCP port to bind on 127.0.0.1; 0 (the default) picks a free port.
+    pub fn port(mut self, port: u16) -> Self {
+        self.port = port;
+        self
+    }
+
+    /// Accept control ops (`swap` / `list` / `health`) on client
+    /// connections.  Defaults to on; `dobi serve --no-control` turns it
+    /// off for deployments where the data port must not mutate the
+    /// variant table.
+    pub fn control(mut self, control: bool) -> Self {
+        self.control = Some(control);
+        self
+    }
+
+    /// Bind and serve on a background thread.
+    pub fn start(self) -> Result<Server> {
+        let ServerBuilder { engine, runtime, port, control } = self;
+        let control = control.unwrap_or(true);
         anyhow::ensure!(engine.is_some() || runtime.is_some(),
                         "server needs an engine or a decode runtime");
         let listener = TcpListener::bind(("127.0.0.1", port))?;
@@ -80,7 +123,7 @@ impl Server {
                         let _ = stream.set_read_timeout(
                             Some(std::time::Duration::from_millis(200)));
                         clients.push(std::thread::spawn(move || {
-                            let _ = handle_client(stream, eng, rt, stop3);
+                            let _ = handle_client(stream, eng, rt, control, stop3);
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -94,6 +137,12 @@ impl Server {
             }
         })?;
         Ok(Server { addr, stop, join: Some(join) })
+    }
+}
+
+impl Server {
+    pub fn builder() -> ServerBuilder {
+        ServerBuilder::default()
     }
 
     pub fn shutdown(&mut self) {
@@ -111,7 +160,8 @@ impl Drop for Server {
 }
 
 fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
-                 runtime: Option<Arc<ServeRuntime>>, stop: Arc<AtomicBool>) -> Result<()> {
+                 runtime: Option<Arc<ServeRuntime>>, control: bool,
+                 stop: Arc<AtomicBool>) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
@@ -134,56 +184,174 @@ fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
             continue;
         }
         req_no += 1;
-        // Parse once; param extraction is shared by the streaming and
-        // one-shot routes below.
-        let params = match Json::parse(&line) {
-            Ok(req) => sstream::parse_params(&req),
+        // Parse into the typed request; every malformed line answers a
+        // structured error naming the offending field when attributable.
+        let request = match Json::parse(&line) {
+            Ok(req) => match sstream::parse_request(&req) {
+                Ok(r) => r,
+                Err(e) => {
+                    write_line(&mut writer,
+                               &error_line(req_no, &e.msg, e.field.as_deref()))?;
+                    continue;
+                }
+            },
             Err(e) => {
-                writer.write_all(error_line(req_no, &format!("bad request json: {e}"))
-                    .as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
+                write_line(&mut writer,
+                           &error_line(req_no, &format!("bad request json: {e}"), None))?;
                 continue;
             }
         };
-        // Streaming requests (for variants the decode runtime carries)
-        // write their own line-per-token reply; IO failures mid-stream
-        // mean the client hung up — drop them.  Unservable streaming
-        // requests fall through to serve_one's explanatory error line.
-        if params.stream {
-            if let Some(rt) = runtime
-                .as_ref()
-                .filter(|rt| rt.variants().iter().any(|v| v == &params.variant))
-            {
-                sstream::run_streaming(rt, &params, req_no, &mut writer)?;
-                continue;
+        let reply = match request {
+            sstream::Request::Generate(params) => {
+                // Streaming requests (for variants the decode runtime
+                // carries) write their own line-per-token reply; IO
+                // failures mid-stream mean the client hung up — drop
+                // them.  Unservable streaming requests fall through to
+                // serve_one's explanatory error line.
+                if params.stream {
+                    if let Some(rt) = runtime
+                        .as_ref()
+                        .filter(|rt| rt.variants().iter().any(|v| v == &params.variant))
+                    {
+                        sstream::run_streaming(rt, &params, req_no, &mut writer)?;
+                        continue;
+                    }
+                }
+                match serve_one(engine.as_deref(), runtime.as_deref(), &params) {
+                    Ok(mut obj) => {
+                        obj.insert("id".into(), Json::Num(req_no as f64));
+                        Json::Obj(obj).to_string()
+                    }
+                    Err(e) => error_line(req_no, &format!("{e:#}"), None),
+                }
             }
-        }
-        let reply = match serve_one(engine.as_deref(), runtime.as_deref(), &params) {
-            Ok(mut obj) => {
-                obj.insert("id".into(), Json::Num(req_no as f64));
-                Json::Obj(obj).to_string()
+            op if !control => {
+                let name = match op {
+                    sstream::Request::Swap { .. } => "swap",
+                    sstream::Request::List => "list",
+                    sstream::Request::Health => "health",
+                    sstream::Request::Generate(_) => unreachable!("handled above"),
+                };
+                error_line(req_no,
+                           &format!("control op `{name}` disabled (--no-control)"),
+                           Some("op"))
             }
-            Err(e) => error_line(req_no, &format!("{e:#}")),
+            op => match runtime.as_deref() {
+                None => error_line(req_no,
+                                   "control ops need the incremental decode runtime \
+                                    (serve without --no-stream)",
+                                   Some("op")),
+                Some(rt) => control_reply(rt, req_no, &op),
+            },
         };
-        writer.write_all(reply.as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+        write_line(&mut writer, &reply)?;
     }
     let _ = peer;
     Ok(())
 }
 
-fn error_line(id: u64, msg: &str) -> String {
-    let mut m = std::collections::BTreeMap::new();
+fn write_line<W: Write>(w: &mut W, line: &str) -> Result<()> {
+    w.write_all(line.as_bytes())?;
+    w.write_all(b"\n")?;
+    w.flush()?;
+    Ok(())
+}
+
+fn error_line(id: u64, msg: &str, field: Option<&str>) -> String {
+    let mut m = BTreeMap::new();
     m.insert("id".into(), Json::Num(id as f64));
     m.insert("error".into(), Json::Str(msg.to_string()));
+    if let Some(f) = field {
+        m.insert("field".into(), Json::Str(f.to_string()));
+    }
     Json::Obj(m).to_string()
+}
+
+fn opt_str_json(v: &Option<String>) -> Json {
+    match v {
+        Some(s) => Json::Str(s.clone()),
+        None => Json::Null,
+    }
+}
+
+/// Execute one control op against the decode runtime and render its reply
+/// line.  Swaps run here — on this client-handler thread — so the
+/// scheduler keeps ticking everyone else's decode while the new store
+/// loads and hash-verifies.
+fn control_reply(rt: &ServeRuntime, id: u64, op: &sstream::Request) -> String {
+    match op {
+        sstream::Request::Swap { variant } => match rt.swap(variant) {
+            Ok(status) => {
+                let mut m = BTreeMap::new();
+                m.insert("id".into(), Json::Num(id as f64));
+                m.insert("op".into(), Json::Str("swap".into()));
+                m.insert("ok".into(), Json::Bool(true));
+                m.insert("variant".into(), Json::Str(status.variant.clone()));
+                m.insert("generation".into(), Json::Num(status.generation as f64));
+                m.insert("store_sha256".into(), opt_str_json(&status.store_sha256));
+                m.insert("draining".into(),
+                         Json::Num(status.draining.iter()
+                                       .map(|(_, n)| *n)
+                                       .sum::<usize>() as f64));
+                Json::Obj(m).to_string()
+            }
+            Err(e) => error_line(id, &format!("swap failed: {e:#}"), None),
+        },
+        sstream::Request::List => {
+            let variants: Vec<Json> = rt
+                .registry_snapshot()
+                .into_iter()
+                .map(|s| {
+                    let mut m = BTreeMap::new();
+                    m.insert("variant".into(), Json::Str(s.variant));
+                    m.insert("generation".into(), Json::Num(s.generation as f64));
+                    m.insert("store_sha256".into(), opt_str_json(&s.store_sha256));
+                    m.insert("alloc".into(), Json::Str(s.alloc));
+                    m.insert("ratio".into(), Json::Num(s.ratio));
+                    m.insert("active_sessions".into(), Json::Num(s.active_sessions as f64));
+                    m.insert("draining".into(),
+                             Json::Arr(s.draining
+                                           .iter()
+                                           .map(|(generation, sessions)| {
+                                               let mut d = BTreeMap::new();
+                                               d.insert("generation".into(),
+                                                        Json::Num(*generation as f64));
+                                               d.insert("sessions".into(),
+                                                        Json::Num(*sessions as f64));
+                                               Json::Obj(d)
+                                           })
+                                           .collect()));
+                    Json::Obj(m)
+                })
+                .collect();
+            let mut m = BTreeMap::new();
+            m.insert("id".into(), Json::Num(id as f64));
+            m.insert("op".into(), Json::Str("list".into()));
+            m.insert("variants".into(), Json::Arr(variants));
+            Json::Obj(m).to_string()
+        }
+        sstream::Request::Health => {
+            let st = rt.stats();
+            let mut m = BTreeMap::new();
+            m.insert("id".into(), Json::Num(id as f64));
+            m.insert("op".into(), Json::Str("health".into()));
+            m.insert("ok".into(), Json::Bool(true));
+            m.insert("active_sessions".into(), Json::Num(st.active_sessions as f64));
+            m.insert("queue_depth".into(), Json::Num(st.queue_depth as f64));
+            m.insert("sessions_opened".into(), Json::Num(st.sessions_opened as f64));
+            m.insert("sessions_finished".into(), Json::Num(st.sessions_finished as f64));
+            m.insert("tokens_emitted".into(), Json::Num(st.tokens_emitted as f64));
+            m.insert("swaps".into(), Json::Num(st.swaps as f64));
+            m.insert("draining_sessions".into(), Json::Num(st.draining_sessions as f64));
+            Json::Obj(m).to_string()
+        }
+        sstream::Request::Generate(_) => unreachable!("generate is not a control op"),
+    }
 }
 
 fn serve_one(engine: Option<&Engine>, runtime: Option<&ServeRuntime>,
              params: &sstream::GenParams)
-             -> Result<std::collections::BTreeMap<String, Json>> {
+             -> Result<BTreeMap<String, Json>> {
     anyhow::ensure!(!params.stream,
                     "streaming needs the incremental decode runtime for `{}` \
                      (serve without --no-stream, native-loadable variant)", params.variant);
@@ -224,7 +392,7 @@ fn serve_one(engine: Option<&Engine>, runtime: Option<&ServeRuntime>,
             break;
         }
     }
-    let mut m = std::collections::BTreeMap::new();
+    let mut m = BTreeMap::new();
     // one terminal-payload builder for every reply shape
     sstream::finish_fields(&mut m, &out_tokens, Some(finish), t0.elapsed().as_secs_f64());
     Ok(m)

@@ -315,7 +315,7 @@ fn server_line_protocol_roundtrip() {
     let cfg = EngineConfig { max_batch: b, backend: BackendKind::Pjrt, ..Default::default() };
     let engine = Arc::new(Engine::start(artifacts_dir(), &["llama-nano/dense".to_string()],
                                         cfg, Some(vec![(b, s)])).unwrap());
-    let mut server = dobi::server::Server::start(engine.clone(), 0).unwrap();
+    let mut server = dobi::server::Server::builder().engine(engine.clone()).start().unwrap();
     let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
     conn.write_all(
         b"{\"variant\":\"llama-nano/dense\",\"prompt\":\"The \",\"max_tokens\":4}\n",

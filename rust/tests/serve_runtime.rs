@@ -297,7 +297,7 @@ fn server_streams_tokens_and_matches_oneshot_reply() {
     // runtime-only server: every variant decodes incrementally, so no
     // fallback engine is attached (the dobi serve wiring does the same —
     // weights load once, not twice)
-    let mut server = dobi::server::Server::start_with(None, Some(rt.clone()), 0).unwrap();
+    let mut server = dobi::server::Server::builder().runtime(rt.clone()).start().unwrap();
     let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
     let mut reader = BufReader::new(conn.try_clone().unwrap());
 
@@ -358,6 +358,230 @@ fn server_streams_tokens_and_matches_oneshot_reply() {
     drop(conn);
     server.shutdown();
     rt.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Variant registry: hot swap, provenance, control plane
+// ---------------------------------------------------------------------------
+
+/// Write one JSON line, read one reply line, parse it.
+fn send_recv(conn: &mut std::net::TcpStream,
+             reader: &mut std::io::BufReader<std::net::TcpStream>,
+             line: &str) -> dobi::json::Json {
+    use std::io::{BufRead, Write};
+    conn.write_all(line.as_bytes()).unwrap();
+    conn.write_all(b"\n").unwrap();
+    let mut reply = String::new();
+    reader.read_line(&mut reply).unwrap();
+    dobi::json::Json::parse(&reply).unwrap_or_else(|e| panic!("bad reply `{reply}`: {e}"))
+}
+
+/// `dobi compress`-built artifacts (provenance manifest stamped), unlike
+/// the synth fixtures which emit pre-provenance manifests.
+fn compressed_dir(tag: &str) -> (std::path::PathBuf, String) {
+    let dense = tiny_model_dense();
+    let corpus = calib::synth_calib_tokens(dense.vocab, 4096, 11);
+    let cfg = CompressConfig { ratio: 0.4, precision: Precision::Q8, ..Default::default() };
+    let art = compress_model(&dense, "tiny", &cfg, &corpus).unwrap();
+    let dir = std::env::temp_dir().join(format!("dobi_serve_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    write_artifacts(&dir, &art).unwrap();
+    (dir, art.variant_id.clone())
+}
+
+#[test]
+fn midstream_hot_swap_drops_no_sessions_and_bumps_generation() {
+    use std::io::{BufRead, BufReader, Write};
+    let dir = build_artifacts("hotswap");
+    let ids = vec!["tiny/dense".to_string()];
+    let rt = Arc::new(ServeRuntime::start(dir, &ids, ServeConfig::default()).unwrap());
+    // greedy reference decode: every stream must emit exactly this text no
+    // matter how the swap interleaves (the swap re-installs the same bytes)
+    let reference = rt.generate("tiny/dense", &ByteTokenizer.encode("The "), 48, 0.0, 1).unwrap();
+    let ref_text = ByteTokenizer.decode(&reference);
+    let mut server = dobi::server::Server::builder().runtime(rt.clone()).start().unwrap();
+    let addr = server.addr;
+    let mut clients = Vec::new();
+    for _ in 0..2 {
+        let want = ref_text.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut conn = std::net::TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(conn.try_clone().unwrap());
+            conn.write_all(
+                b"{\"variant\":\"tiny/dense\",\"prompt\":\"The \",\"max_tokens\":48,\
+                  \"temperature\":0,\"stream\":true}\n",
+            )
+            .unwrap();
+            let mut n = 0usize;
+            loop {
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let j = dobi::json::Json::parse(&line).unwrap();
+                assert!(j.get("error").is_none(), "stream errored across the swap: {line}");
+                if j.get("done").and_then(|x| x.as_bool()).unwrap_or(false) {
+                    assert_eq!(j.str_of("text"), want,
+                               "decode changed across an identical-weights swap");
+                    return n;
+                }
+                n += 1;
+            }
+        }));
+    }
+    // hot swap while the streams run: new admissions route to generation 2
+    // immediately, the in-flight streams drain on generation 1
+    let status = rt.swap("tiny/dense").unwrap();
+    assert_eq!(status.generation, 2);
+    for c in clients {
+        assert_eq!(c.join().unwrap(), 48, "a session was cut short by the swap");
+    }
+    // both streams completed: nothing stays pinned to a superseded
+    // release.  Brief poll — the scheduler drops a session's release Arc
+    // moments AFTER sending its terminal event, so the pin can linger a
+    // few microseconds past the client's join.
+    let snap = rt.registry_snapshot();
+    assert_eq!(snap.len(), 1);
+    assert_eq!(snap[0].generation, 2);
+    let t0 = std::time::Instant::now();
+    loop {
+        let pinned: usize =
+            rt.registry_snapshot()[0].draining.iter().map(|(_, n)| n).sum();
+        if pinned == 0 {
+            break;
+        }
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5),
+                "drained sessions never released their old-generation pins");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    let st = rt.stats();
+    assert_eq!(st.sessions_finished, 3, "reference + 2 streams, zero dropped");
+    assert_eq!(st.swaps, 1);
+    server.shutdown();
+    rt.shutdown();
+}
+
+#[test]
+fn corrupted_store_swap_refused_and_old_variant_keeps_serving() {
+    let dir = build_artifacts("corrupt_swap");
+    let ids = vec!["tiny/dense".to_string()];
+    let rt = Arc::new(ServeRuntime::start(dir.clone(), &ids, ServeConfig::default()).unwrap());
+    let prompt = ByteTokenizer.encode("The ");
+    let before = rt.generate("tiny/dense", &prompt, 8, 0.0, 1).unwrap();
+    // flip one byte mid-store: the integrity check must refuse the swap
+    let path = dir.join("dense.dobiw");
+    let clean = std::fs::read(&path).unwrap();
+    let mut bad = clean.clone();
+    let mid = bad.len() / 2;
+    bad[mid] ^= 0x40;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(rt.swap("tiny/dense").is_err(), "corrupted store must not install");
+    // the failed swap left the table untouched: generation 1 keeps serving
+    let snap = rt.registry_snapshot();
+    assert_eq!(snap[0].generation, 1);
+    assert!(snap[0].draining.is_empty());
+    let after = rt.generate("tiny/dense", &prompt, 8, 0.0, 1).unwrap();
+    assert_eq!(before, after, "old release must keep serving after a refused swap");
+    // restore the original bytes: the swap goes through
+    std::fs::write(&path, &clean).unwrap();
+    assert_eq!(rt.swap("tiny/dense").unwrap().generation, 2);
+    rt.shutdown();
+}
+
+#[test]
+fn server_control_ops_report_provenance_and_field_errors() {
+    use std::io::BufReader;
+    let (dir, id) = compressed_dir("ctrl");
+    let rt = Arc::new(
+        ServeRuntime::start(dir, std::slice::from_ref(&id), ServeConfig::default()).unwrap(),
+    );
+    let mut server = dobi::server::Server::builder().runtime(rt.clone()).start().unwrap();
+    let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    let h = send_recv(&mut conn, &mut reader, r#"{"op":"health"}"#);
+    assert_eq!(h.get("ok").and_then(|x| x.as_bool()), Some(true), "health not ok");
+    assert!(h.get("active_sessions").is_some());
+
+    let l = send_recv(&mut conn, &mut reader, r#"{"op":"list"}"#);
+    let vs = l.get("variants").and_then(|x| x.as_arr()).unwrap();
+    assert_eq!(vs.len(), 1);
+    assert_eq!(vs[0].str_of("variant"), id);
+    assert_eq!(vs[0].get("generation").and_then(|x| x.as_usize()), Some(1));
+    // compress stamped provenance: the registry reports the pinned hash
+    let sha = vs[0].str_of("store_sha256").to_string();
+    assert_eq!(sha.len(), 64, "expected a sha256 hex pin, got `{sha}`");
+
+    let s = send_recv(&mut conn, &mut reader,
+                      &format!(r#"{{"op":"swap","variant":"{id}"}}"#));
+    assert_eq!(s.get("ok").and_then(|x| x.as_bool()), Some(true), "swap failed: {s}");
+    assert_eq!(s.get("generation").and_then(|x| x.as_usize()), Some(2));
+    assert_eq!(s.str_of("store_sha256"), sha, "same bytes -> same pin");
+
+    // malformed lines answer structured errors naming the field
+    let e = send_recv(&mut conn, &mut reader, r#"{"op":"swap"}"#);
+    assert_eq!(e.str_of("field"), "variant");
+    assert!(e.get("error").is_some());
+    let e = send_recv(&mut conn, &mut reader, r#"{"op":"teleport"}"#);
+    assert_eq!(e.str_of("field"), "op");
+    let e = send_recv(&mut conn, &mut reader, r#"{"prompt":"x","max_tokens":"32"}"#);
+    assert_eq!(e.str_of("field"), "max_tokens");
+    let e = send_recv(&mut conn, &mut reader,
+                      &format!(r#"{{"op":"swap","variant":"{id}","prompt":1}}"#));
+    assert!(e.get("field").is_none() && e.get("error").is_none(),
+            "swap ignores unrelated fields; got {e}");
+
+    // the connection stays usable for generation after every error
+    let g = send_recv(&mut conn, &mut reader,
+                      &format!(r#"{{"variant":"{id}","prompt":"The ","max_tokens":4}}"#));
+    assert!(g.get("text").is_some(), "generate after errors: {g}");
+    drop(conn);
+    server.shutdown();
+    rt.shutdown();
+}
+
+#[test]
+fn no_control_server_refuses_control_ops_but_generates() {
+    use std::io::BufReader;
+    let dir = build_artifacts("noctrl");
+    let ids = vec!["tiny/dense".to_string()];
+    let rt = Arc::new(ServeRuntime::start(dir, &ids, ServeConfig::default()).unwrap());
+    let mut server = dobi::server::Server::builder()
+        .runtime(rt.clone())
+        .control(false)
+        .start()
+        .unwrap();
+    let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    for op in [r#"{"op":"swap","variant":"tiny/dense"}"#, r#"{"op":"list"}"#,
+               r#"{"op":"health"}"#] {
+        let e = send_recv(&mut conn, &mut reader, op);
+        assert!(e.get("error").is_some(), "control op must be refused: {e}");
+        assert_eq!(e.str_of("field"), "op");
+    }
+    assert_eq!(rt.registry_snapshot()[0].generation, 1, "refused swap must not install");
+    let g = send_recv(&mut conn, &mut reader,
+                      r#"{"variant":"tiny/dense","prompt":"The ","max_tokens":4}"#);
+    assert!(g.get("text").is_some(), "generation must survive --no-control: {g}");
+    drop(conn);
+    server.shutdown();
+    rt.shutdown();
+}
+
+#[test]
+fn startup_refuses_store_that_fails_provenance_pin() {
+    let (dir, id) = compressed_dir("tamper");
+    // wholesale-replace the store with a DIFFERENT structurally-valid
+    // store: CRC-clean, so only the manifest's SHA-256 pin can catch it
+    let path = {
+        let m = Manifest::load(&dir).unwrap();
+        m.path(&m.variant(&id).unwrap().weights)
+    };
+    write_store(&path, &tiny_store_tensors(dims(), 0, SynthStyle::DenseF32)).unwrap();
+    assert!(Store::open(&path).is_ok(),
+            "replacement must be structurally valid for this test to bite");
+    let err = ServeRuntime::start(dir, &[id], ServeConfig::default())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("provenance mismatch"), "unexpected refusal reason: {err}");
 }
 
 #[test]

@@ -1,18 +1,27 @@
 #!/usr/bin/env python3
 """Smoke-drive a running `dobi serve` over the TCP line protocol.
 
-Usage: serve_smoke.py PORT VARIANT
+Usage: serve_smoke.py PORT VARIANT [ARTIFACTS_DIR]
 
 Sends one non-streaming and one streaming request (both greedy, so the
 outputs must agree), asserts token deltas arrive one line each, and that
 the streamed terminal text matches the one-shot reply.  Then drives TWO
 simultaneous streaming clients (distinct prompts) so the scheduler's
 fused multi-session step is exercised end to end: both streams must be
-well-ordered and match their own one-shot greedy references.  Exits
-non-zero on any protocol violation — the CI `serve-smoke` job's
-pass/fail signal.
+well-ordered and match their own one-shot greedy references.  Also checks
+the typed protocol's structured `{"id","error","field"}` replies and the
+`list` / `health` control ops.
+
+With ARTIFACTS_DIR (the dir the server was started on), additionally
+drives the variant registry end to end: a mid-stream `{"op":"swap"}`
+while two streaming clients decode (both must complete every token —
+zero dropped sessions), and a swap against a corrupted store (one byte
+flipped mid-file) that must be REFUSED while the old variant keeps
+serving.  Exits non-zero on any protocol violation — the CI
+`serve-smoke` job's pass/fail signal.
 """
 import json
+import os
 import socket
 import sys
 import threading
@@ -30,8 +39,55 @@ def connect(port, attempts=60, delay=0.5):
     raise SystemExit(f"server never came up on :{port}: {last}")
 
 
+def stream_worker(port, variant, prompt, n_tokens, out, errs, idx):
+    """One streaming client run in a worker thread: collect the final text
+    (or the raised exception — a thread's AssertionError alone would not
+    fail the process, and CI would go green on a protocol violation)."""
+    try:
+        c = connect(port)
+        rf = c.makefile("r", encoding="utf-8")
+        c.sendall((json.dumps({"variant": variant, "prompt": prompt,
+                               "max_tokens": n_tokens, "temperature": 0,
+                               "stream": True}) + "\n").encode())
+        n = 0
+        while True:
+            msg = json.loads(rf.readline())
+            assert "error" not in msg, f"client {idx} stream errored: {msg}"
+            if msg.get("done"):
+                out[idx] = msg["text"]
+                break
+            assert msg["index"] == n, f"client {idx} out-of-order delta: {msg}"
+            n += 1
+        assert n == n_tokens, f"client {idx}: expected {n_tokens} deltas, got {n}"
+        c.close()
+    except BaseException as e:  # noqa: BLE001 - re-raised in main
+        errs[idx] = e
+
+
+def run_streams(port, variant, prompts, n_tokens, during=None):
+    """Run one streaming client per prompt concurrently, returning their
+    final texts.  `during` (if given) runs on the main thread while the
+    streams are live — the mid-stream hot-swap hook."""
+    texts = [None] * len(prompts)
+    errors = [None] * len(prompts)
+    threads = [threading.Thread(target=stream_worker,
+                                args=(port, variant, p, n_tokens, texts, errors, i))
+               for i, p in enumerate(prompts)]
+    for t in threads:
+        t.start()
+    if during is not None:
+        during()
+    for t in threads:
+        t.join()
+    for e in errors:
+        if e is not None:
+            raise e
+    return texts
+
+
 def main():
     port, variant = int(sys.argv[1]), sys.argv[2]
+    artifacts = sys.argv[3] if len(sys.argv) > 3 else None
     conn = connect(port)
     rfile = conn.makefile("r", encoding="utf-8")
 
@@ -87,41 +143,7 @@ def main():
         assert "error" not in ref, f"reference one-shot errored: {ref}"
         references.append(ref["text"])
 
-    def stream_one(prompt, out, errs, idx):
-        # runs in a worker thread: exceptions are collected and re-raised
-        # by main after join — a thread's AssertionError alone would not
-        # fail the process (CI would go green on a protocol violation)
-        try:
-            c = connect(port)
-            rf = c.makefile("r", encoding="utf-8")
-            c.sendall((json.dumps({"variant": variant, "prompt": prompt,
-                                   "max_tokens": 48, "temperature": 0,
-                                   "stream": True}) + "\n").encode())
-            n = 0
-            while True:
-                msg = json.loads(rf.readline())
-                assert "error" not in msg, f"client {idx} stream errored: {msg}"
-                if msg.get("done"):
-                    out[idx] = msg["text"]
-                    break
-                assert msg["index"] == n, f"client {idx} out-of-order delta: {msg}"
-                n += 1
-            assert n == 48, f"client {idx}: expected 48 deltas, got {n}"
-            c.close()
-        except BaseException as e:  # noqa: BLE001 - re-raised in main
-            errs[idx] = e
-
-    texts = [None, None]
-    errors = [None, None]
-    threads = [threading.Thread(target=stream_one, args=(p, texts, errors, i))
-               for i, p in enumerate(prompts)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    for e in errors:
-        if e is not None:
-            raise e
+    texts = run_streams(port, variant, prompts, 48)
     for i, (got, want) in enumerate(zip(texts, references)):
         assert got == want, (
             f"client {i}: concurrent stream diverged from serial one-shot: "
@@ -131,6 +153,104 @@ def main():
         # prompt-independent streams), but worth surfacing
         print("[smoke] warning: both prompts produced identical text")
     print("[smoke] two concurrent streaming clients ok: fused decode matches serial")
+
+    # typed protocol: malformed lines answer structured errors naming the
+    # offending field, and the connection stays usable afterwards
+    for bad, field in [({"op": "teleport"}, "op"),
+                       ({"op": "swap"}, "variant"),
+                       ({"variant": variant, "prompt": "x",
+                         "max_tokens": "32"}, "max_tokens"),
+                       ({"variant": variant, "prompt": "x",
+                         "stream": "yes"}, "stream")]:
+        request(bad)
+        err = json.loads(rfile.readline())
+        assert "error" in err, f"malformed line must error: {err}"
+        assert err.get("field") == field, (
+            f"expected field {field!r} on {bad}: {err}")
+    print("[smoke] typed field errors ok: each names the offending field")
+
+    # control plane: health + the variant table with provenance
+    request({"op": "health"})
+    health = json.loads(rfile.readline())
+    assert health.get("ok") is True, f"health not ok: {health}"
+    request({"op": "list"})
+    table = json.loads(rfile.readline())
+    mine = [v for v in table["variants"] if v["variant"] == variant]
+    assert mine, f"served variant missing from list: {table}"
+    generation = mine[0]["generation"]
+    assert generation >= 1, mine
+    print(f"[smoke] control plane ok: generation {generation}, "
+          f"sha {str(mine[0].get('store_sha256'))[:12]}")
+
+    if artifacts is None:
+        print("[smoke] no artifacts dir given: skipping hot-swap sections")
+        return
+
+    def list_variant():
+        request({"op": "list"})
+        table = json.loads(rfile.readline())
+        return next(v for v in table["variants"] if v["variant"] == variant)
+
+    # --- mid-stream hot swap: two live streaming clients, zero drops ---
+    # The swap re-installs the same bytes, so every stream must emit its
+    # greedy reference text no matter how the swap interleaves.
+    swap_reply = {}
+
+    def do_swap():
+        request({"op": "swap", "variant": variant})
+        swap_reply.update(json.loads(rfile.readline()))
+
+    texts = run_streams(port, variant, prompts, 48, during=do_swap)
+    assert "error" not in swap_reply, f"mid-stream swap refused: {swap_reply}"
+    assert swap_reply["generation"] == generation + 1, swap_reply
+    for i, (got, want) in enumerate(zip(texts, references)):
+        assert got == want, (
+            f"client {i}: stream diverged across the hot swap: {got!r} != {want!r}")
+    generation = swap_reply["generation"]
+    # drain completes: no session stays pinned to the old generation
+    deadline = time.time() + 30
+    while True:
+        pinned = sum(d["sessions"] for d in list_variant()["draining"])
+        if pinned == 0:
+            break
+        assert time.time() < deadline, "old-generation sessions never drained"
+        time.sleep(0.2)
+    print("[smoke] mid-stream hot swap ok: zero dropped sessions, "
+          f"generation {generation}, drain complete")
+
+    # --- corrupted-store swap: must be refused, old variant keeps serving ---
+    manifest = json.load(open(os.path.join(artifacts, "manifest.json")))
+    weights = next(v for v in manifest["variants"]
+                   if v["id"] == variant)["weights"]
+    store_path = os.path.join(artifacts, weights)
+    with open(store_path, "rb") as f:
+        clean = f.read()
+    bad = bytearray(clean)
+    bad[len(bad) // 2] ^= 0x40
+    with open(store_path, "wb") as f:
+        f.write(bytes(bad))
+    try:
+        request({"op": "swap", "variant": variant})
+        refusal = json.loads(rfile.readline())
+        assert "error" in refusal, (
+            f"swap must refuse a corrupted store, got: {refusal}")
+        assert list_variant()["generation"] == generation, (
+            "refused swap must not bump the generation")
+        # the old release keeps serving, byte-identical
+        request(base)
+        still = json.loads(rfile.readline())
+        assert "error" not in still, f"serving broke after refused swap: {still}"
+        assert still["text"] == text, "old variant's decode changed after refused swap"
+    finally:
+        with open(store_path, "wb") as f:
+            f.write(clean)
+    # restored bytes swap cleanly
+    request({"op": "swap", "variant": variant})
+    ok = json.loads(rfile.readline())
+    assert "error" not in ok, f"restored store must swap: {ok}"
+    assert ok["generation"] == generation + 1, ok
+    print("[smoke] corrupted-store swap refused ok: old variant kept serving, "
+          "restored store swapped clean")
 
 
 if __name__ == "__main__":
