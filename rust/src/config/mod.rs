@@ -248,6 +248,14 @@ pub struct ServeConfig {
     /// single-threaded kernel.  Threaded and serial GEMMs are
     /// bit-identical, so this is purely a throughput knob.
     pub decode_threads: usize,
+    /// Default speculative draft variant (`dobi serve --spec-draft`):
+    /// greedy generate requests without their own `"spec"` field decode
+    /// speculatively against this draft.  None (the default) leaves
+    /// speculation fully client-driven.
+    pub spec_draft: Option<String>,
+    /// Tokens drafted per speculative round when `spec_draft` applies or
+    /// the client's `"spec"` object omits `k` (`--spec-k`).
+    pub spec_k: usize,
 }
 
 impl Default for ServeConfig {
@@ -257,6 +265,8 @@ impl Default for ServeConfig {
             queue_depth: 256,
             kv_capacity: crate::coordinator::MAX_ANY_SEQ,
             decode_threads: 1,
+            spec_draft: None,
+            spec_k: 4,
         }
     }
 }
@@ -607,6 +617,8 @@ mod tests {
         assert!(c.max_sessions >= 1 && c.queue_depth >= c.max_sessions);
         assert_eq!(c.kv_capacity, crate::coordinator::MAX_ANY_SEQ);
         assert!(c.decode_threads >= 1);
+        assert!(c.spec_draft.is_none(), "speculation stays opt-in by default");
+        assert!(c.spec_k >= 1);
     }
 
     #[test]

@@ -567,6 +567,21 @@ impl KvCache {
         self.len = 0;
     }
 
+    /// Roll the cache back to `len` positions, discarding every row
+    /// appended after that point (speculative-decode rejection path).
+    /// Buffers keep their capacity; re-appending after a rollback
+    /// reproduces the untruncated state bit-for-bit because appended
+    /// rows never depend on rows after their own position.
+    pub fn truncate_to(&mut self, len: usize) {
+        assert!(len <= self.len,
+                "KvCache::truncate_to({len}) beyond current len {}", self.len);
+        for l in &mut self.layers {
+            l.k.truncate(len * self.d);
+            l.v.truncate(len * self.d);
+        }
+        self.len = len;
+    }
+
     /// Host bytes of the K/V rows cached so far, derived from the actual
     /// buffer contents — not a hardcoded bytes-per-element — so the
     /// accounting stays honest if cached rows stop being f32.
@@ -789,6 +804,86 @@ impl FactorizedModel {
             all.push(logits);
         }
         Ok(all)
+    }
+
+    /// Speculative-verify forward: append `tokens` to one *prefilled*
+    /// session's cache in a single multi-row trunk walk and return the
+    /// logits of **every** appended position, row-major
+    /// (tokens.len() × vocab).  Row `i` attends cached positions
+    /// `0..=base+i` through the same [`causal_attend`] kernel the serial
+    /// step uses, and the blocked GEMMs compute each row independently of
+    /// its batch, so row `i` is **bit-identical** to the logits a serial
+    /// [`Self::forward_kv`] step would produce after feeding
+    /// `tokens[..i]` — the property that makes greedy speculative decode
+    /// exactly equal to pure target decode.  The caller rolls rejected
+    /// rows back with [`KvCache::truncate_to`].
+    pub fn forward_kv_rows(&self, tokens: &[i32], kv: &mut KvCache) -> Result<Vec<f32>> {
+        anyhow::ensure!(!self.action_head,
+                        "{}: VLA heads emit one action, not a token stream — \
+                         no incremental decode path", self.id);
+        anyhow::ensure!(kv.layers.len() == self.layers.len() && kv.d == self.d_model,
+                        "{}: KV cache built for a different model", self.id);
+        anyhow::ensure!(!kv.is_empty(),
+                        "{}: session not prefilled — verify steps are step-only", self.id);
+        anyhow::ensure!(!tokens.is_empty(), "{}: empty verify step", self.id);
+        let d = self.d_model;
+        let base = kv.len;
+        let s_new = tokens.len();
+        anyhow::ensure!(base + s_new <= kv.capacity,
+                        "{}: KV cache overflow ({base} + {s_new} > capacity {})",
+                        self.id, kv.capacity);
+        let mut h = vec![0f32; s_new * d];
+        for (si, &t) in tokens.iter().enumerate() {
+            if t < 0 || t as usize >= self.vocab {
+                bail!("{}: token id {t} outside vocab {}", self.id, self.vocab);
+            }
+            h[si * d..(si + 1) * d]
+                .copy_from_slice(&self.embed[t as usize * d..(t as usize + 1) * d]);
+        }
+        let nh = self.n_heads;
+        let dh = self.d_head();
+        let (cos, sin) = rope_cache(base, s_new, dh);
+        let n_k = base + s_new;
+        let mut normed = vec![0f32; s_new * d];
+        let mut ctx = vec![0f32; s_new * d];
+        for (layer, lkv) in self.layers.iter().zip(kv.layers.iter_mut()) {
+            rmsnorm(&h, &layer.attn_norm, d, &mut normed);
+            let mut q = layer.wq.apply(&normed, s_new);
+            let mut k_new = layer.wk.apply(&normed, s_new);
+            let v_new = layer.wv.apply(&normed, s_new);
+            apply_rope(&mut q, 1, s_new, nh, dh, &cos, &sin);
+            apply_rope(&mut k_new, 1, s_new, nh, dh, &cos, &sin);
+            lkv.k.extend_from_slice(&k_new);
+            lkv.v.extend_from_slice(&v_new);
+            for slot in ctx.iter_mut() {
+                *slot = 0.0;
+            }
+            causal_attend(&q, &lkv.k, &lkv.v, s_new, n_k, nh, dh, &mut ctx);
+            let attn = layer.wo.apply(&ctx, s_new);
+            add_inplace(&mut h, &attn);
+            rmsnorm(&h, &layer.mlp_norm, d, &mut normed);
+            let out = mlp(&normed, s_new, layer, None);
+            add_inplace(&mut h, &out);
+        }
+        kv.len = n_k;
+        // All-rows logits head: final norm + tied LM head on every
+        // appended position (the verify step needs each row's argmax).
+        rmsnorm(&h, &self.final_norm, d, &mut normed);
+        let v = self.vocab;
+        let mut logits = vec![0f32; s_new * v];
+        for si in 0..s_new {
+            let nrow = &normed[si * d..(si + 1) * d];
+            let lrow = &mut logits[si * v..(si + 1) * v];
+            for (vi, slot) in lrow.iter_mut().enumerate() {
+                let erow = &self.embed[vi * d..(vi + 1) * d];
+                let mut acc = 0f32;
+                for t in 0..d {
+                    acc += nrow[t] * erow[t];
+                }
+                *slot = acc;
+            }
+        }
+        Ok(logits)
     }
 }
 
@@ -1201,6 +1296,85 @@ mod tests {
         let mut refs: Vec<&mut KvCache> = vec![&mut alone];
         let got = m.forward_kv_multi(&[7], &mut refs).unwrap();
         assert_eq!(got[0], want);
+    }
+
+    #[test]
+    fn verify_rows_bit_identical_to_serial_steps() {
+        for factorized in [false, true] {
+            let m = tiny_model(dims(), 0, factorized);
+            let prompt: Vec<i32> = (0..7).map(|i| (i * 11 + 1) % 61).collect();
+            let draft = [3i32, 41, 17, 9];
+            // serial reference: one forward_kv step per draft token
+            let mut kv_s = m.new_kv_cache(32);
+            m.forward_kv(&prompt, &mut kv_s, None).unwrap();
+            let mut serial = Vec::new();
+            for &t in &draft {
+                serial.extend(m.forward_kv(&[t], &mut kv_s, None).unwrap());
+            }
+            // batched verify: all draft rows in ONE multi-row step
+            let mut kv_r = m.new_kv_cache(32);
+            m.forward_kv(&prompt, &mut kv_r, None).unwrap();
+            let rows = m.forward_kv_rows(&draft, &mut kv_r).unwrap();
+            assert_eq!(rows.len(), draft.len() * m.vocab);
+            // exact equality, not tolerance: the speculative parity
+            // guarantee (greedy spec decode == pure target decode) rests
+            // on the batched rows being the serial steps bit-for-bit
+            assert_eq!(rows, serial, "verify rows drifted (factorized={factorized})");
+            assert_eq!(kv_r.len(), kv_s.len());
+        }
+    }
+
+    #[test]
+    fn truncate_to_rollback_then_reappend_is_bit_exact() {
+        let m = tiny_model(dims(), 0, false);
+        let prompt: Vec<i32> = (0..6).map(|i| (i * 5 + 2) % 61).collect();
+        let mut kv = m.new_kv_cache(32);
+        m.forward_kv(&prompt, &mut kv, None).unwrap();
+        let base = kv.len();
+        let bytes_before = kv.resident_bytes();
+        let first = m.forward_kv_rows(&[10, 20, 30], &mut kv).unwrap();
+        // reject all three speculative rows, then replay them: the cache
+        // must behave as if the rejected rows never existed
+        kv.truncate_to(base);
+        assert_eq!(kv.len(), base);
+        assert_eq!(kv.resident_bytes(), bytes_before);
+        let again = m.forward_kv_rows(&[10, 20, 30], &mut kv).unwrap();
+        assert_eq!(first, again, "rollback + replay must be bit-exact");
+        // partial rollback: keep one accepted row, step a correction
+        kv.truncate_to(base + 1);
+        let corrected = m.forward_kv(&[55], &mut kv, None).unwrap();
+        let mut kv_ref = m.new_kv_cache(32);
+        m.forward_kv(&prompt, &mut kv_ref, None).unwrap();
+        m.forward_kv(&[10], &mut kv_ref, None).unwrap();
+        let want = m.forward_kv(&[55], &mut kv_ref, None).unwrap();
+        assert_eq!(corrected, want, "post-rollback step must match clean decode");
+        // no-op truncate is allowed
+        let len = kv.len();
+        kv.truncate_to(len);
+        assert_eq!(kv.len(), len);
+    }
+
+    #[test]
+    #[should_panic(expected = "beyond current len")]
+    fn truncate_to_beyond_len_panics() {
+        let m = tiny_model(dims(), 0, false);
+        let mut kv = m.new_kv_cache(8);
+        m.forward_kv(&[1, 2], &mut kv, None).unwrap();
+        kv.truncate_to(3);
+    }
+
+    #[test]
+    fn verify_rows_validates_inputs() {
+        let m = tiny_model(dims(), 0, false);
+        // step-only: an empty cache has no prefill to verify against
+        let mut empty = m.new_kv_cache(8);
+        assert!(m.forward_kv_rows(&[1, 2], &mut empty).is_err());
+        let mut kv = m.new_kv_cache(6);
+        m.forward_kv(&[1, 2, 3], &mut kv, None).unwrap();
+        assert!(m.forward_kv_rows(&[], &mut kv).is_err(), "empty verify step");
+        assert!(m.forward_kv_rows(&[61], &mut kv).is_err(), "token OOB");
+        assert!(m.forward_kv_rows(&[1, 2, 3, 4], &mut kv).is_err(), "overflow");
+        assert_eq!(kv.len(), 3, "failed verify must not grow the cache");
     }
 
     #[test]

@@ -20,14 +20,15 @@ use dobi::config::{AllocMode, BackendKind, CompressConfig, EngineConfig, Manifes
 use dobi::coordinator::Engine;
 use dobi::corpusio;
 use dobi::evalx;
+use dobi::json::Json;
 use dobi::memsim::DeviceModel;
 use dobi::runtime::{make_backend, Backend, ForwardModel, Runtime};
-use dobi::serve::ServeRuntime;
+use dobi::serve::{ServeRuntime, SpecParams};
 use dobi::server::Server;
 
 fn main() {
     let args = Args::from_env(&["verbose", "all", "tasks", "synth", "stream", "no-stream",
-                                "no-control", "replace"]);
+                                "no-control", "replace", "json"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -68,7 +69,9 @@ fn run(args: &Args) -> Result<()> {
                  usage: dobi <inspect|compress|eval|generate|serve|memsim|parity>\n\
                  \x20      [--artifacts DIR] [--backend auto|pjrt|native] ...\n\
                  \n\
-                 inspect                      list variants and storage accounting\n\
+                 inspect [--json]             list variants and storage accounting\n\
+                 \x20        (--json: machine-readable table with full\n\
+                 \x20        provenance sha256 per variant)\n\
                  compress --out DIR | --append DIR [--replace] [--ratio R]\n\
                  \x20        [--alloc waterfill|learned] [--train-iters N] [--train-lr F]\n\
                  \x20        [--precision q8|f16|f32] [--variant ID | --synth]\n\
@@ -83,12 +86,16 @@ fn run(args: &Args) -> Result<()> {
                  generate --variant ID --prompt TEXT [--tokens N] [--temperature T]\n\
                  serve --variants A,B --port P [--max-sessions N]\n\
                  \x20     [--decode-threads T] [--stream | --no-stream]\n\
-                 \x20     [--no-control]\n\
+                 \x20     [--no-control] [--spec-draft ID] [--spec-k N]\n\
                  \x20     incremental decode runtime (KV cache + continuous\n\
                  \x20     batching + fused multi-session steps + streaming;\n\
                  \x20     T > 1 threads the blocked GEMM column-wise);\n\
                  \x20     control ops {\"op\":\"swap\"|\"list\"|\"health\"} manage\n\
-                 \x20     zero-downtime hot swaps unless --no-control\n\
+                 \x20     zero-downtime hot swaps unless --no-control;\n\
+                 \x20     --spec-draft makes greedy requests decode\n\
+                 \x20     speculatively (draft variant proposes N tokens per\n\
+                 \x20     round, the target verifies in one batched step —\n\
+                 \x20     output stays bit-identical to plain decode)\n\
                  memsim --model NAME [--capacity-mb M] [--bandwidth-mbs B]\n\
                  parity                       pallas vs xla HLO numerics (pjrt only)\n\
                  \n\
@@ -107,6 +114,10 @@ fn run(args: &Args) -> Result<()> {
 
 fn inspect(args: &Args) -> Result<()> {
     let m = Manifest::load(&artifacts_dir(args))?;
+    if args.has("json") {
+        println!("{}", inspect_json(&m));
+        return Ok(());
+    }
     println!("profile: {}  models: {}  variants: {}", m.profile, m.models.len(),
              m.variants.len());
     for (name, info) in &m.models {
@@ -142,6 +153,55 @@ fn inspect(args: &Args) -> Result<()> {
     }
     t.print();
     Ok(())
+}
+
+/// `dobi inspect --json`: the machine-readable variant table.  CI and
+/// serve_smoke assert provenance (full store sha256) and allocation
+/// against this instead of regex-scraping the human table.
+fn inspect_json(m: &Manifest) -> String {
+    use std::collections::BTreeMap;
+    let mut models = BTreeMap::new();
+    for (name, info) in &m.models {
+        let mut o = BTreeMap::new();
+        o.insert("d_model".into(), Json::Num(info.d_model as f64));
+        o.insert("n_layers".into(), Json::Num(info.n_layers as f64));
+        o.insert("n_heads".into(), Json::Num(info.n_heads as f64));
+        o.insert("d_ff".into(), Json::Num(info.d_ff as f64));
+        o.insert("total_params".into(), Json::Num(info.total_params as f64));
+        models.insert(name.clone(), Json::Obj(o));
+    }
+    let variants: Vec<Json> = m
+        .variants
+        .iter()
+        .map(|v| {
+            let mut o = BTreeMap::new();
+            o.insert("id".into(), Json::Str(v.id.clone()));
+            o.insert("model".into(), Json::Str(v.model.clone()));
+            o.insert("method".into(), Json::Str(v.method.clone()));
+            o.insert("kind".into(), Json::Str(v.kind.clone()));
+            o.insert("ratio".into(), Json::Num(v.ratio));
+            o.insert("alloc".into(), Json::Str(v.alloc.clone()));
+            o.insert("stored_params".into(), Json::Num(v.stored_params as f64));
+            o.insert("bytes".into(), Json::Num(v.bytes as f64));
+            o.insert("store_sha256".into(),
+                     match v.provenance.as_ref() {
+                         Some(p) => Json::Str(p.store_sha256.clone()),
+                         None => Json::Null,
+                     });
+            let ppl: BTreeMap<String, Json> = v
+                .ref_ppl
+                .iter()
+                .map(|(k, p)| (k.clone(), Json::Num(*p)))
+                .collect();
+            o.insert("ref_ppl".into(), Json::Obj(ppl));
+            Json::Obj(o)
+        })
+        .collect();
+    let mut root = BTreeMap::new();
+    root.insert("profile".into(), Json::Str(m.profile.clone()));
+    root.insert("models".into(), Json::Obj(models));
+    root.insert("variants".into(), Json::Arr(variants));
+    Json::Obj(root).to_string()
 }
 
 /// Native compression: a dense source (a manifest variant, or the synth
@@ -323,8 +383,14 @@ fn serve(args: &Args) -> Result<()> {
         max_sessions: args.usize_or("max-sessions", 8),
         queue_depth: args.usize_or("queue-depth", 256),
         decode_threads: args.usize_or("decode-threads", 1),
+        spec_draft: args.get("spec-draft").map(String::from),
+        spec_k: args.usize_or("spec-k", 4).max(1),
         ..Default::default()
     };
+    let spec_defaults = serve_cfg
+        .spec_draft
+        .clone()
+        .map(|draft| SpecParams { draft, k: serve_cfg.spec_k });
     let runtime = if args.has("no-stream") {
         None
     } else {
@@ -353,8 +419,22 @@ fn serve(args: &Args) -> Result<()> {
     } else {
         Some(Arc::new(Engine::start(dir, &fallback_ids, cfg, None)?))
     };
+    // Speculative serve defaults need the decode runtime AND a draft the
+    // runtime actually carries — fail loudly, not token-by-token.
+    if let Some(sp) = &spec_defaults {
+        let Some(rt) = &runtime else {
+            return Err(anyhow!("--spec-draft needs the incremental decode runtime \
+                                (serve without --no-stream)"));
+        };
+        anyhow::ensure!(rt.variants().iter().any(|v| v == &sp.draft),
+                        "--spec-draft `{}` is not served by the decode runtime \
+                         (add it to --variants)", sp.draft);
+    }
     let port = args.usize_or("port", 7433) as u16;
-    let mut builder = Server::builder().port(port).control(!args.has("no-control"));
+    let mut builder = Server::builder()
+        .port(port)
+        .control(!args.has("no-control"))
+        .spec_defaults(spec_defaults.clone());
     if let Some(engine) = &engine {
         builder = builder.engine(engine.clone());
     }
@@ -362,10 +442,14 @@ fn serve(args: &Args) -> Result<()> {
         builder = builder.runtime(rt.clone());
     }
     let server = builder.start()?;
-    println!("serving {} on {} (streaming {}, control ops {}; ctrl-c to stop)",
+    println!("serving {} on {} (streaming {}, control ops {}{}; ctrl-c to stop)",
              ids.join(", "), server.addr,
              if runtime.is_some() { "on" } else { "off" },
-             if args.has("no-control") { "off" } else { "on" });
+             if args.has("no-control") { "off" } else { "on" },
+             match &spec_defaults {
+                 Some(sp) => format!(", spec draft {} k={}", sp.draft, sp.k),
+                 None => String::new(),
+             });
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         let mut status = String::new();

@@ -79,11 +79,12 @@ impl Histogram {
         self.observe_raw(d.as_micros() as u64, d.as_secs_f64());
     }
 
-    /// Record a dimensionless value (e.g. a fused batch size) — same
-    /// reservoir/percentile machinery; the log-bucket counters are
-    /// latency-shaped and not meaningful for these, stats come from the
-    /// reservoir.  Name such histograms `*_size` so [`Registry::render`]
-    /// omits the seconds label.
+    /// Record a dimensionless value (e.g. a fused batch size or an
+    /// acceptance rate) — same reservoir/percentile machinery; the
+    /// log-bucket counters are latency-shaped and not meaningful for
+    /// these, stats come from the reservoir.  Name such histograms
+    /// `*_size` or `*_rate` so [`Registry::render`] omits the seconds
+    /// label.
     pub fn observe_value(&self, v: f64) {
         self.observe_raw((v * 1e6) as u64, v);
     }
@@ -158,8 +159,8 @@ impl Registry {
         for (k, h) in self.histograms.lock().unwrap().iter() {
             let s = h.stats();
             // dimensionless histograms (observe_value: `*_size` batch
-            // sizes etc.) get no seconds label
-            let u = if k.ends_with("_size") { "" } else { "s" };
+            // sizes, `*_rate` ratios) get no seconds label
+            let u = if k.ends_with("_size") || k.ends_with("_rate") { "" } else { "s" };
             out.push_str(&format!(
                 "{k} count={} mean={:.6}{u} p50={:.6}{u} p95={:.6}{u} p99={:.6}{u}\n",
                 h.count(), s.mean, s.p50, s.p95, s.p99

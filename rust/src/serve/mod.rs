@@ -25,6 +25,17 @@
 //!   [`registry::ModelRelease`]; `{"op":"swap"}` installs a new
 //!   generation while in-flight sessions drain on the old one, which is
 //!   garbage-collected after its last session finishes.
+//! * [`spec`]      — [`spec::SpecDecoder`]: self-speculative decoding.
+//!   An aggressive low-rank variant drafts `k` tokens from its own KV
+//!   cache; the session's target variant verifies all of them in ONE
+//!   batched multi-row trunk walk
+//!   ([`crate::lowrank::FactorizedModel::forward_kv_rows`]), accepts the
+//!   matching prefix, corrects the first mismatch from its own logits,
+//!   and rolls rejected rows back
+//!   ([`crate::lowrank::model::KvCache::truncate_to`]).  Greedy output is
+//!   byte-identical to pure target decode; the acceptance rate doubles as
+//!   a serving-native measure of how much dense behavior the draft's SVD
+//!   ratio preserves.
 //! * [`stream`]    — the typed [`stream::Request`] protocol parsed off
 //!   the TCP line framing (generate / swap / list / health), the
 //!   `{"id", "delta", "done"}` token-streaming framing
@@ -35,9 +46,11 @@
 pub mod registry;
 pub mod scheduler;
 pub mod session;
+pub mod spec;
 pub mod stream;
 
 pub use registry::{ModelRelease, VariantRegistry, VariantStatus};
 pub use scheduler::{FinishReason, GenEvent, ServeRuntime, ServeStats, SessionRequest};
 pub use session::DecodeSession;
+pub use spec::{SpecDecoder, SpecParams, SpecRound};
 pub use stream::{GenParams, ReqError, Request};

@@ -98,10 +98,52 @@ pub struct VariantRegistry {
     slots: BTreeMap<String, Slot>,
 }
 
+/// Can `draft` propose tokens for `target`?  Speculative decode requires
+/// the pair to agree on every dimension a token stream flows through —
+/// same vocab (and the byte tokenizer is universal here), same trunk
+/// geometry, same image-prefix shape — so the draft's candidates and the
+/// target's verify rows index the same distribution.  Ranks and stored
+/// precision are exactly what MAY differ: that is the compression.
+pub fn spec_compatible(draft: &FactorizedModel, target: &FactorizedModel) -> Result<()> {
+    anyhow::ensure!(!draft.action_head && !target.action_head,
+                    "VLA variants have no token stream to speculate on");
+    let same = draft.vocab == target.vocab
+        && draft.d_model == target.d_model
+        && draft.n_heads == target.n_heads
+        && draft.d_ff == target.d_ff
+        && draft.layers.len() == target.layers.len()
+        && draft.img_dim == target.img_dim
+        && draft.n_img_tokens == target.n_img_tokens;
+    anyhow::ensure!(
+        same,
+        "draft `{}` (vocab {}, d {}, heads {}, ff {}, layers {}, img {}x{}) is not \
+         shape-compatible with target `{}` (vocab {}, d {}, heads {}, ff {}, layers {}, \
+         img {}x{})",
+        draft.id, draft.vocab, draft.d_model, draft.n_heads, draft.d_ff, draft.layers.len(),
+        draft.img_dim, draft.n_img_tokens,
+        target.id, target.vocab, target.d_model, target.n_heads, target.d_ff,
+        target.layers.len(), target.img_dim, target.n_img_tokens
+    );
+    Ok(())
+}
+
 impl VariantRegistry {
     /// The release new sessions for `variant` should decode against.
     pub fn current(&self, variant: &str) -> Option<Arc<ModelRelease>> {
         self.slots.get(variant).map(|s| s.current.clone())
+    }
+
+    /// Resolve a speculative draft for `target`'s release: the draft
+    /// variant's CURRENT release, checked for shape compatibility
+    /// ([`spec_compatible`]).  Errors name the offending variant so the
+    /// client's typed error is actionable.
+    pub fn resolve_draft(&self, draft_variant: &str,
+                         target: &ModelRelease) -> Result<Arc<ModelRelease>> {
+        let draft = self
+            .current(draft_variant)
+            .ok_or_else(|| anyhow!("unknown draft variant `{draft_variant}`"))?;
+        spec_compatible(&draft.model, &target.model)?;
+        Ok(draft)
     }
 
     pub fn variants(&self) -> Vec<String> {
@@ -262,6 +304,37 @@ mod tests {
         // nobody held generation 1: the first sweep reclaims it
         assert_eq!(reg.sweep(), 1);
         assert_eq!(reg.sweep(), 0);
+    }
+
+    #[test]
+    fn resolve_draft_checks_shape_compatibility() {
+        use crate::lowrank::synth::tiny_model;
+        let mut reg = VariantRegistry::default();
+        reg.install("tiny/dense", load("spec"));
+        // a same-shape factorized variant is a valid draft
+        reg.install("tiny/draft", LoadedVariant {
+            model: tiny_model(dims(), 0, true),
+            store_sha256: None,
+            alloc: "waterfill".into(),
+            ratio: 0.3,
+        });
+        // a differently-shaped model is not
+        reg.install("tiny/other", LoadedVariant {
+            model: tiny_model(TinyDims { vocab: 61, d: 16, heads: 2, layers: 3, ff: 24 },
+                              0, false),
+            store_sha256: None,
+            alloc: "waterfill".into(),
+            ratio: 1.0,
+        });
+        let target = reg.current("tiny/dense").unwrap();
+        let ok = reg.resolve_draft("tiny/draft", &target).unwrap();
+        assert_eq!(ok.variant, "tiny/draft");
+        assert!(reg.resolve_draft("tiny/other", &target).is_err(),
+                "layer-count mismatch must be refused");
+        assert!(reg.resolve_draft("tiny/nope", &target).is_err(),
+                "unknown draft must be refused");
+        // a variant may draft for itself (the degenerate pair)
+        assert!(reg.resolve_draft("tiny/dense", &target).is_ok());
     }
 
     #[test]

@@ -45,6 +45,7 @@ use crate::metrics::Registry;
 
 use super::registry::{load_release, ModelRelease, VariantRegistry, VariantStatus};
 use super::session::DecodeSession;
+use super::spec::{SpecDecoder, SpecParams};
 
 /// Why a session's stream ended.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,6 +88,11 @@ pub struct SessionRequest {
     pub seed: u64,
     /// Optional EOS: sampling this token ends the stream (it IS emitted).
     pub stop_token: Option<i32>,
+    /// Speculative decode: a compressed draft variant proposes `k` tokens
+    /// per tick, the session's own variant verifies them in one batched
+    /// multi-row step.  Greedy-only (temperature must be 0); output is
+    /// bit-identical to the plain path by construction.
+    pub spec: Option<SpecParams>,
     /// Where the scheduler delivers this session's [`GenEvent`]s.
     pub events: mpsc::Sender<GenEvent>,
 }
@@ -296,6 +302,36 @@ impl ServeRuntime {
             temperature,
             seed,
             stop_token: None,
+            spec: None,
+            events: etx,
+        })
+        .map_err(|e| anyhow!("{e}"))?;
+        let mut out = Vec::new();
+        for ev in erx {
+            match ev {
+                GenEvent::Token { token, .. } => out.push(token),
+                GenEvent::Done { .. } => return Ok(out),
+                GenEvent::Error(e) => bail!("session failed: {e}"),
+            }
+        }
+        bail!("scheduler dropped the session")
+    }
+
+    /// [`Self::generate`] with a speculative draft pair — greedy by
+    /// contract, so the tokens are bit-identical to plain `generate` at
+    /// temperature 0 (the parity the integration tests assert).
+    pub fn generate_spec(&self, variant: &str, prompt: &[i32], max_tokens: usize,
+                         spec: SpecParams) -> Result<Vec<i32>> {
+        let (etx, erx) = mpsc::channel();
+        self.open(SessionRequest {
+            variant: variant.to_string(),
+            prompt: prompt.to_vec(),
+            image: None,
+            max_tokens,
+            temperature: 0.0,
+            seed: 1,
+            stop_token: None,
+            spec: Some(spec),
             events: etx,
         })
         .map_err(|e| anyhow!("{e}"))?;
@@ -369,6 +405,19 @@ struct Running {
     done: Option<FinishReason>,
     /// Client hung up or the step failed: evict without a Done event.
     dead: bool,
+    /// Speculative pair: draft-side state + the draft release Arc.
+    spec: Option<SpecPair>,
+}
+
+/// A speculative session's draft half, paired with one `Running` target.
+struct SpecPair {
+    decoder: SpecDecoder,
+    /// The draft release this pair decodes against for its whole
+    /// lifetime.  Holding the Arc drains the pair through a hot swap of
+    /// the DRAFT variant exactly as `Running::release` does for the
+    /// target variant: either swap leaves the pair decoding its pinned
+    /// generations until it finishes, then the sweep GCs both.
+    release: Arc<ModelRelease>,
 }
 
 fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeShared>) {
@@ -384,6 +433,14 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
     let prefill_h = m.histogram("serve_prefill_seconds");
     let step_h = m.histogram("serve_step_seconds");
     let fused_h = m.histogram("serve_fused_batch_size");
+    let spec_proposed_c = m.counter("serve_spec_proposed");
+    let spec_accepted_c = m.counter("serve_spec_accepted");
+    let spec_rate_h = m.histogram("serve_spec_accept_rate");
+    // per-tick phase gauges: wall µs the last tick spent drafting vs
+    // verifying across its speculative sessions — the heterogeneous
+    // step-cost signal (0/0 on ticks with no speculative session)
+    let spec_draft_us_g = m.gauge("serve_spec_draft_us");
+    let spec_verify_us_g = m.gauge("serve_spec_verify_us");
     // GEMM worker count for the forwards this thread runs (thread-local:
     // the knob threads the scheduler's decode, not every caller's matmul).
     set_decode_threads(cfg.decode_threads);
@@ -436,9 +493,20 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
                 // Resolve the variant's CURRENT release at admission time
                 // — this is the hot-swap routing point: sessions opened
                 // after an install decode the new generation while earlier
-                // ones drain on the Arc they already hold.
-                let release = shared.registry.lock().unwrap().current(&p.req.variant);
-                if let Some(r) = admit(p.req, release, &cfg, next_id, &tokens_c, &prefill_h) {
+                // ones drain on the Arc they already hold.  Speculative
+                // sessions resolve their draft under the same lock (same
+                // routing semantics, plus the shape-compatibility check).
+                let (release, draft) = {
+                    let reg = shared.registry.lock().unwrap();
+                    let release = reg.current(&p.req.variant);
+                    let draft = match (&release, &p.req.spec) {
+                        (Some(rel), Some(sp)) => Some(reg.resolve_draft(&sp.draft, rel)),
+                        _ => None,
+                    };
+                    (release, draft)
+                };
+                if let Some(r) = admit(p.req, release, draft, &cfg, next_id, &tokens_c,
+                                       &prefill_h) {
                     next_id += 1;
                     active.push(r);
                 } else {
@@ -448,7 +516,10 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
             }
         }
         active_g.set(active.len() as i64);
-        kv_bytes_g.set(active.iter().map(|r| r.session.kv_bytes() as i64).sum());
+        kv_bytes_g.set(active.iter().map(|r| {
+            let draft = r.spec.as_ref().map_or(0, |p| p.decoder.draft_kv_bytes());
+            (r.session.kv_bytes() + draft) as i64
+        }).sum());
 
         // Tick: one decode step per live session.  Sessions are grouped
         // by (variant, generation) — mid-drain, old- and new-generation
@@ -465,8 +536,10 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
             .collect();
         groups.sort();
         groups.dedup();
+        let mut tick_draft_s = 0f64;
+        let mut tick_verify_s = 0f64;
         for (var, generation) in groups {
-            let mut group: Vec<&mut Running> = active
+            let group: Vec<&mut Running> = active
                 .iter_mut()
                 .filter(|r| {
                     r.done.is_none()
@@ -480,39 +553,56 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
             // needs `&mut` access to
             let release = group[0].release.clone();
             let model = &release.model;
-            if group.len() >= 2 {
-                let tokens: Vec<i32> = group.iter().map(|r| r.last).collect();
+            // Speculative sessions group by (target variant, generation)
+            // like everything else but run whole draft/verify rounds with
+            // heterogeneous per-session step costs — split them out so
+            // the plain sessions still fuse into one trunk walk.
+            let (mut specs, mut plain): (Vec<&mut Running>, Vec<&mut Running>) =
+                group.into_iter().partition(|r| r.spec.is_some());
+            let mut fused_done = false;
+            if plain.len() >= 2 {
+                let tokens: Vec<i32> = plain.iter().map(|r| r.last).collect();
                 let t0 = Instant::now();
                 let fused = {
                     let mut sessions: Vec<&mut DecodeSession> =
-                        group.iter_mut().map(|r| &mut r.session).collect();
+                        plain.iter_mut().map(|r| &mut r.session).collect();
                     DecodeSession::step_many(model, &mut sessions, &tokens)
                 };
                 if let Ok(all) = fused {
                     // recorded only when the fused walk actually ran —
                     // singleton groups and validation fallbacks step
                     // serially and must not inflate this histogram
-                    fused_h.observe_value(group.len() as f64);
+                    fused_h.observe_value(plain.len() as f64);
                     // every session waited the whole fused walk for its
                     // token, so each is charged the full wall time — the
                     // fused win shows up as fewer/faster ticks, not as a
                     // fabricated per-session divide
                     let dt = t0.elapsed();
-                    for (r, logits) in group.iter_mut().zip(&all) {
+                    for (r, logits) in plain.iter_mut().zip(&all) {
                         r.decode_s += dt.as_secs_f64();
                         step_h.observe(dt);
                         emit_next(r, logits, &tokens_c);
                     }
-                    continue;
+                    fused_done = true;
                 }
                 // step_many validates before touching any cache: fall
                 // through to serial steps so the failure lands on the
                 // offending session, not the whole group.
             }
-            for r in group {
-                step_serial(r, model, &step_h, &tokens_c);
+            if !fused_done {
+                for r in plain {
+                    step_serial(r, model, &step_h, &tokens_c);
+                }
+            }
+            for r in specs {
+                let (d_s, v_s) = step_spec(r, model, &step_h, &tokens_c, &spec_proposed_c,
+                                           &spec_accepted_c, &spec_rate_h);
+                tick_draft_s += d_s;
+                tick_verify_s += v_s;
             }
         }
+        spec_draft_us_g.set((tick_draft_s * 1e6) as i64);
+        spec_verify_us_g.set((tick_verify_s * 1e6) as i64);
 
         // Evict finished/dead sessions, emitting the terminal event.
         active.retain_mut(|r| {
@@ -538,7 +628,10 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
         // long tick must not report already-evicted ghost sessions or
         // their freed KV bytes until the next tick starts.
         active_g.set(active.len() as i64);
-        kv_bytes_g.set(active.iter().map(|r| r.session.kv_bytes() as i64).sum());
+        kv_bytes_g.set(active.iter().map(|r| {
+            let draft = r.spec.as_ref().map_or(0, |p| p.decoder.draft_kv_bytes());
+            (r.session.kv_bytes() + draft) as i64
+        }).sum());
 
         // GC point: evictions above dropped Running (and its release Arc)
         // for finished sessions, so superseded releases whose last session
@@ -596,11 +689,57 @@ fn step_serial(r: &mut Running, model: &FactorizedModel,
     }
 }
 
+/// One speculative draft/verify round with timing, metrics, and error
+/// handling — the spec-session counterpart of [`step_serial`].  The
+/// round's target logits rows flow through the same [`emit_next`] gate
+/// as plain steps (greedy argmax of each row == the round's accepted
+/// candidates then the correction token), so stop-token / budget /
+/// capacity termination and streaming are shared code.  Returns the
+/// round's (draft, verify) phase wall times for the per-tick gauges.
+fn step_spec(r: &mut Running, target_model: &FactorizedModel,
+             step_h: &crate::metrics::Histogram, tokens_c: &crate::metrics::Counter,
+             proposed_c: &crate::metrics::Counter, accepted_c: &crate::metrics::Counter,
+             rate_h: &crate::metrics::Histogram) -> (f64, f64) {
+    let t0 = Instant::now();
+    let outcome = {
+        let pair = r.spec.as_mut().expect("step_spec on a plain session");
+        pair.decoder.round(&pair.release.model, target_model, &mut r.session, r.last)
+    };
+    match outcome {
+        Ok(round) => {
+            let dt = t0.elapsed();
+            r.decode_s += dt.as_secs_f64();
+            step_h.observe(dt);
+            proposed_c.add(round.proposed as u64);
+            accepted_c.add(round.accepted as u64);
+            if round.proposed > 0 {
+                rate_h.observe_value(round.accepted as f64 / round.proposed as f64);
+            }
+            for row in &round.rows {
+                emit_next(r, row, tokens_c);
+                if r.done.is_some() || r.dead {
+                    break;
+                }
+            }
+            (round.draft_s, round.verify_s)
+        }
+        Err(e) => {
+            let _ = r.events.send(GenEvent::Error(format!("{e:#}")));
+            r.dead = true;
+            (0.0, 0.0)
+        }
+    }
+}
+
 /// Prefill a newly admitted session and emit its first token.  Returns
 /// None when the session terminated at admission (zero budget, prefill
 /// error, or client already gone).  `release` is the registry's current
-/// release for the variant, resolved by the caller at admission time.
-fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>, cfg: &ServeConfig,
+/// release for the variant, resolved by the caller at admission time;
+/// `draft` is the resolved speculative draft release (present iff the
+/// request asked for speculative decode and the target release exists —
+/// resolution/compatibility errors surface to the client here).
+fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>,
+         draft: Option<Result<Arc<ModelRelease>>>, cfg: &ServeConfig,
          id: u64, tokens_c: &crate::metrics::Counter,
          prefill_h: &crate::metrics::Histogram) -> Option<Running> {
     let Some(release) = release else {
@@ -609,6 +748,27 @@ fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>, cfg: &ServeCon
         return None;
     };
     let model = &release.model;
+    // Speculative setup fails fast, before any prefill work: a refused
+    // draft (unknown / shape-incompatible) or a non-greedy request is a
+    // terminal error, never a silent fallback to plain decode.
+    let spec_setup = match (&req.spec, draft) {
+        (None, _) => None,
+        (Some(sp), Some(Ok(d))) => Some((sp.k.max(1), d)),
+        (Some(_), Some(Err(e))) => {
+            let _ = req.events.send(GenEvent::Error(format!("{e:#}")));
+            return None;
+        }
+        (Some(sp), None) => {
+            let _ = req.events.send(GenEvent::Error(format!(
+                "draft variant `{}` was not resolved", sp.draft)));
+            return None;
+        }
+    };
+    if spec_setup.is_some() && req.temperature > 0.0 {
+        let _ = req.events.send(GenEvent::Error(
+            "speculative decode is greedy-only: temperature must be 0".into()));
+        return None;
+    }
     if req.max_tokens == 0 {
         let _ = req.events.send(GenEvent::Done {
             n_tokens: 0,
@@ -649,6 +809,20 @@ fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>, cfg: &ServeCon
             return None;
         }
     };
+    // The draft half shares the (already clipped) prompt and image: both
+    // caches attend the identical context, so draft candidates and target
+    // verify rows speak about the same positions.
+    let spec = match spec_setup {
+        None => None,
+        Some((k, drel)) => {
+            let mut dsess = DecodeSession::new(id, &drel.variant, &drel.model, cap);
+            if let Err(e) = dsess.prefill(&drel.model, &prompt, req.image.as_deref()) {
+                let _ = req.events.send(GenEvent::Error(format!("draft prefill: {e:#}")));
+                return None;
+            }
+            Some(SpecPair { decoder: SpecDecoder::new(dsess, k), release: drel })
+        }
+    };
     let dt = t0.elapsed();
     prefill_h.observe(dt);
     let mut r = Running {
@@ -666,6 +840,7 @@ fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>, cfg: &ServeCon
         decode_s: 0.0,
         done: None,
         dead: false,
+        spec,
     };
     emit_next(&mut r, &logits, tokens_c);
     Some(r)
@@ -707,9 +882,15 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         write_store(&dir.join("dense.dobiw"),
                     &tiny_store_tensors(dims(), 0, SynthStyle::DenseF32)).unwrap();
+        // a factorized q8 twin of the same weights: the speculative draft
+        write_store(&dir.join("q8.dobiw"),
+                    &tiny_store_tensors(dims(), 0, SynthStyle::FactorQ8)).unwrap();
         std::fs::write(
             dir.join("manifest.json"),
-            tiny_manifest_json(dims(), 0, &[("tiny/dense", "dense", 1.0, "dense.dobiw")]),
+            tiny_manifest_json(dims(), 0, &[
+                ("tiny/dense", "dense", 1.0, "dense.dobiw"),
+                ("tiny/q8", "factorized", 0.6, "q8.dobiw"),
+            ]),
         )
         .unwrap();
         dir
@@ -747,6 +928,7 @@ mod tests {
             temperature: 0.0,
             seed: 1,
             stop_token: None,
+            spec: None,
             events: etx,
         });
         assert!(matches!(bad, Err(SubmitError::UnknownVariant(_))));
@@ -769,6 +951,7 @@ mod tests {
             temperature: 0.0,
             seed: 1,
             stop_token: Some(first),
+            spec: None,
             events: etx,
         })
         .unwrap();
@@ -801,6 +984,7 @@ mod tests {
             temperature: 0.0,
             seed: 1,
             stop_token: None,
+            spec: None,
             events: etx,
         })
         .unwrap();
@@ -895,6 +1079,88 @@ mod tests {
         let (n, reason) = run_session(&rt, vec![1, 2], 3);
         assert_eq!(n, 3);
         assert_eq!(reason, FinishReason::MaxTokens);
+        rt.shutdown();
+    }
+
+    /// Runtime serving both the dense target and its q8 factorized twin
+    /// (the speculative draft).
+    fn rt_spec(tag: &str, cfg: ServeConfig) -> ServeRuntime {
+        ServeRuntime::start(
+            artifacts(tag),
+            &["tiny/dense".to_string(), "tiny/q8".to_string()],
+            cfg,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn spec_generate_bit_identical_to_plain_and_metrics_exported() {
+        let rt = rt_spec("spec", ServeConfig { max_sessions: 2, ..Default::default() });
+        let prompt: Vec<i32> = "The quick".bytes().map(|b| b as i32).collect();
+        let want = rt.generate("tiny/dense", &prompt, 16, 0.0, 1).unwrap();
+        for k in [1usize, 4] {
+            let got = rt
+                .generate_spec("tiny/dense", &prompt, 16,
+                               SpecParams { draft: "tiny/q8".into(), k })
+                .unwrap();
+            assert_eq!(got, want, "speculative greedy decode diverged (k {k})");
+        }
+        // self-drafting (target drafts for itself) is legal and exact too
+        let self_spec = rt
+            .generate_spec("tiny/dense", &prompt, 16,
+                           SpecParams { draft: "tiny/dense".into(), k: 4 })
+            .unwrap();
+        assert_eq!(self_spec, want);
+        let m = &rt.shared.metrics;
+        let proposed = m.counter("serve_spec_proposed").get();
+        let accepted = m.counter("serve_spec_accepted").get();
+        assert!(proposed > 0, "spec rounds must report proposals");
+        assert!(accepted <= proposed);
+        let text = rt.metrics_text();
+        assert!(text.contains("serve_spec_accept_rate"), "{text}");
+        assert!(text.contains("serve_spec_draft_us"), "{text}");
+        assert!(text.contains("serve_spec_verify_us"), "{text}");
+        rt.shutdown();
+    }
+
+    /// Open a session expected to die at admission; returns the Error text.
+    fn expect_admission_error(rt: &ServeRuntime, temperature: f32,
+                              spec: Option<SpecParams>) -> String {
+        let (etx, erx) = mpsc::channel();
+        rt.open(SessionRequest {
+            variant: "tiny/dense".into(),
+            prompt: vec![1, 2, 3],
+            image: None,
+            max_tokens: 8,
+            temperature,
+            seed: 1,
+            stop_token: None,
+            spec,
+            events: etx,
+        })
+        .unwrap();
+        for ev in erx {
+            match ev {
+                GenEvent::Error(e) => return e,
+                other => panic!("expected an admission error, got {other:?}"),
+            }
+        }
+        panic!("stream ended without an Error event");
+    }
+
+    #[test]
+    fn spec_refuses_non_greedy_and_bad_drafts() {
+        let rt = rt_spec("spec_rej", ServeConfig::default());
+        let sp = SpecParams { draft: "tiny/q8".into(), k: 4 };
+        let e = expect_admission_error(&rt, 0.7, Some(sp));
+        assert!(e.contains("greedy-only"), "{e}");
+        let e = expect_admission_error(
+            &rt, 0.0, Some(SpecParams { draft: "tiny/nope".into(), k: 4 }));
+        assert!(e.contains("unknown draft variant"), "{e}");
+        // refused sessions still close the books
+        let st = rt.stats();
+        assert_eq!(st.sessions_opened, st.sessions_finished);
+        assert_eq!(st.active_sessions, 0);
         rt.shutdown();
     }
 }

@@ -77,6 +77,31 @@ impl DecodeSession {
         Ok(logits)
     }
 
+    /// Speculative-verify step: append `tokens` in one batched multi-row
+    /// trunk walk ([`FactorizedModel::forward_kv_rows`]) and return the
+    /// logits of **every** appended row, row-major (tokens.len() × vocab).
+    /// Row `i` is bit-identical to what a serial [`Self::step`] after
+    /// `tokens[..i]` would return — the speculative parity contract.
+    /// Rows the verifier rejects are rolled back with
+    /// [`Self::rollback_to`].
+    pub fn verify_rows(&mut self, model: &FactorizedModel, tokens: &[i32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(!self.kv.is_empty(), "session {}: verify before prefill", self.id);
+        let rows = model.forward_kv_rows(tokens, &mut self.kv)?;
+        self.n_generated += tokens.len();
+        Ok(rows)
+    }
+
+    /// Roll the cache back to `positions` attended rows (speculative
+    /// rejection), keeping the generated-token accounting consistent.
+    /// `positions` may not cut into the prompt.
+    pub fn rollback_to(&mut self, positions: usize) {
+        assert!(positions >= self.n_prompt,
+                "session {}: rollback_to({positions}) would cut into the {}-row prompt",
+                self.id, self.n_prompt);
+        self.kv.truncate_to(positions);
+        self.n_generated = positions - self.n_prompt;
+    }
+
     /// Attended positions so far (prefix + prompt + generated).
     pub fn positions(&self) -> usize {
         self.kv.len()

@@ -1,0 +1,292 @@
+//! Self-speculative decoding: a compressed low-rank variant drafts, the
+//! dense (or high-ratio) target verifies.
+//!
+//! The paper's claim — activation-truncated variants keep most of the
+//! dense model's behavior — becomes a serving accelerator here: an
+//! aggressive draft variant (e.g. ratio 0.3) autoregressively proposes
+//! `k` tokens from its own KV cache, then the target checks all of them
+//! in ONE batched multi-row trunk walk
+//! ([`crate::lowrank::FactorizedModel::forward_kv_rows`]).  Accepted
+//! rows advance both caches; the first mismatch is corrected from the
+//! target's own logits; rejected rows are rolled back
+//! ([`crate::lowrank::model::KvCache::truncate_to`]).
+//!
+//! **Parity guarantee:** every emitted token is the argmax of a TARGET
+//! logits row, and those rows are bit-identical to what serial
+//! single-token target decode would compute (the multi-row step shares
+//! the serial step's kernels and the blocked GEMM is row-independent).
+//! Greedy speculative output is therefore byte-identical to pure target
+//! decode — the draft only decides how many target rows each walk
+//! amortizes.  Acceptance rate, in turn, is a serving-native measurement
+//! of how much of the dense greedy distribution survives SVD truncation
+//! at the draft's ratio (BENCH_spec.json records the curve).
+//!
+//! The scheduler drives one [`SpecDecoder::round`] per tick for each
+//! speculative session, then pushes the returned target rows through its
+//! normal emit gate (stop token / budget / capacity), so speculative and
+//! plain sessions share every termination and streaming path.
+
+use anyhow::Result;
+
+use crate::lowrank::FactorizedModel;
+use crate::mathx::argmax;
+
+use super::session::DecodeSession;
+
+/// Client-requested speculative parameters: the protocol's
+/// `"spec": {"draft": ..., "k": ...}` generate field (or the server's
+/// `--spec-draft`/`--spec-k` defaults) after validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpecParams {
+    /// Variant id drafting for this session's target variant.
+    pub draft: String,
+    /// Tokens drafted per round.
+    pub k: usize,
+}
+
+/// Outcome of one draft/verify round.
+pub struct SpecRound {
+    /// Target logits rows `R_0..R_a`, one per token to emit: row `i` is
+    /// the target's logits after the round's input token plus `i`
+    /// accepted candidates, so greedily emitting `argmax(rows[i])` in
+    /// order reproduces pure target decode — the accepted candidates
+    /// first, then the correction (or bonus) token from the last row.
+    pub rows: Vec<Vec<f32>>,
+    /// Candidates the draft proposed this round (`<= k`; clipped by the
+    /// target cache's remaining capacity).
+    pub proposed: usize,
+    /// Length of the accepted candidate prefix (`<= proposed`).
+    pub accepted: usize,
+    /// Wall time of the draft phase (catch-up + autoregressive drafting).
+    pub draft_s: f64,
+    /// Wall time of the verify phase (one batched multi-row target walk).
+    pub verify_s: f64,
+}
+
+/// Draft-side state paired with one target [`DecodeSession`]: the
+/// draft's own session (same prompt, own KV cache) plus the committed
+/// tokens the draft has not attended yet.
+pub struct SpecDecoder {
+    draft: DecodeSession,
+    k: usize,
+    /// Committed target tokens missing from the draft cache — after a
+    /// fully-accepted round the final candidate was never fed to the
+    /// draft, so it catches up at the start of the next round.
+    pending: Vec<i32>,
+}
+
+impl SpecDecoder {
+    /// Pair a prefilled draft session with a target.  `k` is the number
+    /// of tokens drafted per round (>= 1).
+    pub fn new(draft: DecodeSession, k: usize) -> SpecDecoder {
+        SpecDecoder { draft, k: k.max(1), pending: Vec::new() }
+    }
+
+    /// The draft session's variant id (hot-swap drain checks).
+    pub fn draft_variant(&self) -> &str {
+        &self.draft.variant
+    }
+
+    /// Host bytes the draft cache pins (KV accounting counts the pair).
+    pub fn draft_kv_bytes(&self) -> usize {
+        self.draft.kv_bytes()
+    }
+
+    /// One draft/verify round.  `last` is the most recently emitted
+    /// token, not yet attended by either cache (the same contract as the
+    /// plain path's `step(last)`).  On return the target cache holds
+    /// `last` plus the accepted candidate prefix, the draft cache is
+    /// consistent with it, and `rows` yields `accepted + 1` emissions.
+    ///
+    /// On `Err` the pair may hold partially-advanced caches — callers
+    /// terminate the session, exactly like a failed plain step.
+    pub fn round(&mut self, draft_model: &FactorizedModel, target_model: &FactorizedModel,
+                 target: &mut DecodeSession, last: i32) -> Result<SpecRound> {
+        // The verify step appends 1 + k rows; clip k to what the target
+        // cache can still hold (k_round == 0 degenerates to a plain
+        // single-row step — the session is about to hit Length anyway).
+        let k_round = self.k.min(target.remaining().saturating_sub(1));
+
+        // Draft phase: catch up on pending committed tokens + `last` in
+        // one multi-token step, then draft autoregressively.  The final
+        // candidate is never fed (its logits are never needed).
+        let t_draft = std::time::Instant::now();
+        let mut cands: Vec<i32> = Vec::with_capacity(k_round);
+        if k_round == 0 {
+            self.pending.push(last);
+        } else {
+            let mut feed = std::mem::take(&mut self.pending);
+            feed.push(last);
+            let dv = draft_model.vocab;
+            let rows = self.draft.verify_rows(draft_model, &feed)?;
+            let mut logits = rows[(feed.len() - 1) * dv..].to_vec();
+            for _ in 0..k_round {
+                let c = argmax(&logits) as i32;
+                cands.push(c);
+                if cands.len() < k_round {
+                    logits = self.draft.step(draft_model, c)?;
+                }
+            }
+        }
+
+        let draft_s = t_draft.elapsed().as_secs_f64();
+
+        // Verify phase: ONE batched multi-row target walk over `last`
+        // plus every candidate.  Row i is bit-identical to the serial
+        // target step after `last, cands[..i]`.
+        let t_verify = std::time::Instant::now();
+        let base = target.positions();
+        let mut vtoks = Vec::with_capacity(1 + cands.len());
+        vtoks.push(last);
+        vtoks.extend_from_slice(&cands);
+        let flat = target.verify_rows(target_model, &vtoks)?;
+        let tv = target_model.vocab;
+
+        // Accept the longest prefix the target would have emitted itself.
+        let mut a = 0usize;
+        while a < cands.len() && argmax(&flat[a * tv..(a + 1) * tv]) as i32 == cands[a] {
+            a += 1;
+        }
+
+        // Rollback: the target keeps `last` + the accepted prefix; the
+        // draft keeps the same context minus any candidate it never fed.
+        target.rollback_to(base + 1 + a);
+        if k_round > 0 {
+            if a < k_round {
+                self.draft.rollback_to(base + 1 + a);
+            } else {
+                // fully accepted: the draft never attended the final
+                // candidate — it becomes next round's catch-up token
+                self.pending.push(cands[k_round - 1]);
+            }
+        }
+
+        let rows = flat[..(a + 1) * tv].chunks_exact(tv).map(<[f32]>::to_vec).collect();
+        Ok(SpecRound {
+            rows,
+            proposed: k_round,
+            accepted: a,
+            draft_s,
+            verify_s: t_verify.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::synth::{tiny_model, TinyDims};
+
+    fn dims() -> TinyDims {
+        TinyDims { vocab: 61, d: 16, heads: 2, layers: 2, ff: 24 }
+    }
+
+    /// Pure greedy target decode — the byte-parity reference.
+    fn pure_decode(m: &FactorizedModel, prompt: &[i32], n: usize, cap: usize) -> Vec<i32> {
+        let mut s = DecodeSession::new(1, "ref", m, cap);
+        let mut logits = s.prefill(m, prompt, None).unwrap();
+        let mut out = Vec::new();
+        while out.len() < n {
+            let t = argmax(&logits) as i32;
+            out.push(t);
+            if out.len() < n {
+                logits = s.step(m, t).unwrap();
+            }
+        }
+        out
+    }
+
+    /// Greedy speculative decode with `draft_m` drafting for `target_m`.
+    fn spec_decode(target_m: &FactorizedModel, draft_m: &FactorizedModel, prompt: &[i32],
+                   n: usize, k: usize, cap: usize) -> (Vec<i32>, usize, usize) {
+        let mut target = DecodeSession::new(1, "tgt", target_m, cap);
+        let logits = target.prefill(target_m, prompt, None).unwrap();
+        let mut draft = DecodeSession::new(2, "dft", draft_m, cap);
+        draft.prefill(draft_m, prompt, None).unwrap();
+        let mut spec = SpecDecoder::new(draft, k);
+        let mut out = vec![argmax(&logits) as i32];
+        let (mut proposed, mut accepted) = (0usize, 0usize);
+        'outer: while out.len() < n {
+            let last = *out.last().unwrap();
+            let r = spec.round(draft_m, target_m, &mut target, last).unwrap();
+            proposed += r.proposed;
+            accepted += r.accepted;
+            for row in &r.rows {
+                out.push(argmax(row) as i32);
+                if out.len() >= n {
+                    break 'outer;
+                }
+            }
+        }
+        (out, proposed, accepted)
+    }
+
+    #[test]
+    fn greedy_spec_decode_bit_identical_to_pure_target_decode() {
+        let target = tiny_model(dims(), 0, false);
+        // full-rank factorized weights: close to the dense target but not
+        // identical logits — candidates genuinely get rejected sometimes
+        let draft = tiny_model(dims(), 0, true);
+        for (pi, prompt) in [vec![1i32, 2, 3], (0..9).map(|i| (i * 11) % 61).collect(),
+                             vec![42]].into_iter().enumerate() {
+            let want = pure_decode(&target, &prompt, 24, 64);
+            for k in [1usize, 2, 4, 8] {
+                let (got, proposed, accepted) =
+                    spec_decode(&target, &draft, &prompt, 24, k, 64);
+                assert_eq!(got, want,
+                           "spec decode diverged (prompt {pi}, k {k}, \
+                            accepted {accepted}/{proposed})");
+                assert!(accepted <= proposed);
+            }
+        }
+    }
+
+    #[test]
+    fn self_drafting_accepts_everything() {
+        // The target drafting for itself proposes its own argmax chain:
+        // every candidate must be accepted (the degenerate upper bound).
+        let m = tiny_model(dims(), 0, false);
+        let prompt = vec![5i32, 6, 7];
+        let want = pure_decode(&m, &prompt, 20, 64);
+        let (got, proposed, accepted) = spec_decode(&m, &m, &prompt, 20, 4, 64);
+        assert_eq!(got, want);
+        assert!(proposed > 0);
+        assert_eq!(accepted, proposed, "self-drafting must accept every candidate");
+    }
+
+    #[test]
+    fn capacity_clips_the_draft_window() {
+        // cap 12, prompt 8: rounds near the cache edge must clip k and
+        // still match pure decode token-for-token until capacity.
+        let target = tiny_model(dims(), 0, false);
+        let draft = tiny_model(dims(), 0, true);
+        let prompt: Vec<i32> = (0..8).map(|i| (i * 7 + 1) % 61).collect();
+        let cap = 12;
+        // pure decode can emit cap - prompt + 1 = 5 tokens before the
+        // final step would overflow
+        let want = pure_decode(&target, &prompt, 5, cap);
+        let (got, _, _) = spec_decode(&target, &draft, &prompt, 5, 8, cap);
+        assert_eq!(got, want, "capacity-clipped spec decode diverged");
+    }
+
+    #[test]
+    fn round_reports_rows_matching_acceptance() {
+        let target = tiny_model(dims(), 0, false);
+        let draft_m = tiny_model(dims(), 0, true);
+        let prompt = vec![9i32, 8, 7];
+        let mut tgt = DecodeSession::new(1, "tgt", &target, 64);
+        let logits = tgt.prefill(&target, &prompt, None).unwrap();
+        let mut dft = DecodeSession::new(2, "dft", &draft_m, 64);
+        dft.prefill(&draft_m, &prompt, None).unwrap();
+        let mut spec = SpecDecoder::new(dft, 4);
+        let base = tgt.positions();
+        let r = spec.round(&draft_m, &target, &mut tgt, argmax(&logits) as i32).unwrap();
+        assert_eq!(r.rows.len(), r.accepted + 1);
+        assert_eq!(r.proposed, 4);
+        // the target cache holds the input token + the accepted prefix
+        assert_eq!(tgt.positions(), base + 1 + r.accepted);
+        for row in &r.rows {
+            assert_eq!(row.len(), target.vocab);
+        }
+    }
+}

@@ -34,17 +34,25 @@ use crate::json::Json;
 use crate::tokenizer::ByteTokenizer;
 
 use super::scheduler::{FinishReason, GenEvent, ServeRuntime, SessionRequest};
+use super::spec::SpecParams;
 
 /// Generation parameters shared by the streaming and one-shot paths.
 #[derive(Debug, Clone)]
 pub struct GenParams {
     pub variant: String,
     pub prompt: String,
+    /// Raw image features for VLM variants, prepended as the session's
+    /// image prefix at prefill (`"image": [..]` on the wire).
+    pub image: Option<Vec<f32>>,
     pub max_tokens: usize,
     pub temperature: f32,
     pub seed: u64,
     pub stop_token: Option<i32>,
     pub stream: bool,
+    /// Speculative decode: `"spec": {"draft": "<variant>", "k": N}` on the
+    /// wire (the server may also fill this from its `--spec-draft`/
+    /// `--spec-k` defaults).  Greedy-only; output stays bit-identical.
+    pub spec: Option<SpecParams>,
 }
 
 /// One request line, typed.  Every op the wire protocol speaks is parsed
@@ -140,6 +148,81 @@ fn opt_bool(req: &Json, name: &str, default: bool) -> Result<bool, ReqError> {
     }
 }
 
+/// Optional `"image": [f32, ...]` — VLM image features, every element a
+/// number (the first offending index is named in the error).
+fn opt_image(req: &Json) -> Result<Option<Vec<f32>>, ReqError> {
+    match req.get("image") {
+        None | Some(Json::Null) => Ok(None),
+        Some(Json::Arr(xs)) => {
+            let mut out = Vec::with_capacity(xs.len());
+            for (i, x) in xs.iter().enumerate() {
+                match x {
+                    Json::Num(n) => out.push(*n as f32),
+                    v => {
+                        return Err(ReqError::field(
+                            "image",
+                            format!("`image[{i}]` must be a number, got {}", json_type(v)),
+                        ))
+                    }
+                }
+            }
+            Ok(Some(out))
+        }
+        Some(v) => Err(ReqError::field(
+            "image",
+            format!("`image` must be an array of numbers, got {}", json_type(v)),
+        )),
+    }
+}
+
+/// Optional `"spec": {"draft": "<variant>", "k": N}` — `draft` is a
+/// required non-empty string, `k` an optional positive integer
+/// (default 4, matching the serve CLI default).
+fn opt_spec(req: &Json) -> Result<Option<SpecParams>, ReqError> {
+    let o = match req.get("spec") {
+        None | Some(Json::Null) => return Ok(None),
+        Some(o @ Json::Obj(_)) => o,
+        Some(v) => {
+            return Err(ReqError::field(
+                "spec",
+                format!("`spec` must be an object, got {}", json_type(v)),
+            ))
+        }
+    };
+    let draft = match o.get("draft") {
+        Some(Json::Str(s)) if !s.is_empty() => s.clone(),
+        Some(Json::Str(_)) | Some(Json::Null) | None => {
+            return Err(ReqError::field(
+                "spec.draft",
+                "`spec.draft` must name the draft variant".into(),
+            ))
+        }
+        Some(v) => {
+            return Err(ReqError::field(
+                "spec.draft",
+                format!("`spec.draft` must be a string, got {}", json_type(v)),
+            ))
+        }
+    };
+    let k = match o.get("k") {
+        None | Some(Json::Null) => 4,
+        Some(Json::Num(n)) if n.fract() == 0.0 && *n >= 1.0 => *n as usize,
+        Some(Json::Num(n)) => {
+            return Err(ReqError::field(
+                "spec.k",
+                format!("`spec.k` must be a positive integer, got {n}"),
+            ))
+        }
+        Some(v) => {
+            return Err(ReqError::field(
+                "spec.k",
+                format!("`spec.k` must be a positive integer, got {}", json_type(v)),
+            ))
+        }
+    };
+    Ok(Some(SpecParams { draft, k }))
+}
+
 /// Parse one request line into a typed [`Request`].
 ///
 /// Back-compat contract: a line with no `op` is a generate — every field
@@ -152,11 +235,13 @@ pub fn parse_request(req: &Json) -> Result<Request, ReqError> {
         "generate" => Ok(Request::Generate(GenParams {
             variant: opt_str(req, "variant", "")?,
             prompt: opt_str(req, "prompt", "")?,
+            image: opt_image(req)?,
             max_tokens: opt_uint(req, "max_tokens", Some(32))?.unwrap() as usize,
             temperature: opt_num(req, "temperature", 0.0)? as f32,
             seed: opt_uint(req, "seed", Some(0))?.unwrap(),
             stop_token: opt_uint(req, "stop_token", None)?.map(|t| t as i32),
             stream: opt_bool(req, "stream", false)?,
+            spec: opt_spec(req)?,
         })),
         "swap" => match req.get("variant") {
             Some(Json::Str(s)) => Ok(Request::Swap { variant: s.clone() }),
@@ -181,11 +266,12 @@ fn open_session(rt: &ServeRuntime, p: &GenParams) -> Result<mpsc::Receiver<GenEv
     rt.open(SessionRequest {
         variant: p.variant.clone(),
         prompt: ByteTokenizer.encode(&p.prompt),
-        image: None,
+        image: p.image.clone(),
         max_tokens: p.max_tokens,
         temperature: p.temperature,
         seed: p.seed,
         stop_token: p.stop_token,
+        spec: p.spec.clone(),
         events: etx,
     })
     .map_err(|e| anyhow!("{e}"))?;
@@ -334,6 +420,8 @@ mod tests {
         assert!(!p.stream);
         assert_eq!(p.max_tokens, 32);
         assert_eq!(p.stop_token, None);
+        assert_eq!(p.image, None);
+        assert_eq!(p.spec, None);
         // explicit op spells the same thing
         let p = gen(r#"{"op": "generate", "prompt": "x"}"#);
         assert_eq!(p.prompt, "x");
@@ -386,5 +474,49 @@ mod tests {
         // explicit null == absent, not a type error
         let p = gen(r#"{"prompt": "x", "stop_token": null}"#);
         assert_eq!(p.stop_token, None);
+    }
+
+    #[test]
+    fn image_field_parses_and_type_errors_name_the_field() {
+        let p = gen(r#"{"prompt": "x", "image": [0.5, -1.25, 3]}"#);
+        assert_eq!(p.image, Some(vec![0.5f32, -1.25, 3.0]));
+        let p = gen(r#"{"prompt": "x", "image": null}"#);
+        assert_eq!(p.image, None);
+
+        let e = err(r#"{"prompt": "x", "image": "pixels"}"#);
+        assert_eq!(e.field.as_deref(), Some("image"));
+        assert!(e.msg.contains("array"), "{}", e.msg);
+
+        // the offending element is named by index
+        let e = err(r#"{"prompt": "x", "image": [1.0, "two"]}"#);
+        assert_eq!(e.field.as_deref(), Some("image"));
+        assert!(e.msg.contains("image[1]"), "{}", e.msg);
+    }
+
+    #[test]
+    fn spec_field_parses_with_default_k_and_typed_errors() {
+        let p = gen(r#"{"prompt": "x", "spec": {"draft": "tiny/dobi_30", "k": 8}}"#);
+        assert_eq!(p.spec, Some(SpecParams { draft: "tiny/dobi_30".into(), k: 8 }));
+        // k defaults to 4
+        let p = gen(r#"{"prompt": "x", "spec": {"draft": "tiny/dobi_30"}}"#);
+        assert_eq!(p.spec, Some(SpecParams { draft: "tiny/dobi_30".into(), k: 4 }));
+
+        let e = err(r#"{"prompt": "x", "spec": "tiny/dobi_30"}"#);
+        assert_eq!(e.field.as_deref(), Some("spec"));
+        assert!(e.msg.contains("object"), "{}", e.msg);
+
+        let e = err(r#"{"prompt": "x", "spec": {}}"#);
+        assert_eq!(e.field.as_deref(), Some("spec.draft"));
+        let e = err(r#"{"prompt": "x", "spec": {"draft": ""}}"#);
+        assert_eq!(e.field.as_deref(), Some("spec.draft"));
+        let e = err(r#"{"prompt": "x", "spec": {"draft": 7}}"#);
+        assert_eq!(e.field.as_deref(), Some("spec.draft"));
+
+        let e = err(r#"{"prompt": "x", "spec": {"draft": "d", "k": 0}}"#);
+        assert_eq!(e.field.as_deref(), Some("spec.k"));
+        let e = err(r#"{"prompt": "x", "spec": {"draft": "d", "k": 2.5}}"#);
+        assert_eq!(e.field.as_deref(), Some("spec.k"));
+        let e = err(r#"{"prompt": "x", "spec": {"draft": "d", "k": "four"}}"#);
+        assert_eq!(e.field.as_deref(), Some("spec.k"));
     }
 }

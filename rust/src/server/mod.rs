@@ -36,7 +36,7 @@ use anyhow::Result;
 use crate::coordinator::Engine;
 use crate::json::Json;
 use crate::mathx::{sample_logits, XorShift};
-use crate::serve::{stream as sstream, FinishReason, ServeRuntime};
+use crate::serve::{stream as sstream, FinishReason, ServeRuntime, SpecParams};
 use crate::tokenizer::ByteTokenizer;
 
 pub struct Server {
@@ -57,6 +57,7 @@ pub struct ServerBuilder {
     runtime: Option<Arc<ServeRuntime>>,
     port: u16,
     control: Option<bool>,
+    spec_defaults: Option<SpecParams>,
 }
 
 impl ServerBuilder {
@@ -88,9 +89,20 @@ impl ServerBuilder {
         self
     }
 
+    /// Serve-level speculative defaults (`dobi serve --spec-draft` /
+    /// `--spec-k`): greedy generate requests without their own `"spec"`
+    /// field decode speculatively against this draft when the decode
+    /// runtime serves their variant.  An explicit client `"spec"` always
+    /// wins; non-greedy requests are never defaulted (spec is
+    /// greedy-only).
+    pub fn spec_defaults(mut self, spec: Option<SpecParams>) -> Self {
+        self.spec_defaults = spec;
+        self
+    }
+
     /// Bind and serve on a background thread.
     pub fn start(self) -> Result<Server> {
-        let ServerBuilder { engine, runtime, port, control } = self;
+        let ServerBuilder { engine, runtime, port, control, spec_defaults } = self;
         let control = control.unwrap_or(true);
         anyhow::ensure!(engine.is_some() || runtime.is_some(),
                         "server needs an engine or a decode runtime");
@@ -118,12 +130,13 @@ impl ServerBuilder {
                         let eng = engine.clone();
                         let rt = runtime.clone();
                         let stop3 = stop2.clone();
+                        let spec = spec_defaults.clone();
                         // Read timeout so handlers can observe shutdown even
                         // when a client keeps an idle connection open.
                         let _ = stream.set_read_timeout(
                             Some(std::time::Duration::from_millis(200)));
                         clients.push(std::thread::spawn(move || {
-                            let _ = handle_client(stream, eng, rt, control, stop3);
+                            let _ = handle_client(stream, eng, rt, control, spec, stop3);
                         }));
                     }
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -161,6 +174,7 @@ impl Drop for Server {
 
 fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
                  runtime: Option<Arc<ServeRuntime>>, control: bool,
+                 spec_defaults: Option<SpecParams>,
                  stop: Arc<AtomicBool>) -> Result<()> {
     let peer = stream.peer_addr()?;
     let mut writer = stream.try_clone()?;
@@ -202,7 +216,21 @@ fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
             }
         };
         let reply = match request {
-            sstream::Request::Generate(params) => {
+            sstream::Request::Generate(mut params) => {
+                // Serve-level speculative default: greedy requests with no
+                // `"spec"` of their own pick up `--spec-draft`/`--spec-k`
+                // when the decode runtime serves their variant (explicit
+                // client spec wins; non-greedy requests stay plain).
+                if params.spec.is_none() && params.temperature <= 0.0 {
+                    if let Some(d) = &spec_defaults {
+                        if runtime
+                            .as_ref()
+                            .is_some_and(|rt| rt.variants().iter().any(|v| v == &params.variant))
+                        {
+                            params.spec = Some(d.clone());
+                        }
+                    }
+                }
                 // Streaming requests (for variants the decode runtime
                 // carries) write their own line-per-token reply; IO
                 // failures mid-stream mean the client hung up — drop

@@ -5,12 +5,13 @@
 
 use std::sync::Arc;
 
-use dobi::compress::{calib, compress_model, write_artifacts};
+use dobi::compress::{append_artifacts, calib, compress_model, write_artifacts};
 use dobi::config::{CompressConfig, Manifest, Precision, ServeConfig};
 use dobi::lowrank::synth::{tiny_manifest_json, tiny_store_tensors, SynthStyle, TinyDims};
 use dobi::lowrank::FactorizedModel;
 use dobi::mathx::argmax;
-use dobi::serve::{DecodeSession, FinishReason, GenEvent, ServeRuntime, SessionRequest};
+use dobi::serve::{DecodeSession, FinishReason, GenEvent, ServeRuntime, SessionRequest,
+                  SpecParams};
 use dobi::storage::{write_store, Store};
 use dobi::tokenizer::ByteTokenizer;
 
@@ -197,9 +198,11 @@ fn serial_reference(m: &Manifest, variant: &str, prompt: &[i32], max_tokens: usi
     (toks, reason)
 }
 
-/// Open one scheduler session and collect its full stream.
+/// Open one scheduler session (plain or speculative) and collect its full
+/// stream.
 fn run_to_completion(rt: &ServeRuntime, variant: &str, prompt: Vec<i32>,
-                     max_tokens: usize) -> (Vec<i32>, FinishReason) {
+                     max_tokens: usize, spec: Option<SpecParams>)
+                     -> (Vec<i32>, FinishReason) {
     let (etx, erx) = std::sync::mpsc::channel();
     rt.open(SessionRequest {
         variant: variant.to_string(),
@@ -209,6 +212,7 @@ fn run_to_completion(rt: &ServeRuntime, variant: &str, prompt: Vec<i32>,
         temperature: 0.0,
         seed: 7,
         stop_token: None,
+        spec,
         events: etx,
     })
     .unwrap();
@@ -268,7 +272,7 @@ fn fused_concurrent_sessions_match_serial_incl_midflight_join_and_kv_eviction() 
         let rt = rt.clone();
         let prompt = ByteTokenizer.encode(prompt);
         handles.push(std::thread::spawn(move || {
-            run_to_completion(&rt, variant, prompt, max_tokens)
+            run_to_completion(&rt, variant, prompt, max_tokens, None)
         }));
     }
     let concurrent: Vec<(Vec<i32>, FinishReason)> =
@@ -596,4 +600,264 @@ fn runtime_refuses_unservable_variants() {
     .unwrap();
     assert!(ServeRuntime::start(dir, &["tiny/ghost".to_string()], ServeConfig::default())
         .is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Speculative decoding: the compressed variant drafts for the dense one
+// ---------------------------------------------------------------------------
+
+/// Dense synth target plus a REAL compress-built ratio-0.3 q8 draft merged
+/// into one manifest via `append_artifacts` — the self-speculation pair
+/// the acceptance criterion serves (a lossy draft, not a full-rank twin,
+/// so rejection + correction paths actually fire).
+fn spec_artifacts(tag: &str) -> (std::path::PathBuf, String) {
+    let dir = std::env::temp_dir().join(format!("dobi_serve_it_{tag}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    write_store(&dir.join("dense.dobiw"),
+                &tiny_store_tensors(TinyDims::nano(), 0, SynthStyle::DenseF32)).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        tiny_manifest_json(TinyDims::nano(), 0,
+                           &[("tiny/dense", "dense", 1.0, "dense.dobiw")]),
+    )
+    .unwrap();
+    let dense = tiny_model_dense();
+    let corpus = calib::synth_calib_tokens(dense.vocab, 4096, 11);
+    let cfg = CompressConfig { ratio: 0.3, precision: Precision::Q8, ..Default::default() };
+    let art = compress_model(&dense, "tiny", &cfg, &corpus).unwrap();
+    append_artifacts(&dir, &art).unwrap();
+    (dir, art.variant_id.clone())
+}
+
+/// Pull one counter out of the runtime's rendered metrics text.
+fn metric_u64(text: &str, name: &str) -> u64 {
+    text.lines()
+        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse().ok()))
+        .unwrap_or_else(|| panic!("metric `{name}` missing from:\n{text}"))
+}
+
+/// The acceptance criterion: a ratio-0.3 draft speculating k=4 for the
+/// dense target streams byte-identical greedy tokens across mixed prompt
+/// lengths — through a mid-stream hot swap of BOTH halves of the pair and
+/// the KV-capacity eviction of a speculative session.
+#[test]
+fn speculative_pairs_match_pure_target_incl_hot_swap_and_eviction() {
+    let (dir, draft) = spec_artifacts("spec_e2e");
+    let m = Manifest::load(&dir).unwrap();
+    let cap = 48usize;
+    // mixed prompt lengths; the last session's budget outruns the KV
+    // capacity, so it is evicted mid-speculation and finishes `length`
+    let specs: [(&str, usize); 4] =
+        [("a", 12), ("some longer prompt here", 12), ("mid-size words", 12), ("short", 400)];
+    // pure target decode: the serial single-session reference on the
+    // dense variant, no draft anywhere near it
+    let serial: Vec<(Vec<i32>, FinishReason)> = specs
+        .iter()
+        .map(|(p, n)| serial_reference(&m, "tiny/dense", &ByteTokenizer.encode(p), *n, cap))
+        .collect();
+    assert_eq!(serial[3].1, FinishReason::Length, "fixture must exercise eviction");
+    let ids = vec!["tiny/dense".to_string(), draft.clone()];
+    let rt = Arc::new(
+        ServeRuntime::start(
+            dir,
+            &ids,
+            ServeConfig { max_sessions: 3, kv_capacity: cap, ..Default::default() },
+        )
+        .unwrap(),
+    );
+    let mut handles = Vec::new();
+    for (p, n) in specs {
+        let rt = rt.clone();
+        let prompt = ByteTokenizer.encode(p);
+        let spec = SpecParams { draft: draft.clone(), k: 4 };
+        handles.push(std::thread::spawn(move || {
+            run_to_completion(&rt, "tiny/dense", prompt, n, Some(spec))
+        }));
+    }
+    // hot swap BOTH halves of the pair while the streams decode: a spec
+    // session pins its draft release exactly like its target release, so
+    // both superseded generations must drain and sweep once the pairs end
+    let t0 = std::time::Instant::now();
+    while rt.stats().sessions_opened == 0 {
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5), "nothing admitted");
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert_eq!(rt.swap("tiny/dense").unwrap().generation, 2);
+    assert_eq!(rt.swap(&draft).unwrap().generation, 2);
+    let concurrent: Vec<(Vec<i32>, FinishReason)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    for (i, (got, want)) in concurrent.iter().zip(&serial).enumerate() {
+        assert_eq!(got, want,
+                   "spec session {i}: speculative decode diverged from pure target decode");
+    }
+    // every pair released its pins: generation 2 of both variants serves,
+    // nothing stays pinned to a drained release (brief poll — the
+    // scheduler drops the Arcs moments after the terminal events)
+    let t0 = std::time::Instant::now();
+    loop {
+        let snap = rt.registry_snapshot();
+        assert_eq!(snap.len(), 2);
+        let pinned: usize =
+            snap.iter().flat_map(|v| v.draining.iter().map(|(_, n)| n)).sum();
+        if pinned == 0 && snap.iter().all(|v| v.generation == 2) {
+            break;
+        }
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5),
+                "a speculative pair kept a drained release pinned");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    rt.shutdown();
+    let st = rt.stats();
+    assert_eq!(st.sessions_finished, specs.len() as u64);
+    assert_eq!(st.active_sessions, 0);
+    let text = rt.metrics_text();
+    let proposed = metric_u64(&text, "serve_spec_proposed");
+    let accepted = metric_u64(&text, "serve_spec_accepted");
+    assert!(proposed > 0, "the speculative path never ran");
+    assert!(accepted <= proposed);
+}
+
+/// Registry × eviction interaction: a draining old-generation release
+/// whose ONLY pinned session finishes by KV-capacity eviction (not by
+/// max_tokens) must still be GCed by `sweep()` — the Arc strong-count
+/// guard does not care HOW the session ended.
+#[test]
+fn kv_evicted_session_still_unpins_draining_release_for_sweep() {
+    let dir = build_artifacts("sweep_evict");
+    let ids = vec!["tiny/dense".to_string()];
+    let rt = Arc::new(
+        ServeRuntime::start(dir, &ids,
+                            ServeConfig { kv_capacity: 32, ..Default::default() })
+            .unwrap(),
+    );
+    let (etx, erx) = std::sync::mpsc::channel();
+    rt.open(SessionRequest {
+        variant: "tiny/dense".to_string(),
+        prompt: ByteTokenizer.encode("The "),
+        image: None,
+        max_tokens: 400, // way past what a 32-slot cache can hold
+        temperature: 0.0,
+        seed: 1,
+        stop_token: None,
+        spec: None,
+        events: etx,
+    })
+    .unwrap();
+    // first token: the session is live and pins generation 1
+    match erx.recv().unwrap() {
+        GenEvent::Token { .. } => {}
+        _ => panic!("expected the first event to be a token"),
+    }
+    assert_eq!(rt.swap("tiny/dense").unwrap().generation, 2);
+    // drain the stream: the session must die by eviction, not max_tokens
+    let reason = loop {
+        match erx.recv().unwrap() {
+            GenEvent::Token { .. } => {}
+            GenEvent::Done { reason, .. } => break reason,
+            GenEvent::Error(e) => panic!("session failed: {e}"),
+        }
+    };
+    assert_eq!(reason, FinishReason::Length, "fixture must finish by KV eviction");
+    // the evicted session dropped its Arc: sweep() (run after each tick's
+    // evictions) must GC the drained generation-1 release
+    let t0 = std::time::Instant::now();
+    while !rt.registry_snapshot()[0].draining.is_empty() {
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5),
+                "evicted session left the draining release unswept");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    rt.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// VLM image prefixes over the wire
+// ---------------------------------------------------------------------------
+
+#[test]
+fn image_prefix_streams_over_tcp_and_type_errors_name_the_field() {
+    use std::io::{BufRead, BufReader, Write};
+    let img_dim = 6usize;
+    let dir = std::env::temp_dir().join("dobi_serve_it_vlm_tcp");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    write_store(&dir.join("vlm.dobiw"),
+                &tiny_store_tensors(dims(), img_dim, SynthStyle::DenseF32)).unwrap();
+    std::fs::write(
+        dir.join("manifest.json"),
+        tiny_manifest_json(dims(), img_dim, &[("tiny/vlm", "dense", 1.0, "vlm.dobiw")]),
+    )
+    .unwrap();
+    let ids = vec!["tiny/vlm".to_string()];
+    let rt = Arc::new(ServeRuntime::start(dir, &ids, ServeConfig::default()).unwrap());
+    // exactly-representable floats so the JSON round trip is lossless and
+    // the greedy parity assertion below is exact
+    let image: Vec<f32> = (0..img_dim).map(|i| i as f32 * 0.25).collect();
+    // in-process reference with the image attached — prefill REQUIRES the
+    // features for a VLM variant, so matching text below proves the wire
+    // actually carried them
+    let (etx, erx) = std::sync::mpsc::channel();
+    rt.open(SessionRequest {
+        variant: "tiny/vlm".to_string(),
+        prompt: ByteTokenizer.encode("The "),
+        image: Some(image.clone()),
+        max_tokens: 8,
+        temperature: 0.0,
+        seed: 1,
+        stop_token: None,
+        spec: None,
+        events: etx,
+    })
+    .unwrap();
+    let mut want = Vec::new();
+    for ev in erx {
+        match ev {
+            GenEvent::Token { token, .. } => want.push(token),
+            GenEvent::Done { .. } => break,
+            GenEvent::Error(e) => panic!("reference session failed: {e}"),
+        }
+    }
+    let want_text = ByteTokenizer.decode(&want);
+
+    let mut server = dobi::server::Server::builder().runtime(rt.clone()).start().unwrap();
+    let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    // the streaming roundtrip: the image array rides the generate request
+    let img_json =
+        image.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(",");
+    let req = format!(
+        "{{\"variant\":\"tiny/vlm\",\"prompt\":\"The \",\"max_tokens\":8,\
+         \"temperature\":0,\"stream\":true,\"image\":[{img_json}]}}\n");
+    conn.write_all(req.as_bytes()).unwrap();
+    let mut tokens = Vec::new();
+    let text = loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = dobi::json::Json::parse(&line).unwrap();
+        assert!(j.get("error").is_none(), "stream errored: {line}");
+        if j.get("done").and_then(|x| x.as_bool()).unwrap_or(false) {
+            break j.str_of("text").to_string();
+        }
+        tokens.push(j.get("token").and_then(|x| x.as_f64()).unwrap() as i32);
+    };
+    assert_eq!(tokens, want, "wire image prefix changed the greedy decode");
+    assert_eq!(text, want_text);
+
+    // a VLM variant refuses a generate with NO image: the parity above
+    // could only have come from the carried features
+    let e = send_recv(&mut conn, &mut reader,
+                      r#"{"variant":"tiny/vlm","prompt":"The ","max_tokens":4}"#);
+    assert!(e.get("error").is_some(), "imageless VLM generate must fail: {e}");
+
+    // typed field errors per protocol v1: bad shapes name the field (and
+    // the offending element), and the connection stays usable
+    let e = send_recv(&mut conn, &mut reader,
+                      r#"{"variant":"tiny/vlm","prompt":"x","max_tokens":2,"image":"nope"}"#);
+    assert_eq!(e.str_of("field"), "image");
+    let e = send_recv(&mut conn, &mut reader,
+                      r#"{"variant":"tiny/vlm","prompt":"x","max_tokens":2,"image":[0.5,true]}"#);
+    assert_eq!(e.str_of("field"), "image[1]");
+    drop(conn);
+    server.shutdown();
+    rt.shutdown();
 }

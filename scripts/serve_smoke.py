@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Smoke-drive a running `dobi serve` over the TCP line protocol.
 
-Usage: serve_smoke.py PORT VARIANT [ARTIFACTS_DIR]
+Usage: serve_smoke.py PORT VARIANT [ARTIFACTS_DIR] [SPEC_DRAFT]
 
 Sends one non-streaming and one streaming request (both greedy, so the
 outputs must agree), asserts token deltas arrive one line each, and that
@@ -17,8 +17,12 @@ drives the variant registry end to end: a mid-stream `{"op":"swap"}`
 while two streaming clients decode (both must complete every token —
 zero dropped sessions), and a swap against a corrupted store (one byte
 flipped mid-file) that must be REFUSED while the old variant keeps
-serving.  Exits non-zero on any protocol violation — the CI
-`serve-smoke` job's pass/fail signal.
+serving.  With SPEC_DRAFT (a compressed variant id the server also
+serves), drives a speculative streaming session — the draft proposes,
+VARIANT verifies — and asserts the output is byte-identical to the pure
+VARIANT reference, plus the greedy-only and draft-resolution refusals.
+Exits non-zero on any protocol violation — the CI `serve-smoke` job's
+pass/fail signal.
 """
 import json
 import os
@@ -154,12 +158,56 @@ def main():
         print("[smoke] warning: both prompts produced identical text")
     print("[smoke] two concurrent streaming clients ok: fused decode matches serial")
 
+    # --- speculative decoding (opt-in via the SPEC_DRAFT argv) ---
+    spec_draft = sys.argv[4] if len(sys.argv) > 4 else None
+    if spec_draft is not None:
+        # the parity guarantee: the draft proposes, the target verifies,
+        # greedy output must equal the pure-target reference byte for byte
+        spec_req = {"variant": variant, "prompt": prompts[0], "max_tokens": 48,
+                    "temperature": 0, "stream": True,
+                    "spec": {"draft": spec_draft, "k": 4}}
+        request(spec_req)
+        n = 0
+        while True:
+            msg = json.loads(rfile.readline())
+            assert "error" not in msg, f"spec stream errored: {msg}"
+            if msg.get("done"):
+                assert msg["text"] == references[0], (
+                    "speculative stream diverged from the pure-target "
+                    f"reference: {msg['text']!r} != {references[0]!r}")
+                break
+            assert msg["index"] == n, f"spec stream out-of-order delta: {msg}"
+            n += 1
+        assert n == 48, f"spec stream: expected 48 deltas, got {n}"
+        # spec is greedy-only and the draft must resolve: loud refusals,
+        # never a silent fallback to plain decode
+        request({**spec_req, "stream": False, "temperature": 0.7})
+        err = json.loads(rfile.readline())
+        assert "error" in err and "greedy" in err["error"], (
+            f"non-greedy spec must be refused: {err}")
+        request({**spec_req, "stream": False,
+                 "spec": {"draft": "tiny/ghost", "k": 4}})
+        err = json.loads(rfile.readline())
+        assert "error" in err and "draft" in err["error"], (
+            f"unknown draft must be refused: {err}")
+        # typed parse errors name the spec sub-field
+        request({**base, "spec": {"k": 2}})
+        err = json.loads(rfile.readline())
+        assert err.get("field") == "spec.draft", err
+        request({**base, "spec": 5})
+        err = json.loads(rfile.readline())
+        assert err.get("field") == "spec", err
+        print("[smoke] speculative decode ok: byte-identical to the pure "
+              "target, greedy-only + draft resolution enforced")
+
     # typed protocol: malformed lines answer structured errors naming the
     # offending field, and the connection stays usable afterwards
     for bad, field in [({"op": "teleport"}, "op"),
                        ({"op": "swap"}, "variant"),
                        ({"variant": variant, "prompt": "x",
                          "max_tokens": "32"}, "max_tokens"),
+                       ({"variant": variant, "prompt": "x",
+                         "max_tokens": 2, "image": "nope"}, "image"),
                        ({"variant": variant, "prompt": "x",
                          "stream": "yes"}, "stream")]:
         request(bad)
