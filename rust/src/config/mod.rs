@@ -256,6 +256,10 @@ pub struct ServeConfig {
     /// Tokens drafted per speculative round when `spec_draft` applies or
     /// the client's `"spec"` object omits `k` (`--spec-k`).
     pub spec_k: usize,
+    /// Request-lifecycle trace ring capacity in events
+    /// (`dobi serve --trace-buffer N`); 0 disables tracing entirely —
+    /// the ring allocates nothing and record calls are inert.
+    pub trace_buffer: usize,
 }
 
 impl Default for ServeConfig {
@@ -267,6 +271,7 @@ impl Default for ServeConfig {
             decode_threads: 1,
             spec_draft: None,
             spec_k: 4,
+            trace_buffer: 4096,
         }
     }
 }
@@ -619,6 +624,7 @@ mod tests {
         assert!(c.decode_threads >= 1);
         assert!(c.spec_draft.is_none(), "speculation stays opt-in by default");
         assert!(c.spec_k >= 1);
+        assert!(c.trace_buffer > 0, "tracing is on by default (0 disables)");
     }
 
     #[test]

@@ -7,7 +7,8 @@
 //!
 //! Module map (see DESIGN.md §2):
 //! * substrates: [`json`], [`cli`], [`mathx`], [`tokenizer`], [`corpusio`],
-//!   [`quant`], [`storage`], [`config`], [`metrics`], [`bench`], [`proptest`]
+//!   [`quant`], [`storage`], [`config`], [`metrics`], [`trace`], [`bench`],
+//!   [`proptest`]
 //! * runtime:    [`runtime`] (the `Backend` trait, PJRT wrapper, model
 //!   registry) and [`lowrank`] (native rank-truncated factorized backend)
 //! * compression:[`compress`] (native Dobi pipeline: Jacobi SVD, whitened
@@ -41,6 +42,7 @@ pub mod serve;
 pub mod server;
 pub mod storage;
 pub mod tokenizer;
+pub mod trace;
 
 /// Canonical artifacts directory (overridable everywhere via `--artifacts`).
 pub const DEFAULT_ARTIFACTS: &str = "artifacts";

@@ -87,11 +87,15 @@ fn run(args: &Args) -> Result<()> {
                  serve --variants A,B --port P [--max-sessions N]\n\
                  \x20     [--decode-threads T] [--stream | --no-stream]\n\
                  \x20     [--no-control] [--spec-draft ID] [--spec-k N]\n\
+                 \x20     [--trace-buffer N]\n\
                  \x20     incremental decode runtime (KV cache + continuous\n\
                  \x20     batching + fused multi-session steps + streaming;\n\
                  \x20     T > 1 threads the blocked GEMM column-wise);\n\
-                 \x20     control ops {\"op\":\"swap\"|\"list\"|\"health\"} manage\n\
-                 \x20     zero-downtime hot swaps unless --no-control;\n\
+                 \x20     control ops {\"op\":\"swap\"|\"list\"|\"health\"|\n\
+                 \x20     \"metrics\"|\"trace\"} manage zero-downtime hot swaps\n\
+                 \x20     and expose labeled metrics + request-lifecycle\n\
+                 \x20     traces unless --no-control (--trace-buffer sizes\n\
+                 \x20     the span ring, default 4096, 0 disables tracing);\n\
                  \x20     --spec-draft makes greedy requests decode\n\
                  \x20     speculatively (draft variant proposes N tokens per\n\
                  \x20     round, the target verifies in one batched step —\n\
@@ -385,6 +389,7 @@ fn serve(args: &Args) -> Result<()> {
         decode_threads: args.usize_or("decode-threads", 1),
         spec_draft: args.get("spec-draft").map(String::from),
         spec_k: args.usize_or("spec-k", 4).max(1),
+        trace_buffer: args.usize_or("trace-buffer", 4096),
         ..Default::default()
     };
     let spec_defaults = serve_cfg

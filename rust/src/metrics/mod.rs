@@ -1,5 +1,13 @@
 //! Serving metrics substrate: counters, gauges, latency histograms with
-//! streaming percentiles — shared by the coordinator and the bench harness.
+//! streaming percentiles — shared by the coordinator, the decode
+//! scheduler, and the bench harness.
+//!
+//! Metrics are **labeled families**: `registry.counter_with("serve_tokens_emitted",
+//! &[("variant", "tiny/dobi_40")])` keys one child per label set, and the
+//! same family sums across children for aggregate views
+//! ([`Registry::family_total`]).  Two text renderings exist — the
+//! historical plain dump ([`Registry::render`]) and a Prometheus-style
+//! exposition ([`Registry::render_prom`]) for scrapers.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
@@ -48,12 +56,29 @@ impl Gauge {
     }
 }
 
+/// Sample reservoir + running sum, guarded by one mutex (both are
+/// touched together on every observation anyway).
+struct Reservoir {
+    vals: Vec<f64>,
+    /// xorshift64 state for the overwrite index — NOT derived from the
+    /// observed value: value-deterministic indices made identical
+    /// latencies collide into one slot, skewing long-run percentiles.
+    rng: u64,
+    sum: f64,
+}
+
 /// Latency histogram: fixed log-spaced buckets (1us .. ~100s) plus a
-/// bounded reservoir of raw samples for exact percentiles in reports.
+/// bounded uniform reservoir of raw samples for exact percentiles in
+/// reports.  The reservoir is Algorithm R: sample `n` survives with
+/// probability `cap/n`, driven by an atomic observation counter and a
+/// xorshift index (never by the sample's value).
 pub struct Histogram {
     buckets: Vec<AtomicU64>,
     bounds_us: Vec<u64>,
-    samples: Mutex<Vec<f64>>, // seconds; capped reservoir
+    /// Total observations of either kind (the atomic sample counter the
+    /// reservoir's survival probability derives from).
+    total: AtomicU64,
+    res: Mutex<Reservoir>,
     cap: usize,
 }
 
@@ -72,46 +97,109 @@ impl Histogram {
             b = (b as f64 * 1.6).ceil() as u64;
         }
         let buckets = (0..=bounds_us.len()).map(|_| AtomicU64::new(0)).collect();
-        Histogram { buckets, bounds_us, samples: Mutex::new(Vec::new()), cap }
-    }
-
-    pub fn observe(&self, d: Duration) {
-        self.observe_raw(d.as_micros() as u64, d.as_secs_f64());
-    }
-
-    /// Record a dimensionless value (e.g. a fused batch size or an
-    /// acceptance rate) — same reservoir/percentile machinery; the
-    /// log-bucket counters are latency-shaped and not meaningful for
-    /// these, stats come from the reservoir.  Name such histograms
-    /// `*_size` or `*_rate` so [`Registry::render`] omits the seconds
-    /// label.
-    pub fn observe_value(&self, v: f64) {
-        self.observe_raw((v * 1e6) as u64, v);
-    }
-
-    fn observe_raw(&self, us: u64, v: f64) {
-        let idx = self.bounds_us.partition_point(|&b| b < us);
-        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
-        let mut s = self.samples.lock().unwrap();
-        if s.len() < self.cap {
-            s.push(v);
-        } else {
-            // reservoir: overwrite pseudo-randomly for long runs
-            let i = (us as usize * 2654435761) % self.cap;
-            s[i] = v;
+        Histogram {
+            buckets,
+            bounds_us,
+            total: AtomicU64::new(0),
+            res: Mutex::new(Reservoir { vals: Vec::new(), rng: 0x9E37_79B9_7F4A_7C15, sum: 0.0 }),
+            cap,
         }
     }
 
+    /// Record a duration: log-bucket counter + reservoir sample.
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros() as u64;
+        let idx = self.bounds_us.partition_point(|&b| b < us);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.reservoir_put(d.as_secs_f64());
+    }
+
+    /// Record a dimensionless value (a fused batch size, an acceptance
+    /// rate) — reservoir/percentile machinery only.  These do NOT
+    /// round-trip through the latency buckets: the buckets are
+    /// microsecond-shaped, and the old conversion silently saturated
+    /// negative values to bucket 0.  Name such histograms `*_size` or
+    /// `*_rate` so the renderers omit the seconds unit.
+    pub fn observe_value(&self, v: f64) {
+        self.reservoir_put(v);
+    }
+
+    fn reservoir_put(&self, v: f64) {
+        // the +1 makes `seen` the 1-based count INCLUDING this sample —
+        // the denominator Algorithm R's cap/seen survival needs
+        let seen = self.total.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut r = self.res.lock().unwrap();
+        r.sum += v;
+        if r.vals.len() < self.cap {
+            r.vals.push(v);
+        } else {
+            // xorshift64 step, index uniform in [0, seen): the sample
+            // replaces a random resident slot with probability cap/seen
+            r.rng ^= r.rng << 13;
+            r.rng ^= r.rng >> 7;
+            r.rng ^= r.rng << 17;
+            let j = (r.rng % seen) as usize;
+            if j < self.cap {
+                r.vals[j] = v;
+            }
+        }
+    }
+
+    /// Observations recorded (both [`Self::observe`] and
+    /// [`Self::observe_value`]), unbounded by the reservoir cap.
     pub fn count(&self) -> u64 {
-        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// Running sum of every observed value (seconds for durations).
+    pub fn sum(&self) -> f64 {
+        self.res.lock().unwrap().sum
     }
 
     pub fn stats(&self) -> Stats {
-        summarize(&self.samples.lock().unwrap())
+        summarize(&self.res.lock().unwrap().vals)
+    }
+
+    #[cfg(test)]
+    fn reservoir_len(&self) -> usize {
+        self.res.lock().unwrap().vals.len()
     }
 }
 
-/// Named registry the engine exposes (`dobi serve --metrics` dump).
+/// `name` or `name{k="v",...}` — the registry's storage key doubles as
+/// the render form for both text formats.
+fn keyed(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let body: Vec<String> = labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    format!("{name}{{{}}}", body.join(","))
+}
+
+/// Family name of a stored key (`a{b="c"}` → `a`).
+fn family_of(key: &str) -> &str {
+    key.split('{').next().unwrap_or(key)
+}
+
+/// Does `key` belong to `family` (exact name match, any label set)?
+fn in_family(key: &str, family: &str) -> bool {
+    family_of(key) == family
+}
+
+/// Split a stored key into (family, label-body-with-braces-or-empty).
+fn split_key(key: &str) -> (&str, &str) {
+    match key.find('{') {
+        Some(i) => (&key[..i], &key[i..]),
+        None => (key, ""),
+    }
+}
+
+fn is_dimensionless(family: &str) -> bool {
+    family.ends_with("_size") || family.ends_with("_rate")
+}
+
+/// Named registry the engine exposes (`{"op":"metrics"}`, the serve
+/// status line, and the bench harness).
 #[derive(Default)]
 pub struct Registry {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
@@ -121,33 +209,60 @@ pub struct Registry {
 
 impl Registry {
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counter_with(name, &[])
+    }
+
+    /// Labeled counter child: one instance per `(name, labels)` key.
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> std::sync::Arc<Counter> {
         self.counters
             .lock()
             .unwrap()
-            .entry(name.to_string())
+            .entry(keyed(name, labels))
             .or_default()
             .clone()
     }
 
     pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauge_with(name, &[])
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> std::sync::Arc<Gauge> {
         self.gauges
             .lock()
             .unwrap()
-            .entry(name.to_string())
+            .entry(keyed(name, labels))
             .or_default()
             .clone()
     }
 
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histogram_with(name, &[])
+    }
+
+    pub fn histogram_with(&self, name: &str,
+                          labels: &[(&str, &str)]) -> std::sync::Arc<Histogram> {
         self.histograms
             .lock()
             .unwrap()
-            .entry(name.to_string())
+            .entry(keyed(name, labels))
             .or_insert_with(|| std::sync::Arc::new(Histogram::default()))
             .clone()
     }
 
-    /// Plain-text dump (name value / name p50 p95 p99).
+    /// Sum of a counter family across every label set — the aggregate
+    /// the pre-label callers (status lines, `ServeStats`) read.
+    pub fn family_total(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| in_family(k, name))
+            .map(|(_, c)| c.get())
+            .sum()
+    }
+
+    /// Plain-text dump: `name{labels} value` per counter/gauge child,
+    /// `name{labels} count=… mean=… p50=…` per histogram.
     pub fn render(&self) -> String {
         let mut out = String::new();
         for (k, c) in self.counters.lock().unwrap().iter() {
@@ -160,11 +275,53 @@ impl Registry {
             let s = h.stats();
             // dimensionless histograms (observe_value: `*_size` batch
             // sizes, `*_rate` ratios) get no seconds label
-            let u = if k.ends_with("_size") || k.ends_with("_rate") { "" } else { "s" };
+            let u = if is_dimensionless(family_of(k)) { "" } else { "s" };
             out.push_str(&format!(
                 "{k} count={} mean={:.6}{u} p50={:.6}{u} p95={:.6}{u} p99={:.6}{u}\n",
                 h.count(), s.mean, s.p50, s.p95, s.p99
             ));
+        }
+        out
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` headers per family,
+    /// one sample line per labeled child; histograms render as summaries
+    /// (`quantile` labels + `_sum`/`_count`).
+    pub fn render_prom(&self) -> String {
+        let mut out = String::new();
+        let mut last_family = String::new();
+        let mut type_line = |out: &mut String, family: &str, kind: &str| {
+            if family != last_family {
+                out.push_str(&format!("# TYPE {family} {kind}\n"));
+                last_family = family.to_string();
+            }
+        };
+        for (k, c) in self.counters.lock().unwrap().iter() {
+            type_line(&mut out, family_of(k), "counter");
+            out.push_str(&format!("{k} {}\n", c.get()));
+        }
+        for (k, g) in self.gauges.lock().unwrap().iter() {
+            type_line(&mut out, family_of(k), "gauge");
+            out.push_str(&format!("{k} {}\n", g.get()));
+        }
+        for (k, h) in self.histograms.lock().unwrap().iter() {
+            let (family, labels) = split_key(k);
+            type_line(&mut out, family, "summary");
+            let s = h.stats();
+            // splice the quantile label into the existing label set
+            let q = |quantile: &str| -> String {
+                if labels.is_empty() {
+                    format!("{family}{{quantile=\"{quantile}\"}}")
+                } else {
+                    let inner = &labels[1..labels.len() - 1];
+                    format!("{family}{{{inner},quantile=\"{quantile}\"}}")
+                }
+            };
+            out.push_str(&format!("{} {:.9}\n", q("0.5"), s.p50));
+            out.push_str(&format!("{} {:.9}\n", q("0.95"), s.p95));
+            out.push_str(&format!("{} {:.9}\n", q("0.99"), s.p99));
+            out.push_str(&format!("{family}_sum{labels} {:.9}\n", h.sum()));
+            out.push_str(&format!("{family}_count{labels} {}\n", h.count()));
         }
         out
     }
@@ -236,6 +393,7 @@ mod tests {
         assert_eq!(h.count(), 4);
         assert!((s.mean - 2.5).abs() < 1e-9);
         assert!(s.p50 >= 2.0 && s.p50 <= 3.0);
+        assert!((h.sum() - 10.0).abs() < 1e-9);
     }
 
     #[test]
@@ -244,7 +402,88 @@ mod tests {
         for i in 0..1000 {
             h.observe(Duration::from_micros(i));
         }
-        assert!(h.samples.lock().unwrap().len() <= 16);
+        assert!(h.reservoir_len() <= 16);
         assert_eq!(h.count(), 1000);
+    }
+
+    /// The old overwrite index was `us * 2654435761 % cap` — a pure
+    /// function of the value, so identical latencies all landed in ONE
+    /// slot and a long steady-state run collapsed the reservoir to two
+    /// distinct values.  Algorithm R keeps a uniform sample instead.
+    #[test]
+    fn reservoir_not_value_deterministic() {
+        let h = Histogram::new(64);
+        // steady state: many observations of the SAME value, then a
+        // late minority of a different value
+        for _ in 0..2000 {
+            h.observe(Duration::from_micros(500));
+        }
+        for _ in 0..2000 {
+            h.observe(Duration::from_micros(900));
+        }
+        let r = h.res.lock().unwrap();
+        let n_late = r.vals.iter().filter(|v| (**v - 900e-6).abs() < 1e-9).count();
+        drop(r);
+        // uniform reservoir over a 50/50 stream: the late value holds
+        // roughly half the slots (the deterministic index held exactly 1
+        // slot per distinct value). 8 of 64 is > 5 sigma below fair.
+        assert!(n_late >= 8, "late value underrepresented: {n_late}/64 slots");
+        assert!(n_late <= 56, "late value overrepresented: {n_late}/64 slots");
+        assert_eq!(h.count(), 4000);
+    }
+
+    /// Negative dimensionless values used to saturate to latency bucket
+    /// 0 via `(v * 1e6) as u64`; they must survive intact now.
+    #[test]
+    fn observe_value_handles_negatives_without_bucket_roundtrip() {
+        let h = Histogram::new(16);
+        for v in [-2.0f64, -1.0, 1.0, 2.0] {
+            h.observe_value(v);
+        }
+        assert_eq!(h.count(), 4);
+        let s = h.stats();
+        assert!((s.mean - 0.0).abs() < 1e-9, "negatives averaged in: {}", s.mean);
+        assert!((h.sum() - 0.0).abs() < 1e-9);
+        // latency buckets untouched: dimensionless values no longer
+        // masquerade as microsecond durations
+        assert_eq!(h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum::<u64>(), 0);
+    }
+
+    #[test]
+    fn labeled_children_are_distinct_and_family_sums() {
+        let r = Registry::default();
+        r.counter_with("served", &[("variant", "a")]).add(3);
+        r.counter_with("served", &[("variant", "b")]).add(4);
+        r.counter_with("served_other", &[("variant", "c")]).add(100);
+        assert_eq!(r.counter_with("served", &[("variant", "a")]).get(), 3);
+        assert_eq!(r.family_total("served"), 7, "family sums across label sets");
+        assert_eq!(r.family_total("served_other"), 100);
+        let text = r.render();
+        assert!(text.contains("served{variant=\"a\"} 3"), "{text}");
+        assert!(text.contains("served{variant=\"b\"} 4"), "{text}");
+    }
+
+    #[test]
+    fn prom_exposition_renders_types_labels_and_summaries() {
+        let r = Registry::default();
+        r.counter_with("reqs", &[("variant", "a"), ("reason", "stop")]).inc();
+        r.gauge("depth").set(5);
+        let h = r.histogram_with("lat_seconds", &[("variant", "a")]);
+        h.observe(Duration::from_millis(10));
+        h.observe(Duration::from_millis(20));
+        let p = r.render_prom();
+        assert!(p.contains("# TYPE reqs counter"), "{p}");
+        assert!(p.contains("reqs{variant=\"a\",reason=\"stop\"} 1"), "{p}");
+        assert!(p.contains("# TYPE depth gauge"), "{p}");
+        assert!(p.contains("depth 5"), "{p}");
+        assert!(p.contains("# TYPE lat_seconds summary"), "{p}");
+        assert!(p.contains("lat_seconds{variant=\"a\",quantile=\"0.5\"}"), "{p}");
+        assert!(p.contains("lat_seconds_count{variant=\"a\"} 2"), "{p}");
+        assert!(p.contains("lat_seconds_sum{variant=\"a\"}"), "{p}");
+        // unlabeled histogram quantiles still render valid label bodies
+        r.histogram("plain_seconds").observe(Duration::from_millis(1));
+        let p = r.render_prom();
+        assert!(p.contains("plain_seconds{quantile=\"0.5\"}"), "{p}");
+        assert!(p.contains("plain_seconds_count 1"), "{p}");
     }
 }

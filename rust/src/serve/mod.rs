@@ -37,9 +37,19 @@
 //!   a serving-native measure of how much dense behavior the draft's SVD
 //!   ratio preserves.
 //! * [`stream`]    — the typed [`stream::Request`] protocol parsed off
-//!   the TCP line framing (generate / swap / list / health), the
-//!   `{"id", "delta", "done"}` token-streaming framing
+//!   the TCP line framing (generate / swap / list / health / metrics /
+//!   trace), the `{"id", "delta", "done"}` token-streaming framing
 //!   (`"stream": true`), plus the scheduler-backed one-shot reply.
+//!
+//! The whole request lifecycle is instrumented through [`crate::trace`]:
+//! the scheduler records queue-wait / admission / prefill / step /
+//! fused-step / spec-draft / spec-verify / eviction spans into the
+//! runtime's [`crate::trace::TraceBuffer`] (drained by `{"op":"trace"}`
+//! as Perfetto-loadable JSON), exports labeled
+//! `serve_*{variant=..,reason=..}` metric families through
+//! [`crate::metrics`], and delivers a per-request
+//! [`crate::trace::RequestTiming`] summary on every `Done` — the
+//! `"timing"` object clients see.
 //!
 //! [`DynamicBatcher`]: crate::coordinator::DynamicBatcher
 

@@ -39,9 +39,11 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::{Manifest, ServeConfig};
 use crate::coordinator::batcher::{Batchable, DynamicBatcher};
 use crate::coordinator::request::SubmitError;
+use crate::json::Json;
 use crate::lowrank::{set_decode_threads, FactorizedModel};
 use crate::mathx::{sample_logits, XorShift};
-use crate::metrics::Registry;
+use crate::metrics::{Counter, Registry};
+use crate::trace::{export_chrome, RequestTiming, TraceBuffer};
 
 use super::registry::{load_release, ModelRelease, VariantRegistry, VariantStatus};
 use super::session::DecodeSession;
@@ -73,7 +75,7 @@ impl FinishReason {
 #[derive(Debug, Clone)]
 pub enum GenEvent {
     Token { index: usize, token: i32 },
-    Done { n_tokens: usize, reason: FinishReason, prefill_s: f64, decode_s: f64 },
+    Done { n_tokens: usize, reason: FinishReason, timing: RequestTiming },
     Error(String),
 }
 
@@ -139,6 +141,9 @@ struct ServeShared {
     /// The live variant table — admission reads it, swaps write it, the
     /// scheduler sweeps it after each tick's evictions.
     registry: Mutex<VariantRegistry>,
+    /// Request-lifecycle span ring (`{"op":"trace"}` drains it); sized
+    /// by `ServeConfig::trace_buffer`, 0 = inert.
+    trace: Arc<TraceBuffer>,
 }
 
 /// Handle to the running scheduler.  Cloneable across client threads via
@@ -170,6 +175,7 @@ impl ServeRuntime {
         let shared = Arc::new(ServeShared {
             metrics: Registry::default(),
             registry: Mutex::new(VariantRegistry::default()),
+            trace: Arc::new(TraceBuffer::new(cfg.trace_buffer)),
         });
         let (tx, rx) = mpsc::channel::<Cmd>();
         let (ready_tx, ready_rx) = mpsc::channel::<Result<Vec<String>>>();
@@ -254,8 +260,8 @@ impl ServeRuntime {
             Ok(status)
         })();
         match &outcome {
-            Ok(_) => m.counter("serve_swap_applied").inc(),
-            Err(_) => m.counter("serve_swap_failed").inc(),
+            Ok(_) => m.counter_with("serve_swap_applied", &[("variant", variant)]).inc(),
+            Err(_) => m.counter_with("serve_swap_failed", &[("variant", variant)]).inc(),
         }
         outcome
     }
@@ -347,20 +353,39 @@ impl ServeRuntime {
     }
 
     pub fn stats(&self) -> ServeStats {
+        // counters are labeled families (per variant / finish reason):
+        // the aggregate view sums every label set
         let m = &self.shared.metrics;
         ServeStats {
             active_sessions: m.gauge("serve_active_sessions").get(),
             queue_depth: m.gauge("serve_queue_depth").get(),
-            sessions_opened: m.counter("serve_sessions_opened").get(),
-            sessions_finished: m.counter("serve_sessions_finished").get(),
-            tokens_emitted: m.counter("serve_tokens_emitted").get(),
-            swaps: m.counter("serve_swap_applied").get(),
+            sessions_opened: m.family_total("serve_sessions_opened"),
+            sessions_finished: m.family_total("serve_sessions_finished"),
+            tokens_emitted: m.family_total("serve_tokens_emitted"),
+            swaps: m.family_total("serve_swap_applied"),
             draining_sessions: m.gauge("serve_swap_draining_sessions").get(),
         }
     }
 
     pub fn metrics_text(&self) -> String {
         self.shared.metrics.render()
+    }
+
+    /// Prometheus-style exposition (`{"op":"metrics","format":"prom"}`).
+    pub fn metrics_prom(&self) -> String {
+        self.shared.metrics.render_prom()
+    }
+
+    /// The request-lifecycle trace ring (the server's accept/parse spans
+    /// record here too).
+    pub fn trace(&self) -> &Arc<TraceBuffer> {
+        &self.shared.trace
+    }
+
+    /// Drain the trace ring as Chrome trace-event JSON (Perfetto-loadable)
+    /// — the `{"op":"trace"}` payload.  `clear` empties drained slots.
+    pub fn trace_json(&self, clear: bool) -> Json {
+        export_chrome(&self.shared.trace.drain(clear))
     }
 
     pub fn shutdown(&self) {
@@ -400,8 +425,17 @@ struct Running {
     stop_token: Option<i32>,
     events: mpsc::Sender<GenEvent>,
     emitted: usize,
-    prefill_s: f64,
-    decode_s: f64,
+    /// Per-request wall-clock breakdown (queue/prefill/decode/spec
+    /// phases), accumulated as the session advances and delivered on
+    /// `Done` — the reply's `"timing"` object.
+    timing: RequestTiming,
+    /// When the request entered the queue (the `"request"` trace span's
+    /// start, and the queue_us baseline).
+    enqueued: Instant,
+    /// This session's `serve_tokens_emitted{variant=..}` child, resolved
+    /// once at admission so the per-token path never locks the registry
+    /// map.
+    tokens_c: Arc<Counter>,
     done: Option<FinishReason>,
     /// Client hung up or the step failed: evict without a Done event.
     dead: bool,
@@ -422,19 +456,19 @@ struct SpecPair {
 
 fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeShared>) {
     let m = &shared.metrics;
+    let trace = shared.trace.clone();
     let queue_g = m.gauge("serve_queue_depth");
     let active_g = m.gauge("serve_active_sessions");
     let kv_bytes_g = m.gauge("serve_kv_bytes");
     let draining_g = m.gauge("serve_swap_draining_sessions");
-    let opened_c = m.counter("serve_sessions_opened");
-    let finished_c = m.counter("serve_sessions_finished");
-    let tokens_c = m.counter("serve_tokens_emitted");
     let gced_c = m.counter("serve_swap_releases_gced");
-    let prefill_h = m.histogram("serve_prefill_seconds");
-    let step_h = m.histogram("serve_step_seconds");
     let fused_h = m.histogram("serve_fused_batch_size");
-    let spec_proposed_c = m.counter("serve_spec_proposed");
-    let spec_accepted_c = m.counter("serve_spec_accepted");
+    // serve_sessions_opened / serve_sessions_finished /
+    // serve_tokens_emitted / serve_prefill_seconds / serve_step_seconds /
+    // serve_spec_proposed / serve_spec_accepted are LABELED families
+    // (variant, finish reason) resolved where the label values are known
+    // — per admission, per tick group, per eviction; the hot per-token
+    // path uses the child Arc cached on `Running`.
     let spec_rate_h = m.histogram("serve_spec_accept_rate");
     // per-tick phase gauges: wall µs the last tick spent drafting vs
     // verifying across its speculative sessions — the heterogeneous
@@ -489,7 +523,8 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
             let Some(batch) = waiting.poll_up_to(Instant::now(), free) else { break };
             for p in batch.requests {
                 queue_g.sub(1);
-                opened_c.inc();
+                m.counter_with("serve_sessions_opened", &[("variant", &p.req.variant)])
+                    .inc();
                 // Resolve the variant's CURRENT release at admission time
                 // — this is the hot-swap routing point: sessions opened
                 // after an install decode the new generation while earlier
@@ -505,13 +540,11 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
                     };
                     (release, draft)
                 };
-                if let Some(r) = admit(p.req, release, draft, &cfg, next_id, &tokens_c,
-                                       &prefill_h) {
+                // sessions terminated at admission (zero budget / error)
+                // close their books inside admit (reason-labeled)
+                if let Some(r) = admit(p, release, draft, &cfg, next_id, m, &trace) {
                     next_id += 1;
                     active.push(r);
-                } else {
-                    // terminated at admission (zero budget / error)
-                    finished_c.inc();
                 }
             }
         }
@@ -559,6 +592,7 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
             // the plain sessions still fuse into one trunk walk.
             let (mut specs, mut plain): (Vec<&mut Running>, Vec<&mut Running>) =
                 group.into_iter().partition(|r| r.spec.is_some());
+            let step_h = m.histogram_with("serve_step_seconds", &[("variant", &var)]);
             let mut fused_done = false;
             if plain.len() >= 2 {
                 let tokens: Vec<i32> = plain.iter().map(|r| r.last).collect();
@@ -578,10 +612,13 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
                     // fused win shows up as fewer/faster ticks, not as a
                     // fabricated per-session divide
                     let dt = t0.elapsed();
+                    trace.push_span("fused_step", 0, t0, t0 + dt, || {
+                        format!("{var} gen={generation} batch={}", plain.len())
+                    });
                     for (r, logits) in plain.iter_mut().zip(&all) {
-                        r.decode_s += dt.as_secs_f64();
+                        r.timing.decode_us += dt.as_micros() as u64;
                         step_h.observe(dt);
-                        emit_next(r, logits, &tokens_c);
+                        emit_next(r, logits);
                     }
                     fused_done = true;
                 }
@@ -591,12 +628,11 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
             }
             if !fused_done {
                 for r in plain {
-                    step_serial(r, model, &step_h, &tokens_c);
+                    step_serial(r, model, &step_h, &trace);
                 }
             }
             for r in specs {
-                let (d_s, v_s) = step_spec(r, model, &step_h, &tokens_c, &spec_proposed_c,
-                                           &spec_accepted_c, &spec_rate_h);
+                let (d_s, v_s) = step_spec(r, model, &step_h, &spec_rate_h, m, &trace);
                 tick_draft_s += d_s;
                 tick_verify_s += v_s;
             }
@@ -604,22 +640,42 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
         spec_draft_us_g.set((tick_draft_s * 1e6) as i64);
         spec_verify_us_g.set((tick_verify_s * 1e6) as i64);
 
-        // Evict finished/dead sessions, emitting the terminal event.
+        // Evict finished/dead sessions, emitting the terminal event and
+        // closing each request's trace span (enqueue → finish).
+        let t_evict = Instant::now();
+        let mut evicted = 0usize;
         active.retain_mut(|r| {
             if r.dead {
-                finished_c.inc();
+                m.counter_with("serve_sessions_finished",
+                               &[("variant", &r.session.variant), ("reason", "error")])
+                    .inc();
+                trace.push_span("request", r.session.id, r.enqueued, Instant::now(), || {
+                    format!("{} reason=error tokens={}", r.session.variant, r.emitted)
+                });
+                evicted += 1;
                 return false;
             }
             if let Some(reason) = r.done {
                 // count before notifying: a client that wakes on Done must
                 // already see itself in `sessions_finished`
-                finished_c.inc();
+                m.counter_with(
+                    "serve_sessions_finished",
+                    &[("variant", &r.session.variant), ("reason", reason.as_str())],
+                )
+                .inc();
+                r.timing.tokens = r.emitted as u64;
+                // record the lifecycle span BEFORE notifying: a client that
+                // wakes on Done and drains the ring must find its request
+                trace.push_span("request", r.session.id, r.enqueued, Instant::now(), || {
+                    format!("{} reason={} tokens={}", r.session.variant, reason.as_str(),
+                            r.emitted)
+                });
                 let _ = r.events.send(GenEvent::Done {
                     n_tokens: r.emitted,
                     reason,
-                    prefill_s: r.prefill_s,
-                    decode_s: r.decode_s,
+                    timing: r.timing,
                 });
+                evicted += 1;
                 return false;
             }
             true
@@ -644,6 +700,11 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
             }
             draining_g.set(reg.draining_sessions() as i64);
         }
+        if evicted > 0 {
+            // sweep span covers the evictions plus the registry GC pass
+            trace.push_span("evict_sweep", 0, t_evict, Instant::now(),
+                            || format!("evicted={evicted}"));
+        }
     }
 
     // Shutdown: everything still queued or mid-decode gets an Error event
@@ -663,7 +724,9 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
     }
     for r in active.drain(..) {
         // these were opened (counted): close the books before notifying
-        finished_c.inc();
+        m.counter_with("serve_sessions_finished",
+                       &[("variant", &r.session.variant), ("reason", "error")])
+            .inc();
         let _ = r.events.send(GenEvent::Error("scheduler stopped".into()));
     }
     active_g.set(0);
@@ -673,14 +736,16 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
 /// One serial decode step with timing, emission, and error handling —
 /// the singleton-group tick and the fused path's validation fallback.
 fn step_serial(r: &mut Running, model: &FactorizedModel,
-               step_h: &crate::metrics::Histogram, tokens_c: &crate::metrics::Counter) {
+               step_h: &crate::metrics::Histogram, trace: &TraceBuffer) {
     let t0 = Instant::now();
     match r.session.step(model, r.last) {
         Ok(logits) => {
             let dt = t0.elapsed();
-            r.decode_s += dt.as_secs_f64();
+            r.timing.decode_us += dt.as_micros() as u64;
             step_h.observe(dt);
-            emit_next(r, &logits, tokens_c);
+            trace.push_span("step", r.session.id, t0, t0 + dt,
+                            || r.session.variant.clone());
+            emit_next(r, &logits);
         }
         Err(e) => {
             let _ = r.events.send(GenEvent::Error(format!("{e:#}")));
@@ -697,9 +762,8 @@ fn step_serial(r: &mut Running, model: &FactorizedModel,
 /// capacity termination and streaming are shared code.  Returns the
 /// round's (draft, verify) phase wall times for the per-tick gauges.
 fn step_spec(r: &mut Running, target_model: &FactorizedModel,
-             step_h: &crate::metrics::Histogram, tokens_c: &crate::metrics::Counter,
-             proposed_c: &crate::metrics::Counter, accepted_c: &crate::metrics::Counter,
-             rate_h: &crate::metrics::Histogram) -> (f64, f64) {
+             step_h: &crate::metrics::Histogram, rate_h: &crate::metrics::Histogram,
+             m: &Registry, trace: &TraceBuffer) -> (f64, f64) {
     let t0 = Instant::now();
     let outcome = {
         let pair = r.spec.as_mut().expect("step_spec on a plain session");
@@ -708,15 +772,31 @@ fn step_spec(r: &mut Running, target_model: &FactorizedModel,
     match outcome {
         Ok(round) => {
             let dt = t0.elapsed();
-            r.decode_s += dt.as_secs_f64();
+            let t1 = t0 + dt;
+            r.timing.decode_us += dt.as_micros() as u64;
+            r.timing.draft_us += (round.draft_s * 1e6) as u64;
+            r.timing.verify_us += (round.verify_s * 1e6) as u64;
             step_h.observe(dt);
-            proposed_c.add(round.proposed as u64);
-            accepted_c.add(round.accepted as u64);
+            let variant = r.session.variant.as_str();
+            m.counter_with("serve_spec_proposed", &[("variant", variant)])
+                .add(round.proposed as u64);
+            m.counter_with("serve_spec_accepted", &[("variant", variant)])
+                .add(round.accepted as u64);
             if round.proposed > 0 {
                 rate_h.observe_value(round.accepted as f64 / round.proposed as f64);
             }
+            // the round ran draft-then-verify back to back: reconstruct
+            // both phase spans from the measured phase wall times
+            let d_end = t0 + Duration::from_secs_f64(round.draft_s);
+            trace.push_span("spec_draft", r.session.id, t0, d_end,
+                            || format!("{variant} proposed={}", round.proposed));
+            let v_start = t1
+                .checked_sub(Duration::from_secs_f64(round.verify_s))
+                .unwrap_or(t0);
+            trace.push_span("spec_verify", r.session.id, v_start, t1,
+                            || format!("{variant} accepted={}", round.accepted));
             for row in &round.rows {
-                emit_next(r, row, tokens_c);
+                emit_next(r, row);
                 if r.done.is_some() || r.dead {
                     break;
                 }
@@ -733,18 +813,29 @@ fn step_spec(r: &mut Running, target_model: &FactorizedModel,
 
 /// Prefill a newly admitted session and emit its first token.  Returns
 /// None when the session terminated at admission (zero budget, prefill
-/// error, or client already gone).  `release` is the registry's current
-/// release for the variant, resolved by the caller at admission time;
-/// `draft` is the resolved speculative draft release (present iff the
-/// request asked for speculative decode and the target release exists —
-/// resolution/compatibility errors surface to the client here).
-fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>,
+/// error, or client already gone) — those paths close the session's
+/// books (`serve_sessions_finished{variant,reason}`) here.  `release` is
+/// the registry's current release for the variant, resolved by the
+/// caller at admission time; `draft` is the resolved speculative draft
+/// release (present iff the request asked for speculative decode and the
+/// target release exists — resolution/compatibility errors surface to
+/// the client here).
+fn admit(p: Pending, release: Option<Arc<ModelRelease>>,
          draft: Option<Result<Arc<ModelRelease>>>, cfg: &ServeConfig,
-         id: u64, tokens_c: &crate::metrics::Counter,
-         prefill_h: &crate::metrics::Histogram) -> Option<Running> {
+         id: u64, m: &Registry, trace: &TraceBuffer) -> Option<Running> {
+    let t_adm = Instant::now();
+    let req = p.req;
+    let queue_us = t_adm.saturating_duration_since(p.enqueued).as_micros() as u64;
+    trace.push_span("queue_wait", id, p.enqueued, t_adm, || req.variant.clone());
+    let finished = |reason: &str| {
+        m.counter_with("serve_sessions_finished",
+                       &[("variant", &req.variant), ("reason", reason)])
+            .inc();
+    };
     let Some(release) = release else {
         // open() validates; a missing release here means start/open disagree
         let _ = req.events.send(GenEvent::Error(format!("unknown variant `{}`", req.variant)));
+        finished("error");
         return None;
     };
     let model = &release.model;
@@ -756,26 +847,29 @@ fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>,
         (Some(sp), Some(Ok(d))) => Some((sp.k.max(1), d)),
         (Some(_), Some(Err(e))) => {
             let _ = req.events.send(GenEvent::Error(format!("{e:#}")));
+            finished("error");
             return None;
         }
         (Some(sp), None) => {
             let _ = req.events.send(GenEvent::Error(format!(
                 "draft variant `{}` was not resolved", sp.draft)));
+            finished("error");
             return None;
         }
     };
     if spec_setup.is_some() && req.temperature > 0.0 {
         let _ = req.events.send(GenEvent::Error(
             "speculative decode is greedy-only: temperature must be 0".into()));
+        finished("error");
         return None;
     }
     if req.max_tokens == 0 {
         let _ = req.events.send(GenEvent::Done {
             n_tokens: 0,
             reason: FinishReason::MaxTokens,
-            prefill_s: 0.0,
-            decode_s: 0.0,
+            timing: RequestTiming { queue_us, ..Default::default() },
         });
+        finished(FinishReason::MaxTokens.as_str());
         return None;
     }
     // Budget the KV capacity: the prompt comes first (context quality —
@@ -789,6 +883,7 @@ fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>,
         let _ = req.events.send(GenEvent::Error(format!(
             "kv capacity {cap} cannot hold the {prefix}-token image prefix"
         )));
+        finished("error");
         return None;
     }
     let mut prompt = req.prompt;
@@ -806,6 +901,7 @@ fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>,
         Ok(l) => l,
         Err(e) => {
             let _ = req.events.send(GenEvent::Error(format!("{e:#}")));
+            finished("error");
             return None;
         }
     };
@@ -818,13 +914,22 @@ fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>,
             let mut dsess = DecodeSession::new(id, &drel.variant, &drel.model, cap);
             if let Err(e) = dsess.prefill(&drel.model, &prompt, req.image.as_deref()) {
                 let _ = req.events.send(GenEvent::Error(format!("draft prefill: {e:#}")));
+                finished("error");
                 return None;
             }
             Some(SpecPair { decoder: SpecDecoder::new(dsess, k), release: drel })
         }
     };
     let dt = t0.elapsed();
-    prefill_h.observe(dt);
+    m.histogram_with("serve_prefill_seconds", &[("variant", &req.variant)])
+        .observe(dt);
+    trace.push_span("prefill", id, t0, t0 + dt, || {
+        format!("{} prompt={} spec={}", req.variant, keep, spec.is_some())
+    });
+    trace.push_span("admission", id, t_adm, Instant::now(), || req.variant.clone());
+    // resolved once per session so the per-token hot path below never
+    // takes the registry map lock, only the child counter's atomic
+    let tokens_c = m.counter_with("serve_tokens_emitted", &[("variant", &req.variant)]);
     let mut r = Running {
         session,
         release: release.clone(),
@@ -836,24 +941,29 @@ fn admit(req: SessionRequest, release: Option<Arc<ModelRelease>>,
         stop_token: req.stop_token,
         events: req.events,
         emitted: 0,
-        prefill_s: dt.as_secs_f64(),
-        decode_s: 0.0,
+        timing: RequestTiming {
+            queue_us,
+            prefill_us: dt.as_micros() as u64,
+            ..Default::default()
+        },
+        enqueued: p.enqueued,
+        tokens_c,
         done: None,
         dead: false,
         spec,
     };
-    emit_next(&mut r, &logits, tokens_c);
+    emit_next(&mut r, &logits);
     Some(r)
 }
 
 /// Sample from `logits`, stream the token, and update the session's
 /// stop conditions.
-fn emit_next(r: &mut Running, logits: &[f32], tokens_c: &crate::metrics::Counter) {
+fn emit_next(r: &mut Running, logits: &[f32]) {
     let tok = sample_logits(logits, r.temperature, &mut r.rng) as i32;
     r.last = tok;
     let index = r.emitted;
     r.emitted += 1;
-    tokens_c.inc();
+    r.tokens_c.inc();
     if r.events.send(GenEvent::Token { index, token: tok }).is_err() {
         r.dead = true; // client hung up: free the slot without more work
         return;
@@ -1112,14 +1222,79 @@ mod tests {
             .unwrap();
         assert_eq!(self_spec, want);
         let m = &rt.shared.metrics;
-        let proposed = m.counter("serve_spec_proposed").get();
-        let accepted = m.counter("serve_spec_accepted").get();
+        // spec counters are labeled by target variant: read the family sum
+        let proposed = m.family_total("serve_spec_proposed");
+        let accepted = m.family_total("serve_spec_accepted");
         assert!(proposed > 0, "spec rounds must report proposals");
         assert!(accepted <= proposed);
         let text = rt.metrics_text();
         assert!(text.contains("serve_spec_accept_rate"), "{text}");
         assert!(text.contains("serve_spec_draft_us"), "{text}");
         assert!(text.contains("serve_spec_verify_us"), "{text}");
+        assert!(text.contains(r#"serve_spec_proposed{variant="tiny/dense"}"#), "{text}");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn timing_and_trace_cover_the_request_lifecycle() {
+        let rt = rt("trace", ServeConfig { max_sessions: 2, ..Default::default() });
+        let (etx, erx) = mpsc::channel();
+        rt.open(SessionRequest {
+            variant: "tiny/dense".into(),
+            prompt: vec![65, 66, 67],
+            image: None,
+            max_tokens: 5,
+            temperature: 0.0,
+            seed: 1,
+            stop_token: None,
+            spec: None,
+            events: etx,
+        })
+        .unwrap();
+        let mut timing = None;
+        for ev in erx {
+            if let GenEvent::Done { n_tokens, timing: t, .. } = ev {
+                assert_eq!(n_tokens, 5);
+                timing = Some(t);
+                break;
+            }
+        }
+        let t = timing.expect("Done must carry the timing summary");
+        assert_eq!(t.tokens, 5);
+        assert!(t.prefill_us > 0, "prefill wall time must be charged");
+        assert!(t.decode_us > 0, "decode wall time must be charged");
+        assert_eq!(t.ttft_us(), t.queue_us + t.prefill_us);
+        // `evict_sweep` is the tick's last push — once it lands the ring is
+        // stable for this workload (poll: the sweep runs on the scheduler
+        // thread after Done is delivered)
+        let t0 = Instant::now();
+        let events = loop {
+            let events = rt.trace().drain(false);
+            if events.iter().any(|e| e.name == "evict_sweep") {
+                break events;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "evict_sweep never recorded");
+            std::thread::sleep(Duration::from_millis(5));
+        };
+        let names: Vec<&str> = events.iter().map(|e| e.name).collect();
+        for want in ["queue_wait", "admission", "prefill", "step", "request"] {
+            assert!(names.contains(&want), "missing `{want}` span in {names:?}");
+        }
+        // export round-trips through the JSON layer
+        let doc = rt.trace_json(true);
+        let evs = doc.path("traceEvents").and_then(|j| j.as_arr().map(|a| a.len()));
+        assert_eq!(evs, Some(events.len()));
+        assert!(rt.trace().drain(false).is_empty(), "clear=true must empty the ring");
+        rt.shutdown();
+    }
+
+    #[test]
+    fn disabled_trace_buffer_serves_without_recording() {
+        let rt = rt("notrace", ServeConfig { trace_buffer: 0, ..Default::default() });
+        let out = rt.generate("tiny/dense", &[1, 2, 3], 4, 0.0, 1).unwrap();
+        assert_eq!(out.len(), 4);
+        assert!(!rt.trace().enabled());
+        assert!(rt.trace().drain(false).is_empty());
         rt.shutdown();
     }
 

@@ -8,6 +8,12 @@
 //! loaded models (one per variant, shared across sessions) and passes the
 //! right one in, so a thousand sessions cost a thousand KV caches, not a
 //! thousand weight copies.
+//!
+//! Sessions carry no instrumentation of their own: the scheduler times
+//! each `prefill`/`step` call around the session and records the spans
+//! into [`crate::trace`] keyed by [`DecodeSession::id`] — the `id` is
+//! what ties a session's `prefill`/`step`/`spec_*` spans to its
+//! `queue_wait` and `request` lifecycle spans in the exported trace.
 
 use anyhow::Result;
 

@@ -24,7 +24,13 @@
 //! The scheduler drives one [`SpecDecoder::round`] per tick for each
 //! speculative session, then pushes the returned target rows through its
 //! normal emit gate (stop token / budget / capacity), so speculative and
-//! plain sessions share every termination and streaming path.
+//! plain sessions share every termination and streaming path.  The
+//! round's [`SpecRound::draft_s`]/[`SpecRound::verify_s`] phase wall
+//! times are what the scheduler turns into `spec_draft`/`spec_verify`
+//! spans in [`crate::trace`] and the `draft_us`/`verify_us` fields of
+//! the client-visible `"timing"` summary — the phases run back to back
+//! inside the round, so the spans are reconstructed from these numbers
+//! rather than re-timed.
 
 use anyhow::Result;
 

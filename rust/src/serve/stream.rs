@@ -3,8 +3,11 @@
 //!
 //! Every inbound line parses through [`parse_request`] into a [`Request`]
 //! — generate (the default when `op` is absent), or the control ops
-//! `swap` / `list` / `health`.  A generate request (one JSON object per
-//! line, same as the one-shot path, plus the `stream` switch):
+//! `swap` / `list` / `health` / `metrics` / `trace` (the last two are the
+//! observability surface: the labeled metric families as text or
+//! Prometheus exposition, and the request-lifecycle span ring as Chrome
+//! trace-event JSON).  A generate request (one JSON object per line, same
+//! as the one-shot path, plus the `stream` switch):
 //!   -> {"variant": "tiny/dobi_40", "prompt": "The ", "max_tokens": 32,
 //!       "temperature": 0.0, "stream": true, "stop_token": 10}
 //!
@@ -17,6 +20,10 @@
 //! Without `"stream": true` the reply is the single legacy object
 //! (`{"id", "text", "latency_s", "tokens_per_s"}`), but still decoded
 //! incrementally through the scheduler when it serves the variant.
+//! Both reply shapes attach the scheduler's per-request wall-clock
+//! breakdown as a `"timing"` object (`queue_us`, `prefill_us`,
+//! `decode_us`, `draft_us`, `verify_us`, `ttft_us`, `tokens`,
+//! `tokens_per_s` — see [`crate::trace::RequestTiming`]).
 //!
 //! Deltas are per-token byte decodes: a multi-byte UTF-8 character split
 //! across tokens renders as replacement characters in the deltas; the
@@ -32,6 +39,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::json::Json;
 use crate::tokenizer::ByteTokenizer;
+use crate::trace::RequestTiming;
 
 use super::scheduler::{FinishReason, GenEvent, ServeRuntime, SessionRequest};
 use super::spec::SpecParams;
@@ -69,6 +77,12 @@ pub enum Request {
     List,
     /// Liveness + aggregate serve counters.
     Health,
+    /// Dump the metric families — `prom` selects the Prometheus-style
+    /// exposition (`"format": "prom"`) over the plain-text render.
+    Metrics { prom: bool },
+    /// Drain the request-lifecycle span ring as Chrome trace-event JSON;
+    /// `"clear": true` empties the drained slots.
+    Trace { clear: bool },
 }
 
 /// A malformed request line: which field was wrong (when attributable)
@@ -253,9 +267,19 @@ pub fn parse_request(req: &Json) -> Result<Request, ReqError> {
         },
         "list" => Ok(Request::List),
         "health" => Ok(Request::Health),
+        "metrics" => match opt_str(req, "format", "text")?.as_str() {
+            "text" => Ok(Request::Metrics { prom: false }),
+            "prom" => Ok(Request::Metrics { prom: true }),
+            other => Err(ReqError::field(
+                "format",
+                format!("unknown metrics format `{other}` (expected text or prom)"),
+            )),
+        },
+        "trace" => Ok(Request::Trace { clear: opt_bool(req, "clear", false)? }),
         other => Err(ReqError::field(
             "op",
-            format!("unknown op `{other}` (expected generate, swap, list, or health)"),
+            format!("unknown op `{other}` (expected generate, swap, list, health, \
+                     metrics, or trace)"),
         )),
     }
 }
@@ -284,8 +308,11 @@ fn jstr(s: impl Into<String>) -> Json {
 
 /// Terminal-line payload shared by every reply shape (streaming terminal
 /// line, scheduler one-shot, and the server's engine-fallback one-shot).
+/// `timing` is the scheduler's per-request wall-clock breakdown, attached
+/// as a `"timing"` object when the path measured one.
 pub(crate) fn finish_fields(m: &mut BTreeMap<String, Json>, tokens: &[i32],
-                            reason: Option<FinishReason>, latency_s: f64) {
+                            reason: Option<FinishReason>, latency_s: f64,
+                            timing: Option<&RequestTiming>) {
     m.insert("text".into(), jstr(ByteTokenizer.decode(tokens)));
     m.insert("latency_s".into(), Json::Num(latency_s));
     m.insert("tokens_per_s".into(),
@@ -293,6 +320,9 @@ pub(crate) fn finish_fields(m: &mut BTreeMap<String, Json>, tokens: &[i32],
     m.insert("n_tokens".into(), Json::Num(tokens.len() as f64));
     if let Some(r) = reason {
         m.insert("finish".into(), jstr(r.as_str()));
+    }
+    if let Some(t) = timing {
+        m.insert("timing".into(), t.to_json());
     }
 }
 
@@ -318,6 +348,7 @@ pub fn run_streaming<W: Write>(rt: &ServeRuntime, p: &GenParams, id: u64,
     let mut tokens = Vec::new();
     let mut reason = None;
     let mut error = None;
+    let mut timing = None;
     for ev in erx {
         match ev {
             GenEvent::Token { index, token } => {
@@ -333,8 +364,9 @@ pub fn run_streaming<W: Write>(rt: &ServeRuntime, p: &GenParams, id: u64,
                 writeln!(w, "{}", Json::Obj(m))?;
                 w.flush()?;
             }
-            GenEvent::Done { reason: r, .. } => {
+            GenEvent::Done { reason: r, timing: t, .. } => {
                 reason = Some(r);
+                timing = Some(t);
                 break;
             }
             GenEvent::Error(e) => {
@@ -356,7 +388,8 @@ pub fn run_streaming<W: Write>(rt: &ServeRuntime, p: &GenParams, id: u64,
         }
         None => {
             m.insert("done".into(), Json::Bool(true));
-            finish_fields(&mut m, &tokens, reason, t0.elapsed().as_secs_f64());
+            finish_fields(&mut m, &tokens, reason, t0.elapsed().as_secs_f64(),
+                          timing.as_ref());
         }
     }
     writeln!(w, "{}", Json::Obj(m))?;
@@ -371,11 +404,13 @@ pub fn run_oneshot(rt: &ServeRuntime, p: &GenParams) -> Result<BTreeMap<String, 
     let erx = open_session(rt, p)?;
     let mut tokens = Vec::new();
     let mut reason = None;
+    let mut timing = None;
     for ev in erx {
         match ev {
             GenEvent::Token { token, .. } => tokens.push(token),
-            GenEvent::Done { reason: r, .. } => {
+            GenEvent::Done { reason: r, timing: t, .. } => {
                 reason = Some(r);
+                timing = Some(t);
                 break;
             }
             GenEvent::Error(e) => bail!("session failed: {e}"),
@@ -383,7 +418,8 @@ pub fn run_oneshot(rt: &ServeRuntime, p: &GenParams) -> Result<BTreeMap<String, 
     }
     anyhow::ensure!(reason.is_some(), "scheduler dropped the session");
     let mut m = BTreeMap::new();
-    finish_fields(&mut m, &tokens, reason, t0.elapsed().as_secs_f64());
+    finish_fields(&mut m, &tokens, reason, t0.elapsed().as_secs_f64(),
+                  timing.as_ref());
     Ok(m)
 }
 
@@ -438,6 +474,31 @@ mod tests {
             Ok(Request::Swap { variant }) => assert_eq!(variant, "m/x"),
             other => panic!("expected Swap, got {other:?}"),
         }
+    }
+
+    #[test]
+    fn metrics_and_trace_ops_parse_with_typed_options() {
+        assert!(matches!(parse_request(&Json::parse(r#"{"op": "metrics"}"#).unwrap()),
+                         Ok(Request::Metrics { prom: false })));
+        assert!(matches!(
+            parse_request(&Json::parse(r#"{"op": "metrics", "format": "text"}"#).unwrap()),
+            Ok(Request::Metrics { prom: false })));
+        assert!(matches!(
+            parse_request(&Json::parse(r#"{"op": "metrics", "format": "prom"}"#).unwrap()),
+            Ok(Request::Metrics { prom: true })));
+        let e = err(r#"{"op": "metrics", "format": "xml"}"#);
+        assert_eq!(e.field.as_deref(), Some("format"));
+        assert!(e.msg.contains("xml"), "{}", e.msg);
+        let e = err(r#"{"op": "metrics", "format": 7}"#);
+        assert_eq!(e.field.as_deref(), Some("format"));
+
+        assert!(matches!(parse_request(&Json::parse(r#"{"op": "trace"}"#).unwrap()),
+                         Ok(Request::Trace { clear: false })));
+        assert!(matches!(
+            parse_request(&Json::parse(r#"{"op": "trace", "clear": true}"#).unwrap()),
+            Ok(Request::Trace { clear: true })));
+        let e = err(r#"{"op": "trace", "clear": "yes"}"#);
+        assert_eq!(e.field.as_deref(), Some("clear"));
     }
 
     #[test]

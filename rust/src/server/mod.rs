@@ -8,8 +8,9 @@
 //!
 //! With `"stream": true` the reply is one `{"id", "delta", "done"}` line
 //! per token (see [`crate::serve::stream`]).  Control ops (`{"op":"swap"}`
-//! / `list` / `health`) manage the decode runtime's variant registry over
-//! the same connection; malformed lines answer `{"id","error","field"}`.
+//! / `list` / `health` / `metrics` / `trace`) manage and observe the
+//! decode runtime over the same connection; malformed lines answer
+//! `{"id","error","field"}`.
 //!
 //! Generation routes through the incremental decode runtime
 //! ([`ServeRuntime`]) when one is attached and serves the variant: KV
@@ -80,10 +81,10 @@ impl ServerBuilder {
         self
     }
 
-    /// Accept control ops (`swap` / `list` / `health`) on client
-    /// connections.  Defaults to on; `dobi serve --no-control` turns it
-    /// off for deployments where the data port must not mutate the
-    /// variant table.
+    /// Accept control ops (`swap` / `list` / `health` / `metrics` /
+    /// `trace`) on client connections.  Defaults to on; `dobi serve
+    /// --no-control` turns it off for deployments where the data port
+    /// must not mutate the variant table or leak operational detail.
     pub fn control(mut self, control: bool) -> Self {
         self.control = Some(control);
         self
@@ -180,6 +181,9 @@ fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
     let mut writer = stream.try_clone()?;
     let mut reader = BufReader::new(stream);
     let mut req_no = 0u64;
+    if let Some(rt) = &runtime {
+        rt.trace().push_instant("accept", 0, || peer.to_string());
+    }
     loop {
         let mut line = String::new();
         match reader.read_line(&mut line) {
@@ -200,6 +204,7 @@ fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
         req_no += 1;
         // Parse into the typed request; every malformed line answers a
         // structured error naming the offending field when attributable.
+        let t_parse = Instant::now();
         let request = match Json::parse(&line) {
             Ok(req) => match sstream::parse_request(&req) {
                 Ok(r) => r,
@@ -215,6 +220,10 @@ fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
                 continue;
             }
         };
+        if let Some(rt) = &runtime {
+            rt.trace().push_span("parse", 0, t_parse, Instant::now(),
+                                 || format!("req={req_no} bytes={}", line.len()));
+        }
         let reply = match request {
             sstream::Request::Generate(mut params) => {
                 // Serve-level speculative default: greedy requests with no
@@ -258,6 +267,8 @@ fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
                     sstream::Request::Swap { .. } => "swap",
                     sstream::Request::List => "list",
                     sstream::Request::Health => "health",
+                    sstream::Request::Metrics { .. } => "metrics",
+                    sstream::Request::Trace { .. } => "trace",
                     sstream::Request::Generate(_) => unreachable!("handled above"),
                 };
                 error_line(req_no,
@@ -373,6 +384,27 @@ fn control_reply(rt: &ServeRuntime, id: u64, op: &sstream::Request) -> String {
             m.insert("draining_sessions".into(), Json::Num(st.draining_sessions as f64));
             Json::Obj(m).to_string()
         }
+        sstream::Request::Metrics { prom } => {
+            let (format, text) = if *prom {
+                ("prom", rt.metrics_prom())
+            } else {
+                ("text", rt.metrics_text())
+            };
+            let mut m = BTreeMap::new();
+            m.insert("id".into(), Json::Num(id as f64));
+            m.insert("op".into(), Json::Str("metrics".into()));
+            m.insert("format".into(), Json::Str(format.into()));
+            m.insert("text".into(), Json::Str(text));
+            Json::Obj(m).to_string()
+        }
+        sstream::Request::Trace { clear } => {
+            let mut m = BTreeMap::new();
+            m.insert("id".into(), Json::Num(id as f64));
+            m.insert("op".into(), Json::Str("trace".into()));
+            m.insert("enabled".into(), Json::Bool(rt.trace().enabled()));
+            m.insert("trace".into(), rt.trace_json(*clear));
+            Json::Obj(m).to_string()
+        }
         sstream::Request::Generate(_) => unreachable!("generate is not a control op"),
     }
 }
@@ -421,7 +453,14 @@ fn serve_one(engine: Option<&Engine>, runtime: Option<&ServeRuntime>,
         }
     }
     let mut m = BTreeMap::new();
-    // one terminal-payload builder for every reply shape
-    sstream::finish_fields(&mut m, &out_tokens, Some(finish), t0.elapsed().as_secs_f64());
+    // one terminal-payload builder for every reply shape; the legacy loop
+    // has no queue/prefill phases, so the whole wall time is decode
+    let timing = crate::trace::RequestTiming {
+        decode_us: t0.elapsed().as_micros() as u64,
+        tokens: out_tokens.len() as u64,
+        ..Default::default()
+    };
+    sstream::finish_fields(&mut m, &out_tokens, Some(finish),
+                           t0.elapsed().as_secs_f64(), Some(&timing));
     Ok(m)
 }

@@ -1,0 +1,439 @@
+//! Request-lifecycle tracing: a lock-cheap bounded ring of span events
+//! plus a Chrome trace-event exporter (Perfetto-loadable).
+//!
+//! The serve stack records where every request's wall-clock goes —
+//! accept → parse → queue wait → admission → prefill → each tick's fused
+//! group walk / spec draft / spec verify / eviction sweep — as
+//! [`TraceEvent`]s in a [`TraceBuffer`].  Design constraints, in order:
+//!
+//! * **Cheap when disabled.**  A zero-capacity buffer allocates nothing
+//!   and every record call returns before formatting a single byte
+//!   (details are built through `FnOnce` closures that never run).
+//! * **Cheap when enabled.**  Writers claim a slot with one relaxed
+//!   `fetch_add` on the global sequence counter and lock ONLY that slot
+//!   — scheduler and client-handler threads never contend unless they
+//!   collide on the same ring index, and the ring is sized to make that
+//!   rare.  Overwrite-oldest falls out of the modulo: the ring always
+//!   holds the newest `cap` events.
+//! * **Drainable live.**  `{"op":"trace"}` drains (optionally clears)
+//!   the ring while writers keep writing; slot-level locking means a
+//!   drain observes each event atomically — torn events are impossible.
+//!
+//! Spans come from RAII [`SpanGuard`]s (`buf.span(..)` … drop records)
+//! or retroactively via [`TraceBuffer::push_span`] when the phase was
+//! already timed (queue waits, speculative draft/verify phases).  The
+//! exporter ([`export_chrome`]) renders the drained events as Chrome
+//! trace-event JSON — load the `{"op":"trace"}` reply's `trace` object
+//! in <https://ui.perfetto.dev> (or `chrome://tracing`) to see the
+//! request lanes.  [`RequestTiming`] is the compact per-request summary
+//! the same instrumentation feeds: the `"timing"` object on every
+//! terminal streaming line / one-shot reply.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::json::Json;
+
+/// One recorded span (an instant event when `dur_us == 0`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Global record order (the ring keeps the newest `cap` seqs).
+    pub seq: u64,
+    /// Start, µs since the buffer's epoch.
+    pub ts_us: u64,
+    /// Span wall time in µs.
+    pub dur_us: u64,
+    /// Phase name (`"prefill"`, `"fused_step"`, `"queue_wait"`, ...).
+    pub name: &'static str,
+    /// Writer lane (stable per thread) — the Chrome `tid`.
+    pub tid: u64,
+    /// Session id the span belongs to (0 = not session-scoped).
+    pub session: u64,
+    /// Free-form detail (variant id, batch size, finish reason).
+    pub detail: String,
+}
+
+/// Stable small integer per OS thread: the trace's `tid` lanes.
+fn thread_lane() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    thread_local! {
+        static LANE: u64 = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    LANE.with(|l| *l)
+}
+
+/// Bounded ring of [`TraceEvent`]s: sequence-numbered, overwrite-oldest,
+/// one mutex per slot (writers lock only the slot they claimed).
+pub struct TraceBuffer {
+    epoch: Instant,
+    seq: AtomicU64,
+    slots: Vec<Mutex<Option<TraceEvent>>>,
+}
+
+impl TraceBuffer {
+    /// `cap` events; 0 disables tracing (every record call is a cheap
+    /// early return and no slot storage is allocated).
+    pub fn new(cap: usize) -> TraceBuffer {
+        TraceBuffer {
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            slots: (0..cap).map(|_| Mutex::new(None)).collect(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        !self.slots.is_empty()
+    }
+
+    /// Ring capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Events recorded since start (not bounded by capacity).
+    pub fn recorded(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    fn us_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_micros() as u64
+    }
+
+    /// Record a span that already happened (`start..end`).  `detail` is
+    /// only evaluated when the buffer is enabled — disabled tracing
+    /// never formats a byte.
+    pub fn push_span<F: FnOnce() -> String>(&self, name: &'static str, session: u64,
+                                            start: Instant, end: Instant, detail: F) {
+        if self.slots.is_empty() {
+            return;
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ev = TraceEvent {
+            seq,
+            ts_us: self.us_since_epoch(start),
+            dur_us: end.saturating_duration_since(start).as_micros() as u64,
+            name,
+            tid: thread_lane(),
+            session,
+            detail: detail(),
+        };
+        // slot-level lock: a concurrent drain sees either the old event
+        // or the new one, never a torn mix
+        *self.slots[(seq % self.slots.len() as u64) as usize].lock().unwrap() = Some(ev);
+    }
+
+    /// Record an instant event (dur 0) at now.
+    pub fn push_instant<F: FnOnce() -> String>(&self, name: &'static str, session: u64,
+                                               detail: F) {
+        if self.slots.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        self.push_span(name, session, now, now, detail);
+    }
+
+    /// RAII span: starts timing now, records on drop.  Inert (no clock
+    /// read, no allocation) when the buffer is disabled.
+    pub fn span(self: &Arc<Self>, name: &'static str, session: u64) -> SpanGuard {
+        if self.slots.is_empty() {
+            return SpanGuard(None);
+        }
+        SpanGuard(Some(SpanInner {
+            buf: self.clone(),
+            name,
+            session,
+            detail: String::new(),
+            start: Instant::now(),
+        }))
+    }
+
+    /// Snapshot the ring's events, oldest first (sequence order).  With
+    /// `clear` the drained slots are emptied; either way live writers
+    /// keep writing throughout — the drain locks one slot at a time.
+    pub fn drain(&self, clear: bool) -> Vec<TraceEvent> {
+        let mut out: Vec<TraceEvent> = Vec::with_capacity(self.slots.len());
+        for slot in &self.slots {
+            let mut s = slot.lock().unwrap();
+            if clear {
+                if let Some(ev) = s.take() {
+                    out.push(ev);
+                }
+            } else if let Some(ev) = s.as_ref() {
+                out.push(ev.clone());
+            }
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+struct SpanInner {
+    buf: Arc<TraceBuffer>,
+    name: &'static str,
+    session: u64,
+    detail: String,
+    start: Instant,
+}
+
+/// RAII guard from [`TraceBuffer::span`]: drop records the span.
+pub struct SpanGuard(Option<SpanInner>);
+
+impl SpanGuard {
+    /// Attach detail text; the closure only runs when tracing is live.
+    pub fn note<F: FnOnce() -> String>(&mut self, f: F) {
+        if let Some(i) = &mut self.0 {
+            i.detail = f();
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(i) = self.0.take() {
+            let d = i.detail;
+            i.buf.push_span(i.name, i.session, i.start, Instant::now(), move || d);
+        }
+    }
+}
+
+/// Render drained events as Chrome trace-event JSON (the `"X"` complete
+/// phase), wrapped in the object form Perfetto and `chrome://tracing`
+/// both load: `{"traceEvents": [...], "displayTimeUnit": "ms"}`.
+pub fn export_chrome(events: &[TraceEvent]) -> Json {
+    let evs: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.name.to_string())),
+                ("cat", Json::Str("serve".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(e.ts_us as f64)),
+                ("dur", Json::Num(e.dur_us as f64)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.tid as f64)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("seq", Json::Num(e.seq as f64)),
+                        ("session", Json::Num(e.session as f64)),
+                        ("detail", Json::Str(e.detail.clone())),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+/// Compact per-request summary: where one request's wall-clock went.
+/// Filled by the scheduler, delivered on `GenEvent::Done`, and rendered
+/// as the `"timing"` object on terminal streaming lines and one-shot
+/// replies.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct RequestTiming {
+    /// Enqueue → admission (scheduler slot wait).
+    pub queue_us: u64,
+    /// Admission prefill (prompt + image prefix; spec: target + draft).
+    pub prefill_us: u64,
+    /// Total decode wall time across ticks (fused walks charge each
+    /// participant the full walk — see the scheduler's accounting note).
+    pub decode_us: u64,
+    /// Speculative draft phase total (0 for plain sessions).
+    pub draft_us: u64,
+    /// Speculative verify phase total (0 for plain sessions).
+    pub verify_us: u64,
+    /// Tokens emitted.
+    pub tokens: u64,
+}
+
+impl RequestTiming {
+    /// Time to first token: the first token is emitted at admission,
+    /// right after prefill.
+    pub fn ttft_us(&self) -> u64 {
+        self.queue_us + self.prefill_us
+    }
+
+    /// Decode-side throughput (prefill included: the client-observable
+    /// rate from admission to finish).
+    pub fn tokens_per_s(&self) -> f64 {
+        self.tokens as f64 / ((self.prefill_us + self.decode_us) as f64 / 1e6).max(1e-9)
+    }
+
+    /// The wire `"timing"` object.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("queue_us", Json::Num(self.queue_us as f64)),
+            ("prefill_us", Json::Num(self.prefill_us as f64)),
+            ("decode_us", Json::Num(self.decode_us as f64)),
+            ("draft_us", Json::Num(self.draft_us as f64)),
+            ("verify_us", Json::Num(self.verify_us as f64)),
+            ("ttft_us", Json::Num(self.ttft_us() as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("tokens_per_s", Json::Num(self.tokens_per_s())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn push_n(buf: &TraceBuffer, n: u64, session_base: u64) {
+        let t = Instant::now();
+        for i in 0..n {
+            buf.push_span("ev", session_base + i, t, t + Duration::from_micros(i), || {
+                format!("d{}", session_base + i)
+            });
+        }
+    }
+
+    #[test]
+    fn wraparound_keeps_newest_events_in_sequence_order() {
+        let buf = TraceBuffer::new(8);
+        push_n(&buf, 20, 100);
+        let evs = buf.drain(false);
+        assert_eq!(evs.len(), 8, "ring holds exactly its capacity");
+        // newest 8 of 20: seqs 12..20, ascending
+        let seqs: Vec<u64> = evs.iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, (12..20).collect::<Vec<u64>>());
+        // payloads moved with their seqs (session encodes push order)
+        for e in &evs {
+            assert_eq!(e.session, 100 + e.seq);
+            assert_eq!(e.detail, format!("d{}", e.session));
+        }
+        assert_eq!(buf.recorded(), 20);
+    }
+
+    #[test]
+    fn concurrent_writers_do_not_tear_events() {
+        let buf = Arc::new(TraceBuffer::new(64));
+        let mut hs = Vec::new();
+        for w in 0..4u64 {
+            let b = buf.clone();
+            hs.push(std::thread::spawn(move || {
+                push_n(&b, 500, (w + 1) * 10_000);
+            }));
+        }
+        for h in hs {
+            h.join().unwrap();
+        }
+        let evs = buf.drain(false);
+        assert_eq!(evs.len(), 64);
+        let mut last_seq = None;
+        for e in &evs {
+            // internal consistency: session and detail were written by
+            // the same push (a torn slot would mix writers)
+            assert_eq!(e.detail, format!("d{}", e.session), "torn event: {e:?}");
+            if let Some(prev) = last_seq {
+                assert!(e.seq > prev, "drain must be sequence-ordered");
+            }
+            last_seq = Some(e.seq);
+        }
+        assert_eq!(buf.recorded(), 2000);
+    }
+
+    #[test]
+    fn drain_with_clear_races_safely_with_live_writers() {
+        let buf = Arc::new(TraceBuffer::new(32));
+        let writer = {
+            let b = buf.clone();
+            std::thread::spawn(move || push_n(&b, 4000, 0))
+        };
+        let mut drained = 0usize;
+        while buf.recorded() < 4000 {
+            let evs = buf.drain(true);
+            for e in &evs {
+                assert_eq!(e.detail, format!("d{}", e.session));
+            }
+            drained += evs.len();
+        }
+        writer.join().unwrap();
+        drained += buf.drain(true).len();
+        assert!(drained <= 4000, "clear must never duplicate an event");
+        assert!(drained >= 32, "the final ring contents are always collectable");
+        assert!(buf.drain(false).is_empty(), "cleared ring is empty");
+    }
+
+    #[test]
+    fn disabled_buffer_is_inert_on_the_hot_path() {
+        let buf = Arc::new(TraceBuffer::new(0));
+        assert!(!buf.enabled());
+        assert_eq!(buf.capacity(), 0);
+        let mut detail_ran = false;
+        buf.push_span("x", 1, Instant::now(), Instant::now(), || {
+            detail_ran = true;
+            String::new()
+        });
+        assert!(!detail_ran, "disabled tracing must not format details");
+        {
+            let mut g = buf.span("y", 2);
+            let mut note_ran = false;
+            g.note(|| {
+                note_ran = true;
+                String::new()
+            });
+            assert!(!note_ran, "inert guards never evaluate notes");
+        }
+        assert_eq!(buf.recorded(), 0);
+        assert!(buf.drain(true).is_empty());
+    }
+
+    #[test]
+    fn span_guard_records_on_drop_with_note() {
+        let buf = Arc::new(TraceBuffer::new(4));
+        {
+            let mut g = buf.span("phase", 7);
+            g.note(|| "tiny/dense".to_string());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let evs = buf.drain(false);
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].name, "phase");
+        assert_eq!(evs[0].session, 7);
+        assert_eq!(evs[0].detail, "tiny/dense");
+        assert!(evs[0].dur_us >= 1000, "guard measured the span: {:?}", evs[0]);
+    }
+
+    #[test]
+    fn chrome_export_is_loadable_trace_event_json() {
+        let buf = TraceBuffer::new(8);
+        push_n(&buf, 3, 0);
+        let doc = export_chrome(&buf.drain(false));
+        // round-trip through the serializer: the wire form must parse
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        assert_eq!(parsed.str_of("displayTimeUnit"), "ms");
+        let evs = parsed.get("traceEvents").and_then(|x| x.as_arr()).unwrap();
+        assert_eq!(evs.len(), 3);
+        for e in evs {
+            assert_eq!(e.str_of("ph"), "X");
+            assert_eq!(e.str_of("cat"), "serve");
+            assert!(e.get("ts").and_then(|x| x.as_f64()).is_some());
+            assert!(e.get("dur").and_then(|x| x.as_f64()).is_some());
+            assert!(e.path("args.session").is_some());
+        }
+    }
+
+    #[test]
+    fn request_timing_summary_math_and_json() {
+        let t = RequestTiming {
+            queue_us: 300,
+            prefill_us: 700,
+            decode_us: 9_000,
+            draft_us: 2_000,
+            verify_us: 3_000,
+            tokens: 10,
+        };
+        assert_eq!(t.ttft_us(), 1000);
+        let tps = t.tokens_per_s();
+        assert!((tps - 10.0 / 0.0097).abs() < 1e-6, "{tps}");
+        let j = t.to_json();
+        assert_eq!(j.get("ttft_us").and_then(|x| x.as_f64()), Some(1000.0));
+        assert_eq!(j.get("tokens").and_then(|x| x.as_f64()), Some(10.0));
+        assert!(j.get("tokens_per_s").and_then(|x| x.as_f64()).unwrap() > 0.0);
+    }
+}

@@ -556,7 +556,7 @@ fn no_control_server_refuses_control_ops_but_generates() {
     let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
     let mut reader = BufReader::new(conn.try_clone().unwrap());
     for op in [r#"{"op":"swap","variant":"tiny/dense"}"#, r#"{"op":"list"}"#,
-               r#"{"op":"health"}"#] {
+               r#"{"op":"health"}"#, r#"{"op":"metrics"}"#, r#"{"op":"trace"}"#] {
         let e = send_recv(&mut conn, &mut reader, op);
         assert!(e.get("error").is_some(), "control op must be refused: {e}");
         assert_eq!(e.str_of("field"), "op");
@@ -630,11 +630,25 @@ fn spec_artifacts(tag: &str) -> (std::path::PathBuf, String) {
     (dir, art.variant_id.clone())
 }
 
-/// Pull one counter out of the runtime's rendered metrics text.
+/// Sum one counter family out of the runtime's rendered metrics text —
+/// counters are labeled per variant/reason, so `name` matches both the
+/// bare key and every `name{...}` child.
 fn metric_u64(text: &str, name: &str) -> u64 {
-    text.lines()
-        .find_map(|l| l.strip_prefix(name).and_then(|rest| rest.trim().parse().ok()))
-        .unwrap_or_else(|| panic!("metric `{name}` missing from:\n{text}"))
+    let mut found = false;
+    let total = text
+        .lines()
+        .filter_map(|l| {
+            let (key, val) = l.split_once(' ')?;
+            if key == name || key.strip_prefix(name).is_some_and(|r| r.starts_with('{')) {
+                found = true;
+                val.trim().parse().ok()
+            } else {
+                None
+            }
+        })
+        .sum();
+    assert!(found, "metric `{name}` missing from:\n{text}");
+    total
 }
 
 /// The acceptance criterion: a ratio-0.3 draft speculating k=4 for the
@@ -716,6 +730,107 @@ fn speculative_pairs_match_pure_target_incl_hot_swap_and_eviction() {
     let accepted = metric_u64(&text, "serve_spec_accepted");
     assert!(proposed > 0, "the speculative path never ran");
     assert!(accepted <= proposed);
+}
+
+// ---------------------------------------------------------------------------
+// Observability: timing summaries, labeled metrics, trace export
+// ---------------------------------------------------------------------------
+
+/// The observability acceptance criterion: a streamed generate returns a
+/// `"timing"` breakdown on its terminal line, and `{"op":"trace"}`
+/// afterwards yields Perfetto-loadable trace-event JSON covering that
+/// request accept → finish (queue, prefill, per-tick steps, spec
+/// draft/verify), while `{"op":"metrics"}` exposes the labeled families
+/// in both text and Prometheus formats.
+#[test]
+fn timing_metrics_and_trace_ops_cover_a_request_end_to_end() {
+    use std::io::{BufRead, BufReader, Write};
+    let (dir, draft) = spec_artifacts("obs_e2e");
+    let ids = vec!["tiny/dense".to_string(), draft.clone()];
+    let rt = Arc::new(ServeRuntime::start(dir, &ids, ServeConfig::default()).unwrap());
+    let mut server = dobi::server::Server::builder().runtime(rt.clone()).start().unwrap();
+    let mut conn = std::net::TcpStream::connect(server.addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+
+    // streamed SPECULATIVE generate: the terminal line carries the
+    // per-request wall-clock breakdown including the spec phases
+    let req = format!(
+        "{{\"variant\":\"tiny/dense\",\"prompt\":\"The \",\"max_tokens\":8,\
+         \"temperature\":0,\"stream\":true,\"spec\":{{\"draft\":\"{draft}\",\"k\":4}}}}\n");
+    conn.write_all(req.as_bytes()).unwrap();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = dobi::json::Json::parse(&line).unwrap();
+        assert!(j.get("error").is_none(), "stream errored: {line}");
+        if j.get("done").and_then(|x| x.as_bool()).unwrap_or(false) {
+            let num =
+                |f: &str| j.path(&format!("timing.{f}")).and_then(|x| x.as_f64())
+                    .unwrap_or_else(|| panic!("timing.{f} missing from {line}"));
+            assert_eq!(num("tokens") as usize, 8);
+            assert!(num("prefill_us") > 0.0, "prefill must be charged: {line}");
+            assert!(num("decode_us") > 0.0, "decode must be charged: {line}");
+            assert!(num("draft_us") > 0.0, "spec draft phase must be charged: {line}");
+            assert!(num("verify_us") > 0.0, "spec verify phase must be charged: {line}");
+            assert_eq!(num("ttft_us"), num("queue_us") + num("prefill_us"));
+            assert!(num("tokens_per_s") > 0.0);
+            break;
+        }
+    }
+    // one-shot replies carry the same object (plain decode: a `step` span)
+    let g = send_recv(&mut conn, &mut reader,
+                      r#"{"variant":"tiny/dense","prompt":"The ","max_tokens":4}"#);
+    assert!(g.path("timing.prefill_us").and_then(|x| x.as_f64()).unwrap() > 0.0,
+            "one-shot reply lost the timing object: {g}");
+
+    // labeled metric families, plain text
+    let m = send_recv(&mut conn, &mut reader, r#"{"op":"metrics"}"#);
+    assert_eq!(m.str_of("format"), "text");
+    let text = m.str_of("text").to_string();
+    assert!(text.contains(r#"serve_sessions_opened{variant="tiny/dense"}"#), "{text}");
+    assert!(text.contains(r#"serve_prefill_seconds{variant="tiny/dense"}"#), "{text}");
+    assert!(text.contains(r#"reason="max_tokens""#), "{text}");
+    assert_eq!(metric_u64(&text, "serve_tokens_emitted"), 12);
+    assert!(metric_u64(&text, "serve_spec_proposed") > 0);
+
+    // Prometheus exposition
+    let m = send_recv(&mut conn, &mut reader, r#"{"op":"metrics","format":"prom"}"#);
+    assert_eq!(m.str_of("format"), "prom");
+    let prom = m.str_of("text").to_string();
+    assert!(prom.contains("# TYPE serve_sessions_opened counter"), "{prom}");
+    assert!(prom.contains("# TYPE serve_active_sessions gauge"), "{prom}");
+    assert!(prom.contains("# TYPE serve_prefill_seconds summary"), "{prom}");
+    assert!(prom.contains(r#"quantile="0.5""#), "{prom}");
+    assert!(prom.contains("serve_prefill_seconds_count"), "{prom}");
+
+    // the trace op: Perfetto-loadable trace-event JSON covering the whole
+    // request lifecycle (every asserted span was recorded BEFORE the
+    // terminal reply lines above were written, so no scheduler race)
+    let t = send_recv(&mut conn, &mut reader, r#"{"op":"trace","clear":true}"#);
+    assert_eq!(t.get("enabled").and_then(|x| x.as_bool()), Some(true));
+    assert_eq!(t.path("trace.displayTimeUnit").and_then(|x| x.as_str()), Some("ms"));
+    let evs = t.path("trace.traceEvents").and_then(|x| x.as_arr()).unwrap();
+    assert!(!evs.is_empty());
+    let names: Vec<&str> = evs.iter().map(|e| e.str_of("name")).collect();
+    for want in ["accept", "parse", "queue_wait", "admission", "prefill", "step",
+                 "spec_draft", "spec_verify", "request"] {
+        assert!(names.contains(&want), "missing `{want}` span in {names:?}");
+    }
+    for e in evs {
+        assert_eq!(e.str_of("ph"), "X", "complete-phase events only: {e}");
+        assert!(e.get("ts").and_then(|x| x.as_f64()).is_some());
+        assert!(e.get("dur").and_then(|x| x.as_f64()).is_some());
+        assert!(e.get("tid").and_then(|x| x.as_f64()).is_some());
+    }
+    // clear=true emptied the ring: a fresh drain holds no request spans,
+    // only the housekeeping of the ops themselves
+    let t = send_recv(&mut conn, &mut reader, r#"{"op":"trace"}"#);
+    let evs = t.path("trace.traceEvents").and_then(|x| x.as_arr()).unwrap();
+    assert!(evs.iter().all(|e| e.str_of("name") != "queue_wait"),
+            "cleared request spans resurfaced");
+    drop(conn);
+    server.shutdown();
+    rt.shutdown();
 }
 
 /// Registry × eviction interaction: a draining old-generation release

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Smoke-drive a running `dobi serve` over the TCP line protocol.
 
-Usage: serve_smoke.py PORT VARIANT [ARTIFACTS_DIR] [SPEC_DRAFT]
+Usage: serve_smoke.py PORT VARIANT [ARTIFACTS_DIR] [SPEC_DRAFT] [NO_CONTROL_PORT]
 
 Sends one non-streaming and one streaming request (both greedy, so the
 outputs must agree), asserts token deltas arrive one line each, and that
@@ -21,6 +21,17 @@ serving.  With SPEC_DRAFT (a compressed variant id the server also
 serves), drives a speculative streaming session — the draft proposes,
 VARIANT verifies — and asserts the output is byte-identical to the pure
 VARIANT reference, plus the greedy-only and draft-resolution refusals.
+
+Observability: every generate reply must carry a `"timing"` breakdown
+(queue/prefill/decode µs, ttft, tok/s), and after the traffic above the
+script pulls `{"op":"metrics"}` (labeled `serve_*{variant=..}` families,
+text and Prometheus formats) and `{"op":"trace"}` (Chrome trace-event
+JSON) and asserts the recorded span tree covers the request lifecycle —
+accept/parse/queue_wait/admission/prefill/step/request, plus
+spec_draft/spec_verify when SPEC_DRAFT was exercised.  With
+NO_CONTROL_PORT (a second server started `--no-control`), asserts the
+metrics/trace ops are refused there while plain generates still serve.
+
 Exits non-zero on any protocol violation — the CI `serve-smoke` job's
 pass/fail signal.
 """
@@ -106,7 +117,14 @@ def main():
     assert "error" not in reply, f"one-shot errored: {reply}"
     text = reply["text"]
     assert reply["tokens_per_s"] > 0, reply
-    print(f"[smoke] one-shot ok: {len(text)}-char text at {reply['tokens_per_s']:.0f} tok/s")
+    timing = reply.get("timing")
+    assert timing is not None, f"one-shot reply missing timing: {reply}"
+    assert timing["tokens"] == 12, timing
+    assert timing["prefill_us"] > 0 and timing["decode_us"] > 0, timing
+    assert timing["ttft_us"] == timing["queue_us"] + timing["prefill_us"], timing
+    assert timing["tokens_per_s"] > 0, timing
+    print(f"[smoke] one-shot ok: {len(text)}-char text at {reply['tokens_per_s']:.0f} tok/s, "
+          f"ttft {timing['ttft_us']}us")
 
     # streaming: per-token delta lines, terminal line matches the one-shot
     request({**base, "stream": True})
@@ -121,6 +139,9 @@ def main():
                 f"greedy stream diverged from one-shot: {msg['text']!r} != {text!r}")
             assert msg["n_tokens"] == 12, msg
             assert msg["finish"] == "max_tokens", msg
+            t = msg.get("timing")
+            assert t is not None and t["tokens"] == 12 and t["prefill_us"] > 0, (
+                f"streamed terminal line missing/short timing: {msg}")
             break
         assert msg["index"] == n_deltas, f"out-of-order delta: {msg}"
         assert "delta" in msg and "token" in msg, msg
@@ -229,6 +250,72 @@ def main():
     assert generation >= 1, mine
     print(f"[smoke] control plane ok: generation {generation}, "
           f"sha {str(mine[0].get('store_sha256'))[:12]}")
+
+    # --- observability: labeled metrics + the request-lifecycle trace ---
+    request({"op": "metrics"})
+    met = json.loads(rfile.readline())
+    assert met.get("op") == "metrics" and met.get("format") == "text", met
+    mtext = met["text"]
+    for needle in (f'serve_sessions_opened{{variant="{variant}"}}',
+                   f'serve_prefill_seconds{{variant="{variant}"}}',
+                   f'serve_tokens_emitted{{variant="{variant}"}}',
+                   'reason="max_tokens"'):
+        assert needle in mtext, f"metrics text missing {needle!r}:\n{mtext}"
+    opened = sum(int(line.split()[-1]) for line in mtext.splitlines()
+                 if line.startswith("serve_sessions_opened{"))
+    assert opened >= 6, f"expected >= 6 sessions opened by now, saw {opened}"
+    request({"op": "metrics", "format": "prom"})
+    prom = json.loads(rfile.readline())
+    assert prom.get("format") == "prom", prom
+    ptext = prom["text"]
+    for needle in ("# TYPE serve_sessions_opened counter",
+                   "# TYPE serve_active_sessions gauge",
+                   "# TYPE serve_prefill_seconds summary",
+                   'quantile="0.5"'):
+        assert needle in ptext, f"prom exposition missing {needle!r}:\n{ptext}"
+    print(f"[smoke] metrics ok: {opened} sessions opened across labeled families")
+
+    request({"op": "trace"})
+    tr = json.loads(rfile.readline())
+    assert tr.get("op") == "trace" and tr.get("enabled") is True, tr
+    assert tr["trace"]["displayTimeUnit"] == "ms", tr["trace"]
+    events = tr["trace"]["traceEvents"]
+    assert events, "trace ring drained empty after traffic"
+    names = {e["name"] for e in events}
+    want_spans = {"accept", "parse", "queue_wait", "admission",
+                  "prefill", "request"}
+    if spec_draft is not None:
+        want_spans |= {"spec_draft", "spec_verify"}
+    missing = want_spans - names
+    assert not missing, (
+        f"trace span tree incomplete, missing {missing}: {sorted(names)}")
+    assert any(n in names for n in ("step", "fused_step")), (
+        f"no decode step spans in trace: {sorted(names)}")
+    for e in events:
+        assert e["ph"] == "X" and isinstance(e["ts"], (int, float)), e
+        assert isinstance(e["dur"], (int, float)) and "tid" in e, e
+    n_request_spans = sum(1 for e in events if e["name"] == "request")
+    assert n_request_spans > 0, "no completed request spans in trace"
+    print(f"[smoke] trace ok: {len(events)} events, {n_request_spans} request "
+          f"spans, phases {sorted(names)}")
+
+    # --- `--no-control` twin: metrics/trace refused, generate still serves ---
+    nc_port = int(sys.argv[5]) if len(sys.argv) > 5 else None
+    if nc_port is not None:
+        nc = connect(nc_port)
+        ncf = nc.makefile("r", encoding="utf-8")
+        for op in ("metrics", "trace"):
+            nc.sendall((json.dumps({"op": op}) + "\n").encode())
+            err = json.loads(ncf.readline())
+            assert "error" in err, f"--no-control must refuse {op!r}: {err}"
+        nc.sendall((json.dumps(base) + "\n").encode())
+        still = json.loads(ncf.readline())
+        assert "error" not in still, f"--no-control generate failed: {still}"
+        assert still["text"] == text, (
+            "no-control twin decoded differently on the same store: "
+            f"{still['text']!r} != {text!r}")
+        nc.close()
+        print("[smoke] --no-control ok: metrics/trace refused, generate serves")
 
     if artifacts is None:
         print("[smoke] no artifacts dir given: skipping hot-swap sections")
