@@ -1,0 +1,408 @@
+//! Comment/string-aware Rust lexer for the `dobi lint` pass.
+//!
+//! Hand-rolled with no external deps (the same vendored-offline discipline
+//! as `storage/hash.rs`): just enough of the Rust lexical grammar that rules
+//! can ask "which identifiers / string literals appear in *code*" without
+//! being fooled by comment text, string contents, raw strings
+//! (`r#"…"#`), byte strings, nested block comments, or the `'a`
+//! lifetime vs `'a'` char-literal ambiguity.
+//!
+//! Fidelity target: token *kinds* and start lines. Numeric literals are not
+//! decoded, multi-char operators surface as single `Punct` chars, and string
+//! contents keep their escape sequences unresolved — none of the rules need
+//! more.
+
+/// One lexed token kind.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tok {
+    /// Identifier or keyword.
+    Ident(String),
+    /// Lifetime such as `'a` or `'static` (text without the quote).
+    Lifetime(String),
+    /// String literal content (cooked, raw, byte, or raw-byte), without
+    /// delimiters; escape sequences are left unresolved.
+    Str(String),
+    /// Char or byte-char literal (`'a'`, `b'\n'`); content is not kept.
+    CharLit,
+    /// Numeric literal; value is not kept.
+    Num,
+    /// Line comment text (without the leading `//`).
+    LineComment(String),
+    /// Block comment text (without delimiters), nesting already balanced.
+    BlockComment(String),
+    /// Any other single character.
+    Punct(char),
+}
+
+/// A token plus the 1-based line its first character sits on.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Token {
+    pub kind: Tok,
+    pub line: u32,
+}
+
+/// Lex `src` into a token stream. Never fails: unterminated constructs
+/// extend to end-of-file, unknown bytes become `Punct`.
+pub fn lex(src: &str) -> Vec<Token> {
+    let mut lx = Lexer { s: src.as_bytes(), i: 0, line: 1, out: Vec::new() };
+    lx.run();
+    lx.out
+}
+
+fn is_ident_start(c: u8) -> bool {
+    c.is_ascii_alphabetic() || c == b'_'
+}
+
+fn is_ident_cont(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+struct Lexer<'a> {
+    s: &'a [u8],
+    i: usize,
+    line: u32,
+    out: Vec<Token>,
+}
+
+impl Lexer<'_> {
+    fn peek(&self, k: usize) -> u8 {
+        self.s.get(self.i + k).copied().unwrap_or(0)
+    }
+
+    fn bump(&mut self) {
+        if self.peek(0) == b'\n' {
+            self.line += 1;
+        }
+        self.i += 1;
+    }
+
+    fn slice(&self, from: usize, to: usize) -> String {
+        String::from_utf8_lossy(&self.s[from..to]).into_owned()
+    }
+
+    fn run(&mut self) {
+        while self.i < self.s.len() {
+            let c = self.peek(0);
+            match c {
+                b' ' | b'\t' | b'\r' | b'\n' => self.bump(),
+                b'/' if self.peek(1) == b'/' => self.line_comment(),
+                b'/' if self.peek(1) == b'*' => self.block_comment(),
+                b'"' => self.cooked_str(),
+                b'\'' => self.quote(),
+                b'0'..=b'9' => self.number(),
+                c if is_ident_start(c) => self.ident_like(),
+                _ => {
+                    let line = self.line;
+                    self.bump();
+                    self.out.push(Token { kind: Tok::Punct(c as char), line });
+                }
+            }
+        }
+    }
+
+    fn line_comment(&mut self) {
+        let line = self.line;
+        self.i += 2;
+        let start = self.i;
+        while self.i < self.s.len() && self.peek(0) != b'\n' {
+            self.i += 1;
+        }
+        let text = self.slice(start, self.i);
+        self.out.push(Token { kind: Tok::LineComment(text), line });
+    }
+
+    /// Block comment with Rust's nesting: `/* outer /* inner */ still out */`.
+    fn block_comment(&mut self) {
+        let line = self.line;
+        self.bump();
+        self.bump();
+        let start = self.i;
+        let mut depth = 1usize;
+        let mut end = self.s.len();
+        while self.i < self.s.len() {
+            if self.peek(0) == b'/' && self.peek(1) == b'*' {
+                depth += 1;
+                self.bump();
+                self.bump();
+            } else if self.peek(0) == b'*' && self.peek(1) == b'/' {
+                depth -= 1;
+                if depth == 0 {
+                    end = self.i;
+                    self.bump();
+                    self.bump();
+                    break;
+                }
+                self.bump();
+                self.bump();
+            } else {
+                self.bump();
+            }
+        }
+        let text = self.slice(start, end.min(self.i).max(start));
+        self.out.push(Token { kind: Tok::BlockComment(text), line });
+    }
+
+    /// `"…"` with `\"` / `\\` escapes. Also entered (past the `b`) for `b"…"`.
+    fn cooked_str(&mut self) {
+        let line = self.line;
+        self.bump(); // opening quote
+        let start = self.i;
+        while self.i < self.s.len() {
+            match self.peek(0) {
+                b'\\' => {
+                    self.bump();
+                    self.bump();
+                }
+                b'"' => break,
+                _ => self.bump(),
+            }
+        }
+        let text = self.slice(start, self.i);
+        self.bump(); // closing quote
+        self.out.push(Token { kind: Tok::Str(text), line });
+    }
+
+    /// `'` starts either a lifetime (`'a`, `'static`, `'_`) or a char
+    /// literal (`'a'`, `'\n'`, `'('`). Disambiguation: an identifier run
+    /// directly followed by a closing `'` is a char literal, otherwise a
+    /// lifetime; a leading backslash or non-identifier char is always a
+    /// char literal.
+    fn quote(&mut self) {
+        let line = self.line;
+        self.bump(); // the quote
+        if self.peek(0) == b'\\' {
+            self.bump(); // backslash
+            if self.peek(0) == b'u' {
+                while self.i < self.s.len() && self.peek(0) != b'\'' {
+                    self.bump();
+                }
+            } else {
+                self.bump(); // the escaped char
+            }
+            self.bump(); // closing quote
+            self.out.push(Token { kind: Tok::CharLit, line });
+            return;
+        }
+        if is_ident_start(self.peek(0)) {
+            let start = self.i;
+            while is_ident_cont(self.peek(0)) {
+                self.bump();
+            }
+            if self.peek(0) == b'\'' {
+                self.bump();
+                self.out.push(Token { kind: Tok::CharLit, line });
+            } else {
+                let text = self.slice(start, self.i);
+                self.out.push(Token { kind: Tok::Lifetime(text), line });
+            }
+            return;
+        }
+        // Punctuation/digit char literal: consume to the closing quote.
+        while self.i < self.s.len() && self.peek(0) != b'\'' {
+            self.bump();
+        }
+        self.bump();
+        self.out.push(Token { kind: Tok::CharLit, line });
+    }
+
+    fn number(&mut self) {
+        let line = self.line;
+        while is_ident_cont(self.peek(0)) {
+            self.i += 1;
+        }
+        // Fractional part — but not `..` range syntax (`0..n`).
+        if self.peek(0) == b'.' && self.peek(1).is_ascii_digit() {
+            self.i += 1;
+            while is_ident_cont(self.peek(0)) {
+                self.i += 1;
+            }
+        }
+        self.out.push(Token { kind: Tok::Num, line });
+    }
+
+    /// Identifier, or one of the string prefixes `r" r#" b" b' br" br#"`.
+    fn ident_like(&mut self) {
+        let line = self.line;
+        if self.peek(0) == b'r' && (self.peek(1) == b'"' || self.peek(1) == b'#') {
+            if self.try_raw_string(1, line) {
+                return;
+            }
+        }
+        if self.peek(0) == b'b' {
+            match self.peek(1) {
+                b'"' => {
+                    self.bump(); // the b
+                    self.cooked_str();
+                    return;
+                }
+                b'\'' => {
+                    self.bump();
+                    self.quote();
+                    return;
+                }
+                b'r' if self.peek(2) == b'"' || self.peek(2) == b'#' => {
+                    if self.try_raw_string(2, line) {
+                        return;
+                    }
+                }
+                _ => {}
+            }
+        }
+        let start = self.i;
+        while is_ident_cont(self.peek(0)) {
+            self.bump();
+        }
+        let text = self.slice(start, self.i);
+        self.out.push(Token { kind: Tok::Ident(text), line });
+    }
+
+    /// Attempt `r##"…"##` (or `br…`) with `prefix` chars before the hashes.
+    /// Returns false without consuming anything for raw *identifiers*
+    /// (`r#match`), which then lex as ident-ish tokens.
+    fn try_raw_string(&mut self, prefix: usize, line: u32) -> bool {
+        let mut j = self.i + prefix;
+        let mut hashes = 0usize;
+        while self.s.get(j).copied() == Some(b'#') {
+            hashes += 1;
+            j += 1;
+        }
+        if self.s.get(j).copied() != Some(b'"') {
+            return false; // raw identifier or lone `r#`
+        }
+        for _ in 0..prefix + hashes + 1 {
+            self.bump();
+        }
+        let start = self.i;
+        loop {
+            if self.i >= self.s.len() {
+                self.out.push(Token { kind: Tok::Str(self.slice(start, self.i)), line });
+                return true;
+            }
+            if self.peek(0) == b'"' {
+                let mut k = 1usize;
+                while k <= hashes && self.peek(k) == b'#' {
+                    k += 1;
+                }
+                if k == hashes + 1 {
+                    let text = self.slice(start, self.i);
+                    for _ in 0..hashes + 1 {
+                        self.bump();
+                    }
+                    self.out.push(Token { kind: Tok::Str(text), line });
+                    return true;
+                }
+            }
+            self.bump();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).into_iter().map(|t| t.kind).collect()
+    }
+
+    fn strs(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                Tok::Str(s) => Some(s),
+                _ => None,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn idents_and_punct() {
+        assert_eq!(
+            kinds("fn f(x: u8) {}"),
+            vec![
+                Tok::Ident("fn".into()),
+                Tok::Ident("f".into()),
+                Tok::Punct('('),
+                Tok::Ident("x".into()),
+                Tok::Punct(':'),
+                Tok::Ident("u8".into()),
+                Tok::Punct(')'),
+                Tok::Punct('{'),
+                Tok::Punct('}'),
+            ]
+        );
+    }
+
+    #[test]
+    fn raw_strings_with_hashes() {
+        assert_eq!(strs(r####"let s = r#"inner "quoted" text"#;"####),
+                   vec![r#"inner "quoted" text"#.to_string()]);
+        // Hash-count must match exactly: `"#` inside a `##` string is content.
+        assert_eq!(strs("r##\"has \"# inside\"##"), vec!["has \"# inside".to_string()]);
+        assert_eq!(strs("r\"plain raw\""), vec!["plain raw".to_string()]);
+    }
+
+    #[test]
+    fn byte_strings_and_byte_chars() {
+        assert_eq!(strs(r##"let b = b"bytes"; let r = br#"raw bytes"#;"##),
+                   vec!["bytes".to_string(), "raw bytes".to_string()]);
+        let k = kinds(r"let c = b'\n';");
+        assert!(k.contains(&Tok::CharLit), "{k:?}");
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let k = kinds("a /* outer /* inner */ still comment */ b");
+        assert_eq!(
+            k,
+            vec![
+                Tok::Ident("a".into()),
+                Tok::BlockComment(" outer /* inner */ still comment ".into()),
+                Tok::Ident("b".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn lifetime_vs_char_literal() {
+        // `'a` in a generic position is a lifetime; `'a'` is a char.
+        let k = kinds("fn f<'a>(x: &'a str) -> char { 'a' }");
+        assert!(k.contains(&Tok::Lifetime("a".into())), "{k:?}");
+        assert_eq!(k.iter().filter(|t| **t == Tok::CharLit).count(), 1);
+        assert!(kinds("&'static str").contains(&Tok::Lifetime("static".into())));
+        // Escaped quote and unicode escapes stay single char literals.
+        assert_eq!(kinds(r"'\''"), vec![Tok::CharLit]);
+        assert_eq!(kinds(r"'\u{1F600}'"), vec![Tok::CharLit]);
+    }
+
+    #[test]
+    fn strings_hide_code_and_comments_hide_strings() {
+        // A `.unwrap()` spelled inside a string must not surface as idents.
+        let k = kinds(r#"let msg = "call .unwrap() here";"#);
+        assert!(!k.contains(&Tok::Ident("unwrap".into())), "{k:?}");
+        // A quote inside a comment must not open a string.
+        let k = kinds("// it's \"quoted\"\nnext");
+        assert_eq!(k.last(), Some(&Tok::Ident("next".into())));
+    }
+
+    #[test]
+    fn line_numbers() {
+        let toks = lex("a\nb\n\nc");
+        let lines: Vec<(String, u32)> = toks
+            .into_iter()
+            .filter_map(|t| match t.kind {
+                Tok::Ident(s) => Some((s, t.line)),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(lines, vec![("a".into(), 1), ("b".into(), 2), ("c".into(), 4)]);
+    }
+
+    #[test]
+    fn numbers_do_not_swallow_ranges() {
+        let k = kinds("for i in 0..n {}");
+        assert!(k.contains(&Tok::Ident("n".into())), "{k:?}");
+        assert_eq!(k.iter().filter(|t| matches!(t, Tok::Num)).count(), 1);
+        assert_eq!(kinds("1.5e-3"), vec![Tok::Num, Tok::Punct('-'), Tok::Num]);
+    }
+}

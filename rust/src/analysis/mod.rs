@@ -1,0 +1,311 @@
+//! `dobi lint` — self-hosted static analysis for the serve stack's
+//! cross-cutting invariants.
+//!
+//! The serving layers (PRs 6-8) are tied together by conventions that no
+//! compiler checks: metric family names must agree between code, the README
+//! family table, and the smoke test; wire-protocol ops/fields must match the
+//! spec table; trace phases must match the exporter's known list; the serve
+//! hot path must not panic; nested locks must follow the declared order.
+//! This module makes those conventions machine-checked: a comment/string-
+//! aware lexer ([`lexer`]) feeds a small rule engine ([`rules`]) whose
+//! findings gate CI.
+//!
+//! Findings are suppressed inline with
+//! `// dobi-lint: allow(rule-name, reason)` on the offending line or the
+//! line above. A suppression without a reason is itself a deny-level
+//! finding — the reason is the reviewable artifact.
+//!
+//! Severities: `deny` findings fail `dobi lint` (exit 1) and block CI;
+//! `warn` findings are advisory (today only the indexing heuristic of
+//! `panic-freedom`, which cannot see bounds invariants).
+
+pub mod lexer;
+pub mod rules;
+
+use anyhow::{anyhow, Result};
+use lexer::{lex, Tok, Token};
+use std::path::Path;
+
+/// Finding severity. Only [`Severity::Deny`] affects the exit code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+/// One rule violation, anchored to a repo-relative file and 1-based line
+/// (line 0 = whole file / artifact missing).
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// A parsed `// dobi-lint: allow(rule, reason)` comment.
+#[derive(Debug, Clone)]
+pub struct Suppression {
+    pub line: u32,
+    pub rule: String,
+    pub reason: Option<String>,
+}
+
+/// A lexed source file plus the derived facts every rule needs: which lines
+/// are `#[cfg(test)]` code, and which suppressions are declared.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative, '/'-separated path (e.g. `rust/src/serve/stream.rs`).
+    pub path: String,
+    pub text: String,
+    /// Full token stream, comments included (suppressions live there).
+    pub tokens: Vec<Token>,
+    /// Code-only tokens: `tokens` minus comments. Rules match on this.
+    pub code: Vec<Token>,
+    /// Inclusive line ranges covered by `#[cfg(test)]` items.
+    pub test_ranges: Vec<(u32, u32)>,
+    pub suppressions: Vec<Suppression>,
+}
+
+impl SourceFile {
+    pub fn new(path: &str, text: &str) -> SourceFile {
+        let tokens = lex(text);
+        let code: Vec<Token> = tokens
+            .iter()
+            .filter(|t| !matches!(t.kind, Tok::LineComment(_) | Tok::BlockComment(_)))
+            .cloned()
+            .collect();
+        let test_ranges = find_test_ranges(&code);
+        let suppressions = find_suppressions(&tokens);
+        SourceFile { path: path.to_string(), text: text.to_string(), tokens, code, test_ranges, suppressions }
+    }
+
+    /// Is `line` inside a `#[cfg(test)]` item?
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_ranges.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+}
+
+/// Everything the rules see. Built from the real tree by [`Context::load`];
+/// tests construct synthetic contexts directly from fixture strings.
+#[derive(Debug)]
+pub struct Context {
+    /// All `.rs` files under `rust/src`, paths repo-relative.
+    pub files: Vec<SourceFile>,
+    /// README.md content (the drift rules parse its spec tables).
+    pub readme: String,
+}
+
+impl Context {
+    /// Load the real repository rooted at `root`.
+    pub fn load(root: &Path) -> Result<Context> {
+        let src = root.join("rust").join("src");
+        let readme_path = root.join("README.md");
+        if !src.is_dir() || !readme_path.is_file() {
+            return Err(anyhow!(
+                "`{}` does not look like the repo root (need rust/src/ and README.md); \
+                 run from the checkout root or pass --root DIR",
+                root.display()
+            ));
+        }
+        let readme = std::fs::read_to_string(&readme_path)?;
+        let mut paths = Vec::new();
+        collect_rs(&src, &mut paths)?;
+        paths.sort();
+        let mut files = Vec::new();
+        for p in &paths {
+            let text = std::fs::read_to_string(p)?;
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            files.push(SourceFile::new(&rel, &text));
+        }
+        Ok(Context { files, readme })
+    }
+
+    /// The unique file whose path ends with `suffix`, if present.
+    pub fn file(&self, suffix: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.path.ends_with(suffix))
+    }
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<std::path::PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Run all rules (or just `only`) over `ctx`, apply suppressions, and check
+/// suppression hygiene. Findings come back sorted by (file, line, rule).
+pub fn run(ctx: &Context, only: Option<&str>) -> Result<Vec<Finding>> {
+    if let Some(name) = only {
+        if !rules::RULES.iter().any(|r| r.name == name) {
+            let known: Vec<&str> = rules::RULES.iter().map(|r| r.name).collect();
+            return Err(anyhow!("unknown rule `{name}` (known: {})", known.join(", ")));
+        }
+    }
+    let mut raw = Vec::new();
+    for rule in rules::RULES {
+        if only.map(|n| n == rule.name).unwrap_or(true) {
+            raw.extend((rule.run)(ctx));
+        }
+    }
+    let mut kept = Vec::new();
+    for f in raw {
+        let suppressed = ctx
+            .files
+            .iter()
+            .find(|s| s.path == f.file)
+            .map(|s| {
+                s.suppressions
+                    .iter()
+                    .any(|sp| sp.rule == f.rule && (sp.line == f.line || sp.line + 1 == f.line))
+            })
+            .unwrap_or(false);
+        if !suppressed {
+            kept.push(f);
+        }
+    }
+    // Suppression hygiene rides along on full runs: a typo'd rule name would
+    // silently suppress nothing, and a reasonless allow hides the judgment
+    // call a reviewer needs to see.
+    if only.is_none() {
+        for file in &ctx.files {
+            for sp in &file.suppressions {
+                if !rules::RULES.iter().any(|r| r.name == sp.rule) {
+                    kept.push(Finding {
+                        rule: "suppression",
+                        severity: Severity::Deny,
+                        file: file.path.clone(),
+                        line: sp.line,
+                        message: format!("allow() names unknown rule `{}`", sp.rule),
+                    });
+                } else if sp.reason.as_deref().unwrap_or("").is_empty() {
+                    kept.push(Finding {
+                        rule: "suppression",
+                        severity: Severity::Deny,
+                        file: file.path.clone(),
+                        line: sp.line,
+                        message: format!(
+                            "allow({}) needs a reason: `// dobi-lint: allow({}, why it is safe)`",
+                            sp.rule, sp.rule
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    kept.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    Ok(kept)
+}
+
+/// Find `#[cfg(test)]` attributes in the code-token stream and return the
+/// line ranges of the items they cover (attribute line through the item's
+/// closing brace; braceless items cover just the attribute's lines).
+fn find_test_ranges(code: &[Token]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < code.len() {
+        let is_attr = matches!(code[i].kind, Tok::Punct('#'))
+            && matches!(code[i + 1].kind, Tok::Punct('['))
+            && matches!(&code[i + 2].kind, Tok::Ident(w) if w == "cfg")
+            && matches!(code[i + 3].kind, Tok::Punct('('))
+            && matches!(&code[i + 4].kind, Tok::Ident(w) if w == "test")
+            && matches!(code[i + 5].kind, Tok::Punct(')'))
+            && matches!(code[i + 6].kind, Tok::Punct(']'));
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        let start_line = code[i].line;
+        // Scan forward for the item body's opening brace; a `;` first means
+        // a braceless item (`#[cfg(test)] use …;`).
+        let mut j = i + 7;
+        let mut open = None;
+        while j < code.len() {
+            match code[j].kind {
+                Tok::Punct('{') => {
+                    open = Some(j);
+                    break;
+                }
+                Tok::Punct(';') => break,
+                _ => j += 1,
+            }
+        }
+        let end_line = match open {
+            Some(o) => match_brace(code, o).map(|c| code[c].line).unwrap_or(u32::MAX),
+            None => code.get(j).map(|t| t.line).unwrap_or(start_line),
+        };
+        out.push((start_line, end_line));
+        i = j.max(i + 7);
+    }
+    out
+}
+
+/// Index of the `}` matching the `{` at `open` (both in code tokens).
+pub(crate) fn match_brace(code: &[Token], open: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    for (j, t) in code.iter().enumerate().skip(open) {
+        match t.kind {
+            Tok::Punct('{') => depth += 1,
+            Tok::Punct('}') => {
+                depth -= 1;
+                if depth == 0 {
+                    return Some(j);
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn find_suppressions(tokens: &[Token]) -> Vec<Suppression> {
+    let mut out = Vec::new();
+    for t in tokens {
+        let text = match &t.kind {
+            Tok::LineComment(s) => s,
+            _ => continue,
+        };
+        let Some(pos) = text.find("dobi-lint:") else { continue };
+        // Only a comment that IS the directive counts: nothing but comment
+        // sigils and whitespace may precede the marker. Doc comments that
+        // quote the syntax in prose (backticks, words before it) are not
+        // suppressions.
+        if !text[..pos].chars().all(|c| matches!(c, '/' | '!' | ' ' | '\t')) {
+            continue;
+        }
+        let rest = text[pos + "dobi-lint:".len()..].trim_start();
+        let Some(body) = rest.strip_prefix("allow(") else { continue };
+        let Some(end) = body.rfind(')') else { continue };
+        let inner = &body[..end];
+        let (rule, reason) = match inner.split_once(',') {
+            Some((r, why)) => (r.trim().to_string(), Some(why.trim().to_string())),
+            None => (inner.trim().to_string(), None),
+        };
+        out.push(Suppression { line: t.line, rule, reason });
+    }
+    out
+}

@@ -1,0 +1,928 @@
+//! The `dobi lint` rule set.
+//!
+//! Each rule is a pure function `fn(&Context) -> Vec<Finding>` over lexed
+//! sources plus the README — rules that enforce cross-artifact agreement
+//! (code ↔ constants module ↔ README spec tables) parse both sides and
+//! report any asymmetric difference. Policy that cannot be derived from
+//! the tree (the lock partial order, the CLI flag → config-field map) is
+//! declared here as data, where a reviewer can see and amend it.
+
+use super::lexer::{Tok, Token};
+use super::{match_brace, Context, Finding, Severity, SourceFile};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// A registered rule: name (used by `--rule` and `allow(...)`), a one-line
+/// summary for docs/help, and the implementation.
+pub struct Rule {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub run: fn(&Context) -> Vec<Finding>,
+}
+
+pub const RULES: &[Rule] = &[
+    Rule {
+        name: "panic-freedom",
+        summary: "no unwrap/expect/panic-class macros on the serve request paths \
+                  (serve/, server/, trace/, metrics/); indexing is a warn-level heuristic",
+        run: panic_freedom,
+    },
+    Rule {
+        name: "lock-order",
+        summary: "nested lock acquisitions follow the declared partial order \
+                  registry -> metrics -> trace",
+        run: lock_order,
+    },
+    Rule {
+        name: "metric-drift",
+        summary: "serve_* family names agree across metrics::names, code, and the \
+                  README family table",
+        run: metric_drift,
+    },
+    Rule {
+        name: "protocol-drift",
+        summary: "wire-protocol ops and fields agree across stream.rs declarations, \
+                  parse code, and the README protocol v1 table",
+        run: protocol_drift,
+    },
+    Rule {
+        name: "flag-drift",
+        summary: "serve/compress CLI flags map to ServeConfig/CompressConfig/EngineConfig \
+                  fields and are mentioned in the README",
+        run: flag_drift,
+    },
+    Rule {
+        name: "trace-phase-pairing",
+        summary: "trace phases agree across trace::phases, record sites, the exporter's \
+                  known-phase list, and the README Observability table",
+        run: trace_phases,
+    },
+];
+
+fn finding(rule: &'static str, severity: Severity, file: &str, line: u32, message: String) -> Finding {
+    Finding { rule, severity, file: file.to_string(), line, message }
+}
+
+fn deny(rule: &'static str, file: &str, line: u32, message: String) -> Finding {
+    finding(rule, Severity::Deny, file, line, message)
+}
+
+fn warn(rule: &'static str, file: &str, line: u32, message: String) -> Finding {
+    finding(rule, Severity::Warn, file, line, message)
+}
+
+// ---------------------------------------------------------------------------
+// Shared token-walking helpers
+
+pub(crate) struct FnSpan {
+    pub name: String,
+    /// Code-token indices of the body's `{` and matching `}`.
+    pub body: (usize, usize),
+}
+
+/// Every `fn name … { … }` in the code-token stream (bodies by brace match;
+/// signature `;`/`[]`/`()` nesting respected, so `fn f(x: [u8; 4])` works).
+pub(crate) fn fn_spans(code: &[Token]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        if !matches!(&code[i].kind, Tok::Ident(w) if w == "fn") {
+            continue;
+        }
+        let Some(Tok::Ident(name)) = code.get(i + 1).map(|t| &t.kind) else { continue };
+        let mut j = i + 2;
+        let mut depth = 0i64;
+        let mut open = None;
+        while j < code.len() {
+            match code[j].kind {
+                Tok::Punct('(') | Tok::Punct('[') => depth += 1,
+                Tok::Punct(')') | Tok::Punct(']') => depth -= 1,
+                Tok::Punct('{') if depth == 0 => {
+                    open = Some(j);
+                    break;
+                }
+                Tok::Punct(';') if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        if let Some(o) = open {
+            if let Some(c) = match_brace(code, o) {
+                out.push(FnSpan { name: name.clone(), body: (o, c) });
+            }
+        }
+    }
+    out
+}
+
+/// `const NAME: &str = "value";` declarations as (name, value, line).
+fn str_consts(code: &[Token]) -> Vec<(String, String, u32)> {
+    let mut out = Vec::new();
+    for i in 0..code.len() {
+        if !matches!(&code[i].kind, Tok::Ident(w) if w == "const") {
+            continue;
+        }
+        let Some(Tok::Ident(name)) = code.get(i + 1).map(|t| &t.kind) else { continue };
+        let shape_ok = matches!(code.get(i + 2).map(|t| &t.kind), Some(Tok::Punct(':')))
+            && matches!(code.get(i + 3).map(|t| &t.kind), Some(Tok::Punct('&')))
+            && matches!(code.get(i + 4).map(|t| &t.kind), Some(Tok::Ident(w)) if w == "str")
+            && matches!(code.get(i + 5).map(|t| &t.kind), Some(Tok::Punct('=')));
+        if !shape_ok {
+            continue;
+        }
+        if let Some(Tok::Str(v)) = code.get(i + 6).map(|t| &t.kind) {
+            out.push((name.clone(), v.clone(), code[i].line));
+        }
+    }
+    out
+}
+
+/// The string elements of `const NAME: &[&str] = &["a", "b", …];`.
+fn str_array_const(code: &[Token], name: &str) -> Option<Vec<String>> {
+    let i = code.iter().position(|t| matches!(&t.kind, Tok::Ident(w) if w == name))?;
+    let eq = (i..code.len()).find(|&j| matches!(code[j].kind, Tok::Punct('=')))?;
+    let open = (eq..code.len()).find(|&j| matches!(code[j].kind, Tok::Punct('[')))?;
+    let mut out = Vec::new();
+    for t in &code[open + 1..] {
+        match &t.kind {
+            Tok::Str(s) => out.push(s.clone()),
+            Tok::Punct(']') => return Some(out),
+            _ => {}
+        }
+    }
+    Some(out)
+}
+
+/// The identifier elements of `const NAME: &[&str] = &[A, B, …];`.
+fn ident_array_const(code: &[Token], name: &str) -> Option<Vec<String>> {
+    let i = code.iter().position(|t| matches!(&t.kind, Tok::Ident(w) if w == name))?;
+    let eq = (i..code.len()).find(|&j| matches!(code[j].kind, Tok::Punct('=')))?;
+    let open = (eq..code.len()).find(|&j| matches!(code[j].kind, Tok::Punct('[')))?;
+    let mut out = Vec::new();
+    for t in &code[open + 1..] {
+        match &t.kind {
+            Tok::Ident(s) => out.push(s.clone()),
+            Tok::Punct(']') => return Some(out),
+            _ => {}
+        }
+    }
+    Some(out)
+}
+
+/// README section starting at the line that begins with `heading`, ending
+/// before the next `## `/`### ` heading. Returns (1-based start line, text).
+fn section<'a>(readme: &'a str, heading: &str) -> Option<(u32, &'a str)> {
+    let mut start_line = 0u32;
+    let mut start_byte = None;
+    let mut byte = 0usize;
+    for (idx, line) in readme.lines().enumerate() {
+        if start_byte.is_none() {
+            if line.starts_with(heading) {
+                start_line = idx as u32 + 1;
+                start_byte = Some(byte);
+            }
+        } else if line.starts_with("## ") || line.starts_with("### ") {
+            return Some((start_line, &readme[start_byte.unwrap_or(0)..byte]));
+        }
+        byte += line.len() + 1;
+    }
+    start_byte.map(|b| (start_line, &readme[b..]))
+}
+
+/// 1-based README line of the first occurrence of `needle` inside a section
+/// that starts at `sec_line`.
+fn line_in(sec: &str, sec_line: u32, needle: &str) -> u32 {
+    for (idx, line) in sec.lines().enumerate() {
+        if line.contains(needle) {
+            return sec_line + idx as u32;
+        }
+    }
+    sec_line
+}
+
+/// Words between backticks on one line, filtered to `[a-z_]+`.
+fn backtick_words(line: &str) -> Vec<String> {
+    line.split('`')
+        .skip(1)
+        .step_by(2)
+        .filter(|w| !w.is_empty() && w.bytes().all(|c| c.is_ascii_lowercase() || c == b'_'))
+        .map(|w| w.to_string())
+        .collect()
+}
+
+/// Markdown table rows of a section (lines starting with `|`, separator rows
+/// skipped) as (line-offset-within-section, line text).
+fn table_rows(sec: &str) -> Vec<(u32, &str)> {
+    sec.lines()
+        .enumerate()
+        .filter(|(_, l)| l.trim_start().starts_with('|') && !l.contains("---"))
+        .map(|(i, l)| (i as u32, l))
+        .collect()
+}
+
+/// Is `s` a metric family name (`serve_` plus a nonempty lowercase tail)?
+fn is_family(s: &str) -> bool {
+    match s.strip_prefix("serve_") {
+        Some(rest) => {
+            !rest.is_empty() && rest.bytes().all(|c| c.is_ascii_lowercase() || c == b'_')
+        }
+        None => false,
+    }
+}
+
+/// All metric family names appearing anywhere in `text`.
+fn families_in(text: &str) -> BTreeSet<String> {
+    let b = text.as_bytes();
+    let mut out = BTreeSet::new();
+    let mut i = 0usize;
+    let ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
+    while i + 6 <= b.len() {
+        if &b[i..i + 6] == b"serve_" && (i == 0 || !ident(b[i - 1])) {
+            let mut j = i + 6;
+            while j < b.len() && (b[j].is_ascii_lowercase() || b[j] == b'_') {
+                j += 1;
+            }
+            if j > i + 6 {
+                out.insert(String::from_utf8_lossy(&b[i..j]).into_owned());
+            }
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: panic-freedom
+
+/// Directories whose non-test code is the serve request path.
+const PANIC_DIRS: &[&str] = &["serve/", "server/", "trace/", "metrics/"];
+/// Compute-kernel files where indexing *is* the idiom (bounds are shape
+/// invariants pinned by parity tests); the indexing heuristic skips them.
+const INDEX_EXEMPT: &[&str] = &["serve/session.rs", "serve/spec.rs"];
+
+fn in_dirs(path: &str, dirs: &[&str]) -> bool {
+    dirs.iter().any(|d| {
+        path.strip_prefix("rust/src/").map(|p| p.starts_with(d)).unwrap_or(false)
+    })
+}
+
+fn panic_freedom(ctx: &Context) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in ctx.files.iter().filter(|f| in_dirs(&f.path, PANIC_DIRS)) {
+        let code = &f.code;
+        let index_exempt = INDEX_EXEMPT.iter().any(|e| f.path.ends_with(e));
+        for i in 0..code.len() {
+            if f.in_test(code[i].line) {
+                continue;
+            }
+            if matches!(code[i].kind, Tok::Punct('.')) {
+                if let Some(Tok::Ident(m)) = code.get(i + 1).map(|t| &t.kind) {
+                    if (m == "unwrap" || m == "expect")
+                        && matches!(code.get(i + 2).map(|t| &t.kind), Some(Tok::Punct('(')))
+                    {
+                        out.push(deny(
+                            "panic-freedom",
+                            &f.path,
+                            code[i + 1].line,
+                            format!(
+                                "`.{m}()` on the serve request path — a poisoned lock or \
+                                 unexpected None here kills the scheduler; handle the \
+                                 failure (e.g. `lock_or_recover`, `unwrap_or`, `let-else`)"
+                            ),
+                        ));
+                    }
+                }
+            }
+            if let Tok::Ident(mac) = &code[i].kind {
+                if matches!(mac.as_str(), "panic" | "unreachable" | "todo" | "unimplemented")
+                    && matches!(code.get(i + 1).map(|t| &t.kind), Some(Tok::Punct('!')))
+                {
+                    out.push(deny(
+                        "panic-freedom",
+                        &f.path,
+                        code[i].line,
+                        format!("`{mac}!` on the serve request path — return a typed error instead"),
+                    ));
+                }
+                // Heuristic: `ident[` is indexing; the lexer cannot prove a
+                // bounds invariant, so this is warn-level only.
+                if !index_exempt
+                    && matches!(code.get(i + 1).map(|t| &t.kind), Some(Tok::Punct('[')))
+                {
+                    out.push(warn(
+                        "panic-freedom",
+                        &f.path,
+                        code[i].line,
+                        format!("indexing `{mac}[…]` can panic — prefer `.get()` when the bound is not a local invariant"),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: lock-order
+
+/// The declared lock partial order. A lock later in this list may be taken
+/// while holding an earlier one, never the reverse. Receivers are classified
+/// by the identifiers in the receiver expression.
+const LOCK_CLASSES: &[(&str, &[&str])] = &[
+    ("registry", &["registry", "reg"]),
+    ("metrics", &["metrics", "counters", "gauges", "histograms", "res"]),
+    ("trace", &["trace", "slot", "slots"]),
+];
+
+struct LockSite {
+    class: usize,
+    line: u32,
+    recv: String,
+}
+
+fn classify_recv(names: &[String]) -> Option<usize> {
+    for n in names {
+        for (idx, (_, pats)) in LOCK_CLASSES.iter().enumerate() {
+            if pats.iter().any(|p| n == p) {
+                return Some(idx);
+            }
+        }
+    }
+    None
+}
+
+/// Classified lock acquisitions (`recv.lock()` or `lock_or_recover(&recv)`)
+/// inside one fn body, in source order.
+fn lock_sites(code: &[Token], body: (usize, usize)) -> Vec<LockSite> {
+    let (a, b) = body;
+    let mut out = Vec::new();
+    let mut j = a;
+    while j <= b {
+        if matches!(code[j].kind, Tok::Punct('.'))
+            && matches!(code.get(j + 1).map(|t| &t.kind), Some(Tok::Ident(w)) if w == "lock")
+            && matches!(code.get(j + 2).map(|t| &t.kind), Some(Tok::Punct('(')))
+        {
+            let mut names = Vec::new();
+            let mut k = j;
+            while k > a && names.len() < 4 {
+                k -= 1;
+                match &code[k].kind {
+                    Tok::Ident(w) => names.push(w.clone()),
+                    Tok::Punct('.') | Tok::Punct('(') | Tok::Punct(')')
+                    | Tok::Punct('[') | Tok::Punct(']') => {}
+                    _ => break,
+                }
+            }
+            if let Some(class) = classify_recv(&names) {
+                let recv = names.first().cloned().unwrap_or_default();
+                out.push(LockSite { class, line: code[j].line, recv });
+            }
+            j += 3;
+            continue;
+        }
+        if matches!(&code[j].kind, Tok::Ident(w) if w == "lock_or_recover")
+            && matches!(code.get(j + 1).map(|t| &t.kind), Some(Tok::Punct('(')))
+        {
+            let mut names = Vec::new();
+            let mut k = j + 2;
+            let mut depth = 1i64;
+            while k <= b && depth > 0 && names.len() < 6 {
+                match &code[k].kind {
+                    Tok::Punct('(') => depth += 1,
+                    Tok::Punct(')') => depth -= 1,
+                    Tok::Ident(w) => names.push(w.clone()),
+                    _ => {}
+                }
+                k += 1;
+            }
+            names.reverse(); // innermost-last first, mirroring the backward walk
+            if let Some(class) = classify_recv(&names) {
+                let recv = names.first().cloned().unwrap_or_default();
+                out.push(LockSite { class, line: code[j].line, recv });
+            }
+        }
+        j += 1;
+    }
+    out
+}
+
+fn lock_order(ctx: &Context) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &ctx.files {
+        for span in fn_spans(&f.code) {
+            if f.in_test(f.code[span.body.0].line) {
+                continue;
+            }
+            let sites = lock_sites(&f.code, span.body);
+            let mut deepest: Option<&LockSite> = None;
+            for s in &sites {
+                if let Some(prev) = deepest {
+                    if s.class < prev.class {
+                        out.push(deny(
+                            "lock-order",
+                            &f.path,
+                            s.line,
+                            format!(
+                                "`{}` ({}) acquired after `{}` ({}) in `fn {}` — the declared \
+                                 order is registry -> metrics -> trace",
+                                s.recv,
+                                LOCK_CLASSES[s.class].0,
+                                prev.recv,
+                                LOCK_CLASSES[prev.class].0,
+                                span.name
+                            ),
+                        ));
+                    }
+                }
+                if deepest.map(|p| s.class > p.class).unwrap_or(true) {
+                    deepest = Some(s);
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: metric-drift
+
+const NAMES_RS: &str = "metrics/names.rs";
+const METRICS_HEADING: &str = "### Labeled metrics";
+
+fn metric_drift(ctx: &Context) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(nf) = ctx.file(NAMES_RS) else {
+        out.push(deny(
+            "metric-drift",
+            "rust/src/metrics/names.rs",
+            0,
+            "metrics::names module missing — metric families need one constants module".into(),
+        ));
+        return out;
+    };
+    let consts = str_consts(&nf.code);
+    let const_vals: BTreeSet<&str> = consts.iter().map(|(_, v, _)| v.as_str()).collect();
+    let Some((sec_line, sec)) = section(&ctx.readme, METRICS_HEADING) else {
+        out.push(deny(
+            "metric-drift",
+            "README.md",
+            0,
+            format!("README `{METRICS_HEADING}` section missing"),
+        ));
+        return out;
+    };
+    let readme_fams = families_in(sec);
+    for (name, val, line) in &consts {
+        if !readme_fams.contains(val) {
+            out.push(deny(
+                "metric-drift",
+                &nf.path,
+                *line,
+                format!("family `{val}` (const {name}) is undocumented in the README family table"),
+            ));
+        }
+    }
+    for fam in &readme_fams {
+        if !const_vals.contains(fam.as_str()) {
+            out.push(deny(
+                "metric-drift",
+                "README.md",
+                line_in(sec, sec_line, fam),
+                format!("README documents family `{fam}` but metrics::names has no such constant"),
+            ));
+        }
+    }
+    for f in &ctx.files {
+        if f.path.ends_with(NAMES_RS) {
+            continue;
+        }
+        for t in &f.code {
+            if let Tok::Str(s) = &t.kind {
+                if is_family(s) && !f.in_test(t.line) {
+                    out.push(deny(
+                        "metric-drift",
+                        &f.path,
+                        t.line,
+                        format!("metric family literal `\"{s}\"` — reference `metrics::names` instead"),
+                    ));
+                }
+            }
+        }
+    }
+    for (name, _, line) in &consts {
+        let used = ctx
+            .files
+            .iter()
+            .filter(|f| !f.path.ends_with(NAMES_RS))
+            .any(|f| f.code.iter().any(|t| matches!(&t.kind, Tok::Ident(w) if w == name)));
+        if !used {
+            out.push(deny(
+                "metric-drift",
+                &nf.path,
+                *line,
+                format!("metric constant {name} is never referenced outside metrics::names"),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: protocol-drift
+
+const PROTOCOL_HEADING: &str = "### Wire protocol (v1)";
+
+fn protocol_drift(ctx: &Context) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(sf) = ctx.file("serve/stream.rs") else {
+        out.push(deny(
+            "protocol-drift",
+            "rust/src/serve/stream.rs",
+            0,
+            "serve/stream.rs missing".into(),
+        ));
+        return out;
+    };
+    let ops = str_array_const(&sf.code, "PROTOCOL_OPS");
+    let fields = str_array_const(&sf.code, "PROTOCOL_FIELDS");
+    let (Some(ops), Some(fields)) = (ops, fields) else {
+        out.push(deny(
+            "protocol-drift",
+            &sf.path,
+            0,
+            "stream.rs must declare PROTOCOL_OPS and PROTOCOL_FIELDS (the v1 vocabulary)".into(),
+        ));
+        return out;
+    };
+    // The declared vocabulary must actually be parsed: every op/field string
+    // appears in some fn body (parse_request or its typed-field helpers).
+    let mut body_lits = BTreeSet::new();
+    for span in fn_spans(&sf.code) {
+        for t in &sf.code[span.body.0..=span.body.1] {
+            if let Tok::Str(s) = &t.kind {
+                if !sf.in_test(t.line) {
+                    body_lits.insert(s.clone());
+                }
+            }
+        }
+    }
+    for op in &ops {
+        if !body_lits.contains(op) {
+            out.push(deny(
+                "protocol-drift",
+                &sf.path,
+                0,
+                format!("declared op `{op}` never appears in stream.rs parse code"),
+            ));
+        }
+    }
+    for fd in &fields {
+        if !body_lits.contains(fd) {
+            out.push(deny(
+                "protocol-drift",
+                &sf.path,
+                0,
+                format!("declared field `{fd}` never appears in stream.rs parse code"),
+            ));
+        }
+    }
+    let Some((sec_line, sec)) = section(&ctx.readme, PROTOCOL_HEADING) else {
+        out.push(deny(
+            "protocol-drift",
+            "README.md",
+            0,
+            format!("README `{PROTOCOL_HEADING}` section missing"),
+        ));
+        return out;
+    };
+    let mut readme_ops: BTreeMap<String, u32> = BTreeMap::new();
+    let mut readme_fields: BTreeMap<String, u32> = BTreeMap::new();
+    for (off, row) in table_rows(sec) {
+        let words = backtick_words(row);
+        if let Some((first, rest)) = words.split_first() {
+            readme_ops.entry(first.clone()).or_insert(sec_line + off);
+            for w in rest {
+                readme_fields.entry(w.clone()).or_insert(sec_line + off);
+            }
+        }
+    }
+    if readme_ops.is_empty() {
+        out.push(deny(
+            "protocol-drift",
+            "README.md",
+            sec_line,
+            "README protocol section has no spec table (rows `| op | fields |`)".into(),
+        ));
+        return out;
+    }
+    for op in &ops {
+        if !readme_ops.contains_key(op) {
+            out.push(deny(
+                "protocol-drift",
+                &sf.path,
+                0,
+                format!("op `{op}` is parsed but missing from the README protocol table"),
+            ));
+        }
+    }
+    for (op, line) in &readme_ops {
+        if !ops.contains(op) {
+            out.push(deny(
+                "protocol-drift",
+                "README.md",
+                *line,
+                format!("README protocol table lists op `{op}` that stream.rs does not declare"),
+            ));
+        }
+    }
+    for fd in &fields {
+        if !readme_fields.contains_key(fd) {
+            out.push(deny(
+                "protocol-drift",
+                &sf.path,
+                0,
+                format!("field `{fd}` is parsed but missing from the README protocol table"),
+            ));
+        }
+    }
+    for (fd, line) in &readme_fields {
+        if !fields.contains(fd) {
+            out.push(deny(
+                "protocol-drift",
+                "README.md",
+                *line,
+                format!("README protocol table lists field `{fd}` that stream.rs does not declare"),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: flag-drift
+
+/// CLI flag → config struct field. Derivable spellings still appear here so
+/// the mapping is reviewable in one place.
+const FLAG_MAP: &[(&str, &str)] = &[
+    ("max-batch", "max_batch"),
+    ("deadline-us", "batch_deadline_us"),
+    ("queue-depth", "queue_depth"),
+    ("max-sessions", "max_sessions"),
+    ("decode-threads", "decode_threads"),
+    ("spec-draft", "spec_draft"),
+    ("spec-k", "spec_k"),
+    ("trace-buffer", "trace_buffer"),
+    ("ratio", "ratio"),
+    ("budget", "budget"),
+    ("precision", "precision"),
+    ("calib-batches", "calib_batches"),
+    ("calib-batch", "calib_batch"),
+    ("calib-seq", "calib_seq"),
+    ("seed", "seed"),
+    ("k-min", "k_min"),
+    ("alloc", "alloc"),
+    ("train-iters", "train_iters"),
+    ("train-lr", "train_lr"),
+    ("svd-threads", "svd_threads"),
+];
+
+/// Flags that configure infrastructure rather than a config-struct field
+/// (addresses, paths, mode switches). Still require a README mention.
+const FLAG_INFRA: &[&str] = &[
+    "artifacts", "variants", "port", "backend", "stream", "no-stream", "no-control",
+    "out", "append", "replace", "calib", "variant", "synth",
+];
+
+const FLAG_ACCESSORS: &[&str] = &["get", "get_or", "usize_or", "f64_or", "has"];
+
+fn flag_drift(ctx: &Context) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(mf) = ctx.file("src/main.rs") else {
+        out.push(deny("flag-drift", "rust/src/main.rs", 0, "main.rs missing".into()));
+        return out;
+    };
+    let config_idents: BTreeSet<String> = match ctx.file("config/mod.rs") {
+        Some(cf) => cf
+            .code
+            .iter()
+            .filter_map(|t| match &t.kind {
+                Tok::Ident(w) => Some(w.clone()),
+                _ => None,
+            })
+            .collect(),
+        None => {
+            out.push(deny("flag-drift", "rust/src/config/mod.rs", 0, "config/mod.rs missing".into()));
+            return out;
+        }
+    };
+    // Flags read inside `fn serve` / `fn compress` via the Args accessors.
+    let mut flags: BTreeMap<String, u32> = BTreeMap::new();
+    let code = &mf.code;
+    for span in fn_spans(code)
+        .into_iter()
+        .filter(|s| s.name == "serve" || s.name == "compress")
+    {
+        let (a, b) = span.body;
+        for j in a..=b {
+            if matches!(code[j].kind, Tok::Punct('.'))
+                && matches!(code.get(j + 1).map(|t| &t.kind),
+                            Some(Tok::Ident(w)) if FLAG_ACCESSORS.contains(&w.as_str()))
+                && matches!(code.get(j + 2).map(|t| &t.kind), Some(Tok::Punct('(')))
+            {
+                if let Some(Tok::Str(s)) = code.get(j + 3).map(|t| &t.kind) {
+                    flags.entry(s.clone()).or_insert(code[j + 3].line);
+                }
+            }
+        }
+    }
+    let mentioned = readme_flags(&ctx.readme);
+    for (flag, line) in &flags {
+        if !mentioned.contains(flag) {
+            out.push(deny(
+                "flag-drift",
+                &mf.path,
+                *line,
+                format!("`--{flag}` is read by serve/compress but never mentioned in README.md"),
+            ));
+        }
+        if let Some((_, field)) = FLAG_MAP.iter().find(|(f, _)| f == flag) {
+            if !config_idents.contains(*field) {
+                out.push(deny(
+                    "flag-drift",
+                    &mf.path,
+                    *line,
+                    format!("`--{flag}` maps to config field `{field}`, which does not exist in config/mod.rs"),
+                ));
+            }
+        } else if !FLAG_INFRA.contains(&flag.as_str()) {
+            out.push(deny(
+                "flag-drift",
+                &mf.path,
+                *line,
+                format!(
+                    "`--{flag}` has no entry in the flag-drift rule's FLAG_MAP (config field) \
+                     or FLAG_INFRA allowlist — declare where it lands"
+                ),
+            ));
+        }
+    }
+    for (flag, field) in FLAG_MAP {
+        if !flags.contains_key(*flag) {
+            out.push(deny(
+                "flag-drift",
+                &mf.path,
+                0,
+                format!("stale FLAG_MAP entry: `--{flag}` (-> {field}) is not read in fn serve/fn compress"),
+            ));
+        }
+    }
+    out
+}
+
+/// Every `--flag` spelling mentioned anywhere in the README.
+fn readme_flags(readme: &str) -> BTreeSet<String> {
+    let b = readme.as_bytes();
+    let mut out = BTreeSet::new();
+    let mut i = 0usize;
+    while i + 2 < b.len() {
+        if b[i] == b'-' && b[i + 1] == b'-' && b[i + 2].is_ascii_lowercase() && (i == 0 || b[i - 1] != b'-') {
+            let mut j = i + 2;
+            while j < b.len() && (b[j].is_ascii_lowercase() || b[j].is_ascii_digit() || b[j] == b'-') {
+                j += 1;
+            }
+            out.insert(String::from_utf8_lossy(&b[i + 2..j]).into_owned());
+            i = j;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: trace-phase-pairing
+
+const PHASES_RS: &str = "trace/phases.rs";
+const TRACE_HEADING: &str = "### Request-lifecycle tracing";
+const RECORDERS: &[&str] = &["span", "push_span", "push_instant"];
+
+fn trace_phases(ctx: &Context) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(pf) = ctx.file(PHASES_RS) else {
+        out.push(deny(
+            "trace-phase-pairing",
+            "rust/src/trace/phases.rs",
+            0,
+            "trace::phases module missing — phase names need one constants module".into(),
+        ));
+        return out;
+    };
+    let consts = str_consts(&pf.code);
+    let Some(all) = ident_array_const(&pf.code, "ALL") else {
+        out.push(deny(
+            "trace-phase-pairing",
+            &pf.path,
+            0,
+            "phases::ALL (the exporter's known-phase list) is missing".into(),
+        ));
+        return out;
+    };
+    for (name, _, line) in &consts {
+        if !all.contains(name) {
+            out.push(deny(
+                "trace-phase-pairing",
+                &pf.path,
+                *line,
+                format!("phase const {name} is missing from phases::ALL"),
+            ));
+        }
+    }
+    for a in &all {
+        if !consts.iter().any(|(n, _, _)| n == a) {
+            out.push(deny(
+                "trace-phase-pairing",
+                &pf.path,
+                0,
+                format!("phases::ALL references `{a}`, which is not a phase const"),
+            ));
+        }
+    }
+    // Record sites must pass a phases:: constant, not a string literal.
+    for f in &ctx.files {
+        let code = &f.code;
+        for i in 0..code.len() {
+            if matches!(code[i].kind, Tok::Punct('.'))
+                && matches!(code.get(i + 1).map(|t| &t.kind),
+                            Some(Tok::Ident(w)) if RECORDERS.contains(&w.as_str()))
+                && matches!(code.get(i + 2).map(|t| &t.kind), Some(Tok::Punct('(')))
+            {
+                if let Some(Tok::Str(s)) = code.get(i + 3).map(|t| &t.kind) {
+                    if !f.in_test(code[i + 3].line) {
+                        out.push(deny(
+                            "trace-phase-pairing",
+                            &f.path,
+                            code[i + 3].line,
+                            format!("phase recorded as string literal `\"{s}\"` — use `trace::phases`"),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    let Some((sec_line, sec)) = section(&ctx.readme, TRACE_HEADING) else {
+        out.push(deny(
+            "trace-phase-pairing",
+            "README.md",
+            0,
+            format!("README `{TRACE_HEADING}` section missing"),
+        ));
+        return out;
+    };
+    let mut readme_phases: BTreeMap<String, u32> = BTreeMap::new();
+    for (off, row) in table_rows(sec) {
+        if let Some(first) = backtick_words(row).into_iter().next() {
+            readme_phases.entry(first).or_insert(sec_line + off);
+        }
+    }
+    if readme_phases.is_empty() {
+        out.push(deny(
+            "trace-phase-pairing",
+            "README.md",
+            sec_line,
+            "README tracing section has no phase table (rows `| phase | … |`)".into(),
+        ));
+        return out;
+    }
+    for (name, val, line) in &consts {
+        if !readme_phases.contains_key(val) {
+            out.push(deny(
+                "trace-phase-pairing",
+                &pf.path,
+                *line,
+                format!("phase `{val}` (const {name}) is undocumented in the README phase table"),
+            ));
+        }
+    }
+    for (ph, line) in &readme_phases {
+        if !consts.iter().any(|(_, v, _)| v == ph) {
+            out.push(deny(
+                "trace-phase-pairing",
+                "README.md",
+                *line,
+                format!("README phase table lists `{ph}`, which trace::phases does not declare"),
+            ));
+        }
+    }
+    out
+}
+
+// Re-exported for the engine's suppression hygiene and the CLI's rule list.
+pub fn rule_names() -> Vec<&'static str> {
+    RULES.iter().map(|r| r.name).collect()
+}
+
+// Keep the helper visible to unit/fixture tests without re-lexing.
+#[allow(dead_code)]
+pub(crate) fn source(path: &str, text: &str) -> SourceFile {
+    SourceFile::new(path, text)
+}

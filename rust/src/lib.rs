@@ -22,6 +22,7 @@
 // Lint policy lives in the workspace Cargo.toml ([workspace.lints]) so
 // benches/examples/tests inherit the same kernel-idiom allows.
 
+pub mod analysis;
 pub mod bench;
 pub mod cli;
 pub mod compress;

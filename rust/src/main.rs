@@ -7,12 +7,13 @@
 //!   generate  — sample text from a variant
 //!   serve     — TCP line-protocol server over the engine
 //!   memsim    — Table-10-style constrained-device projection
+//!   lint      — self-hosted static analysis (drift + panic/lock rules)
 //!   parity    — pallas-kernel vs xla-graph numerical parity check
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use dobi::cli::Args;
 use dobi::config::{AllocMode, BackendKind, CompressConfig, EngineConfig, Manifest, Precision,
@@ -59,6 +60,7 @@ fn run(args: &Args) -> Result<()> {
         Some("generate") => generate(args),
         Some("serve") => serve(args),
         Some("memsim") => memsim_cmd(args),
+        Some("lint") => lint(args),
         Some("parity") => parity(args),
         Some("debug-fwd") => debug_fwd(args),
         Some("debug-probe") => debug_probe(args),
@@ -101,6 +103,12 @@ fn run(args: &Args) -> Result<()> {
                  \x20     round, the target verifies in one batched step —\n\
                  \x20     output stays bit-identical to plain decode)\n\
                  memsim --model NAME [--capacity-mb M] [--bandwidth-mbs B]\n\
+                 lint [--root DIR] [--format text|json] [--rule NAME]\n\
+                 \x20    self-hosted static analysis of this checkout: panic\n\
+                 \x20    freedom on the serve paths, lock ordering, and\n\
+                 \x20    metric/protocol/flag/trace-phase drift between code,\n\
+                 \x20    constants modules, and the README spec tables;\n\
+                 \x20    exit 1 iff any deny-level finding remains\n\
                  parity                       pallas vs xla HLO numerics (pjrt only)\n\
                  \n\
                  --backend: pjrt executes AOT HLO artifacts (needs the real xla\n\
@@ -623,6 +631,54 @@ fn debug_probe(args: &Args) -> Result<()> {
         .to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
     println!("rust probe[:8]: {:?}", &vals[..8.min(vals.len())]);
     println!("rust probe[-3:]: {:?}", &vals[vals.len().saturating_sub(3)..]);
+    Ok(())
+}
+
+/// `dobi lint` — the self-hosted static analysis (`rust/src/analysis/`)
+/// over a checkout.  Text findings print one `file:line: [severity] rule:
+/// message` per line; `--format json` emits `{"findings": [...], "deny": N}`
+/// for CI.  Exit 1 iff any deny-level finding remains.
+fn lint(args: &Args) -> Result<()> {
+    use dobi::analysis;
+    let root = PathBuf::from(args.get_or("root", "."));
+    let ctx = analysis::Context::load(&root)?;
+    let findings = analysis::run(&ctx, args.get("rule"))?;
+    let denies = findings
+        .iter()
+        .filter(|f| f.severity == analysis::Severity::Deny)
+        .count();
+    match args.get_or("format", "text") {
+        "text" => {
+            for f in &findings {
+                println!("{}:{}: [{}] {}: {}", f.file, f.line, f.severity.as_str(), f.rule,
+                         f.message);
+            }
+            println!("{} finding(s), {denies} deny", findings.len());
+        }
+        "json" => {
+            let arr: Vec<Json> = findings
+                .iter()
+                .map(|f| {
+                    Json::obj(vec![
+                        ("rule", Json::Str(f.rule.to_string())),
+                        ("severity", Json::Str(f.severity.as_str().to_string())),
+                        ("file", Json::Str(f.file.clone())),
+                        ("line", Json::Num(f.line as f64)),
+                        ("message", Json::Str(f.message.clone())),
+                    ])
+                })
+                .collect();
+            let doc = Json::obj(vec![
+                ("findings", Json::Arr(arr)),
+                ("deny", Json::Num(denies as f64)),
+            ]);
+            println!("{doc}");
+        }
+        other => bail!("unknown --format `{other}` (expected text or json)"),
+    }
+    if denies > 0 {
+        bail!("{denies} deny-level finding(s)");
+    }
     Ok(())
 }
 

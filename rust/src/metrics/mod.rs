@@ -9,12 +9,41 @@
 //! historical plain dump ([`Registry::render`]) and a Prometheus-style
 //! exposition ([`Registry::render_prom`]) for scrapers.
 
+pub mod names;
+
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 use std::time::Duration;
 
 use crate::mathx::{summarize, Stats};
+
+/// Process-wide count of poisoned-lock recoveries, rendered as the
+/// [`names::LOCK_POISONED`] counter family.
+static LOCK_POISONED_RECOVERIES: AtomicU64 = AtomicU64::new(0);
+
+/// Acquire `m`, recovering the inner data if a previous holder panicked.
+///
+/// The serve request path must not die because some other thread poisoned a
+/// metrics/trace/registry mutex: the protected state (counter maps, trace
+/// slots, variant tables) stays structurally valid under panic-at-any-point,
+/// so recovery is safe. Each recovery bumps [`lock_poisoned_total`] — a
+/// nonzero value in a scrape means a panic happened somewhere and was
+/// absorbed, which is a bug report, not business as usual.
+pub fn lock_or_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            LOCK_POISONED_RECOVERIES.fetch_add(1, Ordering::Relaxed);
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// How many times [`lock_or_recover`] found a poisoned mutex.
+pub fn lock_poisoned_total() -> u64 {
+    LOCK_POISONED_RECOVERIES.load(Ordering::Relaxed)
+}
 
 #[derive(Default)]
 pub struct Counter(AtomicU64);
@@ -128,7 +157,7 @@ impl Histogram {
         // the +1 makes `seen` the 1-based count INCLUDING this sample —
         // the denominator Algorithm R's cap/seen survival needs
         let seen = self.total.fetch_add(1, Ordering::Relaxed) + 1;
-        let mut r = self.res.lock().unwrap();
+        let mut r = lock_or_recover(&self.res);
         r.sum += v;
         if r.vals.len() < self.cap {
             r.vals.push(v);
@@ -153,16 +182,16 @@ impl Histogram {
 
     /// Running sum of every observed value (seconds for durations).
     pub fn sum(&self) -> f64 {
-        self.res.lock().unwrap().sum
+        lock_or_recover(&self.res).sum
     }
 
     pub fn stats(&self) -> Stats {
-        summarize(&self.res.lock().unwrap().vals)
+        summarize(&lock_or_recover(&self.res).vals)
     }
 
     #[cfg(test)]
     fn reservoir_len(&self) -> usize {
-        self.res.lock().unwrap().vals.len()
+        lock_or_recover(&self.res).vals.len()
     }
 }
 
@@ -214,9 +243,7 @@ impl Registry {
 
     /// Labeled counter child: one instance per `(name, labels)` key.
     pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> std::sync::Arc<Counter> {
-        self.counters
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.counters)
             .entry(keyed(name, labels))
             .or_default()
             .clone()
@@ -227,9 +254,7 @@ impl Registry {
     }
 
     pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> std::sync::Arc<Gauge> {
-        self.gauges
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.gauges)
             .entry(keyed(name, labels))
             .or_default()
             .clone()
@@ -241,9 +266,7 @@ impl Registry {
 
     pub fn histogram_with(&self, name: &str,
                           labels: &[(&str, &str)]) -> std::sync::Arc<Histogram> {
-        self.histograms
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.histograms)
             .entry(keyed(name, labels))
             .or_insert_with(|| std::sync::Arc::new(Histogram::default()))
             .clone()
@@ -252,9 +275,7 @@ impl Registry {
     /// Sum of a counter family across every label set — the aggregate
     /// the pre-label callers (status lines, `ServeStats`) read.
     pub fn family_total(&self, name: &str) -> u64 {
-        self.counters
-            .lock()
-            .unwrap()
+        lock_or_recover(&self.counters)
             .iter()
             .filter(|(k, _)| in_family(k, name))
             .map(|(_, c)| c.get())
@@ -265,13 +286,16 @@ impl Registry {
     /// `name{labels} count=… mean=… p50=…` per histogram.
     pub fn render(&self) -> String {
         let mut out = String::new();
-        for (k, c) in self.counters.lock().unwrap().iter() {
+        for (k, c) in lock_or_recover(&self.counters).iter() {
             out.push_str(&format!("{k} {}\n", c.get()));
         }
-        for (k, g) in self.gauges.lock().unwrap().iter() {
+        // synthesized from the process-wide recovery counter — there is no
+        // Registry child to iterate
+        out.push_str(&format!("{} {}\n", names::LOCK_POISONED, lock_poisoned_total()));
+        for (k, g) in lock_or_recover(&self.gauges).iter() {
             out.push_str(&format!("{k} {}\n", g.get()));
         }
-        for (k, h) in self.histograms.lock().unwrap().iter() {
+        for (k, h) in lock_or_recover(&self.histograms).iter() {
             let s = h.stats();
             // dimensionless histograms (observe_value: `*_size` batch
             // sizes, `*_rate` ratios) get no seconds label
@@ -296,15 +320,17 @@ impl Registry {
                 last_family = family.to_string();
             }
         };
-        for (k, c) in self.counters.lock().unwrap().iter() {
+        for (k, c) in lock_or_recover(&self.counters).iter() {
             type_line(&mut out, family_of(k), "counter");
             out.push_str(&format!("{k} {}\n", c.get()));
         }
-        for (k, g) in self.gauges.lock().unwrap().iter() {
+        type_line(&mut out, names::LOCK_POISONED, "counter");
+        out.push_str(&format!("{} {}\n", names::LOCK_POISONED, lock_poisoned_total()));
+        for (k, g) in lock_or_recover(&self.gauges).iter() {
             type_line(&mut out, family_of(k), "gauge");
             out.push_str(&format!("{k} {}\n", g.get()));
         }
-        for (k, h) in self.histograms.lock().unwrap().iter() {
+        for (k, h) in lock_or_recover(&self.histograms).iter() {
             let (family, labels) = split_key(k);
             type_line(&mut out, family, "summary");
             let s = h.stats();
@@ -330,6 +356,23 @@ impl Registry {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lock_or_recover_recovers_poisoned_mutex() {
+        let m = std::sync::Arc::new(Mutex::new(7i32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison the mutex");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        let before = lock_poisoned_total();
+        assert_eq!(*lock_or_recover(&m), 7, "inner data recovered intact");
+        assert!(lock_poisoned_total() > before, "recovery counted");
+        let text = Registry::default().render();
+        assert!(text.contains(names::LOCK_POISONED), "{text}");
+    }
 
     #[test]
     fn counter_concurrent() {

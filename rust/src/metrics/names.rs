@@ -1,0 +1,47 @@
+//! The single source of truth for `serve_*` metric family names.
+//!
+//! Every family the serve stack emits is declared here once; code sites
+//! reference these constants, the README family table documents the same
+//! set, and `dobi lint`'s `metric-drift` rule fails the build if any of the
+//! three drifts (a bare `"serve_…"` literal elsewhere in `rust/src` is a
+//! deny-level finding). `scripts/serve_smoke.py` parses this file and
+//! asserts the live `{"op":"metrics"}` output stays within this vocabulary.
+
+/// Sessions admitted by the scheduler, labeled by `variant`.
+pub const SESSIONS_OPENED: &str = "serve_sessions_opened";
+/// Sessions retired, labeled by `variant` and terminal `reason`.
+pub const SESSIONS_FINISHED: &str = "serve_sessions_finished";
+/// Decoded tokens streamed to clients, labeled by `variant`.
+pub const TOKENS_EMITTED: &str = "serve_tokens_emitted";
+/// Gauge: requests parked in the admission queue.
+pub const QUEUE_DEPTH: &str = "serve_queue_depth";
+/// Gauge: sessions currently holding KV slots.
+pub const ACTIVE_SESSIONS: &str = "serve_active_sessions";
+/// Gauge: bytes pinned by resident KV caches.
+pub const KV_BYTES: &str = "serve_kv_bytes";
+/// Prefill latency histogram (seconds), labeled by `variant`.
+pub const PREFILL_SECONDS: &str = "serve_prefill_seconds";
+/// Per-step decode latency histogram (seconds), labeled by `variant`.
+pub const STEP_SECONDS: &str = "serve_step_seconds";
+/// Dimensionless histogram of fused-batch sizes.
+pub const FUSED_BATCH_SIZE: &str = "serve_fused_batch_size";
+/// Hot swaps that installed a new variant, labeled by `variant`.
+pub const SWAP_APPLIED: &str = "serve_swap_applied";
+/// Hot swaps rejected (unknown variant, hash mismatch), labeled by `variant`.
+pub const SWAP_FAILED: &str = "serve_swap_failed";
+/// Gauge: sessions still pinned to a superseded variant.
+pub const SWAP_DRAINING_SESSIONS: &str = "serve_swap_draining_sessions";
+/// Superseded variants whose last session drained and were released.
+pub const SWAP_RELEASES_GCED: &str = "serve_swap_releases_gced";
+/// Speculative tokens proposed by the draft variant, labeled by `variant`.
+pub const SPEC_PROPOSED: &str = "serve_spec_proposed";
+/// Speculative tokens accepted by the verifier, labeled by `variant`.
+pub const SPEC_ACCEPTED: &str = "serve_spec_accepted";
+/// Dimensionless histogram of per-round speculative acceptance rates.
+pub const SPEC_ACCEPT_RATE: &str = "serve_spec_accept_rate";
+/// Gauge: microseconds spent drafting in the last speculative round.
+pub const SPEC_DRAFT_US: &str = "serve_spec_draft_us";
+/// Gauge: microseconds spent verifying in the last speculative round.
+pub const SPEC_VERIFY_US: &str = "serve_spec_verify_us";
+/// Mutexes found poisoned and recovered by [`super::lock_or_recover`].
+pub const LOCK_POISONED: &str = "serve_lock_poisoned";

@@ -42,8 +42,8 @@ use crate::coordinator::request::SubmitError;
 use crate::json::Json;
 use crate::lowrank::{set_decode_threads, FactorizedModel};
 use crate::mathx::{sample_logits, XorShift};
-use crate::metrics::{Counter, Registry};
-use crate::trace::{export_chrome, RequestTiming, TraceBuffer};
+use crate::metrics::{lock_or_recover, names, Counter, Registry};
+use crate::trace::{export_chrome, phases, RequestTiming, TraceBuffer};
 
 use super::registry::{load_release, ModelRelease, VariantRegistry, VariantStatus};
 use super::session::DecodeSession;
@@ -213,7 +213,7 @@ impl ServeRuntime {
                         let served: Vec<String> =
                             loads.iter().map(|(id, _)| id.clone()).collect();
                         {
-                            let mut reg = shared2.registry.lock().unwrap();
+                            let mut reg = lock_or_recover(&shared2.registry);
                             for (id, l) in loads {
                                 reg.install(&id, l);
                             }
@@ -234,7 +234,7 @@ impl ServeRuntime {
     /// (the servable subset of what [`Self::start`] was asked for, plus
     /// anything a later swap introduced).
     pub fn variants(&self) -> Vec<String> {
-        self.shared.registry.lock().unwrap().variants()
+        lock_or_recover(&self.shared.registry).variants()
     }
 
     /// Hot-swap `variant` to whatever its manifest entry currently points
@@ -249,19 +249,19 @@ impl ServeRuntime {
         let outcome = (|| -> Result<VariantStatus> {
             let manifest = Manifest::load(&self.artifacts)?;
             let loaded = load_release(&manifest, variant)?;
-            let mut reg = self.shared.registry.lock().unwrap();
+            let mut reg = lock_or_recover(&self.shared.registry);
             let generation = reg.install(variant, loaded);
             let status = reg
                 .snapshot()
                 .into_iter()
                 .find(|s| s.variant == variant)
-                .expect("just installed");
+                .ok_or_else(|| anyhow!("`{variant}` vanished from the registry mid-install"))?;
             debug_assert_eq!(status.generation, generation);
             Ok(status)
         })();
         match &outcome {
-            Ok(_) => m.counter_with("serve_swap_applied", &[("variant", variant)]).inc(),
-            Err(_) => m.counter_with("serve_swap_failed", &[("variant", variant)]).inc(),
+            Ok(_) => m.counter_with(names::SWAP_APPLIED, &[("variant", variant)]).inc(),
+            Err(_) => m.counter_with(names::SWAP_FAILED, &[("variant", variant)]).inc(),
         }
         outcome
     }
@@ -269,17 +269,17 @@ impl ServeRuntime {
     /// Point-in-time view of the live variant table (generations,
     /// provenance, drain state) — the `{"op":"list"}` payload.
     pub fn registry_snapshot(&self) -> Vec<VariantStatus> {
-        self.shared.registry.lock().unwrap().snapshot()
+        lock_or_recover(&self.shared.registry).snapshot()
     }
 
     /// Queue a session.  Fails fast (no thread hop) on unknown variants
     /// and queue overflow — the same backpressure contract as
     /// `Engine::submit`.
     pub fn open(&self, req: SessionRequest) -> Result<(), SubmitError> {
-        if !self.shared.registry.lock().unwrap().has(&req.variant) {
+        if !lock_or_recover(&self.shared.registry).has(&req.variant) {
             return Err(SubmitError::UnknownVariant(req.variant));
         }
-        let depth = self.shared.metrics.gauge("serve_queue_depth");
+        let depth = self.shared.metrics.gauge(names::QUEUE_DEPTH);
         if depth.get() >= self.cfg.queue_depth as i64 {
             return Err(SubmitError::QueueFull {
                 variant: req.variant,
@@ -357,13 +357,13 @@ impl ServeRuntime {
         // the aggregate view sums every label set
         let m = &self.shared.metrics;
         ServeStats {
-            active_sessions: m.gauge("serve_active_sessions").get(),
-            queue_depth: m.gauge("serve_queue_depth").get(),
-            sessions_opened: m.family_total("serve_sessions_opened"),
-            sessions_finished: m.family_total("serve_sessions_finished"),
-            tokens_emitted: m.family_total("serve_tokens_emitted"),
-            swaps: m.family_total("serve_swap_applied"),
-            draining_sessions: m.gauge("serve_swap_draining_sessions").get(),
+            active_sessions: m.gauge(names::ACTIVE_SESSIONS).get(),
+            queue_depth: m.gauge(names::QUEUE_DEPTH).get(),
+            sessions_opened: m.family_total(names::SESSIONS_OPENED),
+            sessions_finished: m.family_total(names::SESSIONS_FINISHED),
+            tokens_emitted: m.family_total(names::TOKENS_EMITTED),
+            swaps: m.family_total(names::SWAP_APPLIED),
+            draining_sessions: m.gauge(names::SWAP_DRAINING_SESSIONS).get(),
         }
     }
 
@@ -390,7 +390,7 @@ impl ServeRuntime {
 
     pub fn shutdown(&self) {
         let _ = self.tx.send(Cmd::Stop);
-        if let Some(j) = self.join.lock().unwrap().take() {
+        if let Some(j) = lock_or_recover(&self.join).take() {
             let _ = j.join();
         }
     }
@@ -457,24 +457,24 @@ struct SpecPair {
 fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeShared>) {
     let m = &shared.metrics;
     let trace = shared.trace.clone();
-    let queue_g = m.gauge("serve_queue_depth");
-    let active_g = m.gauge("serve_active_sessions");
-    let kv_bytes_g = m.gauge("serve_kv_bytes");
-    let draining_g = m.gauge("serve_swap_draining_sessions");
-    let gced_c = m.counter("serve_swap_releases_gced");
-    let fused_h = m.histogram("serve_fused_batch_size");
+    let queue_g = m.gauge(names::QUEUE_DEPTH);
+    let active_g = m.gauge(names::ACTIVE_SESSIONS);
+    let kv_bytes_g = m.gauge(names::KV_BYTES);
+    let draining_g = m.gauge(names::SWAP_DRAINING_SESSIONS);
+    let gced_c = m.counter(names::SWAP_RELEASES_GCED);
+    let fused_h = m.histogram(names::FUSED_BATCH_SIZE);
     // serve_sessions_opened / serve_sessions_finished /
     // serve_tokens_emitted / serve_prefill_seconds / serve_step_seconds /
     // serve_spec_proposed / serve_spec_accepted are LABELED families
     // (variant, finish reason) resolved where the label values are known
     // — per admission, per tick group, per eviction; the hot per-token
     // path uses the child Arc cached on `Running`.
-    let spec_rate_h = m.histogram("serve_spec_accept_rate");
+    let spec_rate_h = m.histogram(names::SPEC_ACCEPT_RATE);
     // per-tick phase gauges: wall µs the last tick spent drafting vs
     // verifying across its speculative sessions — the heterogeneous
     // step-cost signal (0/0 on ticks with no speculative session)
-    let spec_draft_us_g = m.gauge("serve_spec_draft_us");
-    let spec_verify_us_g = m.gauge("serve_spec_verify_us");
+    let spec_draft_us_g = m.gauge(names::SPEC_DRAFT_US);
+    let spec_verify_us_g = m.gauge(names::SPEC_VERIFY_US);
     // GEMM worker count for the forwards this thread runs (thread-local:
     // the knob threads the scheduler's decode, not every caller's matmul).
     set_decode_threads(cfg.decode_threads);
@@ -523,7 +523,7 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
             let Some(batch) = waiting.poll_up_to(Instant::now(), free) else { break };
             for p in batch.requests {
                 queue_g.sub(1);
-                m.counter_with("serve_sessions_opened", &[("variant", &p.req.variant)])
+                m.counter_with(names::SESSIONS_OPENED, &[("variant", &p.req.variant)])
                     .inc();
                 // Resolve the variant's CURRENT release at admission time
                 // — this is the hot-swap routing point: sessions opened
@@ -532,7 +532,7 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
                 // sessions resolve their draft under the same lock (same
                 // routing semantics, plus the shape-compatibility check).
                 let (release, draft) = {
-                    let reg = shared.registry.lock().unwrap();
+                    let reg = lock_or_recover(&shared.registry);
                     let release = reg.current(&p.req.variant);
                     let draft = match (&release, &p.req.spec) {
                         (Some(rel), Some(sp)) => Some(reg.resolve_draft(&sp.draft, rel)),
@@ -592,7 +592,7 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
             // the plain sessions still fuse into one trunk walk.
             let (mut specs, mut plain): (Vec<&mut Running>, Vec<&mut Running>) =
                 group.into_iter().partition(|r| r.spec.is_some());
-            let step_h = m.histogram_with("serve_step_seconds", &[("variant", &var)]);
+            let step_h = m.histogram_with(names::STEP_SECONDS, &[("variant", &var)]);
             let mut fused_done = false;
             if plain.len() >= 2 {
                 let tokens: Vec<i32> = plain.iter().map(|r| r.last).collect();
@@ -612,7 +612,7 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
                     // fused win shows up as fewer/faster ticks, not as a
                     // fabricated per-session divide
                     let dt = t0.elapsed();
-                    trace.push_span("fused_step", 0, t0, t0 + dt, || {
+                    trace.push_span(phases::FUSED_STEP, 0, t0, t0 + dt, || {
                         format!("{var} gen={generation} batch={}", plain.len())
                     });
                     for (r, logits) in plain.iter_mut().zip(&all) {
@@ -646,10 +646,10 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
         let mut evicted = 0usize;
         active.retain_mut(|r| {
             if r.dead {
-                m.counter_with("serve_sessions_finished",
+                m.counter_with(names::SESSIONS_FINISHED,
                                &[("variant", &r.session.variant), ("reason", "error")])
                     .inc();
-                trace.push_span("request", r.session.id, r.enqueued, Instant::now(), || {
+                trace.push_span(phases::REQUEST, r.session.id, r.enqueued, Instant::now(), || {
                     format!("{} reason=error tokens={}", r.session.variant, r.emitted)
                 });
                 evicted += 1;
@@ -659,14 +659,14 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
                 // count before notifying: a client that wakes on Done must
                 // already see itself in `sessions_finished`
                 m.counter_with(
-                    "serve_sessions_finished",
+                    names::SESSIONS_FINISHED,
                     &[("variant", &r.session.variant), ("reason", reason.as_str())],
                 )
                 .inc();
                 r.timing.tokens = r.emitted as u64;
                 // record the lifecycle span BEFORE notifying: a client that
                 // wakes on Done and drains the ring must find its request
-                trace.push_span("request", r.session.id, r.enqueued, Instant::now(), || {
+                trace.push_span(phases::REQUEST, r.session.id, r.enqueued, Instant::now(), || {
                     format!("{} reason={} tokens={}", r.session.variant, reason.as_str(),
                             r.emitted)
                 });
@@ -693,7 +693,7 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
         // for finished sessions, so superseded releases whose last session
         // just ended are reclaimable right now.
         {
-            let mut reg = shared.registry.lock().unwrap();
+            let mut reg = lock_or_recover(&shared.registry);
             let freed = reg.sweep();
             if freed > 0 {
                 gced_c.add(freed as u64);
@@ -702,7 +702,7 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
         }
         if evicted > 0 {
             // sweep span covers the evictions plus the registry GC pass
-            trace.push_span("evict_sweep", 0, t_evict, Instant::now(),
+            trace.push_span(phases::EVICT_SWEEP, 0, t_evict, Instant::now(),
                             || format!("evicted={evicted}"));
         }
     }
@@ -724,7 +724,7 @@ fn scheduler_main(cfg: ServeConfig, rx: mpsc::Receiver<Cmd>, shared: Arc<ServeSh
     }
     for r in active.drain(..) {
         // these were opened (counted): close the books before notifying
-        m.counter_with("serve_sessions_finished",
+        m.counter_with(names::SESSIONS_FINISHED,
                        &[("variant", &r.session.variant), ("reason", "error")])
             .inc();
         let _ = r.events.send(GenEvent::Error("scheduler stopped".into()));
@@ -743,7 +743,7 @@ fn step_serial(r: &mut Running, model: &FactorizedModel,
             let dt = t0.elapsed();
             r.timing.decode_us += dt.as_micros() as u64;
             step_h.observe(dt);
-            trace.push_span("step", r.session.id, t0, t0 + dt,
+            trace.push_span(phases::STEP, r.session.id, t0, t0 + dt,
                             || r.session.variant.clone());
             emit_next(r, &logits);
         }
@@ -765,9 +765,13 @@ fn step_spec(r: &mut Running, target_model: &FactorizedModel,
              step_h: &crate::metrics::Histogram, rate_h: &crate::metrics::Histogram,
              m: &Registry, trace: &TraceBuffer) -> (f64, f64) {
     let t0 = Instant::now();
-    let outcome = {
-        let pair = r.spec.as_mut().expect("step_spec on a plain session");
-        pair.decoder.round(&pair.release.model, target_model, &mut r.session, r.last)
+    let outcome = match r.spec.as_mut() {
+        Some(pair) => {
+            pair.decoder.round(&pair.release.model, target_model, &mut r.session, r.last)
+        }
+        // the caller partitions on spec.is_some(); reaching here is a
+        // scheduler bug, surfaced as a session error instead of a panic
+        None => Err(anyhow!("step_spec called on a plain session")),
     };
     match outcome {
         Ok(round) => {
@@ -778,9 +782,9 @@ fn step_spec(r: &mut Running, target_model: &FactorizedModel,
             r.timing.verify_us += (round.verify_s * 1e6) as u64;
             step_h.observe(dt);
             let variant = r.session.variant.as_str();
-            m.counter_with("serve_spec_proposed", &[("variant", variant)])
+            m.counter_with(names::SPEC_PROPOSED, &[("variant", variant)])
                 .add(round.proposed as u64);
-            m.counter_with("serve_spec_accepted", &[("variant", variant)])
+            m.counter_with(names::SPEC_ACCEPTED, &[("variant", variant)])
                 .add(round.accepted as u64);
             if round.proposed > 0 {
                 rate_h.observe_value(round.accepted as f64 / round.proposed as f64);
@@ -788,12 +792,12 @@ fn step_spec(r: &mut Running, target_model: &FactorizedModel,
             // the round ran draft-then-verify back to back: reconstruct
             // both phase spans from the measured phase wall times
             let d_end = t0 + Duration::from_secs_f64(round.draft_s);
-            trace.push_span("spec_draft", r.session.id, t0, d_end,
+            trace.push_span(phases::SPEC_DRAFT, r.session.id, t0, d_end,
                             || format!("{variant} proposed={}", round.proposed));
             let v_start = t1
                 .checked_sub(Duration::from_secs_f64(round.verify_s))
                 .unwrap_or(t0);
-            trace.push_span("spec_verify", r.session.id, v_start, t1,
+            trace.push_span(phases::SPEC_VERIFY, r.session.id, v_start, t1,
                             || format!("{variant} accepted={}", round.accepted));
             for row in &round.rows {
                 emit_next(r, row);
@@ -826,9 +830,9 @@ fn admit(p: Pending, release: Option<Arc<ModelRelease>>,
     let t_adm = Instant::now();
     let req = p.req;
     let queue_us = t_adm.saturating_duration_since(p.enqueued).as_micros() as u64;
-    trace.push_span("queue_wait", id, p.enqueued, t_adm, || req.variant.clone());
+    trace.push_span(phases::QUEUE_WAIT, id, p.enqueued, t_adm, || req.variant.clone());
     let finished = |reason: &str| {
-        m.counter_with("serve_sessions_finished",
+        m.counter_with(names::SESSIONS_FINISHED,
                        &[("variant", &req.variant), ("reason", reason)])
             .inc();
     };
@@ -921,15 +925,15 @@ fn admit(p: Pending, release: Option<Arc<ModelRelease>>,
         }
     };
     let dt = t0.elapsed();
-    m.histogram_with("serve_prefill_seconds", &[("variant", &req.variant)])
+    m.histogram_with(names::PREFILL_SECONDS, &[("variant", &req.variant)])
         .observe(dt);
-    trace.push_span("prefill", id, t0, t0 + dt, || {
+    trace.push_span(phases::PREFILL, id, t0, t0 + dt, || {
         format!("{} prompt={} spec={}", req.variant, keep, spec.is_some())
     });
-    trace.push_span("admission", id, t_adm, Instant::now(), || req.variant.clone());
+    trace.push_span(phases::ADMISSION, id, t_adm, Instant::now(), || req.variant.clone());
     // resolved once per session so the per-token hot path below never
     // takes the registry map lock, only the child counter's atomic
-    let tokens_c = m.counter_with("serve_tokens_emitted", &[("variant", &req.variant)]);
+    let tokens_c = m.counter_with(names::TOKENS_EMITTED, &[("variant", &req.variant)]);
     let mut r = Running {
         session,
         release: release.clone(),

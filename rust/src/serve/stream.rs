@@ -85,6 +85,31 @@ pub enum Request {
     Trace { clear: bool },
 }
 
+/// Protocol v1 vocabulary: every op [`parse_request`] dispatches on.
+/// The README's protocol table documents exactly this set — `dobi lint`'s
+/// `protocol-drift` rule holds the two (and the parse code) in sync.
+pub const PROTOCOL_OPS: &[&str] = &["generate", "swap", "list", "health", "metrics", "trace"];
+
+/// Protocol v1 vocabulary: every request field [`parse_request`] reads
+/// (including the `spec` object's nested `draft`/`k`). Same drift contract
+/// as [`PROTOCOL_OPS`].
+pub const PROTOCOL_FIELDS: &[&str] = &[
+    "op",
+    "variant",
+    "prompt",
+    "image",
+    "max_tokens",
+    "temperature",
+    "seed",
+    "stop_token",
+    "stream",
+    "spec",
+    "draft",
+    "k",
+    "format",
+    "clear",
+];
+
 /// A malformed request line: which field was wrong (when attributable)
 /// and why.  Serialized as `{"id", "error", "field"}` by the server.
 #[derive(Debug, Clone)]
@@ -250,9 +275,9 @@ pub fn parse_request(req: &Json) -> Result<Request, ReqError> {
             variant: opt_str(req, "variant", "")?,
             prompt: opt_str(req, "prompt", "")?,
             image: opt_image(req)?,
-            max_tokens: opt_uint(req, "max_tokens", Some(32))?.unwrap() as usize,
+            max_tokens: opt_uint(req, "max_tokens", Some(32))?.unwrap_or(32) as usize,
             temperature: opt_num(req, "temperature", 0.0)? as f32,
-            seed: opt_uint(req, "seed", Some(0))?.unwrap(),
+            seed: opt_uint(req, "seed", Some(0))?.unwrap_or(0),
             stop_token: opt_uint(req, "stop_token", None)?.map(|t| t as i32),
             stream: opt_bool(req, "stream", false)?,
             spec: opt_spec(req)?,

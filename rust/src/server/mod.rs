@@ -39,6 +39,7 @@ use crate::json::Json;
 use crate::mathx::{sample_logits, XorShift};
 use crate::serve::{stream as sstream, FinishReason, ServeRuntime, SpecParams};
 use crate::tokenizer::ByteTokenizer;
+use crate::trace::phases;
 
 pub struct Server {
     pub addr: std::net::SocketAddr,
@@ -182,7 +183,7 @@ fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
     let mut reader = BufReader::new(stream);
     let mut req_no = 0u64;
     if let Some(rt) = &runtime {
-        rt.trace().push_instant("accept", 0, || peer.to_string());
+        rt.trace().push_instant(phases::ACCEPT, 0, || peer.to_string());
     }
     loop {
         let mut line = String::new();
@@ -221,7 +222,7 @@ fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
             }
         };
         if let Some(rt) = &runtime {
-            rt.trace().push_span("parse", 0, t_parse, Instant::now(),
+            rt.trace().push_span(phases::PARSE, 0, t_parse, Instant::now(),
                                  || format!("req={req_no} bytes={}", line.len()));
         }
         let reply = match request {
@@ -269,7 +270,9 @@ fn handle_client(stream: TcpStream, engine: Option<Arc<Engine>>,
                     sstream::Request::Health => "health",
                     sstream::Request::Metrics { .. } => "metrics",
                     sstream::Request::Trace { .. } => "trace",
-                    sstream::Request::Generate(_) => unreachable!("handled above"),
+                    // generate is handled by the first match arm; keep a
+                    // harmless name rather than a panic on the serve path
+                    sstream::Request::Generate(_) => "generate",
                 };
                 error_line(req_no,
                            &format!("control op `{name}` disabled (--no-control)"),
@@ -405,7 +408,10 @@ fn control_reply(rt: &ServeRuntime, id: u64, op: &sstream::Request) -> String {
             m.insert("trace".into(), rt.trace_json(*clear));
             Json::Obj(m).to_string()
         }
-        sstream::Request::Generate(_) => unreachable!("generate is not a control op"),
+        // the dispatcher never routes Generate here; answer a structured
+        // error instead of panicking the connection thread if it ever does
+        sstream::Request::Generate(_) => error_line(id, "generate is not a control op",
+                                                    Some("op")),
     }
 }
 

@@ -1,0 +1,47 @@
+//! The single source of truth for request-lifecycle phase names.
+//!
+//! Every phase recorded into the trace ring (via `span`/`push_span`/
+//! `push_instant`) is declared here once. [`ALL`] is the exporter's
+//! known-phase list: `export_chrome` categorizes events by membership, and
+//! `dobi lint`'s `trace-phase-pairing` rule fails the build if a phase is
+//! recorded as a bare string literal, missing from [`ALL`], or absent from
+//! the README phase table (and vice versa).
+
+/// Connection accepted by the server listener (instant).
+pub const ACCEPT: &str = "accept";
+/// Request line read and parsed into a typed op (server side).
+pub const PARSE: &str = "parse";
+/// Time spent parked in the admission queue.
+pub const QUEUE_WAIT: &str = "queue_wait";
+/// Admission control: capacity check + KV slot grant.
+pub const ADMISSION: &str = "admission";
+/// Prompt prefill through the backend.
+pub const PREFILL: &str = "prefill";
+/// One decode step for one session.
+pub const STEP: &str = "step";
+/// One fused decode step across the batch.
+pub const FUSED_STEP: &str = "fused_step";
+/// Draft-variant proposal inside a speculative round.
+pub const SPEC_DRAFT: &str = "spec_draft";
+/// Target-variant verification inside a speculative round.
+pub const SPEC_VERIFY: &str = "spec_verify";
+/// Whole-request envelope from enqueue to final token.
+pub const REQUEST: &str = "request";
+/// Idle-session eviction sweep.
+pub const EVICT_SWEEP: &str = "evict_sweep";
+
+/// The exporter's known-phase list. Events whose name is absent here are
+/// categorized `other` in the Chrome trace — which the lint treats as drift.
+pub const ALL: &[&str] = &[
+    ACCEPT,
+    PARSE,
+    QUEUE_WAIT,
+    ADMISSION,
+    PREFILL,
+    STEP,
+    FUSED_STEP,
+    SPEC_DRAFT,
+    SPEC_VERIFY,
+    REQUEST,
+    EVICT_SWEEP,
+];

@@ -1,0 +1,27 @@
+// flag-drift fixture stand-in for rust/src/config/mod.rs: declares every
+// config field the FLAG_MAP targets.
+pub struct ServeConfig {
+    pub max_batch: usize,
+    pub batch_deadline_us: usize,
+    pub queue_depth: usize,
+    pub max_sessions: usize,
+    pub decode_threads: usize,
+    pub spec_draft: Option<String>,
+    pub spec_k: usize,
+    pub trace_buffer: usize,
+}
+
+pub struct CompressConfig {
+    pub ratio: f64,
+    pub budget: Option<usize>,
+    pub precision: String,
+    pub calib_batches: usize,
+    pub calib_batch: usize,
+    pub calib_seq: usize,
+    pub seed: u64,
+    pub k_min: usize,
+    pub alloc: String,
+    pub train_iters: usize,
+    pub train_lr: f64,
+    pub svd_threads: usize,
+}

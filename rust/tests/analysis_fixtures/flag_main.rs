@@ -1,0 +1,29 @@
+// flag-drift fixture stand-in for rust/src/main.rs: fn serve / fn
+// compress read every FLAG_MAP flag plus one infra flag through the Args
+// accessors, exactly the shape the rule scans for.
+fn serve(args: &Args) {
+    let _port = args.get_or("port", "7433");
+    let _mb = args.usize_or("max-batch", 8);
+    let _dl = args.usize_or("deadline-us", 500);
+    let _qd = args.usize_or("queue-depth", 64);
+    let _ms = args.usize_or("max-sessions", 8);
+    let _dt = args.usize_or("decode-threads", 1);
+    let _sd = args.get("spec-draft");
+    let _sk = args.usize_or("spec-k", 4);
+    let _tb = args.usize_or("trace-buffer", 4096);
+}
+
+fn compress(args: &Args) {
+    let _r = args.f64_or("ratio", 0.4);
+    let _b = args.get("budget");
+    let _p = args.get_or("precision", "q8");
+    let _cb = args.usize_or("calib-batches", 8);
+    let _cz = args.usize_or("calib-batch", 4);
+    let _cs = args.usize_or("calib-seq", 64);
+    let _se = args.usize_or("seed", 0);
+    let _km = args.usize_or("k-min", 8);
+    let _al = args.get_or("alloc", "waterfill");
+    let _ti = args.usize_or("train-iters", 200);
+    let _tl = args.f64_or("train-lr", 0.05);
+    let _st = args.usize_or("svd-threads", 1);
+}

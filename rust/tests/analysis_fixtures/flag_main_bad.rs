@@ -1,0 +1,29 @@
+// flag-drift positive fixture: reads an undeclared flag ("mystery-flag",
+// in neither FLAG_MAP nor FLAG_INFRA nor the README) and drops the
+// "seed" read so its FLAG_MAP entry goes stale.
+fn serve(args: &Args) {
+    let _port = args.get_or("port", "7433");
+    let _mb = args.usize_or("max-batch", 8);
+    let _dl = args.usize_or("deadline-us", 500);
+    let _qd = args.usize_or("queue-depth", 64);
+    let _ms = args.usize_or("max-sessions", 8);
+    let _dt = args.usize_or("decode-threads", 1);
+    let _sd = args.get("spec-draft");
+    let _sk = args.usize_or("spec-k", 4);
+    let _tb = args.usize_or("trace-buffer", 4096);
+    let _my = args.get("mystery-flag");
+}
+
+fn compress(args: &Args) {
+    let _r = args.f64_or("ratio", 0.4);
+    let _b = args.get("budget");
+    let _p = args.get_or("precision", "q8");
+    let _cb = args.usize_or("calib-batches", 8);
+    let _cz = args.usize_or("calib-batch", 4);
+    let _cs = args.usize_or("calib-seq", 64);
+    let _km = args.usize_or("k-min", 8);
+    let _al = args.get_or("alloc", "waterfill");
+    let _ti = args.usize_or("train-iters", 200);
+    let _tl = args.f64_or("train-lr", 0.05);
+    let _st = args.usize_or("svd-threads", 1);
+}

@@ -1,0 +1,13 @@
+// lock-order positive fixture: both acquisition forms taken against the
+// declared registry -> metrics -> trace order. Two fns, one deny each.
+pub fn tick(slot: &Mutex<u32>, metrics: &Mutex<u32>) {
+    let mut s = slot.lock().unwrap_or_else(poison);
+    let m = metrics.lock().unwrap_or_else(poison);
+    *s += *m;
+}
+
+pub fn drain(&self) {
+    let g = lock_or_recover(&self.slots);
+    let r = lock_or_recover(&self.registry);
+    g.extend(r.iter());
+}

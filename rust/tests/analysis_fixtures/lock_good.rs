@@ -1,0 +1,16 @@
+// lock-order negative fixture: nested acquisitions in declared order
+// (registry, then metrics, then trace) — no findings expected. The rule
+// is deliberately drop-blind (source order within one fn IS the order),
+// so even sequential sections must respect registry -> metrics -> trace.
+pub fn tick(&self) {
+    let r = self.registry.lock().unwrap_or_else(poison);
+    let m = lock_or_recover(&self.metrics);
+    let t = lock_or_recover(&self.slot);
+    drop((r, m, t));
+}
+
+pub fn same_class_twice(&self) {
+    let c = self.counters.lock().unwrap_or_else(poison);
+    let h = lock_or_recover(&self.histograms);
+    drop((c, h));
+}

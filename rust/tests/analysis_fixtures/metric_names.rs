@@ -1,0 +1,3 @@
+// metric-drift fixture stand-in for rust/src/metrics/names.rs.
+pub const OPENED: &str = "serve_sessions_opened";
+pub const DEPTH: &str = "serve_queue_depth";

@@ -1,0 +1,5 @@
+// metric-drift positive fixture: STALE is undocumented in the README
+// section and never referenced by any other file.
+pub const OPENED: &str = "serve_sessions_opened";
+pub const DEPTH: &str = "serve_queue_depth";
+pub const STALE: &str = "serve_stale_gauge";

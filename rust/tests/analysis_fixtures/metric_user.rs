@@ -1,0 +1,8 @@
+// metric-drift fixture: a clean consumer — references every names::
+// constant and spells no family as a string literal.
+use crate::metrics::names::{DEPTH, OPENED};
+
+pub fn observe(reg: &Registry) {
+    reg.counter(OPENED).inc(1);
+    reg.gauge(DEPTH).set(0);
+}

@@ -1,0 +1,10 @@
+// metric-drift positive fixture: a family spelled as a string literal
+// instead of a names:: constant (plus clean uses so OPENED/DEPTH do not
+// show up as unused).
+use crate::metrics::names::{DEPTH, OPENED};
+
+pub fn observe(reg: &Registry) {
+    reg.counter(OPENED).inc(1);
+    reg.gauge(DEPTH).set(0);
+    reg.counter("serve_rogue_total").inc(1);
+}

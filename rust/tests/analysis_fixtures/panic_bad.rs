@@ -1,0 +1,19 @@
+// panic-freedom positive fixture: three deny sites, one warn site, and a
+// #[cfg(test)] block whose unwrap must NOT be flagged.
+pub fn handle(x: Option<u32>, v: &[u32], m: &std::sync::Mutex<u32>) -> u32 {
+    let a = x.unwrap();
+    let b = *m.lock().expect("poisoned");
+    if v.is_empty() {
+        panic!("empty input");
+    }
+    let c = v[0];
+    a + b + c
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let _ = Some(1).unwrap();
+    }
+}

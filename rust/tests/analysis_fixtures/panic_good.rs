@@ -1,0 +1,9 @@
+// panic-freedom negative fixture: the same shape of function written the
+// way the serve request path must be written — no findings expected.
+pub fn handle(x: Option<u32>, v: &[u32]) -> u32 {
+    let Some(a) = x else {
+        return 0;
+    };
+    let c = v.first().copied().unwrap_or(0);
+    a + c
+}

@@ -1,0 +1,16 @@
+// protocol-drift fixture stand-in for rust/src/serve/stream.rs: a tiny
+// v1 vocabulary, every token of which is actually parsed.
+pub const PROTOCOL_OPS: &[&str] = &["generate", "swap"];
+pub const PROTOCOL_FIELDS: &[&str] = &["op", "prompt"];
+
+pub fn parse_request(line: &str) -> u32 {
+    let op = field(line, "op");
+    let prompt = field(line, "prompt");
+    if op == "generate" && !prompt.is_empty() {
+        1
+    } else if op == "swap" {
+        2
+    } else {
+        0
+    }
+}

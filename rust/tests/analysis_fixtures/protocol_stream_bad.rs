@@ -1,0 +1,16 @@
+// protocol-drift positive fixture: "health" is declared in PROTOCOL_OPS
+// but no parse code ever matches it.
+pub const PROTOCOL_OPS: &[&str] = &["generate", "swap", "health"];
+pub const PROTOCOL_FIELDS: &[&str] = &["op", "prompt"];
+
+pub fn parse_request(line: &str) -> u32 {
+    let op = field(line, "op");
+    let prompt = field(line, "prompt");
+    if op == "generate" && !prompt.is_empty() {
+        1
+    } else if op == "swap" {
+        2
+    } else {
+        0
+    }
+}

@@ -1,0 +1,8 @@
+// Suppression-hygiene fixture: an unknown rule name and a reasonless
+// allow — each must surface as a deny-level "suppression" finding on a
+// full run.
+pub fn quiet() -> u32 {
+    let a = 1; // dobi-lint: allow(no-such-rule, typo'd rule names must not pass)
+    let b = 2; // dobi-lint: allow(panic-freedom)
+    a + b
+}

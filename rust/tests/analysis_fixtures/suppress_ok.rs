@@ -1,0 +1,8 @@
+// Suppression fixture: both placements (line above, same line) with a
+// rule name and a reason — the findings they cover must be dropped.
+pub fn boot(x: Option<u32>, y: Option<u32>) -> u32 {
+    // dobi-lint: allow(panic-freedom, startup path runs before any session exists)
+    let a = x.unwrap();
+    let b = y.unwrap(); // dobi-lint: allow(panic-freedom, same startup invariant)
+    a + b
+}

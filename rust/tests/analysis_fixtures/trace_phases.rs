@@ -1,0 +1,5 @@
+// trace-phase-pairing fixture stand-in for rust/src/trace/phases.rs.
+pub const PREFILL: &str = "prefill";
+pub const STEP: &str = "step";
+
+pub const ALL: &[&str] = &[PREFILL, STEP];

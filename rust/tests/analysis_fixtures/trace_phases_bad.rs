@@ -1,0 +1,7 @@
+// trace-phase-pairing positive fixture: GHOST is missing from ALL (and
+// from the README table), and ALL references MISSING which is no const.
+pub const PREFILL: &str = "prefill";
+pub const STEP: &str = "step";
+pub const GHOST: &str = "ghost";
+
+pub const ALL: &[&str] = &[PREFILL, STEP, MISSING];

@@ -1,0 +1,8 @@
+// trace-phase-pairing fixture: a clean recorder — phases always arrive
+// as phases:: constants, never string literals.
+use crate::trace::phases;
+
+pub fn record(buf: &TraceBuffer, t0: u64, t1: u64) {
+    buf.push_span(phases::PREFILL, 1, t0, t1, detail);
+    buf.push_instant(phases::STEP, 1, t1, detail);
+}

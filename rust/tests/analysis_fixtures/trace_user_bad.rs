@@ -1,0 +1,5 @@
+// trace-phase-pairing positive fixture: a record site passing a string
+// literal instead of a phases:: constant.
+pub fn record(buf: &TraceBuffer, t0: u64, t1: u64) {
+    buf.push_span("prefill", 1, t0, t1, detail);
+}

@@ -1,0 +1,319 @@
+//! Fixture-backed tests for `dobi lint` (`rust/src/analysis/`).
+//!
+//! Each rule gets a positive fixture (the violation it exists to catch)
+//! and a negative fixture (the compliant way to write the same thing),
+//! assembled into synthetic [`Context`]s so the tests pin rule behavior
+//! without depending on the live tree. The live tree itself is covered
+//! by `tree_is_lint_clean` (`--ignored`; CI runs it in the lint job —
+//! it needs the checkout layout, not just the crate).
+
+use dobi::analysis::{run, Context, Finding, Severity, SourceFile};
+
+fn ctx(files: &[(&str, &str)], readme: &str) -> Context {
+    Context {
+        files: files.iter().map(|(p, t)| SourceFile::new(p, t)).collect(),
+        readme: readme.to_string(),
+    }
+}
+
+fn denies(findings: &[Finding]) -> Vec<&Finding> {
+    findings.iter().filter(|f| f.severity == Severity::Deny).collect()
+}
+
+fn has(findings: &[Finding], needle: &str) -> bool {
+    findings.iter().any(|f| f.message.contains(needle))
+}
+
+// ---------------------------------------------------------------------------
+// panic-freedom
+
+const PANIC_BAD: &str = include_str!("analysis_fixtures/panic_bad.rs");
+const PANIC_GOOD: &str = include_str!("analysis_fixtures/panic_good.rs");
+
+#[test]
+fn panic_freedom_catches_unwrap_expect_panic_and_indexing() {
+    let c = ctx(&[("rust/src/serve/fixture.rs", PANIC_BAD)], "");
+    let f = run(&c, Some("panic-freedom")).unwrap();
+    assert_eq!(denies(&f).len(), 3, "findings: {f:?}");
+    assert!(has(&f, "`.unwrap()`"), "findings: {f:?}");
+    assert!(has(&f, "`.expect()`"), "findings: {f:?}");
+    assert!(has(&f, "`panic!`"), "findings: {f:?}");
+    let warns: Vec<_> = f.iter().filter(|x| x.severity == Severity::Warn).collect();
+    assert_eq!(warns.len(), 1, "findings: {f:?}");
+    assert!(warns[0].message.contains("indexing"), "findings: {f:?}");
+}
+
+#[test]
+fn panic_freedom_passes_compliant_code() {
+    let c = ctx(&[("rust/src/serve/fixture.rs", PANIC_GOOD)], "");
+    let f = run(&c, Some("panic-freedom")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn panic_freedom_only_covers_the_serve_path_dirs() {
+    // The same violations outside serve/, server/, trace/, metrics/ are
+    // out of scope (compress may unwrap on startup).
+    let c = ctx(&[("rust/src/compress/fixture.rs", PANIC_BAD)], "");
+    let f = run(&c, Some("panic-freedom")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// lock-order
+
+const LOCK_BAD: &str = include_str!("analysis_fixtures/lock_bad.rs");
+const LOCK_GOOD: &str = include_str!("analysis_fixtures/lock_good.rs");
+
+#[test]
+fn lock_order_catches_both_acquisition_forms() {
+    let c = ctx(&[("rust/src/serve/fixture.rs", LOCK_BAD)], "");
+    let f = run(&c, Some("lock-order")).unwrap();
+    assert_eq!(denies(&f).len(), 2, "findings: {f:?}");
+    assert!(has(&f, "fn tick"), "findings: {f:?}");
+    assert!(has(&f, "fn drain"), "findings: {f:?}");
+    assert!(has(&f, "registry -> metrics -> trace"), "findings: {f:?}");
+}
+
+#[test]
+fn lock_order_passes_declared_order() {
+    let c = ctx(&[("rust/src/serve/fixture.rs", LOCK_GOOD)], "");
+    let f = run(&c, Some("lock-order")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// metric-drift
+
+const METRIC_NAMES: &str = include_str!("analysis_fixtures/metric_names.rs");
+const METRIC_NAMES_BAD: &str = include_str!("analysis_fixtures/metric_names_bad.rs");
+const METRIC_USER: &str = include_str!("analysis_fixtures/metric_user.rs");
+const METRIC_USER_BAD: &str = include_str!("analysis_fixtures/metric_user_bad.rs");
+const METRIC_README_GOOD: &str = include_str!("analysis_fixtures/metric_readme_good.md");
+const METRIC_README_BAD: &str = include_str!("analysis_fixtures/metric_readme_bad.md");
+
+#[test]
+fn metric_drift_passes_consistent_artifacts() {
+    let c = ctx(
+        &[
+            ("rust/src/metrics/names.rs", METRIC_NAMES),
+            ("rust/src/serve/user.rs", METRIC_USER),
+        ],
+        METRIC_README_GOOD,
+    );
+    let f = run(&c, Some("metric-drift")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn metric_drift_catches_all_four_drift_directions() {
+    let c = ctx(
+        &[
+            ("rust/src/metrics/names.rs", METRIC_NAMES_BAD),
+            ("rust/src/serve/user.rs", METRIC_USER_BAD),
+        ],
+        METRIC_README_BAD,
+    );
+    let f = run(&c, Some("metric-drift")).unwrap();
+    assert_eq!(denies(&f).len(), 4, "findings: {f:?}");
+    assert!(has(&f, "`serve_stale_gauge` (const STALE) is undocumented"), "findings: {f:?}");
+    assert!(has(&f, "`serve_ghost_total` but metrics::names has no such constant"), "findings: {f:?}");
+    assert!(has(&f, "literal `\"serve_rogue_total\"`"), "findings: {f:?}");
+    assert!(has(&f, "STALE is never referenced"), "findings: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// protocol-drift
+
+const PROTOCOL_STREAM: &str = include_str!("analysis_fixtures/protocol_stream.rs");
+const PROTOCOL_STREAM_BAD: &str = include_str!("analysis_fixtures/protocol_stream_bad.rs");
+const PROTOCOL_README_GOOD: &str = include_str!("analysis_fixtures/protocol_readme_good.md");
+const PROTOCOL_README_BAD: &str = include_str!("analysis_fixtures/protocol_readme_bad.md");
+
+#[test]
+fn protocol_drift_passes_matching_table() {
+    let c = ctx(&[("rust/src/serve/stream.rs", PROTOCOL_STREAM)], PROTOCOL_README_GOOD);
+    let f = run(&c, Some("protocol-drift")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn protocol_drift_catches_readme_drift_both_directions() {
+    let c = ctx(&[("rust/src/serve/stream.rs", PROTOCOL_STREAM)], PROTOCOL_README_BAD);
+    let f = run(&c, Some("protocol-drift")).unwrap();
+    assert_eq!(denies(&f).len(), 2, "findings: {f:?}");
+    assert!(has(&f, "op `swap` is parsed but missing"), "findings: {f:?}");
+    assert!(has(&f, "field `stream` that stream.rs does not declare"), "findings: {f:?}");
+}
+
+#[test]
+fn protocol_drift_catches_declared_but_unparsed_op() {
+    let c = ctx(&[("rust/src/serve/stream.rs", PROTOCOL_STREAM_BAD)], PROTOCOL_README_GOOD);
+    let f = run(&c, Some("protocol-drift")).unwrap();
+    assert!(has(&f, "declared op `health` never appears"), "findings: {f:?}");
+    assert!(has(&f, "op `health` is parsed but missing"), "findings: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// flag-drift
+
+const FLAG_MAIN: &str = include_str!("analysis_fixtures/flag_main.rs");
+const FLAG_MAIN_BAD: &str = include_str!("analysis_fixtures/flag_main_bad.rs");
+const FLAG_CONFIG: &str = include_str!("analysis_fixtures/flag_config.rs");
+const FLAG_README: &str = include_str!("analysis_fixtures/flag_readme.md");
+
+#[test]
+fn flag_drift_passes_fully_mapped_flags() {
+    let c = ctx(
+        &[
+            ("rust/src/main.rs", FLAG_MAIN),
+            ("rust/src/config/mod.rs", FLAG_CONFIG),
+        ],
+        FLAG_README,
+    );
+    let f = run(&c, Some("flag-drift")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn flag_drift_catches_unmapped_unmentioned_and_stale_flags() {
+    let c = ctx(
+        &[
+            ("rust/src/main.rs", FLAG_MAIN_BAD),
+            ("rust/src/config/mod.rs", FLAG_CONFIG),
+        ],
+        FLAG_README,
+    );
+    let f = run(&c, Some("flag-drift")).unwrap();
+    assert_eq!(denies(&f).len(), 3, "findings: {f:?}");
+    assert!(has(&f, "`--mystery-flag` is read by serve/compress but never mentioned"), "findings: {f:?}");
+    assert!(has(&f, "`--mystery-flag` has no entry"), "findings: {f:?}");
+    assert!(has(&f, "stale FLAG_MAP entry: `--seed`"), "findings: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// trace-phase-pairing
+
+const TRACE_PHASES: &str = include_str!("analysis_fixtures/trace_phases.rs");
+const TRACE_PHASES_BAD: &str = include_str!("analysis_fixtures/trace_phases_bad.rs");
+const TRACE_USER: &str = include_str!("analysis_fixtures/trace_user.rs");
+const TRACE_USER_BAD: &str = include_str!("analysis_fixtures/trace_user_bad.rs");
+const TRACE_README_GOOD: &str = include_str!("analysis_fixtures/trace_readme_good.md");
+const TRACE_README_BAD: &str = include_str!("analysis_fixtures/trace_readme_bad.md");
+
+#[test]
+fn trace_phases_passes_paired_artifacts() {
+    let c = ctx(
+        &[
+            ("rust/src/trace/phases.rs", TRACE_PHASES),
+            ("rust/src/trace/user.rs", TRACE_USER),
+        ],
+        TRACE_README_GOOD,
+    );
+    let f = run(&c, Some("trace-phase-pairing")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn trace_phases_catches_every_pairing_break() {
+    let c = ctx(
+        &[
+            ("rust/src/trace/phases.rs", TRACE_PHASES_BAD),
+            ("rust/src/trace/user.rs", TRACE_USER_BAD),
+        ],
+        TRACE_README_BAD,
+    );
+    let f = run(&c, Some("trace-phase-pairing")).unwrap();
+    assert_eq!(denies(&f).len(), 5, "findings: {f:?}");
+    assert!(has(&f, "GHOST is missing from phases::ALL"), "findings: {f:?}");
+    assert!(has(&f, "references `MISSING`"), "findings: {f:?}");
+    assert!(has(&f, "`ghost` (const GHOST) is undocumented"), "findings: {f:?}");
+    assert!(has(&f, "string literal `\"prefill\"`"), "findings: {f:?}");
+    assert!(has(&f, "lists `bogus`"), "findings: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
+// suppressions and the full synthetic repo
+
+const SUPPRESS_OK: &str = include_str!("analysis_fixtures/suppress_ok.rs");
+const SUPPRESS_BAD: &str = include_str!("analysis_fixtures/suppress_bad.rs");
+
+#[test]
+fn suppressions_drop_findings_on_line_and_line_above() {
+    let c = ctx(&[("rust/src/serve/boot.rs", SUPPRESS_OK)], "");
+    let f = run(&c, Some("panic-freedom")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn suppression_for_a_different_rule_does_not_apply() {
+    // The allow() names lock-order; the unwraps stay findings.
+    let text = SUPPRESS_OK.replace("panic-freedom", "lock-order");
+    let c = ctx(&[("rust/src/serve/boot.rs", text.as_str())], "");
+    let f = run(&c, Some("panic-freedom")).unwrap();
+    assert_eq!(denies(&f).len(), 2, "findings: {f:?}");
+}
+
+/// A synthetic repo where every cross-artifact invariant holds: all six
+/// rules plus suppression hygiene come back empty.
+fn clean_repo_files() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("rust/src/metrics/names.rs", METRIC_NAMES),
+        ("rust/src/serve/user.rs", METRIC_USER),
+        ("rust/src/serve/stream.rs", PROTOCOL_STREAM),
+        ("rust/src/trace/phases.rs", TRACE_PHASES),
+        ("rust/src/trace/user.rs", TRACE_USER),
+        ("rust/src/main.rs", FLAG_MAIN),
+        ("rust/src/config/mod.rs", FLAG_CONFIG),
+    ]
+}
+
+fn clean_repo_readme() -> String {
+    format!("{METRIC_README_GOOD}\n{PROTOCOL_README_GOOD}\n{TRACE_README_GOOD}\n{FLAG_README}")
+}
+
+#[test]
+fn full_run_over_clean_synthetic_repo_is_empty() {
+    let c = ctx(&clean_repo_files(), &clean_repo_readme());
+    let f = run(&c, None).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn suppression_hygiene_flags_unknown_rule_and_missing_reason() {
+    let mut files = clean_repo_files();
+    files.push(("rust/src/util.rs", SUPPRESS_BAD));
+    let c = ctx(&files, &clean_repo_readme());
+    let f = run(&c, None).unwrap();
+    assert_eq!(denies(&f).len(), 2, "findings: {f:?}");
+    assert!(f.iter().all(|x| x.rule == "suppression"), "findings: {f:?}");
+    assert!(has(&f, "unknown rule `no-such-rule`"), "findings: {f:?}");
+    assert!(has(&f, "needs a reason"), "findings: {f:?}");
+}
+
+#[test]
+fn unknown_rule_name_is_an_error() {
+    let c = ctx(&[], "");
+    let err = run(&c, Some("no-such-rule")).unwrap_err().to_string();
+    assert!(err.contains("unknown rule"), "{err}");
+    assert!(err.contains("panic-freedom"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// the live tree
+
+/// The real repo must be deny-clean. Ignored by default because it needs
+/// the full checkout layout (README.md beside rust/); the CI lint job
+/// runs it explicitly with `--ignored`.
+#[test]
+#[ignore]
+fn tree_is_lint_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("crate dir has a parent")
+        .to_path_buf();
+    let c = Context::load(&root).expect("load repo tree");
+    let f = run(&c, None).expect("run all rules");
+    let d = denies(&f);
+    assert!(d.is_empty(), "deny findings on the live tree: {d:#?}");
+}

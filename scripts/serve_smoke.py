@@ -37,6 +37,8 @@ pass/fail signal.
 """
 import json
 import os
+import pathlib
+import re
 import socket
 import sys
 import threading
@@ -275,6 +277,24 @@ def main():
         assert needle in ptext, f"prom exposition missing {needle!r}:\n{ptext}"
     print(f"[smoke] metrics ok: {opened} sessions opened across labeled families")
 
+    # Every live family must be declared in rust/src/metrics/names.rs — the
+    # single source of truth the `dobi lint` metric-drift rule enforces.
+    names_rs = pathlib.Path(__file__).resolve().parent.parent / (
+        "rust/src/metrics/names.rs")
+    if names_rs.exists():
+        declared = set(re.findall(r'const\s+\w+\s*:\s*&str\s*=\s*"([a-z_]+)"',
+                                  names_rs.read_text()))
+        assert declared, f"no metric constants parsed from {names_rs}"
+        live = {line.split("{")[0].split()[0] for line in mtext.splitlines()
+                if line.strip()}
+        undeclared = {f for f in live if f.startswith("serve_")} - declared
+        assert not undeclared, (
+            f"live metric families missing from metrics::names: {undeclared}")
+        print(f"[smoke] metric names ok: {len(declared)} declared families "
+              f"cover all live serve_* output")
+    else:
+        print(f"[smoke] metric names check skipped: {names_rs} not found")
+
     request({"op": "trace"})
     tr = json.loads(rfile.readline())
     assert tr.get("op") == "trace" and tr.get("enabled") is True, tr
@@ -298,6 +318,24 @@ def main():
     assert n_request_spans > 0, "no completed request spans in trace"
     print(f"[smoke] trace ok: {len(events)} events, {n_request_spans} request "
           f"spans, phases {sorted(names)}")
+
+    # Every recorded phase must be declared in rust/src/trace/phases.rs
+    # (the trace-phase-pairing rule's constants module); the exporter tags
+    # known phases cat="serve".
+    phases_rs = pathlib.Path(__file__).resolve().parent.parent / (
+        "rust/src/trace/phases.rs")
+    if phases_rs.exists():
+        known = set(re.findall(r'const\s+\w+\s*:\s*&str\s*=\s*"([a-z_]+)"',
+                               phases_rs.read_text()))
+        assert known, f"no phase constants parsed from {phases_rs}"
+        unknown = names - known
+        assert not unknown, f"trace phases missing from trace::phases: {unknown}"
+        assert all(e.get("cat") == "serve" for e in events), (
+            "declared phases must export with cat='serve'")
+        print(f"[smoke] phase names ok: {len(known)} declared phases cover "
+              f"the trace")
+    else:
+        print(f"[smoke] phase names check skipped: {phases_rs} not found")
 
     # --- `--no-control` twin: metrics/trace refused, generate still serves ---
     nc_port = int(sys.argv[5]) if len(sys.argv) > 5 else None
