@@ -34,8 +34,8 @@ pub const RULES: &[Rule] = &[
     },
     Rule {
         name: "metric-drift",
-        summary: "serve_* family names agree across metrics::names, code, and the \
-                  README family table",
+        summary: "serve_*/compress_* family names agree across metrics::names, code, \
+                  and the README family table",
         run: metric_drift,
     },
     Rule {
@@ -52,8 +52,9 @@ pub const RULES: &[Rule] = &[
     },
     Rule {
         name: "trace-phase-pairing",
-        summary: "trace phases agree across trace::phases, record sites, the exporter's \
-                  known-phase list, and the README Observability table",
+        summary: "trace phases (serve and compress_* lifecycles) agree across \
+                  trace::phases, record sites, the exporter's known-phase list, and \
+                  the README Observability table",
         run: trace_phases,
     },
 ];
@@ -218,34 +219,43 @@ fn table_rows(sec: &str) -> Vec<(u32, &str)> {
         .collect()
 }
 
-/// Is `s` a metric family name (`serve_` plus a nonempty lowercase tail)?
+/// The namespaces metric families live in: the serve request path and the
+/// compression pipeline.
+const FAMILY_PREFIXES: &[&str] = &["serve_", "compress_"];
+
+/// Is `s` a metric family name (`serve_`/`compress_` plus a nonempty
+/// lowercase tail)?
 fn is_family(s: &str) -> bool {
-    match s.strip_prefix("serve_") {
+    FAMILY_PREFIXES.iter().any(|p| match s.strip_prefix(p) {
         Some(rest) => {
             !rest.is_empty() && rest.bytes().all(|c| c.is_ascii_lowercase() || c == b'_')
         }
         None => false,
-    }
+    })
 }
 
 /// All metric family names appearing anywhere in `text`.
 fn families_in(text: &str) -> BTreeSet<String> {
     let b = text.as_bytes();
     let mut out = BTreeSet::new();
-    let mut i = 0usize;
     let ident = |c: u8| c.is_ascii_alphanumeric() || c == b'_';
-    while i + 6 <= b.len() {
-        if &b[i..i + 6] == b"serve_" && (i == 0 || !ident(b[i - 1])) {
-            let mut j = i + 6;
-            while j < b.len() && (b[j].is_ascii_lowercase() || b[j] == b'_') {
-                j += 1;
+    for prefix in FAMILY_PREFIXES {
+        let p = prefix.as_bytes();
+        let n = p.len();
+        let mut i = 0usize;
+        while i + n <= b.len() {
+            if &b[i..i + n] == p && (i == 0 || !ident(b[i - 1])) {
+                let mut j = i + n;
+                while j < b.len() && (b[j].is_ascii_lowercase() || b[j] == b'_') {
+                    j += 1;
+                }
+                if j > i + n {
+                    out.insert(String::from_utf8_lossy(&b[i..j]).into_owned());
+                }
+                i = j;
+            } else {
+                i += 1;
             }
-            if j > i + 6 {
-                out.insert(String::from_utf8_lossy(&b[i..j]).into_owned());
-            }
-            i = j;
-        } else {
-            i += 1;
         }
     }
     out
@@ -493,7 +503,10 @@ fn metric_drift(ctx: &Context) -> Vec<Finding> {
         }
     }
     for f in &ctx.files {
-        if f.path.ends_with(NAMES_RS) {
+        // trace::phases declares `compress_*` phase names as string consts;
+        // those are phase values (trace-phase-pairing's jurisdiction), not
+        // bare metric-family literals.
+        if f.path.ends_with(NAMES_RS) || f.path.ends_with(PHASES_RS) {
             continue;
         }
         for t in &f.code {
@@ -690,7 +703,7 @@ const FLAG_MAP: &[(&str, &str)] = &[
 /// (addresses, paths, mode switches). Still require a README mention.
 const FLAG_INFRA: &[&str] = &[
     "artifacts", "variants", "port", "backend", "stream", "no-stream", "no-control",
-    "out", "append", "replace", "calib", "variant", "synth",
+    "out", "append", "replace", "calib", "variant", "synth", "trace-out", "progress",
 ];
 
 const FLAG_ACCESSORS: &[&str] = &["get", "get_or", "usize_or", "f64_or", "has"];

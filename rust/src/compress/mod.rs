@@ -17,25 +17,31 @@
 //!   gradients, Adam + exact budget renormalization): `--alloc learned`.
 //! * [`remap`]    — IPCA dominant-subspace tracking, EYM-optimal weight
 //!   reconstruction `W~ = W V V^T`, and the symmetric-sqrt factor split.
+//! * [`report`]   — the per-release run report (`<variant>.run.json`):
+//!   phase wall-clock shares, per-target table, train trajectory.
 //! * [`pipeline`] — the whole-model driver + `.dobiw`/manifest writers
 //!   (factor-only manifests with an empty `hlo` map, served through the
-//!   router's any-seq mode).
+//!   router's any-seq mode), instrumented with `compress_*` trace phases
+//!   and metric families.
 
 pub mod calib;
 pub mod pipeline;
 pub mod rank;
 pub mod remap;
+pub mod report;
 pub mod svd;
 pub mod train;
 
 pub use calib::{collect, sample_windows, synth_calib_tokens, tap_key, Calibration};
-pub use pipeline::{append_artifacts, append_artifacts_opts, compress_model, eval_loss,
-                   gc_orphan_stores, write_artifacts, CompressedArtifact};
+pub use pipeline::{append_artifacts, append_artifacts_opts, compress_model,
+                   compress_model_traced, eval_loss, gc_orphan_stores, write_artifacts,
+                   CompressTelemetry, CompressedArtifact};
 pub use rank::{allocate_ranks, whitened_spectrum, whitener, RankAllocator, TargetSpectrum,
                Waterfill, Whitener};
 pub use remap::{reconstruct_factors, Ipca};
-pub use svd::{cholesky_lower, set_svd_threads, svd_thin, svd_thin_f64, Svd, SvdF64};
-pub use train::{learn_ranks, AllocPick, LearnedAlloc, TrainConfig, TrainReport};
+pub use report::{PhaseShare, RunReport, TargetReport};
+pub use svd::{cholesky_lower, last_sweeps, set_svd_threads, svd_thin, svd_thin_f64, Svd, SvdF64};
+pub use train::{learn_ranks, AllocPick, LearnedAlloc, TrainConfig, TrainReport, TrainSample};
 
 /// Test helpers shared by this subsystem's unit-test modules.
 #[cfg(test)]

@@ -7,6 +7,8 @@
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -16,14 +18,52 @@ use crate::lowrank::kernel::{Factor, FactorData, FactorizedLinear, Linear};
 use crate::lowrank::model::{target_dims, LayerWeights, LAYER_MATS};
 use crate::lowrank::FactorizedModel;
 use crate::mathx::{self, XorShift};
+use crate::metrics::{names as metric_names, Registry};
 use crate::runtime::ForwardModel;
 use crate::storage::{encode_store, f16_tensor, f32_tensor, hash, i8_tensor, write_store, Tensor};
+use crate::trace::{phases, TraceBuffer};
 
 use super::calib;
 use super::rank::{whitener, RankAllocator, TargetSpectrum, Waterfill, Whitener};
 use super::remap::reconstruct_factors;
-use super::svd::set_svd_threads;
+use super::report::{RunReport, TargetReport};
+use super::svd::{last_sweeps, set_svd_threads};
 use super::train::{LearnedAlloc, TrainReport};
+
+/// Trace/metrics/progress sinks for one `dobi compress` run.  The
+/// compress pipeline records `compress_*` phase spans into `trace`,
+/// emits `compress_*` metric families into `metrics`, and (optionally)
+/// prints a line per phase to stderr.  The [`disabled`] form costs
+/// nothing measurable: the ring is inert at capacity 0 and the phase
+/// timing is a handful of `Instant` reads either way.
+///
+/// [`disabled`]: CompressTelemetry::disabled
+pub struct CompressTelemetry {
+    /// Ring the `compress_*` phase spans land in (export with
+    /// `trace::export_chrome` for Perfetto).
+    pub trace: Arc<TraceBuffer>,
+    /// Registry the `compress_*` metric families are emitted into.
+    pub metrics: Arc<Registry>,
+    /// Emit a line per pipeline phase to stderr (`--progress`).
+    pub progress: bool,
+}
+
+impl CompressTelemetry {
+    /// Live telemetry with a trace ring of `trace_cap` events
+    /// (0 keeps the ring inert, exactly like `--trace-buffer 0`).
+    pub fn new(trace_cap: usize, progress: bool) -> CompressTelemetry {
+        CompressTelemetry {
+            trace: Arc::new(TraceBuffer::new(trace_cap)),
+            metrics: Arc::new(Registry::default()),
+            progress,
+        }
+    }
+
+    /// Inert sinks — what the untraced [`compress_model`] wrapper uses.
+    pub fn disabled() -> CompressTelemetry {
+        CompressTelemetry::new(0, false)
+    }
+}
 
 /// Everything `dobi compress` produces for one model: the store tensors,
 /// the rank plan and its accounting, and an in-memory f32-factor twin
@@ -49,6 +89,9 @@ pub struct CompressedArtifact {
     /// The full knob set that produced this artifact — stamped verbatim
     /// into the release's provenance block.
     pub config: CompressConfig,
+    /// The structured run record the artifact writers persist as
+    /// `<variant>.run.json` (the write phase is appended at write time).
+    pub run_report: RunReport,
 }
 
 fn dense_weight(lin: &Linear, id: &str) -> Result<Vec<f32>> {
@@ -97,14 +140,32 @@ fn push_factor_tensors(out: &mut Vec<Tensor>, name: &str, w1: &[f32], w2: &[f32]
 /// the global budget (greedy waterfill or the learned differentiable
 /// optimizer, per `cfg.alloc`), reconstruct weights from truncated
 /// activations, and emit remap-quantized store tensors plus the in-memory
-/// reference twin.
+/// reference twin.  Untraced convenience wrapper over
+/// [`compress_model_traced`] with inert telemetry.
 pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressConfig,
                       calib_tokens: &[i32]) -> Result<CompressedArtifact> {
+    compress_model_traced(dense, model_name, cfg, calib_tokens, &CompressTelemetry::disabled())
+}
+
+/// [`compress_model`] with live telemetry: every pipeline phase lands in
+/// the trace ring as a `compress_*` span (per-target SVD and remap spans,
+/// learned-alloc iterations replayed as instants from the train
+/// trajectory), the `compress_*` metric families are emitted, and the
+/// returned artifact carries the structured [`RunReport`].
+pub fn compress_model_traced(dense: &FactorizedModel, model_name: &str, cfg: &CompressConfig,
+                             calib_tokens: &[i32],
+                             tel: &CompressTelemetry) -> Result<CompressedArtifact> {
     anyhow::ensure!(cfg.ratio > 0.0 && cfg.ratio <= 1.0,
                     "ratio {} outside (0, 1]", cfg.ratio);
     // Jacobi sweep workers for every SVD this run performs (whitened
     // spectra + IPCA folds); results are bit-identical at any count.
     set_svd_threads(cfg.svd_threads);
+    let run_start = Instant::now();
+    let phase_obs = |name: &'static str, d: Duration| {
+        tel.metrics
+            .histogram_with(metric_names::COMPRESS_PHASE_SECONDS, &[("phase", name)])
+            .observe(d);
+    };
     let d = dense.d_model;
     let ff = dense.d_ff;
 
@@ -123,19 +184,67 @@ pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressC
     let target_params: usize = dims.iter().map(|&(m, n)| m * n).sum();
     let fixed_params = count_fixed_params(dense);
     let total_params = fixed_params + target_params;
+    if tel.progress {
+        eprintln!("[compress] inventory: {} targets, {} total params", names.len(), total_params);
+    }
 
     // Calibration + whitened truncation-loss spectra.  Targets that
     // multiply the same activations (wq/wk/wv; w_gate/w_up) share one
     // whitener — the Gram + Cholesky is the expensive part of scoring.
+    let calib_start = Instant::now();
     let cal = calib::collect(dense, calib_tokens, cfg.calib_batches, cfg.calib_batch,
                              cfg.calib_seq, cfg.seed)?;
+    let calib_end = Instant::now();
+    tel.trace.push_span(phases::COMPRESS_CALIB, 0, calib_start, calib_end, || {
+        format!("batches={} batch={} seq={}", cfg.calib_batches, cfg.calib_batch, cfg.calib_seq)
+    });
+    phase_obs(phases::COMPRESS_CALIB, calib_end - calib_start);
+    let calib_secs = (calib_end - calib_start).as_secs_f64();
+    if tel.progress {
+        eprintln!("[compress] calib: {} windows of {}x{} in {calib_secs:.3}s",
+                  cfg.calib_batches, cfg.calib_batch, cfg.calib_seq);
+    }
+
     let mut whiteners: BTreeMap<String, Whitener> = BTreeMap::new();
     let mut spectra = Vec::with_capacity(names.len());
+    // (sweeps, seconds) of each target's spectrum SVD, manifest order —
+    // joined into the run report's per-target table by the remap loop.
+    let mut svd_meta: Vec<(usize, f64)> = Vec::with_capacity(names.len());
+    let mut whiten_secs = 0f64;
+    let mut svd_secs = 0f64;
     for ((name, w), &(m, n)) in names.iter().zip(&weights).zip(&dims) {
-        let wh = whiteners
-            .entry(calib::tap_key(name))
-            .or_insert_with(|| whitener(cal.batches(name), m));
-        spectra.push(wh.spectrum(name, w, n)?);
+        let key = calib::tap_key(name);
+        if !whiteners.contains_key(&key) {
+            let t = Instant::now();
+            let built = whitener(cal.batches(name), m);
+            let end = Instant::now();
+            whiten_secs += (end - t).as_secs_f64();
+            let tap = key.clone();
+            tel.trace.push_span(phases::COMPRESS_WHITEN, 0, t, end,
+                                || format!("tap={tap} m={m}"));
+            whiteners.insert(key.clone(), built);
+        }
+        let wh = whiteners.get(&key).ok_or_else(|| anyhow!("whitener for `{key}` vanished"))?;
+        let t = Instant::now();
+        let spec = wh.spectrum(name, w, n)?;
+        let end = Instant::now();
+        let sweeps = last_sweeps();
+        let sec = (end - t).as_secs_f64();
+        svd_secs += sec;
+        svd_meta.push((sweeps, sec));
+        tel.trace.push_span(phases::COMPRESS_SVD, 0, t, end, || {
+            format!("target={name} dims={m}x{n} sweeps={sweeps} threads={}", cfg.svd_threads)
+        });
+        tel.metrics
+            .counter_with(metric_names::COMPRESS_SVD_SWEEPS, &[("target", name)])
+            .add(sweeps as u64);
+        spectra.push(spec);
+    }
+    phase_obs(phases::COMPRESS_WHITEN, Duration::from_secs_f64(whiten_secs));
+    phase_obs(phases::COMPRESS_SVD, Duration::from_secs_f64(svd_secs));
+    if tel.progress {
+        eprintln!("[compress] spectra: {} targets (whiten {whiten_secs:.3}s, svd {svd_secs:.3}s)",
+                  names.len());
     }
 
     // Global budget (stored params, remapped accounting) -> per-target
@@ -151,15 +260,45 @@ pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressC
     let allocator: &dyn RankAllocator =
         learned.as_ref().map(|l| l as &dyn RankAllocator).unwrap_or(&Waterfill);
     debug_assert_eq!(allocator.name(), cfg.alloc.to_string());
+    let alloc_start = Instant::now();
     let (ks, _) = allocator.allocate(&spectra, target_budget, cfg.k_min);
+    let alloc_end = Instant::now();
     let train_report: Option<TrainReport> = learned.as_ref().and_then(|l| l.take_report());
+    tel.trace.push_span(phases::COMPRESS_ALLOC, 0, alloc_start, alloc_end, || {
+        format!("mode={} budget={target_budget} k_min={}", cfg.alloc, cfg.k_min)
+    });
+    phase_obs(phases::COMPRESS_ALLOC, alloc_end - alloc_start);
+    let alloc_secs = (alloc_end - alloc_start).as_secs_f64();
+    if let Some(r) = &train_report {
+        // Replay the optimizer trajectory into the ring as zero-width
+        // spans at their measured offsets — the allocator stays trace-
+        // agnostic behind the `RankAllocator` trait, yet Perfetto shows
+        // each sampled iteration inside the `compress_alloc` envelope.
+        for s in &r.trajectory {
+            let at = alloc_start + Duration::from_micros(s.t_us);
+            tel.trace.push_span(phases::COMPRESS_TRAIN_ITER, 0, at, at, || {
+                format!("iter={} tail={:.6} lambda={:.4} tau={:.4} expected_cost={:.1}",
+                        s.iter, s.tail, s.lambda, s.tau, s.expected_cost)
+            });
+        }
+    }
+    if tel.progress {
+        eprintln!("[compress] alloc: mode {} in {alloc_secs:.3}s", cfg.alloc);
+    }
 
     // Reconstruct + quantize each target; assemble the reference twin.
+    let codec = match cfg.precision {
+        Precision::F32 => "f32",
+        Precision::F16 => "f16",
+        Precision::Q8 => "q8",
+    };
     let mut tensors = Vec::new();
     tensors.push(f32_tensor("embed", vec![dense.vocab, d], &dense.embed));
     let mut ranks = BTreeMap::new();
     let mut stored_params = fixed_params;
     let mut ref_layers = Vec::with_capacity(dense.layers.len());
+    let mut target_rows: Vec<TargetReport> = Vec::with_capacity(names.len());
+    let mut remap_secs = 0f64;
     let mut ti = 0usize;
     for (li, layer) in dense.layers.iter().enumerate() {
         tensors.push(f32_tensor(&format!("layers.{li}.attn_norm"), vec![d], &layer.attn_norm));
@@ -168,9 +307,35 @@ pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressC
         for _ in LAYER_MATS {
             let name = &names[ti];
             let (m, n) = dims[ti];
+            let t = Instant::now();
             let (w1, w2, k) = reconstruct_factors(&weights[ti], m, n,
                                                   cal.batches(name), ks[ti]);
             push_factor_tensors(&mut tensors, name, &w1, &w2, m, n, k, cfg.precision);
+            let end = Instant::now();
+            remap_secs += (end - t).as_secs_f64();
+            tel.trace.push_span(phases::COMPRESS_REMAP, 0, t, end,
+                                || format!("target={name} rank={k} codec={codec}"));
+            let tail = spectra[ti].loss_at(k);
+            let err = recon_error(&weights[ti], &w1, &w2, m, n, k);
+            tel.metrics
+                .gauge_with(metric_names::COMPRESS_RANK_KEPT, &[("target", name)])
+                .set(k as i64);
+            tel.metrics
+                .histogram(metric_names::COMPRESS_TAIL_ENERGY_RATE)
+                .observe_value(tail);
+            let (svd_sweeps, svd_seconds) = svd_meta[ti];
+            target_rows.push(TargetReport {
+                name: name.clone(),
+                m,
+                n,
+                rank: k,
+                max_rank: spectra[ti].max_rank(),
+                tail_energy: tail,
+                recon_error: err,
+                svd_sweeps,
+                svd_seconds,
+                codec: codec.to_string(),
+            });
             mats.push(Linear::LowRank(FactorizedLinear::new(
                 name, Factor::f32(m, k, w1), Factor::f32(k, n, w2))?));
             ranks.insert(name.clone(), k);
@@ -212,6 +377,45 @@ pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressC
         AllocMode::Learned => "-learned",
     };
     let variant_id = format!("{model_name}/dobi{alloc_tag}_{:.0}", name_ratio * 100.0);
+    phase_obs(phases::COMPRESS_REMAP, Duration::from_secs_f64(remap_secs));
+    tel.metrics
+        .counter_with(metric_names::COMPRESS_TARGETS, &[("variant", &variant_id)])
+        .add(names.len() as u64);
+    if let Some(r) = &train_report {
+        tel.metrics
+            .counter_with(metric_names::COMPRESS_TRAIN_ITERS, &[("variant", &variant_id)])
+            .add(r.iters as u64);
+    }
+    let run_end = Instant::now();
+    let total_seconds = (run_end - run_start).as_secs_f64();
+    {
+        let vid = variant_id.clone();
+        let n_targets = names.len();
+        tel.trace.push_span(phases::COMPRESS_RUN, 0, run_start, run_end,
+                            || format!("variant={vid} targets={n_targets}"));
+    }
+    let mut run_report = RunReport {
+        variant_id: variant_id.clone(),
+        model: model_name.to_string(),
+        alloc: cfg.alloc.to_string(),
+        writer: "dobi-native".into(),
+        format: "DOBIW1".into(),
+        crate_version: env!("CARGO_PKG_VERSION").into(),
+        config: cfg.to_json(),
+        total_seconds,
+        phases: Vec::new(),
+        targets: target_rows,
+        train: train_report.clone(),
+    };
+    run_report.push_phase(phases::COMPRESS_CALIB, calib_secs);
+    run_report.push_phase(phases::COMPRESS_WHITEN, whiten_secs);
+    run_report.push_phase(phases::COMPRESS_SVD, svd_secs);
+    run_report.push_phase(phases::COMPRESS_ALLOC, alloc_secs);
+    run_report.push_phase(phases::COMPRESS_REMAP, remap_secs);
+    if tel.progress {
+        eprintln!("[compress] done: {variant_id} in {total_seconds:.3}s \
+                   (stored {stored_params}/{total_params} params)");
+    }
     let payload_bytes = tensors.iter().map(|t| t.data.len()).sum();
     let reference = FactorizedModel {
         id: variant_id.clone(),
@@ -243,7 +447,28 @@ pub fn compress_model(dense: &FactorizedModel, model_name: &str, cfg: &CompressC
         alloc: cfg.alloc.to_string(),
         train_report,
         config: cfg.clone(),
+        run_report,
     })
+}
+
+/// Relative Frobenius reconstruction error `‖W − W1·W2‖_F / ‖W‖_F` of one
+/// target's f32 factor pair (pre-quantization), f64 accumulation.
+fn recon_error(w: &[f32], w1: &[f32], w2: &[f32], m: usize, n: usize, k: usize) -> f64 {
+    let mut num = 0f64;
+    let mut den = 0f64;
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0f64;
+            for t in 0..k {
+                acc += w1[i * k + t] as f64 * w2[t * n + j] as f64;
+            }
+            let wv = w[i * n + j] as f64;
+            let diff = wv - acc;
+            num += diff * diff;
+            den += wv * wv;
+        }
+    }
+    if den > 0.0 { (num / den).sqrt() } else { 0.0 }
 }
 
 fn count_fixed_params(m: &FactorizedModel) -> usize {
@@ -330,6 +555,7 @@ fn variant_json(art: &CompressedArtifact, weights_file: &str) -> Json {
         ("ranks", ranks),
         ("alloc", Json::Str(art.alloc.clone())),
         ("provenance", provenance_json(art)),
+        ("run_report", Json::Str(RunReport::file_name(&art.variant_id))),
     ])
 }
 
@@ -352,13 +578,22 @@ pub fn manifest_json(art: &CompressedArtifact, weights_file: &str,
 }
 
 /// Write a self-contained artifacts dir (`manifest.json` + the compressed
-/// `.dobiw` store) loadable by `Manifest::load` + the native backend.
+/// `.dobiw` store + the `<variant>.run.json` run report) loadable by
+/// `Manifest::load` + the native backend.
 /// Deliberately does NOT garbage-collect stores a previous manifest in
 /// the dir referenced: an accidental `--out` into a populated artifacts
 /// dir already clobbers the manifest, but the store files stay
 /// recoverable on disk — deleting them is reserved for the explicit
 /// `--replace` path and [`gc_orphan_stores`].  Returns the weights path.
 pub fn write_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf> {
+    write_artifacts_traced(dir, art, &CompressTelemetry::disabled())
+}
+
+/// [`write_artifacts`] with telemetry: the write lands in the trace ring
+/// as a `compress_write` span and in the phase-seconds histogram.
+pub fn write_artifacts_traced(dir: &Path, art: &CompressedArtifact,
+                              tel: &CompressTelemetry) -> Result<PathBuf> {
+    let t = Instant::now();
     std::fs::create_dir_all(dir)
         .map_err(|e| anyhow!("creating {}: {e}", dir.display()))?;
     let weights_file = format!("{}.dobiw", art.variant_id.replace('/', "_"));
@@ -366,7 +601,34 @@ pub fn write_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf> 
     write_store(&wpath, &art.tensors)?;
     std::fs::write(dir.join("manifest.json"), manifest_json(art, &weights_file, 2, 16))
         .map_err(|e| anyhow!("writing manifest: {e}"))?;
+    let end = Instant::now();
+    record_write(dir, art, tel, t, end)?;
     Ok(wpath)
+}
+
+/// Shared tail of both writers: the `compress_write` span + phase metric,
+/// and the `<variant>.run.json` persistence with the write phase folded
+/// into the report's shares.
+fn record_write(dir: &Path, art: &CompressedArtifact, tel: &CompressTelemetry,
+                start: Instant, end: Instant) -> Result<()> {
+    let bytes = art.payload_bytes;
+    tel.trace.push_span(phases::COMPRESS_WRITE, 0, start, end,
+                        || format!("dir={} bytes={bytes}", dir.display()));
+    tel.metrics
+        .histogram_with(metric_names::COMPRESS_PHASE_SECONDS,
+                        &[("phase", phases::COMPRESS_WRITE)])
+        .observe(end - start);
+    let write_secs = (end - start).as_secs_f64();
+    let mut report = art.run_report.clone();
+    report.push_phase(phases::COMPRESS_WRITE, write_secs);
+    report.total_seconds += write_secs;
+    let rpath = dir.join(RunReport::file_name(&art.variant_id));
+    std::fs::write(&rpath, report.to_json().to_string())
+        .map_err(|e| anyhow!("writing run report {}: {e}", rpath.display()))?;
+    if tel.progress {
+        eprintln!("[compress] write: store + manifest + run report in {write_secs:.3}s");
+    }
+    Ok(())
 }
 
 /// Delete `.dobiw` stores in `dir` that no variant of its manifest
@@ -430,6 +692,13 @@ pub fn append_artifacts(dir: &Path, art: &CompressedArtifact) -> Result<PathBuf>
 /// ratio no longer leaks the superseded `.dobiw` on disk.
 pub fn append_artifacts_opts(dir: &Path, art: &CompressedArtifact,
                              replace: bool) -> Result<PathBuf> {
+    append_artifacts_traced(dir, art, replace, &CompressTelemetry::disabled())
+}
+
+/// [`append_artifacts_opts`] with telemetry — see [`write_artifacts_traced`].
+pub fn append_artifacts_traced(dir: &Path, art: &CompressedArtifact, replace: bool,
+                               tel: &CompressTelemetry) -> Result<PathBuf> {
+    let t0 = Instant::now();
     let mpath = dir.join("manifest.json");
     anyhow::ensure!(mpath.exists(),
                     "--append expects an existing artifacts dir (no {})", mpath.display());
@@ -495,6 +764,7 @@ pub fn append_artifacts_opts(dir: &Path, art: &CompressedArtifact,
         // store (foreign naming scheme, pre-rename manifest): collect it.
         gc_orphan_stores(dir)?;
     }
+    record_write(dir, art, tel, t0, Instant::now())?;
     Ok(wpath)
 }
 
@@ -801,6 +1071,91 @@ mod tests {
             assert!(v.provenance.is_some(), "{id} missing provenance");
             assert!(m2.open_store(v).is_ok(), "{id} must verify");
         }
+    }
+
+    #[test]
+    fn run_report_is_persisted_and_deterministic() {
+        let dense = tiny_model(dims(), 0, false);
+        let toks = corpus();
+        let a = compress_model(&dense, "tiny", &cfg(0.4, Precision::Q8), &toks).unwrap();
+        let b = compress_model(&dense, "tiny", &cfg(0.4, Precision::Q8), &toks).unwrap();
+        // the per-target table is deterministic modulo timing
+        assert_eq!(a.run_report.targets.len(), 7 * dims().layers);
+        for (x, y) in a.run_report.targets.iter().zip(&b.run_report.targets) {
+            assert_eq!((x.name.as_str(), x.m, x.n, x.rank, x.max_rank, &x.codec),
+                       (y.name.as_str(), y.m, y.n, y.rank, y.max_rank, &y.codec));
+            assert!((x.tail_energy - y.tail_energy).abs() < 1e-12, "{}", x.name);
+            assert!((x.recon_error - y.recon_error).abs() < 1e-12, "{}", x.name);
+            assert!(x.rank <= x.max_rank && x.recon_error.is_finite());
+            assert!(x.svd_sweeps >= 1, "{}: sweeps recorded", x.name);
+        }
+        // report rows line up with the allocated ranks
+        for t in &a.run_report.targets {
+            assert_eq!(a.ranks[&t.name], t.rank, "{}", t.name);
+        }
+        // persisted next to the store, referenced from the manifest
+        // entry, write phase folded in, shares summing to 1
+        let dir = std::env::temp_dir().join("dobi_compress_pipe_runreport");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_artifacts(&dir, &a).unwrap();
+        let file = RunReport::file_name(&a.variant_id);
+        let j = crate::json::load(&dir.join(&file)).unwrap();
+        let r = RunReport::from_json(&j).unwrap();
+        assert_eq!(r.variant_id, a.variant_id);
+        assert_eq!(r.targets.len(), a.run_report.targets.len());
+        let share_sum: f64 = r.phases.iter().map(|p| p.share).sum();
+        assert!((share_sum - 1.0).abs() < 1e-9, "shares sum to {share_sum}");
+        assert!(r.phases.iter().any(|p| p.phase == phases::COMPRESS_WRITE),
+                "write phase folded in at write time");
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.variant(&a.variant_id).unwrap();
+        assert_eq!(v.run_report.as_deref(), Some(file.as_str()),
+                   "manifest entry references the run report file");
+        assert!(r.render().contains("layers.0.wq"));
+        // the append path persists a report too
+        let a60 = compress_model(&dense, "tiny", &cfg(0.6, Precision::Q8), &toks).unwrap();
+        append_artifacts(&dir, &a60).unwrap();
+        assert!(dir.join(RunReport::file_name(&a60.variant_id)).exists());
+    }
+
+    #[test]
+    fn traced_compress_covers_every_declared_phase() {
+        let dense = tiny_model(dims(), 0, false);
+        let mut c = cfg(0.4, Precision::F32);
+        c.alloc = crate::config::AllocMode::Learned;
+        c.train_iters = 40;
+        let tel = CompressTelemetry::new(65_536, false);
+        let art = compress_model_traced(&dense, "tiny", &c, &corpus(), &tel).unwrap();
+        let dir = std::env::temp_dir().join("dobi_compress_pipe_traced");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_artifacts_traced(&dir, &art, &tel).unwrap();
+        let events = tel.trace.drain(false);
+        let seen: std::collections::BTreeSet<&str> = events.iter().map(|e| e.name).collect();
+        for ph in phases::ALL.iter().filter(|p| p.starts_with("compress_")) {
+            assert!(seen.contains(*ph), "phase {ph} never recorded");
+        }
+        for name in &seen {
+            assert!(phases::ALL.contains(name), "undeclared phase {name}");
+        }
+        // chrome export categorizes every event as `compress`
+        let doc = crate::trace::export_chrome(&events);
+        let evs = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(evs.len(), events.len());
+        assert!(evs.iter().all(|e| e.str_of("cat") == "compress"));
+        // metric families emitted under the declared names
+        assert_eq!(tel.metrics.family_total(metric_names::COMPRESS_TARGETS),
+                   7 * dims().layers as u64);
+        assert_eq!(tel.metrics.family_total(metric_names::COMPRESS_TRAIN_ITERS), 40);
+        // artifact report carries the learned trajectory for persistence
+        let train = art.run_report.train.as_ref().expect("learned run reports train block");
+        assert!(!train.trajectory.is_empty());
+        // a zero-capacity ring records nothing at all
+        let off = CompressTelemetry::new(0, false);
+        let _ = compress_model_traced(&dense, "tiny", &cfg(0.4, Precision::F32), &corpus(),
+                                      &off)
+            .unwrap();
+        assert_eq!(off.trace.recorded(), 0, "--trace-buffer 0 must record zero events");
+        assert!(off.trace.drain(true).is_empty());
     }
 
     #[test]

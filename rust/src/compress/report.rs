@@ -1,0 +1,467 @@
+//! The per-release compression run report: a structured record of one
+//! `dobi compress` invocation — toolchain + config echo, per-phase
+//! wall-clock shares, a per-target table (dims, kept rank, whitened tail
+//! energy, reconstruction error, SVD sweeps/time, quant codec), and the
+//! full learned-alloc training trajectory when that optimizer ran.
+//!
+//! The pipeline assembles a [`RunReport`] while it compresses, the
+//! artifact writers persist it as `<variant>.run.json` next to the store
+//! (referenced from the manifest entry's `run_report` field), and
+//! `dobi inspect --run <id>` renders it back as text tables or raw JSON.
+
+use anyhow::{anyhow, Result};
+
+use crate::bench::{fmt_f, Table};
+use crate::json::Json;
+
+use super::train::{AllocPick, TrainReport, TrainSample};
+
+/// Wall-clock accounting for one pipeline phase.  `share` is the fraction
+/// of the summed phase time (the run envelope is excluded from the sum so
+/// shares add up to 1 across the non-overlapping phases).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PhaseShare {
+    /// A `compress_*` phase name from [`crate::trace::phases`].
+    pub phase: String,
+    pub seconds: f64,
+    pub share: f64,
+}
+
+/// One compression target's row in the run report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TargetReport {
+    /// Manifest name, e.g. `layers.0.wq`.
+    pub name: String,
+    /// Input (row) dimension.
+    pub m: usize,
+    /// Output (column) dimension.
+    pub n: usize,
+    /// Rank the allocator kept.
+    pub rank: usize,
+    /// min(m, n) — the full rank the target was truncated from.
+    pub max_rank: usize,
+    /// Whitened tail energy at the kept rank (normalized truncation loss).
+    pub tail_energy: f64,
+    /// Relative reconstruction error `‖W − W1·W2‖_F / ‖W‖_F`.
+    pub recon_error: f64,
+    /// Jacobi sweeps the whitened spectrum SVD took.
+    pub svd_sweeps: usize,
+    /// Wall-clock seconds of that SVD.
+    pub svd_seconds: f64,
+    /// Stored-factor codec ("f32" / "f16" / "q8").
+    pub codec: String,
+}
+
+/// The whole-run record `dobi compress` persists per release.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub variant_id: String,
+    pub model: String,
+    /// Rank-allocation mode ("waterfill" / "learned").
+    pub alloc: String,
+    /// Writer identity, mirroring the provenance toolchain block.
+    pub writer: String,
+    pub format: String,
+    pub crate_version: String,
+    /// Verbatim `CompressConfig` dump.
+    pub config: Json,
+    /// Whole-run wall clock (the `compress_run` envelope).
+    pub total_seconds: f64,
+    /// Per-phase wall clock; shares sum to 1.
+    pub phases: Vec<PhaseShare>,
+    pub targets: Vec<TargetReport>,
+    /// Learned-alloc optimizer diagnostics incl. the sampled trajectory,
+    /// present iff the learned allocator ran.
+    pub train: Option<TrainReport>,
+}
+
+fn jnum(x: usize) -> Json {
+    Json::Num(x as f64)
+}
+
+fn pick_str(p: AllocPick) -> &'static str {
+    match p {
+        AllocPick::Learned => "learned",
+        AllocPick::Waterfill => "waterfill",
+    }
+}
+
+fn pick_parse(s: &str) -> Result<AllocPick> {
+    match s {
+        "learned" => Ok(AllocPick::Learned),
+        "waterfill" => Ok(AllocPick::Waterfill),
+        other => Err(anyhow!("run report: unknown alloc pick `{other}`")),
+    }
+}
+
+fn train_json(t: &TrainReport) -> Json {
+    let vec_json = |v: &[f64]| Json::Arr(v.iter().map(|&x| Json::Num(x)).collect());
+    let trajectory = t
+        .trajectory
+        .iter()
+        .map(|s| {
+            Json::obj(vec![
+                ("iter", jnum(s.iter)),
+                ("tail", Json::Num(s.tail)),
+                ("lambda", Json::Num(s.lambda)),
+                ("tau", Json::Num(s.tau)),
+                ("expected_cost", Json::Num(s.expected_cost)),
+                ("t_us", jnum(s.t_us as usize)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("iters", jnum(t.iters)),
+        ("tail_init", Json::Num(t.tail_init)),
+        ("tail_final", Json::Num(t.tail_final)),
+        ("expected_cost", Json::Num(t.expected_cost)),
+        ("lambda", Json::Num(t.lambda)),
+        ("shares", vec_json(&t.shares)),
+        ("sensitivity", vec_json(&t.sensitivity)),
+        ("learned_surrogate", Json::Num(t.learned_surrogate)),
+        ("waterfill_surrogate", Json::Num(t.waterfill_surrogate)),
+        ("picked", Json::Str(pick_str(t.picked).into())),
+        ("trajectory", Json::Arr(trajectory)),
+    ])
+}
+
+fn train_parse(j: &Json) -> Result<TrainReport> {
+    let missing = |k: &str| anyhow!("run report train block: missing `{k}`");
+    let num = |k: &str| j.get(k).and_then(Json::as_f64).ok_or_else(|| missing(k));
+    let vec_f64 = |k: &str| -> Result<Vec<f64>> {
+        j.get(k)
+            .and_then(Json::as_arr)
+            .ok_or_else(|| missing(k))?
+            .iter()
+            .map(|x| x.as_f64().ok_or_else(|| anyhow!("train `{k}`: non-numeric entry")))
+            .collect()
+    };
+    let mut trajectory = Vec::new();
+    for s in j.get("trajectory").and_then(Json::as_arr).ok_or_else(|| missing("trajectory"))? {
+        let field = |k: &str| {
+            s.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow!("trajectory sample: bad `{k}`"))
+        };
+        trajectory.push(TrainSample {
+            iter: field("iter")? as usize,
+            tail: field("tail")?,
+            lambda: field("lambda")?,
+            tau: field("tau")?,
+            expected_cost: field("expected_cost")?,
+            t_us: field("t_us")? as u64,
+        });
+    }
+    Ok(TrainReport {
+        iters: num("iters")? as usize,
+        tail_init: num("tail_init")?,
+        tail_final: num("tail_final")?,
+        expected_cost: num("expected_cost")?,
+        lambda: num("lambda")?,
+        shares: vec_f64("shares")?,
+        sensitivity: vec_f64("sensitivity")?,
+        learned_surrogate: num("learned_surrogate")?,
+        waterfill_surrogate: num("waterfill_surrogate")?,
+        picked: pick_parse(
+            j.get("picked").and_then(Json::as_str).ok_or_else(|| missing("picked"))?,
+        )?,
+        trajectory,
+    })
+}
+
+impl RunReport {
+    /// The on-disk file name next to the store: `<variant>.run.json` with
+    /// the `/` of the variant id flattened exactly like the `.dobiw` name.
+    pub fn file_name(variant_id: &str) -> String {
+        format!("{}.run.json", variant_id.replace('/', "_"))
+    }
+
+    /// Append one phase's wall clock and renormalize so the listed
+    /// shares always sum to 1 (the writers use this to fold the
+    /// `compress_write` phase in after the compute phases were recorded).
+    pub fn push_phase(&mut self, phase: &str, seconds: f64) {
+        self.phases.push(PhaseShare { phase: phase.to_string(), seconds, share: 0.0 });
+        let total: f64 = self.phases.iter().map(|p| p.seconds).sum();
+        if total > 0.0 {
+            for p in &mut self.phases {
+                p.share = p.seconds / total;
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let phases = self
+            .phases
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("phase", Json::Str(p.phase.clone())),
+                    ("seconds", Json::Num(p.seconds)),
+                    ("share", Json::Num(p.share)),
+                ])
+            })
+            .collect();
+        let targets = self
+            .targets
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("name", Json::Str(t.name.clone())),
+                    ("m", jnum(t.m)),
+                    ("n", jnum(t.n)),
+                    ("rank", jnum(t.rank)),
+                    ("max_rank", jnum(t.max_rank)),
+                    ("tail_energy", Json::Num(t.tail_energy)),
+                    ("recon_error", Json::Num(t.recon_error)),
+                    ("svd_sweeps", jnum(t.svd_sweeps)),
+                    ("svd_seconds", Json::Num(t.svd_seconds)),
+                    ("codec", Json::Str(t.codec.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("kind", Json::Str("dobi-run-report".into())),
+            ("variant_id", Json::Str(self.variant_id.clone())),
+            ("model", Json::Str(self.model.clone())),
+            ("alloc", Json::Str(self.alloc.clone())),
+            ("toolchain", Json::obj(vec![
+                ("writer", Json::Str(self.writer.clone())),
+                ("format", Json::Str(self.format.clone())),
+                ("crate_version", Json::Str(self.crate_version.clone())),
+            ])),
+            ("config", self.config.clone()),
+            ("total_seconds", Json::Num(self.total_seconds)),
+            ("phases", Json::Arr(phases)),
+            ("targets", Json::Arr(targets)),
+            (
+                "train",
+                match &self.train {
+                    Some(t) => train_json(t),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<RunReport> {
+        let missing = |k: &str| anyhow!("run report: missing `{k}`");
+        let str_field = |k: &str| -> Result<String> {
+            Ok(j.get(k).and_then(Json::as_str).ok_or_else(|| missing(k))?.to_string())
+        };
+        anyhow::ensure!(
+            j.get("kind").and_then(Json::as_str) == Some("dobi-run-report"),
+            "not a dobi run report (kind field mismatch)"
+        );
+        let tc = j.get("toolchain").ok_or_else(|| missing("toolchain"))?;
+        let tc_str = |k: &str| -> Result<String> {
+            Ok(tc.get(k).and_then(Json::as_str).ok_or_else(|| missing(k))?.to_string())
+        };
+        let mut phases = Vec::new();
+        for p in j.get("phases").and_then(Json::as_arr).ok_or_else(|| missing("phases"))? {
+            phases.push(PhaseShare {
+                phase: p
+                    .get("phase")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("phase row: missing `phase`"))?
+                    .to_string(),
+                seconds: p.get("seconds").and_then(Json::as_f64).unwrap_or(0.0),
+                share: p.get("share").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        let mut targets = Vec::new();
+        for t in j.get("targets").and_then(Json::as_arr).ok_or_else(|| missing("targets"))? {
+            let us = |k: &str| {
+                t.get(k).and_then(Json::as_usize).ok_or_else(|| anyhow!("target row: bad `{k}`"))
+            };
+            targets.push(TargetReport {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("target row: missing `name`"))?
+                    .to_string(),
+                m: us("m")?,
+                n: us("n")?,
+                rank: us("rank")?,
+                max_rank: us("max_rank")?,
+                tail_energy: t.get("tail_energy").and_then(Json::as_f64).unwrap_or(0.0),
+                recon_error: t.get("recon_error").and_then(Json::as_f64).unwrap_or(0.0),
+                svd_sweeps: us("svd_sweeps")?,
+                svd_seconds: t.get("svd_seconds").and_then(Json::as_f64).unwrap_or(0.0),
+                codec: t
+                    .get("codec")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("target row: missing `codec`"))?
+                    .to_string(),
+            });
+        }
+        let train = match j.get("train") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(train_parse(t)?),
+        };
+        Ok(RunReport {
+            variant_id: str_field("variant_id")?,
+            model: str_field("model")?,
+            alloc: str_field("alloc")?,
+            writer: tc_str("writer")?,
+            format: tc_str("format")?,
+            crate_version: tc_str("crate_version")?,
+            config: j.get("config").cloned().ok_or_else(|| missing("config"))?,
+            total_seconds: j.get("total_seconds").and_then(Json::as_f64).unwrap_or(0.0),
+            phases,
+            targets,
+            train,
+        })
+    }
+
+    /// Text rendering for `dobi inspect --run`: a header line, the phase
+    /// wall-clock table, the per-target table, and the learned-alloc
+    /// summary when present.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "run report: {} (model {}, alloc {}, {} v{}, {:.3}s total)\n",
+            self.variant_id, self.model, self.alloc, self.writer, self.crate_version,
+            self.total_seconds
+        );
+        let mut pt = Table::new("phase wall clock", &["phase", "seconds", "share"]);
+        for p in &self.phases {
+            pt.row(vec![
+                p.phase.clone(),
+                fmt_f(p.seconds, 4),
+                format!("{:.1}%", p.share * 100.0),
+            ]);
+        }
+        out.push_str(&pt.render());
+        let mut tt = Table::new(
+            "targets",
+            &["target", "dims", "rank", "tail_energy", "recon_err", "sweeps", "svd_s", "codec"],
+        );
+        for t in &self.targets {
+            tt.row(vec![
+                t.name.clone(),
+                format!("{}x{}", t.m, t.n),
+                format!("{}/{}", t.rank, t.max_rank),
+                fmt_f(t.tail_energy, 4),
+                fmt_f(t.recon_error, 4),
+                t.svd_sweeps.to_string(),
+                fmt_f(t.svd_seconds, 4),
+                t.codec.clone(),
+            ]);
+        }
+        out.push_str(&tt.render());
+        if let Some(t) = &self.train {
+            out.push_str(&format!(
+                "train: {} iters, tail {:.4} -> {:.4}, lambda {:.3}, picked {} \
+                 (surrogates: learned {:.4} vs waterfill {:.4}), {} trajectory samples\n",
+                t.iters, t.tail_init, t.tail_final, t.lambda, pick_str(t.picked),
+                t.learned_surrogate, t.waterfill_surrogate, t.trajectory.len()
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunReport {
+        RunReport {
+            variant_id: "tiny/dobi_40".into(),
+            model: "tiny".into(),
+            alloc: "learned".into(),
+            writer: "dobi-native".into(),
+            format: "DOBIW1".into(),
+            crate_version: "0.1.0".into(),
+            config: Json::obj(vec![("ratio", Json::Num(0.4))]),
+            total_seconds: 1.25,
+            phases: vec![
+                PhaseShare { phase: "compress_calib".into(), seconds: 0.75, share: 0.75 },
+                PhaseShare { phase: "compress_svd".into(), seconds: 0.25, share: 0.25 },
+            ],
+            targets: vec![TargetReport {
+                name: "layers.0.wq".into(),
+                m: 16,
+                n: 16,
+                rank: 5,
+                max_rank: 16,
+                tail_energy: 0.031,
+                recon_error: 0.012,
+                svd_sweeps: 7,
+                svd_seconds: 0.004,
+                codec: "q8".into(),
+            }],
+            train: Some(TrainReport {
+                iters: 40,
+                tail_init: 0.5,
+                tail_final: 0.1,
+                expected_cost: 1000.0,
+                lambda: 0.2,
+                shares: vec![1.0],
+                sensitivity: vec![0.3],
+                learned_surrogate: 0.09,
+                waterfill_surrogate: 0.11,
+                picked: AllocPick::Learned,
+                trajectory: vec![TrainSample {
+                    iter: 0,
+                    tail: 0.5,
+                    lambda: 0.0,
+                    tau: 2.0,
+                    expected_cost: 1100.0,
+                    t_us: 12,
+                }],
+            }),
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_field() {
+        let r = sample();
+        let text = r.to_json().to_string();
+        let back = RunReport::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.to_json().to_string(), text, "round trip must be lossless");
+        assert_eq!(back.variant_id, r.variant_id);
+        assert_eq!(back.phases, r.phases);
+        assert_eq!(back.targets, r.targets);
+        let (bt, rt) = (back.train.unwrap(), r.train.unwrap());
+        assert_eq!(bt.trajectory, rt.trajectory);
+        assert_eq!(bt.picked, rt.picked);
+        assert_eq!(bt.iters, rt.iters);
+        // a waterfill report (no train block) round-trips to None
+        let mut wf = sample();
+        wf.train = None;
+        let back = RunReport::from_json(&wf.to_json()).unwrap();
+        assert!(back.train.is_none());
+    }
+
+    #[test]
+    fn push_phase_keeps_shares_normalized() {
+        let mut r = sample();
+        r.phases.clear();
+        r.push_phase("compress_calib", 3.0);
+        r.push_phase("compress_svd", 1.0);
+        assert!((r.phases.iter().map(|p| p.share).sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((r.phases[0].share - 0.75).abs() < 1e-12);
+        r.push_phase("compress_write", 4.0);
+        assert!((r.phases.iter().map(|p| p.share).sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((r.phases[2].share - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_json_rejects_foreign_documents() {
+        assert!(RunReport::from_json(&Json::obj(vec![("kind", Json::Str("other".into()))]))
+            .is_err());
+        let mut j = sample().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.remove("targets");
+        }
+        assert!(RunReport::from_json(&j).is_err(), "missing targets must refuse");
+    }
+
+    #[test]
+    fn render_mentions_phases_targets_and_train() {
+        let text = sample().render();
+        for needle in ["tiny/dobi_40", "compress_calib", "layers.0.wq", "5/16", "q8",
+                       "picked learned", "75.0%"] {
+            assert!(text.contains(needle), "missing `{needle}` in:\n{text}");
+        }
+        assert_eq!(RunReport::file_name("tiny/dobi_40"), "tiny_dobi_40.run.json");
+    }
+}

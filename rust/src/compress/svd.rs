@@ -57,6 +57,20 @@ pub fn svd_threads() -> usize {
     SVD_THREADS.with(|c| c.get())
 }
 
+thread_local! {
+    /// Sweeps the calling thread's most recent [`jacobi_tall`] run took
+    /// to converge — the per-target SVD-iterations figure the compress
+    /// run report records.  Thread-local like [`SVD_THREADS`]: the
+    /// pipeline reads it right after each decomposition on its own
+    /// thread, so concurrent SVDs elsewhere can't clobber it.
+    static LAST_SWEEPS: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Jacobi sweeps the calling thread's most recent thin SVD took.
+pub fn last_sweeps() -> usize {
+    LAST_SWEEPS.with(|c| c.get())
+}
+
 /// Thin SVD `A = U diag(s) Vt` of a row-major (m, n) matrix with
 /// `r = min(m, n)`: `u` is (m, r), `s` is descending, `vt` is (r, n).
 #[derive(Debug, Clone)]
@@ -233,7 +247,9 @@ fn jacobi_tall_threads(a: &[f64], m: usize, n: usize,
         })
         .collect();
     let rounds = round_robin_rounds(n);
+    let mut sweeps = 0usize;
     for _sweep in 0..MAX_SWEEPS {
+        sweeps += 1;
         let mut converged = true;
         for pairs in &rounds {
             let rotated = if threads > 1 && pairs.len() >= 2 {
@@ -253,6 +269,7 @@ fn jacobi_tall_threads(a: &[f64], m: usize, n: usize,
             break;
         }
     }
+    LAST_SWEEPS.with(|c| c.set(sweeps));
     // Column norms are the singular values; sort descending (ties by
     // original index, so the result is deterministic).
     let sigma: Vec<f64> = (0..n)
@@ -607,6 +624,20 @@ mod tests {
         .unwrap();
         assert_eq!(svd_threads(), 5);
         set_svd_threads(1);
+    }
+
+    #[test]
+    fn last_sweeps_reports_the_most_recent_decomposition() {
+        let mut rng = XorShift::new(12);
+        let a = randv(&mut rng, 12 * 8, 0.5);
+        let _ = svd_thin(&a, 12, 8);
+        let s = last_sweeps();
+        assert!((1..=MAX_SWEEPS).contains(&s), "sweeps out of range: {s}");
+        std::thread::spawn(|| {
+            assert_eq!(last_sweeps(), 0, "sweep count must not leak across threads");
+        })
+        .join()
+        .unwrap();
     }
 
     #[test]

@@ -70,6 +70,29 @@ pub enum AllocPick {
     Waterfill,
 }
 
+/// One sampled optimizer step of a [`learn_ranks`] run — the trajectory
+/// the compress run report persists per release (and the compress trace
+/// replays as `compress_train_iter` instants).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrainSample {
+    /// 0-based optimizer step this sample was taken at.
+    pub iter: usize,
+    /// Normalized truncation loss at this step.
+    pub tail: f64,
+    /// Lagrangian multiplier after this step's dual update.
+    pub lambda: f64,
+    /// Annealed gate temperature at this step.
+    pub tau: f64,
+    /// Expected stored params after this step's budget projection.
+    pub expected_cost: f64,
+    /// µs since the loop started when the step finished.
+    pub t_us: u64,
+}
+
+/// Cap on persisted trajectory samples: long runs are subsampled to an
+/// even stride so the run report stays bounded (first/last always kept).
+const TRAJECTORY_CAP: usize = 256;
+
 /// Diagnostics of one [`learn_ranks`] run.
 #[derive(Debug, Clone)]
 pub struct TrainReport {
@@ -91,6 +114,9 @@ pub struct TrainReport {
     pub learned_surrogate: f64,
     pub waterfill_surrogate: f64,
     pub picked: AllocPick,
+    /// Sampled per-step loss/λ/τ/budget trajectory (≤ [`TRAJECTORY_CAP`]
+    /// entries, empty when the floor short-circuit skipped the loop).
+    pub trajectory: Vec<TrainSample>,
 }
 
 /// Learn per-target truncation ranks under a global stored-parameter
@@ -122,6 +148,7 @@ pub fn learn_ranks(specs: &[TargetSpectrum], budget: usize, k_min: usize,
             learned_surrogate: surrogate,
             waterfill_surrogate: surrogate,
             picked: AllocPick::Waterfill,
+            trajectory: Vec::new(),
         };
         return (wf_ks, wf_spent, report);
     }
@@ -150,6 +177,11 @@ pub fn learn_ranks(specs: &[TargetSpectrum], budget: usize, k_min: usize,
     let tail_init = model.objective(0.0).tail;
     let mut adam = Adam::new(cfg.lr, specs.len());
     let mut lambda = 0.0f64;
+    // Even-stride subsampling keeps the persisted trajectory bounded;
+    // the final step is always appended below.
+    let stride = cfg.iters.div_ceil(TRAJECTORY_CAP).max(1);
+    let mut trajectory = Vec::with_capacity(cfg.iters.min(TRAJECTORY_CAP) + 1);
+    let loop_start = std::time::Instant::now();
     for step in 0..cfg.iters {
         // anneal the soft step: wide early (gradients see far-away
         // indices), sharp late (expected ranks ≈ integer ranks)
@@ -164,6 +196,16 @@ pub fn learn_ranks(specs: &[TargetSpectrum], budget: usize, k_min: usize,
         // diagnostics on the O(1) scale of the normalized objective
         // instead of integrating ±1e4 per step into garbage.
         lambda = (lambda + cfg.dual_rate * delta).clamp(-LAMBDA_MAX, LAMBDA_MAX);
+        if step % stride == 0 || step + 1 == cfg.iters {
+            trajectory.push(TrainSample {
+                iter: step,
+                tail: obj.tail,
+                lambda,
+                tau: model.tau,
+                expected_cost: obj.expected_cost,
+                t_us: loop_start.elapsed().as_micros() as u64,
+            });
+        }
     }
     let final_obj = model.objective(lambda); // iters == 0: the warm start
 
@@ -188,6 +230,7 @@ pub fn learn_ranks(specs: &[TargetSpectrum], budget: usize, k_min: usize,
         learned_surrogate,
         waterfill_surrogate,
         picked,
+        trajectory,
     };
     (ks, spent, report)
 }
@@ -308,6 +351,35 @@ mod tests {
                 "expected {} vs budget {budget}", r.expected_cost);
         assert!(r.tail_init.is_finite() && r.tail_final.is_finite());
         assert!(r.tail_final <= 1.0 + 1e-9 && r.tail_final >= 0.0);
+    }
+
+    #[test]
+    fn trajectory_samples_the_optimizer_loop() {
+        let specs = spec_set(9, 5);
+        let budget: usize =
+            specs.iter().map(|t| t.unit_cost() * t.max_rank()).sum::<usize>() / 2;
+        let cfg = TrainConfig { iters: 80, ..Default::default() };
+        let (_, _, r) = learn_ranks(&specs, budget, 1, &cfg);
+        assert_eq!(r.trajectory.len(), 80, "80 iters under the cap: one sample each");
+        assert_eq!(r.trajectory.last().map(|s| s.iter), Some(79));
+        for w in r.trajectory.windows(2) {
+            assert!(w[1].iter > w[0].iter, "iters must ascend");
+            assert!(w[1].t_us >= w[0].t_us, "time must be monotone");
+            assert!(w[1].tau < w[0].tau, "tau anneals downward");
+        }
+        for s in &r.trajectory {
+            assert!(s.tail.is_finite() && s.tail >= 0.0);
+            assert!(s.lambda.is_finite() && s.expected_cost.is_finite());
+        }
+        // long runs subsample to the cap (+1 for the always-kept last step)
+        let long = TrainConfig { iters: 600, ..Default::default() };
+        let (_, _, rl) = learn_ranks(&specs, budget, 1, &long);
+        assert!(rl.trajectory.len() <= TRAJECTORY_CAP + 1,
+                "trajectory unbounded: {}", rl.trajectory.len());
+        assert_eq!(rl.trajectory.last().map(|s| s.iter), Some(599));
+        // the floor short-circuit records nothing
+        let (_, _, r0) = learn_ranks(&specs, 0, 2, &TrainConfig::default());
+        assert!(r0.trajectory.is_empty());
     }
 
     #[test]

@@ -376,6 +376,11 @@ pub struct Variant {
     /// Content-hash pin for the weights store; `None` on pre-provenance
     /// manifests (loaded unverified).
     pub provenance: Option<Provenance>,
+    /// Relative path of the `<variant>.run.json` compression run report
+    /// `dobi compress` wrote next to the store; `None` on manifests from
+    /// before run reports existed (`dobi inspect --run` then refuses with
+    /// a clear message instead of guessing file names).
+    pub run_report: Option<String>,
 }
 
 impl Variant {
@@ -499,6 +504,7 @@ impl Manifest {
                     .unwrap_or("waterfill")
                     .to_string(),
                 provenance: Provenance::from_json(v)?,
+                run_report: v.get("run_report").and_then(Json::as_str).map(String::from),
             });
         }
         let mut corpora = BTreeMap::new();
@@ -601,6 +607,7 @@ mod tests {
             param_names: vec![], hlo, inputs: vec!["tokens".into()],
             stored_params: 0, bytes: 0, ref_ppl: BTreeMap::new(), perturb_x: None,
             ranks: BTreeMap::new(), alloc: "waterfill".into(), provenance: None,
+            run_report: None,
         };
         assert_eq!(v.pick_batch(3, 32), Some(4));
         assert_eq!(v.pick_batch(1, 32), Some(1));

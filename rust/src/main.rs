@@ -29,7 +29,7 @@ use dobi::server::Server;
 
 fn main() {
     let args = Args::from_env(&["verbose", "all", "tasks", "synth", "stream", "no-stream",
-                                "no-control", "replace", "json"]);
+                                "no-control", "replace", "json", "progress"]);
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
@@ -71,19 +71,28 @@ fn run(args: &Args) -> Result<()> {
                  usage: dobi <inspect|compress|eval|generate|serve|memsim|parity>\n\
                  \x20      [--artifacts DIR] [--backend auto|pjrt|native] ...\n\
                  \n\
-                 inspect [--json]             list variants and storage accounting\n\
+                 inspect [--json] [--run ID]  list variants and storage accounting\n\
                  \x20        (--json: machine-readable table with full\n\
-                 \x20        provenance sha256 per variant)\n\
+                 \x20        provenance sha256 per variant; --run renders a\n\
+                 \x20        variant's compression run report — phase\n\
+                 \x20        wall-clock shares + per-target table, --json for\n\
+                 \x20        the raw document)\n\
                  compress --out DIR | --append DIR [--replace] [--ratio R]\n\
                  \x20        [--alloc waterfill|learned] [--train-iters N] [--train-lr F]\n\
                  \x20        [--precision q8|f16|f32] [--variant ID | --synth]\n\
                  \x20        [--calib FILE.tokbin] [--budget PARAMS] [--svd-threads T]\n\
+                 \x20        [--trace-out PATH] [--trace-buffer N] [--progress]\n\
                  \x20        native Dobi compression: dense store ->\n\
                  \x20        rank-allocated remapped factors; --append merges\n\
                  \x20        the variant into an existing artifacts dir\n\
                  \x20        (--replace swaps a resident variant and GCs its\n\
                  \x20        orphaned store); --alloc learned runs the\n\
-                 \x20        differentiable truncation-position optimizer\n\
+                 \x20        differentiable truncation-position optimizer;\n\
+                 \x20        every run persists a <variant>.run.json report\n\
+                 \x20        next to the store, --trace-out exports the\n\
+                 \x20        compress_* phase spans as Chrome/Perfetto JSON\n\
+                 \x20        (--trace-buffer sizes the ring, default 65536,\n\
+                 \x20        0 disables), --progress prints a line per phase\n\
                  eval --variant ID [--tasks]  PPL on all corpora (+ task suites)\n\
                  generate --variant ID --prompt TEXT [--tokens N] [--temperature T]\n\
                  serve --variants A,B --port P [--max-sessions N]\n\
@@ -126,6 +135,20 @@ fn run(args: &Args) -> Result<()> {
 
 fn inspect(args: &Args) -> Result<()> {
     let m = Manifest::load(&artifacts_dir(args))?;
+    if let Some(id) = args.get("run") {
+        let v = m.variant(id)?;
+        let file = v.run_report.as_ref().ok_or_else(|| {
+            anyhow!("variant `{id}` carries no run report (manifests written before \
+                     run reports existed lack the field; re-compress to get one)")
+        })?;
+        let doc = dobi::json::load(&m.path(file))?;
+        if args.has("json") {
+            println!("{doc}");
+        } else {
+            print!("{}", dobi::compress::RunReport::from_json(&doc)?.render());
+        }
+        return Ok(());
+    }
     if args.has("json") {
         println!("{}", inspect_json(&m));
         return Ok(());
@@ -221,8 +244,8 @@ fn inspect_json(m: &Manifest) -> String {
 /// factors -> a self-contained artifacts dir servable by `--backend
 /// native` (factor-only manifest, no HLO entries).
 fn compress(args: &Args) -> Result<()> {
-    use dobi::compress::{append_artifacts_opts, calib, compress_model, write_artifacts,
-                         AllocPick};
+    use dobi::compress::pipeline::{append_artifacts_traced, write_artifacts_traced};
+    use dobi::compress::{calib, compress_model_traced, AllocPick, CompressTelemetry};
     use dobi::lowrank::synth::{tiny_model, TinyDims};
     use dobi::lowrank::FactorizedModel;
 
@@ -269,14 +292,26 @@ fn compress(args: &Args) -> Result<()> {
         Some(path) => corpusio::read_tokbin(std::path::Path::new(path))?,
         None => calib::synth_calib_tokens(dense.vocab, 4096, cfg.seed),
     };
+    // Telemetry: the `compress_*` phase spans land in a ring sized by
+    // --trace-buffer (0 keeps it inert), exported as Chrome/Perfetto JSON
+    // when --trace-out PATH is given; --progress prints a line per phase.
+    let tel = CompressTelemetry::new(args.usize_or("trace-buffer", 65_536),
+                                     args.has("progress"));
     let t0 = std::time::Instant::now();
-    let art = compress_model(&dense, &model_name, &cfg, &calib_tokens)?;
+    let art = compress_model_traced(&dense, &model_name, &cfg, &calib_tokens, &tel)?;
     let wpath = if append.is_some() {
-        append_artifacts_opts(&out, &art, args.has("replace"))?
+        append_artifacts_traced(&out, &art, args.has("replace"), &tel)?
     } else {
-        write_artifacts(&out, &art)?
+        write_artifacts_traced(&out, &art, &tel)?
     };
     let dt = t0.elapsed().as_secs_f64();
+    if let Some(path) = args.get("trace-out") {
+        let events = tel.trace.drain(true);
+        std::fs::write(path, dobi::trace::export_chrome(&events).to_string())
+            .map_err(|e| anyhow!("writing trace {path}: {e}"))?;
+        println!("trace: {} events -> {path} (load in Perfetto / chrome://tracing)",
+                 events.len());
+    }
 
     if let Some(r) = &art.train_report {
         let picked = match r.picked {
@@ -312,6 +347,9 @@ fn compress(args: &Args) -> Result<()> {
         art.stored_params, art.total_params, art.achieved_ratio, art.payload_bytes,
         wpath.display(), out.display(), art.variant_id
     );
+    println!("run report: {} (render with: dobi inspect --artifacts {} --run {})",
+             out.join(dobi::compress::RunReport::file_name(&art.variant_id)).display(),
+             out.display(), art.variant_id);
     Ok(())
 }
 

@@ -1,11 +1,13 @@
-//! The single source of truth for `serve_*` metric family names.
+//! The single source of truth for `serve_*` and `compress_*` metric
+//! family names.
 //!
-//! Every family the serve stack emits is declared here once; code sites
-//! reference these constants, the README family table documents the same
-//! set, and `dobi lint`'s `metric-drift` rule fails the build if any of the
-//! three drifts (a bare `"serve_…"` literal elsewhere in `rust/src` is a
-//! deny-level finding). `scripts/serve_smoke.py` parses this file and
-//! asserts the live `{"op":"metrics"}` output stays within this vocabulary.
+//! Every family the serve stack or the compress pipeline emits is declared
+//! here once; code sites reference these constants, the README family
+//! tables document the same set, and `dobi lint`'s `metric-drift` rule
+//! fails the build if any of the three drifts (a bare `"serve_…"` or
+//! `"compress_…"` literal elsewhere in `rust/src` is a deny-level
+//! finding). `scripts/serve_smoke.py` parses this file and asserts the
+//! live `{"op":"metrics"}` output stays within this vocabulary.
 
 /// Sessions admitted by the scheduler, labeled by `variant`.
 pub const SESSIONS_OPENED: &str = "serve_sessions_opened";
@@ -45,3 +47,16 @@ pub const SPEC_DRAFT_US: &str = "serve_spec_draft_us";
 pub const SPEC_VERIFY_US: &str = "serve_spec_verify_us";
 /// Mutexes found poisoned and recovered by [`super::lock_or_recover`].
 pub const LOCK_POISONED: &str = "serve_lock_poisoned";
+
+/// Compression targets inventoried this run, labeled by `variant`.
+pub const COMPRESS_TARGETS: &str = "compress_targets";
+/// Per-phase wall-clock histogram (seconds), labeled by `phase`.
+pub const COMPRESS_PHASE_SECONDS: &str = "compress_phase_seconds";
+/// Jacobi sweeps spent decomposing one target, labeled by `target`.
+pub const COMPRESS_SVD_SWEEPS: &str = "compress_svd_sweeps";
+/// Gauge: rank kept for one target after allocation, labeled by `target`.
+pub const COMPRESS_RANK_KEPT: &str = "compress_rank_kept";
+/// Dimensionless histogram of per-target whitened tail-energy fractions.
+pub const COMPRESS_TAIL_ENERGY_RATE: &str = "compress_tail_energy_rate";
+/// Learned-alloc optimizer iterations run, labeled by `variant`.
+pub const COMPRESS_TRAIN_ITERS: &str = "compress_train_iters";

@@ -1,10 +1,15 @@
-//! Request-lifecycle tracing: a lock-cheap bounded ring of span events
-//! plus a Chrome trace-event exporter (Perfetto-loadable).
+//! Lifecycle tracing: a lock-cheap bounded ring of span events plus a
+//! Chrome trace-event exporter (Perfetto-loadable).
 //!
-//! The serve stack records where every request's wall-clock goes —
-//! accept → parse → queue wait → admission → prefill → each tick's fused
-//! group walk / spec draft / spec verify / eviction sweep — as
-//! [`TraceEvent`]s in a [`TraceBuffer`].  Design constraints, in order:
+//! Two producers share the substrate.  The serve stack records where
+//! every request's wall-clock goes — accept → parse → queue wait →
+//! admission → prefill → each tick's fused group walk / spec draft /
+//! spec verify / eviction sweep — and the compress pipeline records
+//! where a run's wall-clock goes — calibration → whitening → per-target
+//! Jacobi SVD (worker threads land on their own lanes) → rank
+//! allocation / learned-train iterations → remap → store write — both
+//! as [`TraceEvent`]s in a [`TraceBuffer`].  Design constraints, in
+//! order:
 //!
 //! * **Cheap when disabled.**  A zero-capacity buffer allocates nothing
 //!   and every record call returns before formatting a single byte
@@ -207,9 +212,16 @@ pub fn export_chrome(events: &[TraceEvent]) -> Json {
     let evs: Vec<Json> = events
         .iter()
         .map(|e| {
-            // known phases (phases::ALL) render in the "serve" category;
-            // anything else lands in "other", which the lint treats as drift
-            let cat = if phases::ALL.contains(&e.name) { "serve" } else { "other" };
+            // known phases (phases::ALL) render in the "serve" or
+            // "compress" category by prefix; anything else lands in
+            // "other", which the lint treats as drift
+            let cat = if !phases::ALL.contains(&e.name) {
+                "other"
+            } else if e.name.starts_with("compress_") {
+                "compress"
+            } else {
+                "serve"
+            };
             Json::obj(vec![
                 ("name", Json::Str(e.name.to_string())),
                 ("cat", Json::Str(cat.to_string())),
@@ -411,16 +423,23 @@ mod tests {
         push_n(&buf, 3, 0);
         let t = Instant::now();
         buf.push_span(phases::PREFILL, 9, t, t, || String::new());
+        buf.push_span(phases::COMPRESS_SVD, 0, t, t, || String::new());
         let doc = export_chrome(&buf.drain(false));
         // round-trip through the serializer: the wire form must parse
         let parsed = Json::parse(&doc.to_string()).unwrap();
         assert_eq!(parsed.str_of("displayTimeUnit"), "ms");
         let evs = parsed.get("traceEvents").and_then(|x| x.as_arr()).unwrap();
-        assert_eq!(evs.len(), 4);
+        assert_eq!(evs.len(), 5);
         for e in evs {
             assert_eq!(e.str_of("ph"), "X");
             // "ev" is not a declared phase; the exporter flags it "other"
-            let want = if e.str_of("name") == phases::PREFILL { "serve" } else { "other" };
+            let want = if e.str_of("name") == phases::PREFILL {
+                "serve"
+            } else if e.str_of("name") == phases::COMPRESS_SVD {
+                "compress"
+            } else {
+                "other"
+            };
             assert_eq!(e.str_of("cat"), want, "{e:?}");
             assert!(e.get("ts").and_then(|x| x.as_f64()).is_some());
             assert!(e.get("dur").and_then(|x| x.as_f64()).is_some());

@@ -1,11 +1,13 @@
-//! The single source of truth for request-lifecycle phase names.
+//! The single source of truth for trace phase names — the serve stack's
+//! request lifecycle and the compress pipeline's run lifecycle.
 //!
 //! Every phase recorded into the trace ring (via `span`/`push_span`/
 //! `push_instant`) is declared here once. [`ALL`] is the exporter's
-//! known-phase list: `export_chrome` categorizes events by membership, and
-//! `dobi lint`'s `trace-phase-pairing` rule fails the build if a phase is
-//! recorded as a bare string literal, missing from [`ALL`], or absent from
-//! the README phase table (and vice versa).
+//! known-phase list: `export_chrome` categorizes events by membership
+//! (`compress_*` phases land in the `compress` category, the rest in
+//! `serve`), and `dobi lint`'s `trace-phase-pairing` rule fails the build
+//! if a phase is recorded as a bare string literal, missing from [`ALL`],
+//! or absent from the README phase tables (and vice versa).
 
 /// Connection accepted by the server listener (instant).
 pub const ACCEPT: &str = "accept";
@@ -30,6 +32,23 @@ pub const REQUEST: &str = "request";
 /// Idle-session eviction sweep.
 pub const EVICT_SWEEP: &str = "evict_sweep";
 
+/// Whole-compression-run envelope from inventory to manifest write.
+pub const COMPRESS_RUN: &str = "compress_run";
+/// Calibration forward passes collecting per-tap activations.
+pub const COMPRESS_CALIB: &str = "compress_calib";
+/// Whitening: Gram eigendecomposition for one calibration tap group.
+pub const COMPRESS_WHITEN: &str = "compress_whiten";
+/// Jacobi SVD of one target's whitened weight (tagged with its sweep lane).
+pub const COMPRESS_SVD: &str = "compress_svd";
+/// Rank allocation across all targets (waterfill or learned).
+pub const COMPRESS_ALLOC: &str = "compress_alloc";
+/// One learned-alloc training iteration (instant carrying loss/λ/τ/budget).
+pub const COMPRESS_TRAIN_ITER: &str = "compress_train_iter";
+/// IPCA remap + quantization of one target into its stored factors.
+pub const COMPRESS_REMAP: &str = "compress_remap";
+/// Store + manifest + run-report writing.
+pub const COMPRESS_WRITE: &str = "compress_write";
+
 /// The exporter's known-phase list. Events whose name is absent here are
 /// categorized `other` in the Chrome trace — which the lint treats as drift.
 pub const ALL: &[&str] = &[
@@ -44,4 +63,12 @@ pub const ALL: &[&str] = &[
     SPEC_VERIFY,
     REQUEST,
     EVICT_SWEEP,
+    COMPRESS_RUN,
+    COMPRESS_CALIB,
+    COMPRESS_WHITEN,
+    COMPRESS_SVD,
+    COMPRESS_ALLOC,
+    COMPRESS_TRAIN_ITER,
+    COMPRESS_REMAP,
+    COMPRESS_WRITE,
 ];

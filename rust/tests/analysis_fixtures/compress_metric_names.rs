@@ -1,0 +1,5 @@
+// metric-drift fixture stand-in for rust/src/metrics/names.rs with
+// compress_* families — pins the rule's coverage of the compression
+// pipeline's metric namespace.
+pub const CTARGETS: &str = "compress_targets";
+pub const CPHASE: &str = "compress_phase_seconds";

@@ -1,0 +1,6 @@
+// metric-drift positive fixture (compress namespace): CSTALE is
+// undocumented in the README section and never referenced by any other
+// file.
+pub const CTARGETS: &str = "compress_targets";
+pub const CPHASE: &str = "compress_phase_seconds";
+pub const CSTALE: &str = "compress_stale_gauge";

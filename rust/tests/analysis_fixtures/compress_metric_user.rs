@@ -1,0 +1,8 @@
+// metric-drift fixture: a clean compress-side consumer — references
+// every names:: constant and spells no family as a string literal.
+use crate::metrics::names::{CPHASE, CTARGETS};
+
+pub fn observe(reg: &Registry) {
+    reg.counter_with(CTARGETS, &[("variant", "v")]).add(1);
+    reg.histogram(CPHASE).observe(d);
+}

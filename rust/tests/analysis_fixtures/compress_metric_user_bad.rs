@@ -1,0 +1,10 @@
+// metric-drift positive fixture: a compress_* family spelled as a
+// string literal instead of a names:: constant (plus clean uses so
+// CTARGETS/CPHASE do not show up as unused).
+use crate::metrics::names::{CPHASE, CTARGETS};
+
+pub fn observe(reg: &Registry) {
+    reg.counter_with(CTARGETS, &[("variant", "v")]).add(1);
+    reg.histogram(CPHASE).observe(d);
+    reg.counter("compress_rogue_total").inc(1);
+}

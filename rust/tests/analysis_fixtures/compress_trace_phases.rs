@@ -1,0 +1,8 @@
+// trace-phase-pairing fixture stand-in for rust/src/trace/phases.rs
+// declaring compress_* lifecycle phases. Also doubles as the
+// metric-drift exemption fixture: these string consts are phase values,
+// not bare metric-family literals.
+pub const CRUN: &str = "compress_run";
+pub const CSVD: &str = "compress_svd";
+
+pub const ALL: &[&str] = &[CRUN, CSVD];

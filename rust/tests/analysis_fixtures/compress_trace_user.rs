@@ -1,0 +1,8 @@
+// trace-phase-pairing fixture: a clean compress-side recorder — phases
+// always arrive as phases:: constants, never string literals.
+use crate::trace::phases;
+
+pub fn record(buf: &TraceBuffer, t0: u64, t1: u64) {
+    buf.push_span(phases::CRUN, 0, t0, t1, detail);
+    buf.push_span(phases::CSVD, 0, t0, t1, detail);
+}

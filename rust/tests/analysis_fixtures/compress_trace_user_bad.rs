@@ -1,0 +1,8 @@
+// trace-phase-pairing positive fixture: a compress phase recorded as a
+// bare string literal instead of a phases:: constant.
+use crate::trace::phases;
+
+pub fn record(buf: &TraceBuffer, t0: u64, t1: u64) {
+    buf.push_span(phases::CRUN, 0, t0, t1, detail);
+    buf.push_span("compress_svd", 0, t0, t1, detail);
+}

@@ -26,4 +26,6 @@ fn compress(args: &Args) {
     let _ti = args.usize_or("train-iters", 200);
     let _tl = args.f64_or("train-lr", 0.05);
     let _st = args.usize_or("svd-threads", 1);
+    let _to = args.get("trace-out");
+    let _pg = args.has("progress");
 }

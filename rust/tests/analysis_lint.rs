@@ -233,6 +233,93 @@ fn trace_phases_catches_every_pairing_break() {
 }
 
 // ---------------------------------------------------------------------------
+// compress_* namespace coverage (metric-drift + trace-phase-pairing)
+
+const CMETRIC_NAMES: &str = include_str!("analysis_fixtures/compress_metric_names.rs");
+const CMETRIC_NAMES_BAD: &str = include_str!("analysis_fixtures/compress_metric_names_bad.rs");
+const CMETRIC_USER: &str = include_str!("analysis_fixtures/compress_metric_user.rs");
+const CMETRIC_USER_BAD: &str = include_str!("analysis_fixtures/compress_metric_user_bad.rs");
+const CMETRIC_README_GOOD: &str = include_str!("analysis_fixtures/compress_metric_readme_good.md");
+const CMETRIC_README_BAD: &str = include_str!("analysis_fixtures/compress_metric_readme_bad.md");
+const CTRACE_PHASES: &str = include_str!("analysis_fixtures/compress_trace_phases.rs");
+const CTRACE_USER: &str = include_str!("analysis_fixtures/compress_trace_user.rs");
+const CTRACE_USER_BAD: &str = include_str!("analysis_fixtures/compress_trace_user_bad.rs");
+const CTRACE_README: &str = include_str!("analysis_fixtures/compress_trace_readme.md");
+
+#[test]
+fn metric_drift_accepts_consistent_compress_families() {
+    let c = ctx(
+        &[
+            ("rust/src/metrics/names.rs", CMETRIC_NAMES),
+            ("rust/src/compress/user.rs", CMETRIC_USER),
+        ],
+        CMETRIC_README_GOOD,
+    );
+    let f = run(&c, Some("metric-drift")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn metric_drift_catches_compress_drift_in_all_four_directions() {
+    let c = ctx(
+        &[
+            ("rust/src/metrics/names.rs", CMETRIC_NAMES_BAD),
+            ("rust/src/compress/user.rs", CMETRIC_USER_BAD),
+        ],
+        CMETRIC_README_BAD,
+    );
+    let f = run(&c, Some("metric-drift")).unwrap();
+    assert_eq!(denies(&f).len(), 4, "findings: {f:?}");
+    assert!(has(&f, "`compress_stale_gauge` (const CSTALE) is undocumented"), "findings: {f:?}");
+    assert!(has(&f, "`compress_ghost_total` but metrics::names has no such constant"), "findings: {f:?}");
+    assert!(has(&f, "literal `\"compress_rogue_total\"`"), "findings: {f:?}");
+    assert!(has(&f, "CSTALE is never referenced"), "findings: {f:?}");
+}
+
+#[test]
+fn metric_drift_exempts_phase_values_declared_in_trace_phases() {
+    // trace/phases.rs declares `compress_*` phase names as string consts;
+    // metric-drift must not read them as bare metric-family literals.
+    let c = ctx(
+        &[
+            ("rust/src/metrics/names.rs", CMETRIC_NAMES),
+            ("rust/src/compress/user.rs", CMETRIC_USER),
+            ("rust/src/trace/phases.rs", CTRACE_PHASES),
+        ],
+        CMETRIC_README_GOOD,
+    );
+    let f = run(&c, Some("metric-drift")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn trace_phases_accepts_compress_phase_constants() {
+    let c = ctx(
+        &[
+            ("rust/src/trace/phases.rs", CTRACE_PHASES),
+            ("rust/src/compress/user.rs", CTRACE_USER),
+        ],
+        CTRACE_README,
+    );
+    let f = run(&c, Some("trace-phase-pairing")).unwrap();
+    assert!(f.is_empty(), "findings: {f:?}");
+}
+
+#[test]
+fn trace_phases_rejects_bare_compress_phase_literal() {
+    let c = ctx(
+        &[
+            ("rust/src/trace/phases.rs", CTRACE_PHASES),
+            ("rust/src/compress/user.rs", CTRACE_USER_BAD),
+        ],
+        CTRACE_README,
+    );
+    let f = run(&c, Some("trace-phase-pairing")).unwrap();
+    assert_eq!(denies(&f).len(), 1, "findings: {f:?}");
+    assert!(has(&f, "string literal `\"compress_svd\"`"), "findings: {f:?}");
+}
+
+// ---------------------------------------------------------------------------
 // suppressions and the full synthetic repo
 
 const SUPPRESS_OK: &str = include_str!("analysis_fixtures/suppress_ok.rs");
